@@ -1,0 +1,71 @@
+//! Herding toy (paper Fig. 1b): visualize how balancing + reordering
+//! flattens prefix-sum norms on random vectors — ASCII plot edition.
+//!
+//! ```bash
+//! cargo run --release --example herding_toy [-- --n 10000 --d 128]
+//! ```
+
+use anyhow::Result;
+
+use grab::balance::DeterministicBalancer;
+use grab::herding::offline::herd;
+use grab::herding::prefix_trajectory;
+use grab::util::cli::Args;
+use grab::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let n = args.usize_or("n", 10_000)?;
+    let d = args.usize_or("d", 128)?;
+    let passes = args.usize_or("passes", 10)?;
+    args.reject_unknown()?;
+
+    let mut rng = Rng::new(0);
+    let vs: Vec<Vec<f32>> = (0..n)
+        .map(|_| (0..d).map(|_| rng.f32()).collect())
+        .collect();
+    let original: Vec<usize> = (0..n).collect();
+    let mut balancer = DeterministicBalancer;
+    let (herded, stats) = herd(&mut balancer, &vs, passes);
+
+    let t_orig = prefix_trajectory(&vs, &original);
+    let t_herd = prefix_trajectory(&vs, &herded);
+
+    println!("herding toy: n={n} vectors in [0,1]^{d}");
+    println!("\npass-by-pass herding bound (ℓ∞ / ℓ2):");
+    for s in &stats {
+        println!(
+            "  pass {:>2}: {:>10.3} / {:>10.3}",
+            s.pass, s.herding_inf, s.herding_l2
+        );
+    }
+
+    // ASCII sparkline of both prefix curves (60 buckets).
+    let buckets = 60usize;
+    let max = t_orig.iter().cloned().fold(f32::MIN, f32::max);
+    let sample = |t: &[f32]| -> Vec<f32> {
+        (0..buckets)
+            .map(|b| t[(b * (t.len() - 1)) / (buckets - 1)])
+            .collect()
+    };
+    let bar = |v: f32| -> char {
+        const RAMP: [char; 8] =
+            [' ', '.', ':', '-', '=', '+', '*', '#'];
+        RAMP[((v / max * 7.0).round() as usize).min(7)]
+    };
+    let line = |t: &[f32]| -> String {
+        sample(t).into_iter().map(bar).collect()
+    };
+    println!("\nprefix-sum ℓ2 norm vs k (left→right = k: 1→n):");
+    println!("  original |{}| max={:.1}", line(&t_orig), max);
+    println!(
+        "  herded   |{}| max={:.1}",
+        line(&t_herd),
+        t_herd.iter().cloned().fold(f32::MIN, f32::max)
+    );
+    println!(
+        "\nThe original order's prefix sums bulge (random walk ~ √k); the \
+         herded order keeps every prefix near zero — Fig. 1b's picture."
+    );
+    Ok(())
+}

@@ -1,0 +1,193 @@
+"""AOT lowering: JAX (L2, calling L1 Pallas kernels) -> HLO text artifacts.
+
+This is the only place Python touches the system. ``make artifacts`` runs it
+once; the rust coordinator (L3) then loads ``artifacts/*.hlo.txt`` through the
+PJRT C API and Python never appears on the request path again.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which the published xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts emitted (per model M in {logreg, lenet, lstm, transformer}):
+
+  M_grad.hlo.txt   (params[d], X[B,...], Y[B,...]) -> (losses[B], grads[B,d])
+  M_eval.hlo.txt   (params[d], X[E,...], Y[E,...]) -> (loss_sum, correct)
+
+plus the GraB balance step (L1 Pallas kernel) at the dimensions rust uses:
+
+  balance_<d>.hlo.txt  (s[d], m[d], g[d]) -> (eps, s_new[d], c[d])
+
+and ``manifest.json`` describing every artifact's I/O shapes, dtypes and the
+flat parameter layout, which rust parses at startup (model registry).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import balance as kbalance
+from .kernels import sgd as ksgd
+
+# Per-model microbatch (grad) and eval-batch sizes. B is the number of
+# ordering units handed to GraB per PJRT call; rust accumulates GCC
+# microbatches per optimizer step (the paper's gradient-accumulation recipe).
+BATCH = {"logreg": 64, "lenet": 16, "lstm": 8, "transformer": 8}
+EVAL_BATCH = {"logreg": 256, "lenet": 64, "lstm": 32, "transformer": 64}
+
+# Balance-artifact dimensions: logreg's d (the paper's MNIST model) plus a
+# generic power-of-two used by benches/balance_hot.rs.
+BALANCE_DIMS = (1024, 7850)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def data_specs(model) -> Tuple[tuple, str, tuple, str]:
+    """(x_shape_per_example, x_dtype, y_shape_per_example, y_dtype)."""
+    if model.name == "logreg":
+        return ((model.in_dim,), "f32", (), "i32")
+    if model.name == "lenet":
+        return ((model.in_dim,), "f32", (), "i32")
+    if model.name == "lstm":
+        return ((model.bptt,), "i32", (model.bptt,), "i32")
+    if model.name == "transformer":
+        return ((model.seq,), "i32", (), "i32")
+    raise ValueError(model.name)
+
+
+def _shape_struct(shape, dtype):
+    return jax.ShapeDtypeStruct(
+        shape, jnp.float32 if dtype == "f32" else jnp.int32)
+
+
+def lower_model(model, out_dir: str) -> dict:
+    d = M.model_dim(model)
+    b, e = BATCH[model.name], EVAL_BATCH[model.name]
+    xs, xdt, ys, ydt = data_specs(model)
+
+    params = _shape_struct((d,), "f32")
+    gx = _shape_struct((b,) + xs, xdt)
+    gy = _shape_struct((b,) + ys, ydt)
+    ex = _shape_struct((e,) + xs, xdt)
+    ey = _shape_struct((e,) + ys, ydt)
+
+    def grad_fn(p, x, y):
+        losses, grads = model.per_example(p, x, y)
+        return (losses, grads)
+
+    def eval_fn(p, x, y):
+        loss_sum, correct = model.evaluate(p, x, y)
+        return (loss_sum, correct)
+
+    grad_path = os.path.join(out_dir, f"{model.name}_grad.hlo.txt")
+    eval_path = os.path.join(out_dir, f"{model.name}_eval.hlo.txt")
+    with open(grad_path, "w") as f:
+        f.write(to_hlo_text(jax.jit(grad_fn).lower(params, gx, gy)))
+    with open(eval_path, "w") as f:
+        f.write(to_hlo_text(jax.jit(eval_fn).lower(params, ex, ey)))
+
+    layout, off = [], 0
+    for name, shape in model.param_specs():
+        n = int(np.prod(shape))
+        layout.append({"name": name, "shape": list(shape),
+                       "offset": off, "size": n})
+        off += n
+
+    init = model.init(seed=0)
+    init_path = os.path.join(out_dir, f"{model.name}_init.f32")
+    init.astype("<f4").tofile(init_path)
+
+    return {
+        "name": model.name,
+        "dim": d,
+        "batch": b,
+        "eval_batch": e,
+        "x_shape": list(xs),
+        "x_dtype": xdt,
+        "y_shape": list(ys),
+        "y_dtype": ydt,
+        "n_classes": getattr(model, "n_classes", 0),
+        "vocab": getattr(model, "vocab", 0),
+        "grad_hlo": os.path.basename(grad_path),
+        "eval_hlo": os.path.basename(eval_path),
+        "init_params": os.path.basename(init_path),
+        "param_layout": layout,
+    }
+
+
+def lower_sgd(d: int, out_dir: str) -> dict:
+    """Fused momentum-SGD optimizer artifact at dimension d."""
+    s = _shape_struct((d,), "f32")
+    h = _shape_struct((3,), "f32")
+
+    def fn(p, v, g, hyper):
+        p_new, v_new = ksgd.sgd_step(p, v, g, hyper)
+        return (p_new, v_new)
+
+    path = os.path.join(out_dir, f"sgd_{d}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(jax.jit(fn).lower(s, s, s, h)))
+    return {"dim": d, "hlo": os.path.basename(path)}
+
+
+def lower_balance(d: int, out_dir: str) -> dict:
+    s = _shape_struct((d,), "f32")
+
+    def fn(sv, mv, gv):
+        eps, s_new, c = kbalance.balance_step(sv, mv, gv)
+        return (eps, s_new, c)
+
+    path = os.path.join(out_dir, f"balance_{d}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(jax.jit(fn).lower(s, s, s)))
+    return {"dim": d, "hlo": os.path.basename(path)}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts",
+                    help="output directory for HLO artifacts")
+    ap.add_argument("--models", default="all",
+                    help="comma-separated subset, or 'all'")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    names = (list(M.MODELS) if args.models == "all"
+             else args.models.split(","))
+    manifest = {"format": 1, "models": [], "balance": [], "sgd": []}
+    for name in names:
+        model = M.MODELS[name]
+        print(f"[aot] lowering {name} (d={M.model_dim(model)}) ...",
+              flush=True)
+        manifest["models"].append(lower_model(model, args.out))
+    for d in BALANCE_DIMS:
+        print(f"[aot] lowering balance_{d} ...", flush=True)
+        manifest["balance"].append(lower_balance(d, args.out))
+    for d in BALANCE_DIMS:
+        print(f"[aot] lowering sgd_{d} ...", flush=True)
+        manifest["sgd"].append(lower_sgd(d, args.out))
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] wrote manifest with {len(manifest['models'])} models, "
+          f"{len(manifest['balance'])} balance kernels to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""L1 Pallas kernels for the GraB stack (build-time only, interpret=True)."""
+from . import balance, matmul, ref, sgd, softmax_xent  # noqa: F401

@@ -1,0 +1,75 @@
+"""Tiled matmul Pallas kernel — the dense forward hot-spot (logreg / heads).
+
+Classic MXU-oriented tiling: grid (M/bm, N/bn, K/bk); each step multiplies a
+(bm, bk) x (bk, bn) tile pair and accumulates into the f32 output tile that
+stays resident in VMEM across the K dimension (revisited-block pattern:
+out index_map ignores k). On a real TPU bm=bn=bk=128 feeds the 128x128
+systolic array at full occupancy in bf16; here we lower interpret=True for
+the CPU PJRT plugin and keep the same schedule so the HLO structure matches
+what the Mosaic path would pipeline.
+
+Inputs of arbitrary (M, K, N) are padded up to tile multiples and the result
+is sliced back, so callers never have to think about alignment.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_M = 32
+TILE_N = 32
+TILE_K = 128
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pad2(a: jnp.ndarray, bm: int, bn: int) -> jnp.ndarray:
+    m, n = a.shape
+    return jnp.pad(a, ((0, (-m) % bm), (0, (-n) % bn)))
+
+
+def matmul(x: jnp.ndarray, w: jnp.ndarray, *,
+           tm: int = TILE_M, tn: int = TILE_N, tk: int = TILE_K,
+           interpret: bool = True) -> jnp.ndarray:
+    """Compute x @ w with a tiled Pallas kernel. x: (M, K), w: (K, N)."""
+    assert x.ndim == 2 and w.ndim == 2 and x.shape[1] == w.shape[0], (
+        x.shape, w.shape)
+    m, k = x.shape
+    _, n = w.shape
+    xp = _pad2(x.astype(jnp.float32), tm, tk)
+    wp = _pad2(w.astype(jnp.float32), tk, tn)
+    gm, gk = xp.shape[0] // tm, xp.shape[1] // tk
+    gn = wp.shape[1] // tn
+
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], wp.shape[1]),
+                                       jnp.float32),
+        interpret=interpret,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tn", "tk"))
+def matmul_jit(x, w, tm: int = TILE_M, tn: int = TILE_N, tk: int = TILE_K):
+    return matmul(x, w, tm=tm, tn=tn, tk=tk)

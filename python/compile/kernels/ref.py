@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness references).
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain jax.numpy only. pytest (python/tests/test_kernels.py)
+sweeps shapes/dtypes with hypothesis and asserts allclose between the kernel
+(interpret=True) and these oracles.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ref_matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Reference for kernels.matmul.matmul: plain (M,K)@(K,N) in f32."""
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+
+
+def ref_softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray):
+    """Reference for kernels.softmax_xent.softmax_xent.
+
+    Args:
+      logits: f32[B, C]
+      labels: i32[B] class indices in [0, C)
+
+    Returns:
+      (loss[B], dlogits[B, C]) — per-example cross-entropy and its gradient
+      with respect to logits.
+    """
+    logits = logits.astype(jnp.float32)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    z = logits - m
+    e = jnp.exp(z)
+    se = jnp.sum(e, axis=-1, keepdims=True)
+    log_probs = z - jnp.log(se)
+    b = logits.shape[0]
+    loss = -log_probs[jnp.arange(b), labels]
+    onehot = jnp.zeros_like(logits).at[jnp.arange(b), labels].set(1.0)
+    dlogits = e / se - onehot
+    return loss, dlogits
+
+
+def ref_balance_step(s: jnp.ndarray, m: jnp.ndarray, g: jnp.ndarray):
+    """Reference for kernels.balance.balance_step (GraB Algorithm 5 inner step).
+
+    c = g - m (stale-mean centering); epsilon = +1 iff ||s+c|| < ||s-c||,
+    which is equivalent to <s, c> < 0 (the norm-invariant test of Alg. 5);
+    s_new = s + epsilon * c.
+
+    Returns (epsilon: f32[], s_new: f32[d], c: f32[d]).
+    """
+    s = s.astype(jnp.float32)
+    c = g.astype(jnp.float32) - m.astype(jnp.float32)
+    dot = jnp.vdot(s, c)
+    eps = jnp.where(dot < 0.0, 1.0, -1.0).astype(jnp.float32)
+    return eps, s + eps * c, c
+
+
+def ref_sgd_step(p: jnp.ndarray, v: jnp.ndarray, g: jnp.ndarray,
+                 hyper: jnp.ndarray):
+    """Reference for kernels.sgd.sgd_step (PyTorch-style coupled decay)."""
+    lr, mu, wd = hyper[0], hyper[1], hyper[2]
+    g2 = g.astype(jnp.float32) + wd * p.astype(jnp.float32)
+    v_new = mu * v.astype(jnp.float32) + g2
+    return p - lr * v_new, v_new

@@ -1,0 +1,81 @@
+"""Fused momentum-SGD update as a Pallas kernel.
+
+One pass over (params, velocity, grad) per optimizer step:
+
+    v' = mu * v + (g + wd * p)
+    p' = p - lr * v'
+
+Fusing the three reads + two writes into a single blockwise kernel keeps the
+optimizer memory-bound at exactly one round trip per tensor — the same
+argument a CUDA fused optimizer makes. On TPU the d axis is tiled into VMEM
+blocks (BlockSpec below); hyperparameters travel as a tiny (3,) vector so
+one compiled artifact serves every (lr, mu, wd) without recompilation.
+
+Lowered interpret=True for the CPU PJRT plugin; oracle in ref.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_D = 2048
+
+
+def _sgd_kernel(hyper_ref, p_ref, v_ref, g_ref, p_out_ref, v_out_ref):
+    lr = hyper_ref[0]
+    mu = hyper_ref[1]
+    wd = hyper_ref[2]
+    g = g_ref[...] + wd * p_ref[...]
+    v_new = mu * v_ref[...] + g
+    v_out_ref[...] = v_new
+    p_out_ref[...] = p_ref[...] - lr * v_new
+
+
+def sgd_step(p: jnp.ndarray, v: jnp.ndarray, g: jnp.ndarray,
+             hyper: jnp.ndarray, *, block_d: int = BLOCK_D,
+             interpret: bool = True):
+    """Fused momentum-SGD step.
+
+    Args:
+      p, v, g: f32[d] params / velocity / gradient.
+      hyper: f32[3] = (lr, momentum, weight_decay).
+
+    Returns:
+      (p_new, v_new): f32[d] each.
+    """
+    d = p.shape[0]
+    pad = (-d) % block_d
+    pp = jnp.pad(p.astype(jnp.float32), (0, pad))
+    vp = jnp.pad(v.astype(jnp.float32), (0, pad))
+    gp = jnp.pad(g.astype(jnp.float32), (0, pad))
+    nblk = pp.shape[0] // block_d
+
+    p_new, v_new = pl.pallas_call(
+        _sgd_kernel,
+        grid=(nblk,),
+        in_specs=[
+            pl.BlockSpec((3,), lambda i: (0,)),
+            pl.BlockSpec((block_d,), lambda i: (i,)),
+            pl.BlockSpec((block_d,), lambda i: (i,)),
+            pl.BlockSpec((block_d,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_d,), lambda i: (i,)),
+            pl.BlockSpec((block_d,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(pp.shape, jnp.float32),
+            jax.ShapeDtypeStruct(pp.shape, jnp.float32),
+        ],
+        interpret=interpret,
+    )(hyper.astype(jnp.float32), pp, vp, gp)
+    return p_new[:d], v_new[:d]
+
+
+@functools.partial(jax.jit, static_argnames=("block_d",))
+def sgd_step_jit(p, v, g, hyper, block_d: int = BLOCK_D):
+    return sgd_step(p, v, g, hyper, block_d=block_d)

@@ -1,0 +1,393 @@
+"""L2 — JAX model zoo for the GraB reproduction (build-time only).
+
+Four models mirroring the paper's Section 6 workloads:
+
+  * ``logreg``      — logistic regression (MNIST-like task, Fig. 2a). The
+    forward matmul and the fused softmax-CE use the L1 Pallas kernels, and
+    per-example gradients are computed in *closed form* from the kernel's
+    dlogits output, so the Pallas kernels sit on the gradient hot path of
+    the exported HLO.
+  * ``lenet``       — LeNet-5-style CNN (CIFAR-like task, Fig. 2b).
+  * ``lstm``        — single-layer LSTM LM (WikiText-2-like task, Fig. 2c).
+  * ``transformer`` — 2-layer tiny transformer classifier (~100k params,
+    GLUE-like task, Fig. 2d and the end-to-end driver).
+
+Every model exposes the same contract, consumed by aot.py:
+
+  param_specs() -> [(name, shape)]        fixed flat-vector layout
+  init(seed) -> np.float32[d]             deterministic init
+  per_example(params, X, Y) -> (losses[B], grads[B, d])
+  evaluate(params, X, Y) -> (loss_sum[], correct[])
+
+Per-example gradients are exactly what GraB needs (paper §"On the granularity
+of example ordering" recommends JAX's vmap-of-grad; that is literally what we
+export). The rust coordinator (L3) treats `grads[B, d]` as B ordering units
+and accumulates them for the optimizer step (the paper's gradient-
+accumulation workaround, Listing 1).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import matmul as kmatmul
+from .kernels import softmax_xent as kxent
+
+Spec = List[Tuple[str, Tuple[int, ...]]]
+
+
+# ---------------------------------------------------------------------------
+# flat <-> pytree plumbing
+# ---------------------------------------------------------------------------
+
+def spec_size(specs: Spec) -> int:
+    return sum(int(np.prod(s)) for _, s in specs)
+
+
+def unflatten(flat: jnp.ndarray, specs: Spec) -> Dict[str, jnp.ndarray]:
+    out, off = {}, 0
+    for name, shape in specs:
+        n = int(np.prod(shape))
+        out[name] = flat[off:off + n].reshape(shape)
+        off += n
+    return out
+
+
+def flatten_np(params: Dict[str, np.ndarray], specs: Spec) -> np.ndarray:
+    return np.concatenate(
+        [np.asarray(params[name], np.float32).reshape(-1)
+         for name, _ in specs])
+
+
+def _uniform(rng: np.random.Generator, shape, scale) -> np.ndarray:
+    return rng.uniform(-scale, scale, size=shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# logreg — MNIST-like (Fig. 2a). d = 784*10 + 10 = 7850, matching the paper.
+# ---------------------------------------------------------------------------
+
+class LogReg:
+    name = "logreg"
+    in_dim = 784
+    n_classes = 10
+
+    @classmethod
+    def param_specs(cls) -> Spec:
+        return [("w", (cls.in_dim, cls.n_classes)), ("b", (cls.n_classes,))]
+
+    @classmethod
+    def init(cls, seed: int = 0) -> np.ndarray:
+        rng = np.random.default_rng(seed)
+        scale = 1.0 / math.sqrt(cls.in_dim)
+        return flatten_np(
+            {"w": _uniform(rng, (cls.in_dim, cls.n_classes), scale),
+             "b": np.zeros((cls.n_classes,), np.float32)},
+            cls.param_specs())
+
+    # Closed-form batched per-example grads: both Pallas kernels on the path.
+    @classmethod
+    def per_example(cls, flat, X, Y):
+        p = unflatten(flat, cls.param_specs())
+        logits = kmatmul.matmul(X, p["w"]) + p["b"][None, :]
+        losses, dlogits = kxent.softmax_xent(logits, Y)
+        # grad_w[b] = outer(x_b, dlogits_b); grad_b[b] = dlogits_b
+        gw = X[:, :, None] * dlogits[:, None, :]            # [B, in, C]
+        grads = jnp.concatenate(
+            [gw.reshape(X.shape[0], -1), dlogits], axis=1)  # [B, d]
+        return losses, grads
+
+    @classmethod
+    def evaluate(cls, flat, X, Y):
+        p = unflatten(flat, cls.param_specs())
+        logits = kmatmul.matmul(X, p["w"]) + p["b"][None, :]
+        losses, _ = kxent.softmax_xent(logits, Y)
+        correct = jnp.sum((jnp.argmax(logits, axis=-1) == Y)
+                          .astype(jnp.float32))
+        return jnp.sum(losses), correct
+
+
+# ---------------------------------------------------------------------------
+# Generic autodiff path shared by the non-convex models
+# ---------------------------------------------------------------------------
+
+def _autodiff_per_example(loss_fn, flat, X, Y):
+    def one(x, y):
+        return loss_fn(flat, x, y)
+
+    losses = jax.vmap(one)(X, Y)
+    grads = jax.vmap(jax.grad(lambda f, x, y: loss_fn(f, x, y)),
+                     in_axes=(None, 0, 0))(flat, X, Y)
+    return losses, grads
+
+
+# ---------------------------------------------------------------------------
+# lenet — CIFAR-like (Fig. 2b). LeNet-5 shape on 3x32x32 inputs.
+# ---------------------------------------------------------------------------
+
+class LeNet:
+    name = "lenet"
+    in_dim = 3 * 32 * 32
+    n_classes = 10
+
+    @classmethod
+    def param_specs(cls) -> Spec:
+        return [
+            ("c1w", (6, 3, 5, 5)), ("c1b", (6,)),
+            ("c2w", (16, 6, 5, 5)), ("c2b", (16,)),
+            ("f1w", (400, 120)), ("f1b", (120,)),
+            ("f2w", (120, 84)), ("f2b", (84,)),
+            ("f3w", (84, 10)), ("f3b", (10,)),
+        ]
+
+    @classmethod
+    def init(cls, seed: int = 0) -> np.ndarray:
+        rng = np.random.default_rng(seed + 1)
+        p = {}
+        for name, shape in cls.param_specs():
+            if name.endswith("b"):
+                p[name] = np.zeros(shape, np.float32)
+            else:
+                fan_in = int(np.prod(shape[1:])) if len(shape) == 4 \
+                    else shape[0]
+                p[name] = _uniform(rng, shape, 1.0 / math.sqrt(fan_in))
+        return flatten_np(p, cls.param_specs())
+
+    @classmethod
+    def _forward(cls, p, x):
+        img = x.reshape(1, 3, 32, 32)
+        h = jax.lax.conv_general_dilated(
+            img, p["c1w"], (1, 1), "VALID")  # [1, 6, 28, 28]
+        h = jax.nn.relu(h + p["c1b"][None, :, None, None])
+        h = jax.lax.reduce_window(
+            h, 0.0, jax.lax.add, (1, 1, 2, 2), (1, 1, 2, 2), "VALID") / 4.0
+        h = jax.lax.conv_general_dilated(
+            h, p["c2w"], (1, 1), "VALID")    # [1, 16, 10, 10]
+        h = jax.nn.relu(h + p["c2b"][None, :, None, None])
+        h = jax.lax.reduce_window(
+            h, 0.0, jax.lax.add, (1, 1, 2, 2), (1, 1, 2, 2), "VALID") / 4.0
+        h = h.reshape(-1)                    # 16*5*5 = 400
+        h = jax.nn.relu(h @ p["f1w"] + p["f1b"])
+        h = jax.nn.relu(h @ p["f2w"] + p["f2b"])
+        return h @ p["f3w"] + p["f3b"]
+
+    @classmethod
+    def _loss(cls, flat, x, y):
+        p = unflatten(flat, cls.param_specs())
+        logits = cls._forward(p, x)
+        logz = jax.nn.logsumexp(logits)
+        return logz - logits[y]
+
+    @classmethod
+    def per_example(cls, flat, X, Y):
+        return _autodiff_per_example(cls._loss, flat, X, Y)
+
+    @classmethod
+    def evaluate(cls, flat, X, Y):
+        p = unflatten(flat, cls.param_specs())
+
+        def one(x):
+            return cls._forward(p, x)
+
+        logits = jax.vmap(one)(X)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        losses = logz - logits[jnp.arange(X.shape[0]), Y]
+        correct = jnp.sum((jnp.argmax(logits, axis=-1) == Y)
+                          .astype(jnp.float32))
+        return jnp.sum(losses), correct
+
+
+# ---------------------------------------------------------------------------
+# lstm — WikiText-2-like character LM (Fig. 2c). One ordering unit = one
+# bptt-length sequence, like the paper's batch-of-sequences granularity.
+# ---------------------------------------------------------------------------
+
+class LstmLM:
+    name = "lstm"
+    vocab = 32
+    embed = 32
+    hidden = 64
+    bptt = 35
+
+    @classmethod
+    def param_specs(cls) -> Spec:
+        v, e, h = cls.vocab, cls.embed, cls.hidden
+        return [
+            ("emb", (v, e)),
+            ("wx", (e, 4 * h)), ("wh", (h, 4 * h)), ("bi", (4 * h,)),
+            ("ow", (h, v)), ("ob", (v,)),
+        ]
+
+    @classmethod
+    def init(cls, seed: int = 0) -> np.ndarray:
+        rng = np.random.default_rng(seed + 2)
+        p = {}
+        for name, shape in cls.param_specs():
+            if name in ("bi", "ob"):
+                p[name] = np.zeros(shape, np.float32)
+            else:
+                p[name] = _uniform(rng, shape, 1.0 / math.sqrt(shape[0]))
+        return flatten_np(p, cls.param_specs())
+
+    @classmethod
+    def _logits(cls, p, x):
+        """x: i32[T] -> logits f32[T, vocab]."""
+        h = cls.hidden
+        emb = p["emb"][x]  # [T, E]
+
+        def step(carry, e_t):
+            hprev, cprev = carry
+            z = e_t @ p["wx"] + hprev @ p["wh"] + p["bi"]
+            i, f, g, o = jnp.split(z, 4)
+            i, f, o = jax.nn.sigmoid(i), jax.nn.sigmoid(f), jax.nn.sigmoid(o)
+            g = jnp.tanh(g)
+            c = f * cprev + i * g
+            hh = o * jnp.tanh(c)
+            return (hh, c), hh
+
+        (_, _), hs = jax.lax.scan(
+            step, (jnp.zeros(h), jnp.zeros(h)), emb)
+        return hs @ p["ow"] + p["ob"]  # [T, V]
+
+    @classmethod
+    def _loss(cls, flat, x, y):
+        p = unflatten(flat, cls.param_specs())
+        logits = cls._logits(p, x)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        ll = logits[jnp.arange(cls.bptt), y]
+        return jnp.mean(logz - ll)
+
+    @classmethod
+    def per_example(cls, flat, X, Y):
+        return _autodiff_per_example(cls._loss, flat, X, Y)
+
+    @classmethod
+    def evaluate(cls, flat, X, Y):
+        p = unflatten(flat, cls.param_specs())
+
+        def one(x):
+            return cls._logits(p, x)
+
+        logits = jax.vmap(one)(X)  # [B, T, V]
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        b, t = Y.shape
+        ll = jnp.take_along_axis(
+            logits, Y[:, :, None], axis=-1).squeeze(-1)
+        losses = jnp.mean(logz - ll, axis=-1)
+        correct = jnp.sum((jnp.argmax(logits, axis=-1) == Y)
+                          .astype(jnp.float32)) / t
+        del b
+        return jnp.sum(losses), correct
+
+
+# ---------------------------------------------------------------------------
+# transformer — GLUE-like classifier (Fig. 2d / end-to-end driver). 2 layers,
+# 2 heads, hidden 64 -> ~105k params (BERT-Tiny stand-in at this testbed's
+# scale; the regime where Greedy Ordering's O(nd) state explodes).
+# ---------------------------------------------------------------------------
+
+class TinyTransformer:
+    name = "transformer"
+    vocab = 64
+    seq = 32
+    dim = 64
+    heads = 2
+    ffn = 128
+    layers = 2
+    n_classes = 2
+
+    @classmethod
+    def param_specs(cls) -> Spec:
+        d, f = cls.dim, cls.ffn
+        specs: Spec = [("emb", (cls.vocab, d)), ("pos", (cls.seq, d))]
+        for i in range(cls.layers):
+            specs += [
+                (f"l{i}.qkv", (d, 3 * d)), (f"l{i}.qkvb", (3 * d,)),
+                (f"l{i}.proj", (d, d)), (f"l{i}.projb", (d,)),
+                (f"l{i}.ln1g", (d,)), (f"l{i}.ln1b", (d,)),
+                (f"l{i}.ff1", (d, f)), (f"l{i}.ff1b", (f,)),
+                (f"l{i}.ff2", (f, d)), (f"l{i}.ff2b", (d,)),
+                (f"l{i}.ln2g", (d,)), (f"l{i}.ln2b", (d,)),
+            ]
+        specs += [("head", (d, cls.n_classes)), ("headb", (cls.n_classes,))]
+        return specs
+
+    @classmethod
+    def init(cls, seed: int = 0) -> np.ndarray:
+        rng = np.random.default_rng(seed + 3)
+        p = {}
+        for name, shape in cls.param_specs():
+            if name.endswith("g"):           # layernorm gains
+                p[name] = np.ones(shape, np.float32)
+            elif name.endswith("b"):         # biases & layernorm shifts
+                p[name] = np.zeros(shape, np.float32)
+            else:
+                p[name] = _uniform(rng, shape, 1.0 / math.sqrt(shape[0]))
+        return flatten_np(p, cls.param_specs())
+
+    @staticmethod
+    def _ln(x, g, b):
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+        return (x - mu) / jnp.sqrt(var + 1e-5) * g + b
+
+    @classmethod
+    def _forward(cls, p, x):
+        """x: i32[T] -> logits f32[n_classes]."""
+        d, nh = cls.dim, cls.heads
+        hd = d // nh
+        h = p["emb"][x] + p["pos"]  # [T, D]
+        t = h.shape[0]
+        for i in range(cls.layers):
+            hn = cls._ln(h, p[f"l{i}.ln1g"], p[f"l{i}.ln1b"])
+            qkv = hn @ p[f"l{i}.qkv"] + p[f"l{i}.qkvb"]
+            q, k, v = jnp.split(qkv, 3, axis=-1)
+            q = q.reshape(t, nh, hd).transpose(1, 0, 2)
+            k = k.reshape(t, nh, hd).transpose(1, 0, 2)
+            v = v.reshape(t, nh, hd).transpose(1, 0, 2)
+            att = jnp.einsum("hqd,hkd->hqk", q, k) / math.sqrt(hd)
+            att = jax.nn.softmax(att, axis=-1)
+            o = jnp.einsum("hqk,hkd->hqd", att, v)
+            o = o.transpose(1, 0, 2).reshape(t, d)
+            h = h + o @ p[f"l{i}.proj"] + p[f"l{i}.projb"]
+            hn = cls._ln(h, p[f"l{i}.ln2g"], p[f"l{i}.ln2b"])
+            ff = jax.nn.relu(hn @ p[f"l{i}.ff1"] + p[f"l{i}.ff1b"])
+            h = h + ff @ p[f"l{i}.ff2"] + p[f"l{i}.ff2b"]
+        pooled = jnp.mean(h, axis=0)
+        return pooled @ p["head"] + p["headb"]
+
+    @classmethod
+    def _loss(cls, flat, x, y):
+        p = unflatten(flat, cls.param_specs())
+        logits = cls._forward(p, x)
+        return jax.nn.logsumexp(logits) - logits[y]
+
+    @classmethod
+    def per_example(cls, flat, X, Y):
+        return _autodiff_per_example(cls._loss, flat, X, Y)
+
+    @classmethod
+    def evaluate(cls, flat, X, Y):
+        p = unflatten(flat, cls.param_specs())
+
+        def one(x):
+            return cls._forward(p, x)
+
+        logits = jax.vmap(one)(X)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        losses = logz - logits[jnp.arange(X.shape[0]), Y]
+        correct = jnp.sum((jnp.argmax(logits, axis=-1) == Y)
+                          .astype(jnp.float32))
+        return jnp.sum(losses), correct
+
+
+MODELS = {m.name: m for m in (LogReg, LeNet, LstmLM, TinyTransformer)}
+
+
+def model_dim(model) -> int:
+    return spec_size(model.param_specs())

@@ -1,0 +1,193 @@
+"""L1 kernel correctness: Pallas (interpret=True) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and value ranges; every kernel must agree with its
+ref.py oracle to tight tolerance across the sweep.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import balance, matmul, ref, softmax_xent
+
+SETTINGS = dict(max_examples=25, deadline=None,
+                suppress_health_check=[hypothesis.HealthCheck.too_slow])
+
+
+def _arr(rng, shape, scale=1.0):
+    return jnp.asarray(rng.normal(scale=scale, size=shape), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# balance_step (GraB Algorithm 5 inner step)
+# ---------------------------------------------------------------------------
+
+@hypothesis.given(
+    d=st.integers(min_value=1, max_value=5000),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    scale=st.sampled_from([1e-3, 1.0, 1e3]),
+)
+@hypothesis.settings(**SETTINGS)
+def test_balance_matches_ref(d, seed, scale):
+    rng = np.random.default_rng(seed)
+    s, m, g = (_arr(rng, (d,), scale) for _ in range(3))
+    e1, s1, c1 = balance.balance_step(s, m, g)
+    e2, s2, c2 = ref.ref_balance_step(s, m, g)
+    assert float(e1) == float(e2)
+    np.testing.assert_allclose(s1, s2, rtol=1e-6, atol=1e-6 * scale)
+    np.testing.assert_allclose(c1, c2, rtol=1e-6, atol=1e-6 * scale)
+
+
+@hypothesis.given(
+    d=st.integers(min_value=2, max_value=512),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+@hypothesis.settings(**SETTINGS)
+def test_balance_norm_invariance(d, seed):
+    """Algorithm 5 is invariant to rescaling the inputs (paper §5)."""
+    rng = np.random.default_rng(seed)
+    s, m, g = (_arr(rng, (d,)) for _ in range(3))
+    e1, _, _ = balance.balance_step(s, m, g)
+    e2, _, _ = balance.balance_step(s * 977.0, m * 977.0, g * 977.0)
+    assert float(e1) == float(e2)
+
+
+def test_balance_sign_reduces_sum():
+    """The chosen sign never increases ||s|| vs the opposite sign."""
+    rng = np.random.default_rng(7)
+    s = _arr(rng, (256,))
+    m = jnp.zeros(256)
+    for _ in range(50):
+        g = _arr(rng, (256,))
+        eps, s_new, c = balance.balance_step(s, m, g)
+        other = s - eps * c
+        assert float(jnp.linalg.norm(s_new)) <= \
+            float(jnp.linalg.norm(other)) + 1e-4
+        s = s_new
+
+
+@pytest.mark.parametrize("d,block", [(1, 8), (7, 8), (8, 8), (9, 8),
+                                     (2048, 2048), (2049, 2048)])
+def test_balance_block_boundaries(d, block):
+    rng = np.random.default_rng(d)
+    s, m, g = (_arr(rng, (d,)) for _ in range(3))
+    e1, s1, c1 = balance.balance_step(s, m, g, block_d=block)
+    e2, s2, c2 = ref.ref_balance_step(s, m, g)
+    assert float(e1) == float(e2)
+    np.testing.assert_allclose(s1, s2, rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+@hypothesis.given(
+    m=st.integers(min_value=1, max_value=70),
+    k=st.integers(min_value=1, max_value=300),
+    n=st.integers(min_value=1, max_value=40),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+@hypothesis.settings(**SETTINGS)
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (m, k))
+    w = _arr(rng, (k, n))
+    got = matmul.matmul(x, w)
+    want = ref.ref_matmul(x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4 * np.sqrt(k))
+
+
+@pytest.mark.parametrize("shape", [(32, 128, 32), (1, 1, 1),
+                                   (33, 129, 31), (64, 784, 10)])
+def test_matmul_tile_boundaries(shape):
+    m, k, n = shape
+    rng = np.random.default_rng(m * k * n)
+    x = _arr(rng, (m, k))
+    w = _arr(rng, (k, n))
+    np.testing.assert_allclose(
+        matmul.matmul(x, w), ref.ref_matmul(x, w), rtol=1e-4, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# softmax_xent
+# ---------------------------------------------------------------------------
+
+@hypothesis.given(
+    b=st.integers(min_value=1, max_value=130),
+    c=st.integers(min_value=2, max_value=64),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    shift=st.sampled_from([0.0, 50.0, -50.0]),
+)
+@hypothesis.settings(**SETTINGS)
+def test_softmax_xent_matches_ref(b, c, seed, shift):
+    rng = np.random.default_rng(seed)
+    logits = _arr(rng, (b, c), 3.0) + shift  # shift checks max-subtraction
+    labels = jnp.asarray(rng.integers(0, c, size=b), jnp.int32)
+    l1, d1 = softmax_xent.softmax_xent(logits, labels)
+    l2, d2 = ref.ref_softmax_xent(logits, labels)
+    np.testing.assert_allclose(l1, l2, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(d1, d2, rtol=1e-5, atol=1e-6)
+
+
+def test_softmax_xent_dlogits_rows_sum_to_zero():
+    rng = np.random.default_rng(3)
+    logits = _arr(rng, (17, 10))
+    labels = jnp.asarray(rng.integers(0, 10, size=17), jnp.int32)
+    _, d = softmax_xent.softmax_xent(logits, labels)
+    np.testing.assert_allclose(np.sum(np.asarray(d), axis=1),
+                               np.zeros(17), atol=1e-5)
+
+
+def test_softmax_xent_grad_is_autodiff_grad():
+    """dlogits from the fused kernel == jax.grad of the CE loss."""
+    import jax
+    rng = np.random.default_rng(11)
+    logits = _arr(rng, (9, 7))
+    labels = jnp.asarray(rng.integers(0, 7, size=9), jnp.int32)
+
+    def loss(lg):
+        l, _ = ref.ref_softmax_xent(lg, labels)
+        return jnp.sum(l)
+
+    want = jax.grad(loss)(logits)
+    _, got = softmax_xent.softmax_xent(logits, labels)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# sgd (fused momentum update)
+# ---------------------------------------------------------------------------
+
+@hypothesis.given(
+    d=st.integers(min_value=1, max_value=5000),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    lr=st.sampled_from([1e-3, 0.1, 1.0]),
+    mu=st.sampled_from([0.0, 0.9, 0.99]),
+    wd=st.sampled_from([0.0, 1e-4, 0.01]),
+)
+@hypothesis.settings(**SETTINGS)
+def test_sgd_matches_ref(d, seed, lr, mu, wd):
+    from compile.kernels import sgd
+
+    rng = np.random.default_rng(seed)
+    p, v, g = (_arr(rng, (d,)) for _ in range(3))
+    hyper = jnp.asarray([lr, mu, wd], jnp.float32)
+    p1, v1 = sgd.sgd_step(p, v, g, hyper)
+    p2, v2 = ref.ref_sgd_step(p, v, g, hyper)
+    np.testing.assert_allclose(p1, p2, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(v1, v2, rtol=1e-6, atol=1e-6)
+
+
+def test_sgd_converges_on_quadratic():
+    from compile.kernels import sgd
+
+    d = 64
+    p = jnp.ones(d) * 5.0
+    v = jnp.zeros(d)
+    # lr/(1-mu) must stay < 2 for the quadratic: use lr=0.05, mu=0.9.
+    hyper = jnp.asarray([0.05, 0.9, 0.0], jnp.float32)
+    for _ in range(200):
+        p, v = sgd.sgd_step(p, v, p, hyper)  # grad of 0.5||p||^2 is p
+    assert float(jnp.linalg.norm(p)) < 1e-2

@@ -1,0 +1,54 @@
+//! Bench: Statement 1 — greedy Ω(n) vs random O(√n) on the adversarial
+//! family, with wall-time of the greedy selection itself.
+//!
+//! Run: `cargo bench --bench adversarial`
+
+use grab::herding::adversarial::adversarial_vectors;
+use grab::herding::greedy::{greedy_order, greedy_order_raw};
+use grab::herding::herding_bound;
+use grab::util::rng::Rng;
+use grab::util::stats::scaling_exponent;
+use grab::util::timer::Bench;
+
+fn main() {
+    println!("== adversarial bench (statement1) ==");
+    let ns = [256usize, 512, 1024, 2048, 4096];
+    let mut rng = Rng::new(0);
+    let mut greedy_bounds = Vec::new();
+    let mut random_bounds = Vec::new();
+
+    println!(
+        "{:>8} {:>14} {:>17} {:>12}",
+        "n", "greedy_raw", "greedy_centered", "random(avg5)"
+    );
+    for &n in &ns {
+        let vs = adversarial_vectors(n);
+        let graw =
+            herding_bound(&vs, &greedy_order_raw(&vs)).1 as f64;
+        let gcen = herding_bound(&vs, &greedy_order(&vs)).1 as f64;
+        let mut acc = 0.0;
+        for _ in 0..5 {
+            acc += herding_bound(&vs, &rng.permutation(n)).1 as f64;
+        }
+        let rand = acc / 5.0;
+        println!("{n:>8} {graw:>14.2} {gcen:>17.2} {rand:>12.2}");
+        greedy_bounds.push(graw);
+        random_bounds.push(rand);
+    }
+    let xs: Vec<f64> = ns.iter().map(|&n| n as f64).collect();
+    println!(
+        "exponents: greedy ~ n^{:.2} (paper Ω(n)), random ~ n^{:.2} \
+         (paper O(√n))",
+        scaling_exponent(&xs, &greedy_bounds),
+        scaling_exponent(&xs, &random_bounds)
+    );
+
+    for &n in &[512usize, 2048] {
+        let vs = adversarial_vectors(n);
+        Bench::new(format!("greedy_select/adversarial/n{n}"))
+            .with_iters(3, 30)
+            .run(|| {
+                std::hint::black_box(greedy_order_raw(&vs).len());
+            });
+    }
+}

@@ -1,0 +1,94 @@
+//! Bench: the GraB per-example hot path (the §Perf deliverable).
+//!
+//! Compares, at the paper's logreg d and a larger d:
+//!   * naive scalar dot vs 8-way unrolled dot
+//!   * two-step (materialize c, then dot/axpy) vs fused centered ops
+//!   * the full observe() step of GraBOrder
+//!   * the Pallas/HLO balance artifact via PJRT (layer ablation)
+//!
+//! Run: `cargo bench --bench balance_hot`
+
+use grab::balance::DeterministicBalancer;
+use grab::ordering::{GraBOrder, OrderPolicy};
+use grab::runtime::Runtime;
+use grab::tensor;
+use grab::util::rng::Rng;
+use grab::util::timer::Bench;
+
+fn main() {
+    println!("== balance_hot bench (§Perf hot path) ==");
+    for d in [1024usize, 7850, 65536] {
+        let mut rng = Rng::new(d as u64);
+        let s: Vec<f32> = (0..d).map(|_| rng.gauss() as f32).collect();
+        let g: Vec<f32> = (0..d).map(|_| rng.gauss() as f32).collect();
+        let m: Vec<f32> =
+            (0..d).map(|_| rng.gauss() as f32 * 0.1).collect();
+        let mut c = vec![0.0f32; d];
+
+        Bench::new(format!("dot_naive/d{d}"))
+            .with_iters(100, 2000)
+            .run(|| {
+                std::hint::black_box(tensor::dot_naive(&s, &g));
+            });
+        Bench::new(format!("dot_unrolled/d{d}"))
+            .with_iters(100, 2000)
+            .run(|| {
+                std::hint::black_box(tensor::dot(&s, &g));
+            });
+        Bench::new(format!("two_step_center_dot/d{d}"))
+            .with_iters(100, 2000)
+            .run(|| {
+                tensor::sub_into(&g, &m, &mut c);
+                std::hint::black_box(tensor::dot(&s, &c));
+            });
+        Bench::new(format!("fused_dot_centered/d{d}"))
+            .with_iters(100, 2000)
+            .run(|| {
+                std::hint::black_box(tensor::dot_centered(&s, &g, &m));
+            });
+
+        // Full observe step (decision + signed update + mean accum +
+        // placement), amortized over a synthetic epoch.
+        let n = 256usize;
+        let grads: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..d).map(|_| rng.gauss() as f32).collect())
+            .collect();
+        let r = Bench::new(format!("grab_observe_epoch/n{n}/d{d}"))
+            .with_iters(3, 50)
+            .run(|| {
+                let mut p = GraBOrder::new(
+                    n, d, Box::new(DeterministicBalancer));
+                let order = p.epoch_order(0);
+                for (pos, &unit) in order.iter().enumerate() {
+                    p.observe(pos, &grads[unit]);
+                }
+                p.epoch_end();
+            });
+        println!(
+            "  -> {:.1} ns per observe() at d={d}",
+            r.summary.mean / n as f64 * 1e9
+        );
+    }
+
+    // PJRT kernel path, if artifacts are present.
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let rt = Runtime::open("artifacts").expect("runtime");
+        for d in [1024usize, 7850] {
+            let kernel = rt.balance_executor(d).expect("balance artifact");
+            let mut rng = Rng::new(9);
+            let m: Vec<f32> =
+                (0..d).map(|_| rng.gauss() as f32 * 0.1).collect();
+            let g: Vec<f32> =
+                (0..d).map(|_| rng.gauss() as f32).collect();
+            let mut s = vec![0.0f32; d];
+            Bench::new(format!("pallas_kernel_step/d{d}"))
+                .with_iters(20, 200)
+                .run(|| {
+                    std::hint::black_box(
+                        kernel.step(&mut s, &m, &g).unwrap());
+                });
+        }
+    } else {
+        println!("(artifacts missing — skipping PJRT kernel rows)");
+    }
+}

@@ -1,0 +1,93 @@
+//! Bench: end-to-end training throughput per ordering policy (the
+//! wall-clock dimension of Fig. 2) plus the microbatch-size ablation
+//! called out in DESIGN.md §8.
+//!
+//! Requires `artifacts/`. Run: `cargo bench --bench end_to_end`
+
+use grab::config::{OrderingKind, Task, TrainConfig};
+use grab::pipeline::PipelineTrainer;
+use grab::runtime::Runtime;
+use grab::train::Trainer;
+use grab::util::timer::Bench;
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("artifacts missing — run `make artifacts` first");
+        return;
+    }
+    println!("== end_to_end bench (fig2 wall-clock) ==");
+    let rt = Runtime::open("artifacts").expect("runtime");
+
+    // --- epoch cost per ordering on mnist/logreg -------------------------
+    let n = 512;
+    for ordering in [
+        OrderingKind::RandomReshuffle,
+        OrderingKind::ShuffleOnce,
+        OrderingKind::FlipFlop,
+        OrderingKind::GraB,
+        OrderingKind::GreedyOrdering,
+    ] {
+        let mut cfg = TrainConfig::for_task(Task::Mnist);
+        cfg.ordering = ordering;
+        cfg.epochs = 1;
+        cfg.n_examples = n;
+        cfg.n_eval = 256;
+        cfg.eval_every = 0;
+        let r = Bench::new(format!(
+            "train_epoch/mnist/{}/n{n}", ordering.name()))
+            .with_iters(2, 8)
+            .run(|| {
+                let mut t =
+                    Trainer::new(cfg.clone(), &rt, None).unwrap();
+                let res = t.run().unwrap();
+                std::hint::black_box(res.final_train_loss());
+            });
+        println!(
+            "  -> {:.1} examples/s",
+            n as f64 / r.summary.mean
+        );
+    }
+
+    // --- sync vs threaded pipeline ---------------------------------------
+    for (name, pipeline) in [("sync", false), ("pipeline", true)] {
+        let mut cfg = TrainConfig::for_task(Task::Glue);
+        cfg.ordering = OrderingKind::GraB;
+        cfg.epochs = 1;
+        cfg.n_examples = 256;
+        cfg.n_eval = 64;
+        cfg.eval_every = 0;
+        cfg.accum_steps = 4;
+        let r = Bench::new(format!("train_epoch/glue/grab/{name}"))
+            .with_iters(2, 6)
+            .run(|| {
+                if pipeline {
+                    let mut t =
+                        PipelineTrainer::new(cfg.clone(), &rt).unwrap();
+                    std::hint::black_box(t.run().unwrap().run_id.len());
+                } else {
+                    let mut t =
+                        Trainer::new(cfg.clone(), &rt, None).unwrap();
+                    std::hint::black_box(t.run().unwrap().run_id.len());
+                }
+            });
+        println!("  -> {:.1} examples/s", 256.0 / r.summary.mean);
+    }
+
+    // --- microbatch/accumulation sweep (design ablation #3) --------------
+    for accum in [1usize, 2, 4, 8] {
+        let mut cfg = TrainConfig::for_task(Task::Mnist);
+        cfg.ordering = OrderingKind::GraB;
+        cfg.epochs = 1;
+        cfg.n_examples = 512;
+        cfg.n_eval = 256;
+        cfg.eval_every = 0;
+        cfg.accum_steps = accum;
+        Bench::new(format!("accum_sweep/mnist/grab/accum{accum}"))
+            .with_iters(2, 8)
+            .run(|| {
+                let mut t =
+                    Trainer::new(cfg.clone(), &rt, None).unwrap();
+                std::hint::black_box(t.run().unwrap().run_id.len());
+            });
+    }
+}

@@ -1,0 +1,84 @@
+//! Bench: herding-bound machinery (regenerates the data behind Fig. 1b
+//! and Fig. 4) — wall-time of balance+reorder passes across (n, d) and
+//! the bounds achieved by Alg. 5 vs Alg. 6 vs greedy vs random.
+//!
+//! Run: `cargo bench --bench herding_bound`
+
+use grab::balance::{Balancer, DeterministicBalancer, WalkBalancer};
+use grab::herding::offline::herd;
+use grab::herding::{greedy::greedy_order, herding_bound};
+use grab::util::rng::Rng;
+use grab::util::timer::Bench;
+
+fn main() {
+    println!("== herding_bound bench (fig1/fig4 series) ==");
+    let mut rng = Rng::new(0);
+
+    // --- pass cost scaling (one balance+reorder pass) -------------------
+    for (n, d) in [(1000usize, 16usize), (1000, 128), (4000, 128),
+                   (10000, 128), (4000, 1024)] {
+        let vs: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..d).map(|_| rng.f32()).collect())
+            .collect();
+        Bench::new(format!("balance_reorder_pass/n{n}/d{d}"))
+            .with_iters(3, 50)
+            .run(|| {
+                let mut b = DeterministicBalancer;
+                let (_, stats) = herd(&mut b, &vs, 1);
+                std::hint::black_box(stats.len());
+            });
+    }
+
+    // --- achieved bounds: the fig1 comparison at bench scale -------------
+    let n = 4000;
+    let d = 128;
+    let vs: Vec<Vec<f32>> = (0..n)
+        .map(|_| (0..d).map(|_| rng.f32()).collect())
+        .collect();
+    let identity: Vec<usize> = (0..n).collect();
+    let random = rng.permutation(n);
+
+    let mut rows: Vec<(String, f32, f32)> = Vec::new();
+    let (i_inf, i_l2) = herding_bound(&vs, &identity);
+    rows.push(("original".into(), i_inf, i_l2));
+    let (r_inf, r_l2) = herding_bound(&vs, &random);
+    rows.push(("random".into(), r_inf, r_l2));
+
+    let mut alg5 = DeterministicBalancer;
+    let (o1, _) = herd(&mut alg5, &vs, 1);
+    let (a1_inf, a1_l2) = herding_bound(&vs, &o1);
+    rows.push(("alg5_1pass".into(), a1_inf, a1_l2));
+    let (o10, _) = herd(&mut alg5, &vs, 10);
+    let (a10_inf, a10_l2) = herding_bound(&vs, &o10);
+    rows.push(("alg5_10pass".into(), a10_inf, a10_l2));
+
+    let mut alg6: Box<dyn Balancer> = Box::new(WalkBalancer::new(
+        ((n * d) as f64).ln(),
+        1,
+    ));
+    let (w10, _) = herd(alg6.as_mut(), &vs, 10);
+    let (w_inf, w_l2) = herding_bound(&vs, &w10);
+    rows.push(("alg6_10pass".into(), w_inf, w_l2));
+
+    let g = greedy_order(&vs);
+    let (g_inf, g_l2) = herding_bound(&vs, &g);
+    rows.push(("greedy".into(), g_inf, g_l2));
+
+    println!("\nachieved herding bounds (n={n}, d={d}):");
+    println!("{:<14} {:>12} {:>12}", "order", "linf", "l2");
+    for (name, inf, l2) in &rows {
+        println!("{name:<14} {inf:>12.3} {l2:>12.3}");
+    }
+
+    // --- greedy cost (the O(n^2 d) wall the paper reports) ----------------
+    for n in [500usize, 1000, 2000] {
+        let vs: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..128).map(|_| rng.f32()).collect())
+            .collect();
+        Bench::new(format!("greedy_order/n{n}/d128"))
+            .with_iters(2, 10)
+            .run(|| {
+                std::hint::black_box(greedy_order(&vs).len());
+            });
+    }
+}

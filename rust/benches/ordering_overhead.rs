@@ -1,0 +1,84 @@
+//! Bench: Table 1 — ordering compute/storage overhead of RR vs Greedy
+//! Ordering vs GraB across n at the paper's logreg dimension d = 7850.
+//!
+//! Run: `cargo bench --bench ordering_overhead`
+
+use grab::balance::DeterministicBalancer;
+use grab::ordering::{GraBOrder, GreedyOrder, OrderPolicy,
+                     RandomReshuffle};
+use grab::util::prop::gen;
+use grab::util::rng::Rng;
+use grab::util::stats::scaling_exponent;
+use grab::util::timer::Bench;
+
+fn one_epoch(policy: &mut dyn OrderPolicy, vs: &[Vec<f32>]) {
+    let order = policy.epoch_order(0);
+    if policy.wants_grads() {
+        for (pos, &unit) in order.iter().enumerate() {
+            policy.observe(pos, &vs[unit]);
+        }
+    }
+    policy.epoch_end();
+}
+
+fn main() {
+    println!("== ordering_overhead bench (table1) ==");
+    let d = 7850;
+    let ns = [256usize, 512, 1024];
+    let mut greedy_times = Vec::new();
+    let mut grab_times = Vec::new();
+
+    for &n in &ns {
+        let mut rng = Rng::new(n as u64);
+        let vs = gen::vec_set(&mut rng, n, d);
+
+        let r = Bench::new(format!("epoch_order/rr/n{n}/d{d}"))
+            .with_iters(5, 100)
+            .run(|| {
+                let mut p = RandomReshuffle::new(n, 0);
+                one_epoch(&mut p, &vs);
+            });
+        let _ = r;
+
+        let r = Bench::new(format!("epoch_order/grab/n{n}/d{d}"))
+            .with_iters(5, 50)
+            .run(|| {
+                let mut p = GraBOrder::new(
+                    n, d, Box::new(DeterministicBalancer));
+                one_epoch(&mut p, &vs);
+            });
+        grab_times.push((n as f64, r.summary.mean));
+
+        let r = Bench::new(format!("epoch_order/greedy/n{n}/d{d}"))
+            .with_iters(2, 5)
+            .run(|| {
+                let mut p = GreedyOrder::new(n, d);
+                one_epoch(&mut p, &vs);
+            });
+        greedy_times.push((n as f64, r.summary.mean));
+
+        // Memory column, measured once.
+        let mut greedy = GreedyOrder::new(n, d);
+        one_epoch(&mut greedy, &vs);
+        let mut grab = GraBOrder::new(
+            n, d, Box::new(DeterministicBalancer));
+        one_epoch(&mut grab, &vs);
+        println!(
+            "state_bytes n={n}: greedy={} grab={} ({:.2}%)",
+            greedy.state_bytes(),
+            grab.state_bytes(),
+            100.0 * grab.state_bytes() as f64
+                / greedy.state_bytes() as f64
+        );
+    }
+
+    let xs: Vec<f64> = greedy_times.iter().map(|p| p.0).collect();
+    let gy: Vec<f64> = greedy_times.iter().map(|p| p.1).collect();
+    let by: Vec<f64> = grab_times.iter().map(|p| p.1).collect();
+    println!(
+        "\nscaling fits: greedy time ~ n^{:.2} (theory n^2), \
+         grab time ~ n^{:.2} (theory n^1)",
+        scaling_exponent(&xs, &gy),
+        scaling_exponent(&xs, &by)
+    );
+}

@@ -1,0 +1,319 @@
+//! Vector balancing — the engine room of GraB.
+//!
+//! Given vectors arriving online, a [`Balancer`] assigns each a sign
+//! ε ∈ {−1, +1} so the signed prefix sums stay small (Spencer's balancing
+//! game). Two algorithms from the paper:
+//!
+//! * [`DeterministicBalancer`] — Algorithm 5: ε = +1 iff ‖s+v‖ < ‖s−v‖.
+//!   Norm-invariant (only sign⟨s, v⟩ matters), hyperparameter-free; the
+//!   paper's practical recommendation and our default.
+//! * [`WalkBalancer`] — Algorithm 6 (Alweiss, Liu & Sawhney): the
+//!   self-balancing random walk with the Õ(1) high-probability bound of
+//!   Theorem 4, including the paper's fail/restart semantics.
+//!
+//! [`reorder`] is Algorithm 3 (Harvey & Samadi): turn balanced signs into a
+//! new permutation (positives in order, then negatives reversed), which
+//! halves the herding bound per pass (Theorem 2).
+
+use crate::tensor;
+use crate::util::rng::Rng;
+
+/// Online sign-assignment over a running signed sum `s` owned by the caller.
+pub trait Balancer {
+    /// Decide the sign for centered vector `c` given the current signed
+    /// running sum `s`. Implementations must not mutate `s` (the caller
+    /// applies `s += eps * c` so it can fuse the update).
+    fn sign(&mut self, s: &[f32], c: &[f32]) -> f32;
+
+    /// Reset any internal state for a fresh sequence.
+    fn reset(&mut self) {}
+
+    fn name(&self) -> &'static str;
+}
+
+/// Algorithm 5 — deterministic, normalization-invariant balancing.
+///
+/// ‖s+c‖² − ‖s−c‖² = 4⟨s, c⟩, so the decision is just the sign of one dot
+/// product; ties resolve to −1 exactly like the paper's pseudocode
+/// (`+1 if ||s+v|| < ||s-v|| else -1`).
+#[derive(Clone, Debug, Default)]
+pub struct DeterministicBalancer;
+
+impl Balancer for DeterministicBalancer {
+    #[inline]
+    fn sign(&mut self, s: &[f32], c: &[f32]) -> f32 {
+        if tensor::dot(s, c) < 0.0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "alg5-deterministic"
+    }
+}
+
+/// Algorithm 6 — probabilistic self-balancing walk.
+///
+/// Requires ‖z‖ ≤ 1; we therefore track a running normalizer (max input
+/// norm seen so far, the "large enough constant" the paper says must be
+/// estimated) and feed the walk z = c / normalizer. If the preconditions
+/// |⟨s̃, z⟩| ≤ c or ‖s̃‖∞ ≤ c fail, the algorithm *fails* per the paper; we
+/// count the failure and restart the internal scaled sum (the paper's
+/// "restart on failure" offline conversion), falling back to the
+/// deterministic sign for that step so training never stalls.
+#[derive(Clone, Debug)]
+pub struct WalkBalancer {
+    /// Theorem 4's c = 30·log(nd/δ); pick via [`WalkBalancer::theorem_c`]
+    /// or supply directly.
+    pub c: f64,
+    rng: Rng,
+    /// Internal *scaled* signed sum s̃ = Σ ε_i z_i (the walk's own state —
+    /// distinct from the caller's unscaled sum).
+    s_scaled: Vec<f32>,
+    normalizer: f32,
+    pub failures: usize,
+}
+
+impl WalkBalancer {
+    pub fn new(c: f64, seed: u64) -> WalkBalancer {
+        assert!(c > 0.0, "walk c must be positive");
+        WalkBalancer {
+            c,
+            rng: Rng::new(seed),
+            s_scaled: Vec::new(),
+            normalizer: 1e-12,
+            failures: 0,
+        }
+    }
+
+    /// Theorem 4's recommended constant for `n` vectors in `d` dims at
+    /// failure probability `delta`.
+    pub fn theorem_c(n: usize, d: usize, delta: f64) -> f64 {
+        30.0 * ((n.max(1) as f64) * (d.max(1) as f64) / delta).ln()
+    }
+}
+
+impl Balancer for WalkBalancer {
+    fn sign(&mut self, _s: &[f32], c_vec: &[f32]) -> f32 {
+        if self.s_scaled.len() != c_vec.len() {
+            self.s_scaled = vec![0.0; c_vec.len()];
+        }
+        let norm = tensor::norm2(c_vec);
+        if norm > self.normalizer {
+            self.normalizer = norm;
+        }
+        let inv = 1.0 / self.normalizer;
+        // z = c / normalizer; dot with the scaled sum.
+        let dot = tensor::dot(&self.s_scaled, c_vec) as f64 * inv as f64;
+        let sinf = tensor::norm_inf(&self.s_scaled) as f64;
+        let eps = if dot.abs() > self.c || sinf > self.c {
+            // Paper line 3: Fail. Restart the walk, fall back to Alg 5 for
+            // this step.
+            self.failures += 1;
+            tensor::zero(&mut self.s_scaled);
+            if dot < 0.0 { 1.0 } else { -1.0 }
+        } else {
+            let p_plus = 0.5 - dot / (2.0 * self.c);
+            if self.rng.bernoulli(p_plus.clamp(0.0, 1.0)) {
+                1.0
+            } else {
+                -1.0
+            }
+        };
+        // Advance the internal walk with the *scaled* vector.
+        for (sv, cv) in self.s_scaled.iter_mut().zip(c_vec) {
+            *sv += eps as f32 * cv * inv;
+        }
+        eps as f32
+    }
+
+    fn reset(&mut self) {
+        tensor::zero(&mut self.s_scaled);
+        self.failures = 0;
+        self.normalizer = 1e-12;
+    }
+
+    fn name(&self) -> &'static str {
+        "alg6-walk"
+    }
+}
+
+/// Algorithm 3 — reorder by balanced signs: positives keep their relative
+/// order at the front; negatives are appended in *reverse* order.
+///
+/// `order[i]` is the item visited at step i; `signs[i]` its sign. Returns
+/// the new permutation (same index space as `order`).
+pub fn reorder(order: &[usize], signs: &[f32]) -> Vec<usize> {
+    assert_eq!(order.len(), signs.len());
+    let mut out = Vec::with_capacity(order.len());
+    for (i, &s) in signs.iter().enumerate() {
+        if s > 0.0 {
+            out.push(order[i]);
+        }
+    }
+    let front = out.len();
+    for (i, &s) in signs.iter().enumerate().rev() {
+        if s <= 0.0 {
+            out.push(order[i]);
+        }
+    }
+    debug_assert_eq!(out.len(), order.len());
+    let _ = front;
+    out
+}
+
+/// Run one full balancing pass over `vs` (visited in `order`, centered at
+/// `center`) and return (signs, max signed-prefix ℓ∞, max signed-prefix ℓ2).
+/// Shared by the offline herding driver and the fig1/fig4 experiments.
+pub fn balance_pass(
+    balancer: &mut dyn Balancer,
+    vs: &[Vec<f32>],
+    center: &[f32],
+    order: &[usize],
+) -> (Vec<f32>, f32, f32) {
+    let d = center.len();
+    let mut s = vec![0.0f32; d];
+    let mut c = vec![0.0f32; d];
+    let mut signs = Vec::with_capacity(order.len());
+    let mut max_inf = 0.0f32;
+    let mut max_l2 = 0.0f32;
+    for &i in order {
+        tensor::sub_into(&vs[i], center, &mut c);
+        let eps = balancer.sign(&s, &c);
+        tensor::axpy(eps, &c, &mut s);
+        signs.push(eps);
+        max_inf = max_inf.max(tensor::norm_inf(&s));
+        max_l2 = max_l2.max(tensor::norm2(&s));
+    }
+    (signs, max_inf, max_l2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{self, gen};
+
+    #[test]
+    fn deterministic_sign_matches_norm_comparison() {
+        prop::forall("alg5 == norm comparison", 64, |rng| {
+            let (_, d) = gen::small_dims(rng, 1, 64);
+            let s = gen::gauss_vec(rng, d, 1.0);
+            let c = gen::gauss_vec(rng, d, 1.0);
+            let mut b = DeterministicBalancer;
+            let eps = b.sign(&s, &c);
+            let mut plus = s.clone();
+            let mut minus = s.clone();
+            tensor::axpy(1.0, &c, &mut plus);
+            tensor::axpy(-1.0, &c, &mut minus);
+            let want = if tensor::norm2(&plus) < tensor::norm2(&minus) {
+                1.0
+            } else {
+                -1.0
+            };
+            // Near-ties can flip under f32; only check clear cases.
+            if (tensor::norm2(&plus) - tensor::norm2(&minus)).abs() > 1e-4 {
+                if eps != want {
+                    return Err(format!("eps={eps} want={want}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_is_scale_invariant() {
+        prop::forall("alg5 scale invariance", 32, |rng| {
+            let d = 32;
+            let s = gen::gauss_vec(rng, d, 1.0);
+            let c = gen::gauss_vec(rng, d, 1.0);
+            let mut b = DeterministicBalancer;
+            let e1 = b.sign(&s, &c);
+            let s2: Vec<f32> = s.iter().map(|x| x * 100.0).collect();
+            let c2: Vec<f32> = c.iter().map(|x| x * 100.0).collect();
+            let e2 = b.sign(&s2, &c2);
+            if e1 != e2 {
+                return Err("not scale invariant".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn alg5_prefix_sums_stay_bounded_on_random_vectors() {
+        // The signed prefix sum under Alg 5 should grow much slower than
+        // the unsigned sum (which grows like sqrt(n) per coordinate).
+        let mut rng = Rng::new(0);
+        let (n, d) = (2000, 16);
+        let vs = gen::vec_set(&mut rng, n, d);
+        let center = vec![0.0f32; d];
+        let order: Vec<usize> = (0..n).collect();
+        let mut b = DeterministicBalancer;
+        let (_, max_inf, _) = balance_pass(&mut b, &vs, &center, &order);
+        // Unsigned prefix reaches ~sqrt(n) per coordinate ≈ 44; balanced
+        // should stay way below.
+        let (unsigned_inf, _) = tensor::prefix_bounds(&vs, &center, &order);
+        assert!(
+            max_inf < unsigned_inf / 2.0,
+            "balanced {max_inf} vs unsigned {unsigned_inf}"
+        );
+    }
+
+    #[test]
+    fn walk_balancer_bounded_and_counts_failures() {
+        let mut rng = Rng::new(1);
+        let (n, d) = (1000, 16);
+        let vs = gen::vec_set(&mut rng, n, d);
+        let center = vec![0.0f32; d];
+        let order: Vec<usize> = (0..n).collect();
+        let c = WalkBalancer::theorem_c(n, d, 0.01);
+        let mut b = WalkBalancer::new(c, 7);
+        let (signs, _, _) = balance_pass(&mut b, &vs, &center, &order);
+        assert_eq!(signs.len(), n);
+        assert!(signs.iter().all(|&s| s == 1.0 || s == -1.0));
+        // With Theorem-4 c, failures should be rare (typically zero).
+        assert!(b.failures <= n / 100, "failures={}", b.failures);
+    }
+
+    #[test]
+    fn reorder_positives_then_reversed_negatives() {
+        let order = [10usize, 11, 12, 13, 14];
+        let signs = [1.0f32, -1.0, 1.0, -1.0, -1.0];
+        assert_eq!(reorder(&order, &signs), vec![10, 12, 14, 13, 11]);
+    }
+
+    #[test]
+    fn reorder_is_permutation() {
+        prop::forall("reorder permutation", 64, |rng| {
+            let n = 1 + rng.gen_range(200) as usize;
+            let order: Vec<usize> = rng.permutation(n);
+            let signs: Vec<f32> = (0..n)
+                .map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 })
+                .collect();
+            let new = reorder(&order, &signs);
+            let mut sorted = new.clone();
+            sorted.sort_unstable();
+            let mut want = order.clone();
+            want.sort_unstable();
+            if sorted != want {
+                return Err("not a permutation of input".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn reorder_all_positive_is_identity() {
+        let order = [3usize, 1, 2];
+        let signs = [1.0f32, 1.0, 1.0];
+        assert_eq!(reorder(&order, &signs), vec![3, 1, 2]);
+    }
+
+    #[test]
+    fn reorder_all_negative_is_reverse() {
+        let order = [3usize, 1, 2];
+        let signs = [-1.0f32, -1.0, -1.0];
+        assert_eq!(reorder(&order, &signs), vec![2, 1, 3]);
+    }
+}

@@ -1,0 +1,447 @@
+//! Configuration system: a TOML-subset parser plus the typed, validated
+//! configs every run is launched from. A config can come from a file
+//! (`--config runs/mnist.toml`), from CLI flags, or file-then-flag overlay
+//! (flags win), and every completed run re-serializes its effective config
+//! next to its metrics so results are reproducible.
+
+mod toml;
+
+pub use toml::TomlDoc;
+
+use anyhow::{bail, Result};
+
+use crate::util::cli::Args;
+
+/// Which paper task (dataset + model pairing) to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    /// Logistic regression on the MNIST-like mixture (Fig. 2a).
+    Mnist,
+    /// LeNet on the CIFAR-like mixture (Fig. 2b).
+    Cifar,
+    /// LSTM LM on the Markov character corpus (Fig. 2c).
+    Wiki,
+    /// Tiny transformer on the GLUE-like task (Fig. 2d).
+    Glue,
+}
+
+impl Task {
+    pub fn parse(s: &str) -> Result<Task> {
+        Ok(match s {
+            "mnist" => Task::Mnist,
+            "cifar" => Task::Cifar,
+            "wiki" | "wikitext" => Task::Wiki,
+            "glue" => Task::Glue,
+            _ => bail!("unknown task {s:?} (mnist|cifar|wiki|glue)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Task::Mnist => "mnist",
+            Task::Cifar => "cifar",
+            Task::Wiki => "wiki",
+            Task::Glue => "glue",
+        }
+    }
+
+    /// L2 model artifact family for this task.
+    pub fn model_name(&self) -> &'static str {
+        match self {
+            Task::Mnist => "logreg",
+            Task::Cifar => "lenet",
+            Task::Wiki => "lstm",
+            Task::Glue => "transformer",
+        }
+    }
+}
+
+/// Example-ordering policy selector (paper Section 6 baselines + ablations).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OrderingKind {
+    RandomReshuffle,
+    ShuffleOnce,
+    FlipFlop,
+    GreedyOrdering,
+    GraB,
+    /// Fig. 3: GraB for one epoch, then freeze the found order.
+    OneStepGraB,
+    /// Fig. 3: fixed order imported from a finished GraB run's final epoch.
+    RetrainFromGraB,
+    /// Plain in-order pass (sanity baseline; not in the paper's plots).
+    Sequential,
+}
+
+impl OrderingKind {
+    pub fn parse(s: &str) -> Result<OrderingKind> {
+        Ok(match s {
+            "rr" | "random-reshuffle" => OrderingKind::RandomReshuffle,
+            "so" | "shuffle-once" => OrderingKind::ShuffleOnce,
+            "flipflop" => OrderingKind::FlipFlop,
+            "greedy" | "greedy-ordering" => OrderingKind::GreedyOrdering,
+            "grab" => OrderingKind::GraB,
+            "grab-1step" | "onestep-grab" => OrderingKind::OneStepGraB,
+            "grab-retrain" | "retrain-from-grab" => {
+                OrderingKind::RetrainFromGraB
+            }
+            "seq" | "sequential" => OrderingKind::Sequential,
+            _ => bail!(
+                "unknown ordering {s:?} \
+                 (rr|so|flipflop|greedy|grab|grab-1step|grab-retrain|seq)"
+            ),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OrderingKind::RandomReshuffle => "rr",
+            OrderingKind::ShuffleOnce => "so",
+            OrderingKind::FlipFlop => "flipflop",
+            OrderingKind::GreedyOrdering => "greedy",
+            OrderingKind::GraB => "grab",
+            OrderingKind::OneStepGraB => "grab-1step",
+            OrderingKind::RetrainFromGraB => "grab-retrain",
+            OrderingKind::Sequential => "seq",
+        }
+    }
+}
+
+/// Balancing subroutine for GraB (paper Algorithm 5 vs Algorithm 6).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BalancerKind {
+    /// Algorithm 5: deterministic, normalization-invariant (paper default).
+    Deterministic,
+    /// Algorithm 6: Alweiss et al. self-balancing walk, needs `c`.
+    Walk,
+    /// The Pallas/HLO balance artifact executed via PJRT (layer ablation).
+    Kernel,
+}
+
+impl BalancerKind {
+    pub fn parse(s: &str) -> Result<BalancerKind> {
+        Ok(match s {
+            "deterministic" | "alg5" => BalancerKind::Deterministic,
+            "walk" | "alg6" => BalancerKind::Walk,
+            "kernel" | "pallas" => BalancerKind::Kernel,
+            _ => bail!("unknown balancer {s:?} (alg5|alg6|kernel)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BalancerKind::Deterministic => "alg5",
+            BalancerKind::Walk => "alg6",
+            BalancerKind::Kernel => "kernel",
+        }
+    }
+}
+
+/// LR schedule selector.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LrSchedule {
+    Constant,
+    /// Multiply by `factor` when the epoch train loss fails to improve by
+    /// `threshold` for `patience` epochs (paper's WikiText-2 recipe).
+    ReduceOnPlateau {
+        factor: f64,
+        patience: usize,
+        threshold: f64,
+    },
+}
+
+/// A fully-specified training run.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub task: Task,
+    pub ordering: OrderingKind,
+    pub balancer: BalancerKind,
+    pub epochs: usize,
+    /// Dataset size (number of ordering units). Paper-scale defaults are
+    /// large; experiments shrink this for CI-speed runs.
+    pub n_examples: usize,
+    pub n_eval: usize,
+    /// Optimizer step batch = microbatch (artifact B) * accum_steps.
+    pub accum_steps: usize,
+    pub lr: f64,
+    pub momentum: f64,
+    pub weight_decay: f64,
+    pub lr_schedule: LrSchedule,
+    pub seed: u64,
+    /// Walk balancer hyperparameter (Theorem 4's c); 0 = auto.
+    pub walk_c: f64,
+    /// Ordering granularity: units per group (1 = per-example ordering;
+    /// >1 reorders groups, the paper's batch-granularity fallback).
+    pub group_size: usize,
+    /// Where artifacts live.
+    pub artifacts_dir: String,
+    /// Optional metrics CSV path.
+    pub metrics_out: Option<String>,
+    /// Evaluate every k epochs (0 = only at the end).
+    pub eval_every: usize,
+    /// Run the threaded streaming pipeline instead of the sync loop.
+    pub use_pipeline: bool,
+    /// Grad-stage workers for the pipeline (each owns its own PJRT
+    /// client); 1 = single worker.
+    pub workers: usize,
+    /// Clip the accumulated gradient to this global l2 norm before the
+    /// optimizer step (0 = off). Matches standard practice for the CNN and
+    /// the PyTorch LM recipe the paper's WikiText-2 setup follows.
+    pub clip_norm: f64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            task: Task::Mnist,
+            ordering: OrderingKind::GraB,
+            balancer: BalancerKind::Deterministic,
+            epochs: 5,
+            n_examples: 4096,
+            n_eval: 1024,
+            accum_steps: 1,
+            lr: 0.01,
+            momentum: 0.9,
+            weight_decay: 1e-4,
+            lr_schedule: LrSchedule::Constant,
+            seed: 0,
+            walk_c: 0.0,
+            group_size: 1,
+            artifacts_dir: "artifacts".to_string(),
+            metrics_out: None,
+            eval_every: 1,
+            use_pipeline: false,
+            workers: 1,
+            clip_norm: 0.0,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Paper-matched hyperparameters per task (Appendix A), adapted to this
+    /// testbed's synthetic datasets.
+    pub fn for_task(task: Task) -> TrainConfig {
+        let mut c = TrainConfig { task, ..TrainConfig::default() };
+        match task {
+            Task::Mnist => {
+                c.lr = 0.1; // paper sweep best for logreg
+                c.accum_steps = 1;
+                c.weight_decay = 1e-4;
+            }
+            Task::Cifar => {
+                c.lr = 0.05;
+                c.accum_steps = 1;
+                c.weight_decay = 1e-4;
+                c.clip_norm = 5.0; // LeNet spikes post-convergence
+            }
+            Task::Wiki => {
+                c.lr = 1.0; // paper uses 5 with ReduceLROnPlateau
+                c.lr_schedule = LrSchedule::ReduceOnPlateau {
+                    factor: 0.1,
+                    patience: 5,
+                    threshold: 0.05,
+                };
+                c.weight_decay = 0.0;
+                c.clip_norm = 0.25; // pytorch word_language_model recipe
+            }
+            Task::Glue => {
+                c.lr = 0.005;
+                c.weight_decay = 0.01;
+            }
+        }
+        c
+    }
+
+    /// Overlay CLI flags onto this config.
+    pub fn apply_args(&mut self, args: &Args) -> Result<()> {
+        if let Some(t) = args.opt_str("task") {
+            *self = TrainConfig {
+                metrics_out: self.metrics_out.clone(),
+                artifacts_dir: self.artifacts_dir.clone(),
+                ..TrainConfig::for_task(Task::parse(&t)?)
+            };
+        }
+        if let Some(o) = args.opt_str("ordering") {
+            self.ordering = OrderingKind::parse(&o)?;
+        }
+        if let Some(b) = args.opt_str("balancer") {
+            self.balancer = BalancerKind::parse(&b)?;
+        }
+        self.epochs = args.usize_or("epochs", self.epochs)?;
+        self.n_examples = args.usize_or("n", self.n_examples)?;
+        self.n_eval = args.usize_or("n-eval", self.n_eval)?;
+        self.accum_steps = args.usize_or("accum", self.accum_steps)?;
+        self.lr = args.f64_or("lr", self.lr)?;
+        self.momentum = args.f64_or("momentum", self.momentum)?;
+        self.weight_decay = args.f64_or("wd", self.weight_decay)?;
+        self.seed = args.u64_or("seed", self.seed)?;
+        self.walk_c = args.f64_or("walk-c", self.walk_c)?;
+        self.group_size = args.usize_or("group-size", self.group_size)?;
+        self.artifacts_dir =
+            args.str_or("artifacts", &self.artifacts_dir);
+        if let Some(m) = args.opt_str("metrics-out") {
+            self.metrics_out = Some(m);
+        }
+        self.eval_every = args.usize_or("eval-every", self.eval_every)?;
+        if args.flag("pipeline") {
+            self.use_pipeline = true;
+        }
+        self.workers = args.usize_or("workers", self.workers)?;
+        self.clip_norm = args.f64_or("clip", self.clip_norm)?;
+        self.validate()
+    }
+
+    /// Load from a TOML-subset file, then validate.
+    pub fn from_toml(doc: &TomlDoc) -> Result<TrainConfig> {
+        let mut c = TrainConfig::default();
+        if let Some(t) = doc.get_str("task") {
+            c = TrainConfig::for_task(Task::parse(&t)?);
+        }
+        if let Some(o) = doc.get_str("ordering") {
+            c.ordering = OrderingKind::parse(&o)?;
+        }
+        if let Some(b) = doc.get_str("balancer") {
+            c.balancer = BalancerKind::parse(&b)?;
+        }
+        c.epochs = doc.get_int("epochs").unwrap_or(c.epochs as i64) as usize;
+        c.n_examples = doc.get_int("n").unwrap_or(c.n_examples as i64)
+            as usize;
+        c.n_eval = doc.get_int("n_eval").unwrap_or(c.n_eval as i64) as usize;
+        c.accum_steps =
+            doc.get_int("accum").unwrap_or(c.accum_steps as i64) as usize;
+        c.lr = doc.get_float("lr").unwrap_or(c.lr);
+        c.momentum = doc.get_float("momentum").unwrap_or(c.momentum);
+        c.weight_decay = doc.get_float("weight_decay")
+            .unwrap_or(c.weight_decay);
+        c.seed = doc.get_int("seed").unwrap_or(c.seed as i64) as u64;
+        c.walk_c = doc.get_float("walk_c").unwrap_or(c.walk_c);
+        if let Some(a) = doc.get_str("artifacts") {
+            c.artifacts_dir = a;
+        }
+        if let Some(m) = doc.get_str("metrics_out") {
+            c.metrics_out = Some(m);
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.epochs == 0 {
+            bail!("epochs must be >= 1");
+        }
+        if self.n_examples == 0 {
+            bail!("n must be >= 1");
+        }
+        if self.accum_steps == 0 {
+            bail!("accum must be >= 1");
+        }
+        if !(self.lr > 0.0) {
+            bail!("lr must be > 0");
+        }
+        if !(0.0..1.0).contains(&self.momentum) {
+            bail!("momentum must be in [0, 1)");
+        }
+        if self.weight_decay < 0.0 {
+            bail!("weight_decay must be >= 0");
+        }
+        if self.group_size == 0 {
+            bail!("group_size must be >= 1");
+        }
+        if self.workers == 0 {
+            bail!("workers must be >= 1");
+        }
+        if self.ordering == OrderingKind::GreedyOrdering {
+            // Greedy stores all stale gradients: warn-level sanity bound so
+            // a config cannot accidentally demand hundreds of GiB (the
+            // paper's OOM failure mode, which exp::table1 measures safely).
+            let bytes = self.n_examples as u64 * 4 * 8_000_000;
+            let _ = bytes; // size depends on d; hard check in Trainer.
+        }
+        Ok(())
+    }
+
+    /// One-line run identity (used for file names / logs).
+    pub fn run_id(&self) -> String {
+        format!(
+            "{}-{}-{}-e{}-n{}-s{}",
+            self.task.name(),
+            self.ordering.name(),
+            self.balancer.name(),
+            self.epochs,
+            self.n_examples,
+            self.seed
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_roundtrip() {
+        for t in [Task::Mnist, Task::Cifar, Task::Wiki, Task::Glue] {
+            assert_eq!(Task::parse(t.name()).unwrap(), t);
+        }
+        assert!(Task::parse("nope").is_err());
+    }
+
+    #[test]
+    fn ordering_roundtrip() {
+        for o in [
+            OrderingKind::RandomReshuffle,
+            OrderingKind::ShuffleOnce,
+            OrderingKind::FlipFlop,
+            OrderingKind::GreedyOrdering,
+            OrderingKind::GraB,
+            OrderingKind::OneStepGraB,
+            OrderingKind::RetrainFromGraB,
+            OrderingKind::Sequential,
+        ] {
+            assert_eq!(OrderingKind::parse(o.name()).unwrap(), o);
+        }
+    }
+
+    #[test]
+    fn args_overlay() {
+        let args = Args::parse([
+            "--task", "cifar", "--ordering", "rr", "--epochs", "3",
+            "--lr", "0.2", "--seed", "9",
+        ])
+        .unwrap();
+        let mut c = TrainConfig::default();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.task, Task::Cifar);
+        assert_eq!(c.ordering, OrderingKind::RandomReshuffle);
+        assert_eq!(c.epochs, 3);
+        assert_eq!(c.lr, 0.2);
+        assert_eq!(c.seed, 9);
+    }
+
+    #[test]
+    fn validation_rejects_bad_values() {
+        let mut c = TrainConfig::default();
+        c.epochs = 0;
+        assert!(c.validate().is_err());
+        let mut c = TrainConfig::default();
+        c.lr = -1.0;
+        assert!(c.validate().is_err());
+        let mut c = TrainConfig::default();
+        c.momentum = 1.5;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn task_defaults_match_paper_shapes() {
+        let wiki = TrainConfig::for_task(Task::Wiki);
+        assert!(matches!(wiki.lr_schedule,
+            LrSchedule::ReduceOnPlateau { .. }));
+        let glue = TrainConfig::for_task(Task::Glue);
+        assert_eq!(glue.weight_decay, 0.01);
+    }
+
+    #[test]
+    fn run_id_stable() {
+        let c = TrainConfig::default();
+        assert_eq!(c.run_id(), "mnist-grab-alg5-e5-n4096-s0");
+    }
+}

@@ -1,0 +1,266 @@
+//! TOML-subset parser for run config files.
+//!
+//! Supported grammar (sufficient for flat run configs; nested tables are
+//! flattened with dotted keys):
+//!
+//! ```toml
+//! # comment
+//! task = "mnist"          # strings
+//! epochs = 5              # integers
+//! lr = 0.1                # floats
+//! pipeline = true         # booleans
+//! dims = [16, 128, 1024]  # homogeneous scalar arrays
+//! [optimizer]             # section -> "optimizer.lr" etc.
+//! lr = 0.5
+//! ```
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// A scalar or array value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+/// Flattened document: dotted-key -> value.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    map: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(body) = line.strip_prefix('[') {
+                let name = body
+                    .strip_suffix(']')
+                    .with_context(|| format!("line {}: bad section", lineno + 1))?
+                    .trim();
+                if name.is_empty() {
+                    bail!("line {}: empty section name", lineno + 1);
+                }
+                section = name.to_string();
+                continue;
+            }
+            let (key, value) = line.split_once('=').with_context(|| {
+                format!("line {}: expected key = value", lineno + 1)
+            })?;
+            let key = key.trim();
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            let v = parse_value(value.trim()).with_context(|| {
+                format!("line {}: bad value for {key:?}", lineno + 1)
+            })?;
+            if doc.map.insert(full.clone(), v).is_some() {
+                bail!("line {}: duplicate key {full:?}", lineno + 1);
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn from_file(path: &std::path::Path) -> Result<TomlDoc> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        TomlDoc::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.map.get(key)
+    }
+
+    pub fn get_str(&self, key: &str) -> Option<String> {
+        match self.map.get(key) {
+            Some(TomlValue::Str(s)) => Some(s.clone()),
+            _ => None,
+        }
+    }
+
+    pub fn get_int(&self, key: &str) -> Option<i64> {
+        match self.map.get(key) {
+            Some(TomlValue::Int(v)) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn get_float(&self, key: &str) -> Option<f64> {
+        match self.map.get(key) {
+            Some(TomlValue::Float(v)) => Some(*v),
+            Some(TomlValue::Int(v)) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn get_bool(&self, key: &str) -> Option<bool> {
+        match self.map.get(key) {
+            Some(TomlValue::Bool(v)) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.map.keys()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' inside a quoted string does not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str) -> Result<TomlValue> {
+    if text.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(body) = text.strip_prefix('[') {
+        let body = body
+            .strip_suffix(']')
+            .context("unterminated array")?
+            .trim();
+        if body.is_empty() {
+            return Ok(TomlValue::Arr(vec![]));
+        }
+        let items = split_top_level(body)?;
+        return Ok(TomlValue::Arr(
+            items
+                .iter()
+                .map(|s| parse_value(s.trim()))
+                .collect::<Result<Vec<_>>>()?,
+        ));
+    }
+    if let Some(body) = text.strip_prefix('"') {
+        let body = body.strip_suffix('"').context("unterminated string")?;
+        return Ok(TomlValue::Str(
+            body.replace("\\\"", "\"").replace("\\\\", "\\"),
+        ));
+    }
+    match text {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if !text.contains('.') && !text.contains('e') && !text.contains('E') {
+        if let Ok(v) = text.replace('_', "").parse::<i64>() {
+            return Ok(TomlValue::Int(v));
+        }
+    }
+    if let Ok(v) = text.parse::<f64>() {
+        return Ok(TomlValue::Float(v));
+    }
+    bail!("cannot parse value {text:?}")
+}
+
+fn split_top_level(body: &str) -> Result<Vec<String>> {
+    let mut items = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut cur = String::new();
+    for c in body.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            '[' if !in_str => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' if !in_str => {
+                depth = depth.checked_sub(1).context("unbalanced ]")?;
+                cur.push(c);
+            }
+            ',' if !in_str && depth == 0 => {
+                items.push(std::mem::take(&mut cur));
+            }
+            c => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        items.push(cur);
+    }
+    Ok(items)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_flat_doc() {
+        let doc = TomlDoc::parse(
+            r#"
+# run config
+task = "mnist"
+epochs = 5
+lr = 0.1
+pipeline = true
+dims = [1, 2, 3]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("task").unwrap(), "mnist");
+        assert_eq!(doc.get_int("epochs").unwrap(), 5);
+        assert_eq!(doc.get_float("lr").unwrap(), 0.1);
+        assert_eq!(doc.get_bool("pipeline").unwrap(), true);
+        assert_eq!(
+            doc.get("dims").unwrap(),
+            &TomlValue::Arr(vec![
+                TomlValue::Int(1),
+                TomlValue::Int(2),
+                TomlValue::Int(3)
+            ])
+        );
+    }
+
+    #[test]
+    fn sections_flatten() {
+        let doc = TomlDoc::parse("[optim]\nlr = 0.5\n").unwrap();
+        assert_eq!(doc.get_float("optim.lr").unwrap(), 0.5);
+    }
+
+    #[test]
+    fn comments_and_hash_in_string() {
+        let doc =
+            TomlDoc::parse("name = \"a#b\" # trailing\n").unwrap();
+        assert_eq!(doc.get_str("name").unwrap(), "a#b");
+    }
+
+    #[test]
+    fn int_float_coercion() {
+        let doc = TomlDoc::parse("x = 3\n").unwrap();
+        assert_eq!(doc.get_float("x").unwrap(), 3.0);
+        assert_eq!(doc.get_int("x").unwrap(), 3);
+    }
+
+    #[test]
+    fn rejects_duplicates_and_garbage() {
+        assert!(TomlDoc::parse("a = 1\na = 2\n").is_err());
+        assert!(TomlDoc::parse("a 1\n").is_err());
+        assert!(TomlDoc::parse("a = [1, 2\n").is_err());
+    }
+}

@@ -1,0 +1,143 @@
+//! Microbatch loader: walks a permutation in fixed-size microbatches and
+//! gathers contiguous upload buffers for the PJRT executor.
+//!
+//! The L2 grad artifacts take a *fixed* microbatch size B (baked into the
+//! HLO), so the loader always emits full microbatches: when n is not a
+//! multiple of B the tail is padded by repeating the final example, and the
+//! `valid` count tells the trainer how many leading grads are real ordering
+//! units (padded grads are never balanced or accumulated).
+
+use crate::data::Dataset;
+
+/// One gathered microbatch ready for upload.
+#[derive(Clone, Debug)]
+pub struct Microbatch {
+    /// Dataset indices in visit order, padded to B (padding repeats the
+    /// last valid index).
+    pub idx: Vec<usize>,
+    /// Number of real (non-padding) examples.
+    pub valid: usize,
+    /// Position of the first example within the epoch (0-based).
+    pub offset: usize,
+}
+
+/// Iterator over microbatches of a permutation.
+pub struct Loader<'a> {
+    order: &'a [usize],
+    batch: usize,
+    pos: usize,
+}
+
+impl<'a> Loader<'a> {
+    pub fn new(order: &'a [usize], batch: usize) -> Loader<'a> {
+        assert!(batch > 0, "batch must be positive");
+        Loader { order, batch, pos: 0 }
+    }
+
+    /// Number of microbatches in the epoch.
+    pub fn num_batches(&self) -> usize {
+        self.order.len().div_ceil(self.batch)
+    }
+}
+
+impl<'a> Iterator for Loader<'a> {
+    type Item = Microbatch;
+
+    fn next(&mut self) -> Option<Microbatch> {
+        if self.pos >= self.order.len() {
+            return None;
+        }
+        let end = (self.pos + self.batch).min(self.order.len());
+        let mut idx: Vec<usize> = self.order[self.pos..end].to_vec();
+        let valid = idx.len();
+        while idx.len() < self.batch {
+            idx.push(*idx.last().expect("non-empty microbatch"));
+        }
+        let mb = Microbatch { idx, valid, offset: self.pos };
+        self.pos = end;
+        Some(mb)
+    }
+}
+
+/// Gathered host buffers for one microbatch (typed by the dataset).
+#[derive(Clone, Debug, Default)]
+pub struct HostBatch {
+    pub x_f32: Vec<f32>,
+    pub x_i32: Vec<i32>,
+    pub y: Vec<i32>,
+}
+
+impl HostBatch {
+    /// Fill from a dataset. Buffers are reused across calls (no per-batch
+    /// allocation on the hot path).
+    pub fn fill(&mut self, ds: &Dataset, mb: &Microbatch) {
+        match &ds.x {
+            crate::data::Features::F32 { .. } => {
+                ds.gather_x_f32(&mb.idx, &mut self.x_f32);
+                self.x_i32.clear();
+            }
+            crate::data::Features::I32 { .. } => {
+                ds.gather_x_i32(&mb.idx, &mut self.x_i32);
+                self.x_f32.clear();
+            }
+        }
+        ds.gather_y(&mb.idx, &mut self.y);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Features, Labels};
+
+    fn ds(n: usize) -> Dataset {
+        Dataset::new(
+            "t",
+            Features::F32 {
+                data: (0..n * 2).map(|i| i as f32).collect(),
+                dim: 2,
+            },
+            Labels::Scalar((0..n as i32).collect()),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn covers_all_examples_once() {
+        let order: Vec<usize> = vec![3, 1, 4, 0, 2];
+        let mut seen = Vec::new();
+        for mb in Loader::new(&order, 2) {
+            seen.extend_from_slice(&mb.idx[..mb.valid]);
+        }
+        assert_eq!(seen, order);
+    }
+
+    #[test]
+    fn pads_tail_with_last_index() {
+        let order: Vec<usize> = vec![0, 1, 2];
+        let mbs: Vec<_> = Loader::new(&order, 2).collect();
+        assert_eq!(mbs.len(), 2);
+        assert_eq!(mbs[1].idx, vec![2, 2]);
+        assert_eq!(mbs[1].valid, 1);
+        assert_eq!(mbs[1].offset, 2);
+    }
+
+    #[test]
+    fn num_batches_matches_iteration() {
+        for n in [1usize, 7, 8, 9] {
+            let order: Vec<usize> = (0..n).collect();
+            let l = Loader::new(&order, 4);
+            assert_eq!(l.num_batches(), Loader::new(&order, 4).count());
+        }
+    }
+
+    #[test]
+    fn host_batch_gathers_in_visit_order() {
+        let d = ds(4);
+        let mb = Microbatch { idx: vec![2, 0], valid: 2, offset: 0 };
+        let mut hb = HostBatch::default();
+        hb.fill(&d, &mb);
+        assert_eq!(hb.x_f32, vec![4.0, 5.0, 0.0, 1.0]);
+        assert_eq!(hb.y, vec![2, 0]);
+    }
+}

@@ -1,0 +1,190 @@
+//! Dataset substrate: in-memory datasets, synthetic generators standing in
+//! for the paper's corpora (see DESIGN.md §Substitutions), microbatch
+//! loading and deterministic sharding.
+
+pub mod loader;
+pub mod shard;
+pub mod synth;
+pub mod text;
+
+use anyhow::{bail, Result};
+
+/// Feature storage. Models take either dense f32 features (logreg, lenet)
+/// or i32 token sequences (lstm, transformer).
+#[derive(Clone, Debug)]
+pub enum Features {
+    F32 { data: Vec<f32>, dim: usize },
+    I32 { data: Vec<i32>, dim: usize },
+}
+
+impl Features {
+    pub fn dim(&self) -> usize {
+        match self {
+            Features::F32 { dim, .. } | Features::I32 { dim, .. } => *dim,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Features::F32 { data, dim } => data.len() / dim,
+            Features::I32 { data, dim } => data.len() / dim,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Label storage: one class per example, or one target sequence (LM).
+#[derive(Clone, Debug)]
+pub enum Labels {
+    Scalar(Vec<i32>),
+    Seq { data: Vec<i32>, dim: usize },
+}
+
+impl Labels {
+    pub fn len(&self) -> usize {
+        match self {
+            Labels::Scalar(v) => v.len(),
+            Labels::Seq { data, dim } => data.len() / dim,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Per-example label width (1 for scalar labels).
+    pub fn dim(&self) -> usize {
+        match self {
+            Labels::Scalar(_) => 1,
+            Labels::Seq { dim, .. } => *dim,
+        }
+    }
+}
+
+/// An in-memory dataset of `n` ordering units.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub x: Features,
+    pub y: Labels,
+}
+
+impl Dataset {
+    pub fn new(name: impl Into<String>, x: Features, y: Labels)
+        -> Result<Dataset> {
+        if x.len() != y.len() {
+            bail!("feature/label count mismatch: {} vs {}",
+                  x.len(), y.len());
+        }
+        Ok(Dataset { name: name.into(), x, y })
+    }
+
+    pub fn len(&self) -> usize {
+        self.x.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Gather the features of `idx` into `out` (f32 datasets).
+    pub fn gather_x_f32(&self, idx: &[usize], out: &mut Vec<f32>) {
+        let Features::F32 { data, dim } = &self.x else {
+            panic!("gather_x_f32 on i32 dataset {}", self.name);
+        };
+        out.clear();
+        for &i in idx {
+            out.extend_from_slice(&data[i * dim..(i + 1) * dim]);
+        }
+    }
+
+    /// Gather the features of `idx` into `out` (token datasets).
+    pub fn gather_x_i32(&self, idx: &[usize], out: &mut Vec<i32>) {
+        let Features::I32 { data, dim } = &self.x else {
+            panic!("gather_x_i32 on f32 dataset {}", self.name);
+        };
+        out.clear();
+        for &i in idx {
+            out.extend_from_slice(&data[i * dim..(i + 1) * dim]);
+        }
+    }
+
+    /// Gather labels (scalar or sequence) of `idx` into `out`.
+    pub fn gather_y(&self, idx: &[usize], out: &mut Vec<i32>) {
+        out.clear();
+        match &self.y {
+            Labels::Scalar(v) => out.extend(idx.iter().map(|&i| v[i])),
+            Labels::Seq { data, dim } => {
+                for &i in idx {
+                    out.extend_from_slice(&data[i * dim..(i + 1) * dim]);
+                }
+            }
+        }
+    }
+
+    /// Class balance (scalar-label datasets): counts per class.
+    pub fn class_counts(&self, n_classes: usize) -> Vec<usize> {
+        let Labels::Scalar(v) = &self.y else {
+            return vec![];
+        };
+        let mut counts = vec![0usize; n_classes];
+        for &y in v {
+            counts[y as usize] += 1;
+        }
+        counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset::new(
+            "t",
+            Features::F32 {
+                data: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+                dim: 2,
+            },
+            Labels::Scalar(vec![0, 1, 0]),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn lengths() {
+        let d = tiny();
+        assert_eq!(d.len(), 3);
+        assert_eq!(d.x.dim(), 2);
+    }
+
+    #[test]
+    fn gather_orders_by_index() {
+        let d = tiny();
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        d.gather_x_f32(&[2, 0], &mut x);
+        d.gather_y(&[2, 0], &mut y);
+        assert_eq!(x, vec![5.0, 6.0, 1.0, 2.0]);
+        assert_eq!(y, vec![0, 0]);
+    }
+
+    #[test]
+    fn mismatched_lengths_rejected() {
+        assert!(Dataset::new(
+            "bad",
+            Features::F32 { data: vec![0.0; 4], dim: 2 },
+            Labels::Scalar(vec![0]),
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn class_counts() {
+        let d = tiny();
+        assert_eq!(d.class_counts(2), vec![2, 1]);
+    }
+}

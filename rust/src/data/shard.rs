@@ -1,0 +1,74 @@
+//! Deterministic sharding of an epoch's microbatch stream across pipeline
+//! workers. Contiguous sharding preserves the *visit order semantics* GraB
+//! needs (the balancer is inherently sequential), so shards split work at
+//! the microbatch level for the grad stage while the balance stage consumes
+//! results strictly in epoch order (reassembled by sequence number).
+
+/// Assignment of microbatch sequence numbers to `workers` grad workers.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    pub workers: usize,
+    pub num_batches: usize,
+}
+
+impl ShardPlan {
+    pub fn new(workers: usize, num_batches: usize) -> ShardPlan {
+        assert!(workers > 0);
+        ShardPlan { workers, num_batches }
+    }
+
+    /// Worker that owns microbatch `seq` (round-robin keeps per-worker
+    /// latency balanced even when batch cost varies slowly over the epoch).
+    pub fn owner(&self, seq: usize) -> usize {
+        seq % self.workers
+    }
+
+    /// All sequence numbers owned by `worker`, in order.
+    pub fn owned(&self, worker: usize) -> Vec<usize> {
+        (0..self.num_batches)
+            .filter(|s| self.owner(*s) == worker)
+            .collect()
+    }
+
+    /// Per-worker load (number of microbatches).
+    pub fn loads(&self) -> Vec<usize> {
+        let mut l = vec![0usize; self.workers];
+        for s in 0..self.num_batches {
+            l[self.owner(s)] += 1;
+        }
+        l
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_batch_owned_exactly_once() {
+        let plan = ShardPlan::new(3, 10);
+        let mut seen = vec![0usize; 10];
+        for w in 0..3 {
+            for s in plan.owned(w) {
+                seen[s] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn loads_balanced_within_one() {
+        let plan = ShardPlan::new(4, 11);
+        let loads = plan.loads();
+        let min = loads.iter().min().unwrap();
+        let max = loads.iter().max().unwrap();
+        assert!(max - min <= 1, "{loads:?}");
+        assert_eq!(loads.iter().sum::<usize>(), 11);
+    }
+
+    #[test]
+    fn single_worker_owns_all() {
+        let plan = ShardPlan::new(1, 5);
+        assert_eq!(plan.owned(0), vec![0, 1, 2, 3, 4]);
+    }
+}

@@ -1,0 +1,297 @@
+//! Synthetic dataset generators — the substitutes for the paper's corpora
+//! (MNIST, CIFAR10, GLUE). Each generator is deterministic in its seed and
+//! matches the original's (n, d, #classes) geometry; see DESIGN.md
+//! §Substitutions for why these preserve the ordering-relevant structure
+//! (per-example gradient heterogeneity ς over a finite sum).
+
+use crate::data::{Dataset, Features, Labels};
+use crate::util::rng::Rng;
+
+/// MNIST stand-in: 10-class image mixture, 1×28×28 = 784 dims. Class mean
+/// images are sums of smooth 2-D Gaussian blobs (digit-stroke-like energy),
+/// so both linear models and convolutions have real signal.
+pub fn mnist_like(n: usize, seed: u64) -> Dataset {
+    image_mixture("mnist_like", n, 1, 28, 10, 0.30, seed)
+}
+
+/// CIFAR10 stand-in: 10-class image mixture, 3×32×32 = 3072 dims with
+/// heavier within-class variance (natural images are noisier than digits).
+pub fn cifar_like(n: usize, seed: u64) -> Dataset {
+    image_mixture("cifar_like", n, 3, 32, 10, 0.45, seed)
+}
+
+/// Image-shaped mixture: per class, each channel's mean image is a sum of
+/// `BLOBS` random Gaussian blobs; examples add i.i.d. pixel noise. Spatial
+/// smoothness is what lets convolutional models (LeNet) exploit locality,
+/// mirroring the real datasets' structure.
+pub fn image_mixture(
+    name: &str,
+    n: usize,
+    channels: usize,
+    hw: usize,
+    n_classes: usize,
+    noise: f64,
+    seed: u64,
+) -> Dataset {
+    const BLOBS: usize = 4;
+    let dim = channels * hw * hw;
+    // Task structure from low seed bits only (shared train/eval task).
+    let mut srng = Rng::new((seed & 0xFFFF) ^ 0xB10B);
+    let mut rng = Rng::new(seed ^ 0xDA7A_5EED);
+    let mut means = vec![vec![0.0f32; dim]; n_classes];
+    for mean in means.iter_mut() {
+        for ch in 0..channels {
+            for _ in 0..BLOBS {
+                let cx = srng.uniform(4.0, hw as f64 - 4.0);
+                let cy = srng.uniform(4.0, hw as f64 - 4.0);
+                let sigma = srng.uniform(1.5, 4.0);
+                let amp = srng.uniform(-1.2, 1.2);
+                for y in 0..hw {
+                    for x in 0..hw {
+                        let dx = x as f64 - cx;
+                        let dy = y as f64 - cy;
+                        let v = amp
+                            * (-(dx * dx + dy * dy)
+                                / (2.0 * sigma * sigma))
+                                .exp();
+                        mean[ch * hw * hw + y * hw + x] += v as f32;
+                    }
+                }
+            }
+        }
+    }
+    let mut data = Vec::with_capacity(n * dim);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = i % n_classes;
+        labels.push(c as i32);
+        for &mu in means[c].iter() {
+            let x = mu as f64 + noise * rng.gauss();
+            data.push((0.5 + 0.5 * x) as f32); // roughly [0,1] pixels
+        }
+    }
+    let perm = rng.permutation(n);
+    let mut sdata = Vec::with_capacity(n * dim);
+    let mut slabels = Vec::with_capacity(n);
+    for &p in &perm {
+        sdata.extend_from_slice(&data[p * dim..(p + 1) * dim]);
+        slabels.push(labels[p]);
+    }
+    Dataset::new(name, Features::F32 { data: sdata, dim },
+                 Labels::Scalar(slabels))
+        .expect("generator invariant")
+}
+
+/// Shared Gaussian-mixture generator.
+pub fn gaussian_mixture(
+    name: &str,
+    n: usize,
+    dim: usize,
+    n_classes: usize,
+    noise: f64,
+    seed: u64,
+) -> Dataset {
+    // Task *structure* (the class means) is derived from the low 16 bits of
+    // the seed only, so train (seed s) and eval (a different sample seed
+    // with the same low bits) describe the SAME classification task and
+    // generalization is measurable; the remaining bits drive sampling.
+    let mut structure_rng = Rng::new((seed & 0xFFFF) ^ 0x5EED_DA7A);
+    let mut rng = Rng::new(seed ^ 0xDA7A_5EED);
+    // Sparse class means: each class activates ~12% of the coordinates.
+    let mut means = vec![vec![0.0f32; dim]; n_classes];
+    for mean in means.iter_mut() {
+        for v in mean.iter_mut() {
+            if structure_rng.bernoulli(0.12) {
+                *v = structure_rng.gauss() as f32;
+            }
+        }
+    }
+    let mut data = Vec::with_capacity(n * dim);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = i % n_classes; // balanced classes, like MNIST/CIFAR
+        labels.push(c as i32);
+        let mean = &means[c];
+        for &mu in mean.iter() {
+            let x = mu as f64 + noise * rng.gauss();
+            // squash towards [0,1] like normalized pixels
+            data.push((0.5 + 0.25 * x) as f32);
+        }
+    }
+    // Shuffle example order once so classes are not strided (the paper's
+    // datasets come pre-shuffled on disk; ordering policies must not be
+    // able to exploit generator striding).
+    let perm = rng.permutation(n);
+    let mut sdata = Vec::with_capacity(n * dim);
+    let mut slabels = Vec::with_capacity(n);
+    for &p in &perm {
+        sdata.extend_from_slice(&data[p * dim..(p + 1) * dim]);
+        slabels.push(labels[p]);
+    }
+    Dataset::new(name, Features::F32 { data: sdata, dim },
+                 Labels::Scalar(slabels))
+        .expect("generator invariant")
+}
+
+/// GLUE stand-in (SST-2/QNLI shaped): binary classification of token
+/// sequences. Two "topics" share a common vocabulary but differ in the
+/// occurrence rates of a subset of indicator tokens — solvable by a
+/// transformer via pooled attention, not by any single position.
+pub fn glue_like(n: usize, seq: usize, vocab: usize, seed: u64) -> Dataset {
+    // Same structure/sample seed split as gaussian_mixture.
+    let mut structure_rng = Rng::new((seed & 0xFFFF) ^ 0x61_u64);
+    let mut rng = Rng::new(seed ^ 0x161_u64);
+    // Topic-specific token weights.
+    let mut w0 = vec![1.0f64; vocab];
+    let mut w1 = vec![1.0f64; vocab];
+    for t in 0..vocab {
+        if structure_rng.bernoulli(0.25) {
+            w0[t] = 2.0;
+        }
+        if structure_rng.bernoulli(0.25) {
+            w1[t] = 2.0;
+        }
+    }
+    let mut data = Vec::with_capacity(n * seq);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = (i % 2) as i32;
+        labels.push(c);
+        let w = if c == 0 { &w0 } else { &w1 };
+        for _ in 0..seq {
+            data.push(rng.categorical(w) as i32);
+        }
+    }
+    let perm = rng.permutation(n);
+    let mut sdata = Vec::with_capacity(n * seq);
+    let mut slabels = Vec::with_capacity(n);
+    for &p in &perm {
+        sdata.extend_from_slice(&data[p * seq..(p + 1) * seq]);
+        slabels.push(labels[p]);
+    }
+    Dataset::new("glue_like", Features::I32 { data: sdata, dim: seq },
+                 Labels::Scalar(slabels))
+        .expect("generator invariant")
+}
+
+/// Failure injection: flip a fraction of scalar labels uniformly at
+/// random (robustness experiments; herding still works, the loss floor
+/// rises). No-op on sequence-labelled datasets.
+pub fn inject_label_noise(ds: &mut Dataset, frac: f64, seed: u64) -> usize {
+    let Labels::Scalar(labels) = &mut ds.y else {
+        return 0;
+    };
+    let n_classes = 1 + labels.iter().copied().max().unwrap_or(0) as u64;
+    let mut rng = Rng::new(seed ^ 0x4015E);
+    let mut flipped = 0;
+    for l in labels.iter_mut() {
+        if rng.bernoulli(frac) {
+            let new = rng.gen_range(n_classes) as i32;
+            if new != *l {
+                *l = new;
+                flipped += 1;
+            }
+        }
+    }
+    flipped
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mnist_like_geometry() {
+        let d = mnist_like(64, 0);
+        assert_eq!(d.len(), 64);
+        assert_eq!(d.x.dim(), 784);
+        let counts = d.class_counts(10);
+        assert_eq!(counts.iter().sum::<usize>(), 64);
+        // Balanced by construction (n % 10 spill only).
+        assert!(counts.iter().all(|&c| (6..=7).contains(&c)));
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = mnist_like(16, 7);
+        let b = mnist_like(16, 7);
+        let (Features::F32 { data: da, .. }, Features::F32 { data: db, .. }) =
+            (&a.x, &b.x)
+        else {
+            panic!()
+        };
+        assert_eq!(da, db);
+        let c = mnist_like(16, 8);
+        let Features::F32 { data: dc, .. } = &c.x else { panic!() };
+        assert_ne!(da, dc);
+    }
+
+    #[test]
+    fn classes_are_separable_on_average() {
+        // Mean feature vectors of two classes should differ measurably.
+        let d = mnist_like(200, 3);
+        let Features::F32 { data, dim } = &d.x else { panic!() };
+        let Labels::Scalar(ys) = &d.y else { panic!() };
+        let mut m0 = vec![0.0f64; *dim];
+        let mut m1 = vec![0.0f64; *dim];
+        let (mut n0, mut n1) = (0, 0);
+        for i in 0..d.len() {
+            let row = &data[i * dim..(i + 1) * dim];
+            if ys[i] == 0 {
+                n0 += 1;
+                for (m, x) in m0.iter_mut().zip(row) {
+                    *m += *x as f64;
+                }
+            } else if ys[i] == 1 {
+                n1 += 1;
+                for (m, x) in m1.iter_mut().zip(row) {
+                    *m += *x as f64;
+                }
+            }
+        }
+        let dist: f64 = m0
+            .iter()
+            .zip(&m1)
+            .map(|(a, b)| {
+                let v = a / n0 as f64 - b / n1 as f64;
+                v * v
+            })
+            .sum::<f64>()
+            .sqrt();
+        assert!(dist > 0.5, "class means too close: {dist}");
+    }
+
+    #[test]
+    fn glue_like_tokens_in_vocab() {
+        let d = glue_like(32, 32, 64, 0);
+        assert_eq!(d.len(), 32);
+        let Features::I32 { data, .. } = &d.x else { panic!() };
+        assert!(data.iter().all(|&t| (0..64).contains(&t)));
+        assert_eq!(d.class_counts(2).iter().sum::<usize>(), 32);
+    }
+
+    #[test]
+    fn label_noise_flips_requested_fraction() {
+        let mut d = mnist_like(1000, 0);
+        let before = match &d.y {
+            Labels::Scalar(v) => v.clone(),
+            _ => panic!(),
+        };
+        let flipped = inject_label_noise(&mut d, 0.2, 1);
+        let after = match &d.y {
+            Labels::Scalar(v) => v.clone(),
+            _ => panic!(),
+        };
+        let changed =
+            before.iter().zip(&after).filter(|(a, b)| a != b).count();
+        assert_eq!(changed, flipped);
+        // ~20% * (9/10 actually change)
+        assert!((100..=260).contains(&changed), "changed={changed}");
+    }
+
+    #[test]
+    fn cifar_like_dims() {
+        let d = cifar_like(10, 0);
+        assert_eq!(d.x.dim(), 3072);
+    }
+}

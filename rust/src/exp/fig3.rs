@@ -1,0 +1,128 @@
+//! Fig. 3 — fixed-order ablation: are good permutations fixed?
+//!
+//! Variants on the convex task (mnist/logreg) and the non-convex task
+//! (cifar/LeNet):
+//!   * rr, so          — baselines
+//!   * grab            — full online GraB
+//!   * grab-1step      — GraB during epoch 0 only, order frozen after
+//!   * grab-retrain    — fresh run replaying the *final* order of a
+//!                       completed GraB run (paper: works on convex, not
+//!                       non-convex, because good orders track the local
+//!                       optimum)
+
+use anyhow::Result;
+
+use crate::config::{OrderingKind, Task, TrainConfig};
+use crate::runtime::Runtime;
+use crate::train::Trainer;
+use crate::util::ser::{fmt_f, CsvWriter};
+
+pub struct Fig3Config {
+    pub tasks: Vec<Task>,
+    pub epochs: usize,
+    pub n: usize,
+    pub n_eval: usize,
+    pub seed: u64,
+    pub artifacts_dir: String,
+}
+
+impl Fig3Config {
+    pub fn small(artifacts_dir: &str) -> Fig3Config {
+        Fig3Config {
+            tasks: vec![Task::Mnist, Task::Cifar],
+            epochs: 10,
+            n: 1024,
+            n_eval: 512,
+            seed: 0,
+            artifacts_dir: artifacts_dir.to_string(),
+        }
+    }
+}
+
+pub fn run(cfg: &Fig3Config, out_dir: &std::path::Path) -> Result<()> {
+    let rt = Runtime::open(&cfg.artifacts_dir)?;
+    let mut csv = CsvWriter::create(
+        &out_dir.join("fig3_ablation.csv"),
+        &["task", "variant", "epoch", "train_loss", "eval_loss",
+          "eval_acc"],
+    )?;
+
+    for &task in &cfg.tasks {
+        // Full GraB run first: both a variant and the source of the
+        // retrain order.
+        let mut grab_cfg = base_cfg(cfg, task, OrderingKind::GraB);
+        eprintln!("[fig3] {} / grab (full)", task.name());
+        let mut trainer = Trainer::new(grab_cfg.clone(), &rt, None)?;
+        let grab_result = trainer.run()?;
+        emit(&mut csv, task, "grab", &grab_result.epochs)?;
+        let retrain_order = grab_result.final_order.clone();
+
+        for (variant, ordering) in [
+            ("rr", OrderingKind::RandomReshuffle),
+            ("so", OrderingKind::ShuffleOnce),
+            ("grab-1step", OrderingKind::OneStepGraB),
+        ] {
+            eprintln!("[fig3] {} / {variant}", task.name());
+            grab_cfg = base_cfg(cfg, task, ordering);
+            let mut t = Trainer::new(grab_cfg, &rt, None)?;
+            let r = t.run()?;
+            emit(&mut csv, task, variant, &r.epochs)?;
+        }
+
+        eprintln!("[fig3] {} / grab-retrain", task.name());
+        let retrain_cfg =
+            base_cfg(cfg, task, OrderingKind::RetrainFromGraB);
+        let mut t =
+            Trainer::new(retrain_cfg, &rt, Some(retrain_order))?;
+        let r = t.run()?;
+        emit(&mut csv, task, "grab-retrain", &r.epochs)?;
+    }
+    csv.flush()?;
+    println!(
+        "\nfig3 written to {}/fig3_ablation.csv \
+         (paper expectation: grab-retrain ~ grab on the convex task \
+         only; grab-1step underperforms both).",
+        out_dir.display()
+    );
+    Ok(())
+}
+
+fn base_cfg(cfg: &Fig3Config, task: Task, ordering: OrderingKind)
+    -> TrainConfig {
+    let mut tc = TrainConfig::for_task(task);
+    tc.ordering = ordering;
+    tc.epochs = cfg.epochs;
+    tc.n_examples = cfg.n;
+    tc.n_eval = cfg.n_eval;
+    tc.seed = cfg.seed;
+    tc.eval_every = 1;
+    tc.artifacts_dir = cfg.artifacts_dir.clone();
+    tc
+}
+
+fn emit(
+    csv: &mut CsvWriter,
+    task: Task,
+    variant: &str,
+    epochs: &[crate::train::EpochMetrics],
+) -> Result<()> {
+    for m in epochs {
+        csv.row(&[
+            task.name().to_string(),
+            variant.to_string(),
+            m.epoch.to_string(),
+            fmt_f(m.train_loss),
+            m.eval_loss.map(fmt_f).unwrap_or_default(),
+            m.eval_acc.map(fmt_f).unwrap_or_default(),
+        ])?;
+    }
+    let last = epochs.last().expect("epochs");
+    println!(
+        "  {:<7} {:<13} final train_loss={:.4} eval_acc={:.3}",
+        task.name(),
+        variant,
+        last.train_loss,
+        last.eval_acc.unwrap_or(f64::NAN)
+    );
+    Ok(())
+}

@@ -1,0 +1,112 @@
+//! Fig. 4 — herding bound of Algorithm 5 (deterministic balancing) vs
+//! Algorithm 6 (self-balancing walk) after 1 and after `passes` repeated
+//! balance-reorder rounds, across dimensions — both ℓ∞ (the theory's norm)
+//! and ℓ2 (where the paper notes naive balancing wins at high d).
+
+use anyhow::Result;
+
+use crate::balance::{Balancer, DeterministicBalancer, WalkBalancer};
+use crate::herding::offline::herd;
+use crate::util::rng::Rng;
+use crate::util::ser::{fmt_f, CsvWriter};
+
+pub struct Fig4Config {
+    pub n: usize,
+    pub dims: Vec<usize>,
+    pub passes: usize,
+    pub seed: u64,
+}
+
+impl Default for Fig4Config {
+    fn default() -> Self {
+        Fig4Config { n: 10_000, dims: vec![16, 128, 1024], passes: 10,
+                     seed: 0 }
+    }
+}
+
+impl Fig4Config {
+    pub fn small() -> Fig4Config {
+        Fig4Config { n: 2000, dims: vec![16, 128, 512], passes: 10,
+                     seed: 0 }
+    }
+}
+
+pub fn run(cfg: &Fig4Config, out_dir: &std::path::Path) -> Result<()> {
+    let mut csv = CsvWriter::create(
+        &out_dir.join("fig4_balancer_bounds.csv"),
+        &["algo", "d", "pass", "herding_inf", "herding_l2"],
+    )?;
+    println!(
+        "\nfig4 — herding bound after repeated balance+reorder \
+         (n={}):",
+        cfg.n
+    );
+    println!(
+        "{:<6} {:>6} {:>6} {:>14} {:>14}",
+        "algo", "d", "pass", "herding_linf", "herding_l2"
+    );
+    for &d in &cfg.dims {
+        let mut rng = Rng::new(cfg.seed ^ d as u64);
+        // Paper's Fig. 4 setup: z_i sampled from [0,1]^d.
+        let vs: Vec<Vec<f32>> = (0..cfg.n)
+            .map(|_| (0..d).map(|_| rng.f32()).collect())
+            .collect();
+        for algo in ["alg5", "alg6"] {
+            let mut balancer: Box<dyn Balancer> = match algo {
+                "alg5" => Box::new(DeterministicBalancer),
+                _ => Box::new(WalkBalancer::new(
+                    // Tuned c (the paper's appendix notes Alg. 6 "requires
+                    // tuning a hyperparameter c"): Theorem 4's
+                    // 30·log(nd/δ) is a loose worst-case constant that
+                    // makes the walk's signs near-coinflips; ln(nd) steers
+                    // harder with rare failures. The walk's achieved bound
+                    // floors at O(c), which is the paper's practical
+                    // argument for preferring Alg. 5.
+                    ((cfg.n * d) as f64).ln().max(2.0),
+                    cfg.seed,
+                )),
+            };
+            let (_, stats) = herd(balancer.as_mut(), &vs, cfg.passes);
+            for s in &stats {
+                csv.row(&[
+                    algo.to_string(),
+                    d.to_string(),
+                    s.pass.to_string(),
+                    fmt_f(s.herding_inf as f64),
+                    fmt_f(s.herding_l2 as f64),
+                ])?;
+                if s.pass == 1 || s.pass == cfg.passes {
+                    println!(
+                        "{:<6} {:>6} {:>6} {:>14.4} {:>14.4}",
+                        algo, d, s.pass, s.herding_inf, s.herding_l2
+                    );
+                }
+            }
+        }
+    }
+    csv.flush()?;
+    println!(
+        "(paper: both algorithms converge to similar bounds after ~10 \
+         passes; alg5 wins on l2 at high d after 1 pass)"
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4_small_runs() {
+        let dir = std::env::temp_dir().join("grab_fig4_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let cfg = Fig4Config { n: 256, dims: vec![8, 32], passes: 3,
+                               seed: 1 };
+        run(&cfg, &dir).unwrap();
+        let text = std::fs::read_to_string(
+            dir.join("fig4_balancer_bounds.csv")).unwrap();
+        // header + 2 algos * 2 dims * 3 passes
+        assert_eq!(text.lines().count(), 1 + 12);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,148 @@
+//! Experiment harness — one module per paper artifact, each writing a CSV
+//! under `results/` and printing the paper's rows/series. See DESIGN.md §5
+//! for the full experiment index.
+//!
+//! ```bash
+//! grab exp fig1        # Fig. 1b prefix-norm curves
+//! grab exp fig2        # Fig. 2 training/validation across orderings
+//! grab exp fig3        # Fig. 3 fixed-order ablation
+//! grab exp fig4        # Fig. 4 Alg. 5 vs Alg. 6 herding bounds
+//! grab exp table1      # Table 1 measured compute/storage overhead
+//! grab exp statement1  # Statement 1 greedy vs random scaling
+//! grab exp all         # everything, small scale
+//! ```
+
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod granularity;
+pub mod statement1;
+pub mod table1;
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use crate::config::Task;
+use crate::util::cli::Args;
+
+/// Dispatch `grab exp <id>`.
+pub fn run_from_cli(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .unwrap_or("all")
+        .to_string();
+    let out = PathBuf::from(args.str_or("out", "results"));
+    std::fs::create_dir_all(&out)?;
+    let scale = args.str_or("scale", "small");
+    let artifacts = args.str_or("artifacts", "artifacts");
+    let paper_scale = match scale.as_str() {
+        "small" => false,
+        "paper" => true,
+        other => bail!("unknown --scale {other:?} (small|paper)"),
+    };
+    let task_filter = args.opt_str("task");
+    let epochs = args.usize_or("epochs", 0)?; // 0 = scale default
+    let n = args.usize_or("n", 0)?;
+    args.reject_unknown()?;
+
+    let ids: Vec<&str> = if id == "all" {
+        vec!["fig1", "fig2", "fig3", "fig4", "table1", "statement1",
+             "granularity"]
+    } else {
+        vec![id.as_str()]
+    };
+    for id in ids {
+        eprintln!("[exp] running {id} (scale={scale}) -> {}",
+                  out.display());
+        match id {
+            "fig1" => {
+                let mut cfg = if paper_scale {
+                    fig1::Fig1Config::default()
+                } else {
+                    fig1::Fig1Config {
+                        n: 4000,
+                        ..fig1::Fig1Config::default()
+                    }
+                };
+                if n > 0 {
+                    cfg.n = n;
+                }
+                fig1::run(&cfg, &out)?;
+            }
+            "fig2" => {
+                let mut cfg = if paper_scale {
+                    fig2::Fig2Config::paper(&artifacts)
+                } else {
+                    fig2::Fig2Config::small(&artifacts)
+                };
+                if let Some(t) = &task_filter {
+                    cfg.tasks = vec![Task::parse(t)?];
+                }
+                if epochs > 0 {
+                    cfg.epochs = epochs;
+                }
+                if n > 0 {
+                    cfg.n = n;
+                }
+                fig2::run(&cfg, &out)?;
+            }
+            "fig3" => {
+                let mut cfg = fig3::Fig3Config::small(&artifacts);
+                if paper_scale {
+                    cfg.epochs = 30;
+                    cfg.n = 4096;
+                }
+                if let Some(t) = &task_filter {
+                    cfg.tasks = vec![Task::parse(t)?];
+                }
+                if epochs > 0 {
+                    cfg.epochs = epochs;
+                }
+                if n > 0 {
+                    cfg.n = n;
+                }
+                fig3::run(&cfg, &out)?;
+            }
+            "fig4" => {
+                let cfg = if paper_scale {
+                    fig4::Fig4Config::default()
+                } else {
+                    fig4::Fig4Config::small()
+                };
+                fig4::run(&cfg, &out)?;
+            }
+            "table1" => {
+                let cfg = if paper_scale {
+                    table1::Table1Config::default()
+                } else {
+                    table1::Table1Config::small()
+                };
+                table1::run(&cfg, &out)?;
+            }
+            "statement1" => {
+                statement1::run(&statement1::Statement1Config::default(),
+                                &out)?;
+            }
+            "granularity" => {
+                let mut cfg = granularity::GranularityConfig::small(
+                    &artifacts);
+                if epochs > 0 {
+                    cfg.epochs = epochs;
+                }
+                if n > 0 {
+                    cfg.n = n;
+                }
+                granularity::run(&cfg, &out)?;
+            }
+            other => bail!(
+                "unknown experiment {other:?} \
+                 (fig1|fig2|fig3|fig4|table1|statement1|granularity|all)"
+            ),
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,80 @@
+//! Statement 1 — the Chelidze et al. construction on which greedy herding
+//! (Algorithm 1) is Ω(n) while a random permutation is O(√n).
+//!
+//! n/2 copies of (1, 1) and n/2 copies of (4, −2): greedy keeps selecting
+//! (1, 1) for the first n/2 steps (by induction, with running sum (m, m),
+//! 2(m+1)² < (m+4)² + (m−2)²), so the centered prefix sum grows linearly.
+
+/// Build the adversarial family (n must be even).
+pub fn adversarial_vectors(n: usize) -> Vec<Vec<f32>> {
+    assert!(n % 2 == 0, "n must be even");
+    let mut vs = Vec::with_capacity(n);
+    for _ in 0..n / 2 {
+        vs.push(vec![1.0f32, 1.0]);
+    }
+    for _ in 0..n / 2 {
+        vs.push(vec![4.0f32, -2.0]);
+    }
+    vs
+}
+
+/// The mean of the family: ((1+4)/2, (1-2)/2) = (2.5, -0.5).
+pub fn adversarial_mean() -> Vec<f32> {
+    vec![2.5, -0.5]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::herding::greedy::greedy_order_raw;
+    use crate::herding::herding_bound;
+    use crate::util::rng::Rng;
+    use crate::util::stats::scaling_exponent;
+
+    #[test]
+    fn greedy_picks_ones_first() {
+        // Greedy must select all (1,1) vectors before any (4,-2).
+        let n = 64;
+        let vs = adversarial_vectors(n);
+        let order = greedy_order_raw(&vs);
+        for (t, &i) in order.iter().take(n / 2).enumerate() {
+            assert!(
+                i < n / 2,
+                "step {t} picked vector {i} (a (4,-2)) too early"
+            );
+        }
+    }
+
+    #[test]
+    fn greedy_is_linear_random_is_sqrt() {
+        // The Statement 1 separation, measured: fit scaling exponents of
+        // the herding objective vs n for both orderings.
+        let ns = [64usize, 128, 256, 512, 1024];
+        let mut greedy_bounds = Vec::new();
+        let mut random_bounds = Vec::new();
+        let mut rng = Rng::new(0);
+        for &n in &ns {
+            let vs = adversarial_vectors(n);
+            let g = greedy_order_raw(&vs);
+            greedy_bounds.push(herding_bound(&vs, &g).1 as f64);
+            // Average a few random permutations.
+            let mut acc = 0.0;
+            for _ in 0..5 {
+                let p = rng.permutation(n);
+                acc += herding_bound(&vs, &p).1 as f64;
+            }
+            random_bounds.push(acc / 5.0);
+        }
+        let xs: Vec<f64> = ns.iter().map(|&n| n as f64).collect();
+        let greedy_exp = scaling_exponent(&xs, &greedy_bounds);
+        let random_exp = scaling_exponent(&xs, &random_bounds);
+        assert!(
+            greedy_exp > 0.85,
+            "greedy exponent {greedy_exp} (want ~1)"
+        );
+        assert!(
+            random_exp < 0.7,
+            "random exponent {random_exp} (want ~0.5)"
+        );
+    }
+}

@@ -1,0 +1,125 @@
+//! Algorithm 1 — greedy herding / Greedy Ordering (Lu et al. 2021a).
+//!
+//! Center the vectors, then repeatedly pick the candidate minimizing
+//! ‖s + z_j‖₂. This is the paper's memory-hungry baseline: O(nd) storage
+//! (all stale gradients) and O(n²) selection work (n scans of up to n
+//! candidates, each O(d) via the cached-norm trick below).
+
+use crate::tensor;
+
+/// Run greedy herding over `vs`; returns the selected permutation.
+///
+/// Selection cost per step is O(|Φ|·d): ‖s+z_j‖² = ‖s‖² + 2⟨s,z_j⟩ + ‖z_j‖²
+/// and ‖s‖² is common to all candidates, so only 2⟨s,z_j⟩ + ‖z_j‖² is
+/// compared, with ‖z_j‖² precomputed once.
+pub fn greedy_order(vs: &[Vec<f32>]) -> Vec<usize> {
+    greedy_order_centered_at(vs, None)
+}
+
+/// Greedy selection **without** the centering step — the variant analysed
+/// in the paper's Statement 1 proof (Appendix B.1 tracks the running sum of
+/// the *raw* vectors: after m picks of (1,1) the sum is (m,m)). On the
+/// Chelidze construction this is Ω(n) in the herding objective, while a
+/// random permutation is O(√n); centering happens to rescue greedy on that
+/// specific instance (the two classes become exact opposites), which is
+/// itself reported in the statement1 experiment.
+pub fn greedy_order_raw(vs: &[Vec<f32>]) -> Vec<usize> {
+    let zero = vec![0.0f32; vs.first().map_or(0, |v| v.len())];
+    greedy_order_centered_at(vs, Some(&zero))
+}
+
+fn greedy_order_centered_at(
+    vs: &[Vec<f32>],
+    center_override: Option<&[f32]>,
+) -> Vec<usize> {
+    let n = vs.len();
+    if n == 0 {
+        return vec![];
+    }
+    let d = vs[0].len();
+    let center = match center_override {
+        Some(c) => c.to_vec(),
+        None => super::mean(vs),
+    };
+    // Centered copies (this is the O(nd) storage the paper charges).
+    let centered: Vec<Vec<f32>> = vs
+        .iter()
+        .map(|v| {
+            let mut c = vec![0.0f32; d];
+            tensor::sub_into(v, &center, &mut c);
+            c
+        })
+        .collect();
+    let sq_norms: Vec<f32> =
+        centered.iter().map(|c| tensor::dot(c, c)).collect();
+
+    let mut remaining: Vec<usize> = (0..n).collect();
+    let mut s = vec![0.0f32; d];
+    let mut order = Vec::with_capacity(n);
+    while !remaining.is_empty() {
+        let mut best_pos = 0usize;
+        let mut best_score = f32::INFINITY;
+        for (pos, &j) in remaining.iter().enumerate() {
+            let score = 2.0 * tensor::dot(&s, &centered[j]) + sq_norms[j];
+            if score < best_score {
+                best_score = score;
+                best_pos = pos;
+            }
+        }
+        let j = remaining.swap_remove(best_pos);
+        tensor::axpy(1.0, &centered[j], &mut s);
+        order.push(j);
+    }
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::herding::herding_bound;
+    use crate::util::prop::{self, assert_permutation, gen};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn output_is_permutation() {
+        prop::forall("greedy permutation", 32, |rng| {
+            let (n, d) = gen::small_dims(rng, 40, 8);
+            let vs = gen::vec_set(rng, n, d);
+            assert_permutation(&greedy_order(&vs))
+        });
+    }
+
+    #[test]
+    fn greedy_interleaves_opposite_pairs() {
+        // +v, -v pairs: greedy should alternate, achieving bound ~ ||v||.
+        let v = vec![1.0f32, 2.0];
+        let neg: Vec<f32> = v.iter().map(|x| -x).collect();
+        let vs = vec![
+            v.clone(), v.clone(), v.clone(), v.clone(),
+            neg.clone(), neg.clone(), neg.clone(), neg.clone(),
+        ];
+        let order = greedy_order(&vs);
+        let (_, l2) = herding_bound(&vs, &order);
+        assert!(l2 <= tensor::norm2(&v) + 1e-4, "l2={l2}");
+    }
+
+    #[test]
+    fn greedy_beats_worst_case_order_on_gaussians() {
+        let mut rng = Rng::new(4);
+        let vs = gen::vec_set(&mut rng, 256, 8);
+        let greedy = greedy_order(&vs);
+        let (_, greedy_l2) = herding_bound(&vs, &greedy);
+        // Sorted-by-first-coordinate is a pathologically bad order.
+        let mut bad: Vec<usize> = (0..vs.len()).collect();
+        bad.sort_by(|&a, &b| vs[a][0].partial_cmp(&vs[b][0]).unwrap());
+        let (_, bad_l2) = herding_bound(&vs, &bad);
+        assert!(greedy_l2 < bad_l2 / 2.0,
+                "greedy {greedy_l2} vs bad {bad_l2}");
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        assert!(greedy_order(&[]).is_empty());
+        assert_eq!(greedy_order(&[vec![1.0, 2.0]]), vec![0]);
+    }
+}

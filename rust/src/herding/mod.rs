@@ -1,0 +1,125 @@
+//! The herding problem (Harvey & Samadi 2014) — objective evaluation,
+//! greedy ordering (Algorithm 1), offline balance-and-reorder herding, and
+//! the Statement-1 adversarial construction where greedy fails.
+
+pub mod adversarial;
+pub mod greedy;
+pub mod offline;
+
+use crate::tensor;
+
+/// Evaluate the herding objective of Eq. (3) for `order` over `vs`:
+/// max_k ‖Σ_{t≤k} (z_{σ(t)} − mean)‖ in both ℓ∞ and ℓ2.
+pub fn herding_bound(vs: &[Vec<f32>], order: &[usize]) -> (f32, f32) {
+    let center = mean(vs);
+    tensor::prefix_bounds(vs, &center, order)
+}
+
+/// Herding objective against an explicit center (e.g. zero for pre-centered
+/// inputs, or a stale mean as in GraB's analysis).
+pub fn herding_bound_centered(
+    vs: &[Vec<f32>],
+    center: &[f32],
+    order: &[usize],
+) -> (f32, f32) {
+    tensor::prefix_bounds(vs, center, order)
+}
+
+/// Mean of a vector set.
+pub fn mean(vs: &[Vec<f32>]) -> Vec<f32> {
+    assert!(!vs.is_empty());
+    let mut m = vec![0.0f32; vs[0].len()];
+    tensor::mean_into(vs, &mut m);
+    m
+}
+
+/// Full prefix-norm trajectory ‖Σ_{t≤k}(z_{σ(t)} − mean)‖₂ for k = 1..n —
+/// the curve plotted in Fig. 1b.
+pub fn prefix_trajectory(vs: &[Vec<f32>], order: &[usize]) -> Vec<f32> {
+    let center = mean(vs);
+    let d = center.len();
+    let mut sum = vec![0.0f32; d];
+    let mut out = Vec::with_capacity(order.len());
+    for &i in order {
+        for j in 0..d {
+            sum[j] += vs[i][j] - center[j];
+        }
+        out.push(tensor::norm2(&sum));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bound_zero_for_identical_vectors() {
+        let vs = vec![vec![2.0f32, -1.0]; 8];
+        let order: Vec<usize> = (0..8).collect();
+        let (inf, l2) = herding_bound(&vs, &order);
+        assert!(inf < 1e-6 && l2 < 1e-6);
+    }
+
+    #[test]
+    fn bound_is_order_sensitive() {
+        let vs = vec![vec![1.0f32], vec![1.0], vec![-1.0], vec![-1.0]];
+        let (bad, _) = herding_bound(&vs, &[0, 1, 2, 3]);
+        let (good, _) = herding_bound(&vs, &[0, 2, 1, 3]);
+        assert!(bad > good + 0.5);
+    }
+
+    #[test]
+    fn trajectory_last_point_near_zero_for_zero_sum() {
+        // Prefix sums of centered vectors return to 0 at k = n.
+        let mut rng = Rng::new(2);
+        let vs: Vec<Vec<f32>> =
+            (0..32).map(|_| vec![rng.gauss() as f32; 4]).collect();
+        let order: Vec<usize> = (0..32).collect();
+        let traj = prefix_trajectory(&vs, &order);
+        assert_eq!(traj.len(), 32);
+        assert!(traj[31].abs() < 1e-3, "final={}", traj[31]);
+    }
+
+    #[test]
+    fn random_order_bound_scales_like_sqrt_n() {
+        // Azuma: random permutation achieves O(sqrt(n)) — check the ratio
+        // between n=4096 and n=256 is near sqrt(16)=4, not 16.
+        let mut rng = Rng::new(3);
+        let mut bound_at = |n: usize| {
+            let vs: Vec<Vec<f32>> = (0..n)
+                .map(|_| vec![rng.gauss() as f32, rng.gauss() as f32])
+                .collect();
+            let order = rng.permutation(n);
+            herding_bound(&vs, &order).1 as f64
+        };
+        let b_small: f64 =
+            (0..5).map(|_| bound_at(256)).sum::<f64>() / 5.0;
+        let b_big: f64 =
+            (0..5).map(|_| bound_at(4096)).sum::<f64>() / 5.0;
+        let ratio = b_big / b_small;
+        assert!(
+            ratio < 8.0,
+            "ratio {ratio} suggests super-sqrt growth"
+        );
+    }
+
+    #[test]
+    fn bound_permutation_invariant_inputs() {
+        prop::forall("herding bound well-defined", 16, |rng| {
+            let n = 2 + rng.gen_range(30) as usize;
+            let d = 1 + rng.gen_range(8) as usize;
+            let vs: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..d).map(|_| rng.gauss() as f32).collect())
+                .collect();
+            let order: Vec<usize> = (0..n).collect();
+            let (inf, l2) = herding_bound(&vs, &order);
+            if !(inf.is_finite() && l2.is_finite() && inf <= l2 + 1e-4) {
+                return Err(format!("inf={inf} l2={l2}"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,122 @@
+//! Offline herding via repeated balance-and-reorder (the Õ(1) herding
+//! subroutine of Section 4: Theorem 2 halves the bound towards the
+//! balancing constant A on every pass, so iterating drives H → A ≈ Õ(1)).
+//!
+//! This is what `Herding(·)` in Algorithm 2 resolves to, and what Fig. 4
+//! sweeps over "epochs" (number of passes) for Algorithms 5 vs 6.
+
+use crate::balance::{balance_pass, reorder, Balancer};
+use crate::herding::mean;
+use crate::tensor;
+
+/// One pass: balance the (centered) vectors along `order`, then reorder by
+/// the signs. Returns (new_order, pass ℓ∞ balancing bound, pass ℓ2 bound).
+pub fn balance_reorder_pass(
+    balancer: &mut dyn Balancer,
+    vs: &[Vec<f32>],
+    center: &[f32],
+    order: &[usize],
+) -> (Vec<usize>, f32, f32) {
+    let (signs, max_inf, max_l2) = balance_pass(balancer, vs, center, order);
+    (reorder(order, &signs), max_inf, max_l2)
+}
+
+/// Record of one offline herding pass (for the Fig. 4 series).
+#[derive(Clone, Debug)]
+pub struct PassStats {
+    pub pass: usize,
+    /// Herding objective (Eq. 3) of the order *after* this pass.
+    pub herding_inf: f32,
+    pub herding_l2: f32,
+    /// Signed balancing objective observed during the pass.
+    pub balance_inf: f32,
+    pub balance_l2: f32,
+}
+
+/// Run `passes` balance-reorder iterations starting from the identity
+/// order. Returns the final order and per-pass statistics.
+pub fn herd(
+    balancer: &mut dyn Balancer,
+    vs: &[Vec<f32>],
+    passes: usize,
+) -> (Vec<usize>, Vec<PassStats>) {
+    let center = mean(vs);
+    let mut order: Vec<usize> = (0..vs.len()).collect();
+    let mut stats = Vec::with_capacity(passes);
+    for pass in 0..passes {
+        balancer.reset();
+        let (new_order, b_inf, b_l2) =
+            balance_reorder_pass(balancer, vs, &center, &order);
+        order = new_order;
+        let (h_inf, h_l2) =
+            tensor::prefix_bounds(vs, &center, &order);
+        stats.push(PassStats {
+            pass: pass + 1,
+            herding_inf: h_inf,
+            herding_l2: h_l2,
+            balance_inf: b_inf,
+            balance_l2: b_l2,
+        });
+    }
+    (order, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::balance::DeterministicBalancer;
+    use crate::herding::herding_bound;
+    use crate::util::prop::{self, assert_permutation, gen};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn herd_outputs_permutation() {
+        prop::forall("herd permutation", 16, |rng| {
+            let (n, d) = gen::small_dims(rng, 60, 8);
+            let vs = gen::vec_set(rng, n, d);
+            let mut b = DeterministicBalancer;
+            let (order, stats) = herd(&mut b, &vs, 3);
+            assert_permutation(&order)?;
+            if stats.len() != 3 {
+                return Err("missing stats".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn repeated_passes_drive_bound_down() {
+        // Theorem 2: the herding bound contracts towards A over passes.
+        let mut rng = Rng::new(5);
+        let n = 1024;
+        let vs = gen::vec_set(&mut rng, n, 16);
+        let identity: Vec<usize> = (0..n).collect();
+        let (start_inf, _) = herding_bound(&vs, &identity);
+        let mut b = DeterministicBalancer;
+        let (order, stats) = herd(&mut b, &vs, 8);
+        let final_inf = stats.last().unwrap().herding_inf;
+        assert!(
+            final_inf < start_inf / 3.0,
+            "start {start_inf} -> final {final_inf}"
+        );
+        // And the bound is monotone-ish: last is no worse than first pass.
+        assert!(final_inf <= stats[0].herding_inf + 1e-4);
+        assert_eq!(order.len(), n);
+    }
+
+    #[test]
+    fn herding_bound_far_below_random_after_passes() {
+        let mut rng = Rng::new(6);
+        let n = 2048;
+        let vs = gen::vec_set(&mut rng, n, 32);
+        let random = rng.permutation(n);
+        let (rand_inf, _) = herding_bound(&vs, &random);
+        let mut b = DeterministicBalancer;
+        let (_, stats) = herd(&mut b, &vs, 10);
+        let herded = stats.last().unwrap().herding_inf;
+        assert!(
+            herded < rand_inf / 2.0,
+            "herded {herded} vs random {rand_inf}"
+        );
+    }
+}

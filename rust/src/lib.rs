@@ -1,0 +1,43 @@
+//! # grab — GraB: Finding Provably Better Data Permutations than Random Reshuffling
+//!
+//! A full-stack reproduction of Lu, Guo & De Sa (NeurIPS 2022). The crate is
+//! the **Layer-3 coordinator** of a three-layer architecture:
+//!
+//! * **L3 (this crate)** — streaming data-pipeline orchestrator: dataset
+//!   substrates, example-ordering policies (RR / SO / FlipFlop / Greedy
+//!   Herding / GraB), vector-balancing and herding algorithms, optimizer,
+//!   training engine, threaded pipeline, and the experiment harness that
+//!   regenerates every table and figure in the paper.
+//! * **L2 (python/compile/model.py, build-time only)** — JAX models whose
+//!   per-example gradient functions are AOT-lowered to HLO text.
+//! * **L1 (python/compile/kernels/, build-time only)** — Pallas kernels
+//!   (tiled matmul, fused softmax-CE, the GraB balance step) called by L2 so
+//!   they lower into the same HLO artifacts.
+//!
+//! At runtime the coordinator loads `artifacts/*.hlo.txt` through the PJRT C
+//! API ([`runtime`]) and Python never executes on the request path.
+//!
+//! Quick start (after `make artifacts`):
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! cargo run --release -- train --task mnist --ordering grab --epochs 5
+//! cargo run --release -- exp fig1
+//! ```
+
+pub mod balance;
+pub mod config;
+pub mod data;
+pub mod exp;
+pub mod herding;
+pub mod model;
+pub mod optim;
+pub mod ordering;
+pub mod pipeline;
+pub mod runtime;
+pub mod tensor;
+pub mod train;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,129 @@
+//! `grab` — CLI launcher for the GraB reproduction.
+//!
+//! ```text
+//! grab train  [--config f.toml] [--task mnist|cifar|wiki|glue]
+//!             [--ordering rr|so|flipflop|greedy|grab|grab-1step|seq]
+//!             [--balancer alg5|alg6|kernel] [--epochs N] [--n N]
+//!             [--lr F] [--seed N] [--metrics-out f.csv] [--pipeline]
+//! grab exp    fig1|fig2|fig3|fig4|table1|statement1|all [options]
+//! grab inspect [--artifacts DIR]       # artifact/manifest summary
+//! ```
+
+use anyhow::{bail, Result};
+
+use grab::config::TrainConfig;
+use grab::pipeline::PipelineTrainer;
+use grab::runtime::Runtime;
+use grab::train::Trainer;
+use grab::util::cli::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    let cmd = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("help");
+    match cmd {
+        "train" => cmd_train(&args),
+        "exp" => grab::exp::run_from_cli(&args),
+        "inspect" => cmd_inspect(&args),
+        "help" | "--help" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}; see `grab help`"),
+    }
+}
+
+const HELP: &str = "\
+grab — GraB: provably better data permutations than random reshuffling
+  (Lu, Guo & De Sa, NeurIPS 2022) — rust + JAX/Pallas reproduction
+
+USAGE:
+  grab train [options]     train one run (task x ordering)
+  grab exp <id> [options]  regenerate a paper artifact
+                           (fig1|fig2|fig3|fig4|table1|statement1|all)
+  grab inspect             show artifact manifest / model layouts
+  grab help
+
+TRAIN OPTIONS:
+  --config FILE            TOML run config (flags overlay on top)
+  --task mnist|cifar|wiki|glue
+  --ordering rr|so|flipflop|greedy|grab|grab-1step|seq
+  --balancer alg5|alg6|kernel
+  --epochs N --n N --n-eval N --accum N
+  --lr F --momentum F --wd F --seed N
+  --metrics-out FILE.csv   stream per-epoch metrics
+  --pipeline               threaded streaming pipeline (overlapped stages)
+  --artifacts DIR          artifact directory (default: artifacts)
+
+EXP OPTIONS (see DESIGN.md experiment index):
+  --out DIR                results directory (default: results)
+  --scale small|paper      dataset/epoch scale (default: small)
+";
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut cfg = match args.opt_str("config") {
+        Some(path) => TrainConfig::from_toml(
+            &grab::config::TomlDoc::from_file(std::path::Path::new(&path))?,
+        )?,
+        None => TrainConfig::default(),
+    };
+    cfg.apply_args(args)?;
+    args.reject_unknown()?;
+
+    eprintln!(
+        "[grab] run {} (artifacts: {})",
+        cfg.run_id(),
+        cfg.artifacts_dir
+    );
+    let rt = Runtime::open(&cfg.artifacts_dir)?;
+    eprintln!("[grab] PJRT platform: {}", rt.platform());
+
+    if cfg.use_pipeline {
+        let mut t = PipelineTrainer::new(cfg, &rt)?;
+        let result = t.run()?;
+        for m in &result.epochs {
+            println!("{}", m.line(&result.run_id));
+        }
+        eprintln!(
+            "[grab] pipeline stats: {} batches, {} loader stalls, \
+             {} grad stalls",
+            t.stats.batches, t.stats.loader_stalls, t.stats.grad_stalls
+        );
+    } else {
+        let mut t = Trainer::new(cfg, &rt, None)?;
+        let result = t.run()?;
+        for m in &result.epochs {
+            println!("{}", m.line(&result.run_id));
+        }
+        eprintln!(
+            "[grab] done; ordering state: {} bytes",
+            result.order_state_bytes
+        );
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let dir = args.str_or("artifacts", "artifacts");
+    args.reject_unknown()?;
+    let rt = Runtime::open(&dir)?;
+    println!("PJRT platform: {}", rt.platform());
+    println!("artifacts: {dir}");
+    for m in &rt.manifest.models {
+        println!("{}", grab::model::describe(m));
+    }
+    for b in &rt.manifest.balance {
+        println!("balance kernel d={} ({})", b.dim, b.hlo);
+    }
+    Ok(())
+}

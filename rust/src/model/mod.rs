@@ -1,0 +1,113 @@
+//! Model registry: binds a [`Task`](crate::config::Task) to its L2 artifact
+//! family and its dataset substrate, and provides parameter-layout helpers
+//! (named views into the flat parameter vector).
+
+use anyhow::Result;
+
+use crate::config::{Task, TrainConfig};
+use crate::data::{synth, text, Dataset};
+use crate::runtime::{ModelEntry, ParamSpec};
+
+/// Build the train/eval datasets for a task, sized per config. Train and
+/// eval share the task *structure* (class means / chain / topic weights
+/// live in the low 16 seed bits) but use disjoint sample randomness
+/// (high bits), i.e. a real train/test split of one distribution.
+pub fn build_datasets(cfg: &TrainConfig) -> (Dataset, Dataset) {
+    let n = cfg.n_examples;
+    let ne = cfg.n_eval;
+    let s = cfg.seed;
+    match cfg.task {
+        Task::Mnist => (
+            synth::mnist_like(n, s),
+            synth::mnist_like(ne, s ^ 0xE7A1_0000),
+        ),
+        Task::Cifar => (
+            synth::cifar_like(n, s),
+            synth::cifar_like(ne, s ^ 0xE7A1_0000),
+        ),
+        Task::Wiki => {
+            let spec = text::CorpusSpec::default();
+            (
+                text::lm_dataset(&spec, n, s),
+                text::lm_dataset(&spec, ne, s ^ 0xE7A1_0000),
+            )
+        }
+        Task::Glue => (
+            synth::glue_like(n, 32, 64, s),
+            synth::glue_like(ne, 32, 64, s ^ 0xE7A1_0000),
+        ),
+    }
+}
+
+/// A named view into the flat parameter vector.
+pub struct ParamView<'a> {
+    pub spec: &'a ParamSpec,
+    pub values: &'a [f32],
+}
+
+/// Look up a named parameter block in a flat vector.
+pub fn param_view<'a>(
+    entry: &'a ModelEntry,
+    flat: &'a [f32],
+    name: &str,
+) -> Result<ParamView<'a>> {
+    let spec = entry
+        .param_layout
+        .iter()
+        .find(|p| p.name == name)
+        .ok_or_else(|| anyhow::anyhow!("no param {name:?}"))?;
+    anyhow::ensure!(flat.len() == entry.dim, "flat len mismatch");
+    Ok(ParamView {
+        spec,
+        values: &flat[spec.offset..spec.offset + spec.size],
+    })
+}
+
+/// Human-readable parameter summary (used by `grab inspect`).
+pub fn describe(entry: &ModelEntry) -> String {
+    let mut out = format!(
+        "model {} — d={} params, grad batch B={}, eval batch E={}\n",
+        entry.name, entry.dim, entry.batch, entry.eval_batch
+    );
+    for p in &entry.param_layout {
+        out.push_str(&format!(
+            "  {:<12} {:?} (offset {}, {} elems)\n",
+            p.name, p.shape, p.offset, p.size
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TrainConfig;
+
+    #[test]
+    fn datasets_match_task_geometry() {
+        let mut cfg = TrainConfig::default();
+        cfg.n_examples = 32;
+        cfg.n_eval = 16;
+        for task in [Task::Mnist, Task::Cifar, Task::Wiki, Task::Glue] {
+            cfg.task = task;
+            let (train, eval) = build_datasets(&cfg);
+            assert_eq!(train.len(), 32, "{task:?}");
+            assert_eq!(eval.len(), 16, "{task:?}");
+        }
+    }
+
+    #[test]
+    fn train_eval_differ() {
+        let mut cfg = TrainConfig::default();
+        cfg.n_examples = 8;
+        cfg.n_eval = 8;
+        let (train, eval) = build_datasets(&cfg);
+        let (crate::data::Features::F32 { data: a, .. },
+             crate::data::Features::F32 { data: b, .. }) =
+            (&train.x, &eval.x)
+        else {
+            panic!()
+        };
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,328 @@
+//! GraB — Algorithm 4: SGD with Online Gradient Balancing.
+//!
+//! Per epoch k, for each visited unit (position t, dataset index
+//! σ_k(t), fresh gradient g):
+//!
+//! 1. center with the *stale* mean of epoch k−1:  c = g − m_k      (line 6)
+//! 2. accumulate the fresh mean: m_{k+1} += g / n                   (line 6)
+//! 3. sign from the balancer:    ε = Balancing(s, c)                (line 7)
+//! 4. two-ended order construction (lines 8–12):
+//!      ε = +1 → σ_{k+1}(l) = σ_k(t), l += 1   (front, original order)
+//!      ε = −1 → σ_{k+1}(r) = σ_k(t), r −= 1   (back → reversed order)
+//!    and s += ε·c.
+//!
+//! This implements Algorithm 3's reorder *online*, so total ordering state
+//! is s, m_k, m_{k+1} (3 d-vectors) plus two permutations — O(d + n), vs
+//! Greedy Ordering's O(nd). `observe` is the request-path hot spot measured
+//! in benches/balance_hot.rs; the centered dot and the signed update are
+//! fused single-pass loops over `g`/`m`/`s` (see tensor::dot_centered).
+
+use crate::balance::Balancer;
+use crate::ordering::OrderPolicy;
+use crate::tensor;
+
+pub struct GraBOrder {
+    n: usize,
+    d: usize,
+    balancer: Box<dyn Balancer + Send>,
+    /// σ_k — the order being followed this epoch.
+    current: Vec<usize>,
+    /// σ_{k+1} under construction.
+    next: Vec<usize>,
+    /// Front / back fill pointers (paper's l and r).
+    l: usize,
+    r: usize,
+    /// Signed running sum s.
+    s: Vec<f32>,
+    /// Stale mean m_k (centering) and fresh accumulator m_{k+1}.
+    stale_mean: Vec<f32>,
+    fresh_mean: Vec<f32>,
+    /// Diagnostics: max ‖s‖∞ observed this epoch (the balancing bound A).
+    pub epoch_balance_inf: f32,
+    /// Count of +1 signs this epoch (for tests/metrics).
+    pub plus_signs: usize,
+    observed: usize,
+}
+
+impl GraBOrder {
+    pub fn new(n: usize, d: usize, balancer: Box<dyn Balancer + Send>)
+        -> GraBOrder {
+        GraBOrder {
+            n,
+            d,
+            balancer,
+            current: (0..n).collect(), // σ_1 = identity (any init works)
+            next: vec![0; n],
+            l: 0,
+            r: n,
+            s: vec![0.0; d],
+            stale_mean: vec![0.0; d], // m_1 = 0 (paper line 1)
+            fresh_mean: vec![0.0; d],
+            epoch_balance_inf: 0.0,
+            plus_signs: 0,
+            observed: 0,
+        }
+    }
+
+    /// The balancer's name (for logs).
+    pub fn balancer_name(&self) -> &'static str {
+        self.balancer.name()
+    }
+
+    /// Peek at the order under construction (tests only).
+    #[cfg(test)]
+    fn next_order_built(&self) -> &[usize] {
+        &self.next
+    }
+}
+
+impl OrderPolicy for GraBOrder {
+    fn name(&self) -> &'static str {
+        "grab"
+    }
+
+    fn epoch_order(&mut self, _epoch: usize) -> Vec<usize> {
+        self.current.clone()
+    }
+
+    fn observe(&mut self, pos: usize, grad: &[f32]) {
+        debug_assert_eq!(grad.len(), self.d);
+        debug_assert!(pos < self.n, "pos {pos} out of range");
+        // ε = Balancing(s, g − m_k). The deterministic balancer only needs
+        // sign⟨s, c⟩, computed fused without materializing c.
+        let eps = self
+            .balancer
+            .sign_centered(&self.s, grad, &self.stale_mean);
+        // s += ε (g − m_k) and m_{k+1} += g/n in ONE pass over grad
+        // (§Perf: saves a full re-read of grad per observe).
+        tensor::grab_update(
+            eps,
+            1.0 / self.n as f32,
+            grad,
+            &self.stale_mean,
+            &mut self.s,
+            &mut self.fresh_mean,
+        );
+        // Two-ended placement.
+        let unit = self.current[pos];
+        if eps > 0.0 {
+            self.next[self.l] = unit;
+            self.l += 1;
+            self.plus_signs += 1;
+        } else {
+            self.r -= 1;
+            self.next[self.r] = unit;
+        }
+        self.observed += 1;
+        // Balance-bound diagnostic: a full ℓ∞ scan per step costs a whole
+        // extra pass over s; sampling every 16th step (plus the final
+        // step) keeps the metric useful at ~6% of its former cost (§Perf).
+        if self.observed % 16 == 0 || self.observed == self.n {
+            let inf = tensor::norm_inf(&self.s);
+            if inf > self.epoch_balance_inf {
+                self.epoch_balance_inf = inf;
+            }
+        }
+    }
+
+    fn epoch_end(&mut self) {
+        assert_eq!(
+            self.observed, self.n,
+            "GraB epoch_end before observing all {} units", self.n
+        );
+        assert_eq!(self.l, self.r, "two-ended construction must meet");
+        std::mem::swap(&mut self.current, &mut self.next);
+        std::mem::swap(&mut self.stale_mean, &mut self.fresh_mean);
+        tensor::zero(&mut self.fresh_mean);
+        tensor::zero(&mut self.s);
+        self.balancer.reset();
+        self.l = 0;
+        self.r = self.n;
+        self.observed = 0;
+        self.plus_signs = 0;
+        self.epoch_balance_inf = 0.0;
+    }
+
+    fn state_bytes(&self) -> usize {
+        // 3 d-vectors (s, m_k, m_{k+1}) + 2 permutations.
+        3 * self.d * std::mem::size_of::<f32>()
+            + 2 * self.n * std::mem::size_of::<usize>()
+    }
+
+    fn wants_grads(&self) -> bool {
+        true
+    }
+}
+
+/// Extension trait so the deterministic balancer can use the fused
+/// centered-dot path while other balancers fall back to materializing c.
+trait BalancerExt {
+    fn sign_centered(&mut self, s: &[f32], g: &[f32], m: &[f32]) -> f32;
+}
+
+impl BalancerExt for Box<dyn Balancer + Send> {
+    fn sign_centered(&mut self, s: &[f32], g: &[f32], m: &[f32]) -> f32 {
+        if self.name() == "alg5-deterministic" {
+            // Fused: sign of <s, g - m> without a temporary.
+            if tensor::dot_centered(s, g, m) < 0.0 {
+                1.0
+            } else {
+                -1.0
+            }
+        } else {
+            let mut c = vec![0.0f32; g.len()];
+            tensor::sub_into(g, m, &mut c);
+            self.sign(s, &c)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::balance::DeterministicBalancer;
+    use crate::herding::herding_bound;
+    use crate::util::prop::{self, assert_permutation, gen};
+    use crate::util::rng::Rng;
+
+    fn grab(n: usize, d: usize) -> GraBOrder {
+        GraBOrder::new(n, d, Box::new(DeterministicBalancer))
+    }
+
+    #[test]
+    fn first_epoch_is_identity() {
+        let mut g = grab(5, 2);
+        assert_eq!(g.epoch_order(0), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn next_order_is_valid_permutation() {
+        prop::forall("grab produces permutations", 24, |rng| {
+            let (n, d) = gen::small_dims(rng, 64, 8);
+            let mut g = grab(n, d);
+            for _epoch in 0..3 {
+                let order = g.epoch_order(0);
+                assert_permutation(&order)?;
+                for pos in 0..n {
+                    let grad = gen::gauss_vec(rng, d, 1.0);
+                    g.observe(pos, &grad);
+                }
+                g.epoch_end();
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn two_ended_construction_matches_algorithm3() {
+        // Manually check placement: +1 signs go front (original order),
+        // -1 go back (reversed).
+        let mut g = grab(4, 1);
+        // stale mean is 0 in epoch 1, s starts at 0.
+        // grad +1: c=+1, <s,c>=0 -> eps=-1 (tie to -1), s=-1, unit 0 -> back
+        // grad +1: c=+1, <s,c>=-1<0 -> eps=+1, s=0, unit 1 -> front
+        // grad -1: c=-1, <s,c>=0 -> eps=-1, s=+1, unit 2 -> back
+        // grad -1: c=-1, <s,c>=-1<0 -> eps=+1, s=0, unit 3 -> front
+        g.observe(0, &[1.0]);
+        g.observe(1, &[1.0]);
+        g.observe(2, &[-1.0]);
+        g.observe(3, &[-1.0]);
+        assert_eq!(g.next_order_built(), &[1, 3, 2, 0]);
+        g.epoch_end();
+        assert_eq!(g.epoch_order(1), vec![1, 3, 2, 0]);
+    }
+
+    #[test]
+    fn stale_mean_rolls_over() {
+        let n = 4;
+        let mut g = grab(n, 2);
+        let grads = [
+            [1.0f32, 0.0],
+            [0.0, 1.0],
+            [1.0, 1.0],
+            [2.0, 0.0],
+        ];
+        for (pos, gr) in grads.iter().enumerate() {
+            g.observe(pos, gr);
+        }
+        g.epoch_end();
+        // stale mean for epoch 2 = mean of epoch-1 grads = (1.0, 0.5)
+        assert!((g.stale_mean[0] - 1.0).abs() < 1e-6);
+        assert!((g.stale_mean[1] - 0.5).abs() < 1e-6);
+        // fresh accumulator reset
+        assert_eq!(g.fresh_mean, vec![0.0, 0.0]);
+        assert_eq!(g.s, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "before observing")]
+    fn epoch_end_requires_full_epoch() {
+        let mut g = grab(3, 1);
+        g.observe(0, &[1.0]);
+        g.epoch_end();
+    }
+
+    #[test]
+    fn repeated_epochs_reduce_herding_bound_on_static_gradients() {
+        // With a *fixed* gradient set (convex quadratic intuition), GraB's
+        // reordering over epochs must drive the herding objective down,
+        // approaching the offline herding quality (paper Challenge II).
+        let mut rng = Rng::new(0);
+        let n = 512;
+        let d = 16;
+        let vs = gen::vec_set(&mut rng, n, d);
+        let mut g = grab(n, d);
+        let identity: Vec<usize> = (0..n).collect();
+        let (start_inf, _) = herding_bound(&vs, &identity);
+        let mut last_inf = f32::INFINITY;
+        for _epoch in 0..10 {
+            let order = g.epoch_order(0);
+            for (pos, &unit) in order.iter().enumerate() {
+                g.observe(pos, &vs[unit]);
+            }
+            g.epoch_end();
+            let order = g.epoch_order(0);
+            (last_inf, _) = herding_bound(&vs, &order);
+        }
+        assert!(
+            last_inf < start_inf / 3.0,
+            "start {start_inf} -> after 10 GraB epochs {last_inf}"
+        );
+    }
+
+    #[test]
+    fn grab_beats_random_on_static_gradients() {
+        let mut rng = Rng::new(1);
+        let n = 1024;
+        let d = 32;
+        let vs = gen::vec_set(&mut rng, n, d);
+        // Average random herding bound.
+        let mut rand_acc = 0.0f32;
+        for _ in 0..5 {
+            let p = rng.permutation(n);
+            rand_acc += herding_bound(&vs, &p).0;
+        }
+        let rand_inf = rand_acc / 5.0;
+        let mut g = grab(n, d);
+        for _ in 0..8 {
+            let order = g.epoch_order(0);
+            for (pos, &unit) in order.iter().enumerate() {
+                g.observe(pos, &vs[unit]);
+            }
+            g.epoch_end();
+        }
+        let order = g.epoch_order(0);
+        let (grab_inf, _) = herding_bound(&vs, &order);
+        assert!(
+            grab_inf < rand_inf,
+            "grab {grab_inf} vs random {rand_inf}"
+        );
+    }
+
+    #[test]
+    fn state_bytes_is_o_of_d_plus_n() {
+        let g = grab(1000, 50);
+        let bytes = g.state_bytes();
+        assert_eq!(bytes, 3 * 50 * 4 + 2 * 1000 * 8);
+    }
+}

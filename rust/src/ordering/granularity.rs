@@ -1,0 +1,210 @@
+//! Ordering granularity (paper §"On the granularity of example ordering").
+//!
+//! When per-example gradients are unavailable, the workaround is to fix
+//! the data *within* groups and reorder the groups as coarse-grained
+//! examples. That divides the effective n by the group size and, since
+//! herding's statistical gain is O(n^{-1/3}), shrinks GraB's advantage —
+//! which `grab exp granularity` measures. [`GroupedOrder`] wraps any inner
+//! policy defined over n/gs groups: it expands the group permutation to an
+//! example permutation and feeds the inner policy one *mean* gradient per
+//! group.
+
+use crate::ordering::OrderPolicy;
+use crate::tensor;
+
+pub struct GroupedOrder {
+    inner: Box<dyn OrderPolicy>,
+    /// Static partition: members[g] = dataset indices of group g.
+    members: Vec<Vec<usize>>,
+    group_size: usize,
+    n: usize,
+    d: usize,
+    /// Mean-gradient accumulator for the group currently streaming.
+    acc: Vec<f32>,
+    acc_count: usize,
+    /// Group visit order for the current epoch (inner's permutation).
+    group_order: Vec<usize>,
+    groups_observed: usize,
+}
+
+impl GroupedOrder {
+    /// Partition `n` units into ceil(n/group_size) contiguous groups and
+    /// wrap `inner` (which must be built over that many groups).
+    pub fn new(
+        n: usize,
+        d: usize,
+        group_size: usize,
+        inner: Box<dyn OrderPolicy>,
+    ) -> GroupedOrder {
+        assert!(group_size >= 1);
+        let members: Vec<Vec<usize>> = (0..n)
+            .step_by(group_size)
+            .map(|start| (start..(start + group_size).min(n)).collect())
+            .collect();
+        GroupedOrder {
+            inner,
+            members,
+            group_size,
+            n,
+            d,
+            acc: vec![0.0; d],
+            acc_count: 0,
+            group_order: Vec::new(),
+            groups_observed: 0,
+        }
+    }
+
+    pub fn num_groups(&self) -> usize {
+        self.members.len()
+    }
+}
+
+impl OrderPolicy for GroupedOrder {
+    fn name(&self) -> &'static str {
+        "grouped"
+    }
+
+    fn epoch_order(&mut self, epoch: usize) -> Vec<usize> {
+        self.group_order = self.inner.epoch_order(epoch);
+        debug_assert_eq!(self.group_order.len(), self.members.len());
+        let mut out = Vec::with_capacity(self.n);
+        for &g in &self.group_order {
+            out.extend_from_slice(&self.members[g]);
+        }
+        out
+    }
+
+    fn observe(&mut self, pos: usize, grad: &[f32]) {
+        debug_assert_eq!(grad.len(), self.d);
+        tensor::add_into(&mut self.acc, grad);
+        self.acc_count += 1;
+        // Group boundary: the group being visited is group_order[k] where
+        // k = number of complete groups so far. The last group may be
+        // ragged; detect completion by member count.
+        let k = self.groups_observed;
+        let expected = self.members[self.group_order[k]].len();
+        debug_assert!(pos < self.n);
+        if self.acc_count == expected {
+            tensor::scale(&mut self.acc, 1.0 / expected as f32);
+            let acc = std::mem::replace(&mut self.acc, vec![0.0; self.d]);
+            self.inner.observe(k, &acc);
+            self.acc_count = 0;
+            self.groups_observed += 1;
+        }
+    }
+
+    fn epoch_end(&mut self) {
+        assert_eq!(
+            self.groups_observed,
+            self.members.len(),
+            "GroupedOrder epoch_end before all groups observed"
+        );
+        self.inner.epoch_end();
+        self.groups_observed = 0;
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.inner.state_bytes()
+            + self.d * std::mem::size_of::<f32>()
+            + self.n * std::mem::size_of::<usize>()
+    }
+
+    fn wants_grads(&self) -> bool {
+        self.inner.wants_grads()
+    }
+}
+
+/// Convenience: GraB over groups of `group_size` (the paper's
+/// batch-granularity fallback, with group_size = the microbatch size).
+pub fn grouped_grab(n: usize, d: usize, group_size: usize)
+    -> GroupedOrder {
+    let groups = n.div_ceil(group_size);
+    let inner = crate::ordering::GraBOrder::new(
+        groups,
+        d,
+        Box::new(crate::balance::DeterministicBalancer),
+    );
+    GroupedOrder::new(n, d, group_size, Box::new(inner))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{self, assert_permutation, gen};
+
+    #[test]
+    fn expands_groups_to_examples() {
+        let mut p = grouped_grab(10, 2, 4); // groups {0-3},{4-7},{8,9}
+        let order = p.epoch_order(0);
+        assert_permutation(&order).unwrap();
+        // First epoch: inner identity => example order is identity.
+        assert_eq!(order, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn produces_valid_permutations_over_epochs() {
+        prop::forall("grouped permutations", 16, |rng| {
+            let n = 1 + rng.gen_range(60) as usize;
+            let gs = 1 + rng.gen_range(7) as usize;
+            let d = 1 + rng.gen_range(8) as usize;
+            let mut p = grouped_grab(n, d, gs);
+            for _ in 0..3 {
+                let order = p.epoch_order(0);
+                assert_permutation(&order)?;
+                for (pos, _) in order.iter().enumerate() {
+                    let g = gen::gauss_vec(rng, d, 1.0);
+                    p.observe(pos, &g);
+                }
+                p.epoch_end();
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn group_size_one_matches_plain_grab() {
+        // gs=1 must reduce to exactly per-example GraB.
+        let n = 32;
+        let d = 4;
+        let mut rng = crate::util::rng::Rng::new(0);
+        let grads: Vec<Vec<f32>> =
+            (0..n).map(|_| gen::gauss_vec(&mut rng, d, 1.0)).collect();
+        let mut grouped = grouped_grab(n, d, 1);
+        let mut plain = crate::ordering::GraBOrder::new(
+            n, d, Box::new(crate::balance::DeterministicBalancer));
+        for _ in 0..3 {
+            let go = grouped.epoch_order(0);
+            let po = plain.epoch_order(0);
+            assert_eq!(go, po);
+            for pos in 0..n {
+                grouped.observe(pos, &grads[go[pos]]);
+                plain.observe(pos, &grads[po[pos]]);
+            }
+            grouped.epoch_end();
+            plain.epoch_end();
+        }
+    }
+
+    #[test]
+    fn members_stay_adjacent() {
+        // Units of one group remain consecutive in every epoch's order.
+        let n = 24;
+        let gs = 4;
+        let d = 3;
+        let mut p = grouped_grab(n, d, gs);
+        let mut rng = crate::util::rng::Rng::new(1);
+        for _ in 0..3 {
+            let order = p.epoch_order(0);
+            for chunk in order.chunks(gs) {
+                let g0 = chunk[0] / gs;
+                assert!(chunk.iter().all(|&i| i / gs == g0),
+                        "group split: {chunk:?}");
+            }
+            for pos in 0..n {
+                let g = gen::gauss_vec(&mut rng, d, 1.0);
+                p.observe(pos, &g);
+            }
+            p.epoch_end();
+        }
+    }
+}

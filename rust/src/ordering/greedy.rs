@@ -1,0 +1,134 @@
+//! Greedy Ordering (Lu et al. 2021a) as an online policy: store every
+//! stale per-example gradient during the epoch (the O(nd) memory cost the
+//! paper measures in Table 1 / the Fig. 2d OOM), then run Algorithm 1's
+//! greedy herding at the epoch boundary (O(n²) selection work) to produce
+//! the next epoch's order.
+
+use crate::herding::greedy::greedy_order;
+use crate::ordering::OrderPolicy;
+
+pub struct GreedyOrder {
+    n: usize,
+    d: usize,
+    /// σ_k being followed.
+    current: Vec<usize>,
+    /// Stale gradients, indexed by *dataset unit* (not visit position).
+    grads: Vec<Vec<f32>>,
+    observed: usize,
+}
+
+impl GreedyOrder {
+    pub fn new(n: usize, d: usize) -> GreedyOrder {
+        GreedyOrder {
+            n,
+            d,
+            current: (0..n).collect(),
+            grads: vec![Vec::new(); n],
+            observed: 0,
+        }
+    }
+}
+
+impl OrderPolicy for GreedyOrder {
+    fn name(&self) -> &'static str {
+        "greedy"
+    }
+
+    fn epoch_order(&mut self, _epoch: usize) -> Vec<usize> {
+        self.current.clone()
+    }
+
+    fn observe(&mut self, pos: usize, grad: &[f32]) {
+        debug_assert_eq!(grad.len(), self.d);
+        let unit = self.current[pos];
+        self.grads[unit] = grad.to_vec(); // the O(nd) storage
+        self.observed += 1;
+    }
+
+    fn epoch_end(&mut self) {
+        assert_eq!(
+            self.observed, self.n,
+            "GreedyOrder epoch_end before observing all units"
+        );
+        // Algorithm 1 over the stale gradients in unit index space: the
+        // returned permutation indexes grads[] directly, i.e. dataset units.
+        self.current = greedy_order(&self.grads);
+        self.observed = 0;
+    }
+
+    fn state_bytes(&self) -> usize {
+        // n stale gradients of d f32s (+ the permutation).
+        self.grads
+            .iter()
+            .map(|g| g.capacity() * std::mem::size_of::<f32>())
+            .sum::<usize>()
+            + self.current.len() * std::mem::size_of::<usize>()
+    }
+
+    fn wants_grads(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::herding::herding_bound;
+    use crate::util::prop::{self, assert_permutation, gen};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn produces_permutations() {
+        prop::forall("greedy order permutations", 16, |rng| {
+            let (n, d) = gen::small_dims(rng, 40, 6);
+            let mut p = GreedyOrder::new(n, d);
+            for _ in 0..2 {
+                let order = p.epoch_order(0);
+                assert_permutation(&order)?;
+                for pos in 0..n {
+                    let g = gen::gauss_vec(rng, d, 1.0);
+                    p.observe(pos, &g);
+                }
+                p.epoch_end();
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn memory_is_o_nd() {
+        let mut p = GreedyOrder::new(100, 32);
+        let order = p.epoch_order(0);
+        for pos in 0..100 {
+            let _ = &order;
+            p.observe(pos, &vec![1.0f32; 32]);
+        }
+        let bytes = p.state_bytes();
+        assert!(bytes >= 100 * 32 * 4, "bytes={bytes}");
+    }
+
+    #[test]
+    fn greedy_orders_static_gradients_well() {
+        let mut rng = Rng::new(2);
+        let n = 256;
+        let d = 8;
+        let vs = gen::vec_set(&mut rng, n, d);
+        let mut p = GreedyOrder::new(n, d);
+        // One observation epoch, then the next order is greedy-herded.
+        let order = p.epoch_order(0);
+        for (pos, &unit) in order.iter().enumerate() {
+            p.observe(pos, &vs[unit]);
+        }
+        p.epoch_end();
+        let herded = p.epoch_order(1);
+        let (h_inf, _) = herding_bound(&vs, &herded);
+        let mut rand_acc = 0.0f32;
+        for _ in 0..5 {
+            rand_acc += herding_bound(&vs, &rng.permutation(n)).0;
+        }
+        assert!(
+            h_inf < rand_acc / 5.0,
+            "greedy {h_inf} vs random {}", rand_acc / 5.0
+        );
+    }
+}

@@ -1,0 +1,386 @@
+//! Example-ordering policies — the paper's Section 6 lineup.
+//!
+//! All policies implement [`OrderPolicy`]: the trainer asks for the epoch's
+//! permutation, streams each visited unit's per-example gradient through
+//! [`OrderPolicy::observe`], and calls [`OrderPolicy::epoch_end`] at the
+//! boundary. Policies that learn from gradients (Greedy Ordering, GraB)
+//! build the *next* epoch's permutation from these observations; the rest
+//! ignore them. [`OrderPolicy::state_bytes`] reports ordering-state memory
+//! for the Table 1 comparison.
+
+mod grab;
+pub mod granularity;
+mod greedy;
+
+pub use grab::GraBOrder;
+pub use greedy::GreedyOrder;
+
+use crate::config::{BalancerKind, OrderingKind, TrainConfig};
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// A data-ordering policy over `n` ordering units.
+pub trait OrderPolicy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Permutation to follow during epoch `epoch` (0-based). Must be a
+    /// valid permutation of `0..n`; the trainer visits units in this order.
+    fn epoch_order(&mut self, epoch: usize) -> Vec<usize>;
+
+    /// Observe the gradient of the unit visited at position `pos` of the
+    /// current epoch (the unit is `epoch_order(epoch)[pos]`).
+    fn observe(&mut self, _pos: usize, _grad: &[f32]) {}
+
+    /// Epoch boundary; policies finalize the next epoch's order here.
+    fn epoch_end(&mut self) {}
+
+    /// Bytes of ordering state held between epochs (Table 1's storage
+    /// column). Excludes the dataset and model, which all policies share.
+    fn state_bytes(&self) -> usize {
+        0
+    }
+
+    /// Whether this policy consumes per-example gradients (lets the
+    /// trainer skip gradient streaming for RR/SO/FlipFlop).
+    fn wants_grads(&self) -> bool {
+        false
+    }
+}
+
+/// Random Reshuffling — a fresh uniform permutation each epoch.
+pub struct RandomReshuffle {
+    n: usize,
+    rng: Rng,
+}
+
+impl RandomReshuffle {
+    pub fn new(n: usize, seed: u64) -> Self {
+        RandomReshuffle { n, rng: Rng::new(seed ^ 0x5252) }
+    }
+}
+
+impl OrderPolicy for RandomReshuffle {
+    fn name(&self) -> &'static str {
+        "rr"
+    }
+
+    fn epoch_order(&mut self, _epoch: usize) -> Vec<usize> {
+        self.rng.permutation(self.n)
+    }
+}
+
+/// Shuffle Once — one random permutation reused every epoch.
+pub struct ShuffleOnce {
+    order: Vec<usize>,
+}
+
+impl ShuffleOnce {
+    pub fn new(n: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0x50);
+        ShuffleOnce { order: rng.permutation(n) }
+    }
+}
+
+impl OrderPolicy for ShuffleOnce {
+    fn name(&self) -> &'static str {
+        "so"
+    }
+
+    fn epoch_order(&mut self, _epoch: usize) -> Vec<usize> {
+        self.order.clone()
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.order.len() * std::mem::size_of::<usize>()
+    }
+}
+
+/// FlipFlop (Rajput et al. 2021) — reshuffle on even epochs, replay the
+/// previous epoch *reversed* on odd epochs.
+pub struct FlipFlop {
+    n: usize,
+    rng: Rng,
+    last: Vec<usize>,
+}
+
+impl FlipFlop {
+    pub fn new(n: usize, seed: u64) -> Self {
+        FlipFlop { n, rng: Rng::new(seed ^ 0xF11F), last: Vec::new() }
+    }
+}
+
+impl OrderPolicy for FlipFlop {
+    fn name(&self) -> &'static str {
+        "flipflop"
+    }
+
+    fn epoch_order(&mut self, epoch: usize) -> Vec<usize> {
+        if epoch % 2 == 0 || self.last.is_empty() {
+            self.last = self.rng.permutation(self.n);
+            self.last.clone()
+        } else {
+            let mut rev = self.last.clone();
+            rev.reverse();
+            rev
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.last.len() * std::mem::size_of::<usize>()
+    }
+}
+
+/// Sequential — identity order every epoch (sanity baseline).
+pub struct Sequential {
+    n: usize,
+}
+
+impl Sequential {
+    pub fn new(n: usize) -> Self {
+        Sequential { n }
+    }
+}
+
+impl OrderPolicy for Sequential {
+    fn name(&self) -> &'static str {
+        "seq"
+    }
+
+    fn epoch_order(&mut self, _epoch: usize) -> Vec<usize> {
+        (0..self.n).collect()
+    }
+}
+
+/// A fixed, externally supplied permutation (Fig. 3 "Retrain from GraB").
+pub struct FixedOrder {
+    order: Vec<usize>,
+    name: &'static str,
+}
+
+impl FixedOrder {
+    pub fn new(order: Vec<usize>, name: &'static str) -> Self {
+        FixedOrder { order, name }
+    }
+}
+
+impl OrderPolicy for FixedOrder {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn epoch_order(&mut self, _epoch: usize) -> Vec<usize> {
+        self.order.clone()
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.order.len() * std::mem::size_of::<usize>()
+    }
+}
+
+/// One-step GraB (Fig. 3): run GraB during epoch 0 only, then freeze the
+/// order it produced for all later epochs.
+pub struct OneStepGraB {
+    inner: GraBOrder,
+    frozen: Option<Vec<usize>>,
+}
+
+impl OneStepGraB {
+    pub fn new(inner: GraBOrder) -> Self {
+        OneStepGraB { inner, frozen: None }
+    }
+}
+
+impl OrderPolicy for OneStepGraB {
+    fn name(&self) -> &'static str {
+        "grab-1step"
+    }
+
+    fn epoch_order(&mut self, epoch: usize) -> Vec<usize> {
+        match &self.frozen {
+            Some(o) => o.clone(),
+            None => self.inner.epoch_order(epoch),
+        }
+    }
+
+    fn observe(&mut self, pos: usize, grad: &[f32]) {
+        if self.frozen.is_none() {
+            self.inner.observe(pos, grad);
+        }
+    }
+
+    fn epoch_end(&mut self) {
+        if self.frozen.is_none() {
+            self.inner.epoch_end();
+            self.frozen = Some(self.inner.epoch_order(1));
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.frozen
+            .as_ref()
+            .map(|o| o.len() * std::mem::size_of::<usize>())
+            .unwrap_or_else(|| self.inner.state_bytes())
+    }
+
+    fn wants_grads(&self) -> bool {
+        self.frozen.is_none()
+    }
+}
+
+/// Build the policy requested by a [`TrainConfig`] over `n` units of
+/// dimension `d`. `retrain_order` supplies the fixed permutation for
+/// [`OrderingKind::RetrainFromGraB`].
+pub fn build_policy(
+    cfg: &TrainConfig,
+    n: usize,
+    d: usize,
+    retrain_order: Option<Vec<usize>>,
+) -> Result<Box<dyn OrderPolicy>> {
+    // Coarse granularity (paper §granularity): build the inner policy over
+    // n/gs groups and expand. Fixed-order policies are exempt (they are
+    // already permutations over examples).
+    if cfg.group_size > 1
+        && !matches!(cfg.ordering, OrderingKind::RetrainFromGraB)
+    {
+        let groups = n.div_ceil(cfg.group_size);
+        let mut inner_cfg = cfg.clone();
+        inner_cfg.group_size = 1;
+        let inner = build_policy(&inner_cfg, groups, d, None)?;
+        return Ok(Box::new(granularity::GroupedOrder::new(
+            n, d, cfg.group_size, inner,
+        )));
+    }
+    let seed = cfg.seed;
+    Ok(match cfg.ordering {
+        OrderingKind::RandomReshuffle => {
+            Box::new(RandomReshuffle::new(n, seed))
+        }
+        OrderingKind::ShuffleOnce => Box::new(ShuffleOnce::new(n, seed)),
+        OrderingKind::FlipFlop => Box::new(FlipFlop::new(n, seed)),
+        OrderingKind::Sequential => Box::new(Sequential::new(n)),
+        OrderingKind::GreedyOrdering => Box::new(GreedyOrder::new(n, d)),
+        OrderingKind::GraB => {
+            Box::new(grab_from_cfg(cfg, n, d))
+        }
+        OrderingKind::OneStepGraB => {
+            Box::new(OneStepGraB::new(grab_from_cfg(cfg, n, d)))
+        }
+        OrderingKind::RetrainFromGraB => {
+            let order = retrain_order.ok_or_else(|| {
+                anyhow::anyhow!(
+                    "retrain-from-grab needs a source order \
+                     (run GraB first)"
+                )
+            })?;
+            anyhow::ensure!(order.len() == n, "retrain order length");
+            Box::new(FixedOrder::new(order, "grab-retrain"))
+        }
+    })
+}
+
+fn grab_from_cfg(cfg: &TrainConfig, n: usize, d: usize) -> GraBOrder {
+    let balancer: Box<dyn crate::balance::Balancer + Send> =
+        match cfg.balancer {
+            BalancerKind::Deterministic | BalancerKind::Kernel => {
+                Box::new(crate::balance::DeterministicBalancer)
+            }
+            BalancerKind::Walk => {
+                let c = if cfg.walk_c > 0.0 {
+                    cfg.walk_c
+                } else {
+                    crate::balance::WalkBalancer::theorem_c(n, d, 0.01)
+                };
+                Box::new(crate::balance::WalkBalancer::new(c, cfg.seed))
+            }
+        };
+    GraBOrder::new(n, d, balancer)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::assert_permutation;
+
+    #[test]
+    fn rr_fresh_permutation_each_epoch() {
+        let mut rr = RandomReshuffle::new(100, 0);
+        let a = rr.epoch_order(0);
+        let b = rr.epoch_order(1);
+        assert_permutation(&a).unwrap();
+        assert_permutation(&b).unwrap();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn so_same_every_epoch() {
+        let mut so = ShuffleOnce::new(50, 1);
+        assert_eq!(so.epoch_order(0), so.epoch_order(7));
+        assert_permutation(&so.epoch_order(0)).unwrap();
+    }
+
+    #[test]
+    fn flipflop_reverses_odd_epochs() {
+        let mut ff = FlipFlop::new(20, 2);
+        let e0 = ff.epoch_order(0);
+        let e1 = ff.epoch_order(1);
+        let mut rev = e0.clone();
+        rev.reverse();
+        assert_eq!(e1, rev);
+        let e2 = ff.epoch_order(2);
+        assert_ne!(e2, e0, "even epoch reshuffles");
+        assert_permutation(&e2).unwrap();
+    }
+
+    #[test]
+    fn sequential_identity() {
+        let mut s = Sequential::new(5);
+        assert_eq!(s.epoch_order(3), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn fixed_order_replays() {
+        let mut f = FixedOrder::new(vec![2, 0, 1], "grab-retrain");
+        assert_eq!(f.epoch_order(0), vec![2, 0, 1]);
+        assert_eq!(f.epoch_order(9), vec![2, 0, 1]);
+    }
+
+    #[test]
+    fn build_policy_all_kinds() {
+        let mut cfg = TrainConfig::default();
+        for kind in [
+            OrderingKind::RandomReshuffle,
+            OrderingKind::ShuffleOnce,
+            OrderingKind::FlipFlop,
+            OrderingKind::GreedyOrdering,
+            OrderingKind::GraB,
+            OrderingKind::OneStepGraB,
+            OrderingKind::Sequential,
+        ] {
+            cfg.ordering = kind;
+            let p = build_policy(&cfg, 16, 4, None).unwrap();
+            assert!(!p.name().is_empty());
+        }
+        cfg.ordering = OrderingKind::RetrainFromGraB;
+        assert!(build_policy(&cfg, 16, 4, None).is_err());
+        let p = build_policy(&cfg, 3, 4, Some(vec![2, 1, 0])).unwrap();
+        assert_eq!(p.name(), "grab-retrain");
+    }
+
+    #[test]
+    fn onestep_freezes_after_first_epoch() {
+        let cfg = TrainConfig::default();
+        let inner = super::grab_from_cfg(&cfg, 8, 2);
+        let mut p = OneStepGraB::new(inner);
+        let _e0 = p.epoch_order(0);
+        assert!(p.wants_grads());
+        for pos in 0..8 {
+            p.observe(pos, &[pos as f32, -(pos as f32)]);
+        }
+        p.epoch_end();
+        assert!(!p.wants_grads());
+        let e1 = p.epoch_order(1);
+        let e2 = p.epoch_order(2);
+        assert_eq!(e1, e2);
+        assert_permutation(&e1).unwrap();
+    }
+}

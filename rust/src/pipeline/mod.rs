@@ -1,0 +1,364 @@
+//! Streaming pipeline — the threaded variant of the training loop.
+//!
+//! Three stages over bounded channels (std::sync::mpsc::sync_channel, so a
+//! full queue blocks the producer = backpressure):
+//!
+//! ```text
+//!   [loader thread] --HostBatch--> [grad thread] --GradOut--> [coordinator]
+//!        gather                     PJRT execute               balance +
+//!        (dataset)                  (own PJRT client)          optimizer
+//! ```
+//!
+//! The grad stage owns its *own* PJRT client/executor (PJRT handles are not
+//! Send; each thread builds its own from the artifact files). The
+//! coordinator consumes results strictly in sequence order, so GraB's
+//! sequential balance semantics are identical to the sync loop — only the
+//! gather and the XLA execution overlap with balancing. Stall counters on
+//! both queues quantify backpressure (reported in PipelineStats).
+//!
+//! The parameter vector is broadcast to the grad stage once per
+//! *accumulation window* (params only change at optimizer steps), which is
+//! what makes the overlap legal: microbatches within a window all see the
+//! same params, matching the gradient-accumulation semantics of the sync
+//! trainer.
+
+use std::sync::atomic::{AtomicU64, Ordering as AtomicOrdering};
+use std::sync::mpsc::{SyncSender, TrySendError};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::config::TrainConfig;
+use crate::data::loader::{HostBatch, Loader, Microbatch};
+use crate::data::Dataset;
+use crate::model::build_datasets;
+use crate::optim::{GradAccumulator, MomentumSgd, Scheduler};
+use crate::ordering::{build_policy, OrderPolicy};
+use crate::runtime::Runtime;
+use crate::train::{EpochMetrics, TrainResult};
+use crate::util::timer::Stopwatch;
+
+/// Work item sent to the grad stage.
+struct GradJob {
+    seq: usize,
+    mb: Microbatch,
+    host: HostBatch,
+    /// Params snapshot for this job's accumulation window.
+    params: Option<Arc<Vec<f32>>>,
+}
+
+/// Result returned by the grad stage.
+struct GradOut {
+    seq: usize,
+    mb: Microbatch,
+    losses: Vec<f32>,
+    grads: Vec<f32>,
+}
+
+/// Queue/stall statistics for one pipelined run.
+#[derive(Clone, Debug, Default)]
+pub struct PipelineStats {
+    /// Times the loader blocked on a full grad queue.
+    pub loader_stalls: u64,
+    /// Times the grad stage blocked pushing results.
+    pub grad_stalls: u64,
+    /// Microbatches processed.
+    pub batches: u64,
+}
+
+/// Pipelined trainer: same semantics as [`crate::train::Trainer`] but with
+/// gather and PJRT execution overlapped with balancing/optimizing.
+pub struct PipelineTrainer {
+    cfg: TrainConfig,
+    artifacts_dir: String,
+    pub train_ds: Dataset,
+    pub policy: Box<dyn OrderPolicy>,
+    opt: MomentumSgd,
+    sched: Scheduler,
+    pub params: Vec<f32>,
+    dim: usize,
+    batch: usize,
+    pub stats: PipelineStats,
+}
+
+impl PipelineTrainer {
+    pub fn new(cfg: TrainConfig, rt: &Runtime) -> Result<PipelineTrainer> {
+        let model_name = cfg.task.model_name();
+        let entry = rt.manifest.model(model_name)?.clone();
+        let params = rt.init_params(model_name)?;
+        let (train_ds, _eval) = build_datasets(&cfg);
+        let policy = build_policy(&cfg, train_ds.len(), entry.dim, None)?;
+        let opt = MomentumSgd::new(entry.dim, cfg.momentum,
+                                   cfg.weight_decay);
+        let sched = Scheduler::constant(cfg.lr);
+        Ok(PipelineTrainer {
+            artifacts_dir: cfg.artifacts_dir.clone(),
+            cfg,
+            train_ds,
+            policy,
+            opt,
+            sched,
+            params,
+            dim: entry.dim,
+            batch: entry.batch,
+            stats: PipelineStats::default(),
+        })
+    }
+
+    /// Run all epochs through the pipeline.
+    pub fn run(&mut self) -> Result<TrainResult> {
+        let mut epochs = Vec::with_capacity(self.cfg.epochs);
+        for epoch in 0..self.cfg.epochs {
+            epochs.push(self.run_epoch(epoch)?);
+        }
+        let final_order = self.policy.epoch_order(self.cfg.epochs);
+        Ok(TrainResult {
+            run_id: format!("{}-pipeline", self.cfg.run_id()),
+            epochs,
+            final_order,
+            order_state_bytes: self.policy.state_bytes(),
+        })
+    }
+
+    fn run_epoch(&mut self, epoch: usize) -> Result<EpochMetrics> {
+        let sw_epoch = Stopwatch::start();
+        let b = self.batch;
+        let d = self.dim;
+        let n = self.train_ds.len();
+        let lr = self.sched.lr();
+        let wants_grads = self.policy.wants_grads();
+        let window = b * self.cfg.accum_steps;
+
+        let order = self.policy.epoch_order(epoch);
+        let mbs: Vec<Microbatch> = Loader::new(&order, b).collect();
+        let total = mbs.len();
+
+        // Channel capacities: small and bounded => real backpressure.
+        const QCAP: usize = 4;
+        let workers = self.cfg.workers.max(1);
+        let mut job_txs = Vec::with_capacity(workers);
+        let mut job_rxs = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let (tx, rx) = std::sync::mpsc::sync_channel::<GradJob>(QCAP);
+            job_txs.push(tx);
+            job_rxs.push(rx);
+        }
+        let (out_tx, out_rx) =
+            std::sync::mpsc::sync_channel::<GradOut>(QCAP * workers);
+        let loader_stalls = Arc::new(AtomicU64::new(0));
+        let grad_stalls = Arc::new(AtomicU64::new(0));
+
+        // ---- loader stage -------------------------------------------------
+        // Microbatches shard round-robin across grad workers (see
+        // data::shard::ShardPlan for the ownership law tested there).
+        let ds = self.train_ds.clone();
+        let params0 = Arc::new(self.params.clone());
+        let ls = Arc::clone(&loader_stalls);
+        let loader = std::thread::spawn(move || {
+            let mut first_seen = vec![true; job_txs.len()];
+            for (seq, mb) in mbs.into_iter().enumerate() {
+                let w = seq % job_txs.len();
+                let mut host = HostBatch::default();
+                host.fill(&ds, &mb);
+                let job = GradJob {
+                    seq,
+                    mb,
+                    host,
+                    // Every worker's FIRST job carries the initial params.
+                    params: if std::mem::take(&mut first_seen[w]) {
+                        Some(Arc::clone(&params0))
+                    } else {
+                        None
+                    },
+                };
+                send_counting(&job_txs[w], job, &ls);
+            }
+        });
+
+        // ---- grad stage ---------------------------------------------------
+        // Each worker owns its own PJRT client (PJRT handles are not Send);
+        // params updates arrive on a per-worker channel so every worker can
+        // catch up to the coordinator's optimizer steps.
+        let mut pchan_txs = Vec::with_capacity(workers);
+        let mut grad_threads = Vec::with_capacity(workers);
+        let accum_steps = self.cfg.accum_steps;
+        for job_rx in job_rxs {
+            let (pchan_tx, pchan_rx) =
+                std::sync::mpsc::channel::<Arc<Vec<f32>>>();
+            pchan_txs.push(pchan_tx);
+            let artifacts = self.artifacts_dir.clone();
+            let model_name = self.cfg.task.model_name().to_string();
+            let gs = Arc::clone(&grad_stalls);
+            let out_tx = out_tx.clone();
+            grad_threads.push(std::thread::spawn(move || -> Result<()> {
+                let rt = Runtime::open(&artifacts)
+                    .context("grad stage runtime")?;
+                let exec = rt.grad_executor(&model_name)?;
+                let mut params: Option<Arc<Vec<f32>>> = None;
+                let mut last_window = 0usize;
+                let mut losses = Vec::new();
+                let mut grads = Vec::new();
+                while let Ok(job) = job_rx.recv() {
+                    if let Some(p) = job.params {
+                        params = Some(p);
+                    }
+                    // Optimizer steps land exactly at accumulation-window
+                    // boundaries (one window = accum_steps microbatches):
+                    // entering window W requires the post-step params of
+                    // window W-1. The coordinator broadcasts one snapshot
+                    // per step to EVERY worker, so catching up from window
+                    // a to b means receiving exactly b-a messages. This is
+                    // what keeps the pipelined run bit-identical to the
+                    // sync loop while overlapping execute with balancing.
+                    let window = job.seq / accum_steps;
+                    while last_window < window {
+                        let p = pchan_rx.recv().map_err(|_| {
+                            anyhow::anyhow!("coordinator gone")
+                        })?;
+                        params = Some(p);
+                        last_window += 1;
+                    }
+                    let p = params.as_ref().expect("params snapshot");
+                    exec.run(
+                        p, &job.host.x_f32, &job.host.x_i32, &job.host.y,
+                        &mut losses, &mut grads,
+                    )?;
+                    let out = GradOut {
+                        seq: job.seq,
+                        mb: job.mb,
+                        losses: losses.clone(),
+                        grads: grads.clone(),
+                    };
+                    send_counting(&out_tx, out, &gs);
+                }
+                Ok(())
+            }));
+        }
+        drop(out_tx);
+
+        // ---- coordinator (this thread): balance + optimize ---------------
+        let mut accum = GradAccumulator::new(d, window);
+        let mut loss_sum = 0.0f64;
+        let mut order_secs = 0.0f64;
+        let mut steps = 0usize;
+        let mut next_seq = 0usize;
+        // Reassembly buffer: results may arrive out of order across
+        // workers; GraB's balance is sequential, so consume strictly by
+        // sequence number.
+        let mut pending: std::collections::BTreeMap<usize, GradOut> =
+            std::collections::BTreeMap::new();
+        while next_seq < total {
+            let out = if let Some(o) = pending.remove(&next_seq) {
+                o
+            } else {
+                let o = out_rx
+                    .recv()
+                    .map_err(|_| anyhow::anyhow!("grad stage died"))?;
+                if o.seq != next_seq {
+                    pending.insert(o.seq, o);
+                    continue;
+                }
+                o
+            };
+            next_seq += 1;
+            for i in 0..out.mb.valid {
+                let g = &out.grads[i * d..(i + 1) * d];
+                loss_sum += out.losses[i] as f64;
+                if wants_grads {
+                    let sw = Stopwatch::start();
+                    self.policy.observe(out.mb.offset + i, g);
+                    order_secs += sw.secs();
+                }
+                if let Some(mean) = accum.push(g) {
+                    let mut mean = mean.to_vec();
+                    crate::optim::clip_global_norm(
+                        &mut mean, self.cfg.clip_norm);
+                    self.opt.step(&mut self.params, &mean, lr);
+                    accum.clear();
+                    steps += 1;
+                    // Broadcast fresh params to every worker (they block
+                    // on this at each window boundary).
+                    let snap = Arc::new(self.params.clone());
+                    for tx in &pchan_txs {
+                        let _ = tx.send(Arc::clone(&snap));
+                    }
+                }
+            }
+        }
+        if let Some(mean) = accum.flush() {
+            let mut mean = mean.to_vec();
+            crate::optim::clip_global_norm(&mut mean, self.cfg.clip_norm);
+            self.opt.step(&mut self.params, &mean, lr);
+            steps += 1;
+        }
+        let sw = Stopwatch::start();
+        self.policy.epoch_end();
+        order_secs += sw.secs();
+
+        loader.join().expect("loader thread");
+        for t in grad_threads {
+            t.join().expect("grad thread")?;
+        }
+
+        self.stats.loader_stalls +=
+            loader_stalls.load(AtomicOrdering::Relaxed);
+        self.stats.grad_stalls +=
+            grad_stalls.load(AtomicOrdering::Relaxed);
+        self.stats.batches += total as u64;
+
+        let train_loss = loss_sum / n as f64;
+        self.sched.epoch_feedback(train_loss);
+        Ok(EpochMetrics {
+            epoch,
+            train_loss,
+            eval_loss: None,
+            eval_acc: None,
+            lr,
+            optimizer_steps: steps,
+            grad_secs: 0.0, // folded into epoch_secs (separate thread)
+            order_secs,
+            epoch_secs: sw_epoch.secs(),
+            order_state_bytes: self.policy.state_bytes(),
+        })
+    }
+}
+
+/// send with stall counting: try_send first, count a stall if the queue is
+/// full, then block.
+fn send_counting<T>(tx: &SyncSender<T>, value: T, stalls: &AtomicU64) {
+    match tx.try_send(value) {
+        Ok(()) => {}
+        Err(TrySendError::Full(v)) => {
+            stalls.fetch_add(1, AtomicOrdering::Relaxed);
+            let _ = tx.send(v);
+        }
+        Err(TrySendError::Disconnected(_)) => {}
+    }
+}
+
+/// Drain helper for tests: consume a receiver into a vec.
+#[cfg(test)]
+fn drain<T>(rx: std::sync::mpsc::Receiver<T>) -> Vec<T> {
+    rx.into_iter().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn send_counting_counts_full_queue() {
+        let (tx, rx) = std::sync::mpsc::sync_channel::<u32>(1);
+        let stalls = Arc::new(AtomicU64::new(0));
+        let s2 = Arc::clone(&stalls);
+        let h = std::thread::spawn(move || {
+            send_counting(&tx, 1, &s2);
+            send_counting(&tx, 2, &s2); // queue full -> stall + block
+        });
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        let got = drain(rx);
+        h.join().unwrap();
+        assert_eq!(got, vec![1, 2]);
+        assert_eq!(stalls.load(AtomicOrdering::Relaxed), 1);
+    }
+}

@@ -1,0 +1,259 @@
+//! Artifact manifest: the typed view of `artifacts/manifest.json`, the
+//! contract between the L2 compile path (aot.py) and the L3 coordinator.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::ser::Json;
+
+/// One named parameter block in the flat layout.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// Input dtype of the feature tensor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        Ok(match s {
+            "f32" => Dtype::F32,
+            "i32" => Dtype::I32,
+            _ => bail!("unknown dtype {s:?}"),
+        })
+    }
+}
+
+/// Model entry: shapes/dtypes of the grad and eval artifacts.
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub name: String,
+    /// Flat parameter dimension d.
+    pub dim: usize,
+    /// Grad-artifact microbatch size B.
+    pub batch: usize,
+    /// Eval-artifact batch size E.
+    pub eval_batch: usize,
+    /// Per-example feature shape (flattened product below).
+    pub x_shape: Vec<usize>,
+    pub x_dtype: Dtype,
+    /// Per-example label shape ([] = scalar).
+    pub y_shape: Vec<usize>,
+    pub n_classes: usize,
+    pub vocab: usize,
+    pub grad_hlo: String,
+    pub eval_hlo: String,
+    pub init_params: String,
+    pub param_layout: Vec<ParamSpec>,
+}
+
+impl ModelEntry {
+    /// Flattened per-example feature width.
+    pub fn x_width(&self) -> usize {
+        self.x_shape.iter().product::<usize>().max(1)
+    }
+
+    /// Flattened per-example label width (1 for scalar labels).
+    pub fn y_width(&self) -> usize {
+        self.y_shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// Balance-kernel entry.
+#[derive(Clone, Debug)]
+pub struct BalanceEntry {
+    pub dim: usize,
+    pub hlo: String,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub models: Vec<ModelEntry>,
+    pub balance: Vec<BalanceEntry>,
+    /// Fused momentum-SGD optimizer artifacts (optional — older manifests
+    /// predate them).
+    pub sgd: Vec<BalanceEntry>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let json = Json::from_file(path)?;
+        Manifest::from_json(&json)
+            .with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn from_json(json: &Json) -> Result<Manifest> {
+        let format = json.get("format")?.as_usize()?;
+        if format != 1 {
+            bail!("unsupported manifest format {format}");
+        }
+        let mut models = Vec::new();
+        for m in json.get("models")?.as_arr()? {
+            models.push(parse_model(m)?);
+        }
+        let mut balance = Vec::new();
+        for b in json.get("balance")?.as_arr()? {
+            balance.push(BalanceEntry {
+                dim: b.get("dim")?.as_usize()?,
+                hlo: b.get("hlo")?.as_str()?.to_string(),
+            });
+        }
+        let mut sgd = Vec::new();
+        if let Ok(arr) = json.get("sgd") {
+            for b in arr.as_arr()? {
+                sgd.push(BalanceEntry {
+                    dim: b.get("dim")?.as_usize()?,
+                    hlo: b.get("hlo")?.as_str()?.to_string(),
+                });
+            }
+        }
+        Ok(Manifest { models, balance, sgd })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .iter()
+            .find(|m| m.name == name)
+            .with_context(|| {
+                format!(
+                    "model {name:?} not in manifest (have: {})",
+                    self.models
+                        .iter()
+                        .map(|m| m.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })
+    }
+}
+
+fn parse_model(m: &Json) -> Result<ModelEntry> {
+    let usize_arr = |key: &str| -> Result<Vec<usize>> {
+        m.get(key)?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_usize())
+            .collect()
+    };
+    let mut param_layout = Vec::new();
+    for p in m.get("param_layout")?.as_arr()? {
+        param_layout.push(ParamSpec {
+            name: p.get("name")?.as_str()?.to_string(),
+            shape: p
+                .get("shape")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_usize())
+                .collect::<Result<Vec<_>>>()?,
+            offset: p.get("offset")?.as_usize()?,
+            size: p.get("size")?.as_usize()?,
+        });
+    }
+    let entry = ModelEntry {
+        name: m.get("name")?.as_str()?.to_string(),
+        dim: m.get("dim")?.as_usize()?,
+        batch: m.get("batch")?.as_usize()?,
+        eval_batch: m.get("eval_batch")?.as_usize()?,
+        x_shape: usize_arr("x_shape")?,
+        x_dtype: Dtype::parse(m.get("x_dtype")?.as_str()?)?,
+        y_shape: usize_arr("y_shape")?,
+        n_classes: m.get("n_classes")?.as_usize()?,
+        vocab: m.get("vocab")?.as_usize()?,
+        grad_hlo: m.get("grad_hlo")?.as_str()?.to_string(),
+        eval_hlo: m.get("eval_hlo")?.as_str()?.to_string(),
+        init_params: m.get("init_params")?.as_str()?.to_string(),
+        param_layout,
+    };
+    // Layout consistency: offsets contiguous, sizes sum to dim.
+    let mut off = 0usize;
+    for p in &entry.param_layout {
+        if p.offset != off {
+            bail!("param {} offset {} != expected {off}", p.name, p.offset);
+        }
+        let numel: usize = p.shape.iter().product::<usize>().max(1);
+        if numel != p.size {
+            bail!("param {} shape/size mismatch", p.name);
+        }
+        off += p.size;
+    }
+    if off != entry.dim {
+        bail!("param layout sums to {off}, dim is {}", entry.dim);
+    }
+    Ok(entry)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Json {
+        Json::parse(
+            r#"{
+  "format": 1,
+  "models": [{
+    "name": "logreg", "dim": 7850, "batch": 64, "eval_batch": 256,
+    "x_shape": [784], "x_dtype": "f32", "y_shape": [], "y_dtype": "i32",
+    "n_classes": 10, "vocab": 0,
+    "grad_hlo": "logreg_grad.hlo.txt", "eval_hlo": "logreg_eval.hlo.txt",
+    "init_params": "logreg_init.f32",
+    "param_layout": [
+      {"name": "w", "shape": [784, 10], "offset": 0, "size": 7840},
+      {"name": "b", "shape": [10], "offset": 7840, "size": 10}
+    ]
+  }],
+  "balance": [{"dim": 1024, "hlo": "balance_1024.hlo.txt"}]
+}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_sample() {
+        let man = Manifest::from_json(&sample()).unwrap();
+        assert_eq!(man.models.len(), 1);
+        let m = man.model("logreg").unwrap();
+        assert_eq!(m.dim, 7850);
+        assert_eq!(m.x_width(), 784);
+        assert_eq!(m.y_width(), 1);
+        assert_eq!(m.x_dtype, Dtype::F32);
+        assert_eq!(man.balance[0].dim, 1024);
+        assert!(man.model("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_layout() {
+        let mut text = sample().to_string();
+        text = text.replace("\"offset\":7840", "\"offset\":7000");
+        let json = Json::parse(&text).unwrap();
+        assert!(Manifest::from_json(&json).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let text = sample().to_string().replace(
+            "\"format\":1", "\"format\":99");
+        let json = Json::parse(&text).unwrap();
+        assert!(Manifest::from_json(&json).is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_if_built() {
+        let path = std::path::Path::new("artifacts/manifest.json");
+        if path.exists() {
+            let man = Manifest::load(path).unwrap();
+            assert!(man.model("logreg").is_ok());
+            assert!(man.model("transformer").is_ok());
+            assert_eq!(man.balance.len(), 2);
+        }
+    }
+}

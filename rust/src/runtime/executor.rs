@@ -1,0 +1,235 @@
+//! Typed executors over the compiled HLO artifacts.
+//!
+//! Each executor owns one `PjRtLoadedExecutable` and knows the artifact's
+//! input/output shapes from the manifest, so the trainer deals only in
+//! plain slices. All artifacts are lowered with `return_tuple=True`, so
+//! outputs unwrap with `to_tupleN`.
+
+use anyhow::{ensure, Result};
+
+use super::artifact::{BalanceEntry, Dtype, ModelEntry};
+
+fn xerr(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("xla: {e:?}")
+}
+
+/// Per-example gradient executor:
+/// `(params[d], X[B, xw], Y[B, yw]) -> (losses[B], grads[B, d])`.
+pub struct GradExecutor {
+    pub entry: ModelEntry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl GradExecutor {
+    pub fn new(entry: ModelEntry, exe: xla::PjRtLoadedExecutable) -> Self {
+        GradExecutor { entry, exe }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.entry.batch
+    }
+
+    pub fn dim(&self) -> usize {
+        self.entry.dim
+    }
+
+    /// Run one microbatch. Exactly one of `x_f32` / `x_i32` must be
+    /// non-empty, matching the artifact's feature dtype. Outputs are
+    /// written into `losses` (B) and `grads` (B*d), reused across calls.
+    pub fn run(
+        &self,
+        params: &[f32],
+        x_f32: &[f32],
+        x_i32: &[i32],
+        y: &[i32],
+        losses: &mut Vec<f32>,
+        grads: &mut Vec<f32>,
+    ) -> Result<()> {
+        let b = self.entry.batch;
+        let d = self.entry.dim;
+        let xw = self.entry.x_width();
+        let yw = self.entry.y_width();
+        ensure!(params.len() == d, "params len {} != d {d}", params.len());
+        ensure!(y.len() == b * yw, "y len {} != {}", y.len(), b * yw);
+
+        let p_lit = xla::Literal::vec1(params);
+        let x_lit = match self.entry.x_dtype {
+            Dtype::F32 => {
+                ensure!(x_f32.len() == b * xw, "x len {}", x_f32.len());
+                xla::Literal::vec1(x_f32)
+                    .reshape(&[b as i64, xw as i64])
+                    .map_err(xerr)?
+            }
+            Dtype::I32 => {
+                ensure!(x_i32.len() == b * xw, "x len {}", x_i32.len());
+                xla::Literal::vec1(x_i32)
+                    .reshape(&[b as i64, xw as i64])
+                    .map_err(xerr)?
+            }
+        };
+        let y_lit = if yw == 1 {
+            xla::Literal::vec1(y)
+        } else {
+            xla::Literal::vec1(y)
+                .reshape(&[b as i64, yw as i64])
+                .map_err(xerr)?
+        };
+
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[p_lit, x_lit, y_lit])
+            .map_err(xerr)?;
+        let tuple =
+            result[0][0].to_literal_sync().map_err(xerr)?;
+        let (l_lit, g_lit) = tuple.to_tuple2().map_err(xerr)?;
+        *losses = l_lit.to_vec::<f32>().map_err(xerr)?;
+        *grads = g_lit.to_vec::<f32>().map_err(xerr)?;
+        ensure!(losses.len() == b, "losses len {}", losses.len());
+        ensure!(grads.len() == b * d, "grads len {}", grads.len());
+        Ok(())
+    }
+}
+
+/// Evaluation executor:
+/// `(params[d], X[E, xw], Y[E, yw]) -> (loss_sum, correct)`.
+pub struct EvalExecutor {
+    pub entry: ModelEntry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl EvalExecutor {
+    pub fn new(entry: ModelEntry, exe: xla::PjRtLoadedExecutable) -> Self {
+        EvalExecutor { entry, exe }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.entry.eval_batch
+    }
+
+    /// Returns (summed loss, correct count) over one eval batch.
+    pub fn run(
+        &self,
+        params: &[f32],
+        x_f32: &[f32],
+        x_i32: &[i32],
+        y: &[i32],
+    ) -> Result<(f32, f32)> {
+        let e = self.entry.eval_batch;
+        let xw = self.entry.x_width();
+        let yw = self.entry.y_width();
+        ensure!(params.len() == self.entry.dim);
+        let p_lit = xla::Literal::vec1(params);
+        let x_lit = match self.entry.x_dtype {
+            Dtype::F32 => {
+                ensure!(x_f32.len() == e * xw);
+                xla::Literal::vec1(x_f32)
+                    .reshape(&[e as i64, xw as i64])
+                    .map_err(xerr)?
+            }
+            Dtype::I32 => {
+                ensure!(x_i32.len() == e * xw);
+                xla::Literal::vec1(x_i32)
+                    .reshape(&[e as i64, xw as i64])
+                    .map_err(xerr)?
+            }
+        };
+        let y_lit = if yw == 1 {
+            xla::Literal::vec1(y)
+        } else {
+            xla::Literal::vec1(y)
+                .reshape(&[e as i64, yw as i64])
+                .map_err(xerr)?
+        };
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[p_lit, x_lit, y_lit])
+            .map_err(xerr)?;
+        let tuple = result[0][0].to_literal_sync().map_err(xerr)?;
+        let (l_lit, c_lit) = tuple.to_tuple2().map_err(xerr)?;
+        let loss = l_lit.to_vec::<f32>().map_err(xerr)?[0];
+        let correct = c_lit.to_vec::<f32>().map_err(xerr)?[0];
+        Ok((loss, correct))
+    }
+}
+
+/// GraB balance-step executor (the Pallas L1 kernel artifact):
+/// `(s[d], m[d], g[d]) -> (eps, s_new[d], c[d])`.
+pub struct BalanceExecutor {
+    pub entry: BalanceEntry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl BalanceExecutor {
+    pub fn new(entry: BalanceEntry, exe: xla::PjRtLoadedExecutable) -> Self {
+        BalanceExecutor { entry, exe }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.entry.dim
+    }
+
+    /// One fused balance step; returns eps and overwrites `s` in place.
+    pub fn step(&self, s: &mut Vec<f32>, m: &[f32], g: &[f32])
+        -> Result<f32> {
+        let d = self.entry.dim;
+        ensure!(s.len() == d && m.len() == d && g.len() == d);
+        let s_lit = xla::Literal::vec1(s.as_slice());
+        let m_lit = xla::Literal::vec1(m);
+        let g_lit = xla::Literal::vec1(g);
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[s_lit, m_lit, g_lit])
+            .map_err(xerr)?;
+        let tuple = result[0][0].to_literal_sync().map_err(xerr)?;
+        let (eps_lit, s_new, _c) = tuple.to_tuple3().map_err(xerr)?;
+        let eps = eps_lit.to_vec::<f32>().map_err(xerr)?[0];
+        *s = s_new.to_vec::<f32>().map_err(xerr)?;
+        Ok(eps)
+    }
+}
+
+/// Fused momentum-SGD optimizer executor (the L1 Pallas kernel artifact):
+/// `(p[d], v[d], g[d], hyper[3]=(lr,mu,wd)) -> (p', v')`.
+pub struct SgdExecutor {
+    pub entry: BalanceEntry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl SgdExecutor {
+    pub fn new(entry: BalanceEntry, exe: xla::PjRtLoadedExecutable) -> Self {
+        SgdExecutor { entry, exe }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.entry.dim
+    }
+
+    /// One fused optimizer step; overwrites `p` and `v` in place.
+    pub fn step(
+        &self,
+        p: &mut Vec<f32>,
+        v: &mut Vec<f32>,
+        g: &[f32],
+        lr: f32,
+        momentum: f32,
+        weight_decay: f32,
+    ) -> Result<()> {
+        let d = self.entry.dim;
+        ensure!(p.len() == d && v.len() == d && g.len() == d);
+        let hyper = [lr, momentum, weight_decay];
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[
+                xla::Literal::vec1(p.as_slice()),
+                xla::Literal::vec1(v.as_slice()),
+                xla::Literal::vec1(g),
+                xla::Literal::vec1(&hyper),
+            ])
+            .map_err(xerr)?;
+        let tuple = result[0][0].to_literal_sync().map_err(xerr)?;
+        let (p_new, v_new) = tuple.to_tuple2().map_err(xerr)?;
+        *p = p_new.to_vec::<f32>().map_err(xerr)?;
+        *v = v_new.to_vec::<f32>().map_err(xerr)?;
+        Ok(())
+    }
+}

@@ -1,0 +1,125 @@
+//! PJRT runtime — loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the rust request path.
+//!
+//! Flow (see /opt/xla-example/load_hlo for the reference wiring):
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` → `execute`.
+//!
+//! HLO **text** is the interchange format: jax ≥ 0.5 serializes protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids.
+
+mod artifact;
+mod executor;
+
+pub use artifact::{BalanceEntry, Manifest, ModelEntry, ParamSpec};
+pub use executor::{BalanceExecutor, EvalExecutor, GradExecutor, SgdExecutor};
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+/// Shared PJRT client + artifact directory. Compiling an HLO module is
+/// expensive; executables are cached per artifact file by the executors.
+pub struct Runtime {
+    client: Arc<xla::PjRtClient>,
+    dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    /// Open the artifact directory (reads `manifest.json`, starts the CPU
+    /// PJRT client).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| {
+                format!(
+                    "loading manifest from {} — run `make artifacts` first",
+                    dir.display()
+                )
+            })?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Runtime { client: Arc::new(client), dir, manifest })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile one HLO-text artifact into a loaded executable.
+    pub fn compile(&self, file: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| {
+                anyhow::anyhow!("parsing {}: {e:?}", path.display())
+            })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {file}: {e:?}"))
+    }
+
+    /// Grad executor for a model (per-example losses + gradients).
+    pub fn grad_executor(&self, model: &str) -> Result<GradExecutor> {
+        let entry = self.manifest.model(model)?.clone();
+        let exe = self.compile(&entry.grad_hlo)?;
+        Ok(GradExecutor::new(entry, exe))
+    }
+
+    /// Eval executor for a model (summed loss + correct count).
+    pub fn eval_executor(&self, model: &str) -> Result<EvalExecutor> {
+        let entry = self.manifest.model(model)?.clone();
+        let exe = self.compile(&entry.eval_hlo)?;
+        Ok(EvalExecutor::new(entry, exe))
+    }
+
+    /// Balance-step executor (the L1 Pallas kernel artifact) for dim `d`.
+    pub fn balance_executor(&self, d: usize) -> Result<BalanceExecutor> {
+        let entry = self
+            .manifest
+            .balance
+            .iter()
+            .find(|b| b.dim == d)
+            .with_context(|| format!("no balance artifact for d={d}"))?
+            .clone();
+        let exe = self.compile(&entry.hlo)?;
+        Ok(BalanceExecutor::new(entry, exe))
+    }
+
+    /// Fused momentum-SGD optimizer executor (the L1 Pallas sgd kernel).
+    pub fn sgd_executor(&self, d: usize) -> Result<SgdExecutor> {
+        let entry = self
+            .manifest
+            .sgd
+            .iter()
+            .find(|b| b.dim == d)
+            .with_context(|| {
+                format!("no sgd artifact for d={d} (re-run `make artifacts`)")
+            })?
+            .clone();
+        let exe = self.compile(&entry.hlo)?;
+        Ok(SgdExecutor::new(entry, exe))
+    }
+
+    /// Initial parameters for a model (little-endian f32 file from aot.py).
+    pub fn init_params(&self, model: &str) -> Result<Vec<f32>> {
+        let entry = self.manifest.model(model)?;
+        let path = self.dir.join(&entry.init_params);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        anyhow::ensure!(
+            bytes.len() == entry.dim * 4,
+            "init file {} has {} bytes, want {}",
+            path.display(),
+            bytes.len(),
+            entry.dim * 4
+        );
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}

@@ -1,0 +1,324 @@
+//! Dense f32 vector math used on the L3 hot path.
+//!
+//! The GraB inner loop is two fused reductions (`dot`) plus a signed update
+//! (`axpy`) per example; everything here is written allocation-free over
+//! caller-provided slices. `dot`/`axpy` use 8-lane manual unrolling so LLVM
+//! reliably vectorizes them (measured in benches/balance_hot.rs; see
+//! EXPERIMENTS.md §Perf for the before/after of naive vs unrolled).
+
+/// Dot product with 8-way unrolled accumulators.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    let chunks = a.len() / 8;
+    let mut acc = [0.0f32; 8];
+    for i in 0..chunks {
+        let off = i * 8;
+        for lane in 0..8 {
+            acc[lane] += a[off + lane] * b[off + lane];
+        }
+    }
+    let mut tail = 0.0f32;
+    for i in chunks * 8..a.len() {
+        tail += a[i] * b[i];
+    }
+    acc.iter().sum::<f32>() + tail
+}
+
+/// Naive scalar dot (kept for the perf ablation in benches/balance_hot.rs).
+pub fn dot_naive(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// `y += alpha * x`, 8-way unrolled.
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    let chunks = x.len() / 8;
+    for i in 0..chunks {
+        let off = i * 8;
+        for lane in 0..8 {
+            y[off + lane] += alpha * x[off + lane];
+        }
+    }
+    for i in chunks * 8..x.len() {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// `out = a - b` (centered gradient), allocation-free.
+pub fn sub_into(a: &[f32], b: &[f32], out: &mut [f32]) {
+    assert_eq!(a.len(), b.len());
+    assert_eq!(a.len(), out.len());
+    for ((o, x), y) in out.iter_mut().zip(a).zip(b) {
+        *o = x - y;
+    }
+}
+
+/// Fused GraB decision statistic: returns `<s, g - m>` in one pass without
+/// materializing the centered vector. Equivalent to
+/// `dot(s, c)` with `c = g - m`, but with a single read of each operand.
+pub fn dot_centered(s: &[f32], g: &[f32], m: &[f32]) -> f32 {
+    assert_eq!(s.len(), g.len());
+    assert_eq!(s.len(), m.len());
+    // chunks_exact + fixed-size destructuring removes bounds checks and
+    // lets LLVM keep 8 independent FMA accumulators (§Perf iteration 3).
+    let mut acc = [0.0f32; 8];
+    let (sc, st) = s.split_at(s.len() - s.len() % 8);
+    let (gc, gt) = g.split_at(sc.len());
+    let (mc, mt) = m.split_at(sc.len());
+    for ((sv, gv), mv) in sc
+        .chunks_exact(8)
+        .zip(gc.chunks_exact(8))
+        .zip(mc.chunks_exact(8))
+    {
+        for lane in 0..8 {
+            acc[lane] += sv[lane] * (gv[lane] - mv[lane]);
+        }
+    }
+    let mut tail = 0.0f32;
+    for i in 0..st.len() {
+        tail += st[i] * (gt[i] - mt[i]);
+    }
+    acc.iter().sum::<f32>() + tail
+}
+
+/// Fused signed update: `s += eps * (g - m)` in one pass.
+pub fn axpy_centered(eps: f32, g: &[f32], m: &[f32], s: &mut [f32]) {
+    assert_eq!(s.len(), g.len());
+    assert_eq!(s.len(), m.len());
+    let chunks = s.len() / 8;
+    for i in 0..chunks {
+        let off = i * 8;
+        for lane in 0..8 {
+            s[off + lane] += eps * (g[off + lane] - m[off + lane]);
+        }
+    }
+    for i in chunks * 8..s.len() {
+        s[i] += eps * (g[i] - m[i]);
+    }
+}
+
+/// Fully fused GraB observe update: in ONE pass over the operands,
+/// `s += eps * (g - m)` and `fresh += inv_n * g`. Saves a full re-read of
+/// `g` vs doing the two updates separately (see EXPERIMENTS.md §Perf).
+pub fn grab_update(
+    eps: f32,
+    inv_n: f32,
+    g: &[f32],
+    m: &[f32],
+    s: &mut [f32],
+    fresh: &mut [f32],
+) {
+    assert_eq!(g.len(), m.len());
+    assert_eq!(g.len(), s.len());
+    assert_eq!(g.len(), fresh.len());
+    let split = g.len() - g.len() % 8;
+    let (gc, gt) = g.split_at(split);
+    let (mc, mt) = m.split_at(split);
+    let (sc, st) = s.split_at_mut(split);
+    let (fc, ft) = fresh.split_at_mut(split);
+    for (((gv, mv), sv), fv) in gc
+        .chunks_exact(8)
+        .zip(mc.chunks_exact(8))
+        .zip(sc.chunks_exact_mut(8))
+        .zip(fc.chunks_exact_mut(8))
+    {
+        for lane in 0..8 {
+            let gl = gv[lane];
+            sv[lane] += eps * (gl - mv[lane]);
+            fv[lane] += inv_n * gl;
+        }
+    }
+    for i in 0..gt.len() {
+        let gl = gt[i];
+        st[i] += eps * (gl - mt[i]);
+        ft[i] += inv_n * gl;
+    }
+}
+
+/// ℓ2 norm.
+pub fn norm2(a: &[f32]) -> f32 {
+    dot(a, a).sqrt()
+}
+
+/// ℓ∞ norm.
+pub fn norm_inf(a: &[f32]) -> f32 {
+    a.iter().fold(0.0f32, |m, x| m.max(x.abs()))
+}
+
+/// Elementwise add into accumulator.
+pub fn add_into(acc: &mut [f32], x: &[f32]) {
+    assert_eq!(acc.len(), x.len());
+    for (a, v) in acc.iter_mut().zip(x) {
+        *a += v;
+    }
+}
+
+/// Scale in place.
+pub fn scale(a: &mut [f32], alpha: f32) {
+    for v in a.iter_mut() {
+        *v *= alpha;
+    }
+}
+
+/// Fill with zeros.
+pub fn zero(a: &mut [f32]) {
+    a.iter_mut().for_each(|v| *v = 0.0);
+}
+
+/// Mean of a set of equal-length vectors into `out`.
+pub fn mean_into(vs: &[Vec<f32>], out: &mut [f32]) {
+    zero(out);
+    if vs.is_empty() {
+        return;
+    }
+    for v in vs {
+        add_into(out, v);
+    }
+    scale(out, 1.0 / vs.len() as f32);
+}
+
+/// Running maxima of prefix-sum norms (ℓ∞ and ℓ2) over vectors visited in
+/// `order` — the herding objective of Eq. (3). Single pass, one scratch sum.
+pub fn prefix_bounds(
+    vs: &[Vec<f32>],
+    center: &[f32],
+    order: &[usize],
+) -> (f32, f32) {
+    let d = center.len();
+    let mut sum = vec![0.0f32; d];
+    let mut max_inf = 0.0f32;
+    let mut max_l2 = 0.0f32;
+    for &i in order {
+        for j in 0..d {
+            sum[j] += vs[i][j] - center[j];
+        }
+        max_inf = max_inf.max(norm_inf(&sum));
+        max_l2 = max_l2.max(norm2(&sum));
+    }
+    (max_inf, max_l2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rvec(rng: &mut Rng, d: usize) -> Vec<f32> {
+        (0..d).map(|_| rng.gauss() as f32).collect()
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let mut rng = Rng::new(1);
+        for d in [0usize, 1, 7, 8, 9, 63, 64, 65, 1000] {
+            let a = rvec(&mut rng, d);
+            let b = rvec(&mut rng, d);
+            let fast = dot(&a, &b);
+            let naive = dot_naive(&a, &b);
+            assert!(
+                (fast - naive).abs() <= 1e-3 * (1.0 + naive.abs()),
+                "d={d}: {fast} vs {naive}"
+            );
+        }
+    }
+
+    #[test]
+    fn axpy_matches_reference() {
+        let mut rng = Rng::new(2);
+        for d in [1usize, 8, 13, 256] {
+            let x = rvec(&mut rng, d);
+            let mut y = rvec(&mut rng, d);
+            let mut want = y.clone();
+            axpy(0.5, &x, &mut y);
+            for (w, xv) in want.iter_mut().zip(&x) {
+                *w += 0.5 * xv;
+            }
+            for (a, b) in y.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn fused_centered_ops_match_two_step() {
+        let mut rng = Rng::new(3);
+        let d = 777;
+        let s = rvec(&mut rng, d);
+        let g = rvec(&mut rng, d);
+        let m = rvec(&mut rng, d);
+        let mut c = vec![0.0f32; d];
+        sub_into(&g, &m, &mut c);
+        let two_step = dot(&s, &c);
+        let fused = dot_centered(&s, &g, &m);
+        assert!((two_step - fused).abs() < 1e-3);
+
+        let mut s1 = s.clone();
+        let mut s2 = s.clone();
+        axpy(-1.0, &c, &mut s1);
+        axpy_centered(-1.0, &g, &m, &mut s2);
+        for (a, b) in s1.iter().zip(&s2) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn grab_update_matches_two_step() {
+        let mut rng = Rng::new(9);
+        let d = 333;
+        let g = rvec(&mut rng, d);
+        let m = rvec(&mut rng, d);
+        let mut s1 = rvec(&mut rng, d);
+        let mut f1 = rvec(&mut rng, d);
+        let mut s2 = s1.clone();
+        let mut f2 = f1.clone();
+        grab_update(-1.0, 0.25, &g, &m, &mut s1, &mut f1);
+        axpy_centered(-1.0, &g, &m, &mut s2);
+        axpy(0.25, &g, &mut f2);
+        for (a, b) in s1.iter().zip(&s2) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        for (a, b) in f1.iter().zip(&f2) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn norms() {
+        let v = [3.0f32, -4.0];
+        assert!((norm2(&v) - 5.0).abs() < 1e-6);
+        assert!((norm_inf(&v) - 4.0).abs() < 1e-6);
+        assert_eq!(norm_inf(&[]), 0.0);
+    }
+
+    #[test]
+    fn mean_into_works() {
+        let vs = vec![vec![1.0f32, 2.0], vec![3.0, 6.0]];
+        let mut out = vec![0.0f32; 2];
+        mean_into(&vs, &mut out);
+        assert_eq!(out, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn prefix_bounds_simple() {
+        // Two opposite vectors, centered at zero: prefix max is the first.
+        let vs = vec![vec![1.0f32, 0.0], vec![-1.0, 0.0]];
+        let center = vec![0.0f32, 0.0];
+        let (inf, l2) = prefix_bounds(&vs, &center, &[0, 1]);
+        assert!((inf - 1.0).abs() < 1e-6);
+        assert!((l2 - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn prefix_bounds_order_matters() {
+        // [1,1,-1,-1] ordering vs interleaved [1,-1,1,-1].
+        let vs: Vec<Vec<f32>> =
+            vec![vec![1.0], vec![1.0], vec![-1.0], vec![-1.0]];
+        let c = vec![0.0f32];
+        let (bad, _) = prefix_bounds(&vs, &c, &[0, 1, 2, 3]);
+        let (good, _) = prefix_bounds(&vs, &c, &[0, 2, 1, 3]);
+        assert!(bad > good);
+        assert!((bad - 2.0).abs() < 1e-6);
+        assert!((good - 1.0).abs() < 1e-6);
+    }
+}

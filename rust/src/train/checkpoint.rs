@@ -1,0 +1,194 @@
+//! Checkpointing: binary snapshots of a run (params, momentum, epoch,
+//! ordering permutation) with integrity checksums, so long paper-scale
+//! runs can resume after interruption.
+//!
+//! Format (little-endian):
+//! ```text
+//! magic "GRABCKPT" | u32 version | u32 crc32(payload) | payload
+//! payload: u64 epoch | u64 d | f32[d] params | f32[d] velocity
+//!        | u64 n | u64[n] order
+//! ```
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8; 8] = b"GRABCKPT";
+const VERSION: u32 = 1;
+
+/// One resumable snapshot.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub epoch: u64,
+    pub params: Vec<f32>,
+    pub velocity: Vec<f32>,
+    pub order: Vec<u64>,
+}
+
+/// CRC-32 (IEEE 802.3, reflected) — implemented in-tree; the vendored dep
+/// closure is reserved for the xla crate.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut table = [0u32; 256];
+    for (i, entry) in table.iter_mut().enumerate() {
+        let mut c = i as u32;
+        for _ in 0..8 {
+            c = if c & 1 != 0 {
+                0xEDB8_8320 ^ (c >> 1)
+            } else {
+                c >> 1
+            };
+        }
+        *entry = c;
+    }
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc = table[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    crc ^ 0xFFFF_FFFF
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: &Path) -> Result<()> {
+        anyhow::ensure!(self.params.len() == self.velocity.len(),
+                        "params/velocity length mismatch");
+        let mut payload = Vec::with_capacity(
+            16 + self.params.len() * 8 + self.order.len() * 8);
+        payload.extend_from_slice(&self.epoch.to_le_bytes());
+        payload.extend_from_slice(
+            &(self.params.len() as u64).to_le_bytes());
+        for v in &self.params {
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+        for v in &self.velocity {
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+        payload.extend_from_slice(
+            &(self.order.len() as u64).to_le_bytes());
+        for v in &self.order {
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        // Write to a temp file then rename: a crash mid-write never
+        // corrupts the previous checkpoint.
+        let tmp = path.with_extension("tmp");
+        {
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            f.write_all(MAGIC)?;
+            f.write_all(&VERSION.to_le_bytes())?;
+            f.write_all(&crc32(&payload).to_le_bytes())?;
+            f.write_all(&payload)?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let mut header = [0u8; 16];
+        f.read_exact(&mut header)?;
+        if &header[0..8] != MAGIC {
+            bail!("{} is not a grab checkpoint", path.display());
+        }
+        let version = u32::from_le_bytes(header[8..12].try_into()?);
+        if version != VERSION {
+            bail!("unsupported checkpoint version {version}");
+        }
+        let want_crc = u32::from_le_bytes(header[12..16].try_into()?);
+        let mut payload = Vec::new();
+        f.read_to_end(&mut payload)?;
+        if crc32(&payload) != want_crc {
+            bail!("checkpoint {} failed CRC check (corrupt/truncated)",
+                  path.display());
+        }
+        let mut off = 0usize;
+        let mut take = |n: usize| -> Result<&[u8]> {
+            let s = payload
+                .get(off..off + n)
+                .ok_or_else(|| anyhow::anyhow!("truncated payload"))?;
+            off += n;
+            Ok(s)
+        };
+        let epoch = u64::from_le_bytes(take(8)?.try_into()?);
+        let d = u64::from_le_bytes(take(8)?.try_into()?) as usize;
+        let mut params = Vec::with_capacity(d);
+        for _ in 0..d {
+            params.push(f32::from_le_bytes(take(4)?.try_into()?));
+        }
+        let mut velocity = Vec::with_capacity(d);
+        for _ in 0..d {
+            velocity.push(f32::from_le_bytes(take(4)?.try_into()?));
+        }
+        let n = u64::from_le_bytes(take(8)?.try_into()?) as usize;
+        let mut order = Vec::with_capacity(n);
+        for _ in 0..n {
+            order.push(u64::from_le_bytes(take(8)?.try_into()?));
+        }
+        if off != payload.len() {
+            bail!("trailing bytes in checkpoint");
+        }
+        Ok(Checkpoint { epoch, params, velocity, order })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            epoch: 7,
+            params: vec![1.5, -2.25, 0.0, 3.75],
+            velocity: vec![0.1, 0.2, -0.3, 0.4],
+            order: vec![3, 1, 0, 2],
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("grab_ckpt_test");
+        let path = dir.join("run.ckpt");
+        let c = sample();
+        c.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(c, back);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let dir = std::env::temp_dir().join("grab_ckpt_corrupt");
+        let path = dir.join("run.ckpt");
+        sample().save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        assert!(err.to_string().contains("CRC"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rejects_wrong_magic() {
+        let dir = std::env::temp_dir().join("grab_ckpt_magic");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"NOTAGRAB0000000000000000").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // "123456789" -> 0xCBF43926 (standard check value)
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+}

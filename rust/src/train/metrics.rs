@@ -1,0 +1,145 @@
+//! Per-epoch metrics and the CSV sink every run can stream them to.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::ser::{fmt_f, CsvWriter};
+
+/// One epoch's measurements.
+#[derive(Clone, Debug)]
+pub struct EpochMetrics {
+    pub epoch: usize,
+    /// Mean per-unit train loss over the epoch (computed on the fly, i.e.
+    /// at the parameters current when each unit was visited — the same
+    /// "training loss" curve the paper plots).
+    pub train_loss: f64,
+    pub eval_loss: Option<f64>,
+    pub eval_acc: Option<f64>,
+    pub lr: f64,
+    pub optimizer_steps: usize,
+    /// Seconds in the PJRT grad executor.
+    pub grad_secs: f64,
+    /// Seconds in the ordering policy (observe + epoch_end) — the ordering
+    /// overhead column of Table 1.
+    pub order_secs: f64,
+    pub epoch_secs: f64,
+    pub order_state_bytes: usize,
+}
+
+pub const CSV_HEADER: [&str; 10] = [
+    "epoch",
+    "train_loss",
+    "eval_loss",
+    "eval_acc",
+    "lr",
+    "optimizer_steps",
+    "grad_secs",
+    "order_secs",
+    "epoch_secs",
+    "order_state_bytes",
+];
+
+impl EpochMetrics {
+    pub fn csv_row(&self) -> Vec<String> {
+        vec![
+            self.epoch.to_string(),
+            fmt_f(self.train_loss),
+            self.eval_loss.map(fmt_f).unwrap_or_default(),
+            self.eval_acc.map(fmt_f).unwrap_or_default(),
+            fmt_f(self.lr),
+            self.optimizer_steps.to_string(),
+            fmt_f(self.grad_secs),
+            fmt_f(self.order_secs),
+            fmt_f(self.epoch_secs),
+            self.order_state_bytes.to_string(),
+        ]
+    }
+
+    /// One-line log form.
+    pub fn line(&self, tag: &str) -> String {
+        let eval = match (self.eval_loss, self.eval_acc) {
+            (Some(l), Some(a)) => {
+                format!(" eval_loss={l:.4} eval_acc={a:.3}")
+            }
+            _ => String::new(),
+        };
+        format!(
+            "[{tag}] epoch {:>3}  train_loss={:.4}{eval}  lr={:.4} \
+             grad={:.2}s order={:.3}s ({}B state)",
+            self.epoch,
+            self.train_loss,
+            self.lr,
+            self.grad_secs,
+            self.order_secs,
+            self.order_state_bytes,
+        )
+    }
+}
+
+/// CSV metrics sink.
+pub struct MetricsSink {
+    writer: CsvWriter,
+}
+
+impl MetricsSink {
+    pub fn create(path: impl AsRef<Path>) -> Result<MetricsSink> {
+        Ok(MetricsSink {
+            writer: CsvWriter::create(path.as_ref(), &CSV_HEADER)?,
+        })
+    }
+
+    pub fn push(&mut self, m: &EpochMetrics) -> Result<()> {
+        self.writer.row(&m.csv_row())?;
+        self.writer.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> EpochMetrics {
+        EpochMetrics {
+            epoch: 1,
+            train_loss: 0.5,
+            eval_loss: Some(0.6),
+            eval_acc: Some(0.9),
+            lr: 0.1,
+            optimizer_steps: 10,
+            grad_secs: 1.0,
+            order_secs: 0.01,
+            epoch_secs: 1.1,
+            order_state_bytes: 1234,
+        }
+    }
+
+    #[test]
+    fn csv_row_matches_header_len() {
+        assert_eq!(sample().csv_row().len(), CSV_HEADER.len());
+    }
+
+    #[test]
+    fn sink_writes_rows() {
+        let dir = std::env::temp_dir().join("grab_metrics_test");
+        let path = dir.join("m.csv");
+        {
+            let mut sink = MetricsSink::create(&path).unwrap();
+            sink.push(&sample()).unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        assert!(text.starts_with("epoch,train_loss"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn line_includes_eval_when_present() {
+        let m = sample();
+        assert!(m.line("x").contains("eval_acc"));
+        let mut m2 = m;
+        m2.eval_loss = None;
+        m2.eval_acc = None;
+        assert!(!m2.line("x").contains("eval_acc"));
+    }
+}

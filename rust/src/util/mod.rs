@@ -1,0 +1,10 @@
+//! Foundation utilities built in-tree (the vendored dependency closure only
+//! covers the `xla` crate, so PRNG, serialization, CLI parsing and stats are
+//! first-class substrates of this repo rather than external crates).
+
+pub mod cli;
+pub mod prop;
+pub mod rng;
+pub mod ser;
+pub mod stats;
+pub mod timer;

@@ -1,0 +1,131 @@
+//! Minimal property-based testing harness (proptest is not in the vendored
+//! dependency closure). Coordinator invariants — permutation validity,
+//! herding-bound contraction, balance-sign behaviour — are checked over
+//! randomized cases with a reported reproduction seed on failure.
+
+use super::rng::Rng;
+
+/// Number of cases per property (override with env `GRAB_PROP_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("GRAB_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop` over `cases` randomized inputs. `prop` receives a fresh RNG
+/// per case and returns `Err(msg)` to fail. Panics with the case seed so the
+/// failure is reproducible with `Rng::new(seed)`.
+pub fn forall<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let base = 0xC0FF_EE00u64;
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property {name:?} failed on case {case} \
+                 (reproduce with Rng::new({seed:#x})): {msg}"
+            );
+        }
+    }
+}
+
+/// Convenience generators used across property tests.
+pub mod gen {
+    use super::Rng;
+
+    /// Random vector of dimension `d` with entries ~ N(0, scale²).
+    pub fn gauss_vec(rng: &mut Rng, d: usize, scale: f32) -> Vec<f32> {
+        (0..d).map(|_| rng.gauss() as f32 * scale).collect()
+    }
+
+    /// A set of `n` random d-dim vectors.
+    pub fn vec_set(rng: &mut Rng, n: usize, d: usize) -> Vec<Vec<f32>> {
+        (0..n).map(|_| gauss_vec(rng, d, 1.0)).collect()
+    }
+
+    /// A set of `n` vectors that sums (numerically) to zero: pair +v/-v.
+    pub fn zero_sum_set(rng: &mut Rng, half: usize, d: usize)
+        -> Vec<Vec<f32>> {
+        let mut out = Vec::with_capacity(half * 2);
+        for _ in 0..half {
+            let v = gauss_vec(rng, d, 1.0);
+            out.push(v.iter().map(|x| -x).collect());
+            out.push(v);
+        }
+        out
+    }
+
+    /// Dimension in [1, max_d], n in [1, max_n].
+    pub fn small_dims(rng: &mut Rng, max_n: usize, max_d: usize)
+        -> (usize, usize) {
+        (
+            1 + rng.gen_range(max_n as u64) as usize,
+            1 + rng.gen_range(max_d as u64) as usize,
+        )
+    }
+}
+
+/// Assert a slice is a permutation of 0..n (shared invariant helper).
+pub fn assert_permutation(p: &[usize]) -> Result<(), String> {
+    let n = p.len();
+    let mut seen = vec![false; n];
+    for &i in p {
+        if i >= n {
+            return Err(format!("index {i} out of range (n={n})"));
+        }
+        if seen[i] {
+            return Err(format!("duplicate index {i}"));
+        }
+        seen[i] = true;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial() {
+        forall("trivial", 10, |rng| {
+            let x = rng.f64();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("out of range: {x}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn forall_reports_failure() {
+        forall("always_fails", 3, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn permutation_checker() {
+        assert!(assert_permutation(&[2, 0, 1]).is_ok());
+        assert!(assert_permutation(&[0, 0, 1]).is_err());
+        assert!(assert_permutation(&[3, 0, 1]).is_err());
+    }
+
+    #[test]
+    fn zero_sum_generator_sums_to_zero() {
+        let mut rng = Rng::new(1);
+        let set = gen::zero_sum_set(&mut rng, 8, 16);
+        let mut sum = vec![0.0f32; 16];
+        for v in &set {
+            for (s, x) in sum.iter_mut().zip(v) {
+                *s += x;
+            }
+        }
+        for s in sum {
+            assert!(s.abs() < 1e-4);
+        }
+    }
+}

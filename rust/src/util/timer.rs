@@ -1,0 +1,152 @@
+//! Timing substrate: scoped timers and the bench measurement loop used by
+//! every `benches/*.rs` target (criterion is not in the vendored closure,
+//! so the harness is built here: warmup, repeated timed batches, and a
+//! throughput-aware summary printed in a stable machine-grepable format).
+
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+/// A single named measurement series.
+pub struct Bench {
+    pub name: String,
+    warmup_iters: usize,
+    min_iters: usize,
+    max_iters: usize,
+    target: Duration,
+}
+
+/// Result of a bench run.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    /// Per-iteration wall time in seconds.
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn mean_ns(&self) -> f64 {
+        self.summary.mean * 1e9
+    }
+
+    /// Render one line: `bench <name>  mean=…  p50=…  p95=…  iters=N`.
+    pub fn line(&self) -> String {
+        format!(
+            "bench {:<44} mean={:>12} p50={:>12} p95={:>12} iters={}",
+            self.name,
+            fmt_dur(self.summary.mean),
+            fmt_dur(self.summary.p50),
+            fmt_dur(self.summary.p95),
+            self.iters
+        )
+    }
+}
+
+/// Human-friendly duration from seconds.
+pub fn fmt_dur(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1}ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2}µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{secs:.3}s")
+    }
+}
+
+impl Bench {
+    pub fn new(name: impl Into<String>) -> Bench {
+        Bench {
+            name: name.into(),
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 1000,
+            target: Duration::from_millis(1500),
+        }
+    }
+
+    /// Configure for expensive end-to-end runs.
+    pub fn heavy(mut self) -> Bench {
+        self.warmup_iters = 1;
+        self.min_iters = 3;
+        self.max_iters = 20;
+        self.target = Duration::from_secs(5);
+        self
+    }
+
+    pub fn with_iters(mut self, min: usize, max: usize) -> Bench {
+        self.min_iters = min;
+        self.max_iters = max;
+        self
+    }
+
+    /// Run the measurement loop; `f` is one iteration.
+    pub fn run<F: FnMut()>(&self, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut times = Vec::new();
+        let start = Instant::now();
+        loop {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed().as_secs_f64());
+            let enough_iters = times.len() >= self.min_iters;
+            let out_of_time = start.elapsed() >= self.target;
+            if (enough_iters && out_of_time) || times.len() >= self.max_iters
+            {
+                break;
+            }
+        }
+        let res = BenchResult {
+            name: self.name.clone(),
+            iters: times.len(),
+            summary: Summary::of(&times),
+        };
+        println!("{}", res.line());
+        res
+    }
+}
+
+/// Simple scoped stopwatch.
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Stopwatch {
+        Stopwatch(Instant::now())
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_min_iters() {
+        let b = Bench::new("noop").with_iters(5, 5);
+        let r = b.run(|| {});
+        assert_eq!(r.iters, 5);
+        assert!(r.summary.mean >= 0.0);
+    }
+
+    #[test]
+    fn fmt_dur_ranges() {
+        assert!(fmt_dur(5e-9).ends_with("ns"));
+        assert!(fmt_dur(5e-6).ends_with("µs"));
+        assert!(fmt_dur(5e-3).ends_with("ms"));
+        assert!(fmt_dur(5.0).ends_with('s'));
+    }
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(sw.secs() >= 0.001);
+    }
+}

@@ -48,24 +48,48 @@ fn main() {
             });
 
         // Full observe step (decision + signed update + mean accum +
-        // placement), amortized over a synthetic epoch.
+        // placement), amortized over a synthetic epoch. The first-epoch
+        // order is the identity, so a flat [n × d] buffer doubles as the
+        // gathered visit-order stream.
         let n = 256usize;
-        let grads: Vec<Vec<f32>> = (0..n)
-            .map(|_| (0..d).map(|_| rng.gauss() as f32).collect())
-            .collect();
+        let flat: Vec<f32> =
+            (0..n * d).map(|_| rng.gauss() as f32).collect();
         let r = Bench::new(format!("grab_observe_epoch/n{n}/d{d}"))
             .with_iters(3, 50)
             .run(|| {
                 let mut p = GraBOrder::new(
                     n, d, Box::new(DeterministicBalancer));
-                let order = p.epoch_order(0);
-                for (pos, &unit) in order.iter().enumerate() {
-                    p.observe(pos, &grads[unit]);
+                let _ = p.epoch_order(0);
+                for pos in 0..n {
+                    p.observe(pos, &flat[pos * d..(pos + 1) * d]);
                 }
                 p.epoch_end();
             });
         println!(
             "  -> {:.1} ns per observe() at d={d}",
+            r.summary.mean / n as f64 * 1e9
+        );
+        let b = 32usize;
+        let r = Bench::new(format!("grab_observe_epoch_blk{b}/n{n}/d{d}"))
+            .with_iters(3, 50)
+            .run(|| {
+                let mut p = GraBOrder::new(
+                    n, d, Box::new(DeterministicBalancer));
+                let _ = p.epoch_order(0);
+                let mut pos = 0;
+                while pos < n {
+                    let end = (pos + b).min(n);
+                    p.observe_block(
+                        pos..end,
+                        &tensor::GradBlock::new(
+                            &flat[pos * d..end * d], d),
+                    );
+                    pos = end;
+                }
+                p.epoch_end();
+            });
+        println!(
+            "  -> {:.1} ns per example via {b}-row blocks at d={d}",
             r.summary.mean / n as f64 * 1e9
         );
     }

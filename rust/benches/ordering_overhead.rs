@@ -1,18 +1,27 @@
 //! Bench: Table 1 — ordering compute/storage overhead of RR vs Greedy
-//! Ordering vs GraB across n at the paper's logreg dimension d = 7850.
+//! Ordering vs GraB across n at the paper's logreg dimension d = 7850 —
+//! plus the block-streaming deliverables:
+//!
+//!   * per-example (1-row blocks through the `observe` shim, one virtual
+//!     dispatch + running-sum refresh per example) vs block observe
+//!     throughput at d = 4096 — the refactor's ≥1.5× acceptance gate;
+//!   * PairBalance (CD-GraB) vs GraB observe throughput and herding
+//!     bounds on the same static gradient stream.
 //!
 //! Run: `cargo bench --bench ordering_overhead`
 
 use grab::balance::DeterministicBalancer;
-use grab::ordering::{GraBOrder, GreedyOrder, OrderPolicy,
-                     RandomReshuffle};
+use grab::herding::herding_bound;
+use grab::ordering::{stream_static_epoch, GradBlock, GraBOrder,
+                     GreedyOrder, OrderPolicy, PairBalance,
+                     RandomReshuffle, ShardedOrder};
 use grab::util::prop::gen;
 use grab::util::rng::Rng;
 use grab::util::stats::scaling_exponent;
 use grab::util::timer::Bench;
 
 fn one_epoch(policy: &mut dyn OrderPolicy, vs: &[Vec<f32>]) {
-    let order = policy.epoch_order(0);
+    let order = policy.epoch_order(0).to_vec();
     if policy.wants_grads() {
         for (pos, &unit) in order.iter().enumerate() {
             policy.observe(pos, &vs[unit]);
@@ -21,7 +30,44 @@ fn one_epoch(policy: &mut dyn OrderPolicy, vs: &[Vec<f32>]) {
     policy.epoch_end();
 }
 
-fn main() {
+/// Stream one epoch of a flat [n × d] gradient matrix through a policy.
+/// First-epoch orders are the identity for the gradient-aware policies
+/// here, so the flat buffer doubles as the gathered visit-order stream —
+/// both paths below read identical bytes.
+fn observe_epoch_blocks(
+    policy: &mut dyn OrderPolicy,
+    flat: &[f32],
+    n: usize,
+    d: usize,
+    block: usize,
+) {
+    let _ = policy.epoch_order(0);
+    let mut pos = 0;
+    while pos < n {
+        let end = (pos + block).min(n);
+        policy.observe_block(
+            pos..end,
+            &GradBlock::new(&flat[pos * d..end * d], d),
+        );
+        pos = end;
+    }
+    policy.epoch_end();
+}
+
+fn observe_epoch_per_example(
+    policy: &mut dyn OrderPolicy,
+    flat: &[f32],
+    n: usize,
+    d: usize,
+) {
+    let _ = policy.epoch_order(0);
+    for pos in 0..n {
+        policy.observe(pos, &flat[pos * d..(pos + 1) * d]);
+    }
+    policy.epoch_end();
+}
+
+fn table1_section() {
     println!("== ordering_overhead bench (table1) ==");
     let d = 7850;
     let ns = [256usize, 512, 1024];
@@ -81,4 +127,99 @@ fn main() {
         scaling_exponent(&xs, &gy),
         scaling_exponent(&xs, &by)
     );
+}
+
+fn block_vs_per_example_section() {
+    println!("\n== per-example vs block observe throughput ==");
+    let d = 4096;
+    let n = 512;
+    let block = 64;
+    let mut rng = Rng::new(42);
+    let flat: Vec<f32> =
+        (0..n * d).map(|_| rng.gauss() as f32).collect();
+
+    let per = Bench::new(format!("grab_observe/per_example/n{n}/d{d}"))
+        .with_iters(5, 60)
+        .run(|| {
+            let mut p = GraBOrder::new(
+                n, d, Box::new(DeterministicBalancer));
+            observe_epoch_per_example(&mut p, &flat, n, d);
+        });
+    let blk = Bench::new(format!(
+        "grab_observe/block{block}/n{n}/d{d}"
+    ))
+    .with_iters(5, 60)
+    .run(|| {
+        let mut p = GraBOrder::new(
+            n, d, Box::new(DeterministicBalancer));
+        observe_epoch_blocks(&mut p, &flat, n, d, block);
+    });
+    let pair = Bench::new(format!(
+        "pair_observe/block{block}/n{n}/d{d}"
+    ))
+    .with_iters(5, 60)
+    .run(|| {
+        let mut p = PairBalance::new(n, d);
+        observe_epoch_blocks(&mut p, &flat, n, d, block);
+    });
+
+    let speedup = per.summary.mean / blk.summary.mean;
+    println!(
+        "\nblock observe speedup over per-example at d={d}: {speedup:.2}x \
+         (gate: >= 1.5x)"
+    );
+    println!(
+        "pair balance vs grab block observe: {:.2}x",
+        blk.summary.mean / pair.summary.mean
+    );
+    println!(
+        "per-example {:.1} ns/example, block {:.1} ns/example, \
+         pair {:.1} ns/example",
+        per.summary.mean / n as f64 * 1e9,
+        blk.summary.mean / n as f64 * 1e9,
+        pair.summary.mean / n as f64 * 1e9,
+    );
+}
+
+fn pair_vs_grab_herding_section() {
+    println!("\n== PairBalance vs GraB herding bounds (static set) ==");
+    let n = 1024;
+    let d = 64;
+    let block = 64;
+    let epochs = 8;
+    let mut rng = Rng::new(7);
+    let vs = gen::vec_set(&mut rng, n, d);
+    let mut rand_acc = 0.0f32;
+    for _ in 0..5 {
+        let perm = rng.permutation(n);
+        rand_acc += herding_bound(&vs, &perm).0;
+    }
+    let rand_inf = rand_acc / 5.0;
+    println!("random reshuffling: {rand_inf:.4}");
+
+    let mut flat = Vec::new();
+    let mut policies: Vec<(&str, Box<dyn OrderPolicy>)> = vec![
+        ("grab", Box::new(GraBOrder::new(
+            n, d, Box::new(DeterministicBalancer)))),
+        ("pair", Box::new(PairBalance::new(n, d))),
+        ("cd-grab-w1", Box::new(ShardedOrder::new(n, d, 1))),
+        ("cd-grab-w4", Box::new(ShardedOrder::new(n, d, 4))),
+    ];
+    for (name, policy) in policies.iter_mut() {
+        for _ in 0..epochs {
+            stream_static_epoch(policy.as_mut(), &vs, &mut flat, block);
+        }
+        let (inf, _) = herding_bound(&vs, policy.epoch_order(0));
+        println!(
+            "{name}: {inf:.4} after {epochs} epochs \
+             ({:.1}x below random)",
+            rand_inf / inf
+        );
+    }
+}
+
+fn main() {
+    table1_section();
+    block_vs_per_example_section();
+    pair_vs_grab_herding_section();
 }

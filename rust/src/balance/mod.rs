@@ -28,6 +28,14 @@ pub trait Balancer {
     /// Reset any internal state for a fresh sequence.
     fn reset(&mut self) {}
 
+    /// True when `sign(s, c)` equals `+1 iff <s, c> < 0` (Algorithm 5's
+    /// decision rule). Callers may then use the fused/batched centered-dot
+    /// kernels (`tensor::dot_centered`, `tensor::dot_centered_block`)
+    /// without materializing `c` or dispatching per example.
+    fn uses_centered_dot(&self) -> bool {
+        false
+    }
+
     fn name(&self) -> &'static str;
 }
 
@@ -47,6 +55,10 @@ impl Balancer for DeterministicBalancer {
         } else {
             -1.0
         }
+    }
+
+    fn uses_centered_dot(&self) -> bool {
+        true
     }
 
     fn name(&self) -> &'static str {
@@ -153,14 +165,12 @@ pub fn reorder(order: &[usize], signs: &[f32]) -> Vec<usize> {
             out.push(order[i]);
         }
     }
-    let front = out.len();
     for (i, &s) in signs.iter().enumerate().rev() {
         if s <= 0.0 {
             out.push(order[i]);
         }
     }
     debug_assert_eq!(out.len(), order.len());
-    let _ = front;
     out
 }
 

@@ -68,6 +68,12 @@ pub enum OrderingKind {
     OneStepGraB,
     /// Fig. 3: fixed order imported from a finished GraB run's final epoch.
     RetrainFromGraB,
+    /// CD-GraB's PairBalance: balance consecutive pair differences — no
+    /// stale mean, one d-vector of state.
+    PairBalance,
+    /// CD-GraB: `num_shards` PairBalance workers over disjoint unit
+    /// ranges with a round-robin coordinator merge.
+    ShardedPairBalance,
     /// Plain in-order pass (sanity baseline; not in the paper's plots).
     Sequential,
 }
@@ -84,10 +90,16 @@ impl OrderingKind {
             "grab-retrain" | "retrain-from-grab" => {
                 OrderingKind::RetrainFromGraB
             }
+            "pair" | "pair-balance" | "pairbalance" => {
+                OrderingKind::PairBalance
+            }
+            "cd-grab" | "cdgrab" | "sharded-pair" => {
+                OrderingKind::ShardedPairBalance
+            }
             "seq" | "sequential" => OrderingKind::Sequential,
             _ => bail!(
-                "unknown ordering {s:?} \
-                 (rr|so|flipflop|greedy|grab|grab-1step|grab-retrain|seq)"
+                "unknown ordering {s:?} (rr|so|flipflop|greedy|grab|\
+                 grab-1step|grab-retrain|pair|cd-grab|seq)"
             ),
         })
     }
@@ -101,6 +113,8 @@ impl OrderingKind {
             OrderingKind::GraB => "grab",
             OrderingKind::OneStepGraB => "grab-1step",
             OrderingKind::RetrainFromGraB => "grab-retrain",
+            OrderingKind::PairBalance => "pair",
+            OrderingKind::ShardedPairBalance => "cd-grab",
             OrderingKind::Sequential => "seq",
         }
     }
@@ -172,11 +186,15 @@ pub struct TrainConfig {
     /// Ordering granularity: units per group (1 = per-example ordering;
     /// >1 reorders groups, the paper's batch-granularity fallback).
     pub group_size: usize,
+    /// Shard count for [`OrderingKind::ShardedPairBalance`] (CD-GraB
+    /// workers); ignored by other orderings.
+    pub num_shards: usize,
     /// Where artifacts live.
     pub artifacts_dir: String,
     /// Optional metrics CSV path.
     pub metrics_out: Option<String>,
-    /// Evaluate every k epochs (0 = only at the end).
+    /// Evaluate every k epochs, plus always on the final epoch
+    /// (0 = never evaluate).
     pub eval_every: usize,
     /// Run the threaded streaming pipeline instead of the sync loop.
     pub use_pipeline: bool,
@@ -206,6 +224,7 @@ impl Default for TrainConfig {
             seed: 0,
             walk_c: 0.0,
             group_size: 1,
+            num_shards: 1,
             artifacts_dir: "artifacts".to_string(),
             metrics_out: None,
             eval_every: 1,
@@ -276,6 +295,7 @@ impl TrainConfig {
         self.seed = args.u64_or("seed", self.seed)?;
         self.walk_c = args.f64_or("walk-c", self.walk_c)?;
         self.group_size = args.usize_or("group-size", self.group_size)?;
+        self.num_shards = args.usize_or("shards", self.num_shards)?;
         self.artifacts_dir =
             args.str_or("artifacts", &self.artifacts_dir);
         if let Some(m) = args.opt_str("metrics-out") {
@@ -314,6 +334,9 @@ impl TrainConfig {
             .unwrap_or(c.weight_decay);
         c.seed = doc.get_int("seed").unwrap_or(c.seed as i64) as u64;
         c.walk_c = doc.get_float("walk_c").unwrap_or(c.walk_c);
+        c.num_shards = doc
+            .get_int("num_shards")
+            .unwrap_or(c.num_shards as i64) as usize;
         if let Some(a) = doc.get_str("artifacts") {
             c.artifacts_dir = a;
         }
@@ -345,6 +368,9 @@ impl TrainConfig {
         }
         if self.group_size == 0 {
             bail!("group_size must be >= 1");
+        }
+        if self.num_shards == 0 {
+            bail!("num_shards must be >= 1");
         }
         if self.workers == 0 {
             bail!("workers must be >= 1");
@@ -395,10 +421,27 @@ mod tests {
             OrderingKind::GraB,
             OrderingKind::OneStepGraB,
             OrderingKind::RetrainFromGraB,
+            OrderingKind::PairBalance,
+            OrderingKind::ShardedPairBalance,
             OrderingKind::Sequential,
         ] {
             assert_eq!(OrderingKind::parse(o.name()).unwrap(), o);
         }
+    }
+
+    #[test]
+    fn shard_config_plumbs_through() {
+        let args = Args::parse([
+            "--ordering", "cd-grab", "--shards", "4",
+        ])
+        .unwrap();
+        let mut c = TrainConfig::default();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.ordering, OrderingKind::ShardedPairBalance);
+        assert_eq!(c.num_shards, 4);
+        let mut bad = TrainConfig::default();
+        bad.num_shards = 0;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

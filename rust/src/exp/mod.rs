@@ -9,9 +9,11 @@
 //! grab exp fig4        # Fig. 4 Alg. 5 vs Alg. 6 herding bounds
 //! grab exp table1      # Table 1 measured compute/storage overhead
 //! grab exp statement1  # Statement 1 greedy vs random scaling
+//! grab exp cdgrab      # CD-GraB pair/sharded herding bounds
 //! grab exp all         # everything, small scale
 //! ```
 
+pub mod cdgrab;
 pub mod fig1;
 pub mod fig2;
 pub mod fig3;
@@ -51,7 +53,7 @@ pub fn run_from_cli(args: &Args) -> Result<()> {
 
     let ids: Vec<&str> = if id == "all" {
         vec!["fig1", "fig2", "fig3", "fig4", "table1", "statement1",
-             "granularity"]
+             "granularity", "cdgrab"]
     } else {
         vec![id.as_str()]
     };
@@ -138,9 +140,23 @@ pub fn run_from_cli(args: &Args) -> Result<()> {
                 }
                 granularity::run(&cfg, &out)?;
             }
+            "cdgrab" => {
+                let mut cfg = if paper_scale {
+                    cdgrab::CdGrabConfig::default()
+                } else {
+                    cdgrab::CdGrabConfig::small()
+                };
+                if epochs > 0 {
+                    cfg.epochs = epochs;
+                }
+                if n > 0 {
+                    cfg.n = n;
+                }
+                cdgrab::run(&cfg, &out)?;
+            }
             other => bail!(
-                "unknown experiment {other:?} \
-                 (fig1|fig2|fig3|fig4|table1|statement1|granularity|all)"
+                "unknown experiment {other:?} (fig1|fig2|fig3|fig4|\
+                 table1|statement1|granularity|cdgrab|all)"
             ),
         }
     }

@@ -5,9 +5,11 @@
 //!
 //! * **L3 (this crate)** — streaming data-pipeline orchestrator: dataset
 //!   substrates, example-ordering policies (RR / SO / FlipFlop / Greedy
-//!   Herding / GraB), vector-balancing and herding algorithms, optimizer,
-//!   training engine, threaded pipeline, and the experiment harness that
-//!   regenerates every table and figure in the paper.
+//!   Herding / GraB, plus CD-GraB's PairBalance and the sharded
+//!   coordinator) streamed through the block-based [`ordering`] API,
+//!   vector-balancing and herding algorithms, optimizer, training engine,
+//!   threaded pipeline, and the experiment harness that regenerates every
+//!   table and figure in the paper.
 //! * **L2 (python/compile/model.py, build-time only)** — JAX models whose
 //!   per-example gradient functions are AOT-lowered to HLO text.
 //! * **L1 (python/compile/kernels/, build-time only)** — Pallas kernels
@@ -38,6 +40,7 @@ pub mod runtime;
 pub mod tensor;
 pub mod train;
 pub mod util;
+pub mod xla;
 
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;

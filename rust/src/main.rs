@@ -2,10 +2,12 @@
 //!
 //! ```text
 //! grab train  [--config f.toml] [--task mnist|cifar|wiki|glue]
-//!             [--ordering rr|so|flipflop|greedy|grab|grab-1step|seq]
+//!             [--ordering rr|so|flipflop|greedy|grab|grab-1step|pair|
+//!              cd-grab|seq] [--shards W]
 //!             [--balancer alg5|alg6|kernel] [--epochs N] [--n N]
 //!             [--lr F] [--seed N] [--metrics-out f.csv] [--pipeline]
-//! grab exp    fig1|fig2|fig3|fig4|table1|statement1|all [options]
+//! grab exp    fig1|fig2|fig3|fig4|table1|statement1|granularity|
+//!             cdgrab|all [options]
 //! grab inspect [--artifacts DIR]       # artifact/manifest summary
 //! ```
 
@@ -50,14 +52,16 @@ grab — GraB: provably better data permutations than random reshuffling
 USAGE:
   grab train [options]     train one run (task x ordering)
   grab exp <id> [options]  regenerate a paper artifact
-                           (fig1|fig2|fig3|fig4|table1|statement1|all)
+                           (fig1|fig2|fig3|fig4|table1|statement1|
+                            granularity|cdgrab|all)
   grab inspect             show artifact manifest / model layouts
   grab help
 
 TRAIN OPTIONS:
   --config FILE            TOML run config (flags overlay on top)
   --task mnist|cifar|wiki|glue
-  --ordering rr|so|flipflop|greedy|grab|grab-1step|seq
+  --ordering rr|so|flipflop|greedy|grab|grab-1step|pair|cd-grab|seq
+  --shards W               CD-GraB worker count (with --ordering cd-grab)
   --balancer alg5|alg6|kernel
   --epochs N --n N --n-eval N --accum N
   --lr F --momentum F --wd F --seed N

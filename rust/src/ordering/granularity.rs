@@ -6,24 +6,28 @@
 //! herding's statistical gain is O(n^{-1/3}), shrinks GraB's advantage —
 //! which `grab exp granularity` measures. [`GroupedOrder`] wraps any inner
 //! policy defined over n/gs groups: it expands the group permutation to an
-//! example permutation and feeds the inner policy one *mean* gradient per
-//! group.
+//! example permutation (into a reused buffer, no per-call allocation) and
+//! feeds the inner policy one *mean* gradient per group as a 1-row block.
 
-use crate::ordering::OrderPolicy;
+use std::ops::Range;
+
+use crate::ordering::{GradBlock, OrderPolicy};
 use crate::tensor;
 
 pub struct GroupedOrder {
     inner: Box<dyn OrderPolicy>,
     /// Static partition: members[g] = dataset indices of group g.
     members: Vec<Vec<usize>>,
-    group_size: usize,
     n: usize,
     d: usize,
     /// Mean-gradient accumulator for the group currently streaming.
     acc: Vec<f32>,
     acc_count: usize,
-    /// Group visit order for the current epoch (inner's permutation).
+    /// Group visit order for the current epoch (copy of inner's
+    /// permutation, refreshed by [`OrderPolicy::epoch_order`]).
     group_order: Vec<usize>,
+    /// Expanded example-level order handed to the trainer.
+    expanded: Vec<usize>,
     groups_observed: usize,
 }
 
@@ -44,12 +48,12 @@ impl GroupedOrder {
         GroupedOrder {
             inner,
             members,
-            group_size,
             n,
             d,
             acc: vec![0.0; d],
             acc_count: 0,
             group_order: Vec::new(),
+            expanded: Vec::new(),
             groups_observed: 0,
         }
     }
@@ -64,32 +68,38 @@ impl OrderPolicy for GroupedOrder {
         "grouped"
     }
 
-    fn epoch_order(&mut self, epoch: usize) -> Vec<usize> {
-        self.group_order = self.inner.epoch_order(epoch);
-        debug_assert_eq!(self.group_order.len(), self.members.len());
-        let mut out = Vec::with_capacity(self.n);
+    fn epoch_order(&mut self, epoch: usize) -> &[usize] {
+        let go = self.inner.epoch_order(epoch);
+        debug_assert_eq!(go.len(), self.members.len());
+        self.group_order.clear();
+        self.group_order.extend_from_slice(go);
+        self.expanded.clear();
         for &g in &self.group_order {
-            out.extend_from_slice(&self.members[g]);
+            self.expanded.extend_from_slice(&self.members[g]);
         }
-        out
+        &self.expanded
     }
 
-    fn observe(&mut self, pos: usize, grad: &[f32]) {
-        debug_assert_eq!(grad.len(), self.d);
-        tensor::add_into(&mut self.acc, grad);
-        self.acc_count += 1;
-        // Group boundary: the group being visited is group_order[k] where
-        // k = number of complete groups so far. The last group may be
-        // ragged; detect completion by member count.
-        let k = self.groups_observed;
-        let expected = self.members[self.group_order[k]].len();
-        debug_assert!(pos < self.n);
-        if self.acc_count == expected {
-            tensor::scale(&mut self.acc, 1.0 / expected as f32);
-            let acc = std::mem::replace(&mut self.acc, vec![0.0; self.d]);
-            self.inner.observe(k, &acc);
-            self.acc_count = 0;
-            self.groups_observed += 1;
+    fn observe_block(&mut self, range: Range<usize>, block: &GradBlock) {
+        debug_assert_eq!(block.dim(), self.d);
+        debug_assert_eq!(range.len(), block.rows());
+        debug_assert!(range.end <= self.n);
+        for row in block.iter_rows() {
+            tensor::add_into(&mut self.acc, row);
+            self.acc_count += 1;
+            // Group boundary: the group being visited is group_order[k]
+            // where k = number of complete groups so far. The last group
+            // may be ragged; detect completion by member count.
+            let k = self.groups_observed;
+            let expected = self.members[self.group_order[k]].len();
+            if self.acc_count == expected {
+                tensor::scale(&mut self.acc, 1.0 / expected as f32);
+                let mean = GradBlock::new(&self.acc, self.d);
+                self.inner.observe_block(k..k + 1, &mean);
+                tensor::zero(&mut self.acc);
+                self.acc_count = 0;
+                self.groups_observed += 1;
+            }
         }
     }
 
@@ -135,7 +145,7 @@ mod tests {
     #[test]
     fn expands_groups_to_examples() {
         let mut p = grouped_grab(10, 2, 4); // groups {0-3},{4-7},{8,9}
-        let order = p.epoch_order(0);
+        let order = p.epoch_order(0).to_vec();
         assert_permutation(&order).unwrap();
         // First epoch: inner identity => example order is identity.
         assert_eq!(order, (0..10).collect::<Vec<_>>());
@@ -149,7 +159,7 @@ mod tests {
             let d = 1 + rng.gen_range(8) as usize;
             let mut p = grouped_grab(n, d, gs);
             for _ in 0..3 {
-                let order = p.epoch_order(0);
+                let order = p.epoch_order(0).to_vec();
                 assert_permutation(&order)?;
                 for (pos, _) in order.iter().enumerate() {
                     let g = gen::gauss_vec(rng, d, 1.0);
@@ -173,8 +183,8 @@ mod tests {
         let mut plain = crate::ordering::GraBOrder::new(
             n, d, Box::new(crate::balance::DeterministicBalancer));
         for _ in 0..3 {
-            let go = grouped.epoch_order(0);
-            let po = plain.epoch_order(0);
+            let go = grouped.epoch_order(0).to_vec();
+            let po = plain.epoch_order(0).to_vec();
             assert_eq!(go, po);
             for pos in 0..n {
                 grouped.observe(pos, &grads[go[pos]]);
@@ -186,6 +196,44 @@ mod tests {
     }
 
     #[test]
+    fn block_streaming_spans_group_boundaries() {
+        // Blocks that straddle group boundaries must accumulate means
+        // exactly like per-example streaming.
+        let n = 24;
+        let gs = 4;
+        let d = 3;
+        let mut rng = crate::util::rng::Rng::new(7);
+        let flat: Vec<f32> =
+            (0..n * d).map(|_| rng.gauss() as f32).collect();
+        let mut per_row = grouped_grab(n, d, gs);
+        let mut blocked = grouped_grab(n, d, gs);
+        for _ in 0..2 {
+            let a = per_row.epoch_order(0).to_vec();
+            let b = blocked.epoch_order(0).to_vec();
+            assert_eq!(a, b);
+            for pos in 0..n {
+                per_row.observe(pos, &flat[pos * d..(pos + 1) * d]);
+            }
+            // Odd-sized blocks (5 rows) straddle the 4-wide groups.
+            let mut pos = 0;
+            while pos < n {
+                let end = (pos + 5).min(n);
+                blocked.observe_block(
+                    pos..end,
+                    &GradBlock::new(&flat[pos * d..end * d], d),
+                );
+                pos = end;
+            }
+            per_row.epoch_end();
+            blocked.epoch_end();
+        }
+        assert_eq!(
+            per_row.epoch_order(0).to_vec(),
+            blocked.epoch_order(0).to_vec()
+        );
+    }
+
+    #[test]
     fn members_stay_adjacent() {
         // Units of one group remain consecutive in every epoch's order.
         let n = 24;
@@ -194,7 +242,7 @@ mod tests {
         let mut p = grouped_grab(n, d, gs);
         let mut rng = crate::util::rng::Rng::new(1);
         for _ in 0..3 {
-            let order = p.epoch_order(0);
+            let order = p.epoch_order(0).to_vec();
             for chunk in order.chunks(gs) {
                 let g0 = chunk[0] / gs;
                 assert!(chunk.iter().all(|&i| i / gs == g0),

@@ -4,8 +4,10 @@
 //! greedy herding at the epoch boundary (O(n²) selection work) to produce
 //! the next epoch's order.
 
+use std::ops::Range;
+
 use crate::herding::greedy::greedy_order;
-use crate::ordering::OrderPolicy;
+use crate::ordering::{GradBlock, OrderPolicy};
 
 pub struct GreedyOrder {
     n: usize,
@@ -34,15 +36,23 @@ impl OrderPolicy for GreedyOrder {
         "greedy"
     }
 
-    fn epoch_order(&mut self, _epoch: usize) -> Vec<usize> {
-        self.current.clone()
+    fn epoch_order(&mut self, _epoch: usize) -> &[usize] {
+        &self.current
     }
 
-    fn observe(&mut self, pos: usize, grad: &[f32]) {
-        debug_assert_eq!(grad.len(), self.d);
-        let unit = self.current[pos];
-        self.grads[unit] = grad.to_vec(); // the O(nd) storage
-        self.observed += 1;
+    fn observe_block(&mut self, range: Range<usize>, block: &GradBlock) {
+        debug_assert_eq!(block.dim(), self.d);
+        debug_assert_eq!(range.len(), block.rows());
+        debug_assert!(range.end <= self.n);
+        for (i, row) in block.iter_rows().enumerate() {
+            let unit = self.current[range.start + i];
+            // The O(nd) storage; per-unit buffers are reused across
+            // epochs once grown.
+            let slot = &mut self.grads[unit];
+            slot.clear();
+            slot.extend_from_slice(row);
+        }
+        self.observed += block.rows();
     }
 
     fn epoch_end(&mut self) {
@@ -83,7 +93,7 @@ mod tests {
             let (n, d) = gen::small_dims(rng, 40, 6);
             let mut p = GreedyOrder::new(n, d);
             for _ in 0..2 {
-                let order = p.epoch_order(0);
+                let order = p.epoch_order(0).to_vec();
                 assert_permutation(&order)?;
                 for pos in 0..n {
                     let g = gen::gauss_vec(rng, d, 1.0);
@@ -98,11 +108,9 @@ mod tests {
     #[test]
     fn memory_is_o_nd() {
         let mut p = GreedyOrder::new(100, 32);
-        let order = p.epoch_order(0);
-        for pos in 0..100 {
-            let _ = &order;
-            p.observe(pos, &vec![1.0f32; 32]);
-        }
+        let _ = p.epoch_order(0);
+        let flat = vec![1.0f32; 100 * 32];
+        p.observe_block(0..100, &GradBlock::new(&flat, 32));
         let bytes = p.state_bytes();
         assert!(bytes >= 100 * 32 * 4, "bytes={bytes}");
     }
@@ -115,12 +123,12 @@ mod tests {
         let vs = gen::vec_set(&mut rng, n, d);
         let mut p = GreedyOrder::new(n, d);
         // One observation epoch, then the next order is greedy-herded.
-        let order = p.epoch_order(0);
+        let order = p.epoch_order(0).to_vec();
         for (pos, &unit) in order.iter().enumerate() {
             p.observe(pos, &vs[unit]);
         }
         p.epoch_end();
-        let herded = p.epoch_order(1);
+        let herded = p.epoch_order(1).to_vec();
         let (h_inf, _) = herding_bound(&vs, &herded);
         let mut rand_acc = 0.0f32;
         for _ in 0..5 {

@@ -1,19 +1,36 @@
-//! Example-ordering policies — the paper's Section 6 lineup.
+//! Example-ordering policies — the paper's Section 6 lineup plus the
+//! CD-GraB extensions (pair balancing, sharded coordination).
 //!
 //! All policies implement [`OrderPolicy`]: the trainer asks for the epoch's
-//! permutation, streams each visited unit's per-example gradient through
-//! [`OrderPolicy::observe`], and calls [`OrderPolicy::epoch_end`] at the
-//! boundary. Policies that learn from gradients (Greedy Ordering, GraB)
-//! build the *next* epoch's permutation from these observations; the rest
-//! ignore them. [`OrderPolicy::state_bytes`] reports ordering-state memory
-//! for the Table 1 comparison.
+//! permutation (a *borrowed* slice — policies keep their permutations
+//! between calls, no per-call clone), streams visited unit gradients
+//! through [`OrderPolicy::observe_block`] in contiguous
+//! [`GradBlock`]s (zero-copy views over the executor's `[B × d]` upload
+//! buffer), and calls [`OrderPolicy::epoch_end`] at the boundary. Policies
+//! that learn from gradients (Greedy Ordering, GraB, PairBalance) build
+//! the *next* epoch's permutation from these observations; the rest ignore
+//! them. [`OrderPolicy::state_bytes`] reports ordering-state memory for
+//! the Table 1 comparison.
+//!
+//! The block API is the scaling seam: one virtual dispatch per microbatch
+//! instead of per example, batched sign kernels inside the policies, and a
+//! natural decomposition point for the sharded CD-GraB coordinator
+//! ([`ShardedOrder`]).
 
 mod grab;
 pub mod granularity;
 mod greedy;
+pub mod pair;
+pub mod sharded;
 
 pub use grab::GraBOrder;
 pub use greedy::GreedyOrder;
+pub use pair::PairBalance;
+pub use sharded::ShardedOrder;
+
+pub use crate::tensor::GradBlock;
+
+use std::ops::Range;
 
 use crate::config::{BalancerKind, OrderingKind, TrainConfig};
 use crate::util::rng::Rng;
@@ -24,17 +41,32 @@ pub trait OrderPolicy: Send {
     fn name(&self) -> &'static str;
 
     /// Permutation to follow during epoch `epoch` (0-based). Must be a
-    /// valid permutation of `0..n`; the trainer visits units in this order.
-    fn epoch_order(&mut self, epoch: usize) -> Vec<usize>;
+    /// valid permutation of `0..n`; the trainer visits units in this
+    /// order. The slice is borrowed from the policy's own state — callers
+    /// that need ownership copy explicitly, and policies must return the
+    /// same permutation for repeated calls within one epoch.
+    fn epoch_order(&mut self, epoch: usize) -> &[usize];
 
-    /// Observe the gradient of the unit visited at position `pos` of the
-    /// current epoch (the unit is `epoch_order(epoch)[pos]`).
-    fn observe(&mut self, _pos: usize, _grad: &[f32]) {}
+    /// Observe the gradients of the units visited at positions `range`
+    /// of the current epoch (unit `i` of the block is
+    /// `epoch_order(epoch)[range.start + i]`). `block` is a zero-copy
+    /// view over the executor's contiguous `[B × d]` gradient buffer;
+    /// `range.len()` must equal `block.rows()`. Blocks arrive in epoch
+    /// order and cover positions `0..n` exactly once per epoch.
+    fn observe_block(&mut self, _range: Range<usize>, _block: &GradBlock) {}
+
+    /// Compatibility shim: observe a single unit gradient as a 1-row
+    /// block. Exactly equivalent to the pre-block per-example API (and
+    /// measured against the block path in benches/ordering_overhead.rs);
+    /// the trainer itself always streams whole blocks.
+    fn observe(&mut self, pos: usize, grad: &[f32]) {
+        self.observe_block(pos..pos + 1, &GradBlock::new(grad, grad.len()));
+    }
 
     /// Epoch boundary; policies finalize the next epoch's order here.
     fn epoch_end(&mut self) {}
 
-    /// Bytes of ordering state held between epochs (Table 1's storage
+    /// Bytes of ordering state held by the policy (Table 1's storage
     /// column). Excludes the dataset and model, which all policies share.
     fn state_bytes(&self) -> usize {
         0
@@ -49,13 +81,18 @@ pub trait OrderPolicy: Send {
 
 /// Random Reshuffling — a fresh uniform permutation each epoch.
 pub struct RandomReshuffle {
-    n: usize,
+    order: Vec<usize>,
     rng: Rng,
+    cached_epoch: Option<usize>,
 }
 
 impl RandomReshuffle {
     pub fn new(n: usize, seed: u64) -> Self {
-        RandomReshuffle { n, rng: Rng::new(seed ^ 0x5252) }
+        RandomReshuffle {
+            order: (0..n).collect(),
+            rng: Rng::new(seed ^ 0x5252),
+            cached_epoch: None,
+        }
     }
 }
 
@@ -64,9 +101,17 @@ impl OrderPolicy for RandomReshuffle {
         "rr"
     }
 
-    fn epoch_order(&mut self, _epoch: usize) -> Vec<usize> {
-        self.rng.permutation(self.n)
+    fn epoch_order(&mut self, epoch: usize) -> &[usize] {
+        if self.cached_epoch != Some(epoch) {
+            self.rng.shuffle(&mut self.order);
+            self.cached_epoch = Some(epoch);
+        }
+        &self.order
     }
+
+    // state_bytes stays 0 (Table 1's "RR needs no extra storage"): the
+    // permutation buffer is the borrowed-slice API's transient output,
+    // not algorithm state carried between epochs.
 }
 
 /// Shuffle Once — one random permutation reused every epoch.
@@ -86,8 +131,8 @@ impl OrderPolicy for ShuffleOnce {
         "so"
     }
 
-    fn epoch_order(&mut self, _epoch: usize) -> Vec<usize> {
-        self.order.clone()
+    fn epoch_order(&mut self, _epoch: usize) -> &[usize] {
+        &self.order
     }
 
     fn state_bytes(&self) -> usize {
@@ -100,12 +145,22 @@ impl OrderPolicy for ShuffleOnce {
 pub struct FlipFlop {
     n: usize,
     rng: Rng,
-    last: Vec<usize>,
+    /// The even-epoch shuffle being flip-flopped.
+    shuffled: Vec<usize>,
+    /// The order handed out for the cached epoch.
+    out: Vec<usize>,
+    cached_epoch: Option<usize>,
 }
 
 impl FlipFlop {
     pub fn new(n: usize, seed: u64) -> Self {
-        FlipFlop { n, rng: Rng::new(seed ^ 0xF11F), last: Vec::new() }
+        FlipFlop {
+            n,
+            rng: Rng::new(seed ^ 0xF11F),
+            shuffled: Vec::new(),
+            out: Vec::new(),
+            cached_epoch: None,
+        }
     }
 }
 
@@ -114,30 +169,39 @@ impl OrderPolicy for FlipFlop {
         "flipflop"
     }
 
-    fn epoch_order(&mut self, epoch: usize) -> Vec<usize> {
-        if epoch % 2 == 0 || self.last.is_empty() {
-            self.last = self.rng.permutation(self.n);
-            self.last.clone()
-        } else {
-            let mut rev = self.last.clone();
-            rev.reverse();
-            rev
+    fn epoch_order(&mut self, epoch: usize) -> &[usize] {
+        if self.cached_epoch != Some(epoch) {
+            if epoch % 2 == 0 || self.shuffled.is_empty() {
+                if self.shuffled.is_empty() {
+                    self.shuffled = (0..self.n).collect();
+                }
+                self.rng.shuffle(&mut self.shuffled);
+                self.out.clear();
+                self.out.extend_from_slice(&self.shuffled);
+            } else {
+                self.out.clear();
+                self.out.extend(self.shuffled.iter().rev().copied());
+            }
+            self.cached_epoch = Some(epoch);
         }
+        &self.out
     }
 
     fn state_bytes(&self) -> usize {
-        self.last.len() * std::mem::size_of::<usize>()
+        // Only the retained even-epoch shuffle is algorithm state (it
+        // must be replayed reversed); `out` is a presentation cache.
+        self.shuffled.len() * std::mem::size_of::<usize>()
     }
 }
 
 /// Sequential — identity order every epoch (sanity baseline).
 pub struct Sequential {
-    n: usize,
+    order: Vec<usize>,
 }
 
 impl Sequential {
     pub fn new(n: usize) -> Self {
-        Sequential { n }
+        Sequential { order: (0..n).collect() }
     }
 }
 
@@ -146,8 +210,8 @@ impl OrderPolicy for Sequential {
         "seq"
     }
 
-    fn epoch_order(&mut self, _epoch: usize) -> Vec<usize> {
-        (0..self.n).collect()
+    fn epoch_order(&mut self, _epoch: usize) -> &[usize] {
+        &self.order
     }
 }
 
@@ -168,8 +232,8 @@ impl OrderPolicy for FixedOrder {
         self.name
     }
 
-    fn epoch_order(&mut self, _epoch: usize) -> Vec<usize> {
-        self.order.clone()
+    fn epoch_order(&mut self, _epoch: usize) -> &[usize] {
+        &self.order
     }
 
     fn state_bytes(&self) -> usize {
@@ -195,23 +259,23 @@ impl OrderPolicy for OneStepGraB {
         "grab-1step"
     }
 
-    fn epoch_order(&mut self, epoch: usize) -> Vec<usize> {
+    fn epoch_order(&mut self, epoch: usize) -> &[usize] {
         match &self.frozen {
-            Some(o) => o.clone(),
+            Some(o) => o,
             None => self.inner.epoch_order(epoch),
         }
     }
 
-    fn observe(&mut self, pos: usize, grad: &[f32]) {
+    fn observe_block(&mut self, range: Range<usize>, block: &GradBlock) {
         if self.frozen.is_none() {
-            self.inner.observe(pos, grad);
+            self.inner.observe_block(range, block);
         }
     }
 
     fn epoch_end(&mut self) {
         if self.frozen.is_none() {
             self.inner.epoch_end();
-            self.frozen = Some(self.inner.epoch_order(1));
+            self.frozen = Some(self.inner.epoch_order(1).to_vec());
         }
     }
 
@@ -225,6 +289,45 @@ impl OrderPolicy for OneStepGraB {
     fn wants_grads(&self) -> bool {
         self.frozen.is_none()
     }
+}
+
+/// Stream one epoch of a static vector set through a policy: gather the
+/// rows of `vs` into `flat` in the policy's visit order (the loader
+/// stage's job in real training, kept outside the timed section), stream
+/// `block`-row [`GradBlock`]s through
+/// [`OrderPolicy::observe_block`], and end the epoch. Returns the
+/// observe + epoch_end wall-clock seconds. Shared by the static-gradient
+/// experiments, tests, and benches.
+pub fn stream_static_epoch(
+    policy: &mut dyn OrderPolicy,
+    vs: &[Vec<f32>],
+    flat: &mut Vec<f32>,
+    block: usize,
+) -> f64 {
+    assert!(block > 0, "block must be positive");
+    let n = vs.len();
+    let d = vs.first().map_or(0, |v| v.len());
+    flat.clear();
+    flat.resize(n * d, 0.0);
+    {
+        let order = policy.epoch_order(0);
+        debug_assert_eq!(order.len(), n);
+        for (pos, &unit) in order.iter().enumerate() {
+            flat[pos * d..(pos + 1) * d].copy_from_slice(&vs[unit]);
+        }
+    }
+    let sw = crate::util::timer::Stopwatch::start();
+    let mut pos = 0;
+    while pos < n {
+        let end = (pos + block).min(n);
+        policy.observe_block(
+            pos..end,
+            &GradBlock::new(&flat[pos * d..end * d], d),
+        );
+        pos = end;
+    }
+    policy.epoch_end();
+    sw.secs()
 }
 
 /// Build the policy requested by a [`TrainConfig`] over `n` units of
@@ -265,6 +368,10 @@ pub fn build_policy(
         OrderingKind::OneStepGraB => {
             Box::new(OneStepGraB::new(grab_from_cfg(cfg, n, d)))
         }
+        OrderingKind::PairBalance => Box::new(PairBalance::new(n, d)),
+        OrderingKind::ShardedPairBalance => {
+            Box::new(ShardedOrder::new(n, d, cfg.num_shards))
+        }
         OrderingKind::RetrainFromGraB => {
             let order = retrain_order.ok_or_else(|| {
                 anyhow::anyhow!(
@@ -304,29 +411,40 @@ mod tests {
     #[test]
     fn rr_fresh_permutation_each_epoch() {
         let mut rr = RandomReshuffle::new(100, 0);
-        let a = rr.epoch_order(0);
-        let b = rr.epoch_order(1);
+        let a = rr.epoch_order(0).to_vec();
+        let b = rr.epoch_order(1).to_vec();
         assert_permutation(&a).unwrap();
         assert_permutation(&b).unwrap();
         assert_ne!(a, b);
     }
 
     #[test]
+    fn rr_stable_within_an_epoch() {
+        // Borrowed-slice contract: repeated calls for the same epoch must
+        // not reshuffle under the caller.
+        let mut rr = RandomReshuffle::new(64, 3);
+        let a = rr.epoch_order(4).to_vec();
+        let b = rr.epoch_order(4).to_vec();
+        assert_eq!(a, b);
+    }
+
+    #[test]
     fn so_same_every_epoch() {
         let mut so = ShuffleOnce::new(50, 1);
-        assert_eq!(so.epoch_order(0), so.epoch_order(7));
-        assert_permutation(&so.epoch_order(0)).unwrap();
+        let a = so.epoch_order(0).to_vec();
+        assert_eq!(a, so.epoch_order(7));
+        assert_permutation(&a).unwrap();
     }
 
     #[test]
     fn flipflop_reverses_odd_epochs() {
         let mut ff = FlipFlop::new(20, 2);
-        let e0 = ff.epoch_order(0);
-        let e1 = ff.epoch_order(1);
+        let e0 = ff.epoch_order(0).to_vec();
+        let e1 = ff.epoch_order(1).to_vec();
         let mut rev = e0.clone();
         rev.reverse();
         assert_eq!(e1, rev);
-        let e2 = ff.epoch_order(2);
+        let e2 = ff.epoch_order(2).to_vec();
         assert_ne!(e2, e0, "even epoch reshuffles");
         assert_permutation(&e2).unwrap();
     }
@@ -334,14 +452,14 @@ mod tests {
     #[test]
     fn sequential_identity() {
         let mut s = Sequential::new(5);
-        assert_eq!(s.epoch_order(3), vec![0, 1, 2, 3, 4]);
+        assert_eq!(s.epoch_order(3), &[0, 1, 2, 3, 4]);
     }
 
     #[test]
     fn fixed_order_replays() {
         let mut f = FixedOrder::new(vec![2, 0, 1], "grab-retrain");
-        assert_eq!(f.epoch_order(0), vec![2, 0, 1]);
-        assert_eq!(f.epoch_order(9), vec![2, 0, 1]);
+        assert_eq!(f.epoch_order(0), &[2, 0, 1]);
+        assert_eq!(f.epoch_order(9), &[2, 0, 1]);
     }
 
     #[test]
@@ -354,6 +472,8 @@ mod tests {
             OrderingKind::GreedyOrdering,
             OrderingKind::GraB,
             OrderingKind::OneStepGraB,
+            OrderingKind::PairBalance,
+            OrderingKind::ShardedPairBalance,
             OrderingKind::Sequential,
         ] {
             cfg.ordering = kind;
@@ -371,15 +491,15 @@ mod tests {
         let cfg = TrainConfig::default();
         let inner = super::grab_from_cfg(&cfg, 8, 2);
         let mut p = OneStepGraB::new(inner);
-        let _e0 = p.epoch_order(0);
+        let _e0 = p.epoch_order(0).to_vec();
         assert!(p.wants_grads());
         for pos in 0..8 {
             p.observe(pos, &[pos as f32, -(pos as f32)]);
         }
         p.epoch_end();
         assert!(!p.wants_grads());
-        let e1 = p.epoch_order(1);
-        let e2 = p.epoch_order(2);
+        let e1 = p.epoch_order(1).to_vec();
+        let e2 = p.epoch_order(2).to_vec();
         assert_eq!(e1, e2);
         assert_permutation(&e1).unwrap();
     }

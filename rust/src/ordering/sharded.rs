@@ -1,0 +1,299 @@
+//! ShardedOrder — CD-GraB's distributed coordination (Cooper et al.
+//! 2023, Algorithm 2 `CD-GraB`), simulated in-process over W shards.
+//!
+//! The dataset's `0..n` units are split into W contiguous ranges
+//! ("workers"). Each shard runs its own [`PairBalance`] over its local
+//! units — pair balancing needs no global mean, so shards are fully
+//! independent between epoch boundaries, exactly the property CD-GraB
+//! exploits to parallelize GraB across workers. The coordinator does two
+//! things, mirroring the paper's server loop:
+//!
+//! * **merge** — the epoch order interleaves the shard orders
+//!   round-robin (lock-step rounds: round t visits each worker's t-th
+//!   local example), so consecutive global positions map to different
+//!   shards just as in synchronous data-parallel training;
+//! * **route** — observed gradient blocks are de-interleaved back to the
+//!   owning shard's balancer at that shard's next local position.
+//!
+//! With `W = 1` the coordinator is the identity and the output matches
+//! unsharded [`PairBalance`] exactly (tested below). The in-process
+//! version routes rows zero-copy one at a time; a multi-node deployment
+//! would batch per-shard slices and exchange orders at the epoch
+//! boundary — see ROADMAP "Open items".
+
+use std::ops::Range;
+
+use crate::ordering::{GradBlock, OrderPolicy, PairBalance};
+
+pub struct ShardedOrder {
+    /// Per-shard balancers over disjoint contiguous unit ranges.
+    shards: Vec<PairBalance>,
+    /// Global unit id of shard w's local unit 0.
+    bases: Vec<usize>,
+    n: usize,
+    /// Merged epoch order (global unit ids), rebuilt lazily per epoch.
+    merged: Vec<usize>,
+    /// Epoch position -> owning shard.
+    route: Vec<u32>,
+    /// Per-shard local observe cursors for the current epoch.
+    cursors: Vec<usize>,
+    /// Merged order needs rebuilding (new epoch).
+    dirty: bool,
+    observed: usize,
+}
+
+impl ShardedOrder {
+    /// Split `n` units of dimension `d` across `num_shards` contiguous
+    /// ranges (sizes differ by at most one; shards may be empty when
+    /// `num_shards > n`).
+    pub fn new(n: usize, d: usize, num_shards: usize) -> ShardedOrder {
+        assert!(num_shards >= 1, "need at least one shard");
+        let base_size = n / num_shards;
+        let remainder = n % num_shards;
+        let mut shards = Vec::with_capacity(num_shards);
+        let mut bases = Vec::with_capacity(num_shards);
+        let mut start = 0;
+        for w in 0..num_shards {
+            let size = base_size + usize::from(w < remainder);
+            shards.push(PairBalance::new(size, d));
+            bases.push(start);
+            start += size;
+        }
+        debug_assert_eq!(start, n);
+        ShardedOrder {
+            shards,
+            bases,
+            n,
+            merged: vec![0; n],
+            route: vec![0; n],
+            cursors: vec![0; num_shards],
+            dirty: true,
+            observed: 0,
+        }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Round-robin merge of the shard-local orders into the global epoch
+    /// order, plus the position->shard routing table. Local unit ids are
+    /// lifted to global ids with the shard base offset.
+    fn rebuild(&mut self, epoch: usize) {
+        let locals: Vec<&[usize]> = self
+            .shards
+            .iter_mut()
+            .map(|s| s.epoch_order(epoch))
+            .collect();
+        let mut taken: Vec<usize> = vec![0; locals.len()];
+        let mut pos = 0;
+        while pos < self.n {
+            for (w, local) in locals.iter().enumerate() {
+                if taken[w] < local.len() {
+                    self.merged[pos] = self.bases[w] + local[taken[w]];
+                    self.route[pos] = w as u32;
+                    taken[w] += 1;
+                    pos += 1;
+                }
+            }
+        }
+        for c in self.cursors.iter_mut() {
+            *c = 0;
+        }
+    }
+}
+
+impl OrderPolicy for ShardedOrder {
+    fn name(&self) -> &'static str {
+        "cd-grab"
+    }
+
+    fn epoch_order(&mut self, epoch: usize) -> &[usize] {
+        if self.dirty {
+            self.rebuild(epoch);
+            self.dirty = false;
+        }
+        &self.merged
+    }
+
+    fn observe_block(&mut self, range: Range<usize>, block: &GradBlock) {
+        debug_assert_eq!(range.len(), block.rows());
+        debug_assert!(range.end <= self.n);
+        debug_assert!(!self.dirty, "observe before epoch_order");
+        if self.shards.len() == 1 {
+            // Degenerate coordinator: local positions == global
+            // positions, forward the whole block untouched so W=1 costs
+            // exactly what unsharded PairBalance costs.
+            let q = self.cursors[0];
+            self.cursors[0] += block.rows();
+            self.shards[0].observe_block(q..q + block.rows(), block);
+        } else {
+            // De-interleave rows to their owning shard at its next local
+            // position (local positions arrive in order by construction
+            // of the round-robin merge). Shards are concrete
+            // PairBalance values, so these are static calls; the per-row
+            // forwarding (vs gathering each shard's strided rows into a
+            // scratch block) is the zero-copy tradeoff noted in
+            // ROADMAP "Open items".
+            for (i, row) in block.iter_rows().enumerate() {
+                let w = self.route[range.start + i] as usize;
+                let q = self.cursors[w];
+                self.cursors[w] += 1;
+                self.shards[w].observe_block(
+                    q..q + 1,
+                    &GradBlock::new(row, block.dim()),
+                );
+            }
+        }
+        self.observed += block.rows();
+    }
+
+    fn epoch_end(&mut self) {
+        assert_eq!(
+            self.observed, self.n,
+            "ShardedOrder epoch_end before observing all {} units", self.n
+        );
+        for s in self.shards.iter_mut() {
+            s.epoch_end();
+        }
+        self.observed = 0;
+        self.dirty = true;
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.shards.iter().map(|s| s.state_bytes()).sum::<usize>()
+            + self.merged.len() * std::mem::size_of::<usize>()
+            + self.route.len() * std::mem::size_of::<u32>()
+    }
+
+    fn wants_grads(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::herding::herding_bound;
+    use crate::util::prop::{self, assert_permutation, gen};
+    use crate::util::rng::Rng;
+
+    fn feed_epoch(
+        p: &mut dyn OrderPolicy,
+        vs: &[Vec<f32>],
+        block: usize,
+    ) {
+        let mut flat = Vec::new();
+        crate::ordering::stream_static_epoch(p, vs, &mut flat, block);
+    }
+
+    #[test]
+    fn shard_ranges_partition_units() {
+        let s = ShardedOrder::new(10, 2, 4);
+        assert_eq!(s.num_shards(), 4);
+        assert_eq!(s.bases, vec![0, 3, 6, 8]);
+        let sizes: Vec<usize> =
+            s.shards.iter().map(|p| p.len()).collect();
+        assert_eq!(sizes, vec![3, 3, 2, 2]);
+    }
+
+    #[test]
+    fn first_epoch_interleaves_shards_round_robin() {
+        let mut s = ShardedOrder::new(10, 2, 4);
+        // Shard locals are identity on epoch 0, so the merge is the
+        // lock-step interleave of [0,1,2], [3,4,5], [6,7], [8,9].
+        assert_eq!(
+            s.epoch_order(0),
+            &[0, 3, 6, 8, 1, 4, 7, 9, 2, 5]
+        );
+    }
+
+    #[test]
+    fn sharded_order_is_always_a_permutation() {
+        // The ISSUE's property test: W shards, random n/d/block sizes,
+        // every epoch's merged order is a valid permutation of 0..n.
+        prop::forall("sharded permutations", 24, |rng| {
+            let n = 1 + rng.gen_range(96) as usize;
+            let d = 1 + rng.gen_range(6) as usize;
+            let w = 1 + rng.gen_range(8) as usize;
+            let b = 1 + rng.gen_range(9) as usize;
+            let vs = gen::vec_set(rng, n, d);
+            let mut p = ShardedOrder::new(n, d, w);
+            for _ in 0..3 {
+                assert_permutation(p.epoch_order(0))?;
+                feed_epoch(&mut p, &vs, b);
+            }
+            assert_permutation(p.epoch_order(0))?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn single_shard_matches_unsharded_pair_balance_exactly() {
+        // Acceptance gate: W=1 sharded output == unsharded PairBalance,
+        // byte for byte, across epochs and block sizes.
+        let mut rng = Rng::new(5);
+        for (n, b) in [(33usize, 7usize), (64, 16), (10, 1)] {
+            let d = 8;
+            let vs = gen::vec_set(&mut rng, n, d);
+            let mut sharded = ShardedOrder::new(n, d, 1);
+            let mut plain = PairBalance::new(n, d);
+            for _ in 0..3 {
+                feed_epoch(&mut sharded, &vs, b);
+                feed_epoch(&mut plain, &vs, b);
+                assert_eq!(
+                    sharded.epoch_order(0).to_vec(),
+                    plain.epoch_order(0).to_vec(),
+                    "n={n} b={b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_beats_random_on_static_gradients() {
+        // W in {1, 4}: the coordinator's merged order must still beat
+        // random reshuffling's herding bound (CD-GraB's headline).
+        let mut rng = Rng::new(1);
+        let n = 1024;
+        let d = 32;
+        let vs = gen::vec_set(&mut rng, n, d);
+        let mut rand_acc = 0.0f32;
+        for _ in 0..5 {
+            let perm = rng.permutation(n);
+            rand_acc += herding_bound(&vs, &perm).0;
+        }
+        let rand_inf = rand_acc / 5.0;
+        for w in [1usize, 4] {
+            let mut p = ShardedOrder::new(n, d, w);
+            for _ in 0..8 {
+                feed_epoch(&mut p, &vs, 64);
+            }
+            let (inf, _) = herding_bound(&vs, p.epoch_order(0));
+            assert!(
+                inf < rand_inf,
+                "W={w}: sharded {inf} vs random {rand_inf}"
+            );
+        }
+    }
+
+    #[test]
+    fn more_shards_than_units_still_works() {
+        let d = 3;
+        let vs = gen::vec_set(&mut Rng::new(2), 3, d);
+        let mut p = ShardedOrder::new(3, d, 8);
+        for _ in 0..2 {
+            assert_permutation(p.epoch_order(0)).unwrap();
+            feed_epoch(&mut p, &vs, 2);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "before observing")]
+    fn epoch_end_requires_full_epoch() {
+        let mut p = ShardedOrder::new(4, 1, 2);
+        let _ = p.epoch_order(0);
+        p.observe(0, &[1.0]);
+        p.epoch_end();
+    }
+}

@@ -33,7 +33,7 @@ use crate::data::loader::{HostBatch, Loader, Microbatch};
 use crate::data::Dataset;
 use crate::model::build_datasets;
 use crate::optim::{GradAccumulator, MomentumSgd, Scheduler};
-use crate::ordering::{build_policy, OrderPolicy};
+use crate::ordering::{build_policy, GradBlock, OrderPolicy};
 use crate::runtime::Runtime;
 use crate::train::{EpochMetrics, TrainResult};
 use crate::util::timer::Stopwatch;
@@ -111,7 +111,7 @@ impl PipelineTrainer {
         for epoch in 0..self.cfg.epochs {
             epochs.push(self.run_epoch(epoch)?);
         }
-        let final_order = self.policy.epoch_order(self.cfg.epochs);
+        let final_order = self.policy.epoch_order(self.cfg.epochs).to_vec();
         Ok(TrainResult {
             run_id: format!("{}-pipeline", self.cfg.run_id()),
             epochs,
@@ -129,8 +129,8 @@ impl PipelineTrainer {
         let wants_grads = self.policy.wants_grads();
         let window = b * self.cfg.accum_steps;
 
-        let order = self.policy.epoch_order(epoch);
-        let mbs: Vec<Microbatch> = Loader::new(&order, b).collect();
+        let mbs: Vec<Microbatch> =
+            Loader::new(self.policy.epoch_order(epoch), b).collect();
         let total = mbs.len();
 
         // Channel capacities: small and bounded => real backpressure.
@@ -261,14 +261,20 @@ impl PipelineTrainer {
                 o
             };
             next_seq += 1;
+            // Same block semantics as the sync trainer: the valid prefix
+            // of the worker's gradient buffer is one zero-copy GradBlock,
+            // so both paths produce byte-identical GraB orders.
+            if wants_grads && out.mb.valid > 0 {
+                let sw = Stopwatch::start();
+                self.policy.observe_block(
+                    out.mb.offset..out.mb.offset + out.mb.valid,
+                    &GradBlock::new(&out.grads[..out.mb.valid * d], d),
+                );
+                order_secs += sw.secs();
+            }
             for i in 0..out.mb.valid {
                 let g = &out.grads[i * d..(i + 1) * d];
                 loss_sum += out.losses[i] as f64;
-                if wants_grads {
-                    let sw = Stopwatch::start();
-                    self.policy.observe(out.mb.offset + i, g);
-                    order_secs += sw.secs();
-                }
                 if let Some(mean) = accum.push(g) {
                     let mut mean = mean.to_vec();
                     crate::optim::clip_global_norm(

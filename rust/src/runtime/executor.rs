@@ -8,6 +8,7 @@
 use anyhow::{ensure, Result};
 
 use super::artifact::{BalanceEntry, Dtype, ModelEntry};
+use crate::xla;
 
 fn xerr(e: xla::Error) -> anyhow::Error {
     anyhow::anyhow!("xla: {e:?}")

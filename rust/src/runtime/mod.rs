@@ -20,6 +20,8 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
+use crate::xla;
+
 /// Shared PJRT client + artifact directory. Compiling an HLO module is
 /// expensive; executables are cached per artifact file by the executors.
 pub struct Runtime {

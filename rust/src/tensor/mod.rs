@@ -6,6 +6,56 @@
 //! reliably vectorizes them (measured in benches/balance_hot.rs; see
 //! EXPERIMENTS.md §Perf for the before/after of naive vs unrolled).
 
+/// Zero-copy view over a contiguous row-major `[rows × d]` gradient block —
+/// the executor's upload buffer seen as `rows` per-example gradients. This
+/// is the unit of the ordering data path: policies receive whole blocks
+/// through [`crate::ordering::OrderPolicy::observe_block`] instead of one
+/// virtual call per example.
+#[derive(Clone, Copy, Debug)]
+pub struct GradBlock<'a> {
+    data: &'a [f32],
+    d: usize,
+}
+
+impl<'a> GradBlock<'a> {
+    /// View `data` as `data.len() / d` rows of dimension `d`.
+    pub fn new(data: &'a [f32], d: usize) -> GradBlock<'a> {
+        assert!(d > 0, "GradBlock dimension must be positive");
+        assert_eq!(
+            data.len() % d,
+            0,
+            "GradBlock data ({}) not a multiple of d ({d})",
+            data.len()
+        );
+        GradBlock { data, d }
+    }
+
+    /// Number of gradient rows in the block.
+    pub fn rows(&self) -> usize {
+        self.data.len() / self.d
+    }
+
+    /// Per-example gradient dimension.
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// The underlying contiguous `[rows × d]` buffer.
+    pub fn data(&self) -> &'a [f32] {
+        self.data
+    }
+
+    /// Row `i` as a `d`-slice.
+    pub fn row(&self, i: usize) -> &'a [f32] {
+        &self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Iterate rows in order.
+    pub fn iter_rows(&self) -> std::slice::ChunksExact<'a, f32> {
+        self.data.chunks_exact(self.d)
+    }
+}
+
 /// Dot product with 8-way unrolled accumulators.
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     assert_eq!(a.len(), b.len());
@@ -133,6 +183,141 @@ pub fn grab_update(
         let gl = gt[i];
         st[i] += eps * (gl - mt[i]);
         ft[i] += inv_n * gl;
+    }
+}
+
+/// Batched GraB decision statistic: `out[i] = <s, block.row(i) - m>` for
+/// every row of a `[B × d]` block against ONE refresh of the running sum
+/// `s` and stale mean `m`. This is the block counterpart of
+/// [`dot_centered`]: `s`/`m` stay cache-hot across the whole block instead
+/// of being re-streamed per example, which is what amortizes the observe
+/// path (see benches/ordering_overhead.rs).
+pub fn dot_centered_block(
+    s: &[f32],
+    m: &[f32],
+    block: &[f32],
+    d: usize,
+    out: &mut Vec<f32>,
+) {
+    assert_eq!(s.len(), d);
+    assert_eq!(m.len(), d);
+    assert_eq!(block.len() % d, 0);
+    out.clear();
+    for row in block.chunks_exact(d) {
+        out.push(dot_centered(s, row, m));
+    }
+}
+
+/// Fused block accumulators: `signed += eps * g` and `sum += g` in ONE
+/// pass over `g` (eps is ±1, so the signed update is an add/sub). Used by
+/// the batched observe path to defer the running-sum and fresh-mean folds
+/// to once per block.
+pub fn sign_sum_accum(
+    eps: f32,
+    g: &[f32],
+    signed: &mut [f32],
+    sum: &mut [f32],
+) {
+    assert_eq!(g.len(), signed.len());
+    assert_eq!(g.len(), sum.len());
+    let split = g.len() - g.len() % 8;
+    let (gc, gt) = g.split_at(split);
+    let (sc, st) = signed.split_at_mut(split);
+    let (uc, ut) = sum.split_at_mut(split);
+    for ((gv, sv), uv) in gc
+        .chunks_exact(8)
+        .zip(sc.chunks_exact_mut(8))
+        .zip(uc.chunks_exact_mut(8))
+    {
+        for lane in 0..8 {
+            let gl = gv[lane];
+            sv[lane] += eps * gl;
+            uv[lane] += gl;
+        }
+    }
+    for i in 0..gt.len() {
+        let gl = gt[i];
+        st[i] += eps * gl;
+        ut[i] += gl;
+    }
+}
+
+/// Block fold of the running signed sum: `s += signed - net * m`, where
+/// `signed = Σ eps_i * g_i` and `net = Σ eps_i` over the block. Together
+/// with [`sign_sum_accum`] this equals per-row `s += eps_i * (g_i - m)`
+/// (bit-identical for a 1-row block) at one read of `m` per block.
+pub fn fold_signed_block(
+    signed: &[f32],
+    net: f32,
+    m: &[f32],
+    s: &mut [f32],
+) {
+    assert_eq!(signed.len(), m.len());
+    assert_eq!(signed.len(), s.len());
+    let split = s.len() - s.len() % 8;
+    let (dc, dt) = signed.split_at(split);
+    let (mc, mt) = m.split_at(split);
+    let (sc, st) = s.split_at_mut(split);
+    for ((dv, mv), sv) in dc
+        .chunks_exact(8)
+        .zip(mc.chunks_exact(8))
+        .zip(sc.chunks_exact_mut(8))
+    {
+        for lane in 0..8 {
+            sv[lane] += dv[lane] - net * mv[lane];
+        }
+    }
+    for i in 0..dt.len() {
+        st[i] += dt[i] - net * mt[i];
+    }
+}
+
+/// Fused pair-difference decision statistic: `<s, a - b>` in one pass
+/// without materializing the difference — the PairBalance (CD-GraB)
+/// counterpart of [`dot_centered`].
+pub fn dot_diff(s: &[f32], a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(s.len(), a.len());
+    assert_eq!(s.len(), b.len());
+    let mut acc = [0.0f32; 8];
+    let split = s.len() - s.len() % 8;
+    let (sc, st) = s.split_at(split);
+    let (ac, at) = a.split_at(split);
+    let (bc, bt) = b.split_at(split);
+    for ((sv, av), bv) in sc
+        .chunks_exact(8)
+        .zip(ac.chunks_exact(8))
+        .zip(bc.chunks_exact(8))
+    {
+        for lane in 0..8 {
+            acc[lane] += sv[lane] * (av[lane] - bv[lane]);
+        }
+    }
+    let mut tail = 0.0f32;
+    for i in 0..st.len() {
+        tail += st[i] * (at[i] - bt[i]);
+    }
+    acc.iter().sum::<f32>() + tail
+}
+
+/// Fused pair-difference update: `s += eps * (a - b)` in one pass.
+pub fn axpy_diff(eps: f32, a: &[f32], b: &[f32], s: &mut [f32]) {
+    assert_eq!(s.len(), a.len());
+    assert_eq!(s.len(), b.len());
+    let split = s.len() - s.len() % 8;
+    let (ac, at) = a.split_at(split);
+    let (bc, bt) = b.split_at(split);
+    let (sc, st) = s.split_at_mut(split);
+    for ((av, bv), sv) in ac
+        .chunks_exact(8)
+        .zip(bc.chunks_exact(8))
+        .zip(sc.chunks_exact_mut(8))
+    {
+        for lane in 0..8 {
+            sv[lane] += eps * (av[lane] - bv[lane]);
+        }
+    }
+    for i in 0..at.len() {
+        st[i] += eps * (at[i] - bt[i]);
     }
 }
 
@@ -280,6 +465,143 @@ mod tests {
         }
         for (a, b) in f1.iter().zip(&f2) {
             assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn grad_block_views_rows() {
+        let data: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        let blk = GradBlock::new(&data, 3);
+        assert_eq!(blk.rows(), 4);
+        assert_eq!(blk.dim(), 3);
+        assert_eq!(blk.row(1), &[3.0, 4.0, 5.0]);
+        let rows: Vec<&[f32]> = blk.iter_rows().collect();
+        assert_eq!(rows.len(), 4);
+        assert_eq!(rows[3], &[9.0, 10.0, 11.0]);
+        // Empty block is legal (zero rows).
+        assert_eq!(GradBlock::new(&[], 7).rows(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a multiple")]
+    fn grad_block_rejects_ragged() {
+        let _ = GradBlock::new(&[1.0, 2.0, 3.0], 2);
+    }
+
+    #[test]
+    fn dot_centered_block_matches_per_row() {
+        let mut rng = Rng::new(4);
+        for (rows, d) in [(1usize, 17usize), (4, 8), (7, 33)] {
+            let s = rvec(&mut rng, d);
+            let m = rvec(&mut rng, d);
+            let block: Vec<f32> = (0..rows * d)
+                .map(|_| rng.gauss() as f32)
+                .collect();
+            let mut out = Vec::new();
+            dot_centered_block(&s, &m, &block, d, &mut out);
+            assert_eq!(out.len(), rows);
+            for (i, got) in out.iter().enumerate() {
+                let want =
+                    dot_centered(&s, &block[i * d..(i + 1) * d], &m);
+                assert!((got - want).abs() < 1e-4, "row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn block_fold_matches_per_row_updates() {
+        // sign_sum_accum + fold_signed_block over a block must equal the
+        // per-row fused grab_update stream (same signs, same rows).
+        let mut rng = Rng::new(5);
+        let d = 67;
+        let rows = 5;
+        let m = rvec(&mut rng, d);
+        let block: Vec<f32> =
+            (0..rows * d).map(|_| rng.gauss() as f32).collect();
+        let signs = [1.0f32, -1.0, -1.0, 1.0, -1.0];
+        let inv_n = 0.125f32;
+
+        let mut s_ref = rvec(&mut rng, d);
+        let mut f_ref = rvec(&mut rng, d);
+        let mut s_blk = s_ref.clone();
+        let mut f_blk = f_ref.clone();
+
+        for (i, &eps) in signs.iter().enumerate() {
+            grab_update(
+                eps,
+                inv_n,
+                &block[i * d..(i + 1) * d],
+                &m,
+                &mut s_ref,
+                &mut f_ref,
+            );
+        }
+
+        let mut signed = vec![0.0f32; d];
+        let mut sum = vec![0.0f32; d];
+        let mut net = 0.0f32;
+        for (i, &eps) in signs.iter().enumerate() {
+            sign_sum_accum(
+                eps,
+                &block[i * d..(i + 1) * d],
+                &mut signed,
+                &mut sum,
+            );
+            net += eps;
+        }
+        fold_signed_block(&signed, net, &m, &mut s_blk);
+        axpy(inv_n, &sum, &mut f_blk);
+
+        for (a, b) in s_blk.iter().zip(&s_ref) {
+            assert!((a - b).abs() < 1e-4);
+        }
+        for (a, b) in f_blk.iter().zip(&f_ref) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn single_row_block_fold_is_bit_identical_to_grab_update() {
+        // The 1-row block path must reproduce Algorithm 4 exactly, so the
+        // per-example compatibility shim keeps the paper semantics.
+        let mut rng = Rng::new(6);
+        let d = 41;
+        let g = rvec(&mut rng, d);
+        let m = rvec(&mut rng, d);
+        let mut s1 = rvec(&mut rng, d);
+        let mut f1 = rvec(&mut rng, d);
+        let mut s2 = s1.clone();
+        let mut f2 = f1.clone();
+        grab_update(-1.0, 0.25, &g, &m, &mut s1, &mut f1);
+
+        let mut signed = vec![0.0f32; d];
+        let mut sum = vec![0.0f32; d];
+        sign_sum_accum(-1.0, &g, &mut signed, &mut sum);
+        fold_signed_block(&signed, -1.0, &m, &mut s2);
+        axpy(0.25, &sum, &mut f2);
+        assert_eq!(s1, s2);
+        assert_eq!(f1, f2);
+    }
+
+    #[test]
+    fn diff_kernels_match_two_step() {
+        let mut rng = Rng::new(7);
+        let d = 99;
+        let s = rvec(&mut rng, d);
+        let a = rvec(&mut rng, d);
+        let b = rvec(&mut rng, d);
+        let mut diff = vec![0.0f32; d];
+        sub_into(&a, &b, &mut diff);
+        let want = dot(&s, &diff);
+        let got = dot_diff(&s, &a, &b);
+        assert!((want - got).abs() < 1e-3);
+
+        let mut s1 = s.clone();
+        let mut s2 = s.clone();
+        axpy(-1.0, &diff, &mut s1);
+        axpy_diff(-1.0, &a, &b, &mut s2);
+        for (x, y) in s1.iter().zip(&s2) {
+            assert!((x - y).abs() < 1e-5);
         }
     }
 

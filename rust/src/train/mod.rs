@@ -15,13 +15,26 @@ pub use metrics::{EpochMetrics, MetricsSink};
 use anyhow::{Context, Result};
 
 use crate::config::{LrSchedule, TrainConfig};
-use crate::data::loader::{HostBatch, Loader};
+use crate::data::loader::{HostBatch, Loader, Microbatch};
 use crate::data::Dataset;
 use crate::model::build_datasets;
 use crate::optim::{GradAccumulator, MomentumSgd, Scheduler};
-use crate::ordering::{build_policy, OrderPolicy};
+use crate::ordering::{build_policy, GradBlock, OrderPolicy};
 use crate::runtime::{EvalExecutor, GradExecutor, Runtime};
 use crate::util::timer::Stopwatch;
+
+/// Eval-gating predicate shared by the trainers: evaluate every
+/// `eval_every` epochs and always on the final epoch — unless
+/// `eval_every == 0`, which disables evaluation entirely (the old
+/// `a && b || c` precedence evaluated the final epoch even then).
+pub(crate) fn should_eval(
+    eval_every: usize,
+    epoch: usize,
+    epochs: usize,
+) -> bool {
+    eval_every > 0
+        && ((epoch + 1) % eval_every == 0 || epoch + 1 == epochs)
+}
 
 /// Outcome of a full training run.
 #[derive(Clone, Debug)]
@@ -109,7 +122,7 @@ impl Trainer {
             }
             epochs.push(m);
         }
-        let final_order = self.policy.epoch_order(self.cfg.epochs);
+        let final_order = self.policy.epoch_order(self.cfg.epochs).to_vec();
         Ok(TrainResult {
             run_id: self.cfg.run_id(),
             epochs,
@@ -118,8 +131,10 @@ impl Trainer {
         })
     }
 
-    /// One epoch: visit every unit in the policy's order, stream grads
-    /// through the policy, step the optimizer per accumulation window.
+    /// One epoch: visit every unit in the policy's order, stream the
+    /// valid rows of each executor gradient buffer through the policy as
+    /// one zero-copy [`GradBlock`], step the optimizer per accumulation
+    /// window.
     pub fn run_epoch(&mut self, epoch: usize) -> Result<EpochMetrics> {
         let sw_epoch = Stopwatch::start();
         let b = self.grad_exec.batch();
@@ -128,8 +143,11 @@ impl Trainer {
         let lr = self.sched.lr();
         let wants_grads = self.policy.wants_grads();
 
-        let order = self.policy.epoch_order(epoch);
-        debug_assert_eq!(order.len(), n);
+        let mbs: Vec<Microbatch> = {
+            let order = self.policy.epoch_order(epoch);
+            debug_assert_eq!(order.len(), n);
+            Loader::new(order, b).collect()
+        };
 
         let mut accum = GradAccumulator::new(d, b * self.cfg.accum_steps);
         let mut host = HostBatch::default();
@@ -140,7 +158,7 @@ impl Trainer {
         let mut order_secs = 0.0f64;
         let mut steps = 0usize;
 
-        for mb in Loader::new(&order, b) {
+        for mb in mbs {
             host.fill(&self.train_ds, &mb);
             let sw = Stopwatch::start();
             self.grad_exec.run(
@@ -153,14 +171,20 @@ impl Trainer {
             )?;
             grad_secs += sw.secs();
 
+            // One policy dispatch per microbatch: the valid prefix of the
+            // executor buffer viewed as a [valid × d] block (padding rows
+            // are never balanced).
+            if wants_grads && mb.valid > 0 {
+                let sw_o = Stopwatch::start();
+                self.policy.observe_block(
+                    mb.offset..mb.offset + mb.valid,
+                    &GradBlock::new(&grads[..mb.valid * d], d),
+                );
+                order_secs += sw_o.secs();
+            }
             for i in 0..mb.valid {
                 let g = &grads[i * d..(i + 1) * d];
                 loss_sum += losses[i] as f64;
-                if wants_grads {
-                    let sw_o = Stopwatch::start();
-                    self.policy.observe(mb.offset + i, g);
-                    order_secs += sw_o.secs();
-                }
                 if let Some(mean) = accum.push(g) {
                     let mut mean = mean.to_vec();
                     crate::optim::clip_global_norm(
@@ -186,15 +210,13 @@ impl Trainer {
         let train_loss = loss_sum / n as f64;
         self.sched.epoch_feedback(train_loss);
 
-        let (eval_loss, eval_acc) = if self.cfg.eval_every > 0
-            && (epoch + 1) % self.cfg.eval_every == 0
-            || epoch + 1 == self.cfg.epochs
-        {
-            let (l, a) = self.evaluate()?;
-            (Some(l), Some(a))
-        } else {
-            (None, None)
-        };
+        let (eval_loss, eval_acc) =
+            if should_eval(self.cfg.eval_every, epoch, self.cfg.epochs) {
+                let (l, a) = self.evaluate()?;
+                (Some(l), Some(a))
+            } else {
+                (None, None)
+            };
 
         Ok(EpochMetrics {
             epoch,
@@ -260,5 +282,33 @@ impl Trainer {
         }
         anyhow::ensure!(seen > 0, "eval set smaller than eval batch {e}");
         Ok((loss_sum / seen as f64, correct / seen as f64))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::should_eval;
+
+    #[test]
+    fn eval_every_zero_never_evaluates() {
+        // Regression: the old `a && b || c` precedence evaluated the
+        // final epoch even with eval_every == 0.
+        for epoch in 0..5 {
+            assert!(!should_eval(0, epoch, 5), "epoch {epoch}");
+        }
+    }
+
+    #[test]
+    fn eval_every_k_hits_multiples_and_final_epoch() {
+        let hits: Vec<usize> =
+            (0..7).filter(|&e| should_eval(3, e, 7)).collect();
+        // Epochs are 0-based: (e+1) % 3 == 0 -> e in {2, 5}, plus the
+        // final epoch e = 6.
+        assert_eq!(hits, vec![2, 5, 6]);
+    }
+
+    #[test]
+    fn eval_every_one_evaluates_every_epoch() {
+        assert!((0..4).all(|e| should_eval(1, e, 4)));
     }
 }

@@ -118,6 +118,8 @@ fn all_orderings_train_mnist() {
         OrderingKind::GreedyOrdering,
         OrderingKind::GraB,
         OrderingKind::OneStepGraB,
+        OrderingKind::PairBalance,
+        OrderingKind::ShardedPairBalance,
         OrderingKind::Sequential,
     ] {
         let cfg = tiny_cfg(Task::Mnist, ordering);
@@ -170,6 +172,56 @@ fn pipeline_matches_sync_exactly() {
         );
     }
     assert_eq!(sr.final_order, pr.final_order);
+}
+
+#[test]
+fn pipeline_matches_sync_epoch_orders_at_every_boundary() {
+    // The block-API equivalence gate: Trainer and PipelineTrainer must
+    // produce byte-identical GraB orders at EVERY epoch boundary, not
+    // just the last one — both stream the same [valid × d] GradBlocks
+    // through the same policy code.
+    let Some(rt) = runtime() else { return };
+    for epochs in 1..=3 {
+        let mut cfg = tiny_cfg(Task::Mnist, OrderingKind::GraB);
+        cfg.epochs = epochs;
+        cfg.n_examples = 192;
+        let mut sync = Trainer::new(cfg.clone(), &rt, None).unwrap();
+        let sr = sync.run().unwrap();
+        let mut pipe = PipelineTrainer::new(cfg, &rt).unwrap();
+        let pr = pipe.run().unwrap();
+        assert_eq!(
+            sr.final_order, pr.final_order,
+            "order diverged at epoch boundary {epochs}"
+        );
+    }
+}
+
+#[test]
+fn sharded_pair_balance_trains_and_matches_w1() {
+    // CD-GraB end-to-end: the sharded policy trains, and W=1 sharding
+    // is byte-identical to unsharded PairBalance through the full
+    // trainer data path.
+    let Some(rt) = runtime() else { return };
+    let mut cfg = tiny_cfg(Task::Mnist, OrderingKind::ShardedPairBalance);
+    cfg.num_shards = 1;
+    let mut sharded = Trainer::new(cfg, &rt, None).unwrap();
+    let shr = sharded.run().unwrap();
+
+    let cfg = tiny_cfg(Task::Mnist, OrderingKind::PairBalance);
+    let mut plain = Trainer::new(cfg, &rt, None).unwrap();
+    let plr = plain.run().unwrap();
+    assert_eq!(shr.final_order, plr.final_order);
+    for (a, b) in shr.epochs.iter().zip(&plr.epochs) {
+        assert!((a.train_loss - b.train_loss).abs() < 1e-9);
+    }
+
+    let mut cfg = tiny_cfg(Task::Mnist, OrderingKind::ShardedPairBalance);
+    cfg.num_shards = 4;
+    let mut wide = Trainer::new(cfg, &rt, None).unwrap();
+    let wr = wide.run().unwrap();
+    let mut order = wr.final_order;
+    order.sort_unstable();
+    assert_eq!(order, (0..128).collect::<Vec<_>>());
 }
 
 #[test]

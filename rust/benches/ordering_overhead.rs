@@ -6,7 +6,11 @@
 //!     dispatch + running-sum refresh per example) vs block observe
 //!     throughput at d = 4096 — the refactor's ≥1.5× acceptance gate;
 //!   * PairBalance (CD-GraB) vs GraB observe throughput and herding
-//!     bounds on the same static gradient stream.
+//!     bounds on the same static gradient stream;
+//!   * the ShardedOrder dispatch backends: strided row forwarding vs
+//!     gathered scratch-block batching vs the async worker-thread
+//!     coordinator (per-epoch wall clock incl. the epoch-boundary
+//!     drain, plus queue backpressure counts).
 //!
 //! Run: `cargo bench --bench ordering_overhead`
 
@@ -218,8 +222,64 @@ fn pair_vs_grab_herding_section() {
     }
 }
 
+fn sharded_dispatch_section() {
+    println!(
+        "\n== sharded coordinator dispatch: strided vs gathered vs \
+         async =="
+    );
+    let n = 2048;
+    let d = 256;
+    let block = 64;
+    let w = 4;
+    let depth = 4;
+    let mut rng = Rng::new(21);
+    let flat: Vec<f32> =
+        (0..n * d).map(|_| rng.gauss() as f32).collect();
+
+    // Policies persist across bench iterations, so each iteration is
+    // one steady-state epoch (thread spawn / first-touch costs land in
+    // the warmup, not the measurement).
+    let mut strided = ShardedOrder::new(n, d, w);
+    let st = Bench::new(format!("sharded_observe/strided/w{w}/d{d}"))
+        .with_iters(5, 60)
+        .run(|| observe_epoch_blocks(&mut strided, &flat, n, d, block));
+
+    let mut gathered = ShardedOrder::new_gathered(n, d, w);
+    let ga = Bench::new(format!("sharded_observe/gathered/w{w}/d{d}"))
+        .with_iters(5, 60)
+        .run(|| observe_epoch_blocks(&mut gathered, &flat, n, d, block));
+
+    let mut asynch = ShardedOrder::new_async(n, d, w, depth);
+    let asy = Bench::new(format!(
+        "sharded_observe/async/w{w}/d{d}/q{depth}"
+    ))
+    .with_iters(5, 60)
+    .run(|| observe_epoch_blocks(&mut asynch, &flat, n, d, block));
+
+    println!(
+        "\ngather vs strided (sync coordinator): {:.2}x \
+         (one copy buys batched balancing)",
+        st.summary.mean / ga.summary.mean
+    );
+    println!(
+        "async vs sync strided coordinator: {:.2}x per epoch \
+         (incl. epoch-boundary drain; {} queue stalls across all \
+         epochs incl. warmup)",
+        st.summary.mean / asy.summary.mean,
+        asynch.queue_stalls(),
+    );
+    println!(
+        "strided {:.1} ns/example, gathered {:.1} ns/example, \
+         async {:.1} ns/example (coordinator-thread epoch time)",
+        st.summary.mean / n as f64 * 1e9,
+        ga.summary.mean / n as f64 * 1e9,
+        asy.summary.mean / n as f64 * 1e9,
+    );
+}
+
 fn main() {
     table1_section();
     block_vs_per_example_section();
     pair_vs_grab_herding_section();
+    sharded_dispatch_section();
 }

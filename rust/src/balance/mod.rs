@@ -36,6 +36,7 @@ pub trait Balancer {
         false
     }
 
+    /// Short algorithm name for logs and tables.
     fn name(&self) -> &'static str;
 }
 
@@ -85,10 +86,12 @@ pub struct WalkBalancer {
     /// distinct from the caller's unscaled sum).
     s_scaled: Vec<f32>,
     normalizer: f32,
+    /// Precondition failures observed (each restarts the scaled sum).
     pub failures: usize,
 }
 
 impl WalkBalancer {
+    /// A walk balancer with constant `c` and its own RNG stream.
     pub fn new(c: f64, seed: u64) -> WalkBalancer {
         assert!(c > 0.0, "walk c must be positive");
         WalkBalancer {

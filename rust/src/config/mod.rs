@@ -26,6 +26,7 @@ pub enum Task {
 }
 
 impl Task {
+    /// Parse a task name as accepted by `--task`.
     pub fn parse(s: &str) -> Result<Task> {
         Ok(match s {
             "mnist" => Task::Mnist,
@@ -36,6 +37,7 @@ impl Task {
         })
     }
 
+    /// Canonical task name (round-trips through [`Task::parse`]).
     pub fn name(&self) -> &'static str {
         match self {
             Task::Mnist => "mnist",
@@ -59,10 +61,16 @@ impl Task {
 /// Example-ordering policy selector (paper Section 6 baselines + ablations).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum OrderingKind {
+    /// A fresh uniform permutation every epoch (the paper's baseline).
     RandomReshuffle,
+    /// One random permutation reused every epoch.
     ShuffleOnce,
+    /// Rajput et al. 2021: reshuffle on even epochs, replay reversed on
+    /// odd epochs.
     FlipFlop,
+    /// Greedy herding over stored stale gradients (paper Section 3).
     GreedyOrdering,
+    /// The paper's GraB: stale-mean-centered online balancing.
     GraB,
     /// Fig. 3: GraB for one epoch, then freeze the found order.
     OneStepGraB,
@@ -79,6 +87,7 @@ pub enum OrderingKind {
 }
 
 impl OrderingKind {
+    /// Parse an ordering name as accepted by `--ordering`.
     pub fn parse(s: &str) -> Result<OrderingKind> {
         Ok(match s {
             "rr" | "random-reshuffle" => OrderingKind::RandomReshuffle,
@@ -104,6 +113,7 @@ impl OrderingKind {
         })
     }
 
+    /// Canonical name (round-trips through [`OrderingKind::parse`]).
     pub fn name(&self) -> &'static str {
         match self {
             OrderingKind::RandomReshuffle => "rr",
@@ -132,6 +142,7 @@ pub enum BalancerKind {
 }
 
 impl BalancerKind {
+    /// Parse a balancer name as accepted by `--balancer`.
     pub fn parse(s: &str) -> Result<BalancerKind> {
         Ok(match s {
             "deterministic" | "alg5" => BalancerKind::Deterministic,
@@ -141,6 +152,7 @@ impl BalancerKind {
         })
     }
 
+    /// Canonical name (round-trips through [`BalancerKind::parse`]).
     pub fn name(&self) -> &'static str {
         match self {
             BalancerKind::Deterministic => "alg5",
@@ -153,6 +165,7 @@ impl BalancerKind {
 /// LR schedule selector.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum LrSchedule {
+    /// Fixed learning rate for the whole run.
     Constant,
     /// Multiply by `factor` when the epoch train loss fails to improve by
     /// `threshold` for `patience` epochs (paper's WikiText-2 recipe).
@@ -166,20 +179,30 @@ pub enum LrSchedule {
 /// A fully-specified training run.
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
+    /// Dataset + model pairing.
     pub task: Task,
+    /// Example-ordering policy.
     pub ordering: OrderingKind,
+    /// Balancing subroutine used by GraB-family orderings.
     pub balancer: BalancerKind,
+    /// Number of training epochs.
     pub epochs: usize,
     /// Dataset size (number of ordering units). Paper-scale defaults are
     /// large; experiments shrink this for CI-speed runs.
     pub n_examples: usize,
+    /// Eval dataset size.
     pub n_eval: usize,
     /// Optimizer step batch = microbatch (artifact B) * accum_steps.
     pub accum_steps: usize,
+    /// Base learning rate.
     pub lr: f64,
+    /// SGD momentum coefficient in `[0, 1)`.
     pub momentum: f64,
+    /// Decoupled weight decay coefficient.
     pub weight_decay: f64,
+    /// Learning-rate schedule.
     pub lr_schedule: LrSchedule,
+    /// Seed for every stochastic component of the run.
     pub seed: u64,
     /// Walk balancer hyperparameter (Theorem 4's c); 0 = auto.
     pub walk_c: f64,
@@ -189,6 +212,19 @@ pub struct TrainConfig {
     /// Shard count for [`OrderingKind::ShardedPairBalance`] (CD-GraB
     /// workers); ignored by other orderings.
     pub num_shards: usize,
+    /// Run each CD-GraB shard balancer on its own worker thread behind a
+    /// bounded block queue (`--async-shards`); the trainer's
+    /// `observe_block` becomes gather + enqueue and the epoch-boundary
+    /// merge is the only join. Bit-deterministic: epoch orders equal the
+    /// synchronous path's exactly (see docs/determinism.md). Ignored by
+    /// orderings other than [`OrderingKind::ShardedPairBalance`].
+    pub async_shards: bool,
+    /// Per-shard block-queue depth for `--async-shards`: the maximum
+    /// number of in-flight gathered blocks per worker (also its scratch
+    /// allocation budget). Deeper queues absorb burstier producers at
+    /// the cost of `depth` gathered blocks per shard — each up to the
+    /// shard's rows-per-microbatch × d floats.
+    pub shard_queue_depth: usize,
     /// Where artifacts live.
     pub artifacts_dir: String,
     /// Optional metrics CSV path.
@@ -225,6 +261,8 @@ impl Default for TrainConfig {
             walk_c: 0.0,
             group_size: 1,
             num_shards: 1,
+            async_shards: false,
+            shard_queue_depth: 4,
             artifacts_dir: "artifacts".to_string(),
             metrics_out: None,
             eval_every: 1,
@@ -296,6 +334,20 @@ impl TrainConfig {
         self.walk_c = args.f64_or("walk-c", self.walk_c)?;
         self.group_size = args.usize_or("group-size", self.group_size)?;
         self.num_shards = args.usize_or("shards", self.num_shards)?;
+        // `--async-shards <token>` would silently bind the next token as
+        // this option's value and leave async mode off; reject that
+        // instead of letting the flag be swallowed.
+        if args.opt_str("async-shards").is_some() {
+            bail!(
+                "--async-shards is a boolean flag and takes no value \
+                 (put it last or before another --flag)"
+            );
+        }
+        if args.flag("async-shards") {
+            self.async_shards = true;
+        }
+        self.shard_queue_depth =
+            args.usize_or("queue-depth", self.shard_queue_depth)?;
         self.artifacts_dir =
             args.str_or("artifacts", &self.artifacts_dir);
         if let Some(m) = args.opt_str("metrics-out") {
@@ -334,9 +386,24 @@ impl TrainConfig {
             .unwrap_or(c.weight_decay);
         c.seed = doc.get_int("seed").unwrap_or(c.seed as i64) as u64;
         c.walk_c = doc.get_float("walk_c").unwrap_or(c.walk_c);
-        c.num_shards = doc
+        // Guard the `as usize` conversions: a negative TOML value must
+        // error, not wrap to ~2^64 (which would hang allocation).
+        let shards = doc
             .get_int("num_shards")
-            .unwrap_or(c.num_shards as i64) as usize;
+            .unwrap_or(c.num_shards as i64);
+        if shards < 1 {
+            bail!("num_shards must be >= 1, got {shards}");
+        }
+        c.num_shards = shards as usize;
+        c.async_shards =
+            doc.get_bool("async_shards").unwrap_or(c.async_shards);
+        let depth = doc
+            .get_int("shard_queue_depth")
+            .unwrap_or(c.shard_queue_depth as i64);
+        if depth < 1 {
+            bail!("shard_queue_depth must be >= 1, got {depth}");
+        }
+        c.shard_queue_depth = depth as usize;
         if let Some(a) = doc.get_str("artifacts") {
             c.artifacts_dir = a;
         }
@@ -347,6 +414,7 @@ impl TrainConfig {
         Ok(c)
     }
 
+    /// Check cross-field invariants; every config source ends here.
     pub fn validate(&self) -> Result<()> {
         if self.epochs == 0 {
             bail!("epochs must be >= 1");
@@ -371,6 +439,9 @@ impl TrainConfig {
         }
         if self.num_shards == 0 {
             bail!("num_shards must be >= 1");
+        }
+        if self.shard_queue_depth == 0 {
+            bail!("shard queue depth must be >= 1");
         }
         if self.workers == 0 {
             bail!("workers must be >= 1");
@@ -433,15 +504,36 @@ mod tests {
     fn shard_config_plumbs_through() {
         let args = Args::parse([
             "--ordering", "cd-grab", "--shards", "4",
+            "--queue-depth", "8", "--async-shards",
         ])
         .unwrap();
         let mut c = TrainConfig::default();
         c.apply_args(&args).unwrap();
         assert_eq!(c.ordering, OrderingKind::ShardedPairBalance);
         assert_eq!(c.num_shards, 4);
+        assert!(c.async_shards);
+        assert_eq!(c.shard_queue_depth, 8);
         let mut bad = TrainConfig::default();
         bad.num_shards = 0;
         assert!(bad.validate().is_err());
+        let mut bad = TrainConfig::default();
+        bad.shard_queue_depth = 0;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn toml_rejects_negative_shard_values() {
+        // Regression: a negative TOML int must error instead of
+        // wrapping through `as usize` into an enormous allocation.
+        let doc = TomlDoc::parse("num_shards = -1").unwrap();
+        assert!(TrainConfig::from_toml(&doc).is_err());
+        let doc = TomlDoc::parse("shard_queue_depth = -2").unwrap();
+        assert!(TrainConfig::from_toml(&doc).is_err());
+        let doc = TomlDoc::parse("shard_queue_depth = 8").unwrap();
+        assert_eq!(
+            TrainConfig::from_toml(&doc).unwrap().shard_queue_depth,
+            8
+        );
     }
 
     #[test]

@@ -21,10 +21,15 @@ use anyhow::{bail, Context, Result};
 /// A scalar or array value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum TomlValue {
+    /// A double-quoted string.
     Str(String),
+    /// An integer literal.
     Int(i64),
+    /// A float literal.
     Float(f64),
+    /// `true` / `false`.
     Bool(bool),
+    /// A homogeneous scalar array.
     Arr(Vec<TomlValue>),
 }
 
@@ -35,6 +40,7 @@ pub struct TomlDoc {
 }
 
 impl TomlDoc {
+    /// Parse a TOML-subset document (see the module docs for grammar).
     pub fn parse(text: &str) -> Result<TomlDoc> {
         let mut doc = TomlDoc::default();
         let mut section = String::new();
@@ -76,16 +82,19 @@ impl TomlDoc {
         Ok(doc)
     }
 
+    /// Read + parse a config file.
     pub fn from_file(path: &std::path::Path) -> Result<TomlDoc> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading {}", path.display()))?;
         TomlDoc::parse(&text)
     }
 
+    /// Raw value lookup by (dotted) key.
     pub fn get(&self, key: &str) -> Option<&TomlValue> {
         self.map.get(key)
     }
 
+    /// String value at `key`, if present and a string.
     pub fn get_str(&self, key: &str) -> Option<String> {
         match self.map.get(key) {
             Some(TomlValue::Str(s)) => Some(s.clone()),
@@ -93,6 +102,7 @@ impl TomlDoc {
         }
     }
 
+    /// Integer value at `key`, if present and an integer.
     pub fn get_int(&self, key: &str) -> Option<i64> {
         match self.map.get(key) {
             Some(TomlValue::Int(v)) => Some(*v),
@@ -100,6 +110,7 @@ impl TomlDoc {
         }
     }
 
+    /// Float value at `key` (integers coerce), if present.
     pub fn get_float(&self, key: &str) -> Option<f64> {
         match self.map.get(key) {
             Some(TomlValue::Float(v)) => Some(*v),
@@ -108,6 +119,7 @@ impl TomlDoc {
         }
     }
 
+    /// Boolean value at `key`, if present and a boolean.
     pub fn get_bool(&self, key: &str) -> Option<bool> {
         match self.map.get(key) {
             Some(TomlValue::Bool(v)) => Some(*v),
@@ -115,6 +127,7 @@ impl TomlDoc {
         }
     }
 
+    /// All (dotted) keys in the document, sorted.
     pub fn keys(&self) -> impl Iterator<Item = &String> {
         self.map.keys()
     }

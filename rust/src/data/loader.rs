@@ -29,6 +29,7 @@ pub struct Loader<'a> {
 }
 
 impl<'a> Loader<'a> {
+    /// Walk `order` in `batch`-sized microbatches (tail padded).
     pub fn new(order: &'a [usize], batch: usize) -> Loader<'a> {
         assert!(batch > 0, "batch must be positive");
         Loader { order, batch, pos: 0 }
@@ -62,8 +63,11 @@ impl<'a> Iterator for Loader<'a> {
 /// Gathered host buffers for one microbatch (typed by the dataset).
 #[derive(Clone, Debug, Default)]
 pub struct HostBatch {
+    /// Gathered float features (empty for token datasets).
     pub x_f32: Vec<f32>,
+    /// Gathered token features (empty for float datasets).
     pub x_i32: Vec<i32>,
+    /// Gathered labels / target sequences.
     pub y: Vec<i32>,
 }
 

@@ -13,17 +13,31 @@ use anyhow::{bail, Result};
 /// or i32 token sequences (lstm, transformer).
 #[derive(Clone, Debug)]
 pub enum Features {
-    F32 { data: Vec<f32>, dim: usize },
-    I32 { data: Vec<i32>, dim: usize },
+    /// Dense row-major `[n × dim]` float features.
+    F32 {
+        /// Flattened feature matrix.
+        data: Vec<f32>,
+        /// Per-example feature width.
+        dim: usize,
+    },
+    /// Row-major `[n × dim]` token-id sequences.
+    I32 {
+        /// Flattened token matrix.
+        data: Vec<i32>,
+        /// Per-example sequence length.
+        dim: usize,
+    },
 }
 
 impl Features {
+    /// Per-example feature width.
     pub fn dim(&self) -> usize {
         match self {
             Features::F32 { dim, .. } | Features::I32 { dim, .. } => *dim,
         }
     }
 
+    /// Number of examples.
     pub fn len(&self) -> usize {
         match self {
             Features::F32 { data, dim } => data.len() / dim,
@@ -31,6 +45,7 @@ impl Features {
         }
     }
 
+    /// Whether the store holds no examples.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -39,11 +54,19 @@ impl Features {
 /// Label storage: one class per example, or one target sequence (LM).
 #[derive(Clone, Debug)]
 pub enum Labels {
+    /// One class id per example.
     Scalar(Vec<i32>),
-    Seq { data: Vec<i32>, dim: usize },
+    /// One `[dim]` target sequence per example (language modeling).
+    Seq {
+        /// Flattened target matrix.
+        data: Vec<i32>,
+        /// Per-example target length.
+        dim: usize,
+    },
 }
 
 impl Labels {
+    /// Number of labeled examples.
     pub fn len(&self) -> usize {
         match self {
             Labels::Scalar(v) => v.len(),
@@ -51,6 +74,7 @@ impl Labels {
         }
     }
 
+    /// Whether the store holds no labels.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -67,12 +91,16 @@ impl Labels {
 /// An in-memory dataset of `n` ordering units.
 #[derive(Clone, Debug)]
 pub struct Dataset {
+    /// Human-readable dataset name (used in logs and errors).
     pub name: String,
+    /// Feature storage.
     pub x: Features,
+    /// Label storage (same example count as `x`).
     pub y: Labels,
 }
 
 impl Dataset {
+    /// Pair features with labels; errors on count mismatch.
     pub fn new(name: impl Into<String>, x: Features, y: Labels)
         -> Result<Dataset> {
         if x.len() != y.len() {
@@ -82,10 +110,12 @@ impl Dataset {
         Ok(Dataset { name: name.into(), x, y })
     }
 
+    /// Number of ordering units (examples).
     pub fn len(&self) -> usize {
         self.x.len()
     }
 
+    /// Whether the dataset is empty.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

@@ -7,11 +7,14 @@
 /// Assignment of microbatch sequence numbers to `workers` grad workers.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ShardPlan {
+    /// Number of grad workers.
     pub workers: usize,
+    /// Microbatches in the epoch being sharded.
     pub num_batches: usize,
 }
 
 impl ShardPlan {
+    /// A plan for `num_batches` microbatches over `workers` workers.
     pub fn new(workers: usize, num_batches: usize) -> ShardPlan {
         assert!(workers > 0);
         ShardPlan { workers, num_batches }

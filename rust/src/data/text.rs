@@ -13,6 +13,7 @@ use crate::util::rng::Rng;
 /// Corpus generator parameters.
 #[derive(Clone, Debug)]
 pub struct CorpusSpec {
+    /// Vocabulary size (number of Markov states).
     pub vocab: usize,
     /// Sequence length (paper bptt = 35).
     pub bptt: usize,

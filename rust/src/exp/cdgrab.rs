@@ -7,8 +7,12 @@
 //! permutation quality question ("does pair balancing without a stale
 //! mean still herd?") from training dynamics, sweeping the CD-GraB shard
 //! count W to show the coordinator's merge keeps the bound flat as the
-//! balancing work parallelizes. Writes `cdgrab_herding.csv` with one row
-//! per (policy, epoch).
+//! balancing work parallelizes. Each shard count runs through both the
+//! synchronous coordinator and the async worker-thread coordinator
+//! (`cd-grab-wW` vs `cd-grab-wW-async`) — their herding columns must be
+//! identical (the determinism contract), while their `order_secs`
+//! columns show what the queue hand-off costs or saves. Writes
+//! `cdgrab_herding.csv` with one row per (policy, epoch).
 
 use anyhow::Result;
 
@@ -18,14 +22,19 @@ use crate::util::prop::gen;
 use crate::util::rng::Rng;
 use crate::util::ser::{fmt_f, CsvWriter};
 
+/// Parameters of the CD-GraB herding experiment.
 pub struct CdGrabConfig {
+    /// Number of static gradient vectors.
     pub n: usize,
+    /// Gradient dimension.
     pub d: usize,
+    /// Epochs (balance passes) per policy.
     pub epochs: usize,
     /// Observe block width (the simulated executor microbatch).
     pub block: usize,
     /// CD-GraB shard counts to sweep.
     pub shard_counts: Vec<usize>,
+    /// RNG seed.
     pub seed: u64,
 }
 
@@ -43,6 +52,7 @@ impl Default for CdGrabConfig {
 }
 
 impl CdGrabConfig {
+    /// CI-speed scale.
     pub fn small() -> CdGrabConfig {
         CdGrabConfig {
             n: 1024,
@@ -69,6 +79,7 @@ fn run_epoch(
     (inf, secs)
 }
 
+/// Run the experiment and write `cdgrab_herding.csv` to `out_dir`.
 pub fn run(cfg: &CdGrabConfig, out_dir: &std::path::Path) -> Result<()> {
     let mut rng = Rng::new(cfg.seed);
     let vs = gen::vec_set(&mut rng, cfg.n, cfg.d);
@@ -114,6 +125,10 @@ pub fn run(cfg: &CdGrabConfig, out_dir: &std::path::Path) -> Result<()> {
         policies.push((
             format!("cd-grab-w{w}"),
             Box::new(ShardedOrder::new(cfg.n, cfg.d, w)),
+        ));
+        policies.push((
+            format!("cd-grab-w{w}-async"),
+            Box::new(ShardedOrder::new_async(cfg.n, cfg.d, w, 4)),
         ));
     }
 
@@ -178,8 +193,28 @@ mod tests {
         run(&cfg, &dir).unwrap();
         let text = std::fs::read_to_string(
             dir.join("cdgrab_herding.csv")).unwrap();
-        // Header + rr + grab + pair + two shard counts, 6 epochs each.
-        assert_eq!(text.lines().count(), 1 + 5 * 6);
+        // Header + rr + grab + pair + (sync, async) x two shard
+        // counts, 6 epochs each.
+        assert_eq!(text.lines().count(), 1 + 7 * 6);
+        // Determinism contract: sync and async coordinators must report
+        // identical herding bounds at every (w, epoch).
+        fn herd_col<'t>(text: &'t str, name: &str) -> Vec<&'t str> {
+            let prefix = format!("{name},");
+            text.lines()
+                .filter(|l| l.starts_with(&prefix))
+                .map(|l| l.split(',').nth(2).unwrap())
+                .collect()
+        }
+        for w in [1, 4] {
+            let sync = herd_col(&text, &format!("cd-grab-w{w}"));
+            let asynch =
+                herd_col(&text, &format!("cd-grab-w{w}-async"));
+            assert_eq!(sync.len(), 6);
+            assert_eq!(
+                sync, asynch,
+                "sync vs async herding diverged at w={w}"
+            );
+        }
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -11,12 +11,17 @@ use crate::herding::{greedy::greedy_order, prefix_trajectory};
 use crate::util::rng::Rng;
 use crate::util::ser::{fmt_f, CsvWriter};
 
+/// Parameters of the Fig. 1b prefix-norm experiment.
 pub struct Fig1Config {
+    /// Number of random vectors.
     pub n: usize,
+    /// Vector dimension.
     pub d: usize,
+    /// Balance+reorder passes for the "herded" series.
     pub herd_passes: usize,
     /// Write every `stride`-th k to keep the CSV small.
     pub stride: usize,
+    /// RNG seed.
     pub seed: u64,
     /// Skip greedy above this n (O(n²d) gets slow).
     pub greedy_max_n: usize,
@@ -35,6 +40,7 @@ impl Default for Fig1Config {
     }
 }
 
+/// Run the experiment and write `fig1_prefix_norms.csv` to `out_dir`.
 pub fn run(cfg: &Fig1Config, out_dir: &std::path::Path) -> Result<()> {
     let mut rng = Rng::new(cfg.seed);
     // z_i ~ U[0, 1]^d, exactly the paper's toy setup.

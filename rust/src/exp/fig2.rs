@@ -14,17 +14,26 @@ use crate::runtime::Runtime;
 use crate::train::Trainer;
 use crate::util::ser::{fmt_f, CsvWriter};
 
+/// Parameters of the Fig. 2 task × ordering training sweep.
 pub struct Fig2Config {
+    /// Tasks to sweep.
     pub tasks: Vec<Task>,
+    /// Ordering policies to sweep.
     pub orderings: Vec<OrderingKind>,
+    /// Epochs per run.
     pub epochs: usize,
+    /// Train set size.
     pub n: usize,
+    /// Eval set size.
     pub n_eval: usize,
+    /// RNG seed shared by every run.
     pub seed: u64,
+    /// Compiled-artifact directory.
     pub artifacts_dir: String,
 }
 
 impl Fig2Config {
+    /// CI-speed scale.
     pub fn small(artifacts_dir: &str) -> Fig2Config {
         Fig2Config {
             tasks: vec![Task::Mnist, Task::Cifar, Task::Wiki, Task::Glue],
@@ -37,6 +46,7 @@ impl Fig2Config {
         }
     }
 
+    /// Paper-matched scale.
     pub fn paper(artifacts_dir: &str) -> Fig2Config {
         Fig2Config {
             epochs: 30,
@@ -47,6 +57,7 @@ impl Fig2Config {
     }
 }
 
+/// The paper's Section 6 ordering lineup.
 pub fn default_orderings() -> Vec<OrderingKind> {
     vec![
         OrderingKind::RandomReshuffle,
@@ -60,16 +71,25 @@ pub fn default_orderings() -> Vec<OrderingKind> {
 /// Per-run summary used by the printed table.
 #[derive(Clone, Debug)]
 pub struct RunSummary {
+    /// Task name.
     pub task: &'static str,
+    /// Ordering-policy name.
     pub ordering: &'static str,
+    /// Final-epoch train loss.
     pub final_train_loss: f64,
+    /// Final-epoch eval loss.
     pub final_eval_loss: f64,
+    /// Final-epoch eval accuracy.
     pub final_eval_acc: f64,
+    /// Total run wall-clock seconds.
     pub total_secs: f64,
+    /// Seconds spent in the ordering policy.
     pub order_secs: f64,
+    /// Ordering state bytes at the end.
     pub state_bytes: usize,
 }
 
+/// Run the sweep and write `fig2_training.csv` to `out_dir`.
 pub fn run(cfg: &Fig2Config, out_dir: &std::path::Path) -> Result<()> {
     let rt = Runtime::open(&cfg.artifacts_dir)?;
     let mut csv = CsvWriter::create(
@@ -130,6 +150,7 @@ pub fn run(cfg: &Fig2Config, out_dir: &std::path::Path) -> Result<()> {
     Ok(())
 }
 
+/// Print the sweep's final-epoch summary table.
 pub fn print_summary(rows: &[RunSummary]) {
     println!(
         "\nfig2 — final metrics (per task, lower loss / higher acc better):"

@@ -17,16 +17,24 @@ use crate::runtime::Runtime;
 use crate::train::Trainer;
 use crate::util::ser::{fmt_f, CsvWriter};
 
+/// Parameters of the Fig. 3 fixed-order ablation.
 pub struct Fig3Config {
+    /// Tasks to sweep.
     pub tasks: Vec<Task>,
+    /// Epochs per run.
     pub epochs: usize,
+    /// Train set size.
     pub n: usize,
+    /// Eval set size.
     pub n_eval: usize,
+    /// RNG seed shared by every run.
     pub seed: u64,
+    /// Compiled-artifact directory.
     pub artifacts_dir: String,
 }
 
 impl Fig3Config {
+    /// CI-speed scale.
     pub fn small(artifacts_dir: &str) -> Fig3Config {
         Fig3Config {
             tasks: vec![Task::Mnist, Task::Cifar],
@@ -39,6 +47,7 @@ impl Fig3Config {
     }
 }
 
+/// Run the ablation and write `fig3_fixed_order.csv` to `out_dir`.
 pub fn run(cfg: &Fig3Config, out_dir: &std::path::Path) -> Result<()> {
     let rt = Runtime::open(&cfg.artifacts_dir)?;
     let mut csv = CsvWriter::create(

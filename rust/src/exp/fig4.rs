@@ -10,10 +10,15 @@ use crate::herding::offline::herd;
 use crate::util::rng::Rng;
 use crate::util::ser::{fmt_f, CsvWriter};
 
+/// Parameters of the Fig. 4 balancer-comparison experiment.
 pub struct Fig4Config {
+    /// Number of random vectors.
     pub n: usize,
+    /// Dimensions to sweep.
     pub dims: Vec<usize>,
+    /// Balance+reorder passes per dimension.
     pub passes: usize,
+    /// RNG seed.
     pub seed: u64,
 }
 
@@ -25,12 +30,14 @@ impl Default for Fig4Config {
 }
 
 impl Fig4Config {
+    /// CI-speed scale.
     pub fn small() -> Fig4Config {
         Fig4Config { n: 2000, dims: vec![16, 128, 512], passes: 10,
                      seed: 0 }
     }
 }
 
+/// Run the experiment and write `fig4_balancer_bounds.csv`.
 pub fn run(cfg: &Fig4Config, out_dir: &std::path::Path) -> Result<()> {
     let mut csv = CsvWriter::create(
         &out_dir.join("fig4_balancer_bounds.csv"),

@@ -14,16 +14,24 @@ use crate::runtime::Runtime;
 use crate::train::Trainer;
 use crate::util::ser::{fmt_f, CsvWriter};
 
+/// Parameters of the ordering-granularity sweep.
 pub struct GranularityConfig {
+    /// Group sizes to sweep (1 = per-example).
     pub group_sizes: Vec<usize>,
+    /// Epochs per run.
     pub epochs: usize,
+    /// Train set size.
     pub n: usize,
+    /// Eval set size.
     pub n_eval: usize,
+    /// RNG seed shared by every run.
     pub seed: u64,
+    /// Compiled-artifact directory.
     pub artifacts_dir: String,
 }
 
 impl GranularityConfig {
+    /// CI-speed scale.
     pub fn small(artifacts_dir: &str) -> GranularityConfig {
         GranularityConfig {
             group_sizes: vec![1, 8, 64],
@@ -36,6 +44,7 @@ impl GranularityConfig {
     }
 }
 
+/// Run the sweep and write `granularity.csv` to `out_dir`.
 pub fn run(cfg: &GranularityConfig, out_dir: &std::path::Path)
     -> Result<()> {
     let rt = Runtime::open(&cfg.artifacts_dir)?;

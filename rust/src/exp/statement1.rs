@@ -16,9 +16,13 @@ use crate::util::rng::Rng;
 use crate::util::ser::{fmt_f, CsvWriter};
 use crate::util::stats::scaling_exponent;
 
+/// Parameters of the Statement 1 adversarial-scaling experiment.
 pub struct Statement1Config {
+    /// Problem sizes to sweep.
     pub ns: Vec<usize>,
+    /// Random permutations averaged per n.
     pub random_trials: usize,
+    /// RNG seed.
     pub seed: u64,
 }
 
@@ -32,6 +36,7 @@ impl Default for Statement1Config {
     }
 }
 
+/// Run the experiment and write `statement1_adversarial.csv`.
 pub fn run(cfg: &Statement1Config, out_dir: &std::path::Path)
     -> Result<()> {
     let mut csv = CsvWriter::create(

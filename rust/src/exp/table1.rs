@@ -23,9 +23,13 @@ use crate::util::ser::{fmt_f, CsvWriter};
 use crate::util::stats::scaling_exponent;
 use crate::util::timer::Stopwatch;
 
+/// Parameters of the Table 1 overhead measurement.
 pub struct Table1Config {
+    /// Gradient dimension.
     pub d: usize,
+    /// Dataset sizes to sweep.
     pub ns: Vec<usize>,
+    /// RNG seed.
     pub seed: u64,
 }
 
@@ -40,16 +44,22 @@ impl Default for Table1Config {
 }
 
 impl Table1Config {
+    /// CI-speed scale.
     pub fn small() -> Table1Config {
         Table1Config { d: 1024, ns: vec![128, 256, 512, 1024], seed: 0 }
     }
 }
 
 #[derive(Clone, Debug)]
+/// One measured (policy, n) cell of Table 1.
 pub struct Row {
+    /// Ordering-policy name.
     pub policy: &'static str,
+    /// Dataset size.
     pub n: usize,
+    /// Seconds in observe + epoch_end for one epoch.
     pub order_secs: f64,
+    /// Ordering state bytes.
     pub state_bytes: usize,
 }
 
@@ -82,6 +92,7 @@ fn measure(
     (secs, policy.state_bytes())
 }
 
+/// Run the measurement and write `table1_overhead.csv` to `out_dir`.
 pub fn run(cfg: &Table1Config, out_dir: &std::path::Path) -> Result<()> {
     let mut csv = CsvWriter::create(
         &out_dir.join("table1_overhead.csv"),
@@ -128,6 +139,7 @@ pub fn run(cfg: &Table1Config, out_dir: &std::path::Path) -> Result<()> {
     Ok(())
 }
 
+/// Print the measured rows in the paper's table layout.
 pub fn print_table(cfg: &Table1Config, rows: &[Row]) {
     println!("\ntable1 — measured ordering overhead (d={}):", cfg.d);
     println!(

@@ -24,12 +24,15 @@ pub fn balance_reorder_pass(
 /// Record of one offline herding pass (for the Fig. 4 series).
 #[derive(Clone, Debug)]
 pub struct PassStats {
+    /// 0-based pass index.
     pub pass: usize,
     /// Herding objective (Eq. 3) of the order *after* this pass.
     pub herding_inf: f32,
+    /// ℓ2 herding objective after this pass.
     pub herding_l2: f32,
     /// Signed balancing objective observed during the pass.
     pub balance_inf: f32,
+    /// ℓ2 of the signed running sum during the pass.
     pub balance_l2: f32,
 }
 

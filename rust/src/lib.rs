@@ -26,6 +26,13 @@
 //! cargo run --release -- train --task mnist --ordering grab --epochs 5
 //! cargo run --release -- exp fig1
 //! ```
+//!
+//! See `rust/README.md` for the module map and the full command index,
+//! and `docs/determinism.md` for the equivalence contracts (per-example
+//! ≡ block, W=1 ≡ PairBalance, sync ≡ async shards, sync ≡ pipeline)
+//! the test suite enforces.
+
+#![warn(missing_docs)]
 
 pub mod balance;
 pub mod config;

@@ -3,9 +3,10 @@
 //! ```text
 //! grab train  [--config f.toml] [--task mnist|cifar|wiki|glue]
 //!             [--ordering rr|so|flipflop|greedy|grab|grab-1step|pair|
-//!              cd-grab|seq] [--shards W]
+//!              cd-grab|seq] [--shards W] [--queue-depth N]
 //!             [--balancer alg5|alg6|kernel] [--epochs N] [--n N]
 //!             [--lr F] [--seed N] [--metrics-out f.csv] [--pipeline]
+//!             [--async-shards]
 //! grab exp    fig1|fig2|fig3|fig4|table1|statement1|granularity|
 //!             cdgrab|all [options]
 //! grab inspect [--artifacts DIR]       # artifact/manifest summary
@@ -62,6 +63,11 @@ TRAIN OPTIONS:
   --task mnist|cifar|wiki|glue
   --ordering rr|so|flipflop|greedy|grab|grab-1step|pair|cd-grab|seq
   --shards W               CD-GraB worker count (with --ordering cd-grab)
+  --async-shards           run CD-GraB shard balancers on worker threads
+                           (same epoch orders as sync; boolean flag, put
+                           it last or before another --flag)
+  --queue-depth N          per-shard block-queue depth for --async-shards
+                           (default: 4)
   --balancer alg5|alg6|kernel
   --epochs N --n N --n-eval N --accum N
   --lr F --momentum F --wd F --seed N

@@ -41,7 +41,9 @@ pub fn build_datasets(cfg: &TrainConfig) -> (Dataset, Dataset) {
 
 /// A named view into the flat parameter vector.
 pub struct ParamView<'a> {
+    /// Layout entry describing this block.
     pub spec: &'a ParamSpec,
+    /// The block's values within the flat vector.
     pub values: &'a [f32],
 }
 

@@ -7,12 +7,15 @@ use crate::tensor;
 /// Momentum SGD with (decoupled-from-momentum, PyTorch-style coupled)
 /// L2 weight decay: v ← μ·v + (g + wd·w);  w ← w − lr·v.
 pub struct MomentumSgd {
+    /// Momentum coefficient μ.
     pub momentum: f32,
+    /// Coupled L2 weight-decay coefficient.
     pub weight_decay: f32,
     velocity: Vec<f32>,
 }
 
 impl MomentumSgd {
+    /// An optimizer over `dim` parameters with zeroed momentum.
     pub fn new(dim: usize, momentum: f64, weight_decay: f64) -> MomentumSgd {
         MomentumSgd {
             momentum: momentum as f32,
@@ -35,6 +38,7 @@ impl MomentumSgd {
         }
     }
 
+    /// Zero the momentum buffer.
     pub fn reset(&mut self) {
         tensor::zero(&mut self.velocity);
     }
@@ -55,25 +59,37 @@ impl MomentumSgd {
 
 /// Learning-rate schedule state machine, driven by per-epoch train loss.
 pub enum Scheduler {
-    Constant { lr: f64 },
+    /// Fixed learning rate.
+    Constant {
+        /// The constant learning rate.
+        lr: f64,
+    },
     /// Multiply lr by `factor` when the best seen loss fails to improve by
     /// more than `threshold` for `patience` consecutive epochs (mode=min,
     /// matching the paper's PyTorch config for WikiText-2).
     ReduceOnPlateau {
+        /// Current learning rate.
         lr: f64,
+        /// Multiplier applied on decay.
         factor: f64,
+        /// Non-improving epochs tolerated before a decay.
         patience: usize,
+        /// Minimum improvement that counts as progress.
         threshold: f64,
+        /// Best train loss seen so far.
         best: f64,
+        /// Consecutive non-improving epochs.
         bad_epochs: usize,
     },
 }
 
 impl Scheduler {
+    /// A constant-LR schedule.
     pub fn constant(lr: f64) -> Scheduler {
         Scheduler::Constant { lr }
     }
 
+    /// A ReduceLROnPlateau schedule (mode=min) starting at `lr`.
     pub fn reduce_on_plateau(
         lr: f64,
         factor: f64,
@@ -143,6 +159,7 @@ pub struct GradAccumulator {
 }
 
 impl GradAccumulator {
+    /// An accumulator that means `target` gradients of size `dim`.
     pub fn new(dim: usize, target: usize) -> GradAccumulator {
         assert!(target > 0);
         GradAccumulator { acc: vec![0.0; dim], count: 0, target }
@@ -164,7 +181,8 @@ impl GradAccumulator {
         }
     }
 
-    /// After consuming the window returned by [`push`], zero the buffer.
+    /// After consuming the window returned by [`GradAccumulator::push`],
+    /// zero the buffer.
     pub fn clear(&mut self) {
         tensor::zero(&mut self.acc);
         self.count = 0;

@@ -37,6 +37,8 @@ use crate::balance::Balancer;
 use crate::ordering::{GradBlock, OrderPolicy};
 use crate::tensor;
 
+/// The paper's GraB policy (Algorithm 4), block-streamed — see the
+/// module docs for the balancing/reorder mechanics.
 pub struct GraBOrder {
     n: usize,
     d: usize,
@@ -71,6 +73,8 @@ pub struct GraBOrder {
 }
 
 impl GraBOrder {
+    /// A GraB policy over `n` units of dimension `d` using `balancer`
+    /// for the sign decisions.
     pub fn new(n: usize, d: usize, balancer: Box<dyn Balancer + Send>)
         -> GraBOrder {
         // Only the scratch the active observe path needs is allocated

@@ -14,9 +14,11 @@ use std::ops::Range;
 use crate::ordering::{GradBlock, OrderPolicy};
 use crate::tensor;
 
+/// Coarse-granularity wrapper: orders groups of examples through an
+/// inner policy and expands back to an example-level permutation.
 pub struct GroupedOrder {
     inner: Box<dyn OrderPolicy>,
-    /// Static partition: members[g] = dataset indices of group g.
+    /// Static partition: `members[g]` = dataset indices of group g.
     members: Vec<Vec<usize>>,
     n: usize,
     d: usize,
@@ -58,6 +60,7 @@ impl GroupedOrder {
         }
     }
 
+    /// Number of groups the unit range was partitioned into.
     pub fn num_groups(&self) -> usize {
         self.members.len()
     }

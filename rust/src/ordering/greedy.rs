@@ -9,6 +9,8 @@ use std::ops::Range;
 use crate::herding::greedy::greedy_order;
 use crate::ordering::{GradBlock, OrderPolicy};
 
+/// Greedy Ordering policy — stores all stale gradients, reorders
+/// greedily at the epoch boundary (the paper's O(nd) baseline).
 pub struct GreedyOrder {
     n: usize,
     d: usize,
@@ -20,6 +22,7 @@ pub struct GreedyOrder {
 }
 
 impl GreedyOrder {
+    /// A greedy-ordering policy over `n` units of dimension `d`.
     pub fn new(n: usize, d: usize) -> GreedyOrder {
         GreedyOrder {
             n,

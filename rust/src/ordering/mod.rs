@@ -21,6 +21,7 @@ mod grab;
 pub mod granularity;
 mod greedy;
 pub mod pair;
+pub mod queue;
 pub mod sharded;
 
 pub use grab::GraBOrder;
@@ -37,7 +38,44 @@ use crate::util::rng::Rng;
 use anyhow::Result;
 
 /// A data-ordering policy over `n` ordering units.
+///
+/// The trainer's contract per epoch: call [`OrderPolicy::epoch_order`]
+/// once, visit units in that order while streaming their gradients
+/// through [`OrderPolicy::observe_block`] in contiguous position blocks,
+/// then call [`OrderPolicy::epoch_end`] at the boundary.
+///
+/// # Example
+///
+/// Driving one epoch of [`PairBalance`] (CD-GraB's kernel) by hand:
+///
+/// ```
+/// use grab::ordering::{GradBlock, OrderPolicy, PairBalance};
+///
+/// let (n, d) = (4, 2);
+/// let mut policy = PairBalance::new(n, d);
+///
+/// // 1. The epoch's permutation (first epoch is the identity).
+/// let order = policy.epoch_order(0).to_vec();
+/// assert_eq!(order, vec![0, 1, 2, 3]);
+///
+/// // 2. Stream per-example gradients in visit order, as one or more
+/// //    contiguous [rows x d] blocks over the epoch's positions.
+/// let grads: Vec<f32> = vec![
+///     1.0, 0.0,   // gradient of the unit at position 0
+///     -1.0, 0.0,  // position 1
+///     0.5, 0.5,   // position 2
+///     -0.5, -0.5, // position 3
+/// ];
+/// policy.observe_block(0..4, &GradBlock::new(&grads, d));
+///
+/// // 3. Close the epoch; the policy finalizes the next epoch's order.
+/// policy.epoch_end();
+/// let mut next = policy.epoch_order(1).to_vec();
+/// next.sort_unstable();
+/// assert_eq!(next, vec![0, 1, 2, 3]); // still a permutation of 0..n
+/// ```
 pub trait OrderPolicy: Send {
+    /// Short stable policy name (used in run ids, CSV rows, and logs).
     fn name(&self) -> &'static str;
 
     /// Permutation to follow during epoch `epoch` (0-based). Must be a
@@ -87,6 +125,7 @@ pub struct RandomReshuffle {
 }
 
 impl RandomReshuffle {
+    /// A reshuffler over `n` units, seeded from the run seed.
     pub fn new(n: usize, seed: u64) -> Self {
         RandomReshuffle {
             order: (0..n).collect(),
@@ -120,6 +159,7 @@ pub struct ShuffleOnce {
 }
 
 impl ShuffleOnce {
+    /// One seeded permutation of `n` units, reused every epoch.
     pub fn new(n: usize, seed: u64) -> Self {
         let mut rng = Rng::new(seed ^ 0x50);
         ShuffleOnce { order: rng.permutation(n) }
@@ -153,6 +193,7 @@ pub struct FlipFlop {
 }
 
 impl FlipFlop {
+    /// A flip-flopper over `n` units, seeded from the run seed.
     pub fn new(n: usize, seed: u64) -> Self {
         FlipFlop {
             n,
@@ -200,6 +241,7 @@ pub struct Sequential {
 }
 
 impl Sequential {
+    /// Identity order over `n` units.
     pub fn new(n: usize) -> Self {
         Sequential { order: (0..n).collect() }
     }
@@ -222,6 +264,7 @@ pub struct FixedOrder {
 }
 
 impl FixedOrder {
+    /// Replay `order` every epoch, reporting `name` in logs.
     pub fn new(order: Vec<usize>, name: &'static str) -> Self {
         FixedOrder { order, name }
     }
@@ -249,6 +292,7 @@ pub struct OneStepGraB {
 }
 
 impl OneStepGraB {
+    /// Wrap a GraB policy: balance during epoch 0, then freeze.
     pub fn new(inner: GraBOrder) -> Self {
         OneStepGraB { inner, frozen: None }
     }
@@ -370,7 +414,16 @@ pub fn build_policy(
         }
         OrderingKind::PairBalance => Box::new(PairBalance::new(n, d)),
         OrderingKind::ShardedPairBalance => {
-            Box::new(ShardedOrder::new(n, d, cfg.num_shards))
+            if cfg.async_shards {
+                Box::new(ShardedOrder::new_async(
+                    n,
+                    d,
+                    cfg.num_shards,
+                    cfg.shard_queue_depth,
+                ))
+            } else {
+                Box::new(ShardedOrder::new(n, d, cfg.num_shards))
+            }
         }
         OrderingKind::RetrainFromGraB => {
             let order = retrain_order.ok_or_else(|| {
@@ -484,6 +537,19 @@ mod tests {
         assert!(build_policy(&cfg, 16, 4, None).is_err());
         let p = build_policy(&cfg, 3, 4, Some(vec![2, 1, 0])).unwrap();
         assert_eq!(p.name(), "grab-retrain");
+    }
+
+    #[test]
+    fn build_policy_selects_async_backend() {
+        let mut cfg = TrainConfig::default();
+        cfg.ordering = OrderingKind::ShardedPairBalance;
+        cfg.num_shards = 2;
+        let p = build_policy(&cfg, 16, 4, None).unwrap();
+        assert_eq!(p.name(), "cd-grab");
+        cfg.async_shards = true;
+        cfg.shard_queue_depth = 2;
+        let p = build_policy(&cfg, 16, 4, None).unwrap();
+        assert_eq!(p.name(), "cd-grab-async");
     }
 
     #[test]

@@ -36,6 +36,8 @@ use std::ops::Range;
 use crate::ordering::{GradBlock, OrderPolicy};
 use crate::tensor;
 
+/// CD-GraB's PairBalance policy (Algorithm 1) — balances consecutive
+/// pair differences; see the module docs.
 pub struct PairBalance {
     n: usize,
     d: usize,
@@ -54,11 +56,13 @@ pub struct PairBalance {
     have_pending: bool,
     /// Diagnostics: max ‖s‖∞ this epoch.
     pub epoch_balance_inf: f32,
+    /// Count of +1 signs this epoch (for tests/metrics).
     pub plus_signs: usize,
     observed: usize,
 }
 
 impl PairBalance {
+    /// A pair-balancing policy over `n` units of dimension `d`.
     pub fn new(n: usize, d: usize) -> PairBalance {
         PairBalance {
             n,
@@ -82,6 +86,7 @@ impl PairBalance {
         self.n
     }
 
+    /// Whether the policy orders zero units.
     pub fn is_empty(&self) -> bool {
         self.n == 0
     }

@@ -1,0 +1,266 @@
+//! Bounded block queues + scratch-block pools — the hand-off primitive
+//! between the async shard coordinator and its worker threads.
+//!
+//! [`crate::ordering::ShardedOrder`] in async mode gives each shard
+//! balancer its own worker thread. The coordinator cannot lend the
+//! workers zero-copy [`GradBlock`] views (the executor buffer does not
+//! outlive the `observe_block` call), so crossing the thread boundary
+//! forces one copy per row — exactly the copy the ROADMAP's "per-shard
+//! block batching" item wanted to trade for batched balancing, so the
+//! queue performs the gather as part of the enqueue.
+//!
+//! The queue is a single-producer single-consumer channel of
+//! [`ScratchBlock`]s made *bounded by construction*: `depth` owned
+//! buffers circulate between a free-list ("pool") channel and the
+//! message channel, and a sender that finds the pool empty must wait for
+//! the worker to recycle a buffer. Capacity is therefore also the
+//! allocation budget — after warm-up the steady state performs no
+//! allocation at all, every block reuses a pooled buffer.
+//!
+//! ```text
+//!   coordinator --acquire()-- pool <--recycle()-- worker
+//!        |                                          ^
+//!        +-- gather rows --> send(ScratchBlock) ----+
+//! ```
+//!
+//! Worker death (panic) drops both worker-side endpoints, so a blocked
+//! `acquire`/`send` observes disconnection instead of deadlocking; the
+//! coordinator surfaces the panic payload at the epoch boundary (see
+//! `ShardedOrder::epoch_end`).
+
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+
+use crate::tensor::GradBlock;
+
+/// An owned, reusable row-major `[rows × d]` gradient buffer — the unit
+/// that crosses the coordinator → worker thread boundary. Rows are
+/// appended with [`ScratchBlock::push_row`] during the gather and read
+/// back as a zero-copy [`GradBlock`] view on the worker side.
+pub struct ScratchBlock {
+    data: Vec<f32>,
+    d: usize,
+}
+
+impl ScratchBlock {
+    /// An empty scratch buffer for rows of dimension `d`.
+    pub fn new(d: usize) -> ScratchBlock {
+        assert!(d > 0, "ScratchBlock dimension must be positive");
+        ScratchBlock { data: Vec::new(), d }
+    }
+
+    /// Append one `d`-dimensional gradient row.
+    pub fn push_row(&mut self, row: &[f32]) {
+        debug_assert_eq!(row.len(), self.d);
+        self.data.extend_from_slice(row);
+    }
+
+    /// Number of rows gathered so far.
+    pub fn rows(&self) -> usize {
+        self.data.len() / self.d
+    }
+
+    /// Whether the buffer currently holds no rows.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Per-row dimension `d`.
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// Drop all rows, keeping the allocation for reuse.
+    pub fn clear(&mut self) {
+        self.data.clear();
+    }
+
+    /// Bytes of backing storage currently allocated (survives `clear`).
+    pub fn capacity_bytes(&self) -> usize {
+        self.data.capacity() * std::mem::size_of::<f32>()
+    }
+
+    /// The gathered rows as a zero-copy [`GradBlock`] view.
+    pub fn as_grad_block(&self) -> GradBlock<'_> {
+        GradBlock::new(&self.data, self.d)
+    }
+}
+
+/// A message on a shard's block queue.
+pub enum ShardMsg {
+    /// A gathered block of the shard's next `rows` local gradients.
+    Block(ScratchBlock),
+    /// Epoch boundary: finalize the shard's next local order and report
+    /// it back on the worker's report channel.
+    EpochEnd,
+    /// Test-only: make the worker panic, to exercise panic propagation.
+    #[cfg(test)]
+    Poison,
+}
+
+/// Coordinator-side endpoint of one shard's bounded block queue.
+pub struct BlockSender {
+    msgs: Sender<ShardMsg>,
+    pool: Receiver<ScratchBlock>,
+    stalls: u64,
+    depth: usize,
+    /// Largest scratch-block allocation sent so far (tracks the pool's
+    /// steady-state memory, since buffers grow to the gather size and
+    /// keep their capacity through recycling).
+    max_block_bytes: usize,
+}
+
+/// Worker-side endpoint of one shard's bounded block queue.
+pub struct BlockReceiver {
+    msgs: Receiver<ShardMsg>,
+    pool: Sender<ScratchBlock>,
+}
+
+/// Build one shard's bounded block queue: a message channel plus a pool
+/// pre-seeded with `depth` scratch buffers of row dimension `d`. The
+/// pool *is* the bound — at most `depth` blocks can be in flight, and
+/// an `acquire` past that blocks until the worker recycles one.
+pub fn block_queue(d: usize, depth: usize) -> (BlockSender, BlockReceiver) {
+    assert!(depth > 0, "block queue depth must be positive");
+    let (msg_tx, msg_rx) = channel();
+    let (pool_tx, pool_rx) = channel();
+    for _ in 0..depth {
+        pool_tx.send(ScratchBlock::new(d)).expect("seed scratch pool");
+    }
+    (
+        BlockSender {
+            msgs: msg_tx,
+            pool: pool_rx,
+            stalls: 0,
+            depth,
+            max_block_bytes: 0,
+        },
+        BlockReceiver { msgs: msg_rx, pool: pool_tx },
+    )
+}
+
+impl BlockSender {
+    /// Take a free scratch buffer, blocking while all `depth` buffers
+    /// are in flight (this wait is the queue's backpressure, counted in
+    /// [`BlockSender::stalls`]). Returns `None` if the worker is gone —
+    /// the caller must surface the worker's fate at the epoch boundary
+    /// rather than retrying.
+    pub fn acquire(&mut self) -> Option<ScratchBlock> {
+        match self.pool.try_recv() {
+            Ok(mut b) => {
+                b.clear();
+                Some(b)
+            }
+            Err(TryRecvError::Empty) => {
+                self.stalls += 1;
+                match self.pool.recv() {
+                    Ok(mut b) => {
+                        b.clear();
+                        Some(b)
+                    }
+                    Err(_) => None,
+                }
+            }
+            Err(TryRecvError::Disconnected) => None,
+        }
+    }
+
+    /// Enqueue a gathered block. Returns `false` if the worker is gone.
+    pub fn send(&mut self, block: ScratchBlock) -> bool {
+        self.max_block_bytes =
+            self.max_block_bytes.max(block.capacity_bytes());
+        self.msgs.send(ShardMsg::Block(block)).is_ok()
+    }
+
+    /// Signal the epoch boundary. Returns `false` if the worker is gone.
+    pub fn end_epoch(&self) -> bool {
+        self.msgs.send(ShardMsg::EpochEnd).is_ok()
+    }
+
+    /// Times `acquire` had to wait for the worker (queue-full events).
+    pub fn stalls(&self) -> u64 {
+        self.stalls
+    }
+
+    /// Estimated bytes held by this queue's circulating scratch pool:
+    /// `depth` buffers at the largest gather size sent so far.
+    pub fn pool_bytes(&self) -> usize {
+        self.depth * self.max_block_bytes
+    }
+
+    /// Test-only: enqueue a message that makes the worker panic.
+    #[cfg(test)]
+    pub(crate) fn poison(&self) {
+        let _ = self.msgs.send(ShardMsg::Poison);
+    }
+}
+
+impl BlockReceiver {
+    /// Next message, blocking; `None` once the coordinator has dropped
+    /// its endpoint (shutdown).
+    pub fn recv(&self) -> Option<ShardMsg> {
+        self.msgs.recv().ok()
+    }
+
+    /// Return a consumed scratch buffer to the pool. A send failure
+    /// means the coordinator is gone, which only happens at shutdown —
+    /// the buffer is simply dropped.
+    pub fn recycle(&self, block: ScratchBlock) {
+        let _ = self.pool.send(block);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scratch_block_round_trip() {
+        let mut b = ScratchBlock::new(3);
+        assert!(b.is_empty());
+        b.push_row(&[1.0, 2.0, 3.0]);
+        b.push_row(&[4.0, 5.0, 6.0]);
+        assert_eq!(b.rows(), 2);
+        assert_eq!(b.as_grad_block().row(1), &[4.0, 5.0, 6.0]);
+        b.clear();
+        assert_eq!(b.rows(), 0);
+        assert_eq!(b.dim(), 3);
+    }
+
+    #[test]
+    fn queue_bounds_in_flight_blocks() {
+        let (mut tx, rx) = block_queue(2, 2);
+        // Two buffers available, third acquire must wait for a recycle.
+        let a = tx.acquire().unwrap();
+        let b = tx.acquire().unwrap();
+        assert_eq!(tx.stalls(), 0);
+        assert!(tx.send(a));
+        let h = std::thread::spawn(move || {
+            // Hold the queue full long enough that the third acquire
+            // below observes the empty pool (a stall) before this
+            // recycle runs. Not a strict happens-before — acquire's
+            // try_recv/recv split is internal — but 200ms dwarfs any
+            // plausible scheduling delay between the spawn and the
+            // acquire on the main thread.
+            std::thread::sleep(std::time::Duration::from_millis(200));
+            match rx.recv() {
+                Some(ShardMsg::Block(blk)) => rx.recycle(blk),
+                _ => panic!("expected a block message"),
+            }
+            rx
+        });
+        let c = tx.acquire().unwrap(); // blocks until the recycle above
+        assert!(tx.stalls() >= 1);
+        drop((b, c));
+        let _rx = h.join().unwrap();
+    }
+
+    #[test]
+    fn dead_worker_disconnects_instead_of_deadlocking() {
+        let (mut tx, rx) = block_queue(4, 1);
+        let blk = tx.acquire().unwrap();
+        drop(rx); // worker died holding nothing; pool sender dropped
+        assert!(!tx.send(blk));
+        assert!(tx.acquire().is_none());
+        assert!(!tx.end_epoch());
+    }
+}

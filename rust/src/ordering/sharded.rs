@@ -15,19 +15,299 @@
 //! * **route** — observed gradient blocks are de-interleaved back to the
 //!   owning shard's balancer at that shard's next local position.
 //!
+//! Three dispatch backends share that coordinator, differing only in
+//! *where* the shard balancers run:
+//!
+//! * [`ShardedOrder::new`] — **strided**: rows are forwarded to the
+//!   owning balancer one at a time on the caller's thread, zero-copy;
+//! * [`ShardedOrder::new_gathered`] — **gathered**: each shard's strided
+//!   rows are first copied into a reusable scratch block, then balanced
+//!   as one batched `observe_block` call, still on the caller's thread
+//!   (one copy for batched balancing — the ablation point between the
+//!   other two, measured in `benches/ordering_overhead.rs`);
+//! * [`ShardedOrder::new_async`] — **async**: each shard balancer runs
+//!   on its own worker thread behind a bounded block queue
+//!   ([`crate::ordering::queue`]). `observe_block` becomes gather +
+//!   enqueue; the actual pair balancing overlaps with the trainer's
+//!   next microbatch. The only join is the epoch-boundary drain inside
+//!   [`OrderPolicy::epoch_end`] — the CD-GraB server loop made actually
+//!   concurrent.
+//!
+//! All three are **bit-deterministic** and produce identical epoch
+//! orders for a fixed gradient stream: each shard balancer sees exactly
+//! the same local rows in the same order regardless of how they were
+//! carried, and [`PairBalance`] is block-size invariant (pairs straddle
+//! block boundaries via its pending-row state). Property-tested below;
+//! `docs/determinism.md` documents the full equivalence-contract chain.
+//!
 //! With `W = 1` the coordinator is the identity and the output matches
-//! unsharded [`PairBalance`] exactly (tested below). The in-process
-//! version routes rows zero-copy one at a time; a multi-node deployment
-//! would batch per-shard slices and exchange orders at the epoch
-//! boundary — see ROADMAP "Open items".
+//! unsharded [`PairBalance`] exactly (tested below). A worker that
+//! panics does not deadlock the coordinator: its queue endpoints
+//! disconnect, and the panic payload is re-raised at the epoch boundary
+//! (`epoch_end`), where the drain would otherwise have joined it.
 
 use std::ops::Range;
+use std::sync::mpsc::{channel, Receiver};
+use std::thread::JoinHandle;
 
+use crate::ordering::queue::{
+    block_queue, BlockReceiver, BlockSender, ScratchBlock, ShardMsg,
+};
 use crate::ordering::{GradBlock, OrderPolicy, PairBalance};
 
+/// Round-robin merge of shard-local orders into the global epoch order
+/// plus the position → shard routing table. Local unit ids are lifted to
+/// global ids with the shard base offsets. Round t visits each
+/// non-exhausted shard's t-th local unit, in shard index order.
+fn merge_round_robin(
+    locals: &[&[usize]],
+    bases: &[usize],
+    merged: &mut [usize],
+    route: &mut [u32],
+) {
+    let mut taken: Vec<usize> = vec![0; locals.len()];
+    let mut pos = 0;
+    while pos < merged.len() {
+        for (w, local) in locals.iter().enumerate() {
+            if taken[w] < local.len() {
+                merged[pos] = bases[w] + local[taken[w]];
+                route[pos] = w as u32;
+                taken[w] += 1;
+                pos += 1;
+            }
+        }
+    }
+}
+
+/// What a shard worker sends back at each epoch boundary.
+struct EpochReport {
+    /// The shard's next local epoch order.
+    order: Vec<usize>,
+    /// The shard balancer's current `state_bytes`.
+    state_bytes: usize,
+}
+
+/// One async shard: the coordinator-side queue endpoint, the report
+/// channel, and the worker's join handle (used for panic propagation
+/// and shutdown).
+struct ShardWorker {
+    queue: Option<BlockSender>,
+    reports: Receiver<EpochReport>,
+    handle: Option<JoinHandle<()>>,
+    /// Set once an enqueue failed; skips further sends to a dead worker
+    /// so the epoch can still complete before the boundary re-raises.
+    dead: bool,
+}
+
+impl ShardWorker {
+    /// Join the worker and re-raise its panic payload; called when the
+    /// epoch-boundary drain finds the report channel disconnected.
+    fn propagate_failure(&mut self, shard: usize) -> ! {
+        if let Some(handle) = self.handle.take() {
+            match handle.join() {
+                Err(payload) => std::panic::resume_unwind(payload),
+                Ok(()) => panic!(
+                    "shard worker {shard} exited before the epoch ended"
+                ),
+            }
+        }
+        panic!("shard worker {shard} failed and was already joined");
+    }
+}
+
+impl Drop for ShardWorker {
+    fn drop(&mut self) {
+        // Closing the queue ends the worker's recv loop; a panic payload
+        // at this point was either already surfaced by epoch_end or the
+        // coordinator itself is unwinding, so the join result is dropped.
+        self.queue = None;
+        if let Some(handle) = self.handle.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// The async backend: W workers plus the coordinator's cached view of
+/// their latest epoch orders (identity until the first boundary).
+struct AsyncShards {
+    workers: Vec<ShardWorker>,
+    local_orders: Vec<Vec<usize>>,
+    shard_state_bytes: Vec<usize>,
+    /// Per-call staging slots for lazily acquired scratch blocks
+    /// (allocated once; all `None` between `observe_block` calls).
+    staged: Vec<Option<ScratchBlock>>,
+}
+
+impl AsyncShards {
+    fn spawn(sizes: &[usize], d: usize, depth: usize) -> AsyncShards {
+        let mut workers = Vec::with_capacity(sizes.len());
+        let mut local_orders = Vec::with_capacity(sizes.len());
+        let mut shard_state_bytes = Vec::with_capacity(sizes.len());
+        for &size in sizes {
+            let balancer = PairBalance::new(size, d);
+            shard_state_bytes.push(balancer.state_bytes());
+            local_orders.push((0..size).collect());
+            let (sender, receiver) = block_queue(d, depth);
+            let (report_tx, report_rx) = channel();
+            let handle = std::thread::spawn(move || {
+                shard_worker_loop(receiver, balancer, report_tx);
+            });
+            workers.push(ShardWorker {
+                queue: Some(sender),
+                reports: report_rx,
+                handle: Some(handle),
+                dead: false,
+            });
+        }
+        AsyncShards {
+            staged: (0..workers.len()).map(|_| None).collect(),
+            workers,
+            local_orders,
+            shard_state_bytes,
+        }
+    }
+
+    /// Gather this block's rows per owning shard and enqueue one scratch
+    /// block per shard touched. Blocking happens only when a shard's
+    /// scratch pool is exhausted (backpressure); dead shards are skipped
+    /// until the epoch boundary re-raises their panic.
+    fn observe(&mut self, range: Range<usize>, block: &GradBlock, route: &[u32]) {
+        for (i, row) in block.iter_rows().enumerate() {
+            let w = route[range.start + i] as usize;
+            if self.workers[w].dead {
+                continue;
+            }
+            if self.staged[w].is_none() {
+                let queue = self.workers[w]
+                    .queue
+                    .as_mut()
+                    .expect("queue open while worker is live");
+                match queue.acquire() {
+                    Some(scratch) => self.staged[w] = Some(scratch),
+                    None => {
+                        self.workers[w].dead = true;
+                        continue;
+                    }
+                }
+            }
+            if let Some(scratch) = self.staged[w].as_mut() {
+                scratch.push_row(row);
+            }
+        }
+        for (w, slot) in self.staged.iter_mut().enumerate() {
+            if let Some(scratch) = slot.take() {
+                let queue = self.workers[w]
+                    .queue
+                    .as_mut()
+                    .expect("queue open while worker is live");
+                if !queue.send(scratch) {
+                    self.workers[w].dead = true;
+                }
+            }
+        }
+    }
+
+    /// The epoch-boundary barrier: signal every worker, then collect
+    /// every report. Signalling first keeps the drains overlapped — no
+    /// worker waits on another's `epoch_end`. A disconnected report
+    /// channel means the worker panicked; its payload is re-raised here.
+    fn drain_epoch(&mut self) {
+        for worker in &self.workers {
+            if let Some(queue) = &worker.queue {
+                // A send failure is surfaced by the recv below.
+                let _ = queue.end_epoch();
+            }
+        }
+        for (w, worker) in self.workers.iter_mut().enumerate() {
+            match worker.reports.recv() {
+                Ok(report) => {
+                    self.local_orders[w] = report.order;
+                    self.shard_state_bytes[w] = report.state_bytes;
+                }
+                Err(_) => worker.propagate_failure(w),
+            }
+        }
+    }
+
+    /// Total backpressure events across all shard queues.
+    fn stalls(&self) -> u64 {
+        self.workers
+            .iter()
+            .filter_map(|w| w.queue.as_ref())
+            .map(|q| q.stalls())
+            .sum()
+    }
+
+    /// Bytes held by the circulating scratch pools (per-queue depth ×
+    /// high-water gather size — buffers keep their capacity as they
+    /// recycle, so this tracks steady-state memory, not the seed size).
+    fn pool_bytes(&self) -> usize {
+        self.workers
+            .iter()
+            .filter_map(|w| w.queue.as_ref())
+            .map(|q| q.pool_bytes())
+            .sum()
+    }
+}
+
+/// A shard worker's thread body: balance queued blocks at the shard's
+/// running local position, finalize + report at each epoch boundary,
+/// exit when the coordinator closes the queue.
+fn shard_worker_loop(
+    receiver: BlockReceiver,
+    mut balancer: PairBalance,
+    reports: std::sync::mpsc::Sender<EpochReport>,
+) {
+    let mut cursor = 0usize;
+    while let Some(msg) = receiver.recv() {
+        match msg {
+            ShardMsg::Block(scratch) => {
+                let rows = scratch.rows();
+                if rows > 0 {
+                    balancer.observe_block(
+                        cursor..cursor + rows,
+                        &scratch.as_grad_block(),
+                    );
+                    cursor += rows;
+                }
+                receiver.recycle(scratch);
+            }
+            ShardMsg::EpochEnd => {
+                balancer.epoch_end();
+                cursor = 0;
+                let report = EpochReport {
+                    order: balancer.epoch_order(0).to_vec(),
+                    state_bytes: balancer.state_bytes(),
+                };
+                if reports.send(report).is_err() {
+                    return; // coordinator gone
+                }
+            }
+            #[cfg(test)]
+            ShardMsg::Poison => panic!("poisoned shard worker"),
+        }
+    }
+}
+
+/// Where the W shard balancers run and how observed rows reach them.
+enum Backend {
+    /// Caller-thread dispatch, one zero-copy row at a time.
+    Strided(Vec<PairBalance>),
+    /// Caller-thread dispatch after gathering each shard's strided rows
+    /// into a reusable scratch block (one copy, batched balancing).
+    Gathered {
+        shards: Vec<PairBalance>,
+        scratch: Vec<ScratchBlock>,
+    },
+    /// Worker-thread dispatch behind bounded per-shard block queues.
+    Async(AsyncShards),
+}
+
+/// CD-GraB's sharded coordinator: W [`PairBalance`] workers over
+/// disjoint contiguous unit ranges, merged round-robin at each epoch
+/// boundary. See the module docs for the three dispatch backends.
 pub struct ShardedOrder {
-    /// Per-shard balancers over disjoint contiguous unit ranges.
-    shards: Vec<PairBalance>,
+    backend: Backend,
     /// Global unit id of shard w's local unit 0.
     bases: Vec<usize>,
     n: usize,
@@ -35,33 +315,95 @@ pub struct ShardedOrder {
     merged: Vec<usize>,
     /// Epoch position -> owning shard.
     route: Vec<u32>,
-    /// Per-shard local observe cursors for the current epoch.
+    /// Per-shard local observe cursors (inline backends only; async
+    /// workers track their own local positions).
     cursors: Vec<usize>,
     /// Merged order needs rebuilding (new epoch).
     dirty: bool,
     observed: usize,
 }
 
+/// Shard sizes (differing by at most one) and base offsets for `n`
+/// units over `num_shards` contiguous ranges.
+fn split_units(n: usize, num_shards: usize) -> (Vec<usize>, Vec<usize>) {
+    assert!(num_shards >= 1, "need at least one shard");
+    let base_size = n / num_shards;
+    let remainder = n % num_shards;
+    let mut sizes = Vec::with_capacity(num_shards);
+    let mut bases = Vec::with_capacity(num_shards);
+    let mut start = 0;
+    for w in 0..num_shards {
+        let size = base_size + usize::from(w < remainder);
+        sizes.push(size);
+        bases.push(start);
+        start += size;
+    }
+    debug_assert_eq!(start, n);
+    (sizes, bases)
+}
+
 impl ShardedOrder {
-    /// Split `n` units of dimension `d` across `num_shards` contiguous
-    /// ranges (sizes differ by at most one; shards may be empty when
-    /// `num_shards > n`).
+    /// Synchronous strided coordinator: split `n` units of dimension `d`
+    /// across `num_shards` contiguous ranges (sizes differ by at most
+    /// one; shards may be empty when `num_shards > n`) and forward
+    /// observed rows to the owning balancer one at a time, zero-copy, on
+    /// the caller's thread.
     pub fn new(n: usize, d: usize, num_shards: usize) -> ShardedOrder {
-        assert!(num_shards >= 1, "need at least one shard");
-        let base_size = n / num_shards;
-        let remainder = n % num_shards;
-        let mut shards = Vec::with_capacity(num_shards);
-        let mut bases = Vec::with_capacity(num_shards);
-        let mut start = 0;
-        for w in 0..num_shards {
-            let size = base_size + usize::from(w < remainder);
-            shards.push(PairBalance::new(size, d));
-            bases.push(start);
-            start += size;
-        }
-        debug_assert_eq!(start, n);
+        let (sizes, bases) = split_units(n, num_shards);
+        let shards =
+            sizes.iter().map(|&s| PairBalance::new(s, d)).collect();
+        ShardedOrder::assemble(Backend::Strided(shards), bases, n)
+    }
+
+    /// Synchronous gathered coordinator: like [`ShardedOrder::new`], but
+    /// each shard's strided rows are copied into a reusable scratch
+    /// block and balanced as one batched call — the copy-for-batching
+    /// trade measured in `benches/ordering_overhead.rs`.
+    pub fn new_gathered(
+        n: usize,
+        d: usize,
+        num_shards: usize,
+    ) -> ShardedOrder {
+        let (sizes, bases) = split_units(n, num_shards);
+        let shards: Vec<PairBalance> =
+            sizes.iter().map(|&s| PairBalance::new(s, d)).collect();
+        let scratch =
+            (0..num_shards).map(|_| ScratchBlock::new(d)).collect();
+        ShardedOrder::assemble(
+            Backend::Gathered { shards, scratch },
+            bases,
+            n,
+        )
+    }
+
+    /// Asynchronous coordinator: each shard balancer runs on its own
+    /// worker thread behind a bounded block queue holding at most
+    /// `queue_depth` in-flight blocks. `observe_block` becomes gather +
+    /// non-blocking enqueue (it only waits when a shard's queue is
+    /// full); the epoch-boundary merge in
+    /// [`OrderPolicy::epoch_end`] is the only join. Produces exactly the
+    /// same epoch orders as the synchronous backends for the same
+    /// gradient stream.
+    pub fn new_async(
+        n: usize,
+        d: usize,
+        num_shards: usize,
+        queue_depth: usize,
+    ) -> ShardedOrder {
+        assert!(d > 0, "async shards need a positive dimension");
+        let (sizes, bases) = split_units(n, num_shards);
+        let shards = AsyncShards::spawn(&sizes, d, queue_depth);
+        ShardedOrder::assemble(Backend::Async(shards), bases, n)
+    }
+
+    fn assemble(
+        backend: Backend,
+        bases: Vec<usize>,
+        n: usize,
+    ) -> ShardedOrder {
+        let num_shards = bases.len();
         ShardedOrder {
-            shards,
+            backend,
             bases,
             n,
             merged: vec![0; n],
@@ -72,40 +414,82 @@ impl ShardedOrder {
         }
     }
 
+    /// Number of shard balancers (CD-GraB's W).
     pub fn num_shards(&self) -> usize {
-        self.shards.len()
+        self.cursors.len()
     }
 
-    /// Round-robin merge of the shard-local orders into the global epoch
-    /// order, plus the position->shard routing table. Local unit ids are
-    /// lifted to global ids with the shard base offset.
+    /// Whether this coordinator dispatches to worker threads.
+    pub fn is_async(&self) -> bool {
+        matches!(self.backend, Backend::Async(_))
+    }
+
+    /// Total backpressure events (acquire waits on a full shard queue)
+    /// since construction. Always 0 for the synchronous backends.
+    pub fn queue_stalls(&self) -> u64 {
+        match &self.backend {
+            Backend::Async(shards) => shards.stalls(),
+            _ => 0,
+        }
+    }
+
+    /// Rebuild the merged order + routing table from the shard-local
+    /// orders (queried inline, or cached from the last async drain).
     fn rebuild(&mut self, epoch: usize) {
-        let locals: Vec<&[usize]> = self
-            .shards
-            .iter_mut()
-            .map(|s| s.epoch_order(epoch))
-            .collect();
-        let mut taken: Vec<usize> = vec![0; locals.len()];
-        let mut pos = 0;
-        while pos < self.n {
-            for (w, local) in locals.iter().enumerate() {
-                if taken[w] < local.len() {
-                    self.merged[pos] = self.bases[w] + local[taken[w]];
-                    self.route[pos] = w as u32;
-                    taken[w] += 1;
-                    pos += 1;
-                }
+        match &mut self.backend {
+            Backend::Strided(shards)
+            | Backend::Gathered { shards, .. } => {
+                let locals: Vec<&[usize]> = shards
+                    .iter_mut()
+                    .map(|s| s.epoch_order(epoch))
+                    .collect();
+                merge_round_robin(
+                    &locals,
+                    &self.bases,
+                    &mut self.merged,
+                    &mut self.route,
+                );
+            }
+            Backend::Async(shards) => {
+                let locals: Vec<&[usize]> = shards
+                    .local_orders
+                    .iter()
+                    .map(|o| o.as_slice())
+                    .collect();
+                merge_round_robin(
+                    &locals,
+                    &self.bases,
+                    &mut self.merged,
+                    &mut self.route,
+                );
             }
         }
         for c in self.cursors.iter_mut() {
             *c = 0;
         }
     }
+
+    /// Test-only: make shard `w`'s worker panic on its next dequeue
+    /// (async backend only), to exercise boundary panic propagation.
+    #[cfg(test)]
+    fn poison_shard(&self, w: usize) {
+        match &self.backend {
+            Backend::Async(shards) => {
+                if let Some(queue) = &shards.workers[w].queue {
+                    queue.poison();
+                }
+            }
+            _ => panic!("poison_shard needs the async backend"),
+        }
+    }
 }
 
 impl OrderPolicy for ShardedOrder {
     fn name(&self) -> &'static str {
-        "cd-grab"
+        match self.backend {
+            Backend::Async(_) => "cd-grab-async",
+            _ => "cd-grab",
+        }
     }
 
     fn epoch_order(&mut self, epoch: usize) -> &[usize] {
@@ -120,29 +504,55 @@ impl OrderPolicy for ShardedOrder {
         debug_assert_eq!(range.len(), block.rows());
         debug_assert!(range.end <= self.n);
         debug_assert!(!self.dirty, "observe before epoch_order");
-        if self.shards.len() == 1 {
-            // Degenerate coordinator: local positions == global
-            // positions, forward the whole block untouched so W=1 costs
-            // exactly what unsharded PairBalance costs.
-            let q = self.cursors[0];
-            self.cursors[0] += block.rows();
-            self.shards[0].observe_block(q..q + block.rows(), block);
-        } else {
-            // De-interleave rows to their owning shard at its next local
-            // position (local positions arrive in order by construction
-            // of the round-robin merge). Shards are concrete
-            // PairBalance values, so these are static calls; the per-row
-            // forwarding (vs gathering each shard's strided rows into a
-            // scratch block) is the zero-copy tradeoff noted in
-            // ROADMAP "Open items".
-            for (i, row) in block.iter_rows().enumerate() {
-                let w = self.route[range.start + i] as usize;
-                let q = self.cursors[w];
-                self.cursors[w] += 1;
-                self.shards[w].observe_block(
-                    q..q + 1,
-                    &GradBlock::new(row, block.dim()),
-                );
+        match &mut self.backend {
+            // Degenerate inline coordinator (W = 1): local positions ==
+            // global positions, forward the whole block untouched so it
+            // costs exactly what unsharded PairBalance costs. (The
+            // async backend still gathers at W = 1 — the queue hand-off
+            // forces the copy either way.)
+            Backend::Strided(shards)
+            | Backend::Gathered { shards, .. }
+                if shards.len() == 1 =>
+            {
+                let q = self.cursors[0];
+                self.cursors[0] += block.rows();
+                shards[0].observe_block(q..q + block.rows(), block);
+            }
+            Backend::Strided(shards) => {
+                // De-interleave rows to their owning shard at its next
+                // local position (local positions arrive in order by
+                // construction of the round-robin merge).
+                for (i, row) in block.iter_rows().enumerate() {
+                    let w = self.route[range.start + i] as usize;
+                    let q = self.cursors[w];
+                    self.cursors[w] += 1;
+                    shards[w].observe_block(
+                        q..q + 1,
+                        &GradBlock::new(row, block.dim()),
+                    );
+                }
+            }
+            Backend::Gathered { shards, scratch } => {
+                for (i, row) in block.iter_rows().enumerate() {
+                    let w = self.route[range.start + i] as usize;
+                    scratch[w].push_row(row);
+                }
+                for (w, buf) in scratch.iter_mut().enumerate() {
+                    let rows = buf.rows();
+                    if rows == 0 {
+                        continue;
+                    }
+                    let q = self.cursors[w];
+                    self.cursors[w] += rows;
+                    shards[w].observe_block(
+                        q..q + rows,
+                        &buf.as_grad_block(),
+                    );
+                    buf.clear();
+                }
+            }
+            Backend::Async(shards) => {
+                shards.observe(range, block, &self.route);
             }
         }
         self.observed += block.rows();
@@ -153,15 +563,37 @@ impl OrderPolicy for ShardedOrder {
             self.observed, self.n,
             "ShardedOrder epoch_end before observing all {} units", self.n
         );
-        for s in self.shards.iter_mut() {
-            s.epoch_end();
+        match &mut self.backend {
+            Backend::Strided(shards)
+            | Backend::Gathered { shards, .. } => {
+                for s in shards.iter_mut() {
+                    s.epoch_end();
+                }
+            }
+            Backend::Async(shards) => shards.drain_epoch(),
         }
         self.observed = 0;
         self.dirty = true;
     }
 
     fn state_bytes(&self) -> usize {
-        self.shards.iter().map(|s| s.state_bytes()).sum::<usize>()
+        let shard_bytes = match &self.backend {
+            Backend::Strided(shards) => {
+                shards.iter().map(|s| s.state_bytes()).sum::<usize>()
+            }
+            Backend::Gathered { shards, scratch } => {
+                shards.iter().map(|s| s.state_bytes()).sum::<usize>()
+                    + scratch
+                        .iter()
+                        .map(|b| b.capacity_bytes())
+                        .sum::<usize>()
+            }
+            Backend::Async(shards) => {
+                shards.shard_state_bytes.iter().sum::<usize>()
+                    + shards.pool_bytes()
+            }
+        };
+        shard_bytes
             + self.merged.len() * std::mem::size_of::<usize>()
             + self.route.len() * std::mem::size_of::<u32>()
     }
@@ -187,14 +619,21 @@ mod tests {
         crate::ordering::stream_static_epoch(p, vs, &mut flat, block);
     }
 
+    fn shard_sizes(s: &ShardedOrder) -> Vec<usize> {
+        match &s.backend {
+            Backend::Strided(shards) => {
+                shards.iter().map(|p| p.len()).collect()
+            }
+            _ => panic!("expected strided backend"),
+        }
+    }
+
     #[test]
     fn shard_ranges_partition_units() {
         let s = ShardedOrder::new(10, 2, 4);
         assert_eq!(s.num_shards(), 4);
         assert_eq!(s.bases, vec![0, 3, 6, 8]);
-        let sizes: Vec<usize> =
-            s.shards.iter().map(|p| p.len()).collect();
-        assert_eq!(sizes, vec![3, 3, 2, 2]);
+        assert_eq!(shard_sizes(&s), vec![3, 3, 2, 2]);
     }
 
     #[test]
@@ -210,20 +649,65 @@ mod tests {
 
     #[test]
     fn sharded_order_is_always_a_permutation() {
-        // The ISSUE's property test: W shards, random n/d/block sizes,
-        // every epoch's merged order is a valid permutation of 0..n.
-        prop::forall("sharded permutations", 24, |rng| {
+        // W shards, random n/d/block sizes, every epoch's merged order
+        // is a valid permutation of 0..n — for every backend.
+        prop::forall("sharded permutations", 16, |rng| {
             let n = 1 + rng.gen_range(96) as usize;
             let d = 1 + rng.gen_range(6) as usize;
             let w = 1 + rng.gen_range(8) as usize;
             let b = 1 + rng.gen_range(9) as usize;
             let vs = gen::vec_set(rng, n, d);
-            let mut p = ShardedOrder::new(n, d, w);
-            for _ in 0..3 {
+            let mut policies: Vec<ShardedOrder> = vec![
+                ShardedOrder::new(n, d, w),
+                ShardedOrder::new_gathered(n, d, w),
+                ShardedOrder::new_async(n, d, w, 2),
+            ];
+            for p in policies.iter_mut() {
+                for _ in 0..3 {
+                    assert_permutation(p.epoch_order(0))?;
+                    feed_epoch(p, &vs, b);
+                }
                 assert_permutation(p.epoch_order(0))?;
-                feed_epoch(&mut p, &vs, b);
             }
-            assert_permutation(p.epoch_order(0))?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn async_and_gathered_orders_match_strided_exactly() {
+        // The ISSUE's acceptance property: for a fixed seed and
+        // W in {1, 2, 4}, the async coordinator's epoch orders equal
+        // the synchronous path's exactly across >= 3 epochs (and the
+        // gathered backend agrees too), for random n/d/block/depth.
+        prop::forall("async == sync sharded orders", 12, |rng| {
+            let n = 1 + rng.gen_range(80) as usize;
+            let d = 1 + rng.gen_range(6) as usize;
+            let b = 1 + rng.gen_range(9) as usize;
+            let depth = 1 + rng.gen_range(4) as usize;
+            let vs = gen::vec_set(rng, n, d);
+            for w in [1usize, 2, 4] {
+                let mut strided = ShardedOrder::new(n, d, w);
+                let mut gathered = ShardedOrder::new_gathered(n, d, w);
+                let mut asynch = ShardedOrder::new_async(n, d, w, depth);
+                for epoch in 0..3 {
+                    feed_epoch(&mut strided, &vs, b);
+                    feed_epoch(&mut gathered, &vs, b);
+                    feed_epoch(&mut asynch, &vs, b);
+                    let want = strided.epoch_order(0).to_vec();
+                    if gathered.epoch_order(0) != want.as_slice() {
+                        return Err(format!(
+                            "gathered != strided at w={w} epoch={epoch} \
+                             n={n} d={d} b={b}"
+                        ));
+                    }
+                    if asynch.epoch_order(0) != want.as_slice() {
+                        return Err(format!(
+                            "async != strided at w={w} epoch={epoch} \
+                             n={n} d={d} b={b} depth={depth}"
+                        ));
+                    }
+                }
+            }
             Ok(())
         });
     }
@@ -231,7 +715,9 @@ mod tests {
     #[test]
     fn single_shard_matches_unsharded_pair_balance_exactly() {
         // Acceptance gate: W=1 sharded output == unsharded PairBalance,
-        // byte for byte, across epochs and block sizes.
+        // byte for byte, across epochs and block sizes — the async
+        // equivalence test above then chains the invariant through to
+        // the worker-thread path.
         let mut rng = Rng::new(5);
         for (n, b) in [(33usize, 7usize), (64, 16), (10, 1)] {
             let d = 8;
@@ -281,11 +767,61 @@ mod tests {
     fn more_shards_than_units_still_works() {
         let d = 3;
         let vs = gen::vec_set(&mut Rng::new(2), 3, d);
-        let mut p = ShardedOrder::new(3, d, 8);
-        for _ in 0..2 {
-            assert_permutation(p.epoch_order(0)).unwrap();
-            feed_epoch(&mut p, &vs, 2);
+        for mut p in [
+            ShardedOrder::new(3, d, 8),
+            ShardedOrder::new_gathered(3, d, 8),
+            ShardedOrder::new_async(3, d, 8, 2),
+        ] {
+            for _ in 0..2 {
+                assert_permutation(p.epoch_order(0)).unwrap();
+                feed_epoch(&mut p, &vs, 2);
+            }
         }
+    }
+
+    #[test]
+    fn worker_panic_surfaces_at_epoch_boundary() {
+        // A poisoned worker panics on its next dequeue. The coordinator
+        // must keep accepting observations (no deadlock on the dead
+        // shard's queue) and re-raise the worker's payload at epoch_end
+        // instead of hanging in the drain.
+        let n = 16;
+        let d = 2;
+        let vs = gen::vec_set(&mut Rng::new(3), n, d);
+        let mut p = ShardedOrder::new_async(n, d, 2, 2);
+        let _ = p.epoch_order(0);
+        p.poison_shard(1);
+        let err = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                feed_epoch(&mut p, &vs, 4); // ends with epoch_end
+            }),
+        )
+        .expect_err("worker panic must propagate");
+        let msg = err
+            .downcast_ref::<&str>()
+            .copied()
+            .unwrap_or("<non-str payload>");
+        assert!(
+            msg.contains("poisoned shard worker"),
+            "unexpected payload: {msg}"
+        );
+    }
+
+    #[test]
+    fn async_drop_mid_epoch_does_not_hang() {
+        // Dropping the coordinator with blocks still queued must shut
+        // the workers down cleanly (queue close ends their recv loops).
+        let n = 32;
+        let d = 4;
+        let vs = gen::vec_set(&mut Rng::new(4), n, d);
+        let mut p = ShardedOrder::new_async(n, d, 4, 2);
+        let order = p.epoch_order(0).to_vec();
+        let mut flat = vec![0.0f32; 8 * d];
+        for (pos, &unit) in order.iter().take(8).enumerate() {
+            flat[pos * d..(pos + 1) * d].copy_from_slice(&vs[unit]);
+        }
+        p.observe_block(0..8, &GradBlock::new(&flat, d));
+        drop(p); // mid-epoch: workers still own queued blocks
     }
 
     #[test]

@@ -21,6 +21,16 @@
 //! what makes the overlap legal: microbatches within a window all see the
 //! same params, matching the gradient-accumulation semantics of the sync
 //! trainer.
+//!
+//! Composes with the async sharded coordinator (`--pipeline
+//! --ordering cd-grab --async-shards`): the coordinator thread's
+//! `observe_block` then only gathers + enqueues per-shard blocks, and
+//! pair balancing runs on the shard workers concurrently with both the
+//! grad stage and the optimizer. The `epoch_end` call below is the
+//! single epoch-boundary barrier that drains those shard queues (and
+//! re-raises a shard worker's panic); everything stays bit-identical to
+//! the sync loop because shard streams are order-preserving SPSC queues
+//! (see docs/determinism.md).
 
 use std::sync::atomic::{AtomicU64, Ordering as AtomicOrdering};
 use std::sync::mpsc::{SyncSender, TrySendError};
@@ -71,17 +81,22 @@ pub struct PipelineStats {
 pub struct PipelineTrainer {
     cfg: TrainConfig,
     artifacts_dir: String,
+    /// Training dataset (ordering units).
     pub train_ds: Dataset,
+    /// The example-ordering policy under test.
     pub policy: Box<dyn OrderPolicy>,
     opt: MomentumSgd,
     sched: Scheduler,
+    /// Flattened model parameters (layout per the artifact manifest).
     pub params: Vec<f32>,
     dim: usize,
     batch: usize,
+    /// Queue/stall counters accumulated across epochs.
     pub stats: PipelineStats,
 }
 
 impl PipelineTrainer {
+    /// Build a pipelined trainer from config against an opened runtime.
     pub fn new(cfg: TrainConfig, rt: &Runtime) -> Result<PipelineTrainer> {
         let model_name = cfg.task.model_name();
         let entry = rt.manifest.model(model_name)?.clone();
@@ -297,6 +312,9 @@ impl PipelineTrainer {
             self.opt.step(&mut self.params, &mean, lr);
             steps += 1;
         }
+        // Epoch-boundary barrier: drains async shard queues (if any)
+        // before the stage threads are reaped, so a worker panic
+        // surfaces here rather than poisoning the next epoch.
         let sw = Stopwatch::start();
         self.policy.epoch_end();
         order_secs += sw.secs();

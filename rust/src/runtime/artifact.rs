@@ -10,16 +10,22 @@ use crate::util::ser::Json;
 /// One named parameter block in the flat layout.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ParamSpec {
+    /// Parameter name (as exported by the model builder).
     pub name: String,
+    /// Logical tensor shape.
     pub shape: Vec<usize>,
+    /// Start offset in the flat parameter vector.
     pub offset: usize,
+    /// Element count (product of `shape`).
     pub size: usize,
 }
 
 /// Input dtype of the feature tensor.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Dtype {
+    /// 32-bit floats (dense features).
     F32,
+    /// 32-bit ints (token ids).
     I32,
 }
 
@@ -36,6 +42,7 @@ impl Dtype {
 /// Model entry: shapes/dtypes of the grad and eval artifacts.
 #[derive(Clone, Debug)]
 pub struct ModelEntry {
+    /// Model family name (logreg, lenet, lstm, transformer).
     pub name: String,
     /// Flat parameter dimension d.
     pub dim: usize,
@@ -45,14 +52,21 @@ pub struct ModelEntry {
     pub eval_batch: usize,
     /// Per-example feature shape (flattened product below).
     pub x_shape: Vec<usize>,
+    /// Feature dtype.
     pub x_dtype: Dtype,
     /// Per-example label shape ([] = scalar).
     pub y_shape: Vec<usize>,
+    /// Output class count (0 for pure LM heads).
     pub n_classes: usize,
+    /// Token vocabulary size (0 for dense-feature models).
     pub vocab: usize,
+    /// Grad artifact file name (HLO text).
     pub grad_hlo: String,
+    /// Eval artifact file name (HLO text).
     pub eval_hlo: String,
+    /// Initial-parameter file name (little-endian f32).
     pub init_params: String,
+    /// Flat layout of the parameter vector.
     pub param_layout: Vec<ParamSpec>,
 }
 
@@ -71,14 +85,18 @@ impl ModelEntry {
 /// Balance-kernel entry.
 #[derive(Clone, Debug)]
 pub struct BalanceEntry {
+    /// Vector dimension the kernel was lowered for.
     pub dim: usize,
+    /// Kernel artifact file name (HLO text).
     pub hlo: String,
 }
 
 /// The parsed manifest.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// Model artifacts.
     pub models: Vec<ModelEntry>,
+    /// Balance-kernel artifacts.
     pub balance: Vec<BalanceEntry>,
     /// Fused momentum-SGD optimizer artifacts (optional — older manifests
     /// predate them).
@@ -86,12 +104,14 @@ pub struct Manifest {
 }
 
 impl Manifest {
+    /// Read + parse `manifest.json`.
     pub fn load(path: &Path) -> Result<Manifest> {
         let json = Json::from_file(path)?;
         Manifest::from_json(&json)
             .with_context(|| format!("parsing {}", path.display()))
     }
 
+    /// Parse a manifest from its JSON value (format 1 only).
     pub fn from_json(json: &Json) -> Result<Manifest> {
         let format = json.get("format")?.as_usize()?;
         if format != 1 {
@@ -120,6 +140,7 @@ impl Manifest {
         Ok(Manifest { models, balance, sgd })
     }
 
+    /// Look up a model entry by name.
     pub fn model(&self, name: &str) -> Result<&ModelEntry> {
         self.models
             .iter()

@@ -17,19 +17,23 @@ fn xerr(e: xla::Error) -> anyhow::Error {
 /// Per-example gradient executor:
 /// `(params[d], X[B, xw], Y[B, yw]) -> (losses[B], grads[B, d])`.
 pub struct GradExecutor {
+    /// The manifest entry this executor was compiled from.
     pub entry: ModelEntry,
     exe: xla::PjRtLoadedExecutable,
 }
 
 impl GradExecutor {
+    /// Wrap a compiled grad artifact.
     pub fn new(entry: ModelEntry, exe: xla::PjRtLoadedExecutable) -> Self {
         GradExecutor { entry, exe }
     }
 
+    /// Microbatch size B baked into the artifact.
     pub fn batch(&self) -> usize {
         self.entry.batch
     }
 
+    /// Flat parameter dimension d.
     pub fn dim(&self) -> usize {
         self.entry.dim
     }
@@ -94,15 +98,18 @@ impl GradExecutor {
 /// Evaluation executor:
 /// `(params[d], X[E, xw], Y[E, yw]) -> (loss_sum, correct)`.
 pub struct EvalExecutor {
+    /// The manifest entry this executor was compiled from.
     pub entry: ModelEntry,
     exe: xla::PjRtLoadedExecutable,
 }
 
 impl EvalExecutor {
+    /// Wrap a compiled eval artifact.
     pub fn new(entry: ModelEntry, exe: xla::PjRtLoadedExecutable) -> Self {
         EvalExecutor { entry, exe }
     }
 
+    /// Eval batch size E baked into the artifact.
     pub fn batch(&self) -> usize {
         self.entry.eval_batch
     }
@@ -156,15 +163,18 @@ impl EvalExecutor {
 /// GraB balance-step executor (the Pallas L1 kernel artifact):
 /// `(s[d], m[d], g[d]) -> (eps, s_new[d], c[d])`.
 pub struct BalanceExecutor {
+    /// The manifest entry this executor was compiled from.
     pub entry: BalanceEntry,
     exe: xla::PjRtLoadedExecutable,
 }
 
 impl BalanceExecutor {
+    /// Wrap a compiled balance-kernel artifact.
     pub fn new(entry: BalanceEntry, exe: xla::PjRtLoadedExecutable) -> Self {
         BalanceExecutor { entry, exe }
     }
 
+    /// Vector dimension the kernel was lowered for.
     pub fn dim(&self) -> usize {
         self.entry.dim
     }
@@ -192,15 +202,18 @@ impl BalanceExecutor {
 /// Fused momentum-SGD optimizer executor (the L1 Pallas kernel artifact):
 /// `(p[d], v[d], g[d], hyper[3]=(lr,mu,wd)) -> (p', v')`.
 pub struct SgdExecutor {
+    /// The manifest entry this executor was compiled from.
     pub entry: BalanceEntry,
     exe: xla::PjRtLoadedExecutable,
 }
 
 impl SgdExecutor {
+    /// Wrap a compiled fused-SGD kernel artifact.
     pub fn new(entry: BalanceEntry, exe: xla::PjRtLoadedExecutable) -> Self {
         SgdExecutor { entry, exe }
     }
 
+    /// Vector dimension the kernel was lowered for.
     pub fn dim(&self) -> usize {
         self.entry.dim
     }

@@ -27,6 +27,7 @@ use crate::xla;
 pub struct Runtime {
     client: Arc<xla::PjRtClient>,
     dir: PathBuf,
+    /// The parsed artifact manifest.
     pub manifest: Manifest,
 }
 
@@ -47,6 +48,7 @@ impl Runtime {
         Ok(Runtime { client: Arc::new(client), dir, manifest })
     }
 
+    /// PJRT platform name (e.g. "cpu").
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

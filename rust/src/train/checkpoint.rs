@@ -20,9 +20,13 @@ const VERSION: u32 = 1;
 /// One resumable snapshot.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Checkpoint {
+    /// Epoch the snapshot was taken after.
     pub epoch: u64,
+    /// Model parameters (flattened, layout per the artifact manifest).
     pub params: Vec<f32>,
+    /// Optimizer momentum buffer, same layout as `params`.
     pub velocity: Vec<f32>,
+    /// The ordering policy's next epoch permutation.
     pub order: Vec<u64>,
 }
 
@@ -49,6 +53,7 @@ pub fn crc32(data: &[u8]) -> u32 {
 }
 
 impl Checkpoint {
+    /// Serialize atomically to `path` (temp file + rename).
     pub fn save(&self, path: &Path) -> Result<()> {
         anyhow::ensure!(self.params.len() == self.velocity.len(),
                         "params/velocity length mismatch");
@@ -88,6 +93,7 @@ impl Checkpoint {
         Ok(())
     }
 
+    /// Read + verify (magic, version, CRC) a snapshot from `path`.
     pub fn load(path: &Path) -> Result<Checkpoint> {
         let mut f = std::fs::File::open(path)
             .with_context(|| format!("opening {}", path.display()))?;

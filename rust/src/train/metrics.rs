@@ -9,24 +9,32 @@ use crate::util::ser::{fmt_f, CsvWriter};
 /// One epoch's measurements.
 #[derive(Clone, Debug)]
 pub struct EpochMetrics {
+    /// 0-based epoch index.
     pub epoch: usize,
     /// Mean per-unit train loss over the epoch (computed on the fly, i.e.
     /// at the parameters current when each unit was visited — the same
     /// "training loss" curve the paper plots).
     pub train_loss: f64,
+    /// Mean eval loss, when this epoch was evaluated.
     pub eval_loss: Option<f64>,
+    /// Eval accuracy, when this epoch was evaluated.
     pub eval_acc: Option<f64>,
+    /// Learning rate in effect this epoch.
     pub lr: f64,
+    /// Optimizer steps taken (accumulation windows flushed).
     pub optimizer_steps: usize,
     /// Seconds in the PJRT grad executor.
     pub grad_secs: f64,
     /// Seconds in the ordering policy (observe + epoch_end) — the ordering
     /// overhead column of Table 1.
     pub order_secs: f64,
+    /// Wall-clock seconds for the whole epoch.
     pub epoch_secs: f64,
+    /// Ordering-policy state bytes at the end of the epoch (Table 1).
     pub order_state_bytes: usize,
 }
 
+/// Column names for [`EpochMetrics::csv_row`], in order.
 pub const CSV_HEADER: [&str; 10] = [
     "epoch",
     "train_loss",
@@ -41,6 +49,7 @@ pub const CSV_HEADER: [&str; 10] = [
 ];
 
 impl EpochMetrics {
+    /// The metrics as CSV cells, matching [`CSV_HEADER`].
     pub fn csv_row(&self) -> Vec<String> {
         vec![
             self.epoch.to_string(),
@@ -83,12 +92,14 @@ pub struct MetricsSink {
 }
 
 impl MetricsSink {
+    /// Create (truncate) the CSV at `path` and write the header.
     pub fn create(path: impl AsRef<Path>) -> Result<MetricsSink> {
         Ok(MetricsSink {
             writer: CsvWriter::create(path.as_ref(), &CSV_HEADER)?,
         })
     }
 
+    /// Append one epoch row and flush it to disk.
     pub fn push(&mut self, m: &EpochMetrics) -> Result<()> {
         self.writer.row(&m.csv_row())?;
         self.writer.flush()

@@ -6,6 +6,16 @@
 //! `B * accum_steps` unit gradients (the paper's gradient-accumulation
 //! recipe), while the ordering policy observes every unit gradient
 //! individually — exactly the granularity GraB needs.
+//!
+//! Epoch boundary contract: the trainer calls
+//! [`OrderPolicy::epoch_end`] exactly once per epoch, after observing
+//! all `n` units. For the async sharded coordinator
+//! (`--ordering cd-grab --async-shards`) that call *is* the barrier —
+//! it drains the per-shard block queues, joins the worker balancers'
+//! epoch work, and re-raises any worker panic. The `order_secs` metric
+//! therefore includes the drain wait: with async shards, observe-side
+//! time shrinks to a gather + enqueue and any residual balancing cost
+//! shows up at the boundary instead.
 
 pub mod checkpoint;
 pub mod metrics;
@@ -39,7 +49,9 @@ pub(crate) fn should_eval(
 /// Outcome of a full training run.
 #[derive(Clone, Debug)]
 pub struct TrainResult {
+    /// The config's run identity string.
     pub run_id: String,
+    /// Per-epoch metrics, in order.
     pub epochs: Vec<EpochMetrics>,
     /// The ordering the policy would use next (Fig. 3's "retrain" order).
     pub final_order: Vec<usize>,
@@ -48,6 +60,7 @@ pub struct TrainResult {
 }
 
 impl TrainResult {
+    /// Train loss of the last epoch (NaN when no epochs ran).
     pub fn final_train_loss(&self) -> f64 {
         self.epochs.last().map(|e| e.train_loss).unwrap_or(f64::NAN)
     }
@@ -56,14 +69,19 @@ impl TrainResult {
 /// The synchronous trainer (the threaded pipeline variant lives in
 /// [`crate::pipeline`] and shares this struct's components).
 pub struct Trainer {
+    /// The validated run configuration.
     pub cfg: TrainConfig,
+    /// Training dataset (ordering units).
     pub train_ds: Dataset,
+    /// Held-out evaluation dataset.
     pub eval_ds: Dataset,
     grad_exec: GradExecutor,
     eval_exec: EvalExecutor,
+    /// The example-ordering policy under test.
     pub policy: Box<dyn OrderPolicy>,
     opt: MomentumSgd,
     sched: Scheduler,
+    /// Flattened model parameters (layout per the artifact manifest).
     pub params: Vec<f32>,
     sink: Option<MetricsSink>,
 }
@@ -203,6 +221,8 @@ impl Trainer {
             steps += 1;
         }
 
+        // Epoch-boundary barrier: for async sharded policies this drains
+        // the shard queues and joins the workers' epoch (see module docs).
         let sw_o = Stopwatch::start();
         self.policy.epoch_end();
         order_secs += sw_o.secs();

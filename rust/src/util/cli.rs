@@ -10,6 +10,7 @@ use anyhow::{anyhow, bail, Result};
 /// Parsed command line: positionals plus `--key value` options.
 #[derive(Clone, Debug, Default)]
 pub struct Args {
+    /// Arguments that are not `--key value` options or `--flag`s.
     pub positional: Vec<String>,
     opts: BTreeMap<String, String>,
     flags: Vec<String>,
@@ -61,25 +62,30 @@ impl Args {
         self.seen.borrow_mut().push(key.to_string());
     }
 
+    /// Whether boolean `--key` was passed.
     pub fn flag(&self, key: &str) -> bool {
         self.mark(key);
         self.flags.iter().any(|f| f == key)
     }
 
+    /// The value of `--key`, if present.
     pub fn opt_str(&self, key: &str) -> Option<String> {
         self.mark(key);
         self.opts.get(key).cloned()
     }
 
+    /// The value of `--key`, or `default`.
     pub fn str_or(&self, key: &str, default: &str) -> String {
         self.opt_str(key).unwrap_or_else(|| default.to_string())
     }
 
+    /// The value of `--key`; errors when absent.
     pub fn req_str(&self, key: &str) -> Result<String> {
         self.opt_str(key)
             .ok_or_else(|| anyhow!("missing required option --{key}"))
     }
 
+    /// `--key` parsed as `usize`, or `default`; errors on non-integers.
     pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
         match self.opt_str(key) {
             None => Ok(default),
@@ -89,6 +95,7 @@ impl Args {
         }
     }
 
+    /// `--key` parsed as `u64`, or `default`; errors on non-integers.
     pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
         match self.opt_str(key) {
             None => Ok(default),
@@ -98,6 +105,7 @@ impl Args {
         }
     }
 
+    /// `--key` parsed as `f64`, or `default`; errors on non-floats.
     pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
         match self.opt_str(key) {
             None => Ok(default),

@@ -44,6 +44,7 @@ impl Rng {
         Rng::new(self.next_u64() ^ stream.wrapping_mul(0xA076_1D64_78BD_642F))
     }
 
+    /// Next raw 64-bit output.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
@@ -61,6 +62,7 @@ impl Rng {
         result
     }
 
+    /// Next 32 bits (upper half of the 64-bit output).
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
         (self.next_u64() >> 32) as u32
@@ -90,6 +92,7 @@ impl Rng {
         (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
     }
 
+    /// Uniform in `[0, 1)` as `f32`.
     #[inline]
     pub fn f32(&mut self) -> f32 {
         self.f64() as f32

@@ -16,15 +16,22 @@ use anyhow::{anyhow, bail, Context, Result};
 /// A JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (always held as `f64`, like json.dump emits).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object, key-sorted for deterministic output.
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Parse a complete JSON document.
     pub fn parse(text: &str) -> Result<Json> {
         let mut p = Parser { b: text.as_bytes(), i: 0 };
         p.skip_ws();
@@ -36,6 +43,7 @@ impl Json {
         Ok(v)
     }
 
+    /// Read + parse a JSON file.
     pub fn from_file(path: &Path) -> Result<Json> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading {}", path.display()))?;
@@ -44,6 +52,7 @@ impl Json {
 
     // -- typed accessors ---------------------------------------------------
 
+    /// Object member lookup; errors on non-objects / missing keys.
     pub fn get(&self, key: &str) -> Result<&Json> {
         match self {
             Json::Obj(m) => m
@@ -53,6 +62,7 @@ impl Json {
         }
     }
 
+    /// The value as a number.
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Json::Num(x) => Ok(*x),
@@ -60,6 +70,7 @@ impl Json {
         }
     }
 
+    /// The value as a non-negative integer.
     pub fn as_usize(&self) -> Result<usize> {
         let x = self.as_f64()?;
         if x < 0.0 || x.fract() != 0.0 {
@@ -68,6 +79,7 @@ impl Json {
         Ok(x as usize)
     }
 
+    /// The value as a string slice.
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Json::Str(s) => Ok(s),
@@ -75,6 +87,7 @@ impl Json {
         }
     }
 
+    /// The value as an array slice.
     pub fn as_arr(&self) -> Result<&[Json]> {
         match self {
             Json::Arr(v) => Ok(v),
@@ -339,6 +352,7 @@ pub struct CsvWriter {
 }
 
 impl CsvWriter {
+    /// Create (truncate) `path`, write `header`, fix the column count.
     pub fn create(path: &Path, header: &[&str]) -> Result<CsvWriter> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
@@ -353,6 +367,7 @@ impl CsvWriter {
         Ok(w)
     }
 
+    /// Write one row; errors if the cell count mismatches the header.
     pub fn row(&mut self, cells: &[String]) -> Result<()> {
         anyhow::ensure!(
             cells.len() == self.ncols,
@@ -383,6 +398,7 @@ impl CsvWriter {
         Ok(())
     }
 
+    /// Flush buffered rows to disk.
     pub fn flush(&mut self) -> Result<()> {
         self.file.flush()?;
         Ok(())

@@ -6,16 +6,24 @@
 /// Summary statistics of a sample.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Summary {
+    /// Sample size.
     pub n: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Population standard deviation.
     pub std: f64,
+    /// Smallest sample.
     pub min: f64,
+    /// Largest sample.
     pub max: f64,
+    /// Median (linear interpolation).
     pub p50: f64,
+    /// 95th percentile (linear interpolation).
     pub p95: f64,
 }
 
 impl Summary {
+    /// Summarize a non-empty sample.
     pub fn of(xs: &[f64]) -> Summary {
         assert!(!xs.is_empty(), "Summary::of on empty slice");
         let n = xs.len();
@@ -58,10 +66,12 @@ pub struct Welford {
 }
 
 impl Welford {
+    /// An empty accumulator.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Fold one observation into the running moments.
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         let delta = x - self.mean;
@@ -69,14 +79,17 @@ impl Welford {
         self.m2 += delta * (x - self.mean);
     }
 
+    /// Number of observations so far.
     pub fn count(&self) -> u64 {
         self.n
     }
 
+    /// Running mean.
     pub fn mean(&self) -> f64 {
         self.mean
     }
 
+    /// Running population variance (0 below two observations).
     pub fn variance(&self) -> f64 {
         if self.n < 2 {
             0.0
@@ -85,6 +98,7 @@ impl Welford {
         }
     }
 
+    /// Running population standard deviation.
     pub fn std(&self) -> f64 {
         self.variance().sqrt()
     }

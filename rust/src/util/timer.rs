@@ -9,6 +9,7 @@ use super::stats::Summary;
 
 /// A single named measurement series.
 pub struct Bench {
+    /// Series name printed with the result line.
     pub name: String,
     warmup_iters: usize,
     min_iters: usize,
@@ -19,13 +20,16 @@ pub struct Bench {
 /// Result of a bench run.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
+    /// Series name.
     pub name: String,
+    /// Timed iterations performed.
     pub iters: usize,
     /// Per-iteration wall time in seconds.
     pub summary: Summary,
 }
 
 impl BenchResult {
+    /// Mean iteration time in nanoseconds.
     pub fn mean_ns(&self) -> f64 {
         self.summary.mean * 1e9
     }
@@ -57,6 +61,7 @@ pub fn fmt_dur(secs: f64) -> String {
 }
 
 impl Bench {
+    /// A measurement series with the default warmup/iteration policy.
     pub fn new(name: impl Into<String>) -> Bench {
         Bench {
             name: name.into(),
@@ -76,6 +81,7 @@ impl Bench {
         self
     }
 
+    /// Override the minimum/maximum timed iteration counts.
     pub fn with_iters(mut self, min: usize, max: usize) -> Bench {
         self.min_iters = min;
         self.max_iters = max;
@@ -114,10 +120,12 @@ impl Bench {
 pub struct Stopwatch(Instant);
 
 impl Stopwatch {
+    /// Start timing now.
     pub fn start() -> Stopwatch {
         Stopwatch(Instant::now())
     }
 
+    /// Seconds elapsed since `start`.
     pub fn secs(&self) -> f64 {
         self.0.elapsed().as_secs_f64()
     }

@@ -35,14 +35,17 @@ fn unavailable<T>() -> Result<T, Error> {
 pub struct PjRtClient;
 
 impl PjRtClient {
+    /// Open a CPU client — always errors in the stub build.
     pub fn cpu() -> Result<PjRtClient, Error> {
         unavailable()
     }
 
+    /// Platform name of the (never-constructed) stub client.
     pub fn platform_name(&self) -> String {
         "stub".to_string()
     }
 
+    /// Compile a computation — unreachable in stub builds.
     pub fn compile(
         &self,
         _comp: &XlaComputation,
@@ -55,6 +58,7 @@ impl PjRtClient {
 pub struct HloModuleProto;
 
 impl HloModuleProto {
+    /// Parse an HLO-text artifact — always errors in the stub build.
     pub fn from_text_file(
         _path: impl AsRef<Path>,
     ) -> Result<HloModuleProto, Error> {
@@ -66,6 +70,7 @@ impl HloModuleProto {
 pub struct XlaComputation;
 
 impl XlaComputation {
+    /// Wrap a proto — a no-op in the stub build.
     pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
         XlaComputation
     }
@@ -75,6 +80,7 @@ impl XlaComputation {
 pub struct PjRtLoadedExecutable;
 
 impl PjRtLoadedExecutable {
+    /// Execute — unreachable in stub builds.
     pub fn execute<L>(
         &self,
         _args: &[L],
@@ -87,6 +93,7 @@ impl PjRtLoadedExecutable {
 pub struct PjRtBuffer;
 
 impl PjRtBuffer {
+    /// Copy to host — unreachable in stub builds.
     pub fn to_literal_sync(&self) -> Result<Literal, Error> {
         unavailable()
     }
@@ -96,22 +103,27 @@ impl PjRtBuffer {
 pub struct Literal;
 
 impl Literal {
+    /// Build a rank-1 literal — a no-op in the stub build.
     pub fn vec1<T: Copy>(_data: &[T]) -> Literal {
         Literal
     }
 
+    /// Reshape — unreachable in stub builds.
     pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
         unavailable()
     }
 
+    /// Read back as a host vector — unreachable in stub builds.
     pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
         unavailable()
     }
 
+    /// Unpack a 2-tuple — unreachable in stub builds.
     pub fn to_tuple2(&self) -> Result<(Literal, Literal), Error> {
         unavailable()
     }
 
+    /// Unpack a 3-tuple — unreachable in stub builds.
     pub fn to_tuple3(
         &self,
     ) -> Result<(Literal, Literal, Literal), Error> {

@@ -225,6 +225,36 @@ fn sharded_pair_balance_trains_and_matches_w1() {
 }
 
 #[test]
+fn async_sharded_trainer_matches_sync_sharded() {
+    // The async coordinator through the full trainer data path: worker
+    // threads + bounded queues must reproduce the synchronous sharded
+    // run bit for bit (same losses, same final order).
+    let Some(rt) = runtime() else { return };
+    for shards in [1usize, 4] {
+        let mut cfg =
+            tiny_cfg(Task::Mnist, OrderingKind::ShardedPairBalance);
+        cfg.num_shards = shards;
+        let mut sync = Trainer::new(cfg.clone(), &rt, None).unwrap();
+        let sr = sync.run().unwrap();
+
+        cfg.async_shards = true;
+        cfg.shard_queue_depth = 2;
+        let mut asynch = Trainer::new(cfg, &rt, None).unwrap();
+        let ar = asynch.run().unwrap();
+        assert_eq!(sr.final_order, ar.final_order, "shards={shards}");
+        for (a, b) in sr.epochs.iter().zip(&ar.epochs) {
+            assert!(
+                (a.train_loss - b.train_loss).abs() < 1e-9,
+                "shards={shards} epoch {}: {} vs {}",
+                a.epoch,
+                a.train_loss,
+                b.train_loss
+            );
+        }
+    }
+}
+
+#[test]
 fn grab_observe_via_kernel_matches_native() {
     // The Pallas/HLO balance artifact and the native hot path must agree
     // sign-for-sign on a realistic gradient stream.

@@ -9,16 +9,22 @@
 //!     bounds on the same static gradient stream;
 //!   * the ShardedOrder dispatch backends: strided row forwarding vs
 //!     gathered scratch-block batching vs the async worker-thread
-//!     coordinator (per-epoch wall clock incl. the epoch-boundary
-//!     drain, plus queue backpressure counts).
+//!     coordinator vs the loopback-TCP socket coordinator (per-epoch
+//!     wall clock incl. the epoch-boundary drain, plus queue
+//!     backpressure counts and wire bytes);
+//!   * the wire codec: block-frame encode/decode throughput vs the raw
+//!     gather cost it rides on (what serialization adds per row before
+//!     the socket is even touched).
 //!
 //! Run: `cargo bench --bench ordering_overhead`
 
 use grab::balance::DeterministicBalancer;
 use grab::herding::herding_bound;
+use grab::ordering::transport::codec;
 use grab::ordering::{stream_static_epoch, GradBlock, GraBOrder,
                      GreedyOrder, OrderPolicy, PairBalance,
                      RandomReshuffle, ShardedOrder};
+use grab::util::ser::{decode_frame, encode_frame, FrameKind};
 use grab::util::prop::gen;
 use grab::util::rng::Rng;
 use grab::util::stats::scaling_exponent;
@@ -256,6 +262,12 @@ fn sharded_dispatch_section() {
     .with_iters(5, 60)
     .run(|| observe_epoch_blocks(&mut asynch, &flat, n, d, block));
 
+    let mut socket = ShardedOrder::new_tcp_loopback(n, d, w)
+        .expect("loopback workers");
+    let tcp = Bench::new(format!("sharded_observe/tcp/w{w}/d{d}"))
+        .with_iters(5, 60)
+        .run(|| observe_epoch_blocks(&mut socket, &flat, n, d, block));
+
     println!(
         "\ngather vs strided (sync coordinator): {:.2}x \
          (one copy buys batched balancing)",
@@ -268,12 +280,79 @@ fn sharded_dispatch_section() {
         st.summary.mean / asy.summary.mean,
         asynch.queue_stalls(),
     );
+    let wire = socket.transport_stats().total();
+    println!(
+        "tcp vs async channel coordinator: {:.2}x per epoch \
+         ({} B tx + {} B rx across all epochs incl. warmup — \
+         frame+checksum+loopback cost of the same conversation)",
+        asy.summary.mean / tcp.summary.mean,
+        wire.tx_bytes,
+        wire.rx_bytes,
+    );
     println!(
         "strided {:.1} ns/example, gathered {:.1} ns/example, \
-         async {:.1} ns/example (coordinator-thread epoch time)",
+         async {:.1} ns/example, tcp {:.1} ns/example \
+         (coordinator-thread epoch time)",
         st.summary.mean / n as f64 * 1e9,
         ga.summary.mean / n as f64 * 1e9,
         asy.summary.mean / n as f64 * 1e9,
+        tcp.summary.mean / n as f64 * 1e9,
+    );
+}
+
+fn wire_codec_section() {
+    println!("\n== wire codec: block frame encode/decode throughput ==");
+    let d = 256;
+    let rows = 64; // one gathered microbatch block
+    let mut rng = Rng::new(33);
+    let data: Vec<f32> =
+        (0..rows * d).map(|_| rng.gauss() as f32).collect();
+    let bytes_per_block = (rows * d * 4) as f64;
+
+    // Baseline: the gather copy the transport already pays (push_row
+    // into a scratch block), for scale.
+    let mut scratch: Vec<f32> = Vec::with_capacity(rows * d);
+    let gather = Bench::new(format!("wire/gather/r{rows}/d{d}"))
+        .with_iters(10, 2000)
+        .run(|| {
+            scratch.clear();
+            for r in 0..rows {
+                scratch.extend_from_slice(&data[r * d..(r + 1) * d]);
+            }
+        });
+
+    let mut payload = Vec::new();
+    let mut frame = Vec::new();
+    let enc = Bench::new(format!("wire/encode/r{rows}/d{d}"))
+        .with_iters(10, 2000)
+        .run(|| {
+            codec::encode_block(&data, d, &mut payload);
+            frame.clear();
+            encode_frame(FrameKind::Block, &payload, &mut frame);
+        });
+
+    let mut decoded: Vec<f32> = Vec::new();
+    let dec = Bench::new(format!("wire/decode/r{rows}/d{d}"))
+        .with_iters(10, 2000)
+        .run(|| {
+            let (kind, body, _) = decode_frame(&frame).expect("frame");
+            assert!(matches!(kind, FrameKind::Block));
+            codec::decode_block(body, d, &mut decoded).expect("block");
+        });
+
+    println!(
+        "\ngather {:.2} GB/s, encode+frame {:.2} GB/s, \
+         checksum+decode {:.2} GB/s ({} B/block)",
+        bytes_per_block / gather.summary.mean / 1e9,
+        bytes_per_block / enc.summary.mean / 1e9,
+        bytes_per_block / dec.summary.mean / 1e9,
+        rows * d * 4 + 20,
+    );
+    println!(
+        "serialization overhead vs the gather it rides on: \
+         encode {:.2}x, decode {:.2}x",
+        enc.summary.mean / gather.summary.mean,
+        dec.summary.mean / gather.summary.mean,
     );
 }
 
@@ -282,4 +361,5 @@ fn main() {
     block_vs_per_example_section();
     pair_vs_grab_herding_section();
     sharded_dispatch_section();
+    wire_codec_section();
 }

@@ -162,6 +162,40 @@ impl BalancerKind {
     }
 }
 
+/// Order-exchange transport between the CD-GraB coordinator and its
+/// shard balancers (only meaningful with
+/// [`OrderingKind::ShardedPairBalance`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    /// In-process: inline dispatch, or worker threads behind bounded
+    /// mpsc block queues when `async_shards` is set (the default).
+    Channel,
+    /// Sockets: shard balancers behind checksummed length-prefixed
+    /// frames over TCP — in-process loopback workers by default, or a
+    /// remote worker server when `connect` names an address. Implies
+    /// the async (transported) coordinator.
+    Tcp,
+}
+
+impl TransportKind {
+    /// Parse a transport name as accepted by `--transport`.
+    pub fn parse(s: &str) -> Result<TransportKind> {
+        Ok(match s {
+            "channel" | "mpsc" => TransportKind::Channel,
+            "tcp" | "socket" => TransportKind::Tcp,
+            _ => bail!("unknown transport {s:?} (channel|tcp)"),
+        })
+    }
+
+    /// Canonical name (round-trips through [`TransportKind::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::Channel => "channel",
+            TransportKind::Tcp => "tcp",
+        }
+    }
+}
+
 /// LR schedule selector.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum LrSchedule {
@@ -225,6 +259,19 @@ pub struct TrainConfig {
     /// the cost of `depth` gathered blocks per shard — each up to the
     /// shard's rows-per-microbatch × d floats.
     pub shard_queue_depth: usize,
+    /// Order-exchange transport for the CD-GraB coordinator
+    /// (`--transport channel|tcp`). `tcp` runs every shard balancer
+    /// behind the socket wire protocol — against in-process loopback
+    /// workers, or against a remote worker server when
+    /// [`TrainConfig::connect`] is set. Bit-deterministic: every
+    /// transport produces the same epoch orders (docs/determinism.md
+    /// contract 5). Ignored by orderings other than
+    /// [`OrderingKind::ShardedPairBalance`].
+    pub shard_transport: TransportKind,
+    /// Address of a remote shard worker server (`--connect HOST:PORT`,
+    /// started with `grab exp cdgrab --listen HOST:PORT`). Requires
+    /// `shard_transport = tcp`.
+    pub connect: Option<String>,
     /// Where artifacts live.
     pub artifacts_dir: String,
     /// Optional metrics CSV path.
@@ -263,6 +310,8 @@ impl Default for TrainConfig {
             num_shards: 1,
             async_shards: false,
             shard_queue_depth: 4,
+            shard_transport: TransportKind::Channel,
+            connect: None,
             artifacts_dir: "artifacts".to_string(),
             metrics_out: None,
             eval_every: 1,
@@ -348,6 +397,12 @@ impl TrainConfig {
         }
         self.shard_queue_depth =
             args.usize_or("queue-depth", self.shard_queue_depth)?;
+        if let Some(t) = args.opt_str("transport") {
+            self.shard_transport = TransportKind::parse(&t)?;
+        }
+        if let Some(addr) = args.opt_str("connect") {
+            self.connect = Some(addr);
+        }
         self.artifacts_dir =
             args.str_or("artifacts", &self.artifacts_dir);
         if let Some(m) = args.opt_str("metrics-out") {
@@ -404,6 +459,12 @@ impl TrainConfig {
             bail!("shard_queue_depth must be >= 1, got {depth}");
         }
         c.shard_queue_depth = depth as usize;
+        if let Some(t) = doc.get_str("transport") {
+            c.shard_transport = TransportKind::parse(&t)?;
+        }
+        if let Some(addr) = doc.get_str("connect") {
+            c.connect = Some(addr);
+        }
         if let Some(a) = doc.get_str("artifacts") {
             c.artifacts_dir = a;
         }
@@ -445,6 +506,15 @@ impl TrainConfig {
         }
         if self.workers == 0 {
             bail!("workers must be >= 1");
+        }
+        if self.connect.is_some()
+            && self.shard_transport != TransportKind::Tcp
+        {
+            bail!(
+                "--connect requires --transport tcp \
+                 (got transport {})",
+                self.shard_transport.name()
+            );
         }
         if self.ordering == OrderingKind::GreedyOrdering {
             // Greedy stores all stale gradients: warn-level sanity bound so
@@ -519,6 +589,39 @@ mod tests {
         let mut bad = TrainConfig::default();
         bad.shard_queue_depth = 0;
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn transport_config_plumbs_through() {
+        for t in [TransportKind::Channel, TransportKind::Tcp] {
+            assert_eq!(TransportKind::parse(t.name()).unwrap(), t);
+        }
+        assert!(TransportKind::parse("carrier-pigeon").is_err());
+
+        let args = Args::parse([
+            "--ordering", "cd-grab", "--shards", "2",
+            "--transport", "tcp", "--connect", "127.0.0.1:7070",
+        ])
+        .unwrap();
+        let mut c = TrainConfig::default();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.shard_transport, TransportKind::Tcp);
+        assert_eq!(c.connect.as_deref(), Some("127.0.0.1:7070"));
+
+        // --connect without --transport tcp is a config error.
+        let args =
+            Args::parse(["--connect", "127.0.0.1:7070"]).unwrap();
+        let mut c = TrainConfig::default();
+        assert!(c.apply_args(&args).is_err());
+
+        let doc =
+            TomlDoc::parse("transport = \"tcp\"\nconnect = \"h:1\"")
+                .unwrap();
+        let c = TrainConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.shard_transport, TransportKind::Tcp);
+        assert_eq!(c.connect.as_deref(), Some("h:1"));
+        let doc = TomlDoc::parse("transport = \"warp\"").unwrap();
+        assert!(TrainConfig::from_toml(&doc).is_err());
     }
 
     #[test]

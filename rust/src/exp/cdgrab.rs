@@ -7,12 +7,20 @@
 //! permutation quality question ("does pair balancing without a stale
 //! mean still herd?") from training dynamics, sweeping the CD-GraB shard
 //! count W to show the coordinator's merge keeps the bound flat as the
-//! balancing work parallelizes. Each shard count runs through both the
-//! synchronous coordinator and the async worker-thread coordinator
-//! (`cd-grab-wW` vs `cd-grab-wW-async`) — their herding columns must be
-//! identical (the determinism contract), while their `order_secs`
-//! columns show what the queue hand-off costs or saves. Writes
-//! `cdgrab_herding.csv` with one row per (policy, epoch).
+//! balancing work parallelizes. Each shard count runs through the
+//! synchronous coordinator, the async worker-thread coordinator, and the
+//! TCP socket coordinator (`cd-grab-wW` vs `-wW-async` vs `-wW-tcp`) —
+//! their herding columns must be identical (determinism contracts 3 and
+//! 5, asserted by the run itself), while the `order_secs`, `stalls`, and
+//! `wire_bytes` columns show what each transport costs. Writes
+//! `cdgrab_herding.csv` with one row per (policy, epoch); the `stalls` /
+//! `wire_bytes` columns are cumulative link counters at the end of that
+//! epoch (0 for un-transported policies).
+//!
+//! Distributed modes: `--listen ADDR` turns this process into a blocking
+//! shard worker server (no sweep); `--connect ADDR` makes the sweep's
+//! TCP policies dial that server instead of spawning in-process loopback
+//! workers.
 
 use anyhow::Result;
 
@@ -36,6 +44,9 @@ pub struct CdGrabConfig {
     pub shard_counts: Vec<usize>,
     /// RNG seed.
     pub seed: u64,
+    /// Remote worker server for the TCP policies (`--connect`); `None`
+    /// spawns in-process loopback workers.
+    pub connect: Option<String>,
 }
 
 impl Default for CdGrabConfig {
@@ -47,20 +58,22 @@ impl Default for CdGrabConfig {
             block: 64,
             shard_counts: vec![1, 4, 16],
             seed: 0,
+            connect: None,
         }
     }
 }
 
 impl CdGrabConfig {
-    /// CI-speed scale.
+    /// CI-speed scale (sweeps the acceptance set W ∈ {1, 2, 4}).
     pub fn small() -> CdGrabConfig {
         CdGrabConfig {
             n: 1024,
             d: 64,
             epochs: 8,
             block: 32,
-            shard_counts: vec![1, 4],
+            shard_counts: vec![1, 2, 4],
             seed: 0,
+            connect: None,
         }
     }
 }
@@ -80,6 +93,9 @@ fn run_epoch(
 }
 
 /// Run the experiment and write `cdgrab_herding.csv` to `out_dir`.
+/// Fails if any transport's herding column diverges from the
+/// synchronous coordinator's at the same shard count (the determinism
+/// gate).
 pub fn run(cfg: &CdGrabConfig, out_dir: &std::path::Path) -> Result<()> {
     let mut rng = Rng::new(cfg.seed);
     let vs = gen::vec_set(&mut rng, cfg.n, cfg.d);
@@ -87,7 +103,8 @@ pub fn run(cfg: &CdGrabConfig, out_dir: &std::path::Path) -> Result<()> {
 
     let mut csv = CsvWriter::create(
         &out_dir.join("cdgrab_herding.csv"),
-        &["policy", "epoch", "herd_inf", "order_secs"],
+        &["policy", "epoch", "herd_inf", "order_secs", "stalls",
+          "wire_bytes"],
     )?;
 
     // Random reshuffling baseline: mean herding bound over 5 fresh
@@ -104,6 +121,8 @@ pub fn run(cfg: &CdGrabConfig, out_dir: &std::path::Path) -> Result<()> {
             epoch.to_string(),
             fmt_f(rand_inf as f64),
             fmt_f(0.0),
+            "0".to_string(),
+            "0".to_string(),
         ])?;
     }
 
@@ -130,6 +149,15 @@ pub fn run(cfg: &CdGrabConfig, out_dir: &std::path::Path) -> Result<()> {
             format!("cd-grab-w{w}-async"),
             Box::new(ShardedOrder::new_async(cfg.n, cfg.d, w, 4)),
         ));
+        let tcp: Box<dyn OrderPolicy> = match &cfg.connect {
+            Some(addr) => Box::new(ShardedOrder::new_tcp_connect(
+                addr, cfg.n, cfg.d, w,
+            )?),
+            None => {
+                Box::new(ShardedOrder::new_tcp_loopback(cfg.n, cfg.d, w)?)
+            }
+        };
+        policies.push((format!("cd-grab-w{w}-tcp"), tcp));
     }
 
     println!(
@@ -138,35 +166,79 @@ pub fn run(cfg: &CdGrabConfig, out_dir: &std::path::Path) -> Result<()> {
         cfg.n, cfg.d, cfg.block, rand_inf
     );
     println!(
-        "{:<12} {:>8} {:>12} {:>12}",
-        "policy", "epoch", "herd_inf", "order(s)"
+        "{:<18} {:>8} {:>12} {:>12} {:>8} {:>12}",
+        "policy", "epoch", "herd_inf", "order(s)", "stalls", "wire_b"
     );
-    let mut finals: Vec<(String, f32)> = Vec::new();
+    // Per-policy herding column, kept for the cross-transport equality
+    // assertion below.
+    let mut herd_cols: Vec<(String, Vec<f32>)> = Vec::new();
     for (name, policy) in policies.iter_mut() {
-        let mut last = f32::INFINITY;
+        let mut col = Vec::with_capacity(cfg.epochs);
         for epoch in 0..cfg.epochs {
             let (inf, secs) =
                 run_epoch(policy.as_mut(), &vs, &mut flat, cfg.block);
+            let link = policy
+                .transport_stats()
+                .map(|s| s.total())
+                .unwrap_or_default();
             csv.row(&[
                 name.clone(),
                 epoch.to_string(),
                 fmt_f(inf as f64),
                 fmt_f(secs),
+                link.stalls.to_string(),
+                (link.tx_bytes + link.rx_bytes).to_string(),
             ])?;
-            last = inf;
+            col.push(inf);
             if epoch == cfg.epochs - 1 {
                 println!(
-                    "{:<12} {:>8} {:>12.4} {:>12.5}",
-                    name, epoch, inf, secs
+                    "{:<18} {:>8} {:>12.4} {:>12.5} {:>8} {:>12}",
+                    name,
+                    epoch,
+                    inf,
+                    secs,
+                    link.stalls,
+                    link.tx_bytes + link.rx_bytes
                 );
             }
         }
-        finals.push((name.clone(), last));
+        herd_cols.push((name.clone(), col));
     }
     csv.flush()?;
 
-    for (name, inf) in &finals {
-        let verdict = if *inf < rand_inf { "beats" } else { "LOSES TO" };
+    // Determinism gate (contracts 3 and 5): for every swept W, the
+    // async and tcp transports must reproduce the synchronous
+    // coordinator's herding column exactly, every epoch.
+    fn col<'h>(
+        cols: &'h [(String, Vec<f32>)],
+        name: &str,
+    ) -> &'h [f32] {
+        cols.iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, c)| c.as_slice())
+            .expect("policy column")
+    }
+    for &w in &cfg.shard_counts {
+        let sync = col(&herd_cols, &format!("cd-grab-w{w}"));
+        for variant in ["async", "tcp"] {
+            let other =
+                col(&herd_cols, &format!("cd-grab-w{w}-{variant}"));
+            anyhow::ensure!(
+                sync == other,
+                "herding diverged: cd-grab-w{w} vs -{variant} \
+                 ({sync:?} vs {other:?})"
+            );
+        }
+    }
+    println!(
+        "  determinism gate: sync == async == tcp herding columns at \
+         W in {:?}",
+        cfg.shard_counts
+    );
+
+    for (name, col) in &herd_cols {
+        let inf = *col.last().expect("at least one epoch");
+        let verdict = if inf < rand_inf { "beats" } else { "LOSES TO" };
         println!(
             "  {name}: final {inf:.4} {verdict} random ({rand_inf:.4})"
         );
@@ -189,15 +261,18 @@ mod tests {
             block: 16,
             shard_counts: vec![1, 4],
             seed: 1,
+            connect: None,
         };
+        // run() itself enforces the sync == async == tcp herding gate
+        // and fails the experiment on divergence.
         run(&cfg, &dir).unwrap();
         let text = std::fs::read_to_string(
             dir.join("cdgrab_herding.csv")).unwrap();
-        // Header + rr + grab + pair + (sync, async) x two shard
+        // Header + rr + grab + pair + (sync, async, tcp) x two shard
         // counts, 6 epochs each.
-        assert_eq!(text.lines().count(), 1 + 7 * 6);
-        // Determinism contract: sync and async coordinators must report
-        // identical herding bounds at every (w, epoch).
+        assert_eq!(text.lines().count(), 1 + 9 * 6);
+        // Determinism contract: the transports must report identical
+        // herding bounds at every (w, epoch).
         fn herd_col<'t>(text: &'t str, name: &str) -> Vec<&'t str> {
             let prefix = format!("{name},");
             text.lines()
@@ -209,12 +284,31 @@ mod tests {
             let sync = herd_col(&text, &format!("cd-grab-w{w}"));
             let asynch =
                 herd_col(&text, &format!("cd-grab-w{w}-async"));
+            let tcp = herd_col(&text, &format!("cd-grab-w{w}-tcp"));
             assert_eq!(sync.len(), 6);
             assert_eq!(
                 sync, asynch,
                 "sync vs async herding diverged at w={w}"
             );
+            assert_eq!(
+                sync, tcp,
+                "sync vs tcp herding diverged at w={w}"
+            );
         }
+        // The socket policies must actually have moved bytes.
+        let tcp_rows: Vec<&str> = text
+            .lines()
+            .filter(|l| l.starts_with("cd-grab-w4-tcp,"))
+            .collect();
+        let wire: u64 = tcp_rows
+            .last()
+            .unwrap()
+            .split(',')
+            .nth(5)
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert!(wire > 0, "tcp policy reported no wire bytes");
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -49,7 +49,38 @@ pub fn run_from_cli(args: &Args) -> Result<()> {
     let task_filter = args.opt_str("task");
     let epochs = args.usize_or("epochs", 0)?; // 0 = scale default
     let n = args.usize_or("n", 0)?;
+    // Distributed CD-GraB modes (cdgrab only): --listen turns this
+    // process into a shard worker server; --connect points the sweep's
+    // TCP policies at one.
+    let listen = args.opt_str("listen");
+    let connect = args.opt_str("connect");
+    let max_conns = args.usize_or("max-conns", 0)?; // 0 = serve forever
     args.reject_unknown()?;
+    anyhow::ensure!(
+        listen.is_none() || connect.is_none(),
+        "--listen (serve shard workers) and --connect (dial a worker \
+         server) are mutually exclusive modes"
+    );
+    anyhow::ensure!(
+        max_conns == 0 || listen.is_some(),
+        "--max-conns only applies to the --listen server mode"
+    );
+    if let Some(addr) = &listen {
+        anyhow::ensure!(
+            id == "cdgrab",
+            "--listen only applies to `exp cdgrab`"
+        );
+        return crate::ordering::transport::tcp::run_worker_server(
+            addr,
+            if max_conns > 0 { Some(max_conns) } else { None },
+        );
+    }
+    if connect.is_some() {
+        anyhow::ensure!(
+            id == "cdgrab",
+            "--connect only applies to `exp cdgrab`"
+        );
+    }
 
     let ids: Vec<&str> = if id == "all" {
         vec!["fig1", "fig2", "fig3", "fig4", "table1", "statement1",
@@ -152,6 +183,7 @@ pub fn run_from_cli(args: &Args) -> Result<()> {
                 if n > 0 {
                     cfg.n = n;
                 }
+                cfg.connect = connect.clone();
                 cdgrab::run(&cfg, &out)?;
             }
             other => bail!(

@@ -27,10 +27,11 @@
 //! cargo run --release -- exp fig1
 //! ```
 //!
-//! See `rust/README.md` for the module map and the full command index,
-//! and `docs/determinism.md` for the equivalence contracts (per-example
-//! ≡ block, W=1 ≡ PairBalance, sync ≡ async shards, sync ≡ pipeline)
-//! the test suite enforces.
+//! See `rust/README.md` for the module map, the full command index, and
+//! the shard wire-frame layout, and `docs/determinism.md` for the
+//! equivalence contracts (per-example ≡ block, W=1 ≡ PairBalance, sync
+//! ≡ async shards, sync ≡ pipeline, socket ≡ channel transport) the
+//! test suite enforces.
 
 #![warn(missing_docs)]
 

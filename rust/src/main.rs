@@ -4,11 +4,14 @@
 //! grab train  [--config f.toml] [--task mnist|cifar|wiki|glue]
 //!             [--ordering rr|so|flipflop|greedy|grab|grab-1step|pair|
 //!              cd-grab|seq] [--shards W] [--queue-depth N]
+//!             [--transport channel|tcp] [--connect HOST:PORT]
 //!             [--balancer alg5|alg6|kernel] [--epochs N] [--n N]
 //!             [--lr F] [--seed N] [--metrics-out f.csv] [--pipeline]
 //!             [--async-shards]
 //! grab exp    fig1|fig2|fig3|fig4|table1|statement1|granularity|
 //!             cdgrab|all [options]
+//!             (cdgrab: --listen HOST:PORT serves shard workers,
+//!              --connect HOST:PORT dials a remote worker server)
 //! grab inspect [--artifacts DIR]       # artifact/manifest summary
 //! ```
 
@@ -68,6 +71,13 @@ TRAIN OPTIONS:
                            it last or before another --flag)
   --queue-depth N          per-shard block-queue depth for --async-shards
                            (default: 4)
+  --transport channel|tcp  CD-GraB order-exchange transport: in-process
+                           channels (default) or the socket wire protocol
+                           (bit-equal orders either way)
+  --connect HOST:PORT      dial a remote shard worker server instead of
+                           spawning loopback workers (needs --transport
+                           tcp; start the server with
+                           `grab exp cdgrab --listen HOST:PORT`)
   --balancer alg5|alg6|kernel
   --epochs N --n N --n-eval N --accum N
   --lr F --momentum F --wd F --seed N
@@ -78,6 +88,10 @@ TRAIN OPTIONS:
 EXP OPTIONS (see DESIGN.md experiment index):
   --out DIR                results directory (default: results)
   --scale small|paper      dataset/epoch scale (default: small)
+  --listen HOST:PORT       (cdgrab) run as a blocking shard worker server
+  --connect HOST:PORT      (cdgrab) point the sweep's TCP policies at a
+                           remote worker server instead of loopback
+  --max-conns N            (with --listen) exit after serving N links
 ";
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -119,6 +133,18 @@ fn cmd_train(args: &Args) -> Result<()> {
             "[grab] done; ordering state: {} bytes",
             result.order_state_bytes
         );
+        if let Some(stats) = &result.transport {
+            let total = stats.total();
+            eprintln!(
+                "[grab] shard links ({}): {} shards, {} stalls, \
+                 {} B tx, {} B rx",
+                stats.transport,
+                stats.per_shard.len(),
+                total.stalls,
+                total.tx_bytes,
+                total.rx_bytes
+            );
+        }
     }
     Ok(())
 }

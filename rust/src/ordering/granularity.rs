@@ -125,6 +125,12 @@ impl OrderPolicy for GroupedOrder {
     fn wants_grads(&self) -> bool {
         self.inner.wants_grads()
     }
+
+    fn transport_stats(
+        &self,
+    ) -> Option<crate::ordering::transport::TransportStats> {
+        self.inner.transport_stats()
+    }
 }
 
 /// Convenience: GraB over groups of `group_size` (the paper's

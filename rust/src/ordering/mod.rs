@@ -23,6 +23,7 @@ mod greedy;
 pub mod pair;
 pub mod queue;
 pub mod sharded;
+pub mod transport;
 
 pub use grab::GraBOrder;
 pub use greedy::GreedyOrder;
@@ -33,7 +34,9 @@ pub use crate::tensor::GradBlock;
 
 use std::ops::Range;
 
-use crate::config::{BalancerKind, OrderingKind, TrainConfig};
+use crate::config::{
+    BalancerKind, OrderingKind, TrainConfig, TransportKind,
+};
 use crate::util::rng::Rng;
 use anyhow::Result;
 
@@ -114,6 +117,15 @@ pub trait OrderPolicy: Send {
     /// trainer skip gradient streaming for RR/SO/FlipFlop).
     fn wants_grads(&self) -> bool {
         false
+    }
+
+    /// Aggregated shard-link counters (backpressure stalls, bytes moved
+    /// to/from shard workers) for policies that coordinate over a
+    /// [`transport::ShardTransport`]; `None` for unsharded policies.
+    /// Lets the trainer report comparable numbers for sync / channel /
+    /// tcp CD-GraB runs without downcasting.
+    fn transport_stats(&self) -> Option<transport::TransportStats> {
+        None
     }
 }
 
@@ -413,18 +425,32 @@ pub fn build_policy(
             Box::new(OneStepGraB::new(grab_from_cfg(cfg, n, d)))
         }
         OrderingKind::PairBalance => Box::new(PairBalance::new(n, d)),
-        OrderingKind::ShardedPairBalance => {
-            if cfg.async_shards {
+        OrderingKind::ShardedPairBalance => match cfg.shard_transport {
+            TransportKind::Tcp => match &cfg.connect {
+                Some(addr) => Box::new(ShardedOrder::new_tcp_connect(
+                    addr,
+                    n,
+                    d,
+                    cfg.num_shards,
+                )?),
+                None => Box::new(ShardedOrder::new_tcp_loopback(
+                    n,
+                    d,
+                    cfg.num_shards,
+                )?),
+            },
+            TransportKind::Channel if cfg.async_shards => {
                 Box::new(ShardedOrder::new_async(
                     n,
                     d,
                     cfg.num_shards,
                     cfg.shard_queue_depth,
                 ))
-            } else {
+            }
+            TransportKind::Channel => {
                 Box::new(ShardedOrder::new(n, d, cfg.num_shards))
             }
-        }
+        },
         OrderingKind::RetrainFromGraB => {
             let order = retrain_order.ok_or_else(|| {
                 anyhow::anyhow!(
@@ -550,6 +576,23 @@ mod tests {
         cfg.shard_queue_depth = 2;
         let p = build_policy(&cfg, 16, 4, None).unwrap();
         assert_eq!(p.name(), "cd-grab-async");
+    }
+
+    #[test]
+    fn build_policy_selects_tcp_transport() {
+        // --transport tcp with no --connect: loopback socket workers.
+        let mut cfg = TrainConfig::default();
+        cfg.ordering = OrderingKind::ShardedPairBalance;
+        cfg.num_shards = 2;
+        cfg.shard_transport = TransportKind::Tcp;
+        let mut p = build_policy(&cfg, 16, 4, None).unwrap();
+        assert_eq!(p.name(), "cd-grab-tcp");
+        // The policy is live: first epoch order is a permutation and
+        // link stats are reported.
+        crate::util::prop::assert_permutation(p.epoch_order(0)).unwrap();
+        let stats = p.transport_stats().expect("transported policy");
+        assert_eq!(stats.transport, "tcp");
+        assert_eq!(stats.per_shard.len(), 2);
     }
 
     #[test]

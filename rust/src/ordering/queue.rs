@@ -107,6 +107,9 @@ pub struct BlockSender {
     /// steady-state memory, since buffers grow to the gather size and
     /// keep their capacity through recycling).
     max_block_bytes: usize,
+    /// Total gathered payload bytes handed to the worker (the channel
+    /// counterpart of a socket transport's bytes-on-wire).
+    bytes_sent: u64,
 }
 
 /// Worker-side endpoint of one shard's bounded block queue.
@@ -133,6 +136,7 @@ pub fn block_queue(d: usize, depth: usize) -> (BlockSender, BlockReceiver) {
             stalls: 0,
             depth,
             max_block_bytes: 0,
+            bytes_sent: 0,
         },
         BlockReceiver { msgs: msg_rx, pool: pool_tx },
     )
@@ -168,6 +172,9 @@ impl BlockSender {
     pub fn send(&mut self, block: ScratchBlock) -> bool {
         self.max_block_bytes =
             self.max_block_bytes.max(block.capacity_bytes());
+        self.bytes_sent += (block.rows()
+            * block.dim()
+            * std::mem::size_of::<f32>()) as u64;
         self.msgs.send(ShardMsg::Block(block)).is_ok()
     }
 
@@ -179,6 +186,11 @@ impl BlockSender {
     /// Times `acquire` had to wait for the worker (queue-full events).
     pub fn stalls(&self) -> u64 {
         self.stalls
+    }
+
+    /// Total gathered payload bytes handed to the worker so far.
+    pub fn bytes_sent(&self) -> u64 {
+        self.bytes_sent
     }
 
     /// Estimated bytes held by this queue's circulating scratch pool:

@@ -15,8 +15,8 @@
 //! * **route** — observed gradient blocks are de-interleaved back to the
 //!   owning shard's balancer at that shard's next local position.
 //!
-//! Three dispatch backends share that coordinator, differing only in
-//! *where* the shard balancers run:
+//! Four dispatch backends share that coordinator, differing only in
+//! *where* the shard balancers run and what carries the bytes:
 //!
 //! * [`ShardedOrder::new`] — **strided**: rows are forwarded to the
 //!   owning balancer one at a time on the caller's thread, zero-copy;
@@ -25,33 +25,42 @@
 //!   as one batched `observe_block` call, still on the caller's thread
 //!   (one copy for batched balancing — the ablation point between the
 //!   other two, measured in `benches/ordering_overhead.rs`);
-//! * [`ShardedOrder::new_async`] — **async**: each shard balancer runs
-//!   on its own worker thread behind a bounded block queue
-//!   ([`crate::ordering::queue`]). `observe_block` becomes gather +
-//!   enqueue; the actual pair balancing overlaps with the trainer's
-//!   next microbatch. The only join is the epoch-boundary drain inside
-//!   [`OrderPolicy::epoch_end`] — the CD-GraB server loop made actually
-//!   concurrent.
+//! * [`ShardedOrder::new_async`] — **async / channel transport**: each
+//!   shard balancer runs on its own worker thread behind a bounded
+//!   block queue ([`crate::ordering::queue`]). `observe_block` becomes
+//!   gather + enqueue; the actual pair balancing overlaps with the
+//!   trainer's next microbatch. The only join is the epoch-boundary
+//!   drain inside [`OrderPolicy::epoch_end`] — the CD-GraB server loop
+//!   made actually concurrent;
+//! * [`ShardedOrder::new_tcp_loopback`] / [`ShardedOrder::new_tcp_connect`]
+//!   — **TCP transport**: the same conversation serialized into
+//!   checksummed frames over sockets
+//!   ([`crate::ordering::transport::tcp`]), with workers in-process
+//!   over loopback or in a separate OS process (`exp cdgrab --listen`).
 //!
-//! All three are **bit-deterministic** and produce identical epoch
+//! The concurrent backends share one code path: the coordinator speaks
+//! [`ShardTransport`] and never learns which carrier moved the bytes.
+//!
+//! All four are **bit-deterministic** and produce identical epoch
 //! orders for a fixed gradient stream: each shard balancer sees exactly
 //! the same local rows in the same order regardless of how they were
 //! carried, and [`PairBalance`] is block-size invariant (pairs straddle
-//! block boundaries via its pending-row state). Property-tested below;
-//! `docs/determinism.md` documents the full equivalence-contract chain.
+//! block boundaries via its pending-row state). Property-tested below
+//! and in `tests/transport.rs`; `docs/determinism.md` documents the
+//! full equivalence-contract chain.
 //!
 //! With `W = 1` the coordinator is the identity and the output matches
 //! unsharded [`PairBalance`] exactly (tested below). A worker that
-//! panics does not deadlock the coordinator: its queue endpoints
-//! disconnect, and the panic payload is re-raised at the epoch boundary
-//! (`epoch_end`), where the drain would otherwise have joined it.
+//! panics (or a socket peer that disconnects) does not deadlock the
+//! coordinator: its link reports failure, and the payload/error is
+//! re-raised at the epoch boundary (`epoch_end`), where the drain would
+//! otherwise have joined it.
 
 use std::ops::Range;
-use std::sync::mpsc::{channel, Receiver};
-use std::thread::JoinHandle;
 
-use crate::ordering::queue::{
-    block_queue, BlockReceiver, BlockSender, ScratchBlock, ShardMsg,
+use crate::ordering::queue::ScratchBlock;
+use crate::ordering::transport::{
+    spawn_channel_shards, tcp, LinkStats, ShardTransport, TransportStats,
 };
 use crate::ordering::{GradBlock, OrderPolicy, PairBalance};
 
@@ -79,58 +88,18 @@ fn merge_round_robin(
     }
 }
 
-/// What a shard worker sends back at each epoch boundary.
-struct EpochReport {
-    /// The shard's next local epoch order.
-    order: Vec<usize>,
-    /// The shard balancer's current `state_bytes`.
-    state_bytes: usize,
-}
-
-/// One async shard: the coordinator-side queue endpoint, the report
-/// channel, and the worker's join handle (used for panic propagation
-/// and shutdown).
-struct ShardWorker {
-    queue: Option<BlockSender>,
-    reports: Receiver<EpochReport>,
-    handle: Option<JoinHandle<()>>,
-    /// Set once an enqueue failed; skips further sends to a dead worker
-    /// so the epoch can still complete before the boundary re-raises.
-    dead: bool,
-}
-
-impl ShardWorker {
-    /// Join the worker and re-raise its panic payload; called when the
-    /// epoch-boundary drain finds the report channel disconnected.
-    fn propagate_failure(&mut self, shard: usize) -> ! {
-        if let Some(handle) = self.handle.take() {
-            match handle.join() {
-                Err(payload) => std::panic::resume_unwind(payload),
-                Ok(()) => panic!(
-                    "shard worker {shard} exited before the epoch ended"
-                ),
-            }
-        }
-        panic!("shard worker {shard} failed and was already joined");
-    }
-}
-
-impl Drop for ShardWorker {
-    fn drop(&mut self) {
-        // Closing the queue ends the worker's recv loop; a panic payload
-        // at this point was either already surfaced by epoch_end or the
-        // coordinator itself is unwinding, so the join result is dropped.
-        self.queue = None;
-        if let Some(handle) = self.handle.take() {
-            let _ = handle.join();
-        }
-    }
-}
-
-/// The async backend: W workers plus the coordinator's cached view of
-/// their latest epoch orders (identity until the first boundary).
+/// The transported backend: W shard links ([`ShardTransport`] — worker
+/// threads behind channels, or TCP peers) plus the coordinator's cached
+/// view of their latest epoch orders (identity until the first
+/// boundary).
 struct AsyncShards {
-    workers: Vec<ShardWorker>,
+    links: Vec<Box<dyn ShardTransport>>,
+    /// Short transport label for `OrderPolicy::name` and metrics.
+    transport: &'static str,
+    /// Per-link failure flag, set on the first failed send/acquire; the
+    /// shard is skipped for the rest of the epoch and the failure is
+    /// re-raised at the boundary drain.
+    dead: Vec<bool>,
     local_orders: Vec<Vec<usize>>,
     shard_state_bytes: Vec<usize>,
     /// Per-call staging slots for lazily acquired scratch blocks
@@ -139,53 +108,45 @@ struct AsyncShards {
 }
 
 impl AsyncShards {
-    fn spawn(sizes: &[usize], d: usize, depth: usize) -> AsyncShards {
-        let mut workers = Vec::with_capacity(sizes.len());
-        let mut local_orders = Vec::with_capacity(sizes.len());
-        let mut shard_state_bytes = Vec::with_capacity(sizes.len());
-        for &size in sizes {
-            let balancer = PairBalance::new(size, d);
-            shard_state_bytes.push(balancer.state_bytes());
-            local_orders.push((0..size).collect());
-            let (sender, receiver) = block_queue(d, depth);
-            let (report_tx, report_rx) = channel();
-            let handle = std::thread::spawn(move || {
-                shard_worker_loop(receiver, balancer, report_tx);
-            });
-            workers.push(ShardWorker {
-                queue: Some(sender),
-                reports: report_rx,
-                handle: Some(handle),
-                dead: false,
-            });
-        }
+    /// Wrap pre-opened shard links into the coordinator backend.
+    /// `sizes[w]` must match the local unit count link `w` was opened
+    /// with.
+    fn new(
+        links: Vec<Box<dyn ShardTransport>>,
+        sizes: &[usize],
+        d: usize,
+        transport: &'static str,
+    ) -> AsyncShards {
+        assert_eq!(links.len(), sizes.len());
+        let shard_state_bytes = sizes
+            .iter()
+            .map(|&s| PairBalance::new(s, d).state_bytes())
+            .collect();
         AsyncShards {
-            staged: (0..workers.len()).map(|_| None).collect(),
-            workers,
-            local_orders,
+            staged: (0..links.len()).map(|_| None).collect(),
+            dead: vec![false; links.len()],
+            local_orders: sizes.iter().map(|&s| (0..s).collect()).collect(),
+            links,
+            transport,
             shard_state_bytes,
         }
     }
 
-    /// Gather this block's rows per owning shard and enqueue one scratch
-    /// block per shard touched. Blocking happens only when a shard's
-    /// scratch pool is exhausted (backpressure); dead shards are skipped
-    /// until the epoch boundary re-raises their panic.
+    /// Gather this block's rows per owning shard and ship one scratch
+    /// block per shard touched. Blocking happens only at the link's
+    /// backpressure point (full queue / full socket buffer); dead shards
+    /// are skipped until the epoch boundary re-raises their failure.
     fn observe(&mut self, range: Range<usize>, block: &GradBlock, route: &[u32]) {
         for (i, row) in block.iter_rows().enumerate() {
             let w = route[range.start + i] as usize;
-            if self.workers[w].dead {
+            if self.dead[w] {
                 continue;
             }
             if self.staged[w].is_none() {
-                let queue = self.workers[w]
-                    .queue
-                    .as_mut()
-                    .expect("queue open while worker is live");
-                match queue.acquire() {
+                match self.links[w].acquire() {
                     Some(scratch) => self.staged[w] = Some(scratch),
                     None => {
-                        self.workers[w].dead = true;
+                        self.dead[w] = true;
                         continue;
                     }
                 }
@@ -196,95 +157,44 @@ impl AsyncShards {
         }
         for (w, slot) in self.staged.iter_mut().enumerate() {
             if let Some(scratch) = slot.take() {
-                let queue = self.workers[w]
-                    .queue
-                    .as_mut()
-                    .expect("queue open while worker is live");
-                if !queue.send(scratch) {
-                    self.workers[w].dead = true;
+                if !self.links[w].send_block(scratch) {
+                    self.dead[w] = true;
                 }
             }
         }
     }
 
-    /// The epoch-boundary barrier: signal every worker, then collect
-    /// every report. Signalling first keeps the drains overlapped — no
-    /// worker waits on another's `epoch_end`. A disconnected report
-    /// channel means the worker panicked; its payload is re-raised here.
+    /// The epoch-boundary barrier: signal every link, then collect every
+    /// report. Signalling first keeps the drains overlapped — no worker
+    /// waits on another's `epoch_end`. A failed link surfaces here: the
+    /// channel transport re-raises the worker's panic payload, a socket
+    /// transport's typed error is raised as a coordinator panic — either
+    /// way the failure lands at the boundary, exactly like a worker
+    /// panic, and the coordinator's cached orders are left untouched.
     fn drain_epoch(&mut self) {
-        for worker in &self.workers {
-            if let Some(queue) = &worker.queue {
-                // A send failure is surfaced by the recv below.
-                let _ = queue.end_epoch();
-            }
+        for link in self.links.iter_mut() {
+            // A send failure is surfaced by the recv below.
+            let _ = link.end_epoch();
         }
-        for (w, worker) in self.workers.iter_mut().enumerate() {
-            match worker.reports.recv() {
+        for (w, link) in self.links.iter_mut().enumerate() {
+            match link.recv_report() {
                 Ok(report) => {
                     self.local_orders[w] = report.order;
                     self.shard_state_bytes[w] = report.state_bytes;
                 }
-                Err(_) => worker.propagate_failure(w),
+                Err(e) => panic!(
+                    "shard {w} ({} transport) failed mid-epoch: {e}",
+                    self.transport
+                ),
             }
         }
     }
 
-    /// Total backpressure events across all shard queues.
-    fn stalls(&self) -> u64 {
-        self.workers
-            .iter()
-            .filter_map(|w| w.queue.as_ref())
-            .map(|q| q.stalls())
-            .sum()
-    }
-
-    /// Bytes held by the circulating scratch pools (per-queue depth ×
-    /// high-water gather size — buffers keep their capacity as they
-    /// recycle, so this tracks steady-state memory, not the seed size).
-    fn pool_bytes(&self) -> usize {
-        self.workers
-            .iter()
-            .filter_map(|w| w.queue.as_ref())
-            .map(|q| q.pool_bytes())
-            .sum()
-    }
-}
-
-/// A shard worker's thread body: balance queued blocks at the shard's
-/// running local position, finalize + report at each epoch boundary,
-/// exit when the coordinator closes the queue.
-fn shard_worker_loop(
-    receiver: BlockReceiver,
-    mut balancer: PairBalance,
-    reports: std::sync::mpsc::Sender<EpochReport>,
-) {
-    let mut cursor = 0usize;
-    while let Some(msg) = receiver.recv() {
-        match msg {
-            ShardMsg::Block(scratch) => {
-                let rows = scratch.rows();
-                if rows > 0 {
-                    balancer.observe_block(
-                        cursor..cursor + rows,
-                        &scratch.as_grad_block(),
-                    );
-                    cursor += rows;
-                }
-                receiver.recycle(scratch);
-            }
-            ShardMsg::EpochEnd => {
-                balancer.epoch_end();
-                cursor = 0;
-                let report = EpochReport {
-                    order: balancer.epoch_order(0).to_vec(),
-                    state_bytes: balancer.state_bytes(),
-                };
-                if reports.send(report).is_err() {
-                    return; // coordinator gone
-                }
-            }
-            #[cfg(test)]
-            ShardMsg::Poison => panic!("poisoned shard worker"),
+    /// Per-shard link counters (stalls, bytes moved each way).
+    fn stats(&self) -> TransportStats {
+        TransportStats {
+            transport: self.transport,
+            per_shard: self.links.iter().map(|l| l.stats()).collect(),
         }
     }
 }
@@ -299,13 +209,14 @@ enum Backend {
         shards: Vec<PairBalance>,
         scratch: Vec<ScratchBlock>,
     },
-    /// Worker-thread dispatch behind bounded per-shard block queues.
+    /// Transported dispatch: shard balancers behind [`ShardTransport`]
+    /// links (worker threads over channels, or TCP peers).
     Async(AsyncShards),
 }
 
 /// CD-GraB's sharded coordinator: W [`PairBalance`] workers over
 /// disjoint contiguous unit ranges, merged round-robin at each epoch
-/// boundary. See the module docs for the three dispatch backends.
+/// boundary. See the module docs for the dispatch backends.
 pub struct ShardedOrder {
     backend: Backend,
     /// Global unit id of shard w's local unit 0.
@@ -376,14 +287,14 @@ impl ShardedOrder {
         )
     }
 
-    /// Asynchronous coordinator: each shard balancer runs on its own
-    /// worker thread behind a bounded block queue holding at most
-    /// `queue_depth` in-flight blocks. `observe_block` becomes gather +
-    /// non-blocking enqueue (it only waits when a shard's queue is
-    /// full); the epoch-boundary merge in
-    /// [`OrderPolicy::epoch_end`] is the only join. Produces exactly the
-    /// same epoch orders as the synchronous backends for the same
-    /// gradient stream.
+    /// Asynchronous coordinator over the in-process channel transport:
+    /// each shard balancer runs on its own worker thread behind a
+    /// bounded block queue holding at most `queue_depth` in-flight
+    /// blocks. `observe_block` becomes gather + non-blocking enqueue (it
+    /// only waits when a shard's queue is full); the epoch-boundary
+    /// merge in [`OrderPolicy::epoch_end`] is the only join. Produces
+    /// exactly the same epoch orders as the synchronous backends for the
+    /// same gradient stream.
     pub fn new_async(
         n: usize,
         d: usize,
@@ -392,8 +303,43 @@ impl ShardedOrder {
     ) -> ShardedOrder {
         assert!(d > 0, "async shards need a positive dimension");
         let (sizes, bases) = split_units(n, num_shards);
-        let shards = AsyncShards::spawn(&sizes, d, queue_depth);
+        let links = spawn_channel_shards(&sizes, d, queue_depth);
+        let shards = AsyncShards::new(links, &sizes, d, "channel");
         ShardedOrder::assemble(Backend::Async(shards), bases, n)
+    }
+
+    /// TCP coordinator with in-process loopback workers: spawn a
+    /// listener plus one worker thread per shard inside this process,
+    /// then run the full socket protocol (frames, checksums, handshake)
+    /// over 127.0.0.1. Bit-equal to every other backend; used by tests,
+    /// benches, and `--transport tcp` without `--connect`.
+    pub fn new_tcp_loopback(
+        n: usize,
+        d: usize,
+        num_shards: usize,
+    ) -> crate::Result<ShardedOrder> {
+        anyhow::ensure!(d > 0, "tcp shards need a positive dimension");
+        let (sizes, bases) = split_units(n, num_shards);
+        let addr = tcp::spawn_loopback(num_shards)?;
+        let links = tcp::connect_shards(addr, &sizes, d)?;
+        let shards = AsyncShards::new(links, &sizes, d, "tcp");
+        Ok(ShardedOrder::assemble(Backend::Async(shards), bases, n))
+    }
+
+    /// TCP coordinator against a remote worker server (`exp cdgrab
+    /// --listen` in another process): dial `addr` once per shard and
+    /// drive the same socket protocol as the loopback constructor.
+    pub fn new_tcp_connect(
+        addr: &str,
+        n: usize,
+        d: usize,
+        num_shards: usize,
+    ) -> crate::Result<ShardedOrder> {
+        anyhow::ensure!(d > 0, "tcp shards need a positive dimension");
+        let (sizes, bases) = split_units(n, num_shards);
+        let links = tcp::connect_shards(addr, &sizes, d)?;
+        let shards = AsyncShards::new(links, &sizes, d, "tcp");
+        Ok(ShardedOrder::assemble(Backend::Async(shards), bases, n))
     }
 
     fn assemble(
@@ -419,17 +365,30 @@ impl ShardedOrder {
         self.cursors.len()
     }
 
-    /// Whether this coordinator dispatches to worker threads.
+    /// Whether this coordinator dispatches through a [`ShardTransport`]
+    /// (worker threads or sockets) rather than inline.
     pub fn is_async(&self) -> bool {
         matches!(self.backend, Backend::Async(_))
     }
 
     /// Total backpressure events (acquire waits on a full shard queue)
-    /// since construction. Always 0 for the synchronous backends.
+    /// since construction. Always 0 for the synchronous backends and
+    /// for TCP links (the kernel socket buffer is their backpressure).
     pub fn queue_stalls(&self) -> u64 {
+        self.transport_stats().total().stalls
+    }
+
+    /// Aggregated per-shard link counters — stalls and bytes moved each
+    /// way — comparable across the sync, channel, and tcp dispatch
+    /// paths (the synchronous backends report one all-zero entry per
+    /// shard).
+    pub fn transport_stats(&self) -> TransportStats {
         match &self.backend {
-            Backend::Async(shards) => shards.stalls(),
-            _ => 0,
+            Backend::Async(shards) => shards.stats(),
+            _ => TransportStats {
+                transport: "inline",
+                per_shard: vec![LinkStats::default(); self.num_shards()],
+            },
         }
     }
 
@@ -472,13 +431,9 @@ impl ShardedOrder {
     /// Test-only: make shard `w`'s worker panic on its next dequeue
     /// (async backend only), to exercise boundary panic propagation.
     #[cfg(test)]
-    fn poison_shard(&self, w: usize) {
-        match &self.backend {
-            Backend::Async(shards) => {
-                if let Some(queue) = &shards.workers[w].queue {
-                    queue.poison();
-                }
-            }
+    fn poison_shard(&mut self, w: usize) {
+        match &mut self.backend {
+            Backend::Async(shards) => shards.links[w].poison(),
             _ => panic!("poison_shard needs the async backend"),
         }
     }
@@ -486,8 +441,11 @@ impl ShardedOrder {
 
 impl OrderPolicy for ShardedOrder {
     fn name(&self) -> &'static str {
-        match self.backend {
-            Backend::Async(_) => "cd-grab-async",
+        match &self.backend {
+            Backend::Async(shards) => match shards.transport {
+                "tcp" => "cd-grab-tcp",
+                _ => "cd-grab-async",
+            },
             _ => "cd-grab",
         }
     }
@@ -589,8 +547,16 @@ impl OrderPolicy for ShardedOrder {
                         .sum::<usize>()
             }
             Backend::Async(shards) => {
+                // Worker-side balancer state (from the latest reports)
+                // plus the coordinator-side link buffers (scratch
+                // pools, frame buffers) — keeps Table 1 memory numbers
+                // comparable across dispatch paths.
                 shards.shard_state_bytes.iter().sum::<usize>()
-                    + shards.pool_bytes()
+                    + shards
+                        .links
+                        .iter()
+                        .map(|l| l.buffer_bytes())
+                        .sum::<usize>()
             }
         };
         shard_bytes
@@ -600,6 +566,10 @@ impl OrderPolicy for ShardedOrder {
 
     fn wants_grads(&self) -> bool {
         true
+    }
+
+    fn transport_stats(&self) -> Option<TransportStats> {
+        Some(ShardedOrder::transport_stats(self))
     }
 }
 

@@ -1,0 +1,379 @@
+//! Message-level payload codecs for the shard wire protocol.
+//!
+//! The frame layer ([`crate::util::ser`]) moves opaque checksummed
+//! payloads; this module defines what is *in* them — the four payload
+//! shapes of the CD-GraB order exchange (little-endian throughout):
+//!
+//! | frame kind | payload |
+//! |---|---|
+//! | `Hello`    | `u32 local_n`, `u32 d` |
+//! | `Ack`      | empty |
+//! | `Block`    | `u32 rows`, `u32 d`, then `rows × d` f32 bit patterns |
+//! | `EpochEnd` | empty |
+//! | `Report`   | `u32 len`, `u64 state_bytes`, then `len` `u32` unit ids |
+//!
+//! Floats travel as raw IEEE-754 bit patterns (`f32::to_bits`), so
+//! NaN payloads, signed zeros, infinities, and subnormals round-trip
+//! bit-identically — the transport-equivalence contract requires the
+//! worker to see *exactly* the bytes the coordinator gathered.
+//! Every decoder validates internal consistency (declared counts vs.
+//! payload length, report entries in range) and returns a typed
+//! [`WireError`] on any mismatch; decoders never panic and never
+//! partially fill their output.
+
+use crate::util::ser::{WireError, MAX_FRAME_PAYLOAD};
+
+/// Handshake parameters announced by the coordinator when opening one
+/// shard link: the shard's local unit count and the gradient dimension.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Hello {
+    /// Number of ordering units owned by this shard.
+    pub local_n: u32,
+    /// Gradient dimension `d`.
+    pub d: u32,
+}
+
+/// Encode a [`Hello`] payload.
+pub fn encode_hello(hello: Hello, out: &mut Vec<u8>) {
+    out.clear();
+    out.extend_from_slice(&hello.local_n.to_le_bytes());
+    out.extend_from_slice(&hello.d.to_le_bytes());
+}
+
+/// Decode a [`Hello`] payload.
+pub fn decode_hello(payload: &[u8]) -> Result<Hello, WireError> {
+    if payload.len() != 8 {
+        return Err(WireError::Malformed(format!(
+            "hello payload is {} bytes, expected 8",
+            payload.len()
+        )));
+    }
+    Ok(Hello {
+        local_n: u32::from_le_bytes(payload[0..4].try_into().unwrap()),
+        d: u32::from_le_bytes(payload[4..8].try_into().unwrap()),
+    })
+}
+
+/// Encode a gathered `[rows × d]` block payload from its row-major
+/// float data (`data.len() == rows * d`).
+pub fn encode_block(data: &[f32], d: usize, out: &mut Vec<u8>) {
+    assert!(d > 0, "block dimension must be positive");
+    assert_eq!(data.len() % d, 0, "block data not a whole number of rows");
+    let rows = data.len() / d;
+    out.clear();
+    out.reserve(8 + data.len() * 4);
+    out.extend_from_slice(&(rows as u32).to_le_bytes());
+    out.extend_from_slice(&(d as u32).to_le_bytes());
+    for &x in data {
+        out.extend_from_slice(&x.to_bits().to_le_bytes());
+    }
+}
+
+/// Decode a block payload into `out` (cleared first), validating the
+/// declared row count and dimension against the payload length and the
+/// link's handshake dimension `expect_d`. Returns the row count.
+pub fn decode_block(
+    payload: &[u8],
+    expect_d: usize,
+    out: &mut Vec<f32>,
+) -> Result<usize, WireError> {
+    if payload.len() < 8 {
+        return Err(WireError::Malformed(format!(
+            "block payload is {} bytes, header needs 8",
+            payload.len()
+        )));
+    }
+    let rows =
+        u32::from_le_bytes(payload[0..4].try_into().unwrap()) as usize;
+    let d = u32::from_le_bytes(payload[4..8].try_into().unwrap()) as usize;
+    if d != expect_d {
+        return Err(WireError::Malformed(format!(
+            "block dimension {d} does not match the link's {expect_d}"
+        )));
+    }
+    // Guard the multiplication: a hostile row count must not overflow
+    // or demand more than a frame can legally carry.
+    let floats = rows
+        .checked_mul(d)
+        .filter(|&f| f <= MAX_FRAME_PAYLOAD / 4)
+        .ok_or_else(|| {
+            WireError::Malformed(format!(
+                "block of {rows} x {d} rows exceeds the frame cap"
+            ))
+        })?;
+    if payload.len() != 8 + floats * 4 {
+        return Err(WireError::Malformed(format!(
+            "block declares {rows} x {d} rows ({} bytes) but payload \
+             carries {}",
+            8 + floats * 4,
+            payload.len()
+        )));
+    }
+    out.clear();
+    out.reserve(floats);
+    for chunk in payload[8..].chunks_exact(4) {
+        out.push(f32::from_bits(u32::from_le_bytes(
+            chunk.try_into().unwrap(),
+        )));
+    }
+    Ok(rows)
+}
+
+/// Encode an epoch-order report payload (`order` entries must fit u32).
+pub fn encode_report(
+    order: &[usize],
+    state_bytes: usize,
+    out: &mut Vec<u8>,
+) {
+    assert!(
+        order.len() <= u32::MAX as usize,
+        "order length over wire limit"
+    );
+    out.clear();
+    out.reserve(12 + order.len() * 4);
+    out.extend_from_slice(&(order.len() as u32).to_le_bytes());
+    out.extend_from_slice(&(state_bytes as u64).to_le_bytes());
+    for &unit in order {
+        debug_assert!(unit <= u32::MAX as usize);
+        out.extend_from_slice(&(unit as u32).to_le_bytes());
+    }
+}
+
+/// Decode an epoch-order report, validating the declared length against
+/// the payload and the order itself as a **permutation** of the shard's
+/// `0..local_n` units (length `local_n`, every id in range, no
+/// duplicates) — a malformed peer must produce a typed error, never a
+/// non-permutation silently entering the coordinator's merge.
+pub fn decode_report(
+    payload: &[u8],
+    local_n: usize,
+) -> Result<(Vec<usize>, usize), WireError> {
+    if payload.len() < 12 {
+        return Err(WireError::Malformed(format!(
+            "report payload is {} bytes, header needs 12",
+            payload.len()
+        )));
+    }
+    let len =
+        u32::from_le_bytes(payload[0..4].try_into().unwrap()) as usize;
+    let state_bytes =
+        u64::from_le_bytes(payload[4..12].try_into().unwrap()) as usize;
+    if len != local_n {
+        return Err(WireError::Malformed(format!(
+            "report carries {len} units, shard owns {local_n}"
+        )));
+    }
+    if payload.len() != 12 + len * 4 {
+        return Err(WireError::Malformed(format!(
+            "report declares {len} units ({} bytes) but payload \
+             carries {}",
+            12 + len * 4,
+            payload.len()
+        )));
+    }
+    let mut order = Vec::with_capacity(len);
+    let mut seen = vec![false; local_n];
+    for chunk in payload[12..].chunks_exact(4) {
+        let unit =
+            u32::from_le_bytes(chunk.try_into().unwrap()) as usize;
+        if unit >= local_n {
+            return Err(WireError::Malformed(format!(
+                "report unit id {unit} out of range for shard of \
+                 {local_n}"
+            )));
+        }
+        if seen[unit] {
+            return Err(WireError::Malformed(format!(
+                "report repeats unit id {unit}: not a permutation of \
+                 0..{local_n}"
+            )));
+        }
+        seen[unit] = true;
+        order.push(unit);
+    }
+    Ok((order, state_bytes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::ser::{decode_frame, encode_frame, FrameKind};
+
+    /// Draw a float whose bit pattern exercises the full IEEE-754 zoo:
+    /// ordinary values plus NaNs (payload bits included), ±inf, signed
+    /// zeros, and subnormals.
+    fn weird_f32(rng: &mut crate::util::rng::Rng) -> f32 {
+        match rng.gen_range(8) {
+            0 => f32::from_bits(0x7fc0_0001), // NaN with payload
+            1 => f32::from_bits(0xffc1_2345), // negative NaN, payload
+            2 => f32::INFINITY,
+            3 => f32::NEG_INFINITY,
+            4 => -0.0,
+            5 => f32::from_bits(1 + rng.gen_range(0x10) as u32), // subnormal
+            6 => f32::MIN_POSITIVE / 2.0,
+            _ => rng.gauss() as f32,
+        }
+    }
+
+    #[test]
+    fn hello_roundtrip() {
+        let mut buf = Vec::new();
+        let h = Hello { local_n: 1000, d: 7850 };
+        encode_hello(h, &mut buf);
+        assert_eq!(decode_hello(&buf).unwrap(), h);
+        assert!(decode_hello(&buf[..7]).is_err());
+    }
+
+    #[test]
+    fn block_roundtrip_is_bit_identical_over_weird_floats() {
+        // Satellite property test: random n/d/rows with NaN / ±inf /
+        // subnormal payloads encode→decode bit-identically, and frames
+        // are stable across re-encoding.
+        prop::forall("wire block roundtrip", 64, |rng| {
+            let d = 1 + rng.gen_range(32) as usize;
+            let rows = rng.gen_range(17) as usize;
+            let data: Vec<f32> =
+                (0..rows * d).map(|_| weird_f32(rng)).collect();
+            let mut payload = Vec::new();
+            encode_block(&data, d, &mut payload);
+            let mut decoded = Vec::new();
+            let got_rows = decode_block(&payload, d, &mut decoded)
+                .map_err(|e| e.to_string())?;
+            if got_rows != rows {
+                return Err(format!("rows {got_rows} != {rows}"));
+            }
+            // Bit-level equality (== would treat NaN != NaN).
+            let bits = |v: &[f32]| -> Vec<u32> {
+                v.iter().map(|x| x.to_bits()).collect()
+            };
+            if bits(&decoded) != bits(&data) {
+                return Err("payload bits changed in transit".into());
+            }
+            // Re-encoding the decoded block reproduces the same frame
+            // byte-for-byte (stable frames).
+            let mut payload2 = Vec::new();
+            encode_block(&decoded, d, &mut payload2);
+            if payload2 != payload {
+                return Err("re-encoded payload differs".into());
+            }
+            let mut f1 = Vec::new();
+            let mut f2 = Vec::new();
+            encode_frame(FrameKind::Block, &payload, &mut f1);
+            encode_frame(FrameKind::Block, &payload2, &mut f2);
+            if f1 != f2 {
+                return Err("re-encoded frame differs".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn report_roundtrip_over_random_orders() {
+        prop::forall("wire report roundtrip", 32, |rng| {
+            let n = 1 + rng.gen_range(200) as usize;
+            let order = rng.permutation(n);
+            let state = rng.gen_range(1 << 20) as usize;
+            let mut payload = Vec::new();
+            encode_report(&order, state, &mut payload);
+            let (got, got_state) = decode_report(&payload, n)
+                .map_err(|e| e.to_string())?;
+            if got != order || got_state != state {
+                return Err("report changed in transit".into());
+            }
+            // Stable across re-encoding.
+            let mut payload2 = Vec::new();
+            encode_report(&got, got_state, &mut payload2);
+            if payload2 != payload {
+                return Err("re-encoded report differs".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn block_decode_rejects_inconsistent_headers() {
+        let data = [1.0f32, 2.0, 3.0, 4.0];
+        let mut payload = Vec::new();
+        encode_block(&data, 2, &mut payload);
+        let mut out = vec![0.5f32; 3]; // pre-filled to detect partial writes
+
+        // Wrong link dimension.
+        assert!(matches!(
+            decode_block(&payload, 3, &mut out),
+            Err(WireError::Malformed(_))
+        ));
+        assert_eq!(out, vec![0.5f32; 3], "failed decode must not write");
+
+        // Oversized row count: declared rows far beyond the payload.
+        let mut bad = payload.clone();
+        bad[0..4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(
+            decode_block(&bad, 2, &mut out),
+            Err(WireError::Malformed(_))
+        ));
+
+        // Row count that overflows rows * d.
+        let mut bad = payload.clone();
+        bad[0..4].copy_from_slice(&(u32::MAX / 2).to_le_bytes());
+        bad[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_block(&bad, u32::MAX as usize, &mut out).is_err());
+
+        // Truncated body.
+        assert!(matches!(
+            decode_block(&payload[..payload.len() - 1], 2, &mut out),
+            Err(WireError::Malformed(_))
+        ));
+        assert!(decode_block(&payload[..4], 2, &mut out).is_err());
+    }
+
+    #[test]
+    fn report_decode_rejects_bad_lengths_and_out_of_range_units() {
+        let order = vec![2usize, 0, 1];
+        let mut payload = Vec::new();
+        encode_report(&order, 64, &mut payload);
+
+        // Length disagrees with the shard size.
+        assert!(matches!(
+            decode_report(&payload, 4),
+            Err(WireError::Malformed(_))
+        ));
+        // Truncated.
+        assert!(decode_report(&payload[..payload.len() - 2], 3).is_err());
+        assert!(decode_report(&payload[..8], 3).is_err());
+        // Out-of-range unit id.
+        let mut bad = payload.clone();
+        let last = bad.len() - 4;
+        bad[last..].copy_from_slice(&99u32.to_le_bytes());
+        assert!(matches!(
+            decode_report(&bad, 3),
+            Err(WireError::Malformed(_))
+        ));
+        // Duplicate unit id: in range, right length, but not a
+        // permutation — must not reach the coordinator's merge.
+        let mut bad = payload.clone();
+        bad[last..].copy_from_slice(&2u32.to_le_bytes());
+        assert!(matches!(
+            decode_report(&bad, 3),
+            Err(WireError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn framed_block_survives_the_full_frame_layer() {
+        // End-to-end through encode_frame/decode_frame, the path the
+        // TCP transport actually takes.
+        let data = [f32::NAN, -0.0, 1.5e-40, f32::INFINITY];
+        let mut payload = Vec::new();
+        encode_block(&data, 4, &mut payload);
+        let mut frame = Vec::new();
+        encode_frame(FrameKind::Block, &payload, &mut frame);
+        let (kind, body, _) = decode_frame(&frame).unwrap();
+        assert_eq!(kind, FrameKind::Block);
+        let mut out = Vec::new();
+        assert_eq!(decode_block(body, 4, &mut out).unwrap(), 1);
+        let bits: Vec<u32> = out.iter().map(|x| x.to_bits()).collect();
+        let want: Vec<u32> = data.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(bits, want);
+    }
+}

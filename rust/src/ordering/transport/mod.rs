@@ -1,0 +1,479 @@
+//! Shard order-exchange transports — how a CD-GraB coordinator talks to
+//! its W shard balancers.
+//!
+//! PR 2's async backend hard-wired one mechanism: an in-process mpsc
+//! block queue per shard plus a report channel back. This module
+//! extracts that conversation into the [`ShardTransport`] trait — the
+//! coordinator-side endpoint of one shard's link, speaking exactly the
+//! messages the block queues already defined:
+//!
+//! * **block** — a gathered `[rows × d]` scratch block of the shard's
+//!   next local gradients ([`ShardTransport::send_block`]);
+//! * **epoch end** — the boundary signal ([`ShardTransport::end_epoch`]);
+//! * **report** — the shard's next local epoch order, received back at
+//!   the boundary ([`ShardTransport::recv_report`]).
+//!
+//! Two backends implement it:
+//!
+//! * [`ChannelTransport`] — the PR 2 worker thread behind a bounded
+//!   mpsc block queue, now behind the trait (the default);
+//! * [`tcp::TcpTransport`] — the same conversation serialized into
+//!   checksummed little-endian frames ([`crate::util::ser`]) over a TCP
+//!   socket, with the shard balancer running either on an in-process
+//!   loopback worker or in a separate OS process
+//!   (`grab exp cdgrab --listen`).
+//!
+//! The coordinator ([`crate::ordering::ShardedOrder`]) is transport-
+//! agnostic: its round-robin merge, position→shard routing, and
+//! epoch-boundary drain barrier never see which carrier moved the bytes.
+//! Every transport is required to be **bit-equal**: for the same
+//! gradient stream, every backend produces identical epoch orders
+//! (contract 5 in `docs/determinism.md`, property-tested in
+//! `tests/transport.rs`).
+
+pub mod codec;
+pub mod tcp;
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use crate::ordering::queue::{
+    block_queue, BlockReceiver, BlockSender, ScratchBlock, ShardMsg,
+};
+use crate::ordering::{OrderPolicy, PairBalance};
+use crate::util::ser::{FrameReadError, WireError};
+
+/// What a shard worker sends back at each epoch boundary.
+pub struct EpochReport {
+    /// The shard's next local epoch order (a permutation of the shard's
+    /// `0..local_n` units).
+    pub order: Vec<usize>,
+    /// The shard balancer's current `state_bytes`.
+    pub state_bytes: usize,
+}
+
+/// A transport-level failure on one shard link. Mid-epoch failures are
+/// recorded and surfaced at the epoch boundary (mirroring worker-panic
+/// propagation), never mid-stream.
+#[derive(Debug)]
+pub enum TransportError {
+    /// The peer closed the link before the epoch completed.
+    Disconnected(String),
+    /// The peer sent bytes that do not decode as a valid message.
+    Wire(WireError),
+    /// OS-level socket failure.
+    Io(std::io::Error),
+    /// The peer rejected or botched the connection handshake.
+    Handshake(String),
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportError::Disconnected(who) => {
+                write!(f, "shard peer disconnected: {who}")
+            }
+            TransportError::Wire(e) => write!(f, "wire error: {e}"),
+            TransportError::Io(e) => write!(f, "socket error: {e}"),
+            TransportError::Handshake(why) => {
+                write!(f, "handshake failed: {why}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+impl From<WireError> for TransportError {
+    fn from(e: WireError) -> TransportError {
+        TransportError::Wire(e)
+    }
+}
+
+impl From<std::io::Error> for TransportError {
+    fn from(e: std::io::Error) -> TransportError {
+        TransportError::Io(e)
+    }
+}
+
+impl From<FrameReadError> for TransportError {
+    fn from(e: FrameReadError) -> TransportError {
+        match e {
+            FrameReadError::Io(e)
+                if e.kind() == std::io::ErrorKind::UnexpectedEof =>
+            {
+                TransportError::Disconnected("eof mid-frame".to_string())
+            }
+            FrameReadError::Io(e) => TransportError::Io(e),
+            FrameReadError::Wire(w) => TransportError::Wire(w),
+        }
+    }
+}
+
+/// Counters of one shard link, comparable across transports: `stalls`
+/// counts backpressure waits (queue-full acquires for the channel
+/// backend, 0 for TCP where the kernel socket buffer is the
+/// backpressure), `tx_bytes`/`rx_bytes` count payload bytes moved to and
+/// from the worker (framed wire bytes for TCP, gathered gradient/report
+/// bytes for the in-process channel).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LinkStats {
+    /// Backpressure events while handing blocks to the worker.
+    pub stalls: u64,
+    /// Bytes shipped coordinator → worker.
+    pub tx_bytes: u64,
+    /// Bytes received worker → coordinator (epoch reports).
+    pub rx_bytes: u64,
+}
+
+impl LinkStats {
+    /// Element-wise sum of two stat snapshots.
+    pub fn merged(self, other: LinkStats) -> LinkStats {
+        LinkStats {
+            stalls: self.stalls + other.stalls,
+            tx_bytes: self.tx_bytes + other.tx_bytes,
+            rx_bytes: self.rx_bytes + other.rx_bytes,
+        }
+    }
+}
+
+/// Aggregated per-shard link counters, as reported by the coordinator
+/// (`ShardedOrder::transport_stats` /
+/// `OrderPolicy::transport_stats`). Synchronous backends report one
+/// all-zero entry per shard so sync/async/tcp runs emit comparable
+/// columns.
+#[derive(Clone, Debug, Default)]
+pub struct TransportStats {
+    /// Short transport name ("inline", "channel", "tcp").
+    pub transport: &'static str,
+    /// One counter snapshot per shard link, in shard order.
+    pub per_shard: Vec<LinkStats>,
+}
+
+impl TransportStats {
+    /// Sum of the per-shard counters.
+    pub fn total(&self) -> LinkStats {
+        self.per_shard
+            .iter()
+            .fold(LinkStats::default(), |acc, s| acc.merged(*s))
+    }
+}
+
+/// Coordinator-side endpoint of one shard's order-exchange link.
+///
+/// The coordinator drives each link through a fixed per-epoch script:
+/// repeated `acquire` → gather → `send_block`, then one `end_epoch`
+/// followed by one `recv_report` at the boundary. Implementations must
+/// preserve message order per link (the bit-equality contract rides on
+/// it) and must turn peer failure into `None`/`false`/`Err` returns —
+/// never a panic mid-epoch, so the coordinator can finish routing the
+/// epoch's remaining rows and surface the failure at the boundary.
+pub trait ShardTransport: Send {
+    /// Take a reusable scratch buffer for the next gather. This is the
+    /// backpressure point: it may block until the link can accept
+    /// another block. `None` means the peer is gone.
+    fn acquire(&mut self) -> Option<ScratchBlock>;
+
+    /// Ship a gathered block (obtained from [`ShardTransport::acquire`])
+    /// to the shard balancer. Returns `false` if the peer is gone.
+    fn send_block(&mut self, block: ScratchBlock) -> bool;
+
+    /// Signal the epoch boundary. Returns `false` if the peer is gone.
+    fn end_epoch(&mut self) -> bool;
+
+    /// Block for the shard's epoch-end report. Called exactly once per
+    /// `end_epoch`, at the coordinator's drain barrier. An `Err` means
+    /// the peer failed mid-epoch; in-process backends may instead
+    /// re-raise the worker's panic payload directly (both surface at the
+    /// boundary).
+    fn recv_report(&mut self) -> Result<EpochReport, TransportError>;
+
+    /// Snapshot of this link's counters.
+    fn stats(&self) -> LinkStats;
+
+    /// Bytes of reusable buffer memory held by this link on the
+    /// coordinator side (circulating scratch pools, frame buffers) —
+    /// counted into the coordinator's `state_bytes` so Table 1 memory
+    /// numbers stay comparable across transports.
+    fn buffer_bytes(&self) -> usize {
+        0
+    }
+
+    /// Test hook: make the peer fail on its next dequeue. Default: no-op
+    /// (transports without an injectable failure mode).
+    #[cfg(test)]
+    fn poison(&mut self) {}
+}
+
+// ---------------------------------------------------------------------------
+// Channel transport (in-process worker thread; PR 2's async backend)
+// ---------------------------------------------------------------------------
+
+/// The default transport: the shard balancer runs on an in-process
+/// worker thread behind a bounded mpsc block queue
+/// ([`crate::ordering::queue`]), with epoch reports returned on a second
+/// channel. A worker panic is re-raised (with its original payload) by
+/// [`ShardTransport::recv_report`] at the epoch boundary.
+pub struct ChannelTransport {
+    queue: Option<BlockSender>,
+    reports: Receiver<EpochReport>,
+    handle: Option<JoinHandle<()>>,
+    rx_bytes: u64,
+}
+
+impl ChannelTransport {
+    /// Spawn one shard worker over `local_n` units of dimension `d`
+    /// behind a `depth`-bounded block queue, and return the
+    /// coordinator-side endpoint.
+    pub fn spawn(local_n: usize, d: usize, depth: usize) -> ChannelTransport {
+        let balancer = PairBalance::new(local_n, d);
+        let (sender, receiver) = block_queue(d, depth);
+        let (report_tx, report_rx) = channel();
+        let handle = std::thread::spawn(move || {
+            channel_worker_loop(receiver, balancer, report_tx);
+        });
+        ChannelTransport {
+            queue: Some(sender),
+            reports: report_rx,
+            handle: Some(handle),
+            rx_bytes: 0,
+        }
+    }
+
+    /// Join the dead worker and re-raise its panic payload; called when
+    /// the boundary drain finds the report channel disconnected.
+    fn propagate_failure(&mut self) -> ! {
+        if let Some(handle) = self.handle.take() {
+            match handle.join() {
+                Err(payload) => std::panic::resume_unwind(payload),
+                Ok(()) => panic!(
+                    "shard worker exited before the epoch ended"
+                ),
+            }
+        }
+        panic!("shard worker failed and was already joined");
+    }
+}
+
+impl Drop for ChannelTransport {
+    fn drop(&mut self) {
+        // Closing the queue ends the worker's recv loop; a panic payload
+        // at this point was either already surfaced by recv_report or
+        // the coordinator itself is unwinding, so the join result is
+        // dropped.
+        self.queue = None;
+        if let Some(handle) = self.handle.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl ShardTransport for ChannelTransport {
+    fn acquire(&mut self) -> Option<ScratchBlock> {
+        self.queue.as_mut()?.acquire()
+    }
+
+    fn send_block(&mut self, block: ScratchBlock) -> bool {
+        match self.queue.as_mut() {
+            Some(q) => q.send(block),
+            None => false,
+        }
+    }
+
+    fn end_epoch(&mut self) -> bool {
+        match &self.queue {
+            Some(q) => q.end_epoch(),
+            None => false,
+        }
+    }
+
+    fn recv_report(&mut self) -> Result<EpochReport, TransportError> {
+        match self.reports.recv() {
+            Ok(report) => {
+                self.rx_bytes += (report.order.len()
+                    * std::mem::size_of::<usize>())
+                    as u64;
+                Ok(report)
+            }
+            Err(_) => self.propagate_failure(),
+        }
+    }
+
+    fn stats(&self) -> LinkStats {
+        let (stalls, tx_bytes) = self
+            .queue
+            .as_ref()
+            .map(|q| (q.stalls(), q.bytes_sent()))
+            .unwrap_or((0, 0));
+        LinkStats { stalls, tx_bytes, rx_bytes: self.rx_bytes }
+    }
+
+    fn buffer_bytes(&self) -> usize {
+        // The circulating scratch pool (depth × high-water block size)
+        // is this transport's dominant reusable allocation.
+        self.queue.as_ref().map(|q| q.pool_bytes()).unwrap_or(0)
+    }
+
+    #[cfg(test)]
+    fn poison(&mut self) {
+        if let Some(q) = &self.queue {
+            q.poison();
+        }
+    }
+}
+
+/// A channel shard worker's thread body: balance queued blocks at the
+/// shard's running local position, finalize + report at each epoch
+/// boundary, exit when the coordinator closes the queue.
+fn channel_worker_loop(
+    receiver: BlockReceiver,
+    mut balancer: PairBalance,
+    reports: Sender<EpochReport>,
+) {
+    let mut cursor = 0usize;
+    while let Some(msg) = receiver.recv() {
+        match msg {
+            ShardMsg::Block(scratch) => {
+                let rows = scratch.rows();
+                if rows > 0 {
+                    balancer.observe_block(
+                        cursor..cursor + rows,
+                        &scratch.as_grad_block(),
+                    );
+                    cursor += rows;
+                }
+                receiver.recycle(scratch);
+            }
+            ShardMsg::EpochEnd => {
+                balancer.epoch_end();
+                cursor = 0;
+                let report = EpochReport {
+                    order: balancer.epoch_order(0).to_vec(),
+                    state_bytes: balancer.state_bytes(),
+                };
+                if reports.send(report).is_err() {
+                    return; // coordinator gone
+                }
+            }
+            #[cfg(test)]
+            ShardMsg::Poison => panic!("poisoned shard worker"),
+        }
+    }
+}
+
+/// Spawn `sizes.len()` channel-transport shard workers (one per shard
+/// size, dimension `d`, queue depth `depth`).
+pub fn spawn_channel_shards(
+    sizes: &[usize],
+    d: usize,
+    depth: usize,
+) -> Vec<Box<dyn ShardTransport>> {
+    sizes
+        .iter()
+        .map(|&size| {
+            Box::new(ChannelTransport::spawn(size, d, depth))
+                as Box<dyn ShardTransport>
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ordering::GradBlock;
+
+    fn drive_epoch(
+        link: &mut dyn ShardTransport,
+        vs: &[Vec<f32>],
+    ) -> EpochReport {
+        let mut scratch = link.acquire().expect("live link");
+        for v in vs {
+            scratch.push_row(v);
+        }
+        assert!(link.send_block(scratch));
+        assert!(link.end_epoch());
+        link.recv_report().expect("report")
+    }
+
+    #[test]
+    fn channel_transport_round_trips_an_epoch() {
+        let d = 3;
+        let vs: Vec<Vec<f32>> = vec![
+            vec![1.0, 0.0, 0.0],
+            vec![-1.0, 0.0, 0.0],
+            vec![0.0, 1.0, 0.0],
+            vec![0.0, -1.0, 0.0],
+        ];
+        let mut link = ChannelTransport::spawn(4, d, 2);
+        let report = drive_epoch(&mut link, &vs);
+        assert_eq!(report.order.len(), 4);
+        let mut sorted = report.order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2, 3]);
+        assert!(report.state_bytes > 0);
+        let stats = link.stats();
+        assert_eq!(stats.tx_bytes, (4 * d * 4) as u64);
+        assert_eq!(stats.rx_bytes,
+                   (4 * std::mem::size_of::<usize>()) as u64);
+    }
+
+    #[test]
+    fn channel_transport_matches_inline_pair_balance() {
+        // The trait wrapper must not change the bit-equality story:
+        // driving the worker through ShardTransport produces the same
+        // local order as an inline PairBalance over the same stream.
+        let d = 4;
+        let n = 10;
+        let mut rng = crate::util::rng::Rng::new(11);
+        let vs = crate::util::prop::gen::vec_set(&mut rng, n, d);
+        let mut link = ChannelTransport::spawn(n, d, 2);
+        let mut inline = PairBalance::new(n, d);
+        let mut order: Vec<usize> = (0..n).collect();
+        for _ in 0..3 {
+            let visit: Vec<Vec<f32>> =
+                order.iter().map(|&u| vs[u].clone()).collect();
+            let report = drive_epoch(&mut link, &visit);
+            let mut flat = Vec::new();
+            for v in &visit {
+                flat.extend_from_slice(v);
+            }
+            let _ = inline.epoch_order(0);
+            inline.observe_block(0..n, &GradBlock::new(&flat, d));
+            inline.epoch_end();
+            assert_eq!(report.order, inline.epoch_order(0).to_vec());
+            order = report.order;
+        }
+    }
+
+    #[test]
+    fn poisoned_channel_worker_reraises_at_recv_report() {
+        let mut link = ChannelTransport::spawn(4, 2, 2);
+        link.poison();
+        let err = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                let _ = link.recv_report();
+            }),
+        )
+        .expect_err("worker panic must re-raise");
+        let msg = err
+            .downcast_ref::<&str>()
+            .copied()
+            .unwrap_or("<non-str payload>");
+        assert!(msg.contains("poisoned shard worker"), "{msg}");
+    }
+
+    #[test]
+    fn link_stats_merge_elementwise() {
+        let a = LinkStats { stalls: 1, tx_bytes: 10, rx_bytes: 2 };
+        let b = LinkStats { stalls: 2, tx_bytes: 5, rx_bytes: 0 };
+        assert_eq!(
+            a.merged(b),
+            LinkStats { stalls: 3, tx_bytes: 15, rx_bytes: 2 }
+        );
+        let agg = TransportStats {
+            transport: "channel",
+            per_shard: vec![a, b],
+        };
+        assert_eq!(agg.total(), a.merged(b));
+    }
+}

@@ -1,0 +1,616 @@
+//! TCP shard transport — CD-GraB's order exchange over real sockets.
+//!
+//! Each shard balancer becomes a **worker**: a peer that accepts one
+//! TCP connection per shard, runs [`crate::ordering::PairBalance`] over
+//! the blocks it receives, and answers every `EpochEnd` with the
+//! shard's next local order. Workers run either
+//!
+//! * **in-process over loopback** ([`spawn_loopback`]) — the listener
+//!   and one thread per accepted connection live in this process; used
+//!   by tests, benches, and the default `--transport tcp` mode; or
+//! * **in a separate OS process** ([`run_worker_server`]) — started
+//!   with `grab exp cdgrab --listen ADDR`; a coordinator started with
+//!   `--connect ADDR` dials it once per shard.
+//!
+//! Per-connection protocol (frames per `util::ser`, payloads per
+//! [`super::codec`]):
+//!
+//! ```text
+//! coordinator                         worker
+//!   Hello {local_n, d}  ───────────▶
+//!                       ◀───────────  Ack
+//!   Block [rows × d]    ───────────▶            (repeat per microbatch)
+//!   EpochEnd            ───────────▶
+//!                       ◀───────────  Report {order, state_bytes}
+//!   (socket close = shutdown)
+//! ```
+//!
+//! Backpressure is the kernel socket buffer (a full buffer blocks the
+//! coordinator's `write_all`), so [`ShardTransport::acquire`] never
+//! stalls on a TCP link and its `stalls` counter stays 0 — wire bytes
+//! are the comparable cost metric instead. A peer failure (reset, EOF,
+//! malformed frame) marks the link dead; the coordinator surfaces it at
+//! the epoch boundary exactly like a worker panic.
+
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use super::codec::{
+    decode_block, decode_hello, decode_report, encode_block,
+    encode_hello, encode_report, Hello,
+};
+use super::{EpochReport, LinkStats, ShardTransport, TransportError};
+use crate::ordering::queue::ScratchBlock;
+use crate::ordering::{GradBlock, OrderPolicy, PairBalance};
+use crate::util::ser::{
+    read_frame, write_frame, FrameKind, FrameReadError, WireError,
+    FRAME_HEADER_LEN, MAX_FRAME_PAYLOAD,
+};
+
+/// Upper bound on waiting for any single frame from a peer. Generous —
+/// a healthy worker answers an `EpochEnd` in microseconds — but finite,
+/// so a hung socket turns into a typed boundary error instead of
+/// stalling the run (and CI) forever.
+const READ_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Coordinator-side endpoint of one shard link over TCP. Created by
+/// [`connect`]; implements [`ShardTransport`] with the same observable
+/// behavior as the in-process channel backend.
+pub struct TcpTransport {
+    stream: TcpStream,
+    /// Free gather buffers; recycled synchronously after each send, so
+    /// acquisition never blocks (socket writes are the backpressure).
+    pool: Vec<ScratchBlock>,
+    payload_buf: Vec<u8>,
+    frame_buf: Vec<u8>,
+    read_buf: Vec<u8>,
+    d: usize,
+    local_n: usize,
+    tx_bytes: u64,
+    rx_bytes: u64,
+    dead: Option<String>,
+}
+
+/// Open one shard link: dial `addr`, handshake `Hello{local_n, d}` /
+/// `Ack`, and return the transport. Fails with a typed error — leaving
+/// no half-open link behind — on connection refusal, handshake
+/// rejection, or protocol mismatch.
+pub fn connect<A: ToSocketAddrs>(
+    addr: A,
+    local_n: usize,
+    d: usize,
+) -> Result<TcpTransport, TransportError> {
+    assert!(d > 0, "tcp shard link needs a positive dimension");
+    assert!(
+        local_n <= u32::MAX as usize && d <= u32::MAX as usize,
+        "shard size / dimension over wire limit"
+    );
+    let stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(READ_TIMEOUT))?;
+    let mut t = TcpTransport {
+        stream,
+        pool: vec![ScratchBlock::new(d)],
+        payload_buf: Vec::new(),
+        frame_buf: Vec::new(),
+        read_buf: Vec::new(),
+        d,
+        local_n,
+        tx_bytes: 0,
+        rx_bytes: 0,
+        dead: None,
+    };
+    encode_hello(
+        Hello { local_n: local_n as u32, d: d as u32 },
+        &mut t.payload_buf,
+    );
+    let hello = std::mem::take(&mut t.payload_buf);
+    t.write(FrameKind::Hello, &hello).map_err(|e| {
+        TransportError::Handshake(format!("sending hello: {e}"))
+    })?;
+    t.payload_buf = hello;
+    match read_frame(&mut t.stream, &mut t.read_buf) {
+        Ok(FrameKind::Ack) => {}
+        Ok(other) => {
+            return Err(TransportError::Handshake(format!(
+                "expected ack, peer sent {other:?}"
+            )))
+        }
+        Err(e) => {
+            return Err(TransportError::Handshake(format!(
+                "reading ack: {e}"
+            )))
+        }
+    }
+    t.rx_bytes += t.read_buf.len() as u64;
+    Ok(t)
+}
+
+impl TcpTransport {
+    fn write(
+        &mut self,
+        kind: FrameKind,
+        payload: &[u8],
+    ) -> std::io::Result<()> {
+        write_frame(&mut self.stream, kind, payload, &mut self.frame_buf)?;
+        self.tx_bytes += self.frame_buf.len() as u64;
+        Ok(())
+    }
+}
+
+impl ShardTransport for TcpTransport {
+    fn acquire(&mut self) -> Option<ScratchBlock> {
+        if self.dead.is_some() {
+            return None;
+        }
+        Some(match self.pool.pop() {
+            Some(mut b) => {
+                b.clear();
+                b
+            }
+            None => ScratchBlock::new(self.d),
+        })
+    }
+
+    fn send_block(&mut self, block: ScratchBlock) -> bool {
+        if self.dead.is_some() {
+            return false;
+        }
+        // A gather too large for one frame must become a typed
+        // boundary failure, not an encode_frame assert mid-epoch. (The
+        // trainer's microbatch × d blocks sit far below the 256 MiB
+        // cap; this guards pathological configs.)
+        let payload_len = 8 + block.rows() * block.dim() * 4;
+        if payload_len > MAX_FRAME_PAYLOAD {
+            self.dead = Some(format!(
+                "gathered block of {payload_len} bytes exceeds the \
+                 {MAX_FRAME_PAYLOAD}-byte frame cap"
+            ));
+            self.pool.push(block);
+            return false;
+        }
+        let mut payload = std::mem::take(&mut self.payload_buf);
+        encode_block(block.as_grad_block().data(), self.d, &mut payload);
+        let ok = match self.write(FrameKind::Block, &payload) {
+            Ok(()) => true,
+            Err(e) => {
+                self.dead = Some(format!("block send failed: {e}"));
+                false
+            }
+        };
+        self.payload_buf = payload;
+        self.pool.push(block);
+        ok
+    }
+
+    fn end_epoch(&mut self) -> bool {
+        if self.dead.is_some() {
+            return false;
+        }
+        match self.write(FrameKind::EpochEnd, &[]) {
+            Ok(()) => true,
+            Err(e) => {
+                self.dead = Some(format!("epoch-end send failed: {e}"));
+                false
+            }
+        }
+    }
+
+    fn recv_report(&mut self) -> Result<EpochReport, TransportError> {
+        if let Some(why) = &self.dead {
+            return Err(TransportError::Disconnected(why.clone()));
+        }
+        let kind = match read_frame(&mut self.stream, &mut self.read_buf)
+        {
+            Ok(k) => k,
+            Err(e) => {
+                let err: TransportError = e.into();
+                self.dead = Some(err.to_string());
+                return Err(err);
+            }
+        };
+        if kind != FrameKind::Report {
+            let err = TransportError::Wire(WireError::Malformed(format!(
+                "expected report frame, got {kind:?}"
+            )));
+            self.dead = Some(err.to_string());
+            return Err(err);
+        }
+        self.rx_bytes += self.read_buf.len() as u64;
+        let (order, state_bytes) = match decode_report(
+            &self.read_buf[FRAME_HEADER_LEN..],
+            self.local_n,
+        ) {
+            Ok(v) => v,
+            Err(e) => {
+                let err = TransportError::Wire(e);
+                self.dead = Some(err.to_string());
+                return Err(err);
+            }
+        };
+        Ok(EpochReport { order, state_bytes })
+    }
+
+    fn stats(&self) -> LinkStats {
+        LinkStats {
+            stalls: 0,
+            tx_bytes: self.tx_bytes,
+            rx_bytes: self.rx_bytes,
+        }
+    }
+
+    fn buffer_bytes(&self) -> usize {
+        self.pool.iter().map(|b| b.capacity_bytes()).sum::<usize>()
+            + self.payload_buf.capacity()
+            + self.frame_buf.capacity()
+            + self.read_buf.capacity()
+    }
+}
+
+/// Open one TCP link per entry of `sizes` against the same worker
+/// address (one connection = one shard).
+pub fn connect_shards<A: ToSocketAddrs + Copy>(
+    addr: A,
+    sizes: &[usize],
+    d: usize,
+) -> Result<Vec<Box<dyn ShardTransport>>, TransportError> {
+    let mut links: Vec<Box<dyn ShardTransport>> =
+        Vec::with_capacity(sizes.len());
+    for &size in sizes {
+        links.push(Box::new(connect(addr, size, d)?));
+    }
+    Ok(links)
+}
+
+/// Serve one accepted worker connection to completion: handshake, then
+/// balance blocks and answer epoch-end frames until the coordinator
+/// closes the socket. Every protocol violation returns a typed error
+/// (the handler never panics on wire input).
+pub fn serve_connection(
+    mut stream: TcpStream,
+) -> Result<(), TransportError> {
+    stream.set_nodelay(true)?;
+    let mut buf = Vec::new();
+    let mut rows_buf: Vec<f32> = Vec::new();
+    let mut report_payload = Vec::new();
+    let mut scratch = Vec::new();
+
+    // Handshake: the first frame must be a Hello.
+    match read_frame(&mut stream, &mut buf) {
+        Ok(FrameKind::Hello) => {}
+        Ok(other) => {
+            return Err(TransportError::Handshake(format!(
+                "expected hello, got {other:?}"
+            )))
+        }
+        Err(e) => return Err(e.into()),
+    }
+    let hello = decode_hello(&buf[FRAME_HEADER_LEN..])?;
+    if hello.d == 0 {
+        return Err(TransportError::Handshake(
+            "hello declares dimension 0".to_string(),
+        ));
+    }
+    let d = hello.d as usize;
+    let local_n = hello.local_n as usize;
+    let mut balancer = PairBalance::new(local_n, d);
+    let mut cursor = 0usize;
+    write_frame(&mut stream, FrameKind::Ack, &[], &mut scratch)?;
+
+    loop {
+        match read_frame(&mut stream, &mut buf) {
+            Ok(FrameKind::Block) => {
+                let rows = decode_block(
+                    &buf[FRAME_HEADER_LEN..],
+                    d,
+                    &mut rows_buf,
+                )?;
+                // Validate the epoch's row budget here — the balancer's
+                // own bounds checks are assertions, and wire input must
+                // produce typed errors, never worker panics.
+                if cursor + rows > local_n {
+                    return Err(TransportError::Wire(
+                        WireError::Malformed(format!(
+                            "epoch overflow: {rows} rows after \
+                             {cursor} of {local_n}"
+                        )),
+                    ));
+                }
+                if rows > 0 {
+                    balancer.observe_block(
+                        cursor..cursor + rows,
+                        &GradBlock::new(&rows_buf, d),
+                    );
+                    cursor += rows;
+                }
+            }
+            Ok(FrameKind::EpochEnd) => {
+                if cursor != local_n {
+                    return Err(TransportError::Wire(
+                        WireError::Malformed(format!(
+                            "epoch end after {cursor} of {local_n} \
+                             rows"
+                        )),
+                    ));
+                }
+                balancer.epoch_end();
+                cursor = 0;
+                encode_report(
+                    balancer.epoch_order(0),
+                    balancer.state_bytes(),
+                    &mut report_payload,
+                );
+                write_frame(
+                    &mut stream,
+                    FrameKind::Report,
+                    &report_payload,
+                    &mut scratch,
+                )?;
+            }
+            Ok(other) => {
+                return Err(TransportError::Wire(WireError::Malformed(
+                    format!("unexpected frame {other:?} on shard link"),
+                )))
+            }
+            // Coordinator closed the link: clean worker shutdown.
+            Err(FrameReadError::Io(e))
+                if e.kind() == std::io::ErrorKind::UnexpectedEof =>
+            {
+                return Ok(())
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+}
+
+/// Spawn an in-process loopback worker pool: bind an ephemeral
+/// 127.0.0.1 port, accept exactly `conns` connections (one per shard),
+/// serve each on its own thread, and exit once every link closes.
+/// Returns the address to [`connect`] to.
+pub fn spawn_loopback(conns: usize) -> std::io::Result<std::net::SocketAddr> {
+    let listener = TcpListener::bind(("127.0.0.1", 0))?;
+    let addr = listener.local_addr()?;
+    std::thread::spawn(move || {
+        let mut handles = Vec::with_capacity(conns);
+        for _ in 0..conns {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    handles.push(std::thread::spawn(move || {
+                        if let Err(e) = serve_connection(stream) {
+                            eprintln!(
+                                "[transport] loopback worker: {e}"
+                            );
+                        }
+                    }));
+                }
+                Err(e) => {
+                    eprintln!("[transport] loopback accept: {e}");
+                    break;
+                }
+            }
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+    });
+    Ok(addr)
+}
+
+/// Run a blocking shard-worker server (`grab exp cdgrab --listen`):
+/// accept connections forever — or exactly `max_conns` when given, for
+/// scripted runs that should exit once a known coordinator is done —
+/// and serve each shard link on its own thread.
+pub fn run_worker_server(
+    addr: &str,
+    max_conns: Option<usize>,
+) -> anyhow::Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    eprintln!(
+        "[transport] shard worker listening on {}",
+        listener.local_addr()?
+    );
+    let mut handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    let mut served = 0usize;
+    let mut accept_errors = 0u32;
+    loop {
+        if let Some(cap) = max_conns {
+            if served >= cap {
+                break;
+            }
+        }
+        // Reap finished links so the serve-forever mode does not
+        // accumulate one JoinHandle per connection ever served.
+        handles.retain(|h| !h.is_finished());
+        // Transient accept failures (ECONNABORTED from a connection
+        // reset pre-accept, momentary EMFILE) must not kill a server
+        // with live shard links; only a persistently failing listener
+        // is fatal.
+        let (stream, peer) = match listener.accept() {
+            Ok(conn) => {
+                accept_errors = 0;
+                conn
+            }
+            Err(e) => {
+                accept_errors += 1;
+                eprintln!("[transport] accept failed: {e}");
+                anyhow::ensure!(
+                    accept_errors < 32,
+                    "listener failing persistently: {e}"
+                );
+                continue;
+            }
+        };
+        served += 1;
+        eprintln!("[transport] shard link {served} from {peer}");
+        handles.push(std::thread::spawn(move || {
+            if let Err(e) = serve_connection(stream) {
+                eprintln!("[transport] worker link from {peer}: {e}");
+            }
+        }));
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+
+    #[test]
+    fn tcp_link_round_trips_an_epoch() {
+        let addr = spawn_loopback(1).unwrap();
+        let d = 2;
+        let mut link = connect(addr, 4, d).unwrap();
+        let mut scratch = link.acquire().unwrap();
+        for row in [[1.0f32, 0.0], [-1.0, 0.0], [0.0, 2.0], [0.0, -2.0]] {
+            scratch.push_row(&row);
+        }
+        assert!(link.send_block(scratch));
+        assert!(link.end_epoch());
+        let report = link.recv_report().unwrap();
+        let mut sorted = report.order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2, 3]);
+        let stats = link.stats();
+        assert_eq!(stats.stalls, 0);
+        assert!(stats.tx_bytes > 0 && stats.rx_bytes > 0);
+    }
+
+    #[test]
+    fn connect_rejects_a_peer_that_closes_immediately() {
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            drop(stream); // slam the door before the handshake
+        });
+        let err = connect(addr, 4, 2).expect_err("handshake must fail");
+        assert!(matches!(err, TransportError::Handshake(_)), "{err}");
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn connect_rejects_a_peer_speaking_garbage() {
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let (mut stream, _) = listener.accept().unwrap();
+            // Drain the hello, then answer with bytes that are not a
+            // valid frame.
+            let mut sink = [0u8; 64];
+            let _ = stream.read(&mut sink);
+            let _ = stream.write_all(b"definitely not a frame header");
+        });
+        let err = connect(addr, 4, 2).expect_err("handshake must fail");
+        assert!(matches!(err, TransportError::Handshake(_)), "{err}");
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn worker_rejects_wrong_first_frame_without_panicking() {
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            serve_connection(stream)
+        });
+        let mut client = TcpStream::connect(addr).unwrap();
+        let mut scratch = Vec::new();
+        // EpochEnd before any handshake: a protocol violation.
+        write_frame(&mut client, FrameKind::EpochEnd, &[], &mut scratch)
+            .unwrap();
+        let err = server.join().unwrap().expect_err("must reject");
+        assert!(matches!(err, TransportError::Handshake(_)), "{err}");
+    }
+
+    #[test]
+    fn worker_rejects_short_and_overfull_epochs_without_panicking() {
+        // Premature EpochEnd and over-budget Blocks are semantically
+        // invalid wire input: the worker must answer with a typed
+        // error, not hit the balancer's assertions.
+        for overfull in [false, true] {
+            let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+            let addr = listener.local_addr().unwrap();
+            let server = std::thread::spawn(move || {
+                let (stream, _) = listener.accept().unwrap();
+                serve_connection(stream)
+            });
+            let mut client = TcpStream::connect(addr).unwrap();
+            let mut payload = Vec::new();
+            let mut scratch = Vec::new();
+            encode_hello(Hello { local_n: 2, d: 1 }, &mut payload);
+            write_frame(
+                &mut client, FrameKind::Hello, &payload, &mut scratch,
+            )
+            .unwrap();
+            let mut buf = Vec::new();
+            assert_eq!(
+                read_frame(&mut client, &mut buf).unwrap(),
+                FrameKind::Ack
+            );
+            if overfull {
+                // 3 rows into a 2-unit shard.
+                encode_block(&[1.0, 2.0, 3.0], 1, &mut payload);
+                write_frame(
+                    &mut client,
+                    FrameKind::Block,
+                    &payload,
+                    &mut scratch,
+                )
+                .unwrap();
+            } else {
+                // Epoch boundary before any rows.
+                write_frame(
+                    &mut client, FrameKind::EpochEnd, &[], &mut scratch,
+                )
+                .unwrap();
+            }
+            let err = server
+                .join()
+                .expect("worker must not panic")
+                .expect_err("invalid epoch traffic must be rejected");
+            assert!(
+                matches!(err, TransportError::Wire(_)),
+                "overfull={overfull}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn mid_epoch_disconnect_is_reported_not_panicked() {
+        // A worker that dies after accepting blocks: the link's sends
+        // start failing (or the report read hits EOF), and the error is
+        // a typed TransportError either way — the coordinator layer
+        // turns it into an epoch-boundary panic.
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let (mut stream, _) = listener.accept().unwrap();
+            let mut buf = Vec::new();
+            // Handshake properly, then vanish mid-epoch.
+            assert_eq!(
+                read_frame(&mut stream, &mut buf).unwrap(),
+                FrameKind::Hello
+            );
+            let mut scratch = Vec::new();
+            write_frame(&mut stream, FrameKind::Ack, &[], &mut scratch)
+                .unwrap();
+            let _ = read_frame(&mut stream, &mut buf); // first block
+            drop(stream);
+        });
+        let mut link = connect(addr, 8, 2).unwrap();
+        let mut scratch = link.acquire().unwrap();
+        scratch.push_row(&[1.0, -1.0]);
+        let _ = link.send_block(scratch);
+        // Depending on timing the failure lands on a later send or on
+        // the report read; both must yield Err, never panic.
+        let _ = link.end_epoch();
+        let err = link.recv_report().expect_err("dead peer");
+        let msg = err.to_string();
+        assert!(!msg.is_empty());
+        h.join().unwrap();
+    }
+}

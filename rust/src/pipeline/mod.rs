@@ -132,6 +132,7 @@ impl PipelineTrainer {
             epochs,
             final_order,
             order_state_bytes: self.policy.state_bytes(),
+            transport: self.policy.transport_stats(),
         })
     }
 

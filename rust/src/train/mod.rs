@@ -57,6 +57,11 @@ pub struct TrainResult {
     pub final_order: Vec<usize>,
     /// Ordering-state bytes at the end (Table 1).
     pub order_state_bytes: usize,
+    /// Aggregated per-shard link counters for transported CD-GraB
+    /// policies (stalls, bytes moved to/from shard workers); `None` for
+    /// unsharded orderings. Lets sync / channel / tcp runs report
+    /// comparable backpressure numbers.
+    pub transport: Option<crate::ordering::transport::TransportStats>,
 }
 
 impl TrainResult {
@@ -146,6 +151,7 @@ impl Trainer {
             epochs,
             final_order,
             order_state_bytes: self.policy.state_bytes(),
+            transport: self.policy.transport_stats(),
         })
     }
 

@@ -1,10 +1,18 @@
-//! Serialization substrate: a minimal JSON value model (parser + writer)
-//! and a CSV writer.
+//! Serialization substrate: a minimal JSON value model (parser + writer),
+//! a CSV writer, and the binary wire-frame layer used by the CD-GraB
+//! socket transport.
 //!
 //! The JSON parser exists to read `artifacts/manifest.json` (written by
 //! `python/compile/aot.py`); the writers emit experiment results under
 //! `results/` and run metadata. Only the JSON subset json.dump produces is
 //! required (no comments, `\uXXXX` escapes supported).
+//!
+//! The wire layer ([`FrameKind`], [`encode_frame`], [`decode_frame`],
+//! [`read_frame`], [`write_frame`]) defines the length-prefixed,
+//! checksummed little-endian frames that carry shard messages between a
+//! CD-GraB coordinator and its workers; the message-level payload codecs
+//! live in `ordering::transport::codec`. See `rust/README.md` for the
+//! documented frame layout.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -405,6 +413,282 @@ impl CsvWriter {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Binary wire frames (CD-GraB socket transport)
+// ---------------------------------------------------------------------------
+
+/// Wire protocol version stamped into every frame header. Bumped on any
+/// incompatible layout change; peers reject mismatches with
+/// [`WireError::BadVersion`] instead of misparsing.
+pub const WIRE_VERSION: u8 = 1;
+
+/// Bytes of the fixed frame header preceding every payload.
+pub const FRAME_HEADER_LEN: usize = 12;
+
+/// Hard upper bound on a frame payload (256 MiB). A corrupted or hostile
+/// length prefix beyond this is rejected *before* any allocation, so a
+/// bad header cannot make the receiver try to reserve terabytes.
+pub const MAX_FRAME_PAYLOAD: usize = 1 << 28;
+
+/// Frame type discriminant (header byte 1).
+///
+/// The `Hello`/`Ack` pair is the per-connection handshake; `Block` and
+/// `EpochEnd` mirror the two coordinator→worker `ShardMsg` variants;
+/// `Report` carries the worker→coordinator epoch-order report.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum FrameKind {
+    /// Coordinator → worker: open a shard link (`local_n`, `d`).
+    Hello = 1,
+    /// Worker → coordinator: handshake accepted.
+    Ack = 2,
+    /// Coordinator → worker: one gathered `[rows × d]` gradient block.
+    Block = 3,
+    /// Coordinator → worker: epoch boundary — finalize and report.
+    EpochEnd = 4,
+    /// Worker → coordinator: the shard's next local epoch order.
+    Report = 5,
+}
+
+impl FrameKind {
+    /// Decode a frame-kind byte; unknown values are a [`WireError`].
+    pub fn from_byte(b: u8) -> Result<FrameKind, WireError> {
+        Ok(match b {
+            1 => FrameKind::Hello,
+            2 => FrameKind::Ack,
+            3 => FrameKind::Block,
+            4 => FrameKind::EpochEnd,
+            5 => FrameKind::Report,
+            other => return Err(WireError::BadKind(other)),
+        })
+    }
+}
+
+/// Typed decode failures of the wire layer. Every malformed input maps to
+/// one of these — decoding never panics and never partially applies.
+#[derive(Debug, PartialEq, Eq)]
+pub enum WireError {
+    /// Input ended before the declared header or payload length.
+    Truncated {
+        /// Bytes required to finish the header/payload being read.
+        needed: usize,
+        /// Bytes actually available.
+        got: usize,
+    },
+    /// Header version byte differs from [`WIRE_VERSION`].
+    BadVersion(u8),
+    /// Unknown frame-kind byte.
+    BadKind(u8),
+    /// Header/payload checksum mismatch (corruption in transit).
+    BadChecksum {
+        /// Checksum stored in the header.
+        stored: u32,
+        /// Checksum recomputed over the received bytes.
+        computed: u32,
+    },
+    /// Declared payload length exceeds [`MAX_FRAME_PAYLOAD`].
+    Oversized {
+        /// The declared payload length.
+        declared: usize,
+        /// The enforced maximum.
+        max: usize,
+    },
+    /// Payload contents inconsistent with the message-level schema
+    /// (wrong length for the declared row count, bad field value, …).
+    Malformed(String),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated { needed, got } => write!(
+                f,
+                "truncated frame: needed {needed} bytes, got {got}"
+            ),
+            WireError::BadVersion(v) => write!(
+                f,
+                "bad wire version {v} (expected {WIRE_VERSION})"
+            ),
+            WireError::BadKind(k) => write!(f, "unknown frame kind {k}"),
+            WireError::BadChecksum { stored, computed } => write!(
+                f,
+                "frame checksum mismatch: stored {stored:#010x}, \
+                 computed {computed:#010x}"
+            ),
+            WireError::Oversized { declared, max } => write!(
+                f,
+                "frame payload of {declared} bytes exceeds the \
+                 {max}-byte cap"
+            ),
+            WireError::Malformed(why) => {
+                write!(f, "malformed payload: {why}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// FNV-1a 32-bit hash — the frame checksum. Not cryptographic; it exists
+/// to catch truncation, bit flips, and framing desync, and it keeps the
+/// wire layer dependency-free. (Checkpoint files use the in-tree crc32
+/// in `train::checkpoint` for the same integrity job; FNV-1a is used
+/// here because the frame checksum must stream across header + payload
+/// without a table, at a few instructions per byte.)
+pub fn fnv1a32(bytes: &[u8]) -> u32 {
+    fnv1a32_continue(0x811c_9dc5, bytes)
+}
+
+/// Continue an FNV-1a stream from a previous hash state. The frame
+/// checksum spans header and payload without materializing their
+/// concatenation: `fnv1a32_continue(fnv1a32(header), payload)`.
+pub fn fnv1a32_continue(seed: u32, bytes: &[u8]) -> u32 {
+    let mut h = seed;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+/// Append one frame (header + `payload`) to `out`.
+///
+/// Layout (all little-endian):
+///
+/// ```text
+/// [0]      u8   version   = WIRE_VERSION
+/// [1]      u8   kind      (FrameKind)
+/// [2..4]   u16  reserved  = 0
+/// [4..8]   u32  payload_len
+/// [8..12]  u32  checksum  = fnv1a32(header[0..8] ++ payload)
+/// [12..]   payload
+/// ```
+pub fn encode_frame(kind: FrameKind, payload: &[u8], out: &mut Vec<u8>) {
+    assert!(
+        payload.len() <= MAX_FRAME_PAYLOAD,
+        "frame payload over protocol cap"
+    );
+    let start = out.len();
+    out.push(WIRE_VERSION);
+    out.push(kind as u8);
+    out.extend_from_slice(&0u16.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    let sum =
+        fnv1a32_continue(fnv1a32(&out[start..start + 8]), payload);
+    out.extend_from_slice(&sum.to_le_bytes());
+    out.extend_from_slice(payload);
+}
+
+/// Decode one frame from the front of `bytes`. Returns the kind, the
+/// payload slice, and the total bytes consumed. Purely positional — the
+/// caller can parse back-to-back frames from one buffer.
+pub fn decode_frame(
+    bytes: &[u8],
+) -> Result<(FrameKind, &[u8], usize), WireError> {
+    if bytes.len() < FRAME_HEADER_LEN {
+        return Err(WireError::Truncated {
+            needed: FRAME_HEADER_LEN,
+            got: bytes.len(),
+        });
+    }
+    if bytes[0] != WIRE_VERSION {
+        return Err(WireError::BadVersion(bytes[0]));
+    }
+    let kind = FrameKind::from_byte(bytes[1])?;
+    let len =
+        u32::from_le_bytes(bytes[4..8].try_into().unwrap()) as usize;
+    if len > MAX_FRAME_PAYLOAD {
+        return Err(WireError::Oversized {
+            declared: len,
+            max: MAX_FRAME_PAYLOAD,
+        });
+    }
+    let total = FRAME_HEADER_LEN + len;
+    if bytes.len() < total {
+        return Err(WireError::Truncated {
+            needed: total,
+            got: bytes.len(),
+        });
+    }
+    let stored = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+    let payload = &bytes[FRAME_HEADER_LEN..total];
+    let computed = fnv1a32_continue(fnv1a32(&bytes[0..8]), payload);
+    if stored != computed {
+        return Err(WireError::BadChecksum { stored, computed });
+    }
+    Ok((kind, payload, total))
+}
+
+/// Write one frame to an [`std::io::Write`] (single `write_all`, so a
+/// frame is never interleaved with another writer on the same stream).
+pub fn write_frame<W: std::io::Write>(
+    w: &mut W,
+    kind: FrameKind,
+    payload: &[u8],
+    scratch: &mut Vec<u8>,
+) -> std::io::Result<()> {
+    scratch.clear();
+    encode_frame(kind, payload, scratch);
+    w.write_all(scratch)
+}
+
+/// Errors produced by [`read_frame`]: transport-level I/O failures and
+/// wire-level decode failures, kept distinct so callers can tell a dead
+/// peer from a corrupt one.
+#[derive(Debug)]
+pub enum FrameReadError {
+    /// The underlying reader failed (includes clean EOF mid-frame).
+    Io(std::io::Error),
+    /// The bytes arrived but do not form a valid frame.
+    Wire(WireError),
+}
+
+impl std::fmt::Display for FrameReadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameReadError::Io(e) => write!(f, "frame read i/o: {e}"),
+            FrameReadError::Wire(e) => write!(f, "frame decode: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameReadError {}
+
+/// Read exactly one frame from a blocking reader into `buf` (reused
+/// across calls; grows to the largest frame seen). Returns the kind —
+/// the payload is `buf[FRAME_HEADER_LEN..]`.
+///
+/// The header is validated *before* the payload is read, so an oversized
+/// or wrong-version header fails fast without consuming the declared
+/// payload length.
+pub fn read_frame<R: std::io::Read>(
+    r: &mut R,
+    buf: &mut Vec<u8>,
+) -> Result<FrameKind, FrameReadError> {
+    buf.clear();
+    buf.resize(FRAME_HEADER_LEN, 0);
+    r.read_exact(buf).map_err(FrameReadError::Io)?;
+    if buf[0] != WIRE_VERSION {
+        return Err(FrameReadError::Wire(WireError::BadVersion(buf[0])));
+    }
+    let kind =
+        FrameKind::from_byte(buf[1]).map_err(FrameReadError::Wire)?;
+    let len = u32::from_le_bytes(buf[4..8].try_into().unwrap()) as usize;
+    if len > MAX_FRAME_PAYLOAD {
+        return Err(FrameReadError::Wire(WireError::Oversized {
+            declared: len,
+            max: MAX_FRAME_PAYLOAD,
+        }));
+    }
+    buf.resize(FRAME_HEADER_LEN + len, 0);
+    r.read_exact(&mut buf[FRAME_HEADER_LEN..])
+        .map_err(FrameReadError::Io)?;
+    match decode_frame(buf) {
+        Ok((k, _, _)) => Ok(k),
+        Err(e) => Err(FrameReadError::Wire(e)),
+    }
+}
+
 /// Format a float for CSV/tables with sensible precision.
 pub fn fmt_f(x: f64) -> String {
     if x == 0.0 {
@@ -466,6 +750,94 @@ mod tests {
     fn rejects_trailing_garbage() {
         assert!(Json::parse("{} x").is_err());
         assert!(Json::parse("[1,]").is_err());
+    }
+
+    #[test]
+    fn frame_roundtrips_and_reports_consumed_length() {
+        let payload = [1u8, 2, 3, 250, 0, 9];
+        let mut out = Vec::new();
+        encode_frame(FrameKind::Block, &payload, &mut out);
+        encode_frame(FrameKind::EpochEnd, &[], &mut out);
+        let (kind, body, used) = decode_frame(&out).unwrap();
+        assert_eq!(kind, FrameKind::Block);
+        assert_eq!(body, &payload);
+        assert_eq!(used, FRAME_HEADER_LEN + payload.len());
+        let (kind2, body2, used2) = decode_frame(&out[used..]).unwrap();
+        assert_eq!(kind2, FrameKind::EpochEnd);
+        assert!(body2.is_empty());
+        assert_eq!(used2, FRAME_HEADER_LEN);
+    }
+
+    #[test]
+    fn frame_decode_rejects_each_corruption_mode() {
+        let mut out = Vec::new();
+        encode_frame(FrameKind::Report, &[7u8; 16], &mut out);
+
+        // Truncated: any prefix shorter than the full frame.
+        for cut in [0, 3, FRAME_HEADER_LEN, out.len() - 1] {
+            assert!(matches!(
+                decode_frame(&out[..cut]),
+                Err(WireError::Truncated { .. })
+            ));
+        }
+        // Bad version byte.
+        let mut bad = out.clone();
+        bad[0] = 0x7f;
+        assert_eq!(
+            decode_frame(&bad).unwrap_err(),
+            WireError::BadVersion(0x7f)
+        );
+        // Unknown kind.
+        let mut bad = out.clone();
+        bad[1] = 99;
+        assert_eq!(decode_frame(&bad).unwrap_err(), WireError::BadKind(99));
+        // Flipped payload bit -> checksum mismatch.
+        let mut bad = out.clone();
+        *bad.last_mut().unwrap() ^= 1;
+        assert!(matches!(
+            decode_frame(&bad),
+            Err(WireError::BadChecksum { .. })
+        ));
+        // Oversized length prefix rejected before any payload read.
+        let mut bad = out.clone();
+        bad[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(
+            decode_frame(&bad),
+            Err(WireError::Oversized { .. })
+        ));
+    }
+
+    #[test]
+    fn read_frame_round_trips_through_io() {
+        let mut wire = Vec::new();
+        let mut scratch = Vec::new();
+        write_frame(&mut wire, FrameKind::Hello, &[9, 9], &mut scratch)
+            .unwrap();
+        write_frame(&mut wire, FrameKind::Ack, &[], &mut scratch).unwrap();
+        let mut cursor = std::io::Cursor::new(wire);
+        let mut buf = Vec::new();
+        assert_eq!(
+            read_frame(&mut cursor, &mut buf).unwrap(),
+            FrameKind::Hello
+        );
+        assert_eq!(&buf[FRAME_HEADER_LEN..], &[9, 9]);
+        assert_eq!(
+            read_frame(&mut cursor, &mut buf).unwrap(),
+            FrameKind::Ack
+        );
+        // Stream exhausted: clean EOF surfaces as an Io error.
+        assert!(matches!(
+            read_frame(&mut cursor, &mut buf),
+            Err(FrameReadError::Io(_))
+        ));
+    }
+
+    #[test]
+    fn fnv1a32_matches_reference_vectors() {
+        // Public FNV-1a test vectors.
+        assert_eq!(fnv1a32(b""), 0x811c9dc5);
+        assert_eq!(fnv1a32(b"a"), 0xe40c292c);
+        assert_eq!(fnv1a32(b"foobar"), 0xbf9cf968);
     }
 
     #[test]

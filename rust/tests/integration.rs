@@ -255,6 +255,43 @@ fn async_sharded_trainer_matches_sync_sharded() {
 }
 
 #[test]
+fn tcp_sharded_trainer_matches_sync_sharded() {
+    // The socket transport through the full trainer data path: shard
+    // balancers behind loopback-TCP framing must reproduce the
+    // synchronous sharded run bit for bit (same losses, same final
+    // order) — determinism contract 5 at trainer level.
+    let Some(rt) = runtime() else { return };
+    for shards in [1usize, 4] {
+        let mut cfg =
+            tiny_cfg(Task::Mnist, OrderingKind::ShardedPairBalance);
+        cfg.num_shards = shards;
+        let mut sync = Trainer::new(cfg.clone(), &rt, None).unwrap();
+        let sr = sync.run().unwrap();
+
+        cfg.shard_transport = grab::config::TransportKind::Tcp;
+        let mut tcp = Trainer::new(cfg, &rt, None).unwrap();
+        let tr = tcp.run().unwrap();
+        assert_eq!(sr.final_order, tr.final_order, "shards={shards}");
+        for (a, b) in sr.epochs.iter().zip(&tr.epochs) {
+            assert!(
+                (a.train_loss - b.train_loss).abs() < 1e-9,
+                "shards={shards} epoch {}: {} vs {}",
+                a.epoch,
+                a.train_loss,
+                b.train_loss
+            );
+        }
+        // The transported run must report link traffic; the sync run
+        // reports comparable all-zero counters.
+        let stats = tr.transport.expect("tcp run reports link stats");
+        assert_eq!(stats.transport, "tcp");
+        assert!(stats.total().tx_bytes > 0);
+        let sync_stats = sr.transport.expect("sync run reports stats");
+        assert_eq!(sync_stats.total().tx_bytes, 0);
+    }
+}
+
+#[test]
 fn grab_observe_via_kernel_matches_native() {
     // The Pallas/HLO balance artifact and the native hot path must agree
     // sign-for-sign on a realistic gradient stream.

@@ -1,0 +1,259 @@
+//! Transport-equivalence test layer (determinism contract 5,
+//! docs/determinism.md): every order-exchange transport — synchronous
+//! inline dispatch, in-process channel workers, loopback TCP sockets —
+//! must produce **bit-identical** CD-GraB epoch orders for the same
+//! gradient stream, and transport failures must surface as typed
+//! boundary errors, never hangs or partial coordinator state.
+//!
+//! These tests need no artifacts (they run on synthetic gradient
+//! streams) but do open real loopback sockets; CI runs this target
+//! under a timeout guard so a hung socket fails fast.
+
+use std::io::Write;
+use std::net::TcpListener;
+
+use grab::ordering::transport::codec;
+use grab::ordering::{
+    stream_static_epoch, OrderPolicy, PairBalance, ShardedOrder,
+};
+use grab::util::prop::{self, assert_permutation, gen};
+use grab::util::ser::{
+    encode_frame, read_frame, write_frame, FrameKind, FRAME_HEADER_LEN,
+};
+
+fn feed_epoch(p: &mut dyn OrderPolicy, vs: &[Vec<f32>], block: usize) {
+    let mut flat = Vec::new();
+    stream_static_epoch(p, vs, &mut flat, block);
+}
+
+#[test]
+fn loopback_tcp_matches_channel_and_sync_orders() {
+    // The tentpole property: for W in {1, 2, 4} over random
+    // n/d/block/depth, loopback-TCP ≡ async-mpsc ≡ sync epoch orders
+    // across multiple epochs. At W = 1 the chain extends through the
+    // existing gate to unsharded PairBalance, so socket CD-GraB is
+    // pinned all the way down to the single-threaded reference.
+    prop::forall("tcp == channel == sync sharded orders", 8, |rng| {
+        let n = 1 + rng.gen_range(60) as usize;
+        let d = 1 + rng.gen_range(6) as usize;
+        let b = 1 + rng.gen_range(9) as usize;
+        let depth = 1 + rng.gen_range(4) as usize;
+        let vs = gen::vec_set(rng, n, d);
+        for w in [1usize, 2, 4] {
+            let mut strided = ShardedOrder::new(n, d, w);
+            let mut channel = ShardedOrder::new_async(n, d, w, depth);
+            let mut socket = ShardedOrder::new_tcp_loopback(n, d, w)
+                .map_err(|e| format!("loopback spawn: {e}"))?;
+            let mut pair = PairBalance::new(n, d);
+            for epoch in 0..3 {
+                feed_epoch(&mut strided, &vs, b);
+                feed_epoch(&mut channel, &vs, b);
+                feed_epoch(&mut socket, &vs, b);
+                feed_epoch(&mut pair, &vs, b);
+                let want = strided.epoch_order(0).to_vec();
+                assert_permutation(&want)?;
+                if channel.epoch_order(0) != want.as_slice() {
+                    return Err(format!(
+                        "channel != sync at w={w} epoch={epoch} \
+                         n={n} d={d} b={b} depth={depth}"
+                    ));
+                }
+                if socket.epoch_order(0) != want.as_slice() {
+                    return Err(format!(
+                        "tcp != sync at w={w} epoch={epoch} \
+                         n={n} d={d} b={b}"
+                    ));
+                }
+                if w == 1 && pair.epoch_order(0) != want.as_slice() {
+                    return Err(format!(
+                        "w=1 sharded != PairBalance at epoch={epoch} \
+                         n={n} d={d} b={b}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn tcp_transport_handles_more_shards_than_units() {
+    let d = 3;
+    let mut rng = grab::util::rng::Rng::new(2);
+    let vs = gen::vec_set(&mut rng, 3, d);
+    let mut p = ShardedOrder::new_tcp_loopback(3, d, 8).unwrap();
+    for _ in 0..2 {
+        assert_permutation(p.epoch_order(0)).unwrap();
+        feed_epoch(&mut p, &vs, 2);
+    }
+    assert_permutation(p.epoch_order(0)).unwrap();
+}
+
+#[test]
+fn tcp_coordinator_reports_wire_traffic() {
+    let d = 4;
+    let n = 16;
+    let mut rng = grab::util::rng::Rng::new(5);
+    let vs = gen::vec_set(&mut rng, n, d);
+    let mut p = ShardedOrder::new_tcp_loopback(n, d, 2).unwrap();
+    feed_epoch(&mut p, &vs, 4);
+    let stats = p.transport_stats();
+    assert_eq!(stats.transport, "tcp");
+    assert_eq!(stats.per_shard.len(), 2);
+    let total = stats.total();
+    assert!(total.tx_bytes > 0, "no bytes shipped to workers");
+    assert!(total.rx_bytes > 0, "no report bytes received");
+    assert_eq!(total.stalls, 0, "tcp links do not count queue stalls");
+}
+
+#[test]
+fn peer_disconnect_mid_epoch_surfaces_at_epoch_boundary() {
+    // A worker that vanishes mid-epoch must not hang the coordinator or
+    // kill it mid-stream: the failure surfaces at the epoch boundary
+    // (the drain barrier), exactly like a worker panic does on the
+    // channel transport.
+    let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        let (mut stream, _) = listener.accept().unwrap();
+        let mut buf = Vec::new();
+        // Handshake properly, then die before the first epoch ends.
+        assert_eq!(
+            read_frame(&mut stream, &mut buf).unwrap(),
+            FrameKind::Hello
+        );
+        let mut scratch = Vec::new();
+        write_frame(&mut stream, FrameKind::Ack, &[], &mut scratch)
+            .unwrap();
+        drop(stream);
+    });
+    let n = 8;
+    let d = 2;
+    let mut rng = grab::util::rng::Rng::new(7);
+    let vs = gen::vec_set(&mut rng, n, d);
+    let mut p = ShardedOrder::new_tcp_connect(
+        &addr.to_string(), n, d, 1,
+    )
+    .unwrap();
+    server.join().unwrap();
+    let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+        || feed_epoch(&mut p, &vs, 4), // ends with epoch_end
+    ))
+    .expect_err("dead peer must surface at the boundary");
+    let msg = err
+        .downcast_ref::<String>()
+        .cloned()
+        .unwrap_or_else(|| "<non-string payload>".to_string());
+    assert!(
+        msg.contains("failed mid-epoch"),
+        "unexpected boundary payload: {msg}"
+    );
+}
+
+#[test]
+fn corrupt_report_fails_at_boundary_with_a_typed_wire_error() {
+    // A worker that answers the epoch boundary with a corrupted frame:
+    // the coordinator must reject it via the checksum (typed WireError,
+    // no partial order state) and raise at the boundary.
+    let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+    let addr = listener.local_addr().unwrap();
+    let n = 6;
+    let d = 2;
+    let server = std::thread::spawn(move || {
+        let (mut stream, _) = listener.accept().unwrap();
+        let mut buf = Vec::new();
+        assert_eq!(
+            read_frame(&mut stream, &mut buf).unwrap(),
+            FrameKind::Hello
+        );
+        let mut scratch = Vec::new();
+        write_frame(&mut stream, FrameKind::Ack, &[], &mut scratch)
+            .unwrap();
+        // Consume the epoch's traffic up to the boundary signal.
+        loop {
+            match read_frame(&mut stream, &mut buf) {
+                Ok(FrameKind::EpochEnd) => break,
+                Ok(_) => continue,
+                Err(e) => panic!("server read: {e}"),
+            }
+        }
+        // Reply with a report whose payload is flipped post-checksum.
+        let order: Vec<usize> = (0..n).collect();
+        let mut payload = Vec::new();
+        codec::encode_report(&order, 64, &mut payload);
+        let mut frame = Vec::new();
+        encode_frame(FrameKind::Report, &payload, &mut frame);
+        let last = frame.len() - 1;
+        frame[last] ^= 0x40; // corrupt one payload byte
+        stream.write_all(&frame).unwrap();
+    });
+    let mut rng = grab::util::rng::Rng::new(9);
+    let vs = gen::vec_set(&mut rng, n, d);
+    let mut p = ShardedOrder::new_tcp_connect(
+        &addr.to_string(), n, d, 1,
+    )
+    .unwrap();
+    let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+        || feed_epoch(&mut p, &vs, 3),
+    ))
+    .expect_err("corrupt report must fail the boundary");
+    server.join().unwrap();
+    let msg = err
+        .downcast_ref::<String>()
+        .cloned()
+        .unwrap_or_else(|| "<non-string payload>".to_string());
+    assert!(
+        msg.contains("checksum") || msg.contains("wire error"),
+        "boundary error should carry the wire diagnosis: {msg}"
+    );
+}
+
+#[test]
+fn handshake_failures_are_typed_errors_not_hangs() {
+    // A peer that slams the door: construction fails with a typed
+    // handshake error and leaves nothing half-open.
+    let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        drop(stream);
+    });
+    let err = ShardedOrder::new_tcp_connect(&addr.to_string(), 8, 2, 1)
+        .expect_err("handshake must fail");
+    assert!(
+        err.to_string().contains("handshake"),
+        "expected a handshake error, got: {err:#}"
+    );
+    server.join().unwrap();
+}
+
+#[test]
+fn oversized_frame_header_from_peer_is_rejected() {
+    // A worker answering with a length prefix beyond the protocol cap:
+    // the coordinator must reject the header before trying to read (or
+    // allocate) the declared payload.
+    let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        let (mut stream, _) = listener.accept().unwrap();
+        let mut buf = Vec::new();
+        assert_eq!(
+            read_frame(&mut stream, &mut buf).unwrap(),
+            FrameKind::Hello
+        );
+        // Hand-build an "ack" whose header declares ~4 GiB of payload.
+        let mut frame = Vec::new();
+        encode_frame(FrameKind::Ack, &[], &mut frame);
+        frame[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+        stream.write_all(&frame).unwrap();
+        assert_eq!(frame.len(), FRAME_HEADER_LEN);
+    });
+    let err = ShardedOrder::new_tcp_connect(&addr.to_string(), 4, 2, 1)
+        .expect_err("oversized header must be rejected");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("handshake"),
+        "expected handshake-stage rejection, got: {msg}"
+    );
+    server.join().unwrap();
+}

@@ -12,6 +12,9 @@
 //!     coordinator vs the loopback-TCP socket coordinator (per-epoch
 //!     wall clock incl. the epoch-boundary drain, plus queue
 //!     backpressure counts and wire bytes);
+//!   * the same dispatch lineup under a skewed 1:1:4 weighted topology
+//!     (one shard owns 2/3 of the units) — what imbalance costs each
+//!     backend, the elastic layer's motivating measurement;
 //!   * the wire codec: block-frame encode/decode throughput vs the raw
 //!     gather cost it rides on (what serialization adds per row before
 //!     the socket is even touched).
@@ -300,6 +303,72 @@ fn sharded_dispatch_section() {
     );
 }
 
+fn skewed_dispatch_section() {
+    // The elastic-topology ablation: the same coordinator under a
+    // 1:1:4 weight skew (one shard owns 2/3 of the units). Strided
+    // pays per-row dispatch regardless; gathered batches the heavy
+    // shard's rows; async hides the heavy shard's balancing behind the
+    // queue until the boundary drain; tcp adds framing on top. Read
+    // against sharded_dispatch_section for the imbalance premium.
+    println!(
+        "\n== skewed shard dispatch (weights 1:1:4): strided vs \
+         gathered vs async vs tcp =="
+    );
+    let n = 2048;
+    let d = 256;
+    let block = 64;
+    let depth = 4;
+    let weights: [u64; 3] = [1, 1, 4];
+    let mut rng = Rng::new(27);
+    let flat: Vec<f32> =
+        (0..n * d).map(|_| rng.gauss() as f32).collect();
+
+    let mut strided = ShardedOrder::new_weighted(n, d, &weights);
+    let st = Bench::new(format!("skewed_observe/strided/114/d{d}"))
+        .with_iters(5, 60)
+        .run(|| observe_epoch_blocks(&mut strided, &flat, n, d, block));
+
+    let mut gathered =
+        ShardedOrder::new_gathered_weighted(n, d, &weights);
+    let ga = Bench::new(format!("skewed_observe/gathered/114/d{d}"))
+        .with_iters(5, 60)
+        .run(|| observe_epoch_blocks(&mut gathered, &flat, n, d, block));
+
+    let mut asynch =
+        ShardedOrder::new_async_weighted(n, d, &weights, depth);
+    let asy = Bench::new(format!(
+        "skewed_observe/async/114/d{d}/q{depth}"
+    ))
+    .with_iters(5, 60)
+    .run(|| observe_epoch_blocks(&mut asynch, &flat, n, d, block));
+
+    let mut socket = ShardedOrder::new_tcp_loopback_weighted(
+        n, d, &weights,
+    )
+    .expect("loopback workers");
+    let tcp = Bench::new(format!("skewed_observe/tcp/114/d{d}"))
+        .with_iters(5, 60)
+        .run(|| observe_epoch_blocks(&mut socket, &flat, n, d, block));
+
+    println!(
+        "\nskew 1:1:4 — gather vs strided: {:.2}x, async vs strided: \
+         {:.2}x ({} stalls: the heavy shard's queue backpressure), \
+         tcp vs async: {:.2}x",
+        st.summary.mean / ga.summary.mean,
+        st.summary.mean / asy.summary.mean,
+        asynch.queue_stalls(),
+        asy.summary.mean / tcp.summary.mean,
+    );
+    println!(
+        "strided {:.1} ns/example, gathered {:.1} ns/example, \
+         async {:.1} ns/example, tcp {:.1} ns/example under imbalance",
+        st.summary.mean / n as f64 * 1e9,
+        ga.summary.mean / n as f64 * 1e9,
+        asy.summary.mean / n as f64 * 1e9,
+        tcp.summary.mean / n as f64 * 1e9,
+    );
+}
+
 fn wire_codec_section() {
     println!("\n== wire codec: block frame encode/decode throughput ==");
     let d = 256;
@@ -361,5 +430,6 @@ fn main() {
     block_vs_per_example_section();
     pair_vs_grab_herding_section();
     sharded_dispatch_section();
+    skewed_dispatch_section();
     wire_codec_section();
 }

@@ -246,6 +246,25 @@ pub struct TrainConfig {
     /// Shard count for [`OrderingKind::ShardedPairBalance`] (CD-GraB
     /// workers); ignored by other orderings.
     pub num_shards: usize,
+    /// Pinned integer shard weights for a *weighted* (uneven) CD-GraB
+    /// topology (`--weights 1,1,4`, TOML `weights = "1,1,4"`): shard
+    /// sizes are apportioned proportionally
+    /// (`ordering::topology::split_units_weighted`). Must have
+    /// `num_shards` entries; `None` = equal weights. Replaying a
+    /// recorded elastic run pins its logged weights here.
+    pub shard_weights: Option<Vec<u64>>,
+    /// Elastic shard topology (`--elastic`, TOML `elastic = true`): at
+    /// each epoch boundary the coordinator re-derives weights from
+    /// measured per-link cost (EWMA, quantized, with hysteresis) and
+    /// re-plans — re-split + fresh links (a fresh TCP `Hello` per
+    /// shard) — when the skew is sustained or a worker link was lost
+    /// mid-epoch. The per-epoch topology is recorded in
+    /// `TrainResult::topology` (and the `exp cdgrab` CSV) so the run
+    /// replays from its logged weights; frozen weights are
+    /// bit-identical to the static topology (docs/determinism.md
+    /// contract 6). Needs a transported backend (`--async-shards` or
+    /// `--transport tcp`).
+    pub elastic: bool,
     /// Run each CD-GraB shard balancer on its own worker thread behind a
     /// bounded block queue (`--async-shards`); the trainer's
     /// `observe_block` becomes gather + enqueue and the epoch-boundary
@@ -308,6 +327,8 @@ impl Default for TrainConfig {
             walk_c: 0.0,
             group_size: 1,
             num_shards: 1,
+            shard_weights: None,
+            elastic: false,
             async_shards: false,
             shard_queue_depth: 4,
             shard_transport: TransportKind::Channel,
@@ -383,6 +404,15 @@ impl TrainConfig {
         self.walk_c = args.f64_or("walk-c", self.walk_c)?;
         self.group_size = args.usize_or("group-size", self.group_size)?;
         self.num_shards = args.usize_or("shards", self.num_shards)?;
+        if let Some(w) = args.opt_str("weights") {
+            let weights = crate::ordering::topology::parse_weights(&w)
+                .map_err(|e| anyhow::anyhow!("--weights: {e}"))?;
+            // `--weights` alone fully determines the shard count.
+            if args.opt_str("shards").is_none() {
+                self.num_shards = weights.len();
+            }
+            self.shard_weights = Some(weights);
+        }
         // `--async-shards <token>` would silently bind the next token as
         // this option's value and leave async mode off; reject that
         // instead of letting the flag be swallowed.
@@ -394,6 +424,15 @@ impl TrainConfig {
         }
         if args.flag("async-shards") {
             self.async_shards = true;
+        }
+        if args.opt_str("elastic").is_some() {
+            bail!(
+                "--elastic is a boolean flag and takes no value \
+                 (put it last or before another --flag)"
+            );
+        }
+        if args.flag("elastic") {
+            self.elastic = true;
         }
         self.shard_queue_depth =
             args.usize_or("queue-depth", self.shard_queue_depth)?;
@@ -450,6 +489,15 @@ impl TrainConfig {
             bail!("num_shards must be >= 1, got {shards}");
         }
         c.num_shards = shards as usize;
+        if let Some(w) = doc.get_str("weights") {
+            let weights = crate::ordering::topology::parse_weights(&w)
+                .map_err(|e| anyhow::anyhow!("weights: {e}"))?;
+            if doc.get_int("num_shards").is_none() {
+                c.num_shards = weights.len();
+            }
+            c.shard_weights = Some(weights);
+        }
+        c.elastic = doc.get_bool("elastic").unwrap_or(c.elastic);
         c.async_shards =
             doc.get_bool("async_shards").unwrap_or(c.async_shards);
         let depth = doc
@@ -514,6 +562,28 @@ impl TrainConfig {
                 "--connect requires --transport tcp \
                  (got transport {})",
                 self.shard_transport.name()
+            );
+        }
+        if let Some(weights) = &self.shard_weights {
+            if weights.len() != self.num_shards {
+                bail!(
+                    "--weights has {} entries but --shards is {}",
+                    weights.len(),
+                    self.num_shards
+                );
+            }
+            if weights.iter().all(|&w| w == 0) {
+                bail!("--weights must not be all zero");
+            }
+        }
+        if self.elastic
+            && self.ordering == OrderingKind::ShardedPairBalance
+            && self.shard_transport != TransportKind::Tcp
+            && !self.async_shards
+        {
+            bail!(
+                "--elastic needs a transported CD-GraB backend: add \
+                 --async-shards or --transport tcp"
             );
         }
         if self.ordering == OrderingKind::GreedyOrdering {
@@ -589,6 +659,59 @@ mod tests {
         let mut bad = TrainConfig::default();
         bad.shard_queue_depth = 0;
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn weighted_elastic_config_plumbs_through() {
+        let args = Args::parse([
+            "--ordering", "cd-grab", "--weights", "1,1,4",
+            "--transport", "tcp", "--elastic",
+        ])
+        .unwrap();
+        let mut c = TrainConfig::default();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.shard_weights.as_deref(), Some(&[1u64, 1, 4][..]));
+        assert_eq!(c.num_shards, 3, "--weights sets the shard count");
+        assert!(c.elastic);
+
+        // --weights disagreeing with an explicit --shards is an error.
+        let args = Args::parse([
+            "--ordering", "cd-grab", "--shards", "2",
+            "--weights", "1,1,4",
+        ])
+        .unwrap();
+        let mut c = TrainConfig::default();
+        assert!(c.apply_args(&args).is_err());
+
+        // --elastic without a transported backend is an error…
+        let args = Args::parse([
+            "--ordering", "cd-grab", "--shards", "2", "--elastic",
+        ])
+        .unwrap();
+        let mut c = TrainConfig::default();
+        assert!(c.apply_args(&args).is_err());
+        // …but channel workers (--async-shards) qualify.
+        let args = Args::parse([
+            "--ordering", "cd-grab", "--shards", "2",
+            "--async-shards", "--elastic",
+        ])
+        .unwrap();
+        let mut c = TrainConfig::default();
+        c.apply_args(&args).unwrap();
+        assert!(c.elastic && c.async_shards);
+
+        // TOML forms.
+        let doc = TomlDoc::parse(
+            "ordering = \"cd-grab\"\nweights = \"2:1\"\n\
+             elastic = true\ntransport = \"tcp\"",
+        )
+        .unwrap();
+        let c = TrainConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.shard_weights.as_deref(), Some(&[2u64, 1][..]));
+        assert_eq!(c.num_shards, 2);
+        assert!(c.elastic);
+        let doc = TomlDoc::parse("weights = \"0,0\"").unwrap();
+        assert!(TrainConfig::from_toml(&doc).is_err());
     }
 
     #[test]

@@ -17,10 +17,18 @@
 //! `wire_bytes` columns are cumulative link counters at the end of that
 //! epoch (0 for un-transported policies).
 //!
+//! Beyond the equal-weight sweep, the run covers the topology layer:
+//! a skewed static topology (weights 1:1:4) through all three
+//! dispatch paths — their herding columns must also be identical
+//! (weighted contract-6 gate) — and a measured-elastic channel
+//! coordinator whose per-epoch plan lands in the new `shards` /
+//! `weights` CSV columns, the exact record needed to replay an elastic
+//! run as a `--weights`-pinned static one.
+//!
 //! Distributed modes: `--listen ADDR` turns this process into a blocking
-//! shard worker server (no sweep); `--connect ADDR` makes the sweep's
-//! TCP policies dial that server instead of spawning in-process loopback
-//! workers.
+//! shard worker server (no sweep); `--connect ADDR[,ADDR…]` makes the
+//! sweep's TCP policies dial those server(s) instead of spawning
+//! in-process loopback workers.
 
 use anyhow::Result;
 
@@ -29,6 +37,9 @@ use crate::ordering::{GraBOrder, OrderPolicy, PairBalance, ShardedOrder};
 use crate::util::prop::gen;
 use crate::util::rng::Rng;
 use crate::util::ser::{fmt_f, CsvWriter};
+
+/// The skewed static topology demonstrated (and gated) by the sweep.
+const SKEW_WEIGHTS: [u64; 3] = [1, 1, 4];
 
 /// Parameters of the CD-GraB herding experiment.
 pub struct CdGrabConfig {
@@ -44,8 +55,9 @@ pub struct CdGrabConfig {
     pub shard_counts: Vec<usize>,
     /// RNG seed.
     pub seed: u64,
-    /// Remote worker server for the TCP policies (`--connect`); `None`
-    /// spawns in-process loopback workers.
+    /// Remote worker server(s) for the TCP policies (`--connect`,
+    /// comma-separated for a pool); `None` spawns in-process loopback
+    /// workers.
     pub connect: Option<String>,
 }
 
@@ -104,8 +116,12 @@ pub fn run(cfg: &CdGrabConfig, out_dir: &std::path::Path) -> Result<()> {
     let mut csv = CsvWriter::create(
         &out_dir.join("cdgrab_herding.csv"),
         &["policy", "epoch", "herd_inf", "order_secs", "stalls",
-          "wire_bytes"],
+          "wire_bytes", "shards", "weights"],
     )?;
+    let addrs: Option<Vec<String>> = cfg
+        .connect
+        .as_ref()
+        .map(|s| crate::ordering::transport::parse_connect_addrs(s));
 
     // Random reshuffling baseline: mean herding bound over 5 fresh
     // permutations, reported once per epoch index for plotting.
@@ -123,6 +139,8 @@ pub fn run(cfg: &CdGrabConfig, out_dir: &std::path::Path) -> Result<()> {
             fmt_f(0.0),
             "0".to_string(),
             "0".to_string(),
+            String::new(),
+            String::new(),
         ])?;
     }
 
@@ -149,16 +167,57 @@ pub fn run(cfg: &CdGrabConfig, out_dir: &std::path::Path) -> Result<()> {
             format!("cd-grab-w{w}-async"),
             Box::new(ShardedOrder::new_async(cfg.n, cfg.d, w, 4)),
         ));
-        let tcp: Box<dyn OrderPolicy> = match &cfg.connect {
-            Some(addr) => Box::new(ShardedOrder::new_tcp_connect(
-                addr, cfg.n, cfg.d, w,
-            )?),
+        let tcp: Box<dyn OrderPolicy> = match &addrs {
+            Some(addrs) => {
+                Box::new(ShardedOrder::new_tcp_connect_weighted(
+                    addrs,
+                    cfg.n,
+                    cfg.d,
+                    &vec![1; w],
+                )?)
+            }
             None => {
                 Box::new(ShardedOrder::new_tcp_loopback(cfg.n, cfg.d, w)?)
             }
         };
         policies.push((format!("cd-grab-w{w}-tcp"), tcp));
     }
+    // Weighted topology trio (skew 1:1:4): the three dispatch paths
+    // must agree on an uneven split too (weighted contract-6 gate).
+    policies.push((
+        "cd-grab-skew114".to_string(),
+        Box::new(ShardedOrder::new_weighted(cfg.n, cfg.d, &SKEW_WEIGHTS)),
+    ));
+    policies.push((
+        "cd-grab-skew114-async".to_string(),
+        Box::new(ShardedOrder::new_async_weighted(
+            cfg.n,
+            cfg.d,
+            &SKEW_WEIGHTS,
+            4,
+        )),
+    ));
+    let skew_tcp: Box<dyn OrderPolicy> = match &addrs {
+        Some(addrs) => Box::new(ShardedOrder::new_tcp_connect_weighted(
+            addrs,
+            cfg.n,
+            cfg.d,
+            &SKEW_WEIGHTS,
+        )?),
+        None => Box::new(ShardedOrder::new_tcp_loopback_weighted(
+            cfg.n,
+            cfg.d,
+            &SKEW_WEIGHTS,
+        )?),
+    };
+    policies.push(("cd-grab-skew114-tcp".to_string(), skew_tcp));
+    // A measured-elastic coordinator: its per-epoch plan (usually
+    // frozen at equal weights on a healthy machine) lands in the
+    // shards/weights columns — the replay record for elastic runs.
+    policies.push((
+        "cd-grab-w2-elastic".to_string(),
+        Box::new(ShardedOrder::new_elastic(cfg.n, cfg.d, &[1, 1], 4)),
+    ));
 
     println!(
         "\ncdgrab — herding bound, n={} d={} block={} \
@@ -181,6 +240,15 @@ pub fn run(cfg: &CdGrabConfig, out_dir: &std::path::Path) -> Result<()> {
                 .transport_stats()
                 .map(|s| s.total())
                 .unwrap_or_default();
+            // The plan that produced this epoch's order (entry `epoch`
+            // of the policy's topology log) — the replay columns.
+            let (shards_col, weights_col) = policy
+                .topology_log()
+                .and_then(|log| log.get(epoch))
+                .map(|t| {
+                    (t.num_shards().to_string(), t.weights_label())
+                })
+                .unwrap_or_default();
             csv.row(&[
                 name.clone(),
                 epoch.to_string(),
@@ -188,6 +256,8 @@ pub fn run(cfg: &CdGrabConfig, out_dir: &std::path::Path) -> Result<()> {
                 fmt_f(secs),
                 link.stalls.to_string(),
                 (link.tx_bytes + link.rx_bytes).to_string(),
+                shards_col,
+                weights_col,
             ])?;
             col.push(inf);
             if epoch == cfg.epochs - 1 {
@@ -230,9 +300,21 @@ pub fn run(cfg: &CdGrabConfig, out_dir: &std::path::Path) -> Result<()> {
             );
         }
     }
+    // Weighted gate: the skewed topology must agree across dispatch
+    // paths just like the equal splits.
+    let skew_sync = col(&herd_cols, "cd-grab-skew114");
+    for variant in ["async", "tcp"] {
+        let other =
+            col(&herd_cols, &format!("cd-grab-skew114-{variant}"));
+        anyhow::ensure!(
+            skew_sync == other,
+            "herding diverged: cd-grab-skew114 vs -{variant} \
+             ({skew_sync:?} vs {other:?})"
+        );
+    }
     println!(
         "  determinism gate: sync == async == tcp herding columns at \
-         W in {:?}",
+         W in {:?} and at weights 1:1:4",
         cfg.shard_counts
     );
 
@@ -269,8 +351,8 @@ mod tests {
         let text = std::fs::read_to_string(
             dir.join("cdgrab_herding.csv")).unwrap();
         // Header + rr + grab + pair + (sync, async, tcp) x two shard
-        // counts, 6 epochs each.
-        assert_eq!(text.lines().count(), 1 + 9 * 6);
+        // counts + the skew trio + the elastic policy, 6 epochs each.
+        assert_eq!(text.lines().count(), 1 + 13 * 6);
         // Determinism contract: the transports must report identical
         // herding bounds at every (w, epoch).
         fn herd_col<'t>(text: &'t str, name: &str) -> Vec<&'t str> {
@@ -295,6 +377,38 @@ mod tests {
                 "sync vs tcp herding diverged at w={w}"
             );
         }
+        // The skew trio must agree too (weighted contract-6 gate).
+        let skew_sync = herd_col(&text, "cd-grab-skew114");
+        assert_eq!(skew_sync.len(), 6);
+        assert_eq!(
+            skew_sync,
+            herd_col(&text, "cd-grab-skew114-async"),
+            "skewed sync vs async herding diverged"
+        );
+        assert_eq!(
+            skew_sync,
+            herd_col(&text, "cd-grab-skew114-tcp"),
+            "skewed sync vs tcp herding diverged"
+        );
+        // Topology replay columns: the skew rows record 3 shards at
+        // weights 1:1:4, and the elastic rows carry a weights label.
+        let skew_row = text
+            .lines()
+            .find(|l| l.starts_with("cd-grab-skew114,"))
+            .unwrap();
+        let cols: Vec<&str> = skew_row.split(',').collect();
+        assert_eq!(cols[6], "3", "shards column: {skew_row}");
+        assert_eq!(cols[7], "1:1:4", "weights column: {skew_row}");
+        let elastic_row = text
+            .lines()
+            .find(|l| l.starts_with("cd-grab-w2-elastic,"))
+            .unwrap();
+        let cols: Vec<&str> = elastic_row.split(',').collect();
+        assert!(!cols[7].is_empty(), "elastic weights column empty");
+        // Unsharded rows leave the topology columns blank.
+        let pair_row =
+            text.lines().find(|l| l.starts_with("pair,")).unwrap();
+        assert!(pair_row.ends_with(",,"), "pair row: {pair_row}");
         // The socket policies must actually have moved bytes.
         let tcp_rows: Vec<&str> = text
             .lines()

@@ -74,10 +74,22 @@ TRAIN OPTIONS:
   --transport channel|tcp  CD-GraB order-exchange transport: in-process
                            channels (default) or the socket wire protocol
                            (bit-equal orders either way)
-  --connect HOST:PORT      dial a remote shard worker server instead of
+  --connect ADDR[,ADDR…]   dial remote shard worker server(s) instead of
                            spawning loopback workers (needs --transport
-                           tcp; start the server with
-                           `grab exp cdgrab --listen HOST:PORT`)
+                           tcp; start each server with
+                           `grab exp cdgrab --listen HOST:PORT`; shard w
+                           dials address w mod the list, falling through
+                           the list when a server is unreachable)
+  --weights W1,W2,…        uneven (weighted) CD-GraB topology: shard
+                           sizes proportional to the integer weights
+                           (sets the shard count; replay a recorded
+                           elastic run by pinning its logged weights)
+  --elastic                re-plan the CD-GraB topology at epoch
+                           boundaries from measured per-link cost, and
+                           survive a mid-run worker loss by re-splitting
+                           over the remaining shards (needs
+                           --async-shards or --transport tcp; per-epoch
+                           plans are recorded for exact replay)
   --balancer alg5|alg6|kernel
   --epochs N --n N --n-eval N --accum N
   --lr F --momentum F --wd F --seed N
@@ -144,6 +156,21 @@ fn cmd_train(args: &Args) -> Result<()> {
                 total.tx_bytes,
                 total.rx_bytes
             );
+        }
+        if let Some(log) = &result.topology {
+            // The log's trailing entry is the *next* epoch's plan (it
+            // never ran); summarize the last executed epoch instead.
+            let ran = log.len().saturating_sub(2);
+            if let Some(last) = log.get(ran) {
+                eprintln!(
+                    "[grab] topology: {} shards, weights {}, \
+                     {} re-plan(s); per-epoch plans recorded \
+                     (replay with --weights)",
+                    last.num_shards(),
+                    last.weights_label(),
+                    log.last().map(|t| t.generation).unwrap_or(0)
+                );
+            }
         }
     }
     Ok(())

@@ -131,6 +131,13 @@ impl OrderPolicy for GroupedOrder {
     ) -> Option<crate::ordering::transport::TransportStats> {
         self.inner.transport_stats()
     }
+
+    fn topology_log(&self) -> Option<&[crate::ordering::Topology]> {
+        // The inner policy's shard plans are over groups, but the
+        // weights/generation record is what replay needs — forward it
+        // like the transport counters above.
+        self.inner.topology_log()
+    }
 }
 
 /// Convenience: GraB over groups of `group_size` (the paper's

@@ -23,12 +23,14 @@ mod greedy;
 pub mod pair;
 pub mod queue;
 pub mod sharded;
+pub mod topology;
 pub mod transport;
 
 pub use grab::GraBOrder;
 pub use greedy::GreedyOrder;
 pub use pair::PairBalance;
 pub use sharded::ShardedOrder;
+pub use topology::Topology;
 
 pub use crate::tensor::GradBlock;
 
@@ -125,6 +127,16 @@ pub trait OrderPolicy: Send {
     /// Lets the trainer report comparable numbers for sync / channel /
     /// tcp CD-GraB runs without downcasting.
     fn transport_stats(&self) -> Option<transport::TransportStats> {
+        None
+    }
+
+    /// Per-epoch shard [`Topology`] plans for policies that lay units
+    /// out over shards: entry `e` is the plan that produced epoch `e`'s
+    /// order. Static topologies repeat one plan; elastic CD-GraB
+    /// records every boundary re-plan, which is what makes an elastic
+    /// run replayable (`docs/determinism.md` contract 6). `None` for
+    /// unsharded policies.
+    fn topology_log(&self) -> Option<&[Topology]> {
         None
     }
 }
@@ -425,32 +437,62 @@ pub fn build_policy(
             Box::new(OneStepGraB::new(grab_from_cfg(cfg, n, d)))
         }
         OrderingKind::PairBalance => Box::new(PairBalance::new(n, d)),
-        OrderingKind::ShardedPairBalance => match cfg.shard_transport {
-            TransportKind::Tcp => match &cfg.connect {
-                Some(addr) => Box::new(ShardedOrder::new_tcp_connect(
-                    addr,
-                    n,
-                    d,
-                    cfg.num_shards,
-                )?),
-                None => Box::new(ShardedOrder::new_tcp_loopback(
-                    n,
-                    d,
-                    cfg.num_shards,
-                )?),
-            },
-            TransportKind::Channel if cfg.async_shards => {
-                Box::new(ShardedOrder::new_async(
-                    n,
-                    d,
-                    cfg.num_shards,
-                    cfg.shard_queue_depth,
-                ))
+        OrderingKind::ShardedPairBalance => {
+            // The starting topology: pinned `--weights`, or equal.
+            let weights: Vec<u64> = cfg
+                .shard_weights
+                .clone()
+                .unwrap_or_else(|| vec![1; cfg.num_shards]);
+            match cfg.shard_transport {
+                TransportKind::Tcp => match &cfg.connect {
+                    Some(addrs) => {
+                        let addrs = transport::parse_connect_addrs(addrs);
+                        if cfg.elastic {
+                            Box::new(
+                                ShardedOrder::new_tcp_connect_elastic(
+                                    &addrs, n, d, &weights,
+                                )?,
+                            )
+                        } else {
+                            Box::new(
+                                ShardedOrder::new_tcp_connect_weighted(
+                                    &addrs, n, d, &weights,
+                                )?,
+                            )
+                        }
+                    }
+                    None if cfg.elastic => {
+                        Box::new(ShardedOrder::new_tcp_loopback_elastic(
+                            n, d, &weights,
+                        )?)
+                    }
+                    None => {
+                        Box::new(ShardedOrder::new_tcp_loopback_weighted(
+                            n, d, &weights,
+                        )?)
+                    }
+                },
+                TransportKind::Channel if cfg.elastic => {
+                    Box::new(ShardedOrder::new_elastic(
+                        n,
+                        d,
+                        &weights,
+                        cfg.shard_queue_depth,
+                    ))
+                }
+                TransportKind::Channel if cfg.async_shards => {
+                    Box::new(ShardedOrder::new_async_weighted(
+                        n,
+                        d,
+                        &weights,
+                        cfg.shard_queue_depth,
+                    ))
+                }
+                TransportKind::Channel => {
+                    Box::new(ShardedOrder::new_weighted(n, d, &weights))
+                }
             }
-            TransportKind::Channel => {
-                Box::new(ShardedOrder::new(n, d, cfg.num_shards))
-            }
-        },
+        }
         OrderingKind::RetrainFromGraB => {
             let order = retrain_order.ok_or_else(|| {
                 anyhow::anyhow!(
@@ -576,6 +618,28 @@ mod tests {
         cfg.shard_queue_depth = 2;
         let p = build_policy(&cfg, 16, 4, None).unwrap();
         assert_eq!(p.name(), "cd-grab-async");
+    }
+
+    #[test]
+    fn build_policy_selects_weighted_and_elastic_backends() {
+        // Pinned weights flow into the topology; --elastic picks the
+        // re-planning coordinator (over channel workers here).
+        let mut cfg = TrainConfig::default();
+        cfg.ordering = OrderingKind::ShardedPairBalance;
+        cfg.num_shards = 3;
+        cfg.shard_weights = Some(vec![1, 1, 2]);
+        let mut p = build_policy(&cfg, 16, 4, None).unwrap();
+        assert_eq!(p.name(), "cd-grab");
+        let log = p.topology_log().expect("sharded policies log plans");
+        assert_eq!(log[0].weights, vec![1, 1, 2]);
+        assert_eq!(log[0].sizes, vec![4, 4, 8]);
+        crate::util::prop::assert_permutation(p.epoch_order(0)).unwrap();
+
+        cfg.async_shards = true;
+        cfg.elastic = true;
+        cfg.shard_queue_depth = 2;
+        let p = build_policy(&cfg, 16, 4, None).unwrap();
+        assert_eq!(p.name(), "cd-grab-elastic");
     }
 
     #[test]

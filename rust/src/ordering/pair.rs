@@ -81,6 +81,15 @@ impl PairBalance {
         }
     }
 
+    /// The `state_bytes` a freshly constructed balancer over `n` units
+    /// of dimension `d` would report, computed without allocating one —
+    /// lets the sharded coordinator seed per-shard memory accounting
+    /// (before the first worker report) for free.
+    pub fn initial_state_bytes(n: usize, d: usize) -> usize {
+        2 * d * std::mem::size_of::<f32>()
+            + 2 * n * std::mem::size_of::<usize>()
+    }
+
     /// Number of ordering units.
     pub fn len(&self) -> usize {
         self.n
@@ -354,5 +363,10 @@ mod tests {
         // 2 d-vectors (s + pending) + 2 permutations — less than GraB's
         // 3 algorithm d-vectors because there is no mean state.
         assert_eq!(p.state_bytes(), 2 * 50 * 4 + 2 * 1000 * 8);
+        // The allocation-free estimate must match the real thing.
+        assert_eq!(
+            PairBalance::initial_state_bytes(1000, 50),
+            p.state_bytes()
+        );
     }
 }

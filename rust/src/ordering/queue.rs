@@ -48,6 +48,16 @@ impl ScratchBlock {
         ScratchBlock { data: Vec::new(), d }
     }
 
+    /// An empty scratch buffer with room for `rows` rows of dimension
+    /// `d` pre-allocated. Weighted shard topologies use this to size
+    /// each shard's circulating pool for its expected gather share up
+    /// front — the largest-weight shard's buffers reach steady state
+    /// without mid-epoch reallocation.
+    pub fn with_row_capacity(d: usize, rows: usize) -> ScratchBlock {
+        assert!(d > 0, "ScratchBlock dimension must be positive");
+        ScratchBlock { data: Vec::with_capacity(rows * d), d }
+    }
+
     /// Append one `d`-dimensional gradient row.
     pub fn push_row(&mut self, row: &[f32]) {
         debug_assert_eq!(row.len(), self.d);
@@ -123,11 +133,26 @@ pub struct BlockReceiver {
 /// pool *is* the bound — at most `depth` blocks can be in flight, and
 /// an `acquire` past that blocks until the worker recycles one.
 pub fn block_queue(d: usize, depth: usize) -> (BlockSender, BlockReceiver) {
+    block_queue_sized(d, depth, 0)
+}
+
+/// [`block_queue`] with each pooled buffer pre-allocated for `row_hint`
+/// rows. Uneven (weighted) shard topologies pass each shard's expected
+/// per-block gather share here, so the pool behind the largest-weight
+/// shard starts at its steady-state size instead of growing through
+/// reallocation during the first epoch. `row_hint = 0` starts empty.
+pub fn block_queue_sized(
+    d: usize,
+    depth: usize,
+    row_hint: usize,
+) -> (BlockSender, BlockReceiver) {
     assert!(depth > 0, "block queue depth must be positive");
     let (msg_tx, msg_rx) = channel();
     let (pool_tx, pool_rx) = channel();
     for _ in 0..depth {
-        pool_tx.send(ScratchBlock::new(d)).expect("seed scratch pool");
+        pool_tx
+            .send(ScratchBlock::with_row_capacity(d, row_hint))
+            .expect("seed scratch pool");
     }
     (
         BlockSender {
@@ -264,6 +289,18 @@ mod tests {
         assert!(tx.stalls() >= 1);
         drop((b, c));
         let _rx = h.join().unwrap();
+    }
+
+    #[test]
+    fn sized_pool_preallocates_row_capacity() {
+        let (mut tx, rx) = block_queue_sized(4, 2, 16);
+        let b = tx.acquire().unwrap();
+        assert!(b.capacity_bytes() >= 16 * 4 * std::mem::size_of::<f32>());
+        assert!(b.is_empty());
+        drop((b, rx));
+        let plain = ScratchBlock::with_row_capacity(3, 0);
+        assert_eq!(plain.capacity_bytes(), 0);
+        assert_eq!(plain.dim(), 3);
     }
 
     #[test]

@@ -2,11 +2,14 @@
 //! 2023, Algorithm 2 `CD-GraB`), simulated in-process over W shards.
 //!
 //! The dataset's `0..n` units are split into W contiguous ranges
-//! ("workers"). Each shard runs its own [`PairBalance`] over its local
-//! units — pair balancing needs no global mean, so shards are fully
-//! independent between epoch boundaries, exactly the property CD-GraB
-//! exploits to parallelize GraB across workers. The coordinator does two
-//! things, mirroring the paper's server loop:
+//! ("workers") by a [`Topology`] plan — classically W equal weights
+//! (sizes differ by at most one), generally any integer weight vector
+//! apportioned by [`crate::ordering::topology::split_units_weighted`].
+//! Each shard runs its own [`PairBalance`] over its local units — pair
+//! balancing needs no global mean, so shards are fully independent
+//! between epoch boundaries, exactly the property CD-GraB exploits to
+//! parallelize GraB across workers. The coordinator does two things,
+//! mirroring the paper's server loop:
 //!
 //! * **merge** — the epoch order interleaves the shard orders
 //!   round-robin (lock-step rounds: round t visits each worker's t-th
@@ -41,28 +44,59 @@
 //! The concurrent backends share one code path: the coordinator speaks
 //! [`ShardTransport`] and never learns which carrier moved the bytes.
 //!
-//! All four are **bit-deterministic** and produce identical epoch
-//! orders for a fixed gradient stream: each shard balancer sees exactly
-//! the same local rows in the same order regardless of how they were
-//! carried, and [`PairBalance`] is block-size invariant (pairs straddle
-//! block boundaries via its pending-row state). Property-tested below
-//! and in `tests/transport.rs`; `docs/determinism.md` documents the
-//! full equivalence-contract chain.
+//! # Elastic topologies
+//!
+//! The transported backends can additionally be **elastic**
+//! ([`ShardedOrder::new_elastic`] and friends, `--elastic`): at each
+//! epoch boundary the coordinator re-derives shard weights from the
+//! epoch's measured per-link costs ([`ElasticPlanner`] — EWMA over
+//! per-row blocked time, quantized integers, hysteresis) or follows a
+//! pinned per-epoch schedule ([`WeightSource::Schedule`], the replay
+//! path). When the plan's sizes change — or a link failed mid-epoch —
+//! the coordinator *re-plans*: it re-splits `0..n` under the new
+//! weights, bumps the topology generation, and opens fresh links
+//! through its [`Relink`] hook (a fresh TCP `Hello` per link is the
+//! shard-migration re-handshake). Shard balancer state restarts at a
+//! re-plan; the GraB guarantee needs only that every unit is balanced
+//! once per epoch, which every plan preserves by construction. The
+//! per-epoch [`Topology`] log is recorded and surfaced
+//! ([`OrderPolicy::topology_log`], `TrainResult`, `exp cdgrab` CSV) so
+//! any elastic run replays bit-for-bit from its recorded weights —
+//! determinism contract 6 in `docs/determinism.md`: an elastic run
+//! whose weights stay frozen is bit-identical to the static topology,
+//! and any weight schedule still emits valid permutations with every
+//! unit balanced exactly once per epoch.
+//!
+//! All backends are **bit-deterministic** for a fixed gradient stream
+//! and topology schedule: each shard balancer sees exactly the same
+//! local rows in the same order regardless of how they were carried,
+//! and [`PairBalance`] is block-size invariant (pairs straddle block
+//! boundaries via its pending-row state). Property-tested below and in
+//! `tests/transport.rs`; `docs/determinism.md` documents the full
+//! equivalence-contract chain.
 //!
 //! With `W = 1` the coordinator is the identity and the output matches
 //! unsharded [`PairBalance`] exactly (tested below). A worker that
 //! panics (or a socket peer that disconnects) does not deadlock the
 //! coordinator: its link reports failure, and the payload/error is
 //! re-raised at the epoch boundary (`epoch_end`), where the drain would
-//! otherwise have joined it.
+//! otherwise have joined it — unless the coordinator is elastic, in
+//! which case a failed *transport link* is survived by re-planning the
+//! next epoch over the remaining shards (an in-process worker panic
+//! still re-raises: thread panics are bugs, not churn).
 
 use std::ops::Range;
 
 use crate::ordering::queue::ScratchBlock;
+use crate::ordering::topology::{
+    ElasticPlanner, Topology, WeightSource,
+};
 use crate::ordering::transport::{
-    spawn_channel_shards, tcp, LinkStats, ShardTransport, TransportStats,
+    spawn_channel_shards, tcp, LinkStats, Relink, ShardTransport,
+    TransportStats,
 };
 use crate::ordering::{GradBlock, OrderPolicy, PairBalance};
+use crate::util::timer::Stopwatch;
 
 /// Round-robin merge of shard-local orders into the global epoch order
 /// plus the position → shard routing table. Local unit ids are lifted to
@@ -105,27 +139,45 @@ struct AsyncShards {
     /// Per-call staging slots for lazily acquired scratch blocks
     /// (allocated once; all `None` between `observe_block` calls).
     staged: Vec<Option<ScratchBlock>>,
+    /// Whether to clock per-link blocked time (elastic coordinators
+    /// only — the static paths skip the `Instant::now` reads on the
+    /// hot gather path).
+    measure: bool,
+    /// Seconds spent blocked on each link this epoch (scratch
+    /// acquisition + block sends: queue stalls and full socket buffers
+    /// both land here) — the elastic planner's cost signal. All zero
+    /// unless `measure` is set.
+    epoch_cost: Vec<f64>,
+    /// Rows shipped per link this epoch (normalizes the cost signal).
+    epoch_rows: Vec<usize>,
 }
 
 impl AsyncShards {
     /// Wrap pre-opened shard links into the coordinator backend.
     /// `sizes[w]` must match the local unit count link `w` was opened
-    /// with.
+    /// with; `measure` enables the per-link cost clocks an elastic
+    /// coordinator plans from.
     fn new(
         links: Vec<Box<dyn ShardTransport>>,
         sizes: &[usize],
         d: usize,
         transport: &'static str,
+        measure: bool,
     ) -> AsyncShards {
         assert_eq!(links.len(), sizes.len());
+        // Seeded from the allocation-free estimate; the first worker
+        // report overwrites these with the live values.
         let shard_state_bytes = sizes
             .iter()
-            .map(|&s| PairBalance::new(s, d).state_bytes())
+            .map(|&s| PairBalance::initial_state_bytes(s, d))
             .collect();
         AsyncShards {
             staged: (0..links.len()).map(|_| None).collect(),
             dead: vec![false; links.len()],
             local_orders: sizes.iter().map(|&s| (0..s).collect()).collect(),
+            measure,
+            epoch_cost: vec![0.0; links.len()],
+            epoch_rows: vec![0; links.len()],
             links,
             transport,
             shard_state_bytes,
@@ -143,7 +195,15 @@ impl AsyncShards {
                 continue;
             }
             if self.staged[w].is_none() {
-                match self.links[w].acquire() {
+                let got = if self.measure {
+                    let sw = Stopwatch::start();
+                    let got = self.links[w].acquire();
+                    self.epoch_cost[w] += sw.secs();
+                    got
+                } else {
+                    self.links[w].acquire()
+                };
+                match got {
                     Some(scratch) => self.staged[w] = Some(scratch),
                     None => {
                         self.dead[w] = true;
@@ -157,7 +217,18 @@ impl AsyncShards {
         }
         for (w, slot) in self.staged.iter_mut().enumerate() {
             if let Some(scratch) = slot.take() {
-                if !self.links[w].send_block(scratch) {
+                let rows = scratch.rows();
+                let ok = if self.measure {
+                    let sw = Stopwatch::start();
+                    let ok = self.links[w].send_block(scratch);
+                    self.epoch_cost[w] += sw.secs();
+                    ok
+                } else {
+                    self.links[w].send_block(scratch)
+                };
+                if ok {
+                    self.epoch_rows[w] += rows;
+                } else {
                     self.dead[w] = true;
                 }
             }
@@ -171,16 +242,30 @@ impl AsyncShards {
     /// transport's typed error is raised as a coordinator panic — either
     /// way the failure lands at the boundary, exactly like a worker
     /// panic, and the coordinator's cached orders are left untouched.
-    fn drain_epoch(&mut self) {
+    ///
+    /// With `tolerate_failure` (the elastic coordinator), a link whose
+    /// report fails with a *typed* transport error is recorded instead
+    /// of panicking: the returned vector holds `Some(error)` per lost
+    /// shard so the caller can re-plan over the survivors. (An
+    /// in-process channel worker panic still re-raises either way.)
+    fn drain_epoch(
+        &mut self,
+        tolerate_failure: bool,
+    ) -> Vec<Option<String>> {
         for link in self.links.iter_mut() {
             // A send failure is surfaced by the recv below.
             let _ = link.end_epoch();
         }
+        let mut outcomes = Vec::with_capacity(self.links.len());
         for (w, link) in self.links.iter_mut().enumerate() {
             match link.recv_report() {
                 Ok(report) => {
                     self.local_orders[w] = report.order;
                     self.shard_state_bytes[w] = report.state_bytes;
+                    outcomes.push(None);
+                }
+                Err(e) if tolerate_failure => {
+                    outcomes.push(Some(e.to_string()));
                 }
                 Err(e) => panic!(
                     "shard {w} ({} transport) failed mid-epoch: {e}",
@@ -188,13 +273,30 @@ impl AsyncShards {
                 ),
             }
         }
+        outcomes
     }
 
-    /// Per-shard link counters (stalls, bytes moved each way).
+    /// Take (and reset) this epoch's per-shard cost/row counters — the
+    /// elastic planner's input.
+    fn take_epoch_costs(&mut self) -> (Vec<f64>, Vec<usize>) {
+        let costs = std::mem::replace(
+            &mut self.epoch_cost,
+            vec![0.0; self.links.len()],
+        );
+        let rows = std::mem::replace(
+            &mut self.epoch_rows,
+            vec![0; self.links.len()],
+        );
+        (costs, rows)
+    }
+
+    /// Per-shard link counters (stalls, bytes moved each way) for the
+    /// current links; the coordinator folds in retired-link counters.
     fn stats(&self) -> TransportStats {
         TransportStats {
             transport: self.transport,
             per_shard: self.links.iter().map(|l| l.stats()).collect(),
+            retired: LinkStats::default(),
         }
     }
 }
@@ -214,14 +316,38 @@ enum Backend {
     Async(AsyncShards),
 }
 
+/// The elastic half of a transported coordinator: where next-epoch
+/// weights come from and how fresh links are opened after a re-plan.
+struct ElasticState {
+    source: WeightSource,
+    relink: Relink,
+    /// Epoch boundaries crossed so far (indexes `Schedule` entries).
+    boundaries: usize,
+}
+
 /// CD-GraB's sharded coordinator: W [`PairBalance`] workers over
 /// disjoint contiguous unit ranges, merged round-robin at each epoch
-/// boundary. See the module docs for the dispatch backends.
+/// boundary. See the module docs for the dispatch backends and the
+/// elastic topology layer.
 pub struct ShardedOrder {
     backend: Backend,
-    /// Global unit id of shard w's local unit 0.
-    bases: Vec<usize>,
+    /// The current shard layout (weights, sizes, base offsets,
+    /// re-plan generation).
+    topology: Topology,
+    /// Entry `e` is the plan that produced epoch `e`'s merged order
+    /// (recorded for replay; contract 6). After E completed epochs the
+    /// log holds E+1 entries: the trailing one is the plan behind the
+    /// *next* epoch's order (the trainer's `final_order`).
+    log: Vec<Topology>,
+    /// Elastic re-planning state; `None` = static topology.
+    elastic: Option<ElasticState>,
+    /// Aggregate link counters of every set of links retired by an
+    /// elastic re-plan, so `transport_stats` stays cumulative over the
+    /// whole run (always zero for static topologies).
+    retired_stats: LinkStats,
     n: usize,
+    /// Gradient dimension (needed to rebuild shard state at a re-plan).
+    d: usize,
     /// Merged epoch order (global unit ids), rebuilt lazily per epoch.
     merged: Vec<usize>,
     /// Epoch position -> owning shard.
@@ -234,36 +360,38 @@ pub struct ShardedOrder {
     observed: usize,
 }
 
-/// Shard sizes (differing by at most one) and base offsets for `n`
-/// units over `num_shards` contiguous ranges.
-fn split_units(n: usize, num_shards: usize) -> (Vec<usize>, Vec<usize>) {
-    assert!(num_shards >= 1, "need at least one shard");
-    let base_size = n / num_shards;
-    let remainder = n % num_shards;
-    let mut sizes = Vec::with_capacity(num_shards);
-    let mut bases = Vec::with_capacity(num_shards);
-    let mut start = 0;
-    for w in 0..num_shards {
-        let size = base_size + usize::from(w < remainder);
-        sizes.push(size);
-        bases.push(start);
-        start += size;
-    }
-    debug_assert_eq!(start, n);
-    (sizes, bases)
-}
-
 impl ShardedOrder {
     /// Synchronous strided coordinator: split `n` units of dimension `d`
-    /// across `num_shards` contiguous ranges (sizes differ by at most
-    /// one; shards may be empty when `num_shards > n`) and forward
-    /// observed rows to the owning balancer one at a time, zero-copy, on
-    /// the caller's thread.
+    /// across `num_shards` equal-weight contiguous ranges (sizes differ
+    /// by at most one; shards may be empty when `num_shards > n`) and
+    /// forward observed rows to the owning balancer one at a time,
+    /// zero-copy, on the caller's thread.
     pub fn new(n: usize, d: usize, num_shards: usize) -> ShardedOrder {
-        let (sizes, bases) = split_units(n, num_shards);
-        let shards =
-            sizes.iter().map(|&s| PairBalance::new(s, d)).collect();
-        ShardedOrder::assemble(Backend::Strided(shards), bases, n)
+        ShardedOrder::new_weighted(n, d, &vec![1; num_shards])
+    }
+
+    /// [`ShardedOrder::new`] over a weighted topology: shard sizes
+    /// proportional to integer `weights` (largest-remainder
+    /// apportionment, zero-weight shards clamped to one unit while
+    /// units last).
+    pub fn new_weighted(
+        n: usize,
+        d: usize,
+        weights: &[u64],
+    ) -> ShardedOrder {
+        let topology = Topology::plan(n, 0, weights);
+        let shards = topology
+            .sizes
+            .iter()
+            .map(|&s| PairBalance::new(s, d))
+            .collect();
+        ShardedOrder::assemble(
+            Backend::Strided(shards),
+            topology,
+            n,
+            d,
+            None,
+        )
     }
 
     /// Synchronous gathered coordinator: like [`ShardedOrder::new`], but
@@ -275,15 +403,30 @@ impl ShardedOrder {
         d: usize,
         num_shards: usize,
     ) -> ShardedOrder {
-        let (sizes, bases) = split_units(n, num_shards);
-        let shards: Vec<PairBalance> =
-            sizes.iter().map(|&s| PairBalance::new(s, d)).collect();
-        let scratch =
-            (0..num_shards).map(|_| ScratchBlock::new(d)).collect();
+        ShardedOrder::new_gathered_weighted(n, d, &vec![1; num_shards])
+    }
+
+    /// [`ShardedOrder::new_gathered`] over a weighted topology.
+    pub fn new_gathered_weighted(
+        n: usize,
+        d: usize,
+        weights: &[u64],
+    ) -> ShardedOrder {
+        let topology = Topology::plan(n, 0, weights);
+        let shards: Vec<PairBalance> = topology
+            .sizes
+            .iter()
+            .map(|&s| PairBalance::new(s, d))
+            .collect();
+        let scratch = (0..topology.num_shards())
+            .map(|_| ScratchBlock::new(d))
+            .collect();
         ShardedOrder::assemble(
             Backend::Gathered { shards, scratch },
-            bases,
+            topology,
             n,
+            d,
+            None,
         )
     }
 
@@ -301,11 +444,112 @@ impl ShardedOrder {
         num_shards: usize,
         queue_depth: usize,
     ) -> ShardedOrder {
+        ShardedOrder::new_async_weighted(
+            n,
+            d,
+            &vec![1; num_shards],
+            queue_depth,
+        )
+    }
+
+    /// [`ShardedOrder::new_async`] over a weighted topology (static:
+    /// the weights never change).
+    pub fn new_async_weighted(
+        n: usize,
+        d: usize,
+        weights: &[u64],
+        queue_depth: usize,
+    ) -> ShardedOrder {
         assert!(d > 0, "async shards need a positive dimension");
-        let (sizes, bases) = split_units(n, num_shards);
-        let links = spawn_channel_shards(&sizes, d, queue_depth);
-        let shards = AsyncShards::new(links, &sizes, d, "channel");
-        ShardedOrder::assemble(Backend::Async(shards), bases, n)
+        let topology = Topology::plan(n, 0, weights);
+        let links =
+            spawn_channel_shards(&topology.sizes, d, queue_depth);
+        let shards = AsyncShards::new(
+            links,
+            &topology.sizes,
+            d,
+            "channel",
+            false,
+        );
+        ShardedOrder::assemble(
+            Backend::Async(shards),
+            topology,
+            n,
+            d,
+            None,
+        )
+    }
+
+    /// Elastic coordinator over the channel transport: starts from
+    /// `weights`, measures per-link cost each epoch, and re-plans the
+    /// topology (fresh worker threads) when the measured skew is
+    /// sustained or a link fails. See the module docs and
+    /// `docs/determinism.md` contract 6.
+    pub fn new_elastic(
+        n: usize,
+        d: usize,
+        weights: &[u64],
+        queue_depth: usize,
+    ) -> ShardedOrder {
+        let planner = ElasticPlanner::new(weights.len());
+        ShardedOrder::new_channel_elastic(
+            n,
+            d,
+            weights,
+            queue_depth,
+            WeightSource::Measured(planner),
+        )
+    }
+
+    /// Elastic coordinator over the channel transport following a
+    /// pinned per-epoch weight schedule (`schedule[e]` = weights for
+    /// epoch `e`; the last entry repeats). This is the replay mode: a
+    /// recorded elastic run — including mid-run shard-count changes —
+    /// re-executes bit-for-bit from its topology log.
+    pub fn new_scheduled(
+        n: usize,
+        d: usize,
+        schedule: &[Vec<u64>],
+        queue_depth: usize,
+    ) -> ShardedOrder {
+        assert!(!schedule.is_empty(), "empty topology schedule");
+        ShardedOrder::new_channel_elastic(
+            n,
+            d,
+            &schedule[0],
+            queue_depth,
+            WeightSource::Schedule(schedule.to_vec()),
+        )
+    }
+
+    fn new_channel_elastic(
+        n: usize,
+        d: usize,
+        weights: &[u64],
+        queue_depth: usize,
+        source: WeightSource,
+    ) -> ShardedOrder {
+        assert!(d > 0, "async shards need a positive dimension");
+        let topology = Topology::plan(n, 0, weights);
+        let links =
+            spawn_channel_shards(&topology.sizes, d, queue_depth);
+        let shards = AsyncShards::new(
+            links,
+            &topology.sizes,
+            d,
+            "channel",
+            true,
+        );
+        let relink: Relink = Box::new(move |sizes, _generation| {
+            Ok(spawn_channel_shards(sizes, d, queue_depth))
+        });
+        ShardedOrder::assemble(
+            Backend::Async(shards),
+            topology,
+            n,
+            d,
+            Some(ElasticState { source, relink, boundaries: 0 }),
+        )
     }
 
     /// TCP coordinator with in-process loopback workers: spawn a
@@ -318,12 +562,89 @@ impl ShardedOrder {
         d: usize,
         num_shards: usize,
     ) -> crate::Result<ShardedOrder> {
+        ShardedOrder::new_tcp_loopback_weighted(
+            n,
+            d,
+            &vec![1; num_shards],
+        )
+    }
+
+    /// [`ShardedOrder::new_tcp_loopback`] over a weighted topology.
+    pub fn new_tcp_loopback_weighted(
+        n: usize,
+        d: usize,
+        weights: &[u64],
+    ) -> crate::Result<ShardedOrder> {
+        ShardedOrder::tcp_loopback_inner(n, d, weights, None)
+    }
+
+    /// Elastic TCP coordinator with in-process loopback workers: a
+    /// re-plan spawns a fresh loopback worker pool and re-handshakes
+    /// (fresh `Hello`s at the bumped generation).
+    pub fn new_tcp_loopback_elastic(
+        n: usize,
+        d: usize,
+        weights: &[u64],
+    ) -> crate::Result<ShardedOrder> {
+        let planner = ElasticPlanner::new(weights.len());
+        ShardedOrder::tcp_loopback_inner(
+            n,
+            d,
+            weights,
+            Some(WeightSource::Measured(planner)),
+        )
+    }
+
+    /// Elastic TCP loopback coordinator on a pinned per-epoch weight
+    /// schedule (see [`ShardedOrder::new_scheduled`]).
+    pub fn new_tcp_loopback_scheduled(
+        n: usize,
+        d: usize,
+        schedule: &[Vec<u64>],
+    ) -> crate::Result<ShardedOrder> {
+        anyhow::ensure!(!schedule.is_empty(), "empty topology schedule");
+        ShardedOrder::tcp_loopback_inner(
+            n,
+            d,
+            &schedule[0],
+            Some(WeightSource::Schedule(schedule.to_vec())),
+        )
+    }
+
+    fn tcp_loopback_inner(
+        n: usize,
+        d: usize,
+        weights: &[u64],
+        source: Option<WeightSource>,
+    ) -> crate::Result<ShardedOrder> {
         anyhow::ensure!(d > 0, "tcp shards need a positive dimension");
-        let (sizes, bases) = split_units(n, num_shards);
-        let addr = tcp::spawn_loopback(num_shards)?;
-        let links = tcp::connect_shards(addr, &sizes, d)?;
-        let shards = AsyncShards::new(links, &sizes, d, "tcp");
-        Ok(ShardedOrder::assemble(Backend::Async(shards), bases, n))
+        let topology = Topology::plan(n, 0, weights);
+        let addr = tcp::spawn_loopback(topology.num_shards())?;
+        let links = tcp::connect_shards(addr, &topology.sizes, d, 0)?;
+        let shards = AsyncShards::new(
+            links,
+            &topology.sizes,
+            d,
+            "tcp",
+            source.is_some(),
+        );
+        let elastic = source.map(|source| {
+            // Each re-plan gets a fresh loopback worker pool — the
+            // in-process analogue of re-handshaking a worker server.
+            let relink: Relink = Box::new(move |sizes, generation| {
+                let addr = tcp::spawn_loopback(sizes.len())
+                    .map_err(crate::ordering::transport::TransportError::Io)?;
+                tcp::connect_shards(addr, sizes, d, generation)
+            });
+            ElasticState { source, relink, boundaries: 0 }
+        });
+        Ok(ShardedOrder::assemble(
+            Backend::Async(shards),
+            topology,
+            n,
+            d,
+            elastic,
+        ))
     }
 
     /// TCP coordinator against a remote worker server (`exp cdgrab
@@ -335,23 +656,139 @@ impl ShardedOrder {
         d: usize,
         num_shards: usize,
     ) -> crate::Result<ShardedOrder> {
+        ShardedOrder::new_tcp_connect_weighted(
+            &[addr.to_string()],
+            n,
+            d,
+            &vec![1; num_shards],
+        )
+    }
+
+    /// TCP coordinator against a pool of remote worker servers: shard
+    /// `w` dials `addrs[w % addrs.len()]` (falling through the list on
+    /// failure), over a weighted topology.
+    pub fn new_tcp_connect_weighted(
+        addrs: &[String],
+        n: usize,
+        d: usize,
+        weights: &[u64],
+    ) -> crate::Result<ShardedOrder> {
+        ShardedOrder::tcp_connect_inner(addrs, n, d, weights, None)
+    }
+
+    /// Elastic TCP coordinator against a pool of remote worker servers:
+    /// a shard whose server dies mid-run surfaces at the epoch
+    /// boundary, and the next epoch is re-planned over the surviving
+    /// shards — the fresh `Hello`s land on whichever servers still
+    /// accept connections.
+    pub fn new_tcp_connect_elastic(
+        addrs: &[String],
+        n: usize,
+        d: usize,
+        weights: &[u64],
+    ) -> crate::Result<ShardedOrder> {
+        let planner = ElasticPlanner::new(weights.len());
+        ShardedOrder::tcp_connect_inner(
+            addrs,
+            n,
+            d,
+            weights,
+            Some(WeightSource::Measured(planner)),
+        )
+    }
+
+    fn tcp_connect_inner(
+        addrs: &[String],
+        n: usize,
+        d: usize,
+        weights: &[u64],
+        source: Option<WeightSource>,
+    ) -> crate::Result<ShardedOrder> {
         anyhow::ensure!(d > 0, "tcp shards need a positive dimension");
-        let (sizes, bases) = split_units(n, num_shards);
-        let links = tcp::connect_shards(addr, &sizes, d)?;
-        let shards = AsyncShards::new(links, &sizes, d, "tcp");
-        Ok(ShardedOrder::assemble(Backend::Async(shards), bases, n))
+        anyhow::ensure!(!addrs.is_empty(), "need a worker address");
+        let topology = Topology::plan(n, 0, weights);
+        let links =
+            tcp::connect_shards_multi(addrs, &topology.sizes, d, 0)?;
+        let shards = AsyncShards::new(
+            links,
+            &topology.sizes,
+            d,
+            "tcp",
+            source.is_some(),
+        );
+        let elastic = source.map(|source| {
+            let addrs = addrs.to_vec();
+            let relink: Relink = Box::new(move |sizes, generation| {
+                tcp::connect_shards_multi(&addrs, sizes, d, generation)
+            });
+            ElasticState { source, relink, boundaries: 0 }
+        });
+        Ok(ShardedOrder::assemble(
+            Backend::Async(shards),
+            topology,
+            n,
+            d,
+            elastic,
+        ))
+    }
+
+    /// Assemble a coordinator from pre-opened [`ShardTransport`] links
+    /// — the composition point the public constructors build on, and
+    /// the hook for tests that wrap links (fault injection). `links`
+    /// must have one entry per `topology` shard, opened with the
+    /// matching local sizes; `elastic` enables boundary re-planning.
+    pub fn from_links(
+        n: usize,
+        d: usize,
+        topology: Topology,
+        links: Vec<Box<dyn ShardTransport>>,
+        transport: &'static str,
+        elastic: Option<(WeightSource, Relink)>,
+    ) -> ShardedOrder {
+        assert_eq!(links.len(), topology.num_shards());
+        assert_eq!(topology.sizes.iter().sum::<usize>(), n);
+        let shards = AsyncShards::new(
+            links,
+            &topology.sizes,
+            d,
+            transport,
+            elastic.is_some(),
+        );
+        ShardedOrder::assemble(
+            Backend::Async(shards),
+            topology,
+            n,
+            d,
+            elastic.map(|(source, relink)| ElasticState {
+                source,
+                relink,
+                boundaries: 0,
+            }),
+        )
     }
 
     fn assemble(
         backend: Backend,
-        bases: Vec<usize>,
+        topology: Topology,
         n: usize,
+        d: usize,
+        elastic: Option<ElasticState>,
     ) -> ShardedOrder {
-        let num_shards = bases.len();
+        if elastic.is_some() {
+            assert!(
+                matches!(backend, Backend::Async(_)),
+                "elastic topologies need a transported backend"
+            );
+        }
+        let num_shards = topology.num_shards();
         ShardedOrder {
             backend,
-            bases,
+            log: vec![topology.clone()],
+            topology,
+            elastic,
+            retired_stats: LinkStats::default(),
             n,
+            d,
             merged: vec![0; n],
             route: vec![0; n],
             cursors: vec![0; num_shards],
@@ -360,9 +797,29 @@ impl ShardedOrder {
         }
     }
 
-    /// Number of shard balancers (CD-GraB's W).
+    /// Number of shard balancers (CD-GraB's W) in the current plan.
     pub fn num_shards(&self) -> usize {
-        self.cursors.len()
+        self.topology.num_shards()
+    }
+
+    /// The current [`Topology`] plan.
+    pub fn topology(&self) -> &Topology {
+        &self.topology
+    }
+
+    /// Per-epoch topology plans: entry `e` produced epoch `e`'s merged
+    /// order, and after E completed epochs a trailing E+1-th entry
+    /// records the plan behind the *next* (not yet run) epoch's order.
+    /// Static runs repeat one plan; elastic runs record every re-plan
+    /// (replay input; see `docs/determinism.md` contract 6).
+    pub fn topology_log(&self) -> &[Topology] {
+        &self.log
+    }
+
+    /// Whether this coordinator re-plans its topology at epoch
+    /// boundaries.
+    pub fn is_elastic(&self) -> bool {
+        self.elastic.is_some()
     }
 
     /// Whether this coordinator dispatches through a [`ShardTransport`]
@@ -384,10 +841,15 @@ impl ShardedOrder {
     /// shard).
     pub fn transport_stats(&self) -> TransportStats {
         match &self.backend {
-            Backend::Async(shards) => shards.stats(),
+            Backend::Async(shards) => {
+                let mut stats = shards.stats();
+                stats.retired = self.retired_stats;
+                stats
+            }
             _ => TransportStats {
                 transport: "inline",
                 per_shard: vec![LinkStats::default(); self.num_shards()],
+                retired: LinkStats::default(),
             },
         }
     }
@@ -404,7 +866,7 @@ impl ShardedOrder {
                     .collect();
                 merge_round_robin(
                     &locals,
-                    &self.bases,
+                    &self.topology.bases,
                     &mut self.merged,
                     &mut self.route,
                 );
@@ -417,7 +879,7 @@ impl ShardedOrder {
                     .collect();
                 merge_round_robin(
                     &locals,
-                    &self.bases,
+                    &self.topology.bases,
                     &mut self.merged,
                     &mut self.route,
                 );
@@ -425,6 +887,94 @@ impl ShardedOrder {
         }
         for c in self.cursors.iter_mut() {
             *c = 0;
+        }
+    }
+
+    /// The elastic epoch-boundary step, after the drain: fold the
+    /// epoch's link observations into the next plan and re-plan (fresh
+    /// split + fresh links at a bumped generation) when the plan's
+    /// sizes changed or a link was lost. Panics only when no shard
+    /// survives or the re-link itself fails.
+    fn replan_after_drain(&mut self, failures: &[Option<String>]) {
+        let Backend::Async(shards) = &mut self.backend else {
+            unreachable!("elastic coordinators are transported");
+        };
+        let el = self
+            .elastic
+            .as_mut()
+            .expect("replan_after_drain needs elastic state");
+        el.boundaries += 1;
+        let lost = failures.iter().any(|f| f.is_some());
+        for (w, f) in failures.iter().enumerate() {
+            if let Some(why) = f {
+                eprintln!(
+                    "[elastic] shard {w}/{} lost at epoch boundary \
+                     ({why}); re-planning the next epoch",
+                    failures.len()
+                );
+            }
+        }
+        let alive: Vec<bool> =
+            failures.iter().map(|f| f.is_none()).collect();
+        assert!(
+            alive.iter().any(|&a| a),
+            "all {} shard links failed mid-epoch ({} transport)",
+            failures.len(),
+            shards.transport
+        );
+        let (costs, rows) = shards.take_epoch_costs();
+        let next_weights: Vec<u64> = match &mut el.source {
+            WeightSource::Measured(planner) => planner.plan(
+                &costs,
+                &rows,
+                &alive,
+                &self.topology.weights,
+            ),
+            WeightSource::Schedule(schedule) => {
+                let idx = el.boundaries.min(schedule.len() - 1);
+                schedule[idx].clone()
+            }
+        };
+        let next = Topology::plan(
+            self.n,
+            self.topology.generation,
+            &next_weights,
+        );
+        if lost || next.sizes != self.topology.sizes {
+            let generation = self.topology.generation + 1;
+            let links = match (el.relink)(&next.sizes, generation) {
+                Ok(links) => links,
+                Err(e) => panic!(
+                    "elastic re-plan failed to open {} shard links \
+                     (generation {generation}): {e}",
+                    next.sizes.len()
+                ),
+            };
+            let transport = shards.transport;
+            // Retire the old links' counters so transport stats stay
+            // cumulative across the re-plan.
+            self.retired_stats =
+                self.retired_stats.merged(shards.stats().total());
+            *shards = AsyncShards::new(
+                links,
+                &next.sizes,
+                self.d,
+                transport,
+                true,
+            );
+            self.cursors = vec![0; next.sizes.len()];
+            self.topology = Topology { generation, ..next };
+            eprintln!(
+                "[elastic] re-planned to {} shards (weights {}, \
+                 generation {})",
+                self.topology.num_shards(),
+                self.topology.weights_label(),
+                self.topology.generation
+            );
+        } else {
+            // Weights moved inside the same sizes (or not at all): no
+            // re-handshake, no state reset — record the weights only.
+            self.topology.weights = next_weights;
         }
     }
 
@@ -441,6 +991,9 @@ impl ShardedOrder {
 
 impl OrderPolicy for ShardedOrder {
     fn name(&self) -> &'static str {
+        if self.elastic.is_some() {
+            return "cd-grab-elastic";
+        }
         match &self.backend {
             Backend::Async(shards) => match shards.transport {
                 "tcp" => "cd-grab-tcp",
@@ -528,10 +1081,18 @@ impl OrderPolicy for ShardedOrder {
                     s.epoch_end();
                 }
             }
-            Backend::Async(shards) => shards.drain_epoch(),
+            Backend::Async(shards) => {
+                let failures =
+                    shards.drain_epoch(self.elastic.is_some());
+                if self.elastic.is_some() {
+                    self.replan_after_drain(&failures);
+                }
+            }
         }
         self.observed = 0;
         self.dirty = true;
+        // Record the plan that will produce the NEXT epoch's order.
+        self.log.push(self.topology.clone());
     }
 
     fn state_bytes(&self) -> usize {
@@ -571,6 +1132,10 @@ impl OrderPolicy for ShardedOrder {
     fn transport_stats(&self) -> Option<TransportStats> {
         Some(ShardedOrder::transport_stats(self))
     }
+
+    fn topology_log(&self) -> Option<&[Topology]> {
+        Some(ShardedOrder::topology_log(self))
+    }
 }
 
 #[cfg(test)]
@@ -602,8 +1167,19 @@ mod tests {
     fn shard_ranges_partition_units() {
         let s = ShardedOrder::new(10, 2, 4);
         assert_eq!(s.num_shards(), 4);
-        assert_eq!(s.bases, vec![0, 3, 6, 8]);
+        assert_eq!(s.topology.bases, vec![0, 3, 6, 8]);
         assert_eq!(shard_sizes(&s), vec![3, 3, 2, 2]);
+        assert_eq!(s.topology.sizes, vec![3, 3, 2, 2]);
+        assert_eq!(s.topology.generation, 0);
+    }
+
+    #[test]
+    fn weighted_ranges_follow_the_weights() {
+        let s = ShardedOrder::new_weighted(60, 2, &[1, 1, 4]);
+        assert_eq!(s.num_shards(), 3);
+        assert_eq!(shard_sizes(&s), vec![10, 10, 40]);
+        assert_eq!(s.topology.bases, vec![0, 10, 20]);
+        assert_eq!(s.topology.weights_label(), "1:1:4");
     }
 
     #[test]
@@ -620,17 +1196,27 @@ mod tests {
     #[test]
     fn sharded_order_is_always_a_permutation() {
         // W shards, random n/d/block sizes, every epoch's merged order
-        // is a valid permutation of 0..n — for every backend.
+        // is a valid permutation of 0..n — for every backend, and for
+        // weighted topologies too.
         prop::forall("sharded permutations", 16, |rng| {
             let n = 1 + rng.gen_range(96) as usize;
             let d = 1 + rng.gen_range(6) as usize;
             let w = 1 + rng.gen_range(8) as usize;
             let b = 1 + rng.gen_range(9) as usize;
+            let weights: Vec<u64> =
+                (0..w).map(|_| rng.gen_range(5)).collect();
+            let weights = if weights.iter().all(|&x| x == 0) {
+                vec![1; w]
+            } else {
+                weights
+            };
             let vs = gen::vec_set(rng, n, d);
             let mut policies: Vec<ShardedOrder> = vec![
                 ShardedOrder::new(n, d, w),
                 ShardedOrder::new_gathered(n, d, w),
                 ShardedOrder::new_async(n, d, w, 2),
+                ShardedOrder::new_weighted(n, d, &weights),
+                ShardedOrder::new_async_weighted(n, d, &weights, 2),
             ];
             for p in policies.iter_mut() {
                 for _ in 0..3 {
@@ -680,6 +1266,140 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn weighted_backends_agree_with_each_other() {
+        // Contract 6's static half at unit-test scale: the same skewed
+        // weight vector produces identical orders across strided,
+        // gathered, and async dispatch.
+        prop::forall("weighted sharded backends agree", 8, |rng| {
+            let n = 1 + rng.gen_range(70) as usize;
+            let d = 1 + rng.gen_range(5) as usize;
+            let b = 1 + rng.gen_range(8) as usize;
+            let w = 1 + rng.gen_range(4) as usize;
+            let weights: Vec<u64> =
+                (0..w).map(|_| 1 + rng.gen_range(4)).collect();
+            let vs = gen::vec_set(rng, n, d);
+            let mut strided = ShardedOrder::new_weighted(n, d, &weights);
+            let mut gathered =
+                ShardedOrder::new_gathered_weighted(n, d, &weights);
+            let mut asynch =
+                ShardedOrder::new_async_weighted(n, d, &weights, 2);
+            for epoch in 0..3 {
+                feed_epoch(&mut strided, &vs, b);
+                feed_epoch(&mut gathered, &vs, b);
+                feed_epoch(&mut asynch, &vs, b);
+                let want = strided.epoch_order(0).to_vec();
+                assert_permutation(&want)?;
+                if gathered.epoch_order(0) != want.as_slice()
+                    || asynch.epoch_order(0) != want.as_slice()
+                {
+                    return Err(format!(
+                        "weighted backends diverged at epoch={epoch} \
+                         n={n} d={d} b={b} weights={weights:?}"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn elastic_frozen_schedule_matches_static_weighted_exactly() {
+        // Determinism contract 6 (frozen half) at unit-test scale: an
+        // elastic coordinator whose schedule never changes is
+        // bit-identical to the static weighted topology, across epochs
+        // and W in {1, 2, 4}. The full cross-transport version lives in
+        // tests/transport.rs.
+        prop::forall("elastic frozen == static", 8, |rng| {
+            let n = 1 + rng.gen_range(60) as usize;
+            let d = 1 + rng.gen_range(5) as usize;
+            let b = 1 + rng.gen_range(8) as usize;
+            let vs = gen::vec_set(rng, n, d);
+            for w in [1usize, 2, 4] {
+                let weights: Vec<u64> =
+                    (0..w).map(|_| 1 + rng.gen_range(3)).collect();
+                let mut fixed =
+                    ShardedOrder::new_async_weighted(n, d, &weights, 2);
+                let schedule = vec![weights.clone()];
+                let mut elastic =
+                    ShardedOrder::new_scheduled(n, d, &schedule, 2);
+                for epoch in 0..3 {
+                    feed_epoch(&mut fixed, &vs, b);
+                    feed_epoch(&mut elastic, &vs, b);
+                    if elastic.epoch_order(0) != fixed.epoch_order(0) {
+                        return Err(format!(
+                            "frozen elastic != static at w={w} \
+                             epoch={epoch} n={n} d={d} b={b} \
+                             weights={weights:?}"
+                        ));
+                    }
+                }
+                // Frozen: no re-plan ever happened.
+                assert_eq!(elastic.topology().generation, 0);
+                assert!(elastic.is_elastic());
+                assert_eq!(elastic.name(), "cd-grab-elastic");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn scheduled_shrink_replans_and_stays_valid() {
+        // A mid-run W=4 -> 3 shrink via a pinned schedule: the next
+        // epoch re-plans (generation bump, fresh identities) and every
+        // epoch's order remains a valid permutation with all n units.
+        let n = 37;
+        let d = 3;
+        let vs = gen::vec_set(&mut Rng::new(8), n, d);
+        let schedule = vec![
+            vec![1u64, 1, 1, 1],
+            vec![1u64, 1, 1, 1],
+            vec![1u64, 1, 1],
+        ];
+        let mut p = ShardedOrder::new_scheduled(n, d, &schedule, 2);
+        for epoch in 0..4 {
+            assert_permutation(p.epoch_order(0)).unwrap();
+            feed_epoch(&mut p, &vs, 5);
+            let log = ShardedOrder::topology_log(&p);
+            assert_eq!(log.len(), epoch + 2);
+        }
+        assert_eq!(p.num_shards(), 3);
+        assert_eq!(p.topology().generation, 1, "exactly one re-plan");
+        let log = ShardedOrder::topology_log(&p);
+        assert_eq!(log[0].num_shards(), 4);
+        assert_eq!(log[1].num_shards(), 4);
+        assert_eq!(log[2].num_shards(), 3);
+        // Replay: the same schedule over the same stream reproduces
+        // every epoch's order bit-for-bit.
+        let mut replay = ShardedOrder::new_scheduled(n, d, &schedule, 2);
+        let mut q = ShardedOrder::new_scheduled(n, d, &schedule, 2);
+        for _ in 0..4 {
+            feed_epoch(&mut replay, &vs, 5);
+            feed_epoch(&mut q, &vs, 5);
+            assert_eq!(replay.epoch_order(0), q.epoch_order(0));
+        }
+    }
+
+    #[test]
+    fn measured_elastic_smokes_and_logs_topologies() {
+        // The measured planner on a healthy symmetric run: orders stay
+        // valid permutations, and with the hysteresis band the plan
+        // should not churn (weights may move, sizes should not — but
+        // this is wall-clock dependent, so only validity is asserted).
+        let n = 48;
+        let d = 4;
+        let vs = gen::vec_set(&mut Rng::new(12), n, d);
+        let mut p = ShardedOrder::new_elastic(n, d, &[1, 1, 1], 2);
+        for _ in 0..3 {
+            assert_permutation(p.epoch_order(0)).unwrap();
+            feed_epoch(&mut p, &vs, 6);
+        }
+        assert_permutation(p.epoch_order(0)).unwrap();
+        assert_eq!(ShardedOrder::topology_log(&p).len(), 4);
+        let stats = ShardedOrder::transport_stats(&p);
+        assert_eq!(stats.transport, "channel");
     }
 
     #[test]
@@ -741,6 +1461,7 @@ mod tests {
             ShardedOrder::new(3, d, 8),
             ShardedOrder::new_gathered(3, d, 8),
             ShardedOrder::new_async(3, d, 8, 2),
+            ShardedOrder::new_weighted(3, d, &[2, 0, 1, 5, 0, 1, 1, 1]),
         ] {
             for _ in 0..2 {
                 assert_permutation(p.epoch_order(0)).unwrap();

@@ -1,0 +1,618 @@
+//! Shard topology plans — how a CD-GraB coordinator lays its `n`
+//! ordering units out over W shard balancers, and how that layout may
+//! change between epochs.
+//!
+//! CD-GraB (Cooper et al. 2023) assumes W equally-sized, always-healthy
+//! workers. Production workers are neither: throughput is uneven,
+//! links drop mid-run, and fleets resize. The GraB guarantee (Lu et
+//! al. 2022) only needs every example balanced once per epoch — the
+//! shard *partition* is free to change at epoch boundaries. This module
+//! supplies the pieces that make that safe and replayable:
+//!
+//! * [`split_units_weighted`] — deterministic largest-remainder
+//!   apportionment of `0..n` into contiguous ranges proportional to
+//!   integer shard weights (the equal-weight case reproduces the
+//!   classic sizes-differ-by-at-most-one split exactly);
+//! * [`Topology`] — one epoch's frozen plan (generation counter,
+//!   weights, sizes, base offsets), recorded per epoch by
+//!   [`crate::ordering::ShardedOrder`] and surfaced through
+//!   `TrainResult` and the `exp cdgrab` CSV so any elastic run can be
+//!   re-executed from its recorded weight schedule;
+//! * [`ElasticPlanner`] — derives the next epoch's weights from the
+//!   coordinator's observed per-shard link costs (EWMA over per-row
+//!   blocked time, which includes queue-stall waits), **quantized** to
+//!   small integers with a hysteresis band so healthy symmetric runs
+//!   never re-plan — frozen weights keep an elastic run bit-identical
+//!   to the equivalent static topology (determinism contract 6,
+//!   `docs/determinism.md`);
+//! * [`WeightSource`] — where an elastic coordinator's next weights
+//!   come from: measured (production) or a pinned per-epoch schedule
+//!   (replay of a recorded run, tests).
+//!
+//! Weights are plain integers so plans serialize losslessly ("1:1:4")
+//! and replay is exact; wall-clock measurement only ever enters through
+//! the planner, whose output is recorded.
+
+/// Upper quantization bucket for measured weights: the fastest shard
+/// maps to this weight, slower shards to proportionally smaller
+/// integers (minimum 1). Small enough that plans stay readable and
+/// stable, large enough to express an 8× throughput skew.
+pub const WEIGHT_SCALE: u64 = 8;
+
+/// Minimum per-row cost ratio (slowest / fastest shard) before the
+/// measured planner moves weight toward the fast shards. Below this
+/// the skew is treated as noise — the hysteresis that keeps contract
+/// 6's "frozen weights ≡ static topology" the common case.
+pub const IMBALANCE_THRESHOLD: f64 = 1.5;
+
+/// Ratio at or below which a previously skewed plan is considered
+/// *recovered* and snapped back to equal weights. Strictly less than
+/// [`IMBALANCE_THRESHOLD`], so a skew hovering near one threshold
+/// holds the current plan instead of oscillating between re-plans
+/// (each re-plan resets balancer state); without this lower edge a
+/// single noisy epoch's skew would ratchet in forever.
+pub const RECOVERY_THRESHOLD: f64 = 1.2;
+
+/// Absolute noise floor on the per-row blocked-time EWMA (seconds).
+/// When even the *slowest* shard sits below this, the links are
+/// keeping up and the measured "skew" is scheduler/clock jitter — a
+/// ratio over microsecond-scale residue must not re-plan (each re-plan
+/// resets balancer state). Sub-floor epochs are treated as healthy:
+/// the plan snaps to (or stays at) equal weights.
+pub const MIN_SIGNAL_PER_ROW: f64 = 1e-6;
+
+/// Split `n` units into `weights.len()` contiguous ranges with sizes
+/// proportional to the weights, by largest-remainder apportionment.
+/// Returns `(sizes, bases)` with `bases[w]` the global id of shard
+/// `w`'s local unit 0.
+///
+/// Deterministic and stable: exact quotas `n·w/Σw` are floored, then
+/// the leftover units go to the largest fractional remainders (ties to
+/// the lower shard index). An all-zero weight vector is treated as all
+/// ones. When `n >= W`, zero-sized shards (zero or tiny weights) are
+/// clamped up to one unit, taken from the largest shard — every live
+/// shard owns at least one unit so its balancer participates; when
+/// `n < W` the trailing shards stay empty, as in the equal split.
+pub fn split_units_weighted(
+    n: usize,
+    weights: &[u64],
+) -> (Vec<usize>, Vec<usize>) {
+    let w_count = weights.len();
+    assert!(w_count >= 1, "need at least one shard");
+    let ones;
+    let eff: &[u64] = if weights.iter().all(|&w| w == 0) {
+        ones = vec![1u64; w_count];
+        &ones
+    } else {
+        weights
+    };
+    let sum: u128 = eff.iter().map(|&w| w as u128).sum();
+    let mut sizes = vec![0usize; w_count];
+    let mut rems: Vec<(u128, usize)> = Vec::with_capacity(w_count);
+    let mut allocated = 0usize;
+    for (w, &weight) in eff.iter().enumerate() {
+        let num = n as u128 * weight as u128;
+        sizes[w] = (num / sum) as usize;
+        allocated += sizes[w];
+        rems.push((num % sum, w));
+    }
+    // Largest remainder first; ties broken by the lower shard index so
+    // the apportionment is a pure function of (n, weights).
+    rems.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+    for &(_, w) in rems.iter().take(n - allocated) {
+        sizes[w] += 1;
+    }
+    // Clamp: with at least one unit per shard available, no shard may
+    // end up empty (a zero/tiny weight still owns one unit). The donor
+    // is always the current largest shard, which must hold >= 2 units
+    // while any shard holds 0 and n >= W.
+    if n >= w_count {
+        loop {
+            let Some(zero) = sizes.iter().position(|&s| s == 0) else {
+                break;
+            };
+            let mut donor = 0usize;
+            for (w, &s) in sizes.iter().enumerate() {
+                if s > sizes[donor] {
+                    donor = w;
+                }
+            }
+            debug_assert!(sizes[donor] >= 2);
+            sizes[donor] -= 1;
+            sizes[zero] += 1;
+        }
+    }
+    let mut bases = Vec::with_capacity(w_count);
+    let mut start = 0usize;
+    for &s in &sizes {
+        bases.push(start);
+        start += s;
+    }
+    debug_assert_eq!(start, n);
+    (sizes, bases)
+}
+
+/// One epoch's frozen shard layout: which weights were in force, the
+/// sizes/bases they apportioned, and the re-plan generation. Recording
+/// one `Topology` per epoch is what makes elastic runs replayable —
+/// re-running with the recorded weight schedule reproduces every merge
+/// bit for bit (contract 6).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Topology {
+    /// Monotone re-plan counter: 0 for the construction-time plan,
+    /// bumped every time the coordinator re-splits and re-handshakes.
+    /// Carried in the TCP `Hello` so workers can tell a re-handshake
+    /// from a duplicate connection.
+    pub generation: u64,
+    /// Integer shard weights the sizes were apportioned from.
+    pub weights: Vec<u64>,
+    /// Units owned by each shard (sums to the coordinator's `n`).
+    pub sizes: Vec<usize>,
+    /// Global unit id of each shard's local unit 0.
+    pub bases: Vec<usize>,
+}
+
+impl Topology {
+    /// Plan a topology: apportion `n` units over `weights` at the given
+    /// generation.
+    pub fn plan(n: usize, generation: u64, weights: &[u64]) -> Topology {
+        let (sizes, bases) = split_units_weighted(n, weights);
+        Topology {
+            generation,
+            weights: weights.to_vec(),
+            sizes,
+            bases,
+        }
+    }
+
+    /// The classic CD-GraB layout: `num_shards` equal weights at
+    /// generation 0 (sizes differ by at most one).
+    pub fn equal(n: usize, num_shards: usize) -> Topology {
+        Topology::plan(n, 0, &vec![1u64; num_shards])
+    }
+
+    /// Number of shards (CD-GraB's W) in this plan.
+    pub fn num_shards(&self) -> usize {
+        self.weights.len()
+    }
+
+    /// The weights as a compact `"1:1:4"` label (CSV / log column).
+    pub fn weights_label(&self) -> String {
+        let parts: Vec<String> =
+            self.weights.iter().map(|w| w.to_string()).collect();
+        parts.join(":")
+    }
+}
+
+/// Parse a `"1:1:4"` / `"1,1,4"` weights label back into a weight
+/// vector (the inverse of [`Topology::weights_label`]; also the parser
+/// behind the `--weights` CLI flag and the `weights` TOML key).
+pub fn parse_weights(s: &str) -> Result<Vec<u64>, String> {
+    let parts: Vec<&str> = s
+        .split(|c| c == ':' || c == ',')
+        .map(str::trim)
+        .filter(|p| !p.is_empty())
+        .collect();
+    if parts.is_empty() {
+        return Err("empty weights list".to_string());
+    }
+    let mut out = Vec::with_capacity(parts.len());
+    for p in parts {
+        match p.parse::<u64>() {
+            Ok(w) => out.push(w),
+            Err(_) => {
+                return Err(format!(
+                    "weight {p:?} is not a non-negative integer"
+                ))
+            }
+        }
+    }
+    if out.iter().all(|&w| w == 0) {
+        return Err("weights must not be all zero".to_string());
+    }
+    Ok(out)
+}
+
+/// Derives the next epoch's integer shard weights from the
+/// coordinator's measured per-shard link costs.
+///
+/// Per epoch the coordinator reports, for each shard, the seconds it
+/// spent blocked on that shard's link (scratch acquisition + block
+/// sends — queue stalls and full socket buffers both land here) and
+/// the rows it shipped. The planner folds per-row cost into an EWMA,
+/// inverts it into a relative speed, and quantizes speeds onto
+/// `1..=WEIGHT_SCALE` (gcd-reduced). Two stabilizers keep plans
+/// replayable and calm:
+///
+/// * **two-threshold hysteresis** — weight moves toward the fast
+///   shards only when the slowest/fastest per-row cost ratio exceeds
+///   [`IMBALANCE_THRESHOLD`], snaps back to equal weights once the
+///   ratio falls to [`RECOVERY_THRESHOLD`] or below (a past skew does
+///   not ratchet in forever), and holds the current plan in between —
+///   so a healthy symmetric run never re-plans (contract 6's frozen
+///   case) and a skew hovering near one threshold cannot oscillate;
+/// * **quantization** — output weights are small integers, so the
+///   recorded per-epoch plan replays exactly via
+///   [`WeightSource::Schedule`].
+#[derive(Clone, Debug)]
+pub struct ElasticPlanner {
+    /// EWMA of per-row blocked seconds per live shard, in shard order.
+    ewma: Vec<f64>,
+    /// EWMA smoothing factor in (0, 1]: weight of the newest epoch.
+    alpha: f64,
+}
+
+impl ElasticPlanner {
+    /// A planner over `num_shards` initial shards with the default
+    /// smoothing factor.
+    pub fn new(num_shards: usize) -> ElasticPlanner {
+        ElasticPlanner { ewma: vec![0.0; num_shards], alpha: 0.4 }
+    }
+
+    /// Fold one epoch of observations and return the next epoch's
+    /// weights **over the surviving shards**, in shard order.
+    ///
+    /// `costs[w]` / `rows[w]` are the epoch's blocked seconds and
+    /// shipped rows for shard `w`; `alive[w]` is false for a shard
+    /// whose link failed this epoch (its entry is dropped from the
+    /// planner's state and from the returned weights). `current` is
+    /// the weight vector in force. All slices must have the planner's
+    /// current shard count.
+    pub fn plan(
+        &mut self,
+        costs: &[f64],
+        rows: &[usize],
+        alive: &[bool],
+        current: &[u64],
+    ) -> Vec<u64> {
+        assert_eq!(costs.len(), self.ewma.len());
+        assert_eq!(rows.len(), self.ewma.len());
+        assert_eq!(alive.len(), self.ewma.len());
+        assert_eq!(current.len(), self.ewma.len());
+        for w in 0..self.ewma.len() {
+            if alive[w] && rows[w] > 0 {
+                let per_row = costs[w] / rows[w] as f64;
+                self.ewma[w] = if self.ewma[w] == 0.0 {
+                    per_row
+                } else {
+                    self.alpha * per_row
+                        + (1.0 - self.alpha) * self.ewma[w]
+                };
+            }
+        }
+        // Compact to the survivors.
+        let mut surv_ewma = Vec::new();
+        let mut surv_current = Vec::new();
+        for w in 0..self.ewma.len() {
+            if alive[w] {
+                surv_ewma.push(self.ewma[w]);
+                surv_current.push(current[w]);
+            }
+        }
+        self.ewma = surv_ewma;
+        // No confident signal (a shard without measurements yet):
+        // keep the current weights.
+        let mut lo = f64::INFINITY;
+        let mut hi = 0.0f64;
+        for &e in &self.ewma {
+            lo = lo.min(e);
+            hi = hi.max(e);
+        }
+        if self.ewma.is_empty()
+            || lo <= 0.0
+            || !lo.is_finite()
+            || !hi.is_finite()
+        {
+            return surv_current;
+        }
+        let ratio = hi / lo;
+        if hi < MIN_SIGNAL_PER_ROW || ratio <= RECOVERY_THRESHOLD {
+            // Healthy fleet — links keeping up (sub-floor residue) or
+            // skew inside the recovery band: snap a previously skewed
+            // plan back to equal weights (no-op when already equal).
+            return vec![1; self.ewma.len()];
+        }
+        if ratio < IMBALANCE_THRESHOLD {
+            // Inside the hysteresis band: hold the current plan.
+            return surv_current;
+        }
+        // Quantize relative speeds (1/cost) onto 1..=WEIGHT_SCALE.
+        let max_speed = 1.0 / lo;
+        let mut weights: Vec<u64> = self
+            .ewma
+            .iter()
+            .map(|&e| {
+                let s = (1.0 / e) / max_speed;
+                ((s * WEIGHT_SCALE as f64).round() as u64)
+                    .clamp(1, WEIGHT_SCALE)
+            })
+            .collect();
+        let g = weights.iter().copied().fold(0, gcd);
+        if g > 1 {
+            for w in weights.iter_mut() {
+                *w /= g;
+            }
+        }
+        weights
+    }
+}
+
+fn gcd(a: u64, b: u64) -> u64 {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+/// Where an elastic coordinator's next-epoch weights come from.
+pub enum WeightSource {
+    /// Measure link costs and re-plan when the skew is sustained (the
+    /// production mode behind `--elastic`).
+    Measured(ElasticPlanner),
+    /// A pinned per-epoch weight schedule: entry `e` is the weight
+    /// vector for epoch `e` (the last entry repeats). This is how a
+    /// recorded elastic run — including mid-run shard-count changes —
+    /// is replayed bit-for-bit, and how contract-6 tests freeze the
+    /// plan deterministically.
+    Schedule(Vec<Vec<u64>>),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    /// Reference equal split (the pre-elastic `split_units` semantics:
+    /// sizes differ by at most one, larger shards first).
+    fn equal_split(n: usize, w: usize) -> Vec<usize> {
+        (0..w).map(|i| n / w + usize::from(i < n % w)).collect()
+    }
+
+    #[test]
+    fn equal_weights_reproduce_the_classic_split() {
+        prop::forall("weighted split equal == classic", 64, |rng| {
+            let n = rng.gen_range(200) as usize;
+            let w = 1 + rng.gen_range(12) as usize;
+            let (sizes, bases) =
+                split_units_weighted(n, &vec![1u64; w]);
+            if sizes != equal_split(n, w) {
+                return Err(format!(
+                    "n={n} w={w}: {sizes:?} != {:?}",
+                    equal_split(n, w)
+                ));
+            }
+            let mut start = 0;
+            for (b, s) in bases.iter().zip(&sizes) {
+                if *b != start {
+                    return Err(format!("bases not contiguous: {bases:?}"));
+                }
+                start += s;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn weighted_split_covers_disjointly_and_proportionally() {
+        // Satellite property test: disjoint cover of 0..n, exact weight
+        // proportions up to rounding (quota within 1 unit before any
+        // >=1 clamping), deterministic stable ordering.
+        prop::forall("weighted split cover + proportion", 128, |rng| {
+            let n = rng.gen_range(500) as usize;
+            let w = 1 + rng.gen_range(9) as usize;
+            let weights: Vec<u64> =
+                (0..w).map(|_| rng.gen_range(17)).collect();
+            let (sizes, bases) = split_units_weighted(n, &weights);
+            let (sizes2, bases2) = split_units_weighted(n, &weights);
+            if sizes != sizes2 || bases != bases2 {
+                return Err("split is not deterministic".to_string());
+            }
+            // Disjoint contiguous cover of 0..n.
+            let mut start = 0usize;
+            for (b, s) in bases.iter().zip(&sizes) {
+                if *b != start {
+                    return Err(format!(
+                        "shard base {b} != running start {start}"
+                    ));
+                }
+                start += s;
+            }
+            if start != n {
+                return Err(format!("cover ends at {start}, n={n}"));
+            }
+            // Proportionality: when no clamping was needed (every
+            // apportioned shard nonzero or n < w), each size is within
+            // one unit of its exact quota.
+            let sum: f64 = if weights.iter().all(|&x| x == 0) {
+                w as f64
+            } else {
+                weights.iter().sum::<u64>() as f64
+            };
+            let quota = |i: usize| -> f64 {
+                let wi = if weights.iter().all(|&x| x == 0) {
+                    1.0
+                } else {
+                    weights[i] as f64
+                };
+                n as f64 * wi / sum
+            };
+            let clamped = n >= w
+                && (0..w).any(|i| (quota(i).floor() as usize) == 0);
+            if !clamped {
+                for (i, &s) in sizes.iter().enumerate() {
+                    let q = quota(i);
+                    if (s as f64 - q).abs() >= 1.0 {
+                        return Err(format!(
+                            "shard {i}: size {s} vs quota {q} \
+                             (weights {weights:?}, n={n})"
+                        ));
+                    }
+                }
+            }
+            // Clamp invariant: with n >= w every shard owns >= 1 unit.
+            if n >= w && sizes.iter().any(|&s| s == 0) {
+                return Err(format!(
+                    "empty shard despite n={n} >= w={w}: {sizes:?}"
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn weighted_split_edge_cases() {
+        // Fewer units than shards: trailing shards empty, like the
+        // equal split.
+        let (sizes, _) = split_units_weighted(2, &[1, 1, 1, 1]);
+        assert_eq!(sizes.iter().sum::<usize>(), 2);
+        assert_eq!(sizes.iter().filter(|&&s| s > 0).count(), 2);
+        // A zero-weight shard is clamped to one unit when n >= W.
+        let (sizes, _) = split_units_weighted(10, &[0, 1, 1]);
+        assert_eq!(sizes.iter().sum::<usize>(), 10);
+        assert!(sizes[0] >= 1, "zero-weight shard got {sizes:?}");
+        // All-zero weights degrade to the equal split.
+        let (sizes, _) = split_units_weighted(9, &[0, 0, 0]);
+        assert_eq!(sizes, vec![3, 3, 3]);
+        // Heavy skew: proportions hold.
+        let (sizes, bases) = split_units_weighted(60, &[1, 1, 4]);
+        assert_eq!(sizes, vec![10, 10, 40]);
+        assert_eq!(bases, vec![0, 10, 20]);
+        // W shrinking between epochs: the same n re-splits cleanly
+        // over fewer shards (the mid-run shard-loss path).
+        let (s4, _) = split_units_weighted(13, &[1, 1, 1, 1]);
+        let (s3, b3) = split_units_weighted(13, &[1, 1, 1]);
+        assert_eq!(s4.iter().sum::<usize>(), 13);
+        assert_eq!(s3.iter().sum::<usize>(), 13);
+        assert_eq!(b3, vec![0, 5, 9]);
+        // Single shard owns everything.
+        let (sizes, bases) = split_units_weighted(7, &[3]);
+        assert_eq!((sizes, bases), (vec![7], vec![0]));
+    }
+
+    #[test]
+    fn weights_label_roundtrip() {
+        let t = Topology::plan(60, 2, &[1, 1, 4]);
+        assert_eq!(t.weights_label(), "1:1:4");
+        assert_eq!(parse_weights("1:1:4").unwrap(), vec![1, 1, 4]);
+        assert_eq!(parse_weights("2,3").unwrap(), vec![2, 3]);
+        assert!(parse_weights("").is_err());
+        assert!(parse_weights("0,0").is_err());
+        assert!(parse_weights("a,b").is_err());
+        assert_eq!(t.num_shards(), 3);
+        assert_eq!(t.generation, 2);
+    }
+
+    #[test]
+    fn planner_freezes_inside_the_hysteresis_band() {
+        // Near-identical per-row costs: the plan must not move off the
+        // current weights (contract 6's frozen case).
+        let mut p = ElasticPlanner::new(3);
+        let current = vec![1u64, 1, 1];
+        for _ in 0..5 {
+            let w = p.plan(
+                &[1.0e-3, 1.05e-3, 0.97e-3],
+                &[100, 100, 100],
+                &[true, true, true],
+                &current,
+            );
+            assert_eq!(w, current);
+        }
+    }
+
+    #[test]
+    fn planner_recovers_to_equal_weights_after_a_transient_skew() {
+        // A plan skewed by a past noisy epoch must not ratchet in: once
+        // the measured ratio is back under the recovery threshold the
+        // weights snap back to equal.
+        let mut p = ElasticPlanner::new(2);
+        let w = p.plan(
+            &[1.0e-3, 1.02e-3],
+            &[100, 100],
+            &[true, true],
+            &[1, 4], // inherited skew from an earlier epoch
+        );
+        assert_eq!(w, vec![1, 1], "healthy fleet must re-balance");
+        // In the dead band between recovery and imbalance thresholds,
+        // the current plan holds (no oscillation).
+        let mut p = ElasticPlanner::new(2);
+        let w = p.plan(
+            &[1.3e-3, 1.0e-3],
+            &[100, 100],
+            &[true, true],
+            &[1, 2],
+        );
+        assert_eq!(w, vec![1, 2], "dead band must hold the plan");
+    }
+
+    #[test]
+    fn planner_quantizes_a_sustained_skew() {
+        // One shard 4x slower per row: after the EWMA settles the plan
+        // must shift weight away from it, with integer weights.
+        let mut p = ElasticPlanner::new(2);
+        let mut w = vec![1u64, 1];
+        for _ in 0..8 {
+            w = p.plan(
+                &[4.0e-3, 1.0e-3],
+                &[100, 100],
+                &[true, true],
+                &w,
+            );
+        }
+        assert!(w[1] > w[0], "fast shard must outweigh slow: {w:?}");
+        assert!(w.iter().all(|&x| (1..=WEIGHT_SCALE).contains(&x)));
+    }
+
+    #[test]
+    fn planner_ignores_sub_floor_jitter() {
+        // Microsecond-scale blocked-time residue on an unloaded
+        // machine: even a large *ratio* over sub-floor costs must not
+        // skew the plan — that would quantize clock jitter.
+        let mut p = ElasticPlanner::new(2);
+        let w = p.plan(
+            &[3.0e-8, 1.0e-8], // 3x ratio, but ~0 absolute
+            &[100, 100],
+            &[true, true],
+            &[1, 1],
+        );
+        assert_eq!(w, vec![1, 1], "jitter must not re-plan: {w:?}");
+    }
+
+    #[test]
+    fn planner_drops_lost_shards() {
+        let mut p = ElasticPlanner::new(3);
+        let w = p.plan(
+            &[1.0e-3, 1.0e-3, 1.0e-3],
+            &[10, 10, 10],
+            &[true, false, true],
+            &[1, 1, 1],
+        );
+        assert_eq!(w.len(), 2, "lost shard must be dropped: {w:?}");
+        // Next epoch's slices have the shrunken length.
+        let w = p.plan(
+            &[1.0e-3, 1.0e-3],
+            &[10, 10],
+            &[true, true],
+            &w,
+        );
+        assert_eq!(w.len(), 2);
+    }
+
+    #[test]
+    fn seeded_schedules_are_pure() {
+        // Determinism spot-check used by replay: the same (n, weights)
+        // always plan the same topology.
+        let mut rng = Rng::new(11);
+        for _ in 0..32 {
+            let n = 1 + rng.gen_range(300) as usize;
+            let w = 1 + rng.gen_range(6) as usize;
+            let weights: Vec<u64> =
+                (0..w).map(|_| rng.gen_range(9)).collect();
+            assert_eq!(
+                Topology::plan(n, 1, &weights),
+                Topology::plan(n, 1, &weights)
+            );
+        }
+    }
+}

@@ -6,7 +6,7 @@
 //!
 //! | frame kind | payload |
 //! |---|---|
-//! | `Hello`    | `u32 local_n`, `u32 d` |
+//! | `Hello`    | `u32 local_n`, `u32 d`, `u32 generation` |
 //! | `Ack`      | empty |
 //! | `Block`    | `u32 rows`, `u32 d`, then `rows × d` f32 bit patterns |
 //! | `EpochEnd` | empty |
@@ -24,13 +24,20 @@
 use crate::util::ser::{WireError, MAX_FRAME_PAYLOAD};
 
 /// Handshake parameters announced by the coordinator when opening one
-/// shard link: the shard's local unit count and the gradient dimension.
+/// shard link: the shard's local unit count, the gradient dimension,
+/// and the coordinator's topology generation (0 for a run's first
+/// plan; an elastic coordinator bumps it on every re-split, so a
+/// worker server can tell a re-handshake after shard migration from a
+/// duplicate connection).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Hello {
     /// Number of ordering units owned by this shard.
     pub local_n: u32,
     /// Gradient dimension `d`.
     pub d: u32,
+    /// Topology generation this link belongs to (see
+    /// [`crate::ordering::topology::Topology::generation`]).
+    pub generation: u32,
 }
 
 /// Encode a [`Hello`] payload.
@@ -38,19 +45,21 @@ pub fn encode_hello(hello: Hello, out: &mut Vec<u8>) {
     out.clear();
     out.extend_from_slice(&hello.local_n.to_le_bytes());
     out.extend_from_slice(&hello.d.to_le_bytes());
+    out.extend_from_slice(&hello.generation.to_le_bytes());
 }
 
 /// Decode a [`Hello`] payload.
 pub fn decode_hello(payload: &[u8]) -> Result<Hello, WireError> {
-    if payload.len() != 8 {
+    if payload.len() != 12 {
         return Err(WireError::Malformed(format!(
-            "hello payload is {} bytes, expected 8",
+            "hello payload is {} bytes, expected 12",
             payload.len()
         )));
     }
     Ok(Hello {
         local_n: u32::from_le_bytes(payload[0..4].try_into().unwrap()),
         d: u32::from_le_bytes(payload[4..8].try_into().unwrap()),
+        generation: u32::from_le_bytes(payload[8..12].try_into().unwrap()),
     })
 }
 
@@ -219,9 +228,11 @@ mod tests {
     #[test]
     fn hello_roundtrip() {
         let mut buf = Vec::new();
-        let h = Hello { local_n: 1000, d: 7850 };
+        let h = Hello { local_n: 1000, d: 7850, generation: 3 };
         encode_hello(h, &mut buf);
+        assert_eq!(buf.len(), 12);
         assert_eq!(decode_hello(&buf).unwrap(), h);
+        assert!(decode_hello(&buf[..8]).is_err());
         assert!(decode_hello(&buf[..7]).is_err());
     }
 

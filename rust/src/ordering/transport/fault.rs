@@ -1,0 +1,265 @@
+//! Seeded fault injection for shard transports — the chaos layer
+//! behind the `fault-injection` feature (also compiled for unit
+//! tests).
+//!
+//! [`FaultTransport`] wraps any [`ShardTransport`] and perturbs the
+//! link according to a deterministic, seeded [`FaultPlan`]: dropped
+//! blocks (the rows silently vanish), duplicated blocks (the worker
+//! sees an epoch-overflowing replay), delayed deliveries, and mid-epoch
+//! disconnects. The coordinator contract under every fault is the one
+//! the healthy transports already guarantee: the failure surfaces as a
+//! **typed error at the epoch boundary** (or, for the in-process
+//! channel transport, the worker's own panic payload) — never a hang
+//! and never a partially merged order. `tests/transport.rs` asserts
+//! exactly that under the CI `chaos` job's timeout guard, and the
+//! elastic coordinator's shard-loss re-planning is exercised by
+//! injecting disconnects into its links.
+//!
+//! Faults are injected on the coordinator→worker path only; the plan is
+//! a pure function of its seed, so every chaos failure reproduces from
+//! the printed seed.
+
+use super::{EpochReport, LinkStats, ShardTransport, TransportError};
+use crate::ordering::queue::ScratchBlock;
+use crate::util::rng::Rng;
+
+/// A deterministic fault schedule for one shard link. Block indices
+/// count `send_block` calls on this link from 0, across epochs.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    /// Blocks whose rows are silently dropped (an empty block is
+    /// forwarded in their place so pooled buffers keep circulating).
+    pub drop_blocks: Vec<usize>,
+    /// Blocks delivered twice (the duplicate is a fresh copy).
+    pub dup_blocks: Vec<usize>,
+    /// `(block index, delay in milliseconds)` sleeps before delivery.
+    pub delay_blocks: Vec<(usize, u64)>,
+    /// Kill the link just before this `send_block` call (mid-epoch
+    /// disconnect: the inner transport is dropped, every later call
+    /// fails, and `recv_report` returns a typed `Disconnected`).
+    pub disconnect_before: Option<usize>,
+}
+
+impl FaultPlan {
+    /// The empty plan (a transparent wrapper).
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// A plan that injects exactly one silent block drop.
+    pub fn drop_block(at: usize) -> FaultPlan {
+        FaultPlan { drop_blocks: vec![at], ..FaultPlan::default() }
+    }
+
+    /// A plan that delivers one block twice.
+    pub fn duplicate_block(at: usize) -> FaultPlan {
+        FaultPlan { dup_blocks: vec![at], ..FaultPlan::default() }
+    }
+
+    /// A plan that kills the link just before its `at`-th block send.
+    pub fn disconnect_before(at: usize) -> FaultPlan {
+        FaultPlan {
+            disconnect_before: Some(at),
+            ..FaultPlan::default()
+        }
+    }
+
+    /// A seeded random plan over a link expected to carry about
+    /// `expected_blocks` sends: one drop, one duplicate, and one short
+    /// delay at independently drawn indices (no disconnect — inject
+    /// that explicitly where the test wants it). Pure in `seed`.
+    pub fn seeded(seed: u64, expected_blocks: usize) -> FaultPlan {
+        let span = expected_blocks.max(1) as u64;
+        let mut rng = Rng::new(seed ^ 0xFA17);
+        FaultPlan {
+            drop_blocks: vec![rng.gen_range(span) as usize],
+            dup_blocks: vec![rng.gen_range(span) as usize],
+            delay_blocks: vec![(
+                rng.gen_range(span) as usize,
+                1 + rng.gen_range(3),
+            )],
+            disconnect_before: None,
+        }
+    }
+}
+
+/// A [`ShardTransport`] wrapper that injects the faults of a
+/// [`FaultPlan`] into the coordinator→worker path. See the module docs
+/// for the contract every fault must still satisfy.
+pub struct FaultTransport {
+    inner: Option<Box<dyn ShardTransport>>,
+    plan: FaultPlan,
+    blocks_seen: usize,
+    injected: Vec<String>,
+    /// Cached stats snapshot so counters survive an injected
+    /// disconnect (the inner link is dropped on injection).
+    last_stats: LinkStats,
+}
+
+impl FaultTransport {
+    /// Wrap `inner` under `plan`.
+    pub fn new(
+        inner: Box<dyn ShardTransport>,
+        plan: FaultPlan,
+    ) -> FaultTransport {
+        FaultTransport {
+            inner: Some(inner),
+            plan,
+            blocks_seen: 0,
+            injected: Vec::new(),
+            last_stats: LinkStats::default(),
+        }
+    }
+
+    /// Human-readable log of the faults injected so far (test
+    /// assertions: the planned faults actually fired).
+    pub fn injected(&self) -> &[String] {
+        &self.injected
+    }
+}
+
+impl ShardTransport for FaultTransport {
+    fn acquire(&mut self) -> Option<ScratchBlock> {
+        self.inner.as_mut()?.acquire()
+    }
+
+    fn send_block(&mut self, block: ScratchBlock) -> bool {
+        let k = self.blocks_seen;
+        self.blocks_seen += 1;
+        if self.plan.disconnect_before == Some(k) {
+            if let Some(inner) = self.inner.take() {
+                self.last_stats = inner.stats();
+            }
+            self.injected
+                .push(format!("disconnect before block {k}"));
+            return false;
+        }
+        let Some(inner) = self.inner.as_mut() else {
+            return false;
+        };
+        if let Some(&(_, ms)) = self
+            .plan
+            .delay_blocks
+            .iter()
+            .find(|&&(at, _)| at == k)
+        {
+            self.injected.push(format!("delay {ms}ms at block {k}"));
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+        }
+        // Drop BEFORE duplicating: a drop and a dup colliding on the
+        // same index must still lose the rows (an empty original plus
+        // a full copy would cancel out and no fault would surface).
+        let mut block = block;
+        if self.plan.drop_blocks.contains(&k) {
+            self.injected.push(format!(
+                "drop block {k} ({} rows)",
+                block.rows()
+            ));
+            block.clear(); // forward empty: rows vanish, buffer circulates
+        }
+        let duplicate = if self.plan.dup_blocks.contains(&k) {
+            let mut copy = ScratchBlock::new(block.dim());
+            for row in block.as_grad_block().iter_rows() {
+                copy.push_row(row);
+            }
+            self.injected.push(format!("duplicate block {k}"));
+            Some(copy)
+        } else {
+            None
+        };
+        let mut ok = inner.send_block(block);
+        if let Some(copy) = duplicate {
+            ok = inner.send_block(copy) && ok;
+        }
+        ok
+    }
+
+    fn end_epoch(&mut self) -> bool {
+        match self.inner.as_mut() {
+            Some(inner) => inner.end_epoch(),
+            None => false,
+        }
+    }
+
+    fn recv_report(&mut self) -> Result<EpochReport, TransportError> {
+        match self.inner.as_mut() {
+            Some(inner) => inner.recv_report(),
+            None => Err(TransportError::Disconnected(
+                "injected fault: link killed mid-epoch".to_string(),
+            )),
+        }
+    }
+
+    fn stats(&self) -> LinkStats {
+        match self.inner.as_ref() {
+            Some(inner) => inner.stats(),
+            None => self.last_stats,
+        }
+    }
+
+    fn buffer_bytes(&self) -> usize {
+        self.inner.as_ref().map(|i| i.buffer_bytes()).unwrap_or(0)
+    }
+
+    #[cfg(test)]
+    fn poison(&mut self) {
+        if let Some(inner) = self.inner.as_mut() {
+            inner.poison();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ordering::transport::ChannelTransport;
+
+    fn link(n: usize, d: usize, plan: FaultPlan) -> FaultTransport {
+        FaultTransport::new(
+            Box::new(ChannelTransport::spawn(n, d, 2)),
+            plan,
+        )
+    }
+
+    #[test]
+    fn transparent_plan_round_trips() {
+        let mut l = link(2, 2, FaultPlan::none());
+        let mut b = l.acquire().unwrap();
+        b.push_row(&[1.0, -1.0]);
+        b.push_row(&[-1.0, 1.0]);
+        assert!(l.send_block(b));
+        assert!(l.end_epoch());
+        let report = l.recv_report().unwrap();
+        assert_eq!(report.order.len(), 2);
+        assert!(l.injected().is_empty());
+    }
+
+    #[test]
+    fn injected_disconnect_yields_typed_error_not_hang() {
+        let mut l = link(2, 2, FaultPlan::disconnect_before(0));
+        let mut b = l.acquire().unwrap();
+        b.push_row(&[1.0, -1.0]);
+        assert!(!l.send_block(b), "killed link must refuse the send");
+        assert!(l.acquire().is_none());
+        assert!(!l.end_epoch());
+        let err = l.recv_report().expect_err("typed disconnect");
+        assert!(matches!(err, TransportError::Disconnected(_)), "{err}");
+        assert_eq!(l.injected().len(), 1);
+    }
+
+    #[test]
+    fn seeded_plans_are_reproducible() {
+        let a = FaultPlan::seeded(9, 40);
+        let b = FaultPlan::seeded(9, 40);
+        assert_eq!(a.drop_blocks, b.drop_blocks);
+        assert_eq!(a.dup_blocks, b.dup_blocks);
+        assert_eq!(a.delay_blocks, b.delay_blocks);
+        let c = FaultPlan::seeded(10, 40);
+        assert!(
+            a.drop_blocks != c.drop_blocks
+                || a.dup_blocks != c.dup_blocks
+                || a.delay_blocks != c.delay_blocks,
+            "different seeds should differ somewhere"
+        );
+    }
+}

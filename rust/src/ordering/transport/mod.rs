@@ -32,13 +32,15 @@
 //! `tests/transport.rs`).
 
 pub mod codec;
+#[cfg(any(test, feature = "fault-injection"))]
+pub mod fault;
 pub mod tcp;
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
 
 use crate::ordering::queue::{
-    block_queue, BlockReceiver, BlockSender, ScratchBlock, ShardMsg,
+    block_queue_sized, BlockReceiver, BlockSender, ScratchBlock, ShardMsg,
 };
 use crate::ordering::{OrderPolicy, PairBalance};
 use crate::util::ser::{FrameReadError, WireError};
@@ -146,16 +148,24 @@ impl LinkStats {
 pub struct TransportStats {
     /// Short transport name ("inline", "channel", "tcp").
     pub transport: &'static str,
-    /// One counter snapshot per shard link, in shard order.
+    /// One counter snapshot per shard link, in shard order (the
+    /// *current* topology's links).
     pub per_shard: Vec<LinkStats>,
+    /// Aggregate counters of links retired by elastic re-plans (their
+    /// per-shard breakdown no longer maps onto the current topology).
+    /// Zero for static runs; folded into [`TransportStats::total`] so
+    /// the cumulative columns stay monotone across re-plans.
+    pub retired: LinkStats,
 }
 
 impl TransportStats {
-    /// Sum of the per-shard counters.
+    /// Sum of the per-shard counters plus any retired-link counters —
+    /// cumulative over the whole run, including links replaced by
+    /// elastic re-plans.
     pub fn total(&self) -> LinkStats {
         self.per_shard
             .iter()
-            .fold(LinkStats::default(), |acc, s| acc.merged(*s))
+            .fold(self.retired, |acc, s| acc.merged(*s))
     }
 }
 
@@ -205,6 +215,33 @@ pub trait ShardTransport: Send {
     fn poison(&mut self) {}
 }
 
+/// How an elastic coordinator opens a fresh set of shard links after a
+/// topology re-plan: called with the new shard sizes and the bumped
+/// topology generation, it must return one live link per size (a fresh
+/// `Hello` per TCP link — the shard-migration re-handshake) or a typed
+/// error. Captured state (worker addresses, queue depth) lives inside
+/// the closure, so [`crate::ordering::ShardedOrder`] stays
+/// transport-agnostic.
+pub type Relink = Box<
+    dyn FnMut(
+            &[usize],
+            u64,
+        )
+            -> Result<Vec<Box<dyn ShardTransport>>, TransportError>
+        + Send,
+>;
+
+/// Parse a `--connect` value into a worker-server address list: comma-
+/// separated, whitespace-trimmed, empties dropped (`"h1:70, h2:70"` →
+/// `["h1:70", "h2:70"]`). Shared by the trainer's policy builder and
+/// `exp cdgrab` so the accepted syntax cannot diverge.
+pub fn parse_connect_addrs(s: &str) -> Vec<String> {
+    s.split(',')
+        .map(|a| a.trim().to_string())
+        .filter(|a| !a.is_empty())
+        .collect()
+}
+
 // ---------------------------------------------------------------------------
 // Channel transport (in-process worker thread; PR 2's async backend)
 // ---------------------------------------------------------------------------
@@ -226,8 +263,22 @@ impl ChannelTransport {
     /// behind a `depth`-bounded block queue, and return the
     /// coordinator-side endpoint.
     pub fn spawn(local_n: usize, d: usize, depth: usize) -> ChannelTransport {
+        ChannelTransport::spawn_sized(local_n, d, depth, 0)
+    }
+
+    /// [`ChannelTransport::spawn`] with each pooled scratch buffer
+    /// pre-allocated for `row_hint` rows — the per-shard pool sizing
+    /// hook for weighted topologies, where the largest-weight shard
+    /// gathers the biggest blocks (see
+    /// [`crate::ordering::queue::block_queue_sized`]).
+    pub fn spawn_sized(
+        local_n: usize,
+        d: usize,
+        depth: usize,
+        row_hint: usize,
+    ) -> ChannelTransport {
         let balancer = PairBalance::new(local_n, d);
-        let (sender, receiver) = block_queue(d, depth);
+        let (sender, receiver) = block_queue_sized(d, depth, row_hint);
         let (report_tx, report_rx) = channel();
         let handle = std::thread::spawn(move || {
             channel_worker_loop(receiver, balancer, report_tx);
@@ -336,6 +387,16 @@ fn channel_worker_loop(
             ShardMsg::Block(scratch) => {
                 let rows = scratch.rows();
                 if rows > 0 {
+                    // Mirror the TCP worker's row-budget validation: a
+                    // link that replays blocks (or a buggy gather) must
+                    // surface at the epoch boundary, not corrupt the
+                    // balancer through its internal assertions.
+                    assert!(
+                        cursor + rows <= balancer.len(),
+                        "shard worker epoch overflow: {rows} rows \
+                         after {cursor} of {}",
+                        balancer.len()
+                    );
                     balancer.observe_block(
                         cursor..cursor + rows,
                         &scratch.as_grad_block(),
@@ -345,6 +406,14 @@ fn channel_worker_loop(
                 receiver.recycle(scratch);
             }
             ShardMsg::EpochEnd => {
+                // A short epoch (dropped rows) must fail loudly — a
+                // silently partial balance would merge a wrong order.
+                assert!(
+                    cursor == balancer.len(),
+                    "shard worker epoch ended after {cursor} of {} \
+                     rows",
+                    balancer.len()
+                );
                 balancer.epoch_end();
                 cursor = 0;
                 let report = EpochReport {
@@ -361,17 +430,33 @@ fn channel_worker_loop(
     }
 }
 
+/// Nominal trainer microbatch used to pre-size per-shard scratch
+/// pools: shard `w` of a weighted topology receives about
+/// `NOMINAL_BLOCK_ROWS * sizes[w] / n` rows per observed block, so its
+/// pooled buffers start at that capacity (see
+/// [`crate::ordering::queue::block_queue_sized`]).
+const NOMINAL_BLOCK_ROWS: usize = 64;
+
 /// Spawn `sizes.len()` channel-transport shard workers (one per shard
-/// size, dimension `d`, queue depth `depth`).
+/// size, dimension `d`, queue depth `depth`). Each shard's scratch
+/// pool is pre-sized for its share of a nominal microbatch, so uneven
+/// (weighted) topologies reach gather steady state without the
+/// largest-weight shard reallocating mid-epoch.
 pub fn spawn_channel_shards(
     sizes: &[usize],
     d: usize,
     depth: usize,
 ) -> Vec<Box<dyn ShardTransport>> {
+    let n: usize = sizes.iter().sum();
     sizes
         .iter()
         .map(|&size| {
-            Box::new(ChannelTransport::spawn(size, d, depth))
+            let hint = if n == 0 {
+                0
+            } else {
+                ((NOMINAL_BLOCK_ROWS * size).div_ceil(n)).min(size)
+            };
+            Box::new(ChannelTransport::spawn_sized(size, d, depth, hint))
                 as Box<dyn ShardTransport>
         })
         .collect()
@@ -463,6 +548,16 @@ mod tests {
     }
 
     #[test]
+    fn connect_addr_lists_parse_and_trim() {
+        assert_eq!(
+            parse_connect_addrs("h1:70, h2:71 ,,h3:72"),
+            vec!["h1:70", "h2:71", "h3:72"]
+        );
+        assert_eq!(parse_connect_addrs("one:1"), vec!["one:1"]);
+        assert!(parse_connect_addrs(" , ").is_empty());
+    }
+
+    #[test]
     fn link_stats_merge_elementwise() {
         let a = LinkStats { stalls: 1, tx_bytes: 10, rx_bytes: 2 };
         let b = LinkStats { stalls: 2, tx_bytes: 5, rx_bytes: 0 };
@@ -473,6 +568,14 @@ mod tests {
         let agg = TransportStats {
             transport: "channel",
             per_shard: vec![a, b],
+            retired: LinkStats::default(),
+        };
+        assert_eq!(agg.total(), a.merged(b));
+        // Retired-link counters (elastic re-plans) fold into the total.
+        let agg = TransportStats {
+            transport: "channel",
+            per_shard: vec![a],
+            retired: b,
         };
         assert_eq!(agg.total(), a.merged(b));
     }

@@ -17,7 +17,8 @@
 //!
 //! ```text
 //! coordinator                         worker
-//!   Hello {local_n, d}  ───────────▶
+//!   Hello {local_n, d,  ───────────▶
+//!          generation}
 //!                       ◀───────────  Ack
 //!   Block [rows × d]    ───────────▶            (repeat per microbatch)
 //!   EpochEnd            ───────────▶
@@ -71,14 +72,18 @@ pub struct TcpTransport {
     dead: Option<String>,
 }
 
-/// Open one shard link: dial `addr`, handshake `Hello{local_n, d}` /
-/// `Ack`, and return the transport. Fails with a typed error — leaving
-/// no half-open link behind — on connection refusal, handshake
-/// rejection, or protocol mismatch.
+/// Open one shard link: dial `addr`, handshake
+/// `Hello{local_n, d, generation}` / `Ack`, and return the transport.
+/// `generation` is the coordinator's topology generation (0 for a
+/// static run; an elastic coordinator bumps it on every re-split, and
+/// the fresh Hello *is* the shard-migration re-handshake). Fails with
+/// a typed error — leaving no half-open link behind — on connection
+/// refusal, handshake rejection, or protocol mismatch.
 pub fn connect<A: ToSocketAddrs>(
     addr: A,
     local_n: usize,
     d: usize,
+    generation: u64,
 ) -> Result<TcpTransport, TransportError> {
     assert!(d > 0, "tcp shard link needs a positive dimension");
     assert!(
@@ -101,7 +106,11 @@ pub fn connect<A: ToSocketAddrs>(
         dead: None,
     };
     encode_hello(
-        Hello { local_n: local_n as u32, d: d as u32 },
+        Hello {
+            local_n: local_n as u32,
+            d: d as u32,
+            generation: generation.min(u32::MAX as u64) as u32,
+        },
         &mut t.payload_buf,
     );
     let hello = std::mem::take(&mut t.payload_buf);
@@ -248,16 +257,64 @@ impl ShardTransport for TcpTransport {
 }
 
 /// Open one TCP link per entry of `sizes` against the same worker
-/// address (one connection = one shard).
+/// address (one connection = one shard), all at topology `generation`.
 pub fn connect_shards<A: ToSocketAddrs + Copy>(
     addr: A,
     sizes: &[usize],
     d: usize,
+    generation: u64,
 ) -> Result<Vec<Box<dyn ShardTransport>>, TransportError> {
     let mut links: Vec<Box<dyn ShardTransport>> =
         Vec::with_capacity(sizes.len());
     for &size in sizes {
-        links.push(Box::new(connect(addr, size, d)?));
+        links.push(Box::new(connect(addr, size, d, generation)?));
+    }
+    Ok(links)
+}
+
+/// Open one TCP link per entry of `sizes` against a *pool* of worker
+/// servers: shard `w` first dials `addrs[w % addrs.len()]` and falls
+/// through the rest of the list on connection/handshake failure, so a
+/// dead server's shards land on the survivors (the elastic
+/// re-handshake path after a worker-process loss). Deterministic: the
+/// dial order is a pure function of the shard index and the address
+/// list. Fails only when a shard cannot reach *any* server.
+pub fn connect_shards_multi(
+    addrs: &[String],
+    sizes: &[usize],
+    d: usize,
+    generation: u64,
+) -> Result<Vec<Box<dyn ShardTransport>>, TransportError> {
+    assert!(!addrs.is_empty(), "need at least one worker address");
+    let mut links: Vec<Box<dyn ShardTransport>> =
+        Vec::with_capacity(sizes.len());
+    for (w, &size) in sizes.iter().enumerate() {
+        let mut last_err = None;
+        let mut opened = false;
+        for k in 0..addrs.len() {
+            let addr = &addrs[(w + k) % addrs.len()];
+            match connect(addr.as_str(), size, d, generation) {
+                Ok(link) => {
+                    links.push(Box::new(link));
+                    opened = true;
+                    break;
+                }
+                Err(e) => {
+                    eprintln!(
+                        "[transport] shard {w}: worker {addr} \
+                         unreachable ({e}); trying the next server"
+                    );
+                    last_err = Some(e);
+                }
+            }
+        }
+        if !opened {
+            return Err(last_err.unwrap_or_else(|| {
+                TransportError::Handshake(
+                    "no worker address accepted the link".to_string(),
+                )
+            }));
+        }
     }
     Ok(links)
 }
@@ -463,7 +520,7 @@ mod tests {
     fn tcp_link_round_trips_an_epoch() {
         let addr = spawn_loopback(1).unwrap();
         let d = 2;
-        let mut link = connect(addr, 4, d).unwrap();
+        let mut link = connect(addr, 4, d, 0).unwrap();
         let mut scratch = link.acquire().unwrap();
         for row in [[1.0f32, 0.0], [-1.0, 0.0], [0.0, 2.0], [0.0, -2.0]] {
             scratch.push_row(&row);
@@ -487,7 +544,7 @@ mod tests {
             let (stream, _) = listener.accept().unwrap();
             drop(stream); // slam the door before the handshake
         });
-        let err = connect(addr, 4, 2).expect_err("handshake must fail");
+        let err = connect(addr, 4, 2, 0).expect_err("handshake must fail");
         assert!(matches!(err, TransportError::Handshake(_)), "{err}");
         h.join().unwrap();
     }
@@ -504,7 +561,7 @@ mod tests {
             let _ = stream.read(&mut sink);
             let _ = stream.write_all(b"definitely not a frame header");
         });
-        let err = connect(addr, 4, 2).expect_err("handshake must fail");
+        let err = connect(addr, 4, 2, 0).expect_err("handshake must fail");
         assert!(matches!(err, TransportError::Handshake(_)), "{err}");
         h.join().unwrap();
     }
@@ -541,7 +598,10 @@ mod tests {
             let mut client = TcpStream::connect(addr).unwrap();
             let mut payload = Vec::new();
             let mut scratch = Vec::new();
-            encode_hello(Hello { local_n: 2, d: 1 }, &mut payload);
+            encode_hello(
+                Hello { local_n: 2, d: 1, generation: 0 },
+                &mut payload,
+            );
             write_frame(
                 &mut client, FrameKind::Hello, &payload, &mut scratch,
             )
@@ -601,7 +661,7 @@ mod tests {
             let _ = read_frame(&mut stream, &mut buf); // first block
             drop(stream);
         });
-        let mut link = connect(addr, 8, 2).unwrap();
+        let mut link = connect(addr, 8, 2, 0).unwrap();
         let mut scratch = link.acquire().unwrap();
         scratch.push_row(&[1.0, -1.0]);
         let _ = link.send_block(scratch);

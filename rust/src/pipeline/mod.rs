@@ -133,6 +133,7 @@ impl PipelineTrainer {
             final_order,
             order_state_bytes: self.policy.state_bytes(),
             transport: self.policy.transport_stats(),
+            topology: self.policy.topology_log().map(|l| l.to_vec()),
         })
     }
 

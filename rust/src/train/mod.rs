@@ -62,6 +62,14 @@ pub struct TrainResult {
     /// unsharded orderings. Lets sync / channel / tcp runs report
     /// comparable backpressure numbers.
     pub transport: Option<crate::ordering::transport::TransportStats>,
+    /// Per-epoch shard topology plans for sharded orderings: entry `e`
+    /// produced epoch `e`'s order, plus one trailing entry for the
+    /// plan behind [`TrainResult::final_order`] (so a run of E epochs
+    /// records E+1 plans); `None` for unsharded orderings. For an
+    /// `--elastic` run this log is the replay recipe: pin the recorded
+    /// weights (`--weights`, or a schedule at policy level) and the
+    /// run re-executes bit-for-bit (docs/determinism.md contract 6).
+    pub topology: Option<Vec<crate::ordering::Topology>>,
 }
 
 impl TrainResult {
@@ -152,6 +160,7 @@ impl Trainer {
             final_order,
             order_state_bytes: self.policy.state_bytes(),
             transport: self.policy.transport_stats(),
+            topology: self.policy.topology_log().map(|l| l.to_vec()),
         })
     }
 

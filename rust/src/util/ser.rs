@@ -420,7 +420,11 @@ impl CsvWriter {
 /// Wire protocol version stamped into every frame header. Bumped on any
 /// incompatible layout change; peers reject mismatches with
 /// [`WireError::BadVersion`] instead of misparsing.
-pub const WIRE_VERSION: u8 = 1;
+///
+/// History: 1 = the original frame set; 2 = `Hello` grew a `u32`
+/// topology generation (elastic re-handshakes), so a v1 peer must be
+/// turned away at the version check rather than die in `decode_hello`.
+pub const WIRE_VERSION: u8 = 2;
 
 /// Bytes of the fixed frame header preceding every payload.
 pub const FRAME_HEADER_LEN: usize = 12;

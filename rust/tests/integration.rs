@@ -292,6 +292,80 @@ fn tcp_sharded_trainer_matches_sync_sharded() {
 }
 
 #[test]
+fn elastic_scheduled_shard_loss_replays_with_recorded_topology() {
+    // Contract 6 at trainer level: a mid-run W=4 -> 3 topology change
+    // (the recorded shape of a shard loss) still yields valid
+    // permutations every epoch, and re-running with the same recorded
+    // schedule reproduces the run bit for bit — losses and orders, the
+    // herding columns included by implication.
+    let Some(rt) = runtime() else { return };
+    let d = rt.manifest.model("logreg").unwrap().dim;
+    let schedule = vec![
+        vec![1u64, 1, 1, 1],
+        vec![1u64, 1, 1, 1],
+        vec![1u64, 1, 1],
+    ];
+    let run = |schedule: &[Vec<u64>]| {
+        let mut cfg =
+            tiny_cfg(Task::Mnist, OrderingKind::ShardedPairBalance);
+        cfg.epochs = 4;
+        let mut t = Trainer::new(cfg, &rt, None).unwrap();
+        t.policy = Box::new(grab::ordering::ShardedOrder::new_scheduled(
+            128, d, schedule, 2,
+        ));
+        t.run().unwrap()
+    };
+    let a = run(&schedule);
+    let b = run(&schedule);
+    // Valid permutation after the shrink, and identical on replay.
+    let mut sorted = a.final_order.clone();
+    sorted.sort_unstable();
+    assert_eq!(sorted, (0..128).collect::<Vec<_>>());
+    assert_eq!(a.final_order, b.final_order, "replay diverged");
+    for (ea, eb) in a.epochs.iter().zip(&b.epochs) {
+        assert!(
+            (ea.train_loss - eb.train_loss).abs() < 1e-9,
+            "epoch {}: {} vs {}",
+            ea.epoch,
+            ea.train_loss,
+            eb.train_loss
+        );
+    }
+    // The recorded topology shows the shrink at the right boundary.
+    let log = a.topology.expect("sharded run records its topology");
+    assert_eq!(log[0].num_shards(), 4);
+    assert_eq!(log[1].num_shards(), 4);
+    assert_eq!(log[2].num_shards(), 3);
+    assert_eq!(log[2].generation, 1);
+}
+
+#[test]
+fn weighted_sharded_trainer_matches_across_transports() {
+    // Static weighted topology (1:1:2) through the full trainer: the
+    // channel-async and strided dispatch paths must agree bit for bit,
+    // and the topology log must surface through TrainResult.
+    let Some(rt) = runtime() else { return };
+    let weights = vec![1u64, 1, 2];
+    let mut cfg = tiny_cfg(Task::Mnist, OrderingKind::ShardedPairBalance);
+    cfg.num_shards = 3;
+    cfg.shard_weights = Some(weights.clone());
+    let mut sync = Trainer::new(cfg.clone(), &rt, None).unwrap();
+    let sr = sync.run().unwrap();
+
+    cfg.async_shards = true;
+    cfg.shard_queue_depth = 2;
+    let mut asynch = Trainer::new(cfg, &rt, None).unwrap();
+    let ar = asynch.run().unwrap();
+    assert_eq!(sr.final_order, ar.final_order);
+    for (a, b) in sr.epochs.iter().zip(&ar.epochs) {
+        assert!((a.train_loss - b.train_loss).abs() < 1e-9);
+    }
+    let log = sr.topology.expect("weighted run records its topology");
+    assert_eq!(log[0].weights, weights);
+    assert_eq!(log[0].sizes.iter().sum::<usize>(), 128);
+}
+
+#[test]
 fn grab_observe_via_kernel_matches_native() {
     // The Pallas/HLO balance artifact and the native hot path must agree
     // sign-for-sign on a realistic gradient stream.

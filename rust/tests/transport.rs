@@ -1,9 +1,17 @@
-//! Transport-equivalence test layer (determinism contract 5,
+//! Transport-equivalence test layer (determinism contracts 5 and 6,
 //! docs/determinism.md): every order-exchange transport — synchronous
 //! inline dispatch, in-process channel workers, loopback TCP sockets —
 //! must produce **bit-identical** CD-GraB epoch orders for the same
-//! gradient stream, and transport failures must surface as typed
-//! boundary errors, never hangs or partial coordinator state.
+//! gradient stream and topology schedule, and transport failures must
+//! surface as typed boundary errors, never hangs or partial
+//! coordinator state. Contract 6 adds the elastic layer: an elastic
+//! coordinator with frozen weights is bit-equal to the static
+//! topology, any weight schedule (including mid-run shard-count
+//! changes) still emits valid permutations, and — under the
+//! `fault-injection` feature (the CI `chaos` job) — injected drops,
+//! duplicates, delays, and mid-epoch disconnects all surface at the
+//! boundary, with the elastic coordinator re-planning over the
+//! survivors after a link loss.
 //!
 //! These tests need no artifacts (they run on synthetic gradient
 //! streams) but do open real loopback sockets; CI runs this target
@@ -74,6 +82,112 @@ fn loopback_tcp_matches_channel_and_sync_orders() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn elastic_frozen_weights_match_static_topology_exactly() {
+    // Determinism contract 6, frozen half: an elastic coordinator whose
+    // per-epoch schedule never changes is bit-identical to the static
+    // weighted topology — over the channel transport AND loopback TCP,
+    // for W in {1, 2, 4}, chained to unsharded PairBalance at W = 1
+    // (equal weights there, so the W=1 gate still applies).
+    prop::forall("elastic frozen == static (channel+tcp)", 6, |rng| {
+        let n = 1 + rng.gen_range(48) as usize;
+        let d = 1 + rng.gen_range(5) as usize;
+        let b = 1 + rng.gen_range(8) as usize;
+        let depth = 1 + rng.gen_range(3) as usize;
+        let vs = gen::vec_set(rng, n, d);
+        for w in [1usize, 2, 4] {
+            let weights: Vec<u64> = if w == 1 {
+                vec![1]
+            } else {
+                (0..w).map(|_| 1 + rng.gen_range(3)).collect()
+            };
+            let schedule = vec![weights.clone()];
+            let mut static_ch =
+                ShardedOrder::new_async_weighted(n, d, &weights, depth);
+            let mut elastic_ch =
+                ShardedOrder::new_scheduled(n, d, &schedule, depth);
+            let mut static_tcp =
+                ShardedOrder::new_tcp_loopback_weighted(n, d, &weights)
+                    .map_err(|e| format!("loopback spawn: {e}"))?;
+            let mut elastic_tcp =
+                ShardedOrder::new_tcp_loopback_scheduled(n, d, &schedule)
+                    .map_err(|e| format!("loopback spawn: {e}"))?;
+            let mut pair = PairBalance::new(n, d);
+            for epoch in 0..3 {
+                feed_epoch(&mut static_ch, &vs, b);
+                feed_epoch(&mut elastic_ch, &vs, b);
+                feed_epoch(&mut static_tcp, &vs, b);
+                feed_epoch(&mut elastic_tcp, &vs, b);
+                feed_epoch(&mut pair, &vs, b);
+                let want = static_ch.epoch_order(0).to_vec();
+                assert_permutation(&want)?;
+                for (label, got) in [
+                    ("elastic-channel", elastic_ch.epoch_order(0)),
+                    ("static-tcp", static_tcp.epoch_order(0)),
+                    ("elastic-tcp", elastic_tcp.epoch_order(0)),
+                ] {
+                    if got != want.as_slice() {
+                        return Err(format!(
+                            "{label} != static channel at w={w} \
+                             epoch={epoch} n={n} d={d} b={b} \
+                             weights={weights:?}"
+                        ));
+                    }
+                }
+                if w == 1 && pair.epoch_order(0) != want.as_slice() {
+                    return Err(format!(
+                        "w=1 weighted != PairBalance at epoch={epoch} \
+                         n={n} d={d} b={b}"
+                    ));
+                }
+            }
+            // Frozen means frozen: no re-plan happened anywhere.
+            if elastic_ch.topology().generation != 0
+                || elastic_tcp.topology().generation != 0
+            {
+                return Err("frozen schedule re-planned".to_string());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn scheduled_shard_shrink_over_tcp_replans_and_replays() {
+    // Contract 6, elastic half: a W=4 -> 3 mid-run topology change over
+    // loopback TCP re-plans at the boundary (fresh Hellos at a bumped
+    // generation), keeps every epoch a valid permutation of all n
+    // units, and replays bit-for-bit from the same schedule.
+    let n = 41;
+    let d = 3;
+    let vs = gen::vec_set(&mut grab::util::rng::Rng::new(13), n, d);
+    let schedule = vec![
+        vec![1u64, 1, 1, 1],
+        vec![1u64, 1, 1, 1],
+        vec![1u64, 1, 1],
+    ];
+    let mut orders = Vec::new();
+    let mut p = ShardedOrder::new_tcp_loopback_scheduled(n, d, &schedule)
+        .expect("loopback spawn");
+    for _ in 0..4 {
+        assert_permutation(p.epoch_order(0)).unwrap();
+        orders.push(p.epoch_order(0).to_vec());
+        feed_epoch(&mut p, &vs, 5);
+    }
+    assert_eq!(p.num_shards(), 3, "shrink must have landed");
+    assert_eq!(p.topology().generation, 1, "exactly one re-plan");
+    let log = ShardedOrder::topology_log(&p);
+    assert_eq!(log[1].num_shards(), 4);
+    assert_eq!(log[2].num_shards(), 3);
+    // Replay over a fresh loopback pool: identical orders every epoch.
+    let mut q = ShardedOrder::new_tcp_loopback_scheduled(n, d, &schedule)
+        .expect("loopback spawn");
+    for want in &orders {
+        assert_eq!(q.epoch_order(0), want.as_slice());
+        feed_epoch(&mut q, &vs, 5);
+    }
 }
 
 #[test]
@@ -225,6 +339,231 @@ fn handshake_failures_are_typed_errors_not_hangs() {
         "expected a handshake error, got: {err:#}"
     );
     server.join().unwrap();
+}
+
+// ---------------------------------------------------------------------
+// Fault-injection suite (the CI `chaos` job): compiled only with
+// `--features fault-injection`, run under the job's hard timeout so
+// any hang is a fast failure.
+// ---------------------------------------------------------------------
+
+#[cfg(feature = "fault-injection")]
+mod chaos {
+    use super::*;
+    use grab::ordering::topology::{Topology, WeightSource};
+    use grab::ordering::transport::fault::{FaultPlan, FaultTransport};
+    use grab::ordering::transport::{
+        spawn_channel_shards, tcp, ChannelTransport, Relink,
+        ShardTransport, TransportError,
+    };
+
+    /// Drive one full epoch of `n` rows through a raw link in 2-row
+    /// blocks and return the boundary outcome.
+    fn drive_link_epoch(
+        link: &mut dyn ShardTransport,
+        n: usize,
+        d: usize,
+    ) -> Result<Vec<usize>, TransportError> {
+        let mut sent = 0usize;
+        while sent < n {
+            let rows = 2.min(n - sent);
+            let Some(mut scratch) = link.acquire() else {
+                break; // dead link: fall through to the boundary
+            };
+            for r in 0..rows {
+                let row: Vec<f32> = (0..d)
+                    .map(|j| ((sent + r) * d + j) as f32 - 3.0)
+                    .collect();
+                scratch.push_row(&row);
+            }
+            let _ = link.send_block(scratch);
+            sent += rows;
+        }
+        let _ = link.end_epoch();
+        link.recv_report().map(|r| r.order)
+    }
+
+    #[test]
+    fn dropped_block_over_tcp_surfaces_as_typed_boundary_error() {
+        // A silently dropped block means the worker sees a short
+        // epoch: it must reject at EpochEnd and the coordinator side
+        // must get a typed error — no hang, no bogus report.
+        let addr = tcp::spawn_loopback(1).unwrap();
+        let (n, d) = (8, 2);
+        let inner = tcp::connect(addr, n, d, 0).unwrap();
+        let mut link = FaultTransport::new(
+            Box::new(inner),
+            FaultPlan::drop_block(1),
+        );
+        let err = drive_link_epoch(&mut link, n, d)
+            .expect_err("short epoch must be rejected");
+        let msg = err.to_string();
+        assert!(!msg.is_empty(), "typed error expected, got: {msg}");
+        assert!(
+            link.injected().iter().any(|f| f.contains("drop")),
+            "the drop was never injected: {:?}",
+            link.injected()
+        );
+    }
+
+    #[test]
+    fn duplicated_block_over_tcp_surfaces_as_typed_boundary_error() {
+        // A duplicated block overflows the worker's epoch row budget:
+        // typed rejection, never a silent double-balance.
+        let addr = tcp::spawn_loopback(1).unwrap();
+        let (n, d) = (8, 2);
+        let inner = tcp::connect(addr, n, d, 0).unwrap();
+        let mut link = FaultTransport::new(
+            Box::new(inner),
+            FaultPlan::duplicate_block(3),
+        );
+        let err = drive_link_epoch(&mut link, n, d)
+            .expect_err("overflowing epoch must be rejected");
+        assert!(!err.to_string().is_empty());
+        assert!(link
+            .injected()
+            .iter()
+            .any(|f| f.contains("duplicate")));
+    }
+
+    #[test]
+    fn seeded_drop_schedules_always_surface_at_the_boundary() {
+        // Chaos sweep: across seeds, a seeded drop index anywhere in
+        // the epoch must surface as a typed error (the schedule is
+        // pure in the seed, so any failure here reproduces exactly).
+        for seed in 0..6u64 {
+            let plan = FaultPlan::seeded(seed, 4);
+            let drop_at = plan.drop_blocks[0];
+            let addr = tcp::spawn_loopback(1).unwrap();
+            let (n, d) = (8, 3);
+            let inner = tcp::connect(addr, n, d, 0).unwrap();
+            let mut link = FaultTransport::new(
+                Box::new(inner),
+                FaultPlan::drop_block(drop_at),
+            );
+            drive_link_epoch(&mut link, n, d).expect_err(
+                "seeded drop must produce a typed boundary error",
+            );
+        }
+    }
+
+    #[test]
+    fn delayed_blocks_do_not_change_the_report() {
+        // A delay is a benign fault: the link stays order-preserving,
+        // so the worker's report must equal an unfaulted twin's.
+        let (n, d) = (6, 2);
+        let mut plain: Box<dyn ShardTransport> =
+            Box::new(ChannelTransport::spawn(n, d, 2));
+        let mut delayed = FaultTransport::new(
+            Box::new(ChannelTransport::spawn(n, d, 2)),
+            FaultPlan {
+                delay_blocks: vec![(0, 3), (2, 2)],
+                ..FaultPlan::default()
+            },
+        );
+        let a = drive_link_epoch(plain.as_mut(), n, d).unwrap();
+        let b = drive_link_epoch(&mut delayed, n, d).unwrap();
+        assert_eq!(a, b, "delay changed the epoch report");
+        assert_eq!(delayed.injected().len(), 2);
+    }
+
+    #[test]
+    fn dropped_block_on_channel_worker_panics_at_the_boundary() {
+        // The in-process channel worker's short-epoch guard: dropped
+        // rows surface as the worker's own boundary panic (re-raised
+        // by recv_report), not a silently partial order.
+        let mut p = {
+            let n = 12;
+            let d = 2;
+            let links: Vec<Box<dyn ShardTransport>> = vec![
+                Box::new(ChannelTransport::spawn(6, d, 2)),
+                Box::new(FaultTransport::new(
+                    Box::new(ChannelTransport::spawn(6, d, 2)),
+                    FaultPlan::drop_block(0),
+                )),
+            ];
+            ShardedOrder::from_links(
+                n,
+                d,
+                Topology::equal(n, 2),
+                links,
+                "channel",
+                None,
+            )
+        };
+        let vs = gen::vec_set(&mut grab::util::rng::Rng::new(3), 12, 2);
+        let err = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                feed_epoch(&mut p, &vs, 4); // ends with epoch_end
+            }),
+        )
+        .expect_err("short epoch must panic at the boundary");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| "<non-string payload>".to_string());
+        assert!(
+            msg.contains("epoch ended after"),
+            "unexpected payload: {msg}"
+        );
+    }
+
+    #[test]
+    fn elastic_coordinator_survives_injected_disconnect_and_replans() {
+        // The headline chaos case: one of four channel links is killed
+        // mid-epoch. The elastic coordinator must finish the epoch,
+        // surface the loss at the boundary, re-plan the next epoch
+        // over the three survivors, and keep emitting valid
+        // permutations of all n units — no hang, no partial state.
+        let n = 24;
+        let d = 2;
+        let depth = 2;
+        let mut links: Vec<Box<dyn ShardTransport>> =
+            spawn_channel_shards(
+                &Topology::equal(n, 4).sizes,
+                d,
+                depth,
+            );
+        // Wrap shard 2 with a mid-epoch disconnect.
+        let victim = links.remove(2);
+        links.insert(
+            2,
+            Box::new(FaultTransport::new(
+                victim,
+                FaultPlan::disconnect_before(1),
+            )),
+        );
+        let relink: Relink = Box::new(move |sizes, _gen| {
+            Ok(spawn_channel_shards(sizes, d, depth))
+        });
+        let planner =
+            grab::ordering::topology::ElasticPlanner::new(4);
+        let mut p = ShardedOrder::from_links(
+            n,
+            d,
+            Topology::equal(n, 4),
+            links,
+            "channel",
+            Some((WeightSource::Measured(planner), relink)),
+        );
+        let vs = gen::vec_set(&mut grab::util::rng::Rng::new(7), n, d);
+        for epoch in 0..3 {
+            assert_permutation(p.epoch_order(0)).unwrap();
+            feed_epoch(&mut p, &vs, 4);
+            if epoch == 0 {
+                assert_eq!(
+                    p.num_shards(),
+                    3,
+                    "lost shard must be dropped from the plan"
+                );
+                assert!(p.topology().generation >= 1);
+            }
+        }
+        assert_permutation(p.epoch_order(0)).unwrap();
+        let log = ShardedOrder::topology_log(&p);
+        assert_eq!(log[0].num_shards(), 4);
+        assert_eq!(log[1].num_shards(), 3);
+    }
 }
 
 #[test]

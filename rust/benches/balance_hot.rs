@@ -1,4 +1,5 @@
-//! Bench: the GraB per-example hot path (the §Perf deliverable).
+//! Bench: the GraB per-example hot path (see docs/perf.md for the
+//! kernel tiers and how to read the recorded `BENCH_*.json` runs).
 //!
 //! Compares, at the paper's logreg d and a larger d:
 //!   * naive scalar dot vs 8-way unrolled dot

@@ -1,0 +1,565 @@
+//! `grab bench` — the JSON bench runner behind the repo's recorded
+//! perf trajectory (`BENCH_*.json` at the repo root; docs/perf.md
+//! explains the kernel tiers and how to read the files).
+//!
+//! Re-runs the case lists of `benches/balance_hot.rs` and
+//! `benches/ordering_overhead.rs` through [`crate::util::timer::Bench`]
+//! — once per requested kernel tier — and emits one versioned JSON
+//! document instead of human-grepable lines, so successive PRs can
+//! commit comparable snapshots:
+//!
+//! ```json
+//! {"schema_version": 1, "runner": "grab-bench", "git_rev": "abc1234",
+//!  "results": [{"case": "fused_dot_centered/d65536", "d": 65536,
+//!               "n": null, "B": null, "W": null, "kernel": "simd",
+//!               "mean_ns": 8123.4, "iters": 187}, …]}
+//! ```
+//!
+//! The runner is the one place allowed to call
+//! [`crate::tensor::set_default_kernel`]: it owns the process and runs
+//! each tier's section to completion before switching, so every policy
+//! (including transport worker threads) snapshots the tier under
+//! measurement. Kernel-independent cases (`dot_naive`, `epoch_order/rr`,
+//! the wire codec) are still recorded under every tier label — they
+//! double as per-tier noise floors. `--quick` shrinks every case to a
+//! handful of iterations for the CI smoke job; the committed trajectory
+//! files use the full budgets.
+
+use std::hint::black_box;
+
+use anyhow::bail;
+
+use crate::balance::DeterministicBalancer;
+use crate::config::KernelKind;
+use crate::ordering::transport::codec;
+use crate::ordering::{
+    GradBlock, GraBOrder, GreedyOrder, OrderPolicy, PairBalance,
+    RandomReshuffle, ShardedOrder,
+};
+use crate::runtime::Runtime;
+use crate::tensor::{self, Kernel};
+use crate::util::cli::Args;
+use crate::util::prop::gen;
+use crate::util::rng::Rng;
+use crate::util::ser::{decode_frame, encode_frame, FrameKind};
+use crate::util::timer::{Bench, BenchResult};
+use crate::Result;
+
+/// One measured (case, kernel) pair as it appears in the JSON output.
+struct CaseResult {
+    case: String,
+    d: Option<usize>,
+    n: Option<usize>,
+    b: Option<usize>,
+    w: Option<usize>,
+    kernel: &'static str,
+    mean_ns: f64,
+    iters: usize,
+}
+
+/// A bench series with the full or `--quick` iteration budget.
+fn series(name: String, quick: bool, min: usize, max: usize) -> Bench {
+    if quick {
+        // `heavy()` cuts warmup to one iteration; the max-iters cap is
+        // what actually bounds CI time.
+        Bench::new(name).heavy().with_iters(1, 3)
+    } else {
+        Bench::new(name).with_iters(min, max)
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn push(
+    out: &mut Vec<CaseResult>,
+    r: BenchResult,
+    kernel: Kernel,
+    d: Option<usize>,
+    n: Option<usize>,
+    b: Option<usize>,
+    w: Option<usize>,
+) {
+    out.push(CaseResult {
+        case: r.name.clone(),
+        d,
+        n,
+        b,
+        w,
+        kernel: kernel.name(),
+        mean_ns: r.mean_ns(),
+        iters: r.iters,
+    });
+}
+
+fn observe_epoch_blocks(
+    policy: &mut dyn OrderPolicy,
+    flat: &[f32],
+    n: usize,
+    d: usize,
+    block: usize,
+) {
+    let _ = policy.epoch_order(0);
+    let mut pos = 0;
+    while pos < n {
+        let end = (pos + block).min(n);
+        policy.observe_block(
+            pos..end,
+            &GradBlock::new(&flat[pos * d..end * d], d),
+        );
+        pos = end;
+    }
+    policy.epoch_end();
+}
+
+fn observe_epoch_per_example(
+    policy: &mut dyn OrderPolicy,
+    flat: &[f32],
+    n: usize,
+    d: usize,
+) {
+    let _ = policy.epoch_order(0);
+    for pos in 0..n {
+        policy.observe(pos, &flat[pos * d..(pos + 1) * d]);
+    }
+    policy.epoch_end();
+}
+
+fn one_epoch(policy: &mut dyn OrderPolicy, vs: &[Vec<f32>]) {
+    let order = policy.epoch_order(0).to_vec();
+    if policy.wants_grads() {
+        for (pos, &unit) in order.iter().enumerate() {
+            policy.observe(pos, &vs[unit]);
+        }
+    }
+    policy.epoch_end();
+}
+
+/// The `benches/balance_hot.rs` case list under kernel tier `k`.
+fn balance_hot_cases(
+    k: Kernel,
+    quick: bool,
+    out: &mut Vec<CaseResult>,
+) {
+    for d in [1024usize, 7850, 65536] {
+        let mut rng = Rng::new(d as u64);
+        let s: Vec<f32> = (0..d).map(|_| rng.gauss() as f32).collect();
+        let g: Vec<f32> = (0..d).map(|_| rng.gauss() as f32).collect();
+        let m: Vec<f32> =
+            (0..d).map(|_| rng.gauss() as f32 * 0.1).collect();
+        let mut c = vec![0.0f32; d];
+
+        let r = series(format!("dot_naive/d{d}"), quick, 100, 2000)
+            .run(|| {
+                black_box(tensor::dot_naive(&s, &g));
+            });
+        push(out, r, k, Some(d), None, None, None);
+        let r = series(format!("dot_unrolled/d{d}"), quick, 100, 2000)
+            .run(|| {
+                black_box(k.dot(&s, &g));
+            });
+        push(out, r, k, Some(d), None, None, None);
+        let r =
+            series(format!("two_step_center_dot/d{d}"), quick, 100, 2000)
+                .run(|| {
+                    tensor::sub_into(&g, &m, &mut c);
+                    black_box(k.dot(&s, &c));
+                });
+        push(out, r, k, Some(d), None, None, None);
+        let r =
+            series(format!("fused_dot_centered/d{d}"), quick, 100, 2000)
+                .run(|| {
+                    black_box(k.dot_centered(&s, &g, &m));
+                });
+        push(out, r, k, Some(d), None, None, None);
+
+        let n = 256usize;
+        let flat: Vec<f32> =
+            (0..n * d).map(|_| rng.gauss() as f32).collect();
+        let r = series(format!("grab_observe_epoch/n{n}/d{d}"), quick, 3, 50)
+            .run(|| {
+                let mut p =
+                    GraBOrder::new(n, d, Box::new(DeterministicBalancer));
+                observe_epoch_per_example(&mut p, &flat, n, d);
+            });
+        push(out, r, k, Some(d), Some(n), None, None);
+        let b = 32usize;
+        let r = series(
+            format!("grab_observe_epoch_blk{b}/n{n}/d{d}"),
+            quick,
+            3,
+            50,
+        )
+        .run(|| {
+            let mut p =
+                GraBOrder::new(n, d, Box::new(DeterministicBalancer));
+            observe_epoch_blocks(&mut p, &flat, n, d, b);
+        });
+        push(out, r, k, Some(d), Some(n), Some(b), None);
+    }
+
+    // PJRT kernel path, if artifacts are present (device-side; the CPU
+    // kernel tier does not apply, but the row keys the layer ablation).
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let rt = Runtime::open("artifacts").expect("runtime");
+        for d in [1024usize, 7850] {
+            let kernel =
+                rt.balance_executor(d).expect("balance artifact");
+            let mut rng = Rng::new(9);
+            let m: Vec<f32> =
+                (0..d).map(|_| rng.gauss() as f32 * 0.1).collect();
+            let g: Vec<f32> =
+                (0..d).map(|_| rng.gauss() as f32).collect();
+            let mut s = vec![0.0f32; d];
+            let r = series(format!("pallas_kernel_step/d{d}"), quick, 20, 200)
+                .run(|| {
+                    black_box(kernel.step(&mut s, &m, &g).unwrap());
+                });
+            push(out, r, k, Some(d), None, None, None);
+        }
+    } else {
+        println!("(artifacts missing — skipping PJRT kernel rows)");
+    }
+}
+
+/// The `benches/ordering_overhead.rs` case list under kernel tier `k`.
+fn ordering_overhead_cases(
+    k: Kernel,
+    quick: bool,
+    out: &mut Vec<CaseResult>,
+) {
+    // Table-1 policy epochs at the paper's logreg dimension.
+    let d = 7850;
+    for n in [256usize, 512, 1024] {
+        let mut rng = Rng::new(n as u64);
+        let vs = gen::vec_set(&mut rng, n, d);
+        let r = series(format!("epoch_order/rr/n{n}/d{d}"), quick, 5, 100)
+            .run(|| {
+                let mut p = RandomReshuffle::new(n, 0);
+                one_epoch(&mut p, &vs);
+            });
+        push(out, r, k, Some(d), Some(n), None, None);
+        let r = series(format!("epoch_order/grab/n{n}/d{d}"), quick, 5, 50)
+            .run(|| {
+                let mut p =
+                    GraBOrder::new(n, d, Box::new(DeterministicBalancer));
+                one_epoch(&mut p, &vs);
+            });
+        push(out, r, k, Some(d), Some(n), None, None);
+        let r = series(format!("epoch_order/greedy/n{n}/d{d}"), quick, 2, 5)
+            .run(|| {
+                let mut p = GreedyOrder::new(n, d);
+                one_epoch(&mut p, &vs);
+            });
+        push(out, r, k, Some(d), Some(n), None, None);
+    }
+
+    // Per-example vs block observe throughput.
+    let d = 4096;
+    let n = 512;
+    let block = 64;
+    let mut rng = Rng::new(42);
+    let flat: Vec<f32> =
+        (0..n * d).map(|_| rng.gauss() as f32).collect();
+    let r = series(
+        format!("grab_observe/per_example/n{n}/d{d}"),
+        quick,
+        5,
+        60,
+    )
+    .run(|| {
+        let mut p = GraBOrder::new(n, d, Box::new(DeterministicBalancer));
+        observe_epoch_per_example(&mut p, &flat, n, d);
+    });
+    push(out, r, k, Some(d), Some(n), None, None);
+    let r = series(
+        format!("grab_observe/block{block}/n{n}/d{d}"),
+        quick,
+        5,
+        60,
+    )
+    .run(|| {
+        let mut p = GraBOrder::new(n, d, Box::new(DeterministicBalancer));
+        observe_epoch_blocks(&mut p, &flat, n, d, block);
+    });
+    push(out, r, k, Some(d), Some(n), Some(block), None);
+    let r = series(
+        format!("pair_observe/block{block}/n{n}/d{d}"),
+        quick,
+        5,
+        60,
+    )
+    .run(|| {
+        let mut p = PairBalance::new(n, d);
+        observe_epoch_blocks(&mut p, &flat, n, d, block);
+    });
+    push(out, r, k, Some(d), Some(n), Some(block), None);
+
+    // Sharded dispatch backends, equal and skewed topologies. Policies
+    // persist across iterations so each measured epoch is steady-state.
+    let n = 2048;
+    let d = 256;
+    let block = 64;
+    let w = 4;
+    let depth = 4;
+    let mut rng = Rng::new(21);
+    let flat: Vec<f32> =
+        (0..n * d).map(|_| rng.gauss() as f32).collect();
+    let mut strided = ShardedOrder::new(n, d, w);
+    let r = series(format!("sharded_observe/strided/w{w}/d{d}"), quick, 5, 60)
+        .run(|| observe_epoch_blocks(&mut strided, &flat, n, d, block));
+    push(out, r, k, Some(d), Some(n), Some(block), Some(w));
+    let mut gathered = ShardedOrder::new_gathered(n, d, w);
+    let r =
+        series(format!("sharded_observe/gathered/w{w}/d{d}"), quick, 5, 60)
+            .run(|| {
+                observe_epoch_blocks(&mut gathered, &flat, n, d, block)
+            });
+    push(out, r, k, Some(d), Some(n), Some(block), Some(w));
+    let mut asynch = ShardedOrder::new_async(n, d, w, depth);
+    let r = series(
+        format!("sharded_observe/async/w{w}/d{d}/q{depth}"),
+        quick,
+        5,
+        60,
+    )
+    .run(|| observe_epoch_blocks(&mut asynch, &flat, n, d, block));
+    push(out, r, k, Some(d), Some(n), Some(block), Some(w));
+    let mut socket =
+        ShardedOrder::new_tcp_loopback(n, d, w).expect("loopback workers");
+    let r = series(format!("sharded_observe/tcp/w{w}/d{d}"), quick, 5, 60)
+        .run(|| observe_epoch_blocks(&mut socket, &flat, n, d, block));
+    push(out, r, k, Some(d), Some(n), Some(block), Some(w));
+
+    let weights: [u64; 3] = [1, 1, 4];
+    let mut rng = Rng::new(27);
+    let flat: Vec<f32> =
+        (0..n * d).map(|_| rng.gauss() as f32).collect();
+    let mut strided = ShardedOrder::new_weighted(n, d, &weights);
+    let r = series(format!("skewed_observe/strided/114/d{d}"), quick, 5, 60)
+        .run(|| observe_epoch_blocks(&mut strided, &flat, n, d, block));
+    push(out, r, k, Some(d), Some(n), Some(block), Some(weights.len()));
+    let mut gathered =
+        ShardedOrder::new_gathered_weighted(n, d, &weights);
+    let r = series(format!("skewed_observe/gathered/114/d{d}"), quick, 5, 60)
+        .run(|| observe_epoch_blocks(&mut gathered, &flat, n, d, block));
+    push(out, r, k, Some(d), Some(n), Some(block), Some(weights.len()));
+    let mut asynch =
+        ShardedOrder::new_async_weighted(n, d, &weights, depth);
+    let r = series(
+        format!("skewed_observe/async/114/d{d}/q{depth}"),
+        quick,
+        5,
+        60,
+    )
+    .run(|| observe_epoch_blocks(&mut asynch, &flat, n, d, block));
+    push(out, r, k, Some(d), Some(n), Some(block), Some(weights.len()));
+    let mut socket = ShardedOrder::new_tcp_loopback_weighted(n, d, &weights)
+        .expect("loopback workers");
+    let r = series(format!("skewed_observe/tcp/114/d{d}"), quick, 5, 60)
+        .run(|| observe_epoch_blocks(&mut socket, &flat, n, d, block));
+    push(out, r, k, Some(d), Some(n), Some(block), Some(weights.len()));
+
+    // Wire codec throughput (kernel-independent noise floor).
+    let d = 256;
+    let rows = 64;
+    let mut rng = Rng::new(33);
+    let data: Vec<f32> =
+        (0..rows * d).map(|_| rng.gauss() as f32).collect();
+    let mut scratch: Vec<f32> = Vec::with_capacity(rows * d);
+    let r = series(format!("wire/gather/r{rows}/d{d}"), quick, 10, 2000)
+        .run(|| {
+            scratch.clear();
+            for r in 0..rows {
+                scratch.extend_from_slice(&data[r * d..(r + 1) * d]);
+            }
+        });
+    push(out, r, k, Some(d), None, Some(rows), None);
+    let mut payload = Vec::new();
+    let mut frame = Vec::new();
+    let r = series(format!("wire/encode/r{rows}/d{d}"), quick, 10, 2000)
+        .run(|| {
+            codec::encode_block(&data, d, &mut payload);
+            frame.clear();
+            encode_frame(FrameKind::Block, &payload, &mut frame);
+        });
+    push(out, r, k, Some(d), None, Some(rows), None);
+    let mut decoded: Vec<f32> = Vec::new();
+    let r = series(format!("wire/decode/r{rows}/d{d}"), quick, 10, 2000)
+        .run(|| {
+            let (kind, body, _) = decode_frame(&frame).expect("frame");
+            assert!(matches!(kind, FrameKind::Block));
+            codec::decode_block(body, d, &mut decoded).expect("block");
+        });
+    push(out, r, k, Some(d), None, Some(rows), None);
+}
+
+fn git_rev() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+fn json_opt(v: Option<usize>) -> String {
+    match v {
+        Some(x) => x.to_string(),
+        None => "null".to_string(),
+    }
+}
+
+fn render_json(rev: &str, results: &[CaseResult]) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"schema_version\": 1,\n");
+    s.push_str("  \"runner\": \"grab-bench\",\n");
+    s.push_str(&format!("  \"git_rev\": {},\n", json_str(rev)));
+    s.push_str("  \"results\": [\n");
+    for (i, r) in results.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"case\": {}, \"d\": {}, \"n\": {}, \"B\": {}, \
+             \"W\": {}, \"kernel\": {}, \"mean_ns\": {:.1}, \
+             \"iters\": {}}}{}\n",
+            json_str(&r.case),
+            json_opt(r.d),
+            json_opt(r.n),
+            json_opt(r.b),
+            json_opt(r.w),
+            json_str(r.kernel),
+            r.mean_ns,
+            r.iters,
+            if i + 1 < results.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// Entry point for `grab bench [--out FILE.json] [--quick]
+/// [--kernels k1,k2,…]`. Runs every case under every requested kernel
+/// tier and writes the versioned JSON document to `--out` (stdout when
+/// omitted).
+pub fn run_from_cli(args: &Args) -> Result<()> {
+    let out_path = args.opt_str("out");
+    if args.opt_str("quick").is_some() {
+        bail!(
+            "--quick is a boolean flag and takes no value \
+             (put it last or before another --flag)"
+        );
+    }
+    let quick = args.flag("quick");
+    let tiers = args.str_or("kernels", "scalar,simd,simd+par");
+    args.reject_unknown()?;
+
+    let mut kernels: Vec<Kernel> = Vec::new();
+    for tok in tiers.split(',') {
+        let k = KernelKind::parse(tok.trim())?.resolve();
+        if !kernels.contains(&k) {
+            kernels.push(k);
+        }
+    }
+    if kernels.is_empty() {
+        bail!("--kernels must name at least one tier");
+    }
+
+    let mut results = Vec::new();
+    for &k in &kernels {
+        // The runner owns the process: install the tier under
+        // measurement so every policy (and every transport worker it
+        // spawns) snapshots it at construction.
+        tensor::set_default_kernel(k);
+        eprintln!(
+            "[bench] kernel tier {} ({} mode)",
+            k.name(),
+            if quick { "quick" } else { "full" }
+        );
+        balance_hot_cases(k, quick, &mut results);
+        ordering_overhead_cases(k, quick, &mut results);
+    }
+
+    let json = render_json(&git_rev(), &results);
+    match out_path {
+        Some(path) => {
+            std::fs::write(&path, &json)?;
+            eprintln!(
+                "[bench] wrote {} results to {path}",
+                results.len()
+            );
+        }
+        None => print!("{json}"),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_document_is_schema_shaped() {
+        let results = vec![
+            CaseResult {
+                case: "fused_dot_centered/d64".to_string(),
+                d: Some(64),
+                n: None,
+                b: None,
+                w: None,
+                kernel: "scalar",
+                mean_ns: 12.3456,
+                iters: 100,
+            },
+            CaseResult {
+                case: "sharded_observe/tcp/w4/d256".to_string(),
+                d: Some(256),
+                n: Some(2048),
+                b: Some(64),
+                w: Some(4),
+                kernel: "simd",
+                mean_ns: 99.0,
+                iters: 5,
+            },
+        ];
+        let doc = render_json("abc1234", &results);
+        assert!(doc.contains("\"schema_version\": 1"));
+        assert!(doc.contains("\"runner\": \"grab-bench\""));
+        assert!(doc.contains("\"git_rev\": \"abc1234\""));
+        assert!(doc.contains("\"n\": null"));
+        assert!(doc.contains("\"W\": 4"));
+        assert!(doc.contains("\"mean_ns\": 12.3"));
+        // Exactly one separator comma between the two entries.
+        assert_eq!(doc.matches("}},\n").count() + doc.matches("},\n").count(), 1);
+    }
+
+    #[test]
+    fn json_strings_escape_specials() {
+        assert_eq!(json_str("a\"b\\c"), "\"a\\\"b\\\\c\"");
+        assert_eq!(json_str("x\ny"), "\"x\\ny\"");
+    }
+
+    #[test]
+    fn git_rev_never_panics() {
+        let rev = git_rev();
+        assert!(!rev.is_empty());
+    }
+}

@@ -196,6 +196,60 @@ impl TransportKind {
     }
 }
 
+/// Balance-kernel dispatch tier for the L3 hot path (`--kernels`).
+/// Every tier produces **bit-identical** epoch orders — determinism
+/// contract 7 in `docs/determinism.md`; the only difference is
+/// wall-clock (`docs/perf.md`, `BENCH_*.json`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Probe the host once and pick the best tier — `simd+par` when
+    /// AVX2 is available, `scalar` otherwise (the default).
+    Auto,
+    /// Portable scalar kernels (the reference tier).
+    Scalar,
+    /// AVX2 kernels on the caller's thread.
+    Simd,
+    /// AVX2 kernels plus the row-parallel worker pool.
+    SimdPar,
+}
+
+impl KernelKind {
+    /// Parse a kernel tier as accepted by `--kernels`.
+    pub fn parse(s: &str) -> Result<KernelKind> {
+        Ok(match s {
+            "auto" => KernelKind::Auto,
+            "scalar" => KernelKind::Scalar,
+            "simd" => KernelKind::Simd,
+            "simd+par" | "simd-par" => KernelKind::SimdPar,
+            _ => bail!(
+                "unknown kernel tier {s:?} \
+                 (auto|scalar|simd|simd+par)"
+            ),
+        })
+    }
+
+    /// Canonical name (round-trips through [`KernelKind::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelKind::Auto => "auto",
+            KernelKind::Scalar => "scalar",
+            KernelKind::Simd => "simd",
+            KernelKind::SimdPar => "simd+par",
+        }
+    }
+
+    /// Resolve to the tensor layer's dispatch tier (`Auto` probes the
+    /// host via [`crate::tensor::Kernel::auto`]).
+    pub fn resolve(&self) -> crate::tensor::Kernel {
+        match self {
+            KernelKind::Auto => crate::tensor::Kernel::auto(),
+            KernelKind::Scalar => crate::tensor::Kernel::Scalar,
+            KernelKind::Simd => crate::tensor::Kernel::Simd,
+            KernelKind::SimdPar => crate::tensor::Kernel::SimdPar,
+        }
+    }
+}
+
 /// LR schedule selector.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum LrSchedule {
@@ -287,6 +341,13 @@ pub struct TrainConfig {
     /// contract 5). Ignored by orderings other than
     /// [`OrderingKind::ShardedPairBalance`].
     pub shard_transport: TransportKind,
+    /// Balance-kernel dispatch tier
+    /// (`--kernels auto|scalar|simd|simd+par`), installed as the
+    /// process-wide default before policies are built. Every tier is
+    /// bit-identical (docs/determinism.md contract 7); pin `scalar`
+    /// to cross-check a result, `simd`/`simd+par` to force the fast
+    /// tiers on (see docs/perf.md).
+    pub kernels: KernelKind,
     /// Address of a remote shard worker server (`--connect HOST:PORT`,
     /// started with `grab exp cdgrab --listen HOST:PORT`). Requires
     /// `shard_transport = tcp`.
@@ -332,6 +393,7 @@ impl Default for TrainConfig {
             async_shards: false,
             shard_queue_depth: 4,
             shard_transport: TransportKind::Channel,
+            kernels: KernelKind::Auto,
             connect: None,
             artifacts_dir: "artifacts".to_string(),
             metrics_out: None,
@@ -439,6 +501,9 @@ impl TrainConfig {
         if let Some(t) = args.opt_str("transport") {
             self.shard_transport = TransportKind::parse(&t)?;
         }
+        if let Some(k) = args.opt_str("kernels") {
+            self.kernels = KernelKind::parse(&k)?;
+        }
         if let Some(addr) = args.opt_str("connect") {
             self.connect = Some(addr);
         }
@@ -509,6 +574,9 @@ impl TrainConfig {
         c.shard_queue_depth = depth as usize;
         if let Some(t) = doc.get_str("transport") {
             c.shard_transport = TransportKind::parse(&t)?;
+        }
+        if let Some(k) = doc.get_str("kernels") {
+            c.kernels = KernelKind::parse(&k)?;
         }
         if let Some(addr) = doc.get_str("connect") {
             c.connect = Some(addr);
@@ -744,6 +812,34 @@ mod tests {
         assert_eq!(c.shard_transport, TransportKind::Tcp);
         assert_eq!(c.connect.as_deref(), Some("h:1"));
         let doc = TomlDoc::parse("transport = \"warp\"").unwrap();
+        assert!(TrainConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn kernel_config_plumbs_through() {
+        for k in [
+            KernelKind::Auto,
+            KernelKind::Scalar,
+            KernelKind::Simd,
+            KernelKind::SimdPar,
+        ] {
+            assert_eq!(KernelKind::parse(k.name()).unwrap(), k);
+        }
+        assert!(KernelKind::parse("abacus").is_err());
+
+        let args = Args::parse(["--kernels", "scalar"]).unwrap();
+        let mut c = TrainConfig::default();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.kernels, KernelKind::Scalar);
+        assert_eq!(
+            c.kernels.resolve(),
+            crate::tensor::Kernel::Scalar
+        );
+
+        let doc = TomlDoc::parse("kernels = \"simd+par\"").unwrap();
+        let c = TrainConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.kernels, KernelKind::SimdPar);
+        let doc = TomlDoc::parse("kernels = \"avx512\"").unwrap();
         assert!(TrainConfig::from_toml(&doc).is_err());
     }
 

@@ -30,12 +30,15 @@
 //! See `rust/README.md` for the module map, the full command index, and
 //! the shard wire-frame layout, and `docs/determinism.md` for the
 //! equivalence contracts (per-example ≡ block, W=1 ≡ PairBalance, sync
-//! ≡ async shards, sync ≡ pipeline, socket ≡ channel transport) the
-//! test suite enforces.
+//! ≡ async shards, sync ≡ pipeline, socket ≡ channel transport,
+//! scalar ≡ SIMD ≡ row-parallel kernels) the test suite enforces.
+//! `docs/perf.md` covers the balance-kernel tiers and the recorded
+//! `BENCH_*.json` perf trajectory.
 
 #![warn(missing_docs)]
 
 pub mod balance;
+pub mod bench;
 pub mod config;
 pub mod data;
 pub mod exp;

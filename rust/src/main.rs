@@ -12,6 +12,8 @@
 //!             cdgrab|all [options]
 //!             (cdgrab: --listen HOST:PORT serves shard workers,
 //!              --connect HOST:PORT dials a remote worker server)
+//! grab bench  [--out BENCH.json] [--quick] [--kernels LIST]
+//!             # balance-kernel perf trajectory (docs/perf.md)
 //! grab inspect [--artifacts DIR]       # artifact/manifest summary
 //! ```
 
@@ -40,6 +42,7 @@ fn run() -> Result<()> {
     match cmd {
         "train" => cmd_train(&args),
         "exp" => grab::exp::run_from_cli(&args),
+        "bench" => grab::bench::run_from_cli(&args),
         "inspect" => cmd_inspect(&args),
         "help" | "--help" => {
             print!("{}", HELP);
@@ -58,6 +61,8 @@ USAGE:
   grab exp <id> [options]  regenerate a paper artifact
                            (fig1|fig2|fig3|fig4|table1|statement1|
                             granularity|cdgrab|all)
+  grab bench [options]     run the balance/ordering benchmark cases and
+                           emit versioned JSON (docs/perf.md)
   grab inspect             show artifact manifest / model layouts
   grab help
 
@@ -90,6 +95,10 @@ TRAIN OPTIONS:
                            over the remaining shards (needs
                            --async-shards or --transport tcp; per-epoch
                            plans are recorded for exact replay)
+  --kernels auto|scalar|simd|simd+par
+                           balance-kernel dispatch tier (default: auto =
+                           probe AVX2 once; every tier emits bit-identical
+                           epoch orders — docs/determinism.md contract 7)
   --balancer alg5|alg6|kernel
   --epochs N --n N --n-eval N --accum N
   --lr F --momentum F --wd F --seed N
@@ -104,6 +113,13 @@ EXP OPTIONS (see DESIGN.md experiment index):
   --connect HOST:PORT      (cdgrab) point the sweep's TCP policies at a
                            remote worker server instead of loopback
   --max-conns N            (with --listen) exit after serving N links
+
+BENCH OPTIONS:
+  --out FILE.json          where to write results (default: stdout)
+  --kernels k1,k2,…        kernel tiers to measure
+                           (default: scalar,simd,simd+par)
+  --quick                  reduced iteration budget (CI smoke mode;
+                           boolean flag, put it last)
 ";
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -116,10 +132,14 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.apply_args(args)?;
     args.reject_unknown()?;
 
+    // Install the configured kernel tier before any ordering policy
+    // snapshots it (policies pin their tier at construction).
+    grab::tensor::set_default_kernel(cfg.kernels.resolve());
     eprintln!(
-        "[grab] run {} (artifacts: {})",
+        "[grab] run {} (artifacts: {}, kernels: {})",
         cfg.run_id(),
-        cfg.artifacts_dir
+        cfg.artifacts_dir,
+        cfg.kernels.resolve().name()
     );
     let rt = Runtime::open(&cfg.artifacts_dir)?;
     eprintln!("[grab] PJRT platform: {}", rt.platform());

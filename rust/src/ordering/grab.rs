@@ -35,7 +35,7 @@ use std::ops::Range;
 
 use crate::balance::Balancer;
 use crate::ordering::{GradBlock, OrderPolicy};
-use crate::tensor;
+use crate::tensor::{self, Kernel};
 
 /// The paper's GraB policy (Algorithm 4), block-streamed — see the
 /// module docs for the balancing/reorder mechanics.
@@ -61,8 +61,13 @@ pub struct GraBOrder {
     blk_signed: Vec<f32>,
     /// Block scratch: Σ g_i over the current block (fresh-mean fold).
     blk_sum: Vec<f32>,
+    /// Block scratch: per-row signs of the current block.
+    eps_buf: Vec<f32>,
     /// Centering scratch for non-deterministic balancers.
     scratch_c: Vec<f32>,
+    /// Kernel tier the batched observe path dispatches through
+    /// (bit-identical across tiers — determinism contract 7).
+    kernel: Kernel,
     /// Diagnostics: max ‖s‖∞ observed this epoch (the balancing bound A),
     /// sampled once per block when a multiple of 16 observations is
     /// crossed (a full ℓ∞ scan per step would cost an extra pass over s).
@@ -74,9 +79,22 @@ pub struct GraBOrder {
 
 impl GraBOrder {
     /// A GraB policy over `n` units of dimension `d` using `balancer`
-    /// for the sign decisions.
+    /// for the sign decisions, dispatching through the process-default
+    /// kernel tier ([`tensor::default_kernel`]).
     pub fn new(n: usize, d: usize, balancer: Box<dyn Balancer + Send>)
         -> GraBOrder {
+        Self::with_kernel(n, d, balancer, tensor::default_kernel())
+    }
+
+    /// [`GraBOrder::new`] with an explicit kernel tier — used by the
+    /// contract-7 equivalence tests and the bench runner (tests must
+    /// not touch the process-global default).
+    pub fn with_kernel(
+        n: usize,
+        d: usize,
+        balancer: Box<dyn Balancer + Send>,
+        kernel: Kernel,
+    ) -> GraBOrder {
         // Only the scratch the active observe path needs is allocated
         // (and therefore reported by state_bytes): the batched path uses
         // the block accumulators, the sequential path one centering
@@ -96,11 +114,18 @@ impl GraBOrder {
             dots: Vec::new(),
             blk_signed: if batched { vec![0.0; d] } else { Vec::new() },
             blk_sum: if batched { vec![0.0; d] } else { Vec::new() },
+            eps_buf: Vec::new(),
             scratch_c: if batched { Vec::new() } else { vec![0.0; d] },
+            kernel,
             epoch_balance_inf: 0.0,
             plus_signs: 0,
             observed: 0,
         }
+    }
+
+    /// The kernel tier this policy dispatches through (for logs).
+    pub fn kernel_name(&self) -> &'static str {
+        self.kernel.name()
     }
 
     /// The balancer's name (for logs).
@@ -151,36 +176,42 @@ impl OrderPolicy for GraBOrder {
         if self.balancer.uses_centered_dot() {
             // Batched path: B decisions against one refresh of s, then a
             // single fold of s and the fresh mean for the whole block.
-            tensor::dot_centered_block(
+            // Every tensor pass dispatches through the selected kernel
+            // tier; all tiers are bit-identical (contract 7), so the
+            // signs — and therefore the orders — never depend on it.
+            self.kernel.dot_centered_block(
                 &self.s,
                 &self.stale_mean,
                 block.data(),
                 self.d,
                 &mut self.dots,
             );
-            tensor::zero(&mut self.blk_signed);
-            tensor::zero(&mut self.blk_sum);
+            self.eps_buf.clear();
             let mut net = 0.0f32;
-            for (i, row) in block.iter_rows().enumerate() {
+            for i in 0..rows {
                 // ε = +1 iff <s, g − m> < 0, ties to −1 (Algorithm 5).
                 let eps = if self.dots[i] < 0.0 { 1.0f32 } else { -1.0 };
-                tensor::sign_sum_accum(
-                    eps,
-                    row,
-                    &mut self.blk_signed,
-                    &mut self.blk_sum,
-                );
+                self.eps_buf.push(eps);
                 net += eps;
                 self.place(range.start + i, eps);
             }
+            tensor::zero(&mut self.blk_signed);
+            tensor::zero(&mut self.blk_sum);
+            self.kernel.accum_signed_sum(
+                &self.eps_buf,
+                block.data(),
+                self.d,
+                &mut self.blk_signed,
+                &mut self.blk_sum,
+            );
             // s += Σ ε_i (g_i − m) and m_{k+1} += Σ g_i / n.
-            tensor::fold_signed_block(
+            self.kernel.fold_signed_block(
                 &self.blk_signed,
                 net,
                 &self.stale_mean,
                 &mut self.s,
             );
-            tensor::axpy(inv_n, &self.blk_sum, &mut self.fresh_mean);
+            self.kernel.axpy(inv_n, &self.blk_sum, &mut self.fresh_mean);
         } else {
             // Exact sequential path for stateful balancers (Alg. 6 walk):
             // dispatch hoisted to once per block, centering scratch reused.

@@ -34,7 +34,7 @@
 use std::ops::Range;
 
 use crate::ordering::{GradBlock, OrderPolicy};
-use crate::tensor;
+use crate::tensor::{self, Kernel};
 
 /// CD-GraB's PairBalance policy (Algorithm 1) — balances consecutive
 /// pair differences; see the module docs.
@@ -59,11 +59,25 @@ pub struct PairBalance {
     /// Count of +1 signs this epoch (for tests/metrics).
     pub plus_signs: usize,
     observed: usize,
+    /// Kernel tier for the pair decision/update kernels. The balancing
+    /// chain is sequential (each pair reads the `s` the previous pair
+    /// wrote), so `SimdPar` behaves as `Simd` here — only the per-pair
+    /// kernels vectorize. Bit-identical across tiers (contract 7).
+    kernel: Kernel,
 }
 
 impl PairBalance {
-    /// A pair-balancing policy over `n` units of dimension `d`.
+    /// A pair-balancing policy over `n` units of dimension `d`,
+    /// dispatching through the process-default kernel tier
+    /// ([`tensor::default_kernel`]).
     pub fn new(n: usize, d: usize) -> PairBalance {
+        Self::with_kernel(n, d, tensor::default_kernel())
+    }
+
+    /// [`PairBalance::new`] with an explicit kernel tier — used by the
+    /// contract-7 equivalence tests and the bench runner (tests must
+    /// not touch the process-global default).
+    pub fn with_kernel(n: usize, d: usize, kernel: Kernel) -> PairBalance {
         PairBalance {
             n,
             d,
@@ -78,6 +92,7 @@ impl PairBalance {
             epoch_balance_inf: 0.0,
             plus_signs: 0,
             observed: 0,
+            kernel,
         }
     }
 
@@ -118,12 +133,12 @@ impl PairBalance {
     fn pair_step(&mut self, a: &[f32], b: &[f32], pos_a: usize) {
         // ε = +1 iff <s, a − b> < 0, ties to −1 (Algorithm 5's rule on
         // the pair difference).
-        let eps = if tensor::dot_diff(&self.s, a, b) < 0.0 {
+        let eps = if self.kernel.dot_diff(&self.s, a, b) < 0.0 {
             1.0f32
         } else {
             -1.0
         };
-        tensor::axpy_diff(eps, a, b, &mut self.s);
+        self.kernel.axpy_diff(eps, a, b, &mut self.s);
         self.place(pos_a, eps);
         self.place(pos_a + 1, -eps);
     }
@@ -131,14 +146,14 @@ impl PairBalance {
     /// Balance the trailing unpaired example against a zero partner.
     fn lone_step(&mut self) {
         debug_assert!(self.have_pending);
-        let eps = if tensor::dot(&self.s, &self.pending) < 0.0 {
+        let eps = if self.kernel.dot(&self.s, &self.pending) < 0.0 {
             1.0f32
         } else {
             -1.0
         };
         // s += eps * (g − 0).
         let pending = std::mem::take(&mut self.pending);
-        tensor::axpy(eps, &pending, &mut self.s);
+        self.kernel.axpy(eps, &pending, &mut self.s);
         self.pending = pending;
         self.place(self.pending_pos, eps);
         self.have_pending = false;

@@ -92,10 +92,11 @@ use crate::ordering::topology::{
     ElasticPlanner, Topology, WeightSource,
 };
 use crate::ordering::transport::{
-    spawn_channel_shards, tcp, LinkStats, Relink, ShardTransport,
-    TransportStats,
+    spawn_channel_shards, spawn_channel_shards_with_kernel, tcp,
+    LinkStats, Relink, ShardTransport, TransportStats,
 };
 use crate::ordering::{GradBlock, OrderPolicy, PairBalance};
+use crate::tensor::Kernel;
 use crate::util::timer::Stopwatch;
 
 /// Round-robin merge of shard-local orders into the global epoch order
@@ -394,6 +395,31 @@ impl ShardedOrder {
         )
     }
 
+    /// [`ShardedOrder::new`] with an explicit kernel tier for every
+    /// shard balancer (determinism contract 7; the default
+    /// constructors snapshot [`crate::tensor::default_kernel`]
+    /// instead).
+    pub fn new_with_kernel(
+        n: usize,
+        d: usize,
+        num_shards: usize,
+        kernel: Kernel,
+    ) -> ShardedOrder {
+        let topology = Topology::plan(n, 0, &vec![1; num_shards]);
+        let shards = topology
+            .sizes
+            .iter()
+            .map(|&s| PairBalance::with_kernel(s, d, kernel))
+            .collect();
+        ShardedOrder::assemble(
+            Backend::Strided(shards),
+            topology,
+            n,
+            d,
+            None,
+        )
+    }
+
     /// Synchronous gathered coordinator: like [`ShardedOrder::new`], but
     /// each shard's strided rows are copied into a reusable scratch
     /// block and balanced as one batched call — the copy-for-batching
@@ -417,6 +443,32 @@ impl ShardedOrder {
             .sizes
             .iter()
             .map(|&s| PairBalance::new(s, d))
+            .collect();
+        let scratch = (0..topology.num_shards())
+            .map(|_| ScratchBlock::new(d))
+            .collect();
+        ShardedOrder::assemble(
+            Backend::Gathered { shards, scratch },
+            topology,
+            n,
+            d,
+            None,
+        )
+    }
+
+    /// [`ShardedOrder::new_gathered`] with an explicit kernel tier
+    /// (determinism contract 7).
+    pub fn new_gathered_with_kernel(
+        n: usize,
+        d: usize,
+        num_shards: usize,
+        kernel: Kernel,
+    ) -> ShardedOrder {
+        let topology = Topology::plan(n, 0, &vec![1; num_shards]);
+        let shards: Vec<PairBalance> = topology
+            .sizes
+            .iter()
+            .map(|&s| PairBalance::with_kernel(s, d, kernel))
             .collect();
         let scratch = (0..topology.num_shards())
             .map(|_| ScratchBlock::new(d))
@@ -464,6 +516,40 @@ impl ShardedOrder {
         let topology = Topology::plan(n, 0, weights);
         let links =
             spawn_channel_shards(&topology.sizes, d, queue_depth);
+        let shards = AsyncShards::new(
+            links,
+            &topology.sizes,
+            d,
+            "channel",
+            false,
+        );
+        ShardedOrder::assemble(
+            Backend::Async(shards),
+            topology,
+            n,
+            d,
+            None,
+        )
+    }
+
+    /// [`ShardedOrder::new_async`] with an explicit kernel tier: each
+    /// worker thread's balancer snapshots `kernel` instead of the
+    /// process default (determinism contract 7).
+    pub fn new_async_with_kernel(
+        n: usize,
+        d: usize,
+        num_shards: usize,
+        queue_depth: usize,
+        kernel: Kernel,
+    ) -> ShardedOrder {
+        assert!(d > 0, "async shards need a positive dimension");
+        let topology = Topology::plan(n, 0, &vec![1; num_shards]);
+        let links = spawn_channel_shards_with_kernel(
+            &topology.sizes,
+            d,
+            queue_depth,
+            kernel,
+        );
         let shards = AsyncShards::new(
             links,
             &topology.sizes,

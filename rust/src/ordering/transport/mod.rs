@@ -43,6 +43,7 @@ use crate::ordering::queue::{
     block_queue_sized, BlockReceiver, BlockSender, ScratchBlock, ShardMsg,
 };
 use crate::ordering::{OrderPolicy, PairBalance};
+use crate::tensor::{self, Kernel};
 use crate::util::ser::{FrameReadError, WireError};
 
 /// What a shard worker sends back at each epoch boundary.
@@ -277,7 +278,28 @@ impl ChannelTransport {
         depth: usize,
         row_hint: usize,
     ) -> ChannelTransport {
-        let balancer = PairBalance::new(local_n, d);
+        ChannelTransport::spawn_with_kernel(
+            local_n,
+            d,
+            depth,
+            row_hint,
+            tensor::default_kernel(),
+        )
+    }
+
+    /// [`ChannelTransport::spawn_sized`] with an explicit kernel tier
+    /// for the worker's balancer (determinism contract 7). The kernel
+    /// is snapshotted on the *caller's* thread, so the worker is
+    /// pinned to it regardless of later
+    /// [`crate::tensor::set_default_kernel`] calls.
+    pub fn spawn_with_kernel(
+        local_n: usize,
+        d: usize,
+        depth: usize,
+        row_hint: usize,
+        kernel: Kernel,
+    ) -> ChannelTransport {
+        let balancer = PairBalance::with_kernel(local_n, d, kernel);
         let (sender, receiver) = block_queue_sized(d, depth, row_hint);
         let (report_tx, report_rx) = channel();
         let handle = std::thread::spawn(move || {
@@ -447,6 +469,22 @@ pub fn spawn_channel_shards(
     d: usize,
     depth: usize,
 ) -> Vec<Box<dyn ShardTransport>> {
+    spawn_channel_shards_with_kernel(
+        sizes,
+        d,
+        depth,
+        tensor::default_kernel(),
+    )
+}
+
+/// [`spawn_channel_shards`] with an explicit kernel tier for every
+/// worker's balancer (determinism contract 7).
+pub fn spawn_channel_shards_with_kernel(
+    sizes: &[usize],
+    d: usize,
+    depth: usize,
+    kernel: Kernel,
+) -> Vec<Box<dyn ShardTransport>> {
     let n: usize = sizes.iter().sum();
     sizes
         .iter()
@@ -456,8 +494,9 @@ pub fn spawn_channel_shards(
             } else {
                 ((NOMINAL_BLOCK_ROWS * size).div_ceil(n)).min(size)
             };
-            Box::new(ChannelTransport::spawn_sized(size, d, depth, hint))
-                as Box<dyn ShardTransport>
+            Box::new(ChannelTransport::spawn_with_kernel(
+                size, d, depth, hint, kernel,
+            )) as Box<dyn ShardTransport>
         })
         .collect()
 }

@@ -2,9 +2,21 @@
 //!
 //! The GraB inner loop is two fused reductions (`dot`) plus a signed update
 //! (`axpy`) per example; everything here is written allocation-free over
-//! caller-provided slices. `dot`/`axpy` use 8-lane manual unrolling so LLVM
-//! reliably vectorizes them (measured in benches/balance_hot.rs; see
-//! EXPERIMENTS.md §Perf for the before/after of naive vs unrolled).
+//! caller-provided slices. The free functions are the **scalar reference
+//! tier**: 8-lane manually unrolled loops (bounds-check-free
+//! `chunks_exact` + `split_at`) that LLVM vectorizes reliably. [`Kernel`]
+//! layers two faster, runtime-dispatched tiers on top — AVX2 `std::arch`
+//! kernels (the private `simd` module) and a row-parallel block path
+//! ([`par`]) — both **bit-identical** to the scalar tier by construction
+//! (determinism contract 7 in docs/determinism.md; see docs/perf.md for
+//! the tier design and how to read the recorded `BENCH_*.json`
+//! trajectory, measured in benches/balance_hot.rs).
+
+pub mod par;
+#[cfg(target_arch = "x86_64")]
+mod simd;
+
+use std::sync::atomic::{AtomicU8, Ordering};
 
 /// Zero-copy view over a contiguous row-major `[rows × d]` gradient block —
 /// the executor's upload buffer seen as `rows` per-example gradients. This
@@ -59,17 +71,18 @@ impl<'a> GradBlock<'a> {
 /// Dot product with 8-way unrolled accumulators.
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     assert_eq!(a.len(), b.len());
-    let chunks = a.len() / 8;
+    let split = a.len() - a.len() % 8;
+    let (ac, at) = a.split_at(split);
+    let (bc, bt) = b.split_at(split);
     let mut acc = [0.0f32; 8];
-    for i in 0..chunks {
-        let off = i * 8;
+    for (av, bv) in ac.chunks_exact(8).zip(bc.chunks_exact(8)) {
         for lane in 0..8 {
-            acc[lane] += a[off + lane] * b[off + lane];
+            acc[lane] += av[lane] * bv[lane];
         }
     }
     let mut tail = 0.0f32;
-    for i in chunks * 8..a.len() {
-        tail += a[i] * b[i];
+    for (x, y) in at.iter().zip(bt) {
+        tail += x * y;
     }
     acc.iter().sum::<f32>() + tail
 }
@@ -83,15 +96,16 @@ pub fn dot_naive(a: &[f32], b: &[f32]) -> f32 {
 /// `y += alpha * x`, 8-way unrolled.
 pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
     assert_eq!(x.len(), y.len());
-    let chunks = x.len() / 8;
-    for i in 0..chunks {
-        let off = i * 8;
+    let split = x.len() - x.len() % 8;
+    let (xc, xt) = x.split_at(split);
+    let (yc, yt) = y.split_at_mut(split);
+    for (xv, yv) in xc.chunks_exact(8).zip(yc.chunks_exact_mut(8)) {
         for lane in 0..8 {
-            y[off + lane] += alpha * x[off + lane];
+            yv[lane] += alpha * xv[lane];
         }
     }
-    for i in chunks * 8..x.len() {
-        y[i] += alpha * x[i];
+    for (yv, xv) in yt.iter_mut().zip(xt) {
+        *yv += alpha * xv;
     }
 }
 
@@ -111,7 +125,8 @@ pub fn dot_centered(s: &[f32], g: &[f32], m: &[f32]) -> f32 {
     assert_eq!(s.len(), g.len());
     assert_eq!(s.len(), m.len());
     // chunks_exact + fixed-size destructuring removes bounds checks and
-    // lets LLVM keep 8 independent FMA accumulators (§Perf iteration 3).
+    // lets LLVM keep 8 independent accumulators (docs/perf.md, scalar
+    // tier).
     let mut acc = [0.0f32; 8];
     let (sc, st) = s.split_at(s.len() - s.len() % 8);
     let (gc, gt) = g.split_at(sc.len());
@@ -136,21 +151,27 @@ pub fn dot_centered(s: &[f32], g: &[f32], m: &[f32]) -> f32 {
 pub fn axpy_centered(eps: f32, g: &[f32], m: &[f32], s: &mut [f32]) {
     assert_eq!(s.len(), g.len());
     assert_eq!(s.len(), m.len());
-    let chunks = s.len() / 8;
-    for i in 0..chunks {
-        let off = i * 8;
+    let split = s.len() - s.len() % 8;
+    let (gc, gt) = g.split_at(split);
+    let (mc, mt) = m.split_at(split);
+    let (sc, st) = s.split_at_mut(split);
+    for ((gv, mv), sv) in gc
+        .chunks_exact(8)
+        .zip(mc.chunks_exact(8))
+        .zip(sc.chunks_exact_mut(8))
+    {
         for lane in 0..8 {
-            s[off + lane] += eps * (g[off + lane] - m[off + lane]);
+            sv[lane] += eps * (gv[lane] - mv[lane]);
         }
     }
-    for i in chunks * 8..s.len() {
-        s[i] += eps * (g[i] - m[i]);
+    for i in 0..gt.len() {
+        st[i] += eps * (gt[i] - mt[i]);
     }
 }
 
 /// Fully fused GraB observe update: in ONE pass over the operands,
 /// `s += eps * (g - m)` and `fresh += inv_n * g`. Saves a full re-read of
-/// `g` vs doing the two updates separately (see EXPERIMENTS.md §Perf).
+/// `g` vs doing the two updates separately (see docs/perf.md).
 pub fn grab_update(
     eps: f32,
     inv_n: f32,
@@ -242,6 +263,26 @@ pub fn sign_sum_accum(
     }
 }
 
+/// Whole-block form of [`sign_sum_accum`]: for every row `i` of the
+/// `[B × d]` block, `signed += eps[i] * row_i` and `sum += row_i`. This
+/// is the scalar reference of the pass [`Kernel::accum_signed_sum`]
+/// dispatches (the SIMD tier vectorizes each row; the parallel tier
+/// splits the columns across workers — per-element accumulation order is
+/// row-major either way, so all tiers are bit-identical).
+pub fn accum_signed_sum(
+    eps: &[f32],
+    block: &[f32],
+    d: usize,
+    signed: &mut [f32],
+    sum: &mut [f32],
+) {
+    assert!(d > 0, "accum_signed_sum dimension must be positive");
+    assert_eq!(block.len(), eps.len() * d);
+    for (row, &e) in block.chunks_exact(d).zip(eps) {
+        sign_sum_accum(e, row, signed, sum);
+    }
+}
+
 /// Block fold of the running signed sum: `s += signed - net * m`, where
 /// `signed = Σ eps_i * g_i` and `net = Σ eps_i` over the block. Together
 /// with [`sign_sum_accum`] this equals per-row `s += eps_i * (g_i - m)`
@@ -318,6 +359,264 @@ pub fn axpy_diff(eps: f32, a: &[f32], b: &[f32], s: &mut [f32]) {
     }
     for i in 0..at.len() {
         st[i] += eps * (at[i] - bt[i]);
+    }
+}
+
+/// Runtime-selected implementation tier for the balance hot-path
+/// kernels (docs/perf.md). All tiers are bit-identical by construction
+/// — same 8-lane accumulator structure, separate mul then add (no FMA
+/// contraction), same left-to-right lane fold, same scalar tail — so
+/// tier choice never changes an epoch order (determinism contract 7).
+///
+/// Policies snapshot a tier at construction ([`default_kernel`] unless
+/// given one explicitly), so dispatch is decided once, not per call.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// Portable 8-lane unrolled scalar Rust — the reference tier.
+    Scalar,
+    /// AVX2 `std::arch` kernels (falls back to scalar off-x86_64 or
+    /// when the CPU lacks AVX2).
+    Simd,
+    /// [`Kernel::Simd`] plus the row-parallel worker pool ([`par`]) for
+    /// the block kernels; sequential kernels behave as `Simd`.
+    SimdPar,
+}
+
+/// Blocks smaller than this many f32 elements stay on the current
+/// thread under [`Kernel::SimdPar`] — pool hand-off costs more than it
+/// saves. Purely a performance threshold: the parallel and serial
+/// paths produce bit-identical output, so the cutover is unobservable.
+const PAR_MIN_ELEMS: usize = 32 * 1024;
+
+/// Cached one-shot AVX2 probe (`is_x86_feature_detected!`).
+#[cfg(target_arch = "x86_64")]
+fn avx2() -> bool {
+    static AVX2: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *AVX2.get_or_init(|| is_x86_feature_detected!("avx2"))
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2() -> bool {
+    false
+}
+
+/// `Kernel::Simd`'s per-row kernels as plain-fn wrappers for the
+/// parallel pool (selected only after [`avx2`] confirmed support).
+#[cfg(target_arch = "x86_64")]
+fn simd_row_dot_centered(s: &[f32], g: &[f32], m: &[f32]) -> f32 {
+    // SAFETY: callers select this wrapper only when `avx2()` is true.
+    unsafe { simd::dot_centered(s, g, m) }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn simd_lane_accum(eps: f32, g: &[f32], signed: &mut [f32], sum: &mut [f32]) {
+    // SAFETY: callers select this wrapper only when `avx2()` is true.
+    unsafe { simd::sign_sum_accum(eps, g, signed, sum) }
+}
+
+impl Kernel {
+    /// The best tier for this host: `SimdPar` when AVX2 is present,
+    /// else the scalar reference tier.
+    pub fn auto() -> Kernel {
+        if avx2() {
+            Kernel::SimdPar
+        } else {
+            Kernel::Scalar
+        }
+    }
+
+    /// Stable tier name (config value / bench JSON `kernel` field).
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            Kernel::Simd => "simd",
+            Kernel::SimdPar => "simd+par",
+        }
+    }
+
+    /// Whether the AVX2 bodies are usable for this tier on this host.
+    #[cfg(target_arch = "x86_64")]
+    fn simd_active(self) -> bool {
+        self != Kernel::Scalar && avx2()
+    }
+
+    /// Whether a block of `elems` f32s goes to the worker pool.
+    fn par_active(self, elems: usize) -> bool {
+        self == Kernel::SimdPar && elems >= PAR_MIN_ELEMS
+    }
+
+    /// Dispatched [`dot`].
+    pub fn dot(self, a: &[f32], b: &[f32]) -> f32 {
+        #[cfg(target_arch = "x86_64")]
+        if self.simd_active() {
+            // SAFETY: AVX2 presence verified by `simd_active`.
+            return unsafe { simd::dot(a, b) };
+        }
+        dot(a, b)
+    }
+
+    /// Dispatched [`axpy`].
+    pub fn axpy(self, alpha: f32, x: &[f32], y: &mut [f32]) {
+        #[cfg(target_arch = "x86_64")]
+        if self.simd_active() {
+            // SAFETY: AVX2 presence verified by `simd_active`.
+            return unsafe { simd::axpy(alpha, x, y) };
+        }
+        axpy(alpha, x, y)
+    }
+
+    /// Dispatched [`dot_centered`].
+    pub fn dot_centered(self, s: &[f32], g: &[f32], m: &[f32]) -> f32 {
+        #[cfg(target_arch = "x86_64")]
+        if self.simd_active() {
+            // SAFETY: AVX2 presence verified by `simd_active`.
+            return unsafe { simd::dot_centered(s, g, m) };
+        }
+        dot_centered(s, g, m)
+    }
+
+    /// Dispatched [`dot_diff`].
+    pub fn dot_diff(self, s: &[f32], a: &[f32], b: &[f32]) -> f32 {
+        #[cfg(target_arch = "x86_64")]
+        if self.simd_active() {
+            // SAFETY: AVX2 presence verified by `simd_active`.
+            return unsafe { simd::dot_diff(s, a, b) };
+        }
+        dot_diff(s, a, b)
+    }
+
+    /// Dispatched [`axpy_diff`].
+    pub fn axpy_diff(self, eps: f32, a: &[f32], b: &[f32], s: &mut [f32]) {
+        #[cfg(target_arch = "x86_64")]
+        if self.simd_active() {
+            // SAFETY: AVX2 presence verified by `simd_active`.
+            return unsafe { simd::axpy_diff(eps, a, b, s) };
+        }
+        axpy_diff(eps, a, b, s)
+    }
+
+    /// Dispatched [`fold_signed_block`].
+    pub fn fold_signed_block(
+        self,
+        signed: &[f32],
+        net: f32,
+        m: &[f32],
+        s: &mut [f32],
+    ) {
+        #[cfg(target_arch = "x86_64")]
+        if self.simd_active() {
+            // SAFETY: AVX2 presence verified by `simd_active`.
+            return unsafe { simd::fold_signed_block(signed, net, m, s) };
+        }
+        fold_signed_block(signed, net, m, s)
+    }
+
+    /// Dispatched [`dot_centered_block`]. Under [`Kernel::SimdPar`] the
+    /// independent rows are split across the worker pool with disjoint
+    /// per-row output slots ([`par::dot_centered_block`]).
+    pub fn dot_centered_block(
+        self,
+        s: &[f32],
+        m: &[f32],
+        block: &[f32],
+        d: usize,
+        out: &mut Vec<f32>,
+    ) {
+        if self.par_active(block.len()) {
+            par::dot_centered_block(s, m, block, d, out, self.row_dot());
+            return;
+        }
+        #[cfg(target_arch = "x86_64")]
+        if self.simd_active() {
+            assert_eq!(s.len(), d);
+            assert_eq!(m.len(), d);
+            assert_eq!(block.len() % d, 0);
+            out.clear();
+            for row in block.chunks_exact(d) {
+                // SAFETY: AVX2 presence verified by `simd_active`.
+                out.push(unsafe { simd::dot_centered(s, row, m) });
+            }
+            return;
+        }
+        dot_centered_block(s, m, block, d, out);
+    }
+
+    /// Dispatched [`accum_signed_sum`]. Under [`Kernel::SimdPar`] the
+    /// columns are split across the worker pool; every worker walks all
+    /// rows in order over its disjoint column range, so each element of
+    /// `signed`/`sum` sees exactly the serial accumulation order
+    /// ([`par::accum_signed_sum`]).
+    pub fn accum_signed_sum(
+        self,
+        eps: &[f32],
+        block: &[f32],
+        d: usize,
+        signed: &mut [f32],
+        sum: &mut [f32],
+    ) {
+        if self.par_active(block.len()) {
+            par::accum_signed_sum(
+                eps,
+                block,
+                d,
+                signed,
+                sum,
+                self.lane_accum(),
+            );
+            return;
+        }
+        #[cfg(target_arch = "x86_64")]
+        if self.simd_active() {
+            assert!(d > 0, "accum_signed_sum dimension must be positive");
+            assert_eq!(block.len(), eps.len() * d);
+            for (row, &e) in block.chunks_exact(d).zip(eps) {
+                // SAFETY: AVX2 presence verified by `simd_active`.
+                unsafe { simd::sign_sum_accum(e, row, signed, sum) };
+            }
+            return;
+        }
+        accum_signed_sum(eps, block, d, signed, sum);
+    }
+
+    /// Per-row `dot_centered` for the pool workers.
+    fn row_dot(self) -> fn(&[f32], &[f32], &[f32]) -> f32 {
+        #[cfg(target_arch = "x86_64")]
+        if self.simd_active() {
+            return simd_row_dot_centered;
+        }
+        dot_centered
+    }
+
+    /// Per-column-range `sign_sum_accum` for the pool workers.
+    fn lane_accum(self) -> fn(f32, &[f32], &mut [f32], &mut [f32]) {
+        #[cfg(target_arch = "x86_64")]
+        if self.simd_active() {
+            return simd_lane_accum;
+        }
+        sign_sum_accum
+    }
+}
+
+/// Process-default kernel tier: 0 = unset (resolve [`Kernel::auto`]),
+/// else `Kernel` discriminant + 1.
+static DEFAULT_KERNEL: AtomicU8 = AtomicU8::new(0);
+
+/// Pin the process-default kernel tier (the CLI's `--kernels`). Policies
+/// constructed afterwards without an explicit tier snapshot this value.
+/// Tests must use the `with_kernel` constructors instead — the default
+/// is process-global and the test harness runs threads concurrently.
+pub fn set_default_kernel(k: Kernel) {
+    DEFAULT_KERNEL.store(k as u8 + 1, Ordering::Relaxed);
+}
+
+/// The process-default kernel tier ([`set_default_kernel`], else
+/// [`Kernel::auto`] for this host).
+pub fn default_kernel() -> Kernel {
+    match DEFAULT_KERNEL.load(Ordering::Relaxed) {
+        1 => Kernel::Scalar,
+        2 => Kernel::Simd,
+        3 => Kernel::SimdPar,
+        _ => Kernel::auto(),
     }
 }
 
@@ -581,6 +880,71 @@ mod tests {
         axpy(0.25, &sum, &mut f2);
         assert_eq!(s1, s2);
         assert_eq!(f1, f2);
+    }
+
+    #[test]
+    fn accum_signed_sum_matches_per_row_loop() {
+        let mut rng = Rng::new(8);
+        for (rows, d) in [(1usize, 9usize), (5, 67), (4, 8)] {
+            let block: Vec<f32> =
+                (0..rows * d).map(|_| rng.gauss() as f32).collect();
+            let eps: Vec<f32> = (0..rows)
+                .map(|i| if i % 2 == 0 { 1.0 } else { -1.0 })
+                .collect();
+            let mut signed = vec![0.0f32; d];
+            let mut sum = vec![0.0f32; d];
+            accum_signed_sum(&eps, &block, d, &mut signed, &mut sum);
+            let mut signed_ref = vec![0.0f32; d];
+            let mut sum_ref = vec![0.0f32; d];
+            for (i, &e) in eps.iter().enumerate() {
+                sign_sum_accum(
+                    e,
+                    &block[i * d..(i + 1) * d],
+                    &mut signed_ref,
+                    &mut sum_ref,
+                );
+            }
+            assert_eq!(signed, signed_ref);
+            assert_eq!(sum, sum_ref);
+        }
+    }
+
+    #[test]
+    fn kernel_tiers_are_bit_identical_smoke() {
+        // In-module smoke check; the contract-7 suite in tests/kernels.rs
+        // covers hostile floats, every ragged tail, and the policies.
+        let mut rng = Rng::new(10);
+        let d = 1027; // ragged tail, large enough to clear PAR_MIN_ELEMS
+        let s = rvec(&mut rng, d);
+        let m = rvec(&mut rng, d);
+        let rows = 40;
+        let block: Vec<f32> =
+            (0..rows * d).map(|_| rng.gauss() as f32).collect();
+        let eps: Vec<f32> = (0..rows)
+            .map(|i| if i % 3 == 0 { 1.0 } else { -1.0 })
+            .collect();
+        let mut want_dots = Vec::new();
+        let mut want_signed = vec![0.0f32; d];
+        let mut want_sum = vec![0.0f32; d];
+        Kernel::Scalar
+            .dot_centered_block(&s, &m, &block, d, &mut want_dots);
+        Kernel::Scalar.accum_signed_sum(
+            &eps,
+            &block,
+            d,
+            &mut want_signed,
+            &mut want_sum,
+        );
+        for k in [Kernel::Simd, Kernel::SimdPar] {
+            let mut dots = Vec::new();
+            let mut signed = vec![0.0f32; d];
+            let mut sum = vec![0.0f32; d];
+            k.dot_centered_block(&s, &m, &block, d, &mut dots);
+            k.accum_signed_sum(&eps, &block, d, &mut signed, &mut sum);
+            assert_eq!(dots, want_dots, "{} dots", k.name());
+            assert_eq!(signed, want_signed, "{} signed", k.name());
+            assert_eq!(sum, want_sum, "{} sum", k.name());
+        }
     }
 
     #[test]

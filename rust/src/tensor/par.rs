@@ -1,0 +1,330 @@
+//! Row-parallel block processing for the balance hot path: a persistent
+//! `std::thread` worker pool that splits the independent work of a
+//! `[B × d]` block across cores **without changing a single bit** of the
+//! result (determinism contract 7, docs/perf.md).
+//!
+//! Two split strategies, chosen per kernel by what keeps the arithmetic
+//! order serial:
+//!
+//! * [`dot_centered_block`] — **row split**. Each of the B decision dots
+//!   reads the same block-entry `s`/`m` and writes its own output slot,
+//!   so rows are fully independent; workers get contiguous row chunks
+//!   with disjoint `split_at_mut` output slots. No reduction across
+//!   workers exists, so there is no order to pin.
+//! * [`accum_signed_sum`] — **column split**. The accumulators are
+//!   shared across rows, so splitting rows would need a cross-worker
+//!   reduction. Splitting *columns* instead gives each worker a disjoint
+//!   range of `signed`/`sum`, and it walks ALL rows in order over that
+//!   range — every element sees exactly the serial per-element
+//!   accumulation order, so the result is bit-identical for any worker
+//!   count.
+//!
+//! The pool is process-global and lazy: daemon threads are spawned on
+//! first use and live for the process (the balance path runs every
+//! block of every epoch — tearing the pool down between blocks would
+//! dominate the win). Tasks borrow the caller's slices; [`Pool::run`]
+//! erases the borrow lifetime to hand tasks to the long-lived workers,
+//! which is sound because it blocks on a completion latch until every
+//! task has finished. Worker panics are caught and re-raised on the
+//! caller thread.
+
+use std::collections::VecDeque;
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread;
+
+/// A borrowed unit of work handed to the pool.
+type Task<'a> = Box<dyn FnOnce() + Send + 'a>;
+
+/// Completion latch: counts outstanding tasks, records panics.
+struct Latch {
+    state: Mutex<(usize, bool)>,
+    cv: Condvar,
+}
+
+impl Latch {
+    fn new(count: usize) -> Latch {
+        Latch { state: Mutex::new((count, false)), cv: Condvar::new() }
+    }
+
+    fn complete(&self, panicked: bool) {
+        let mut st = self.state.lock().unwrap();
+        st.0 -= 1;
+        st.1 |= panicked;
+        if st.0 == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    /// Block until every task completed; returns whether any panicked.
+    fn wait(&self) -> bool {
+        let mut st = self.state.lock().unwrap();
+        while st.0 > 0 {
+            st = self.cv.wait(st).unwrap();
+        }
+        st.1
+    }
+}
+
+struct Job {
+    task: Task<'static>,
+    latch: Arc<Latch>,
+}
+
+struct Queue {
+    jobs: Mutex<VecDeque<Job>>,
+    cv: Condvar,
+}
+
+struct Pool {
+    queue: Arc<Queue>,
+    size: usize,
+}
+
+fn worker_loop(queue: &Queue) {
+    loop {
+        let job = {
+            let mut jobs = queue.jobs.lock().unwrap();
+            loop {
+                if let Some(j) = jobs.pop_front() {
+                    break j;
+                }
+                jobs = queue.cv.wait(jobs).unwrap();
+            }
+        };
+        let task = job.task;
+        let panicked =
+            panic::catch_unwind(AssertUnwindSafe(move || task())).is_err();
+        job.latch.complete(panicked);
+    }
+}
+
+impl Pool {
+    fn start() -> Pool {
+        // At least 2 workers even on single-core hosts, so the parallel
+        // path (and its determinism contract) is genuinely exercised
+        // everywhere; the split stays deterministic either way.
+        let size = thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .max(2);
+        let queue = Arc::new(Queue {
+            jobs: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+        });
+        for i in 0..size {
+            let q = Arc::clone(&queue);
+            thread::Builder::new()
+                .name(format!("grab-balance-{i}"))
+                .spawn(move || worker_loop(&q))
+                .expect("spawn balance worker");
+        }
+        Pool { queue, size }
+    }
+
+    /// Run borrowed tasks on the pool and block until all complete.
+    fn run(&self, tasks: Vec<Task<'_>>) {
+        if tasks.len() <= 1 {
+            for t in tasks {
+                t();
+            }
+            return;
+        }
+        let latch = Arc::new(Latch::new(tasks.len()));
+        {
+            let mut jobs = self.queue.jobs.lock().unwrap();
+            for task in tasks {
+                // SAFETY: `run` blocks on the latch until every task has
+                // executed, so the borrows captured by `task` strictly
+                // outlive its execution even though the type is erased
+                // to 'static for the long-lived workers.
+                let task: Task<'static> =
+                    unsafe { std::mem::transmute(task) };
+                jobs.push_back(Job { task, latch: Arc::clone(&latch) });
+            }
+        }
+        self.queue.cv.notify_all();
+        if latch.wait() {
+            panic!("balance worker task panicked");
+        }
+    }
+}
+
+fn global() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(Pool::start)
+}
+
+/// Number of worker threads in the process-wide balance pool
+/// (`max(2, available_parallelism)`), spawning it if needed.
+pub fn pool_size() -> usize {
+    global().size
+}
+
+/// Row-parallel [`super::dot_centered_block`]: `out[i] = <s, row_i - m>`
+/// with the block's rows split into one contiguous chunk per worker and
+/// disjoint `split_at_mut` output slots. `row_dot` is the per-row kernel
+/// (scalar or AVX2 `dot_centered`); rows are data-independent, so the
+/// result is bit-identical to the serial loop for any worker count.
+pub fn dot_centered_block(
+    s: &[f32],
+    m: &[f32],
+    block: &[f32],
+    d: usize,
+    out: &mut Vec<f32>,
+    row_dot: fn(&[f32], &[f32], &[f32]) -> f32,
+) {
+    assert!(d > 0, "dot_centered_block dimension must be positive");
+    assert_eq!(s.len(), d);
+    assert_eq!(m.len(), d);
+    assert_eq!(block.len() % d, 0);
+    let rows = block.len() / d;
+    out.clear();
+    out.resize(rows, 0.0);
+    let chunk = rows.div_ceil(pool_size()).max(1);
+    let mut tasks: Vec<Task<'_>> = Vec::new();
+    let mut rest: &mut [f32] = out.as_mut_slice();
+    let mut start = 0;
+    while start < rows {
+        let end = (start + chunk).min(rows);
+        let (slot, tail) =
+            std::mem::take(&mut rest).split_at_mut(end - start);
+        rest = tail;
+        let rows_data = &block[start * d..end * d];
+        tasks.push(Box::new(move || {
+            for (o, row) in slot.iter_mut().zip(rows_data.chunks_exact(d)) {
+                *o = row_dot(s, row, m);
+            }
+        }));
+        start = end;
+    }
+    global().run(tasks);
+}
+
+/// Column-parallel [`super::accum_signed_sum`]: each worker owns a
+/// disjoint column range of `signed`/`sum` and walks ALL rows in order
+/// over it, so every element sees the exact serial accumulation order
+/// (bit-identical for any worker count). Ranges are multiples of 8 so
+/// each worker's slices keep the kernels' 8-lane main/tail split.
+/// `lane_accum` is the per-(row, column-range) kernel (scalar or AVX2
+/// `sign_sum_accum`).
+pub fn accum_signed_sum(
+    eps: &[f32],
+    block: &[f32],
+    d: usize,
+    signed: &mut [f32],
+    sum: &mut [f32],
+    lane_accum: fn(f32, &[f32], &mut [f32], &mut [f32]),
+) {
+    assert!(d > 0, "accum_signed_sum dimension must be positive");
+    assert_eq!(block.len(), eps.len() * d);
+    assert_eq!(signed.len(), d);
+    assert_eq!(sum.len(), d);
+    let cols = d.div_ceil(pool_size()).next_multiple_of(8);
+    let mut tasks: Vec<Task<'_>> = Vec::new();
+    let mut signed_rest: &mut [f32] = signed;
+    let mut sum_rest: &mut [f32] = sum;
+    let mut c0 = 0;
+    while c0 < d {
+        let c1 = (c0 + cols).min(d);
+        let (signed_slot, signed_tail) =
+            std::mem::take(&mut signed_rest).split_at_mut(c1 - c0);
+        signed_rest = signed_tail;
+        let (sum_slot, sum_tail) =
+            std::mem::take(&mut sum_rest).split_at_mut(c1 - c0);
+        sum_rest = sum_tail;
+        tasks.push(Box::new(move || {
+            for (row, &e) in block.chunks_exact(d).zip(eps) {
+                lane_accum(e, &row[c0..c1], signed_slot, sum_slot);
+            }
+        }));
+        c0 = c1;
+    }
+    global().run(tasks);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn pool_has_at_least_two_workers() {
+        assert!(pool_size() >= 2);
+    }
+
+    #[test]
+    fn parallel_dot_centered_block_is_bit_identical_to_serial() {
+        let mut rng = Rng::new(21);
+        // Row counts around the chunk boundaries, ragged dims.
+        for (rows, d) in
+            [(1usize, 9usize), (2, 33), (5, 64), (17, 7), (64, 129)]
+        {
+            let s: Vec<f32> =
+                (0..d).map(|_| rng.gauss() as f32).collect();
+            let m: Vec<f32> =
+                (0..d).map(|_| rng.gauss() as f32).collect();
+            let block: Vec<f32> =
+                (0..rows * d).map(|_| rng.gauss() as f32).collect();
+            let mut serial = Vec::new();
+            tensor::dot_centered_block(&s, &m, &block, d, &mut serial);
+            let mut par_out = Vec::new();
+            dot_centered_block(
+                &s,
+                &m,
+                &block,
+                d,
+                &mut par_out,
+                tensor::dot_centered,
+            );
+            assert_eq!(serial, par_out, "rows={rows} d={d}");
+        }
+    }
+
+    #[test]
+    fn parallel_accum_signed_sum_is_bit_identical_to_serial() {
+        let mut rng = Rng::new(22);
+        for (rows, d) in [(1usize, 8usize), (3, 17), (9, 65), (32, 256)] {
+            let block: Vec<f32> =
+                (0..rows * d).map(|_| rng.gauss() as f32).collect();
+            let eps: Vec<f32> = (0..rows)
+                .map(|i| if i % 2 == 0 { 1.0 } else { -1.0 })
+                .collect();
+            let mut signed_ser = vec![0.1f32; d];
+            let mut sum_ser = vec![-0.2f32; d];
+            tensor::accum_signed_sum(
+                &eps,
+                &block,
+                d,
+                &mut signed_ser,
+                &mut sum_ser,
+            );
+            let mut signed_par = vec![0.1f32; d];
+            let mut sum_par = vec![-0.2f32; d];
+            accum_signed_sum(
+                &eps,
+                &block,
+                d,
+                &mut signed_par,
+                &mut sum_par,
+                tensor::sign_sum_accum,
+            );
+            assert_eq!(signed_ser, signed_par, "rows={rows} d={d}");
+            assert_eq!(sum_ser, sum_par, "rows={rows} d={d}");
+        }
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_caller() {
+        let boom: Vec<Task<'_>> = vec![
+            Box::new(|| {}),
+            Box::new(|| panic!("intentional")),
+            Box::new(|| {}),
+        ];
+        let hit = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            global().run(boom);
+        }));
+        assert!(hit.is_err(), "panic must cross the pool boundary");
+    }
+}

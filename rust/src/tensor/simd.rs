@@ -1,0 +1,355 @@
+//! AVX2 bodies of the balance hot-path kernels (`std::arch`), selected
+//! at runtime by [`super::Kernel`] after a cached
+//! `is_x86_feature_detected!("avx2")` probe.
+//!
+//! **Bit-identity discipline** (determinism contract 7, docs/perf.md):
+//! every function here mirrors its scalar twin in `tensor/mod.rs`
+//! operation for operation —
+//!
+//! * one `__m256` accumulator standing in for the scalar `[f32; 8]`
+//!   lane array, over the same `split_at(len - len % 8)` main body;
+//! * separate `_mm256_mul_ps` then `_mm256_add_ps`, never an FMA — x86
+//!   packed mul/add round exactly like the scalar ops (including NaN
+//!   propagation), while a fused multiply-add would skip the
+//!   intermediate rounding and change low bits;
+//! * reductions store the 8 lanes back to an array and fold them
+//!   serially left-to-right, replicating `acc.iter().sum::<f32>()`;
+//! * the `< 8` tail runs the identical scalar loop.
+//!
+//! So each SIMD kernel computes the *same floats in the same order* as
+//! the scalar tier, merely 8 per instruction — equality is exact
+//! (`to_bits`), not approximate, which is what lets kernel dispatch stay
+//! outside the determinism contracts' replay state.
+
+#![allow(unsafe_code)]
+
+use std::arch::x86_64::{
+    __m256, _mm256_add_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_set1_ps,
+    _mm256_setzero_ps, _mm256_storeu_ps, _mm256_sub_ps,
+};
+
+/// Fold the 8 lanes serially in lane order — the exact order the scalar
+/// tier's `acc.iter().sum::<f32>()` uses.
+///
+/// # Safety
+/// Requires AVX2 (callers dispatch via `Kernel::simd_active`).
+#[target_feature(enable = "avx2")]
+unsafe fn hsum(v: __m256) -> f32 {
+    let mut lanes = [0.0f32; 8];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), v);
+    lanes.iter().sum()
+}
+
+/// AVX2 [`super::dot`].
+///
+/// # Safety
+/// Requires AVX2 (callers dispatch via `Kernel::simd_active`).
+#[target_feature(enable = "avx2")]
+pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    let split = a.len() - a.len() % 8;
+    let (ac, at) = a.split_at(split);
+    let (bc, bt) = b.split_at(split);
+    let mut acc = _mm256_setzero_ps();
+    for (av, bv) in ac.chunks_exact(8).zip(bc.chunks_exact(8)) {
+        let va = _mm256_loadu_ps(av.as_ptr());
+        let vb = _mm256_loadu_ps(bv.as_ptr());
+        acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb));
+    }
+    let mut tail = 0.0f32;
+    for (x, y) in at.iter().zip(bt) {
+        tail += x * y;
+    }
+    hsum(acc) + tail
+}
+
+/// AVX2 [`super::axpy`].
+///
+/// # Safety
+/// Requires AVX2 (callers dispatch via `Kernel::simd_active`).
+#[target_feature(enable = "avx2")]
+pub unsafe fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    let split = x.len() - x.len() % 8;
+    let (xc, xt) = x.split_at(split);
+    let (yc, yt) = y.split_at_mut(split);
+    let va = _mm256_set1_ps(alpha);
+    for (xv, yv) in xc.chunks_exact(8).zip(yc.chunks_exact_mut(8)) {
+        let vx = _mm256_loadu_ps(xv.as_ptr());
+        let vy = _mm256_loadu_ps(yv.as_ptr());
+        let out = _mm256_add_ps(vy, _mm256_mul_ps(va, vx));
+        _mm256_storeu_ps(yv.as_mut_ptr(), out);
+    }
+    for (yv, xv) in yt.iter_mut().zip(xt) {
+        *yv += alpha * xv;
+    }
+}
+
+/// AVX2 [`super::dot_centered`]: `<s, g - m>` in one pass.
+///
+/// # Safety
+/// Requires AVX2 (callers dispatch via `Kernel::simd_active`).
+#[target_feature(enable = "avx2")]
+pub unsafe fn dot_centered(s: &[f32], g: &[f32], m: &[f32]) -> f32 {
+    assert_eq!(s.len(), g.len());
+    assert_eq!(s.len(), m.len());
+    let split = s.len() - s.len() % 8;
+    let (sc, st) = s.split_at(split);
+    let (gc, gt) = g.split_at(split);
+    let (mc, mt) = m.split_at(split);
+    let mut acc = _mm256_setzero_ps();
+    for ((sv, gv), mv) in sc
+        .chunks_exact(8)
+        .zip(gc.chunks_exact(8))
+        .zip(mc.chunks_exact(8))
+    {
+        let vs = _mm256_loadu_ps(sv.as_ptr());
+        let vg = _mm256_loadu_ps(gv.as_ptr());
+        let vm = _mm256_loadu_ps(mv.as_ptr());
+        let c = _mm256_sub_ps(vg, vm);
+        acc = _mm256_add_ps(acc, _mm256_mul_ps(vs, c));
+    }
+    let mut tail = 0.0f32;
+    for i in 0..st.len() {
+        tail += st[i] * (gt[i] - mt[i]);
+    }
+    hsum(acc) + tail
+}
+
+/// AVX2 [`super::dot_diff`]: `<s, a - b>` in one pass.
+///
+/// # Safety
+/// Requires AVX2 (callers dispatch via `Kernel::simd_active`).
+#[target_feature(enable = "avx2")]
+pub unsafe fn dot_diff(s: &[f32], a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(s.len(), a.len());
+    assert_eq!(s.len(), b.len());
+    let split = s.len() - s.len() % 8;
+    let (sc, st) = s.split_at(split);
+    let (ac, at) = a.split_at(split);
+    let (bc, bt) = b.split_at(split);
+    let mut acc = _mm256_setzero_ps();
+    for ((sv, av), bv) in sc
+        .chunks_exact(8)
+        .zip(ac.chunks_exact(8))
+        .zip(bc.chunks_exact(8))
+    {
+        let vs = _mm256_loadu_ps(sv.as_ptr());
+        let va = _mm256_loadu_ps(av.as_ptr());
+        let vb = _mm256_loadu_ps(bv.as_ptr());
+        let diff = _mm256_sub_ps(va, vb);
+        acc = _mm256_add_ps(acc, _mm256_mul_ps(vs, diff));
+    }
+    let mut tail = 0.0f32;
+    for i in 0..st.len() {
+        tail += st[i] * (at[i] - bt[i]);
+    }
+    hsum(acc) + tail
+}
+
+/// AVX2 [`super::axpy_diff`]: `s += eps * (a - b)` in one pass.
+///
+/// # Safety
+/// Requires AVX2 (callers dispatch via `Kernel::simd_active`).
+#[target_feature(enable = "avx2")]
+pub unsafe fn axpy_diff(eps: f32, a: &[f32], b: &[f32], s: &mut [f32]) {
+    assert_eq!(s.len(), a.len());
+    assert_eq!(s.len(), b.len());
+    let split = s.len() - s.len() % 8;
+    let (ac, at) = a.split_at(split);
+    let (bc, bt) = b.split_at(split);
+    let (sc, st) = s.split_at_mut(split);
+    let ve = _mm256_set1_ps(eps);
+    for ((av, bv), sv) in ac
+        .chunks_exact(8)
+        .zip(bc.chunks_exact(8))
+        .zip(sc.chunks_exact_mut(8))
+    {
+        let va = _mm256_loadu_ps(av.as_ptr());
+        let vb = _mm256_loadu_ps(bv.as_ptr());
+        let vs = _mm256_loadu_ps(sv.as_ptr());
+        let diff = _mm256_sub_ps(va, vb);
+        let out = _mm256_add_ps(vs, _mm256_mul_ps(ve, diff));
+        _mm256_storeu_ps(sv.as_mut_ptr(), out);
+    }
+    for i in 0..at.len() {
+        st[i] += eps * (at[i] - bt[i]);
+    }
+}
+
+/// AVX2 [`super::sign_sum_accum`]: `signed += eps * g` and `sum += g`
+/// in one pass over `g`.
+///
+/// # Safety
+/// Requires AVX2 (callers dispatch via `Kernel::simd_active`).
+#[target_feature(enable = "avx2")]
+pub unsafe fn sign_sum_accum(
+    eps: f32,
+    g: &[f32],
+    signed: &mut [f32],
+    sum: &mut [f32],
+) {
+    assert_eq!(g.len(), signed.len());
+    assert_eq!(g.len(), sum.len());
+    let split = g.len() - g.len() % 8;
+    let (gc, gt) = g.split_at(split);
+    let (sc, st) = signed.split_at_mut(split);
+    let (uc, ut) = sum.split_at_mut(split);
+    let ve = _mm256_set1_ps(eps);
+    for ((gv, sv), uv) in gc
+        .chunks_exact(8)
+        .zip(sc.chunks_exact_mut(8))
+        .zip(uc.chunks_exact_mut(8))
+    {
+        let vg = _mm256_loadu_ps(gv.as_ptr());
+        let vs = _mm256_loadu_ps(sv.as_ptr());
+        let vu = _mm256_loadu_ps(uv.as_ptr());
+        let s_out = _mm256_add_ps(vs, _mm256_mul_ps(ve, vg));
+        let u_out = _mm256_add_ps(vu, vg);
+        _mm256_storeu_ps(sv.as_mut_ptr(), s_out);
+        _mm256_storeu_ps(uv.as_mut_ptr(), u_out);
+    }
+    for i in 0..gt.len() {
+        let gl = gt[i];
+        st[i] += eps * gl;
+        ut[i] += gl;
+    }
+}
+
+/// AVX2 [`super::fold_signed_block`]: `s += signed - net * m`.
+///
+/// # Safety
+/// Requires AVX2 (callers dispatch via `Kernel::simd_active`).
+#[target_feature(enable = "avx2")]
+pub unsafe fn fold_signed_block(
+    signed: &[f32],
+    net: f32,
+    m: &[f32],
+    s: &mut [f32],
+) {
+    assert_eq!(signed.len(), m.len());
+    assert_eq!(signed.len(), s.len());
+    let split = s.len() - s.len() % 8;
+    let (dc, dt) = signed.split_at(split);
+    let (mc, mt) = m.split_at(split);
+    let (sc, st) = s.split_at_mut(split);
+    let vn = _mm256_set1_ps(net);
+    for ((dv, mv), sv) in dc
+        .chunks_exact(8)
+        .zip(mc.chunks_exact(8))
+        .zip(sc.chunks_exact_mut(8))
+    {
+        let vd = _mm256_loadu_ps(dv.as_ptr());
+        let vm = _mm256_loadu_ps(mv.as_ptr());
+        let vs = _mm256_loadu_ps(sv.as_ptr());
+        // Scalar twin: `sv[lane] += dv[lane] - net * mv[lane]` — the
+        // mul happens first, then the subtract, then the add.
+        let prod = _mm256_mul_ps(vn, vm);
+        let out = _mm256_add_ps(vs, _mm256_sub_ps(vd, prod));
+        _mm256_storeu_ps(sv.as_mut_ptr(), out);
+    }
+    for i in 0..dt.len() {
+        st[i] += dt[i] - net * mt[i];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::tensor::{self, Kernel};
+    use crate::util::rng::Rng;
+
+    /// Hostile values every kernel must propagate exactly like scalar.
+    fn hostile(rng: &mut Rng, d: usize) -> Vec<f32> {
+        (0..d)
+            .map(|i| match i % 7 {
+                0 => f32::NAN,
+                1 => f32::INFINITY,
+                2 => f32::NEG_INFINITY,
+                3 => 1.0e-40, // subnormal
+                _ => rng.gauss() as f32,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn avx2_reductions_match_scalar_bits_on_hostile_floats() {
+        if !std::is_x86_feature_detected!("avx2") {
+            eprintln!("skip: host lacks AVX2");
+            return;
+        }
+        let mut rng = Rng::new(17);
+        for d in [1usize, 7, 8, 9, 15, 16, 63, 64, 65, 1000] {
+            let s = hostile(&mut rng, d);
+            let a = hostile(&mut rng, d);
+            let b = hostile(&mut rng, d);
+            let pairs = [
+                (tensor::dot(&s, &a), Kernel::Simd.dot(&s, &a)),
+                (
+                    tensor::dot_centered(&s, &a, &b),
+                    Kernel::Simd.dot_centered(&s, &a, &b),
+                ),
+                (
+                    tensor::dot_diff(&s, &a, &b),
+                    Kernel::Simd.dot_diff(&s, &a, &b),
+                ),
+            ];
+            for (i, (want, got)) in pairs.iter().enumerate() {
+                assert_eq!(
+                    want.to_bits(),
+                    got.to_bits(),
+                    "kernel {i} at d={d}: {want} vs {got}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn avx2_updates_match_scalar_bits_on_hostile_floats() {
+        if !std::is_x86_feature_detected!("avx2") {
+            eprintln!("skip: host lacks AVX2");
+            return;
+        }
+        let mut rng = Rng::new(19);
+        for d in [1usize, 7, 9, 64, 65, 333] {
+            let a = hostile(&mut rng, d);
+            let b = hostile(&mut rng, d);
+            let s0 = hostile(&mut rng, d);
+            let bits = |v: &[f32]| {
+                v.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            };
+
+            let mut s_ref = s0.clone();
+            let mut s_simd = s0.clone();
+            tensor::axpy_diff(-1.0, &a, &b, &mut s_ref);
+            Kernel::Simd.axpy_diff(-1.0, &a, &b, &mut s_simd);
+            assert_eq!(bits(&s_ref), bits(&s_simd), "axpy_diff d={d}");
+
+            let mut signed_ref = s0.clone();
+            let mut sum_ref = b.clone();
+            let mut signed_simd = s0.clone();
+            let mut sum_simd = b.clone();
+            tensor::sign_sum_accum(1.0, &a, &mut signed_ref, &mut sum_ref);
+            Kernel::Simd.accum_signed_sum(
+                &[1.0],
+                &a,
+                d,
+                &mut signed_simd,
+                &mut sum_simd,
+            );
+            assert_eq!(bits(&signed_ref), bits(&signed_simd));
+            assert_eq!(bits(&sum_ref), bits(&sum_simd));
+
+            let mut fold_ref = s0.clone();
+            let mut fold_simd = s0.clone();
+            tensor::fold_signed_block(&a, -3.0, &b, &mut fold_ref);
+            Kernel::Simd.fold_signed_block(&a, -3.0, &b, &mut fold_simd);
+            assert_eq!(bits(&fold_ref), bits(&fold_simd), "fold d={d}");
+
+            let mut y_ref = s0.clone();
+            let mut y_simd = s0.clone();
+            tensor::axpy(0.5, &a, &mut y_ref);
+            Kernel::Simd.axpy(0.5, &a, &mut y_simd);
+            assert_eq!(bits(&y_ref), bits(&y_simd), "axpy d={d}");
+        }
+    }
+}

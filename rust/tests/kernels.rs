@@ -1,0 +1,389 @@
+//! Kernel-dispatch equivalence test layer (determinism contract 7,
+//! docs/determinism.md): every balance-kernel tier — portable scalar,
+//! AVX2 SIMD, and SIMD plus the row-parallel worker pool — must produce
+//! **bit-identical** results for the same inputs, from the raw tensor
+//! ops (compared as IEEE-754 bit patterns, so NaN payloads count) all
+//! the way up to multi-epoch GraB / PairBalance / sharded CD-GraB
+//! epoch orders. Inputs are deliberately hostile (NaN, ±inf,
+//! subnormals) and sweep every tail length `d % 8`, because "almost
+//! equal" reductions diverge exactly there.
+//!
+//! On hosts without AVX2 the fast tiers dispatch to the scalar
+//! reference, so every assertion still runs (trivially) everywhere;
+//! policies pin their tier at construction via the `with_kernel`
+//! constructors, so no test mutates the process-wide default.
+
+use grab::balance::DeterministicBalancer;
+use grab::ordering::{
+    stream_static_epoch, GraBOrder, OrderPolicy, PairBalance,
+    ShardedOrder,
+};
+use grab::tensor::Kernel;
+use grab::util::prop::{self, assert_permutation, gen};
+use grab::util::rng::Rng;
+
+const TIERS: [Kernel; 3] =
+    [Kernel::Scalar, Kernel::Simd, Kernel::SimdPar];
+
+/// Every tail residue mod 8, plus block-and-a-bit lengths.
+const DIMS: [usize; 14] =
+    [1, 2, 3, 4, 5, 6, 7, 8, 9, 15, 16, 17, 65, 250];
+
+/// A vector salted with the IEEE-754 specials that break "almost
+/// equal" reductions: NaN, both infinities, and a subnormal.
+fn hostile(rng: &mut Rng, len: usize) -> Vec<f32> {
+    (0..len)
+        .map(|i| match i % 7 {
+            0 => f32::NAN,
+            1 => f32::INFINITY,
+            2 => f32::NEG_INFINITY,
+            3 => 1.0e-40, // subnormal
+            _ => rng.gauss() as f32,
+        })
+        .collect()
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn reduction_kernels_match_scalar_bits_on_hostile_floats() {
+    prop::forall("tier reductions bit-equal", 16, |rng| {
+        for &d in &DIMS {
+            let s = hostile(rng, d);
+            let g = hostile(rng, d);
+            let m = hostile(rng, d);
+            let want_dot = Kernel::Scalar.dot(&s, &g).to_bits();
+            let want_cent =
+                Kernel::Scalar.dot_centered(&s, &g, &m).to_bits();
+            let want_diff =
+                Kernel::Scalar.dot_diff(&s, &g, &m).to_bits();
+            for k in [Kernel::Simd, Kernel::SimdPar] {
+                for (op, got, want) in [
+                    ("dot", k.dot(&s, &g).to_bits(), want_dot),
+                    (
+                        "dot_centered",
+                        k.dot_centered(&s, &g, &m).to_bits(),
+                        want_cent,
+                    ),
+                    (
+                        "dot_diff",
+                        k.dot_diff(&s, &g, &m).to_bits(),
+                        want_diff,
+                    ),
+                ] {
+                    if got != want {
+                        return Err(format!(
+                            "{op} bits diverge at d={d} under {}: \
+                             {got:#010x} != {want:#010x}",
+                            k.name()
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn update_kernels_match_scalar_bits_on_hostile_floats() {
+    prop::forall("tier updates bit-equal", 16, |rng| {
+        for &d in &DIMS {
+            let a = hostile(rng, d);
+            let b = hostile(rng, d);
+            let m = hostile(rng, d);
+            let base = hostile(rng, d);
+
+            let mut want_axpy = base.clone();
+            Kernel::Scalar.axpy(0.5, &a, &mut want_axpy);
+            let mut want_diff = base.clone();
+            Kernel::Scalar.axpy_diff(-1.0, &a, &b, &mut want_diff);
+            let mut want_fold = base.clone();
+            Kernel::Scalar
+                .fold_signed_block(&a, -3.0, &m, &mut want_fold);
+
+            for k in [Kernel::Simd, Kernel::SimdPar] {
+                let mut got = base.clone();
+                k.axpy(0.5, &a, &mut got);
+                if bits(&got) != bits(&want_axpy) {
+                    return Err(format!(
+                        "axpy bits diverge at d={d} under {}",
+                        k.name()
+                    ));
+                }
+                let mut got = base.clone();
+                k.axpy_diff(-1.0, &a, &b, &mut got);
+                if bits(&got) != bits(&want_diff) {
+                    return Err(format!(
+                        "axpy_diff bits diverge at d={d} under {}",
+                        k.name()
+                    ));
+                }
+                let mut got = base.clone();
+                k.fold_signed_block(&a, -3.0, &m, &mut got);
+                if bits(&got) != bits(&want_fold) {
+                    return Err(format!(
+                        "fold_signed_block bits diverge at d={d} \
+                         under {}",
+                        k.name()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn block_kernels_match_scalar_bits_across_the_parallel_threshold() {
+    // Shapes straddle PAR_MIN_ELEMS (32 Ki elements), so Kernel::SimdPar
+    // exercises both its serial fallback and the worker pool.
+    let mut rng = Rng::new(0x7707);
+    for (rows, d) in
+        [(1usize, 1usize), (3, 7), (17, 33), (40, 1027), (300, 129)]
+    {
+        let s = hostile(&mut rng, d);
+        let m = hostile(&mut rng, d);
+        let block = hostile(&mut rng, rows * d);
+        let eps: Vec<f32> = (0..rows)
+            .map(|i| if i % 2 == 0 { 1.0 } else { -1.0 })
+            .collect();
+
+        let mut want_dots = Vec::new();
+        Kernel::Scalar
+            .dot_centered_block(&s, &m, &block, d, &mut want_dots);
+        let mut want_signed = vec![0.1f32; d];
+        let mut want_sum = vec![-0.2f32; d];
+        Kernel::Scalar.accum_signed_sum(
+            &eps,
+            &block,
+            d,
+            &mut want_signed,
+            &mut want_sum,
+        );
+
+        for k in [Kernel::Simd, Kernel::SimdPar] {
+            let mut dots = Vec::new();
+            k.dot_centered_block(&s, &m, &block, d, &mut dots);
+            assert_eq!(
+                bits(&dots),
+                bits(&want_dots),
+                "dot_centered_block rows={rows} d={d} tier={}",
+                k.name()
+            );
+            let mut signed = vec![0.1f32; d];
+            let mut sum = vec![-0.2f32; d];
+            k.accum_signed_sum(&eps, &block, d, &mut signed, &mut sum);
+            assert_eq!(
+                bits(&signed),
+                bits(&want_signed),
+                "signed accum rows={rows} d={d} tier={}",
+                k.name()
+            );
+            assert_eq!(
+                bits(&sum),
+                bits(&want_sum),
+                "sum accum rows={rows} d={d} tier={}",
+                k.name()
+            );
+        }
+    }
+}
+
+fn feed_epoch(p: &mut dyn OrderPolicy, vs: &[Vec<f32>], block: usize) {
+    let mut flat = Vec::new();
+    stream_static_epoch(p, vs, &mut flat, block);
+}
+
+#[test]
+fn grab_and_pair_orders_are_tier_invariant() {
+    // The policy-level contract: pinning any kernel tier into GraB or
+    // PairBalance changes nothing about the epoch orders, across
+    // multiple epochs (so the balanced state feeding epoch e+1 is also
+    // bit-equal), with hostile rows salted into the gradient stream.
+    prop::forall("scalar == simd == simd+par orders", 8, |rng| {
+        let n = 1 + rng.gen_range(60) as usize;
+        let d = 1 + rng.gen_range(40) as usize;
+        let b = 1 + rng.gen_range(9) as usize;
+        let mut vs = gen::vec_set(rng, n, d);
+        for (i, v) in vs.iter_mut().enumerate() {
+            if i % 5 == 0 {
+                *v = hostile(rng, d);
+            }
+        }
+        let mut grabs: Vec<GraBOrder> = TIERS
+            .iter()
+            .map(|&k| {
+                GraBOrder::with_kernel(
+                    n,
+                    d,
+                    Box::new(DeterministicBalancer),
+                    k,
+                )
+            })
+            .collect();
+        let mut pairs: Vec<PairBalance> = TIERS
+            .iter()
+            .map(|&k| PairBalance::with_kernel(n, d, k))
+            .collect();
+        for epoch in 0..3 {
+            for p in grabs.iter_mut() {
+                feed_epoch(p, &vs, b);
+            }
+            for p in pairs.iter_mut() {
+                feed_epoch(p, &vs, b);
+            }
+            let want_grab = grabs[0].epoch_order(0).to_vec();
+            assert_permutation(&want_grab)?;
+            let want_pair = pairs[0].epoch_order(0).to_vec();
+            assert_permutation(&want_pair)?;
+            for (i, k) in TIERS.iter().enumerate().skip(1) {
+                if grabs[i].epoch_order(0) != want_grab.as_slice() {
+                    return Err(format!(
+                        "GraB {} != scalar at epoch={epoch} n={n} \
+                         d={d} b={b}",
+                        k.name()
+                    ));
+                }
+                if pairs[i].epoch_order(0) != want_pair.as_slice() {
+                    return Err(format!(
+                        "PairBalance {} != scalar at epoch={epoch} \
+                         n={n} d={d} b={b}",
+                        k.name()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sharded_orders_are_tier_invariant_for_w_1_2_4() {
+    // Contract 7 through the CD-GraB coordinator: every dispatch
+    // backend (strided, gathered, async channel workers) under every
+    // kernel tier produces the scalar-strided epoch orders, for
+    // W in {1, 2, 4}, chained down to unsharded PairBalance at W = 1.
+    prop::forall("sharded orders tier-invariant", 6, |rng| {
+        let n = 1 + rng.gen_range(48) as usize;
+        let d = 1 + rng.gen_range(6) as usize;
+        let b = 1 + rng.gen_range(8) as usize;
+        let depth = 1 + rng.gen_range(3) as usize;
+        let vs = gen::vec_set(rng, n, d);
+        for w in [1usize, 2, 4] {
+            let mut reference =
+                ShardedOrder::new_with_kernel(n, d, w, Kernel::Scalar);
+            let mut pair =
+                PairBalance::with_kernel(n, d, Kernel::Scalar);
+            let mut lineup: Vec<(String, ShardedOrder)> = Vec::new();
+            for &k in &TIERS {
+                lineup.push((
+                    format!("strided/{}", k.name()),
+                    ShardedOrder::new_with_kernel(n, d, w, k),
+                ));
+                lineup.push((
+                    format!("gathered/{}", k.name()),
+                    ShardedOrder::new_gathered_with_kernel(n, d, w, k),
+                ));
+                lineup.push((
+                    format!("async/{}", k.name()),
+                    ShardedOrder::new_async_with_kernel(
+                        n, d, w, depth, k,
+                    ),
+                ));
+            }
+            for epoch in 0..3 {
+                feed_epoch(&mut reference, &vs, b);
+                feed_epoch(&mut pair, &vs, b);
+                let want = reference.epoch_order(0).to_vec();
+                assert_permutation(&want)?;
+                for (label, policy) in lineup.iter_mut() {
+                    feed_epoch(policy, &vs, b);
+                    if policy.epoch_order(0) != want.as_slice() {
+                        return Err(format!(
+                            "{label} != scalar strided at w={w} \
+                             epoch={epoch} n={n} d={d} b={b} \
+                             depth={depth}"
+                        ));
+                    }
+                }
+                if w == 1 && pair.epoch_order(0) != want.as_slice() {
+                    return Err(format!(
+                        "w=1 sharded != PairBalance at epoch={epoch} \
+                         n={n} d={d} b={b}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn per_example_shim_chains_to_blocks_under_every_tier() {
+    // B = 1: the `observe` shim must stay bit-equal to arbitrary block
+    // sizes under every tier, so the contract-1 chain (per-example ≡
+    // block) composes with contract 7 instead of forking per tier.
+    prop::forall("B=1 chains per tier", 8, |rng| {
+        let n = 1 + rng.gen_range(40) as usize;
+        let d = 1 + rng.gen_range(20) as usize;
+        let b = 1 + rng.gen_range(9) as usize;
+        let vs = gen::vec_set(rng, n, d);
+        for &k in &TIERS {
+            let mut shim = GraBOrder::with_kernel(
+                n,
+                d,
+                Box::new(DeterministicBalancer),
+                k,
+            );
+            let mut blocks = GraBOrder::with_kernel(
+                n,
+                d,
+                Box::new(DeterministicBalancer),
+                k,
+            );
+            let mut pair_shim = PairBalance::with_kernel(n, d, k);
+            let mut pair_blocks = PairBalance::with_kernel(n, d, k);
+            for epoch in 0..3 {
+                // Drive the shim policies through the per-example
+                // entry point, one row at a time.
+                for (p, q) in [
+                    (
+                        &mut shim as &mut dyn OrderPolicy,
+                        &mut blocks as &mut dyn OrderPolicy,
+                    ),
+                    (
+                        &mut pair_shim as &mut dyn OrderPolicy,
+                        &mut pair_blocks as &mut dyn OrderPolicy,
+                    ),
+                ] {
+                    let order = p.epoch_order(0).to_vec();
+                    for (pos, &unit) in order.iter().enumerate() {
+                        p.observe(pos, &vs[unit]);
+                    }
+                    p.epoch_end();
+                    feed_epoch(q, &vs, b);
+                }
+                if shim.epoch_order(0) != blocks.epoch_order(0) {
+                    return Err(format!(
+                        "GraB shim != block under {} at \
+                         epoch={epoch} n={n} d={d} b={b}",
+                        k.name()
+                    ));
+                }
+                if pair_shim.epoch_order(0)
+                    != pair_blocks.epoch_order(0)
+                {
+                    return Err(format!(
+                        "PairBalance shim != block under {} at \
+                         epoch={epoch} n={n} d={d} b={b}",
+                        k.name()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,761 @@
+/* C mirror of the rust/src/tensor kernels, used to cross-check the numbers
+ * the `grab bench` runner records (see docs/perf.md).
+ *
+ * The scalar functions transcribe the Rust reference kernels line-for-line
+ * (8-lane accumulator arrays, chunks_exact(8) main loop, scalar tail,
+ * in-order lane fold).  Compiled at -O3 for the default x86-64 target they
+ * see the same SSE2 auto-vectorization rustc applies to the Rust originals.
+ * The avx2_* functions transcribe tensor/simd.rs: one 256-bit vector per
+ * 8-lane accumulator group, separate mul then add (no FMA), identical tail
+ * and fold — so every function pair must agree bit-for-bit, which main()
+ * asserts before timing anything.
+ *
+ * Build:  gcc -O3 -o bench_mirror bench_mirror.c -lm
+ * Run:    ./bench_mirror [--quick]              (human-readable table)
+ *         ./bench_mirror [--quick] --json FILE  (BENCH_*.json snapshot)
+ *
+ * The --json mode emits the same schema as `grab bench` (schema_version
+ * 1) with "runner": "c-mirror" and case/kernel keys matching the Rust
+ * runner's rows, so a snapshot recorded on a machine without a Rust
+ * toolchain stays comparable with later grab-bench snapshots (see
+ * docs/perf.md §Provenance).  It mirrors the tensor-level cases and the
+ * single-policy GraB/PairBalance observe loops; the transport and PJRT
+ * cases need the Rust runner.
+ */
+
+#include <immintrin.h>
+#include <math.h>
+#include <stdint.h>
+#include <stdio.h>
+#include <stdlib.h>
+#include <string.h>
+#include <time.h>
+
+/* ---------------- scalar reference kernels (mirror tensor/mod.rs) ------- */
+
+static float dot_scalar(const float *a, const float *b, size_t len) {
+    size_t main = len - len % 8;
+    float acc[8] = {0};
+    for (size_t off = 0; off < main; off += 8)
+        for (int lane = 0; lane < 8; lane++)
+            acc[lane] += a[off + lane] * b[off + lane];
+    float tail = 0.0f;
+    for (size_t i = main; i < len; i++)
+        tail += a[i] * b[i];
+    float s = 0.0f;
+    for (int lane = 0; lane < 8; lane++)
+        s += acc[lane];
+    return s + tail;
+}
+
+static float dot_centered_scalar(const float *s, const float *g,
+                                 const float *m, size_t len) {
+    size_t main = len - len % 8;
+    float acc[8] = {0};
+    for (size_t off = 0; off < main; off += 8)
+        for (int lane = 0; lane < 8; lane++)
+            acc[lane] += s[off + lane] * (g[off + lane] - m[off + lane]);
+    float tail = 0.0f;
+    for (size_t i = main; i < len; i++)
+        tail += s[i] * (g[i] - m[i]);
+    float r = 0.0f;
+    for (int lane = 0; lane < 8; lane++)
+        r += acc[lane];
+    return r + tail;
+}
+
+static float dot_diff_scalar(const float *s, const float *a, const float *b,
+                             size_t len) {
+    size_t main = len - len % 8;
+    float acc[8] = {0};
+    for (size_t off = 0; off < main; off += 8)
+        for (int lane = 0; lane < 8; lane++)
+            acc[lane] += s[off + lane] * (a[off + lane] - b[off + lane]);
+    float tail = 0.0f;
+    for (size_t i = main; i < len; i++)
+        tail += s[i] * (a[i] - b[i]);
+    float r = 0.0f;
+    for (int lane = 0; lane < 8; lane++)
+        r += acc[lane];
+    return r + tail;
+}
+
+static void axpy_scalar(float alpha, const float *x, float *y, size_t len) {
+    size_t main = len - len % 8;
+    for (size_t off = 0; off < main; off += 8)
+        for (int lane = 0; lane < 8; lane++)
+            y[off + lane] += alpha * x[off + lane];
+    for (size_t i = main; i < len; i++)
+        y[i] += alpha * x[i];
+}
+
+static void axpy_diff_scalar(float eps, const float *a, const float *b,
+                             float *s, size_t len) {
+    size_t main = len - len % 8;
+    for (size_t off = 0; off < main; off += 8)
+        for (int lane = 0; lane < 8; lane++)
+            s[off + lane] += eps * (a[off + lane] - b[off + lane]);
+    for (size_t i = main; i < len; i++)
+        s[i] += eps * (a[i] - b[i]);
+}
+
+static void sign_sum_accum_scalar(float eps, const float *g, float *signed_,
+                                  float *sum, size_t len) {
+    size_t main = len - len % 8;
+    for (size_t off = 0; off < main; off += 8)
+        for (int lane = 0; lane < 8; lane++) {
+            float gl = g[off + lane];
+            signed_[off + lane] += eps * gl;
+            sum[off + lane] += gl;
+        }
+    for (size_t i = main; i < len; i++) {
+        float gl = g[i];
+        signed_[i] += eps * gl;
+        sum[i] += gl;
+    }
+}
+
+static void fold_signed_block_scalar(const float *signed_, float net,
+                                     const float *m, float *s, size_t len) {
+    size_t main = len - len % 8;
+    for (size_t off = 0; off < main; off += 8)
+        for (int lane = 0; lane < 8; lane++)
+            s[off + lane] += signed_[off + lane] - net * m[off + lane];
+    for (size_t i = main; i < len; i++)
+        s[i] += signed_[i] - net * m[i];
+}
+
+static void grab_update_scalar(float eps, float inv_n, const float *g,
+                               const float *m, float *s, float *fresh,
+                               size_t len) {
+    size_t main = len - len % 8;
+    for (size_t off = 0; off < main; off += 8)
+        for (int lane = 0; lane < 8; lane++) {
+            float gl = g[off + lane];
+            s[off + lane] += eps * (gl - m[off + lane]);
+            fresh[off + lane] += inv_n * gl;
+        }
+    for (size_t i = main; i < len; i++) {
+        float gl = g[i];
+        s[i] += eps * (gl - m[i]);
+        fresh[i] += inv_n * gl;
+    }
+}
+
+/* ---------------- AVX2 kernels (mirror tensor/simd.rs) ------------------ */
+
+__attribute__((target("avx2"))) static float
+dot_avx2(const float *a, const float *b, size_t len) {
+    size_t main = len - len % 8;
+    __m256 acc = _mm256_setzero_ps();
+    for (size_t off = 0; off < main; off += 8) {
+        __m256 av = _mm256_loadu_ps(a + off);
+        __m256 bv = _mm256_loadu_ps(b + off);
+        acc = _mm256_add_ps(acc, _mm256_mul_ps(av, bv));
+    }
+    float lanes[8];
+    _mm256_storeu_ps(lanes, acc);
+    float tail = 0.0f;
+    for (size_t i = main; i < len; i++)
+        tail += a[i] * b[i];
+    float s = 0.0f;
+    for (int lane = 0; lane < 8; lane++)
+        s += lanes[lane];
+    return s + tail;
+}
+
+__attribute__((target("avx2"))) static float
+dot_centered_avx2(const float *s, const float *g, const float *m,
+                  size_t len) {
+    size_t main = len - len % 8;
+    __m256 acc = _mm256_setzero_ps();
+    for (size_t off = 0; off < main; off += 8) {
+        __m256 sv = _mm256_loadu_ps(s + off);
+        __m256 gv = _mm256_loadu_ps(g + off);
+        __m256 mv = _mm256_loadu_ps(m + off);
+        acc = _mm256_add_ps(acc, _mm256_mul_ps(sv, _mm256_sub_ps(gv, mv)));
+    }
+    float lanes[8];
+    _mm256_storeu_ps(lanes, acc);
+    float tail = 0.0f;
+    for (size_t i = main; i < len; i++)
+        tail += s[i] * (g[i] - m[i]);
+    float r = 0.0f;
+    for (int lane = 0; lane < 8; lane++)
+        r += lanes[lane];
+    return r + tail;
+}
+
+__attribute__((target("avx2"))) static float
+dot_diff_avx2(const float *s, const float *a, const float *b, size_t len) {
+    size_t main = len - len % 8;
+    __m256 acc = _mm256_setzero_ps();
+    for (size_t off = 0; off < main; off += 8) {
+        __m256 sv = _mm256_loadu_ps(s + off);
+        __m256 av = _mm256_loadu_ps(a + off);
+        __m256 bv = _mm256_loadu_ps(b + off);
+        acc = _mm256_add_ps(acc, _mm256_mul_ps(sv, _mm256_sub_ps(av, bv)));
+    }
+    float lanes[8];
+    _mm256_storeu_ps(lanes, acc);
+    float tail = 0.0f;
+    for (size_t i = main; i < len; i++)
+        tail += s[i] * (a[i] - b[i]);
+    float r = 0.0f;
+    for (int lane = 0; lane < 8; lane++)
+        r += lanes[lane];
+    return r + tail;
+}
+
+__attribute__((target("avx2"))) static void
+axpy_avx2(float alpha, const float *x, float *y, size_t len) {
+    size_t main = len - len % 8;
+    __m256 al = _mm256_set1_ps(alpha);
+    for (size_t off = 0; off < main; off += 8) {
+        __m256 xv = _mm256_loadu_ps(x + off);
+        __m256 yv = _mm256_loadu_ps(y + off);
+        _mm256_storeu_ps(y + off,
+                         _mm256_add_ps(yv, _mm256_mul_ps(al, xv)));
+    }
+    for (size_t i = main; i < len; i++)
+        y[i] += alpha * x[i];
+}
+
+__attribute__((target("avx2"))) static void
+axpy_diff_avx2(float eps, const float *a, const float *b, float *s,
+               size_t len) {
+    size_t main = len - len % 8;
+    __m256 ev = _mm256_set1_ps(eps);
+    for (size_t off = 0; off < main; off += 8) {
+        __m256 av = _mm256_loadu_ps(a + off);
+        __m256 bv = _mm256_loadu_ps(b + off);
+        __m256 sv = _mm256_loadu_ps(s + off);
+        __m256 d = _mm256_sub_ps(av, bv);
+        _mm256_storeu_ps(s + off,
+                         _mm256_add_ps(sv, _mm256_mul_ps(ev, d)));
+    }
+    for (size_t i = main; i < len; i++)
+        s[i] += eps * (a[i] - b[i]);
+}
+
+__attribute__((target("avx2"))) static void
+sign_sum_accum_avx2(float eps, const float *g, float *signed_, float *sum,
+                    size_t len) {
+    size_t main = len - len % 8;
+    __m256 ev = _mm256_set1_ps(eps);
+    for (size_t off = 0; off < main; off += 8) {
+        __m256 gv = _mm256_loadu_ps(g + off);
+        __m256 sv = _mm256_loadu_ps(signed_ + off);
+        __m256 uv = _mm256_loadu_ps(sum + off);
+        _mm256_storeu_ps(signed_ + off,
+                         _mm256_add_ps(sv, _mm256_mul_ps(ev, gv)));
+        _mm256_storeu_ps(sum + off, _mm256_add_ps(uv, gv));
+    }
+    for (size_t i = main; i < len; i++) {
+        float gl = g[i];
+        signed_[i] += eps * gl;
+        sum[i] += gl;
+    }
+}
+
+__attribute__((target("avx2"))) static void
+fold_signed_block_avx2(const float *signed_, float net, const float *m,
+                       float *s, size_t len) {
+    size_t main = len - len % 8;
+    __m256 nv = _mm256_set1_ps(net);
+    for (size_t off = 0; off < main; off += 8) {
+        __m256 dv = _mm256_loadu_ps(signed_ + off);
+        __m256 mv = _mm256_loadu_ps(m + off);
+        __m256 sv = _mm256_loadu_ps(s + off);
+        _mm256_storeu_ps(
+            s + off,
+            _mm256_add_ps(sv, _mm256_sub_ps(dv, _mm256_mul_ps(nv, mv))));
+    }
+    for (size_t i = main; i < len; i++)
+        s[i] += signed_[i] - net * m[i];
+}
+
+__attribute__((target("avx2"))) static void
+grab_update_avx2(float eps, float inv_n, const float *g, const float *m,
+                 float *s, float *fresh, size_t len) {
+    size_t main = len - len % 8;
+    __m256 ev = _mm256_set1_ps(eps);
+    __m256 iv = _mm256_set1_ps(inv_n);
+    for (size_t off = 0; off < main; off += 8) {
+        __m256 gv = _mm256_loadu_ps(g + off);
+        __m256 mv = _mm256_loadu_ps(m + off);
+        __m256 sv = _mm256_loadu_ps(s + off);
+        __m256 fv = _mm256_loadu_ps(fresh + off);
+        _mm256_storeu_ps(
+            s + off,
+            _mm256_add_ps(sv, _mm256_mul_ps(ev, _mm256_sub_ps(gv, mv))));
+        _mm256_storeu_ps(fresh + off,
+                         _mm256_add_ps(fv, _mm256_mul_ps(iv, gv)));
+    }
+    for (size_t i = main; i < len; i++) {
+        float gl = g[i];
+        s[i] += eps * (gl - m[i]);
+        fresh[i] += inv_n * gl;
+    }
+}
+
+/* ---------------- harness ---------------------------------------------- */
+
+static double now_s(void) {
+    struct timespec ts;
+    clock_gettime(CLOCK_MONOTONIC, &ts);
+    return (double)ts.tv_sec + 1e-9 * (double)ts.tv_nsec;
+}
+
+static float *alloc_vec(size_t len, unsigned seed) {
+    float *v = aligned_alloc(64, ((len * 4 + 63) / 64) * 64);
+    unsigned x = seed * 2654435761u + 1u;
+    for (size_t i = 0; i < len; i++) {
+        x = x * 1664525u + 1013904223u;
+        v[i] = ((float)(x >> 8) / (float)(1 << 24)) * 2.0f - 1.0f;
+    }
+    return v;
+}
+
+static int bits_eq(float a, float b) {
+    uint32_t ua, ub;
+    memcpy(&ua, &a, 4);
+    memcpy(&ub, &b, 4);
+    return ua == ub;
+}
+
+static int vec_bits_eq(const float *a, const float *b, size_t len) {
+    for (size_t i = 0; i < len; i++)
+        if (!bits_eq(a[i], b[i]))
+            return 0;
+    return 1;
+}
+
+static volatile float sink;
+
+typedef void (*bench_fn)(void *ctx);
+
+static double bench_ns(bench_fn f, void *ctx, int iters) {
+    for (int i = 0; i < 3; i++)
+        f(ctx);
+    double best_sum = 0.0;
+    double t0 = now_s();
+    for (int i = 0; i < iters; i++)
+        f(ctx);
+    best_sum = now_s() - t0;
+    return best_sum / iters * 1e9;
+}
+
+struct ctx {
+    const float *a, *b, *c;
+    float *x, *y;
+    size_t len;
+};
+
+static void run_dot_scalar(void *p) {
+    struct ctx *c = p;
+    sink = dot_scalar(c->a, c->b, c->len);
+}
+static void run_dot_avx2(void *p) {
+    struct ctx *c = p;
+    sink = dot_avx2(c->a, c->b, c->len);
+}
+static void run_dc_scalar(void *p) {
+    struct ctx *c = p;
+    sink = dot_centered_scalar(c->a, c->b, c->c, c->len);
+}
+static void run_dc_avx2(void *p) {
+    struct ctx *c = p;
+    sink = dot_centered_avx2(c->a, c->b, c->c, c->len);
+}
+static void run_dd_scalar(void *p) {
+    struct ctx *c = p;
+    sink = dot_diff_scalar(c->a, c->b, c->c, c->len);
+}
+static void run_dd_avx2(void *p) {
+    struct ctx *c = p;
+    sink = dot_diff_avx2(c->a, c->b, c->c, c->len);
+}
+static void run_axpy_scalar(void *p) {
+    struct ctx *c = p;
+    axpy_scalar(0.001f, c->a, c->x, c->len);
+}
+static void run_axpy_avx2(void *p) {
+    struct ctx *c = p;
+    axpy_avx2(0.001f, c->a, c->x, c->len);
+}
+static void run_ad_scalar(void *p) {
+    struct ctx *c = p;
+    axpy_diff_scalar(1.0f, c->a, c->b, c->x, c->len);
+}
+static void run_ad_avx2(void *p) {
+    struct ctx *c = p;
+    axpy_diff_avx2(1.0f, c->a, c->b, c->x, c->len);
+}
+static void run_ssa_scalar(void *p) {
+    struct ctx *c = p;
+    sign_sum_accum_scalar(1.0f, c->a, c->x, c->y, c->len);
+}
+static void run_ssa_avx2(void *p) {
+    struct ctx *c = p;
+    sign_sum_accum_avx2(1.0f, c->a, c->x, c->y, c->len);
+}
+static void run_fsb_scalar(void *p) {
+    struct ctx *c = p;
+    fold_signed_block_scalar(c->a, 2.0f, c->b, c->x, c->len);
+}
+static void run_fsb_avx2(void *p) {
+    struct ctx *c = p;
+    fold_signed_block_avx2(c->a, 2.0f, c->b, c->x, c->len);
+}
+static void run_gu_scalar(void *p) {
+    struct ctx *c = p;
+    grab_update_scalar(1.0f, 0.001f, c->a, c->b, c->x, c->y, c->len);
+}
+static void run_gu_avx2(void *p) {
+    struct ctx *c = p;
+    grab_update_avx2(1.0f, 0.001f, c->a, c->b, c->x, c->y, c->len);
+}
+
+static void check_equivalence(size_t len) {
+    float *a = alloc_vec(len, 1), *b = alloc_vec(len, 2),
+          *c = alloc_vec(len, 3);
+    float *x1 = alloc_vec(len, 4), *x2 = alloc_vec(len, 4);
+    float *y1 = alloc_vec(len, 5), *y2 = alloc_vec(len, 5);
+    memcpy(x2, x1, len * 4);
+    memcpy(y2, y1, len * 4);
+
+    if (!bits_eq(dot_scalar(a, b, len), dot_avx2(a, b, len))) {
+        fprintf(stderr, "dot mismatch at len=%zu\n", len);
+        exit(1);
+    }
+    if (!bits_eq(dot_centered_scalar(a, b, c, len),
+                 dot_centered_avx2(a, b, c, len))) {
+        fprintf(stderr, "dot_centered mismatch at len=%zu\n", len);
+        exit(1);
+    }
+    if (!bits_eq(dot_diff_scalar(a, b, c, len),
+                 dot_diff_avx2(a, b, c, len))) {
+        fprintf(stderr, "dot_diff mismatch at len=%zu\n", len);
+        exit(1);
+    }
+    axpy_scalar(0.37f, a, x1, len);
+    axpy_avx2(0.37f, a, x2, len);
+    axpy_diff_scalar(-1.0f, a, b, x1, len);
+    axpy_diff_avx2(-1.0f, a, b, x2, len);
+    sign_sum_accum_scalar(1.0f, a, x1, y1, len);
+    sign_sum_accum_avx2(1.0f, a, x2, y2, len);
+    fold_signed_block_scalar(a, 3.0f, b, x1, len);
+    fold_signed_block_avx2(a, 3.0f, b, x2, len);
+    grab_update_scalar(-1.0f, 0.01f, a, b, x1, y1, len);
+    grab_update_avx2(-1.0f, 0.01f, a, b, x2, y2, len);
+    if (!vec_bits_eq(x1, x2, len) || !vec_bits_eq(y1, y2, len)) {
+        fprintf(stderr, "update-kernel mismatch at len=%zu\n", len);
+        exit(1);
+    }
+    free(a); free(b); free(c); free(x1); free(x2); free(y1); free(y2);
+}
+
+/* ---------------- JSON snapshot mode (BENCH_*.json schema) -------------- */
+
+/* Serial single-accumulator dot, mirroring tensor::dot_naive: without
+ * -ffast-math neither rustc nor gcc may reassociate the float sum, so
+ * both stay scalar — the ablation baseline of the perf trajectory. */
+static float dot_naive_c(const float *a, const float *b, size_t len) {
+    float acc = 0.0f;
+    for (size_t i = 0; i < len; i++)
+        acc += a[i] * b[i];
+    return acc;
+}
+
+/* out = a - b, mirroring tensor::sub_into (the two-step baseline). */
+static void sub_into_c(const float *a, const float *b, float *out,
+                       size_t len) {
+    for (size_t i = 0; i < len; i++)
+        out[i] = a[i] - b[i];
+}
+
+static void run_dot_naive(void *p) {
+    struct ctx *c = p;
+    sink = dot_naive_c(c->a, c->b, c->len);
+}
+/* two_step_center_dot: materialize g - m, then dot (a = s, b = g,
+ * c = m, x = scratch) — the fused kernels exist to delete this pass. */
+static void run_ts_scalar(void *p) {
+    struct ctx *c = p;
+    sub_into_c(c->b, c->c, c->x, c->len);
+    sink = dot_scalar(c->a, c->x, c->len);
+}
+static void run_ts_avx2(void *p) {
+    struct ctx *c = p;
+    sub_into_c(c->b, c->c, c->x, c->len);
+    sink = dot_avx2(c->a, c->x, c->len);
+}
+
+/* Single-policy observe loops: the per-example GraB epoch (decision dot
+ * + sign + fused state update, ties to -1 like ordering::grab) and the
+ * PairBalance pair chain (dot_diff + axpy_diff).  Permutation
+ * bookkeeping (O(n) integer moves) is not mirrored — it is noise next
+ * to the O(n*d) float work these rows measure. */
+struct epoch_ctx {
+    const float *flat;
+    float *s, *m, *fresh;
+    size_t n, d;
+    int avx2;
+};
+
+static void run_grab_epoch(void *p) {
+    struct epoch_ctx *c = p;
+    memset(c->s, 0, c->d * 4);
+    memset(c->fresh, 0, c->d * 4);
+    float inv_n = 1.0f / (float)c->n;
+    for (size_t i = 0; i < c->n; i++) {
+        const float *g = c->flat + i * c->d;
+        float dot = c->avx2 ? dot_centered_avx2(c->s, g, c->m, c->d)
+                            : dot_centered_scalar(c->s, g, c->m, c->d);
+        float eps = dot < 0.0f ? 1.0f : -1.0f;
+        if (c->avx2)
+            grab_update_avx2(eps, inv_n, g, c->m, c->s, c->fresh, c->d);
+        else
+            grab_update_scalar(eps, inv_n, g, c->m, c->s, c->fresh,
+                               c->d);
+    }
+    sink = c->s[0];
+}
+
+static void run_pair_epoch(void *p) {
+    struct epoch_ctx *c = p;
+    memset(c->s, 0, c->d * 4);
+    for (size_t i = 0; i + 1 < c->n; i += 2) {
+        const float *a = c->flat + i * c->d;
+        const float *b = c->flat + (i + 1) * c->d;
+        float dot = c->avx2 ? dot_diff_avx2(c->s, a, b, c->d)
+                            : dot_diff_scalar(c->s, a, b, c->d);
+        float eps = dot < 0.0f ? 1.0f : -1.0f;
+        if (c->avx2)
+            axpy_diff_avx2(eps, a, b, c->s, c->d);
+        else
+            axpy_diff_scalar(eps, a, b, c->s, c->d);
+    }
+    sink = c->s[0];
+}
+
+struct jrow {
+    char case_name[64];
+    long d, n, b, w; /* -1 renders as null */
+    const char *kernel;
+    double mean_ns;
+    int iters;
+};
+
+static struct jrow jrows[128];
+static int njrows = 0;
+
+static void jrec(const char *case_name, long d, long n, long b, long w,
+                 const char *kernel, double mean_ns, int iters) {
+    struct jrow *r = &jrows[njrows++];
+    snprintf(r->case_name, sizeof r->case_name, "%s", case_name);
+    r->d = d;
+    r->n = n;
+    r->b = b;
+    r->w = w;
+    r->kernel = kernel;
+    r->mean_ns = mean_ns;
+    r->iters = iters;
+}
+
+static const char *jnum(long v, char *buf, size_t cap) {
+    if (v < 0)
+        return "null";
+    snprintf(buf, cap, "%ld", v);
+    return buf;
+}
+
+static void git_rev(char *buf, size_t cap) {
+    snprintf(buf, cap, "unknown");
+    FILE *p = popen("git rev-parse --short HEAD 2>/dev/null", "r");
+    if (!p)
+        return;
+    char tmp[64];
+    if (fgets(tmp, sizeof tmp, p)) {
+        tmp[strcspn(tmp, "\r\n")] = 0;
+        if (tmp[0])
+            snprintf(buf, cap, "%s", tmp);
+    }
+    pclose(p);
+}
+
+static void run_json_cases(int quick, const char *path) {
+    size_t dims[] = {1024, 7850, 65536};
+    for (int tier = 0; tier < 2; tier++) {
+        const char *kname = tier ? "simd" : "scalar";
+        for (size_t di = 0; di < 3; di++) {
+            size_t d = dims[di];
+            struct ctx cx;
+            cx.a = alloc_vec(d, 11); /* s */
+            cx.b = alloc_vec(d, 12); /* g */
+            cx.c = alloc_vec(d, 13); /* m */
+            cx.x = alloc_vec(d, 14); /* scratch */
+            cx.y = alloc_vec(d, 15);
+            cx.len = d;
+            int iters = quick ? 500 : 20000;
+            if (d > 30000)
+                iters /= 10;
+            char name[64];
+
+            /* dot_naive is kernel-independent; recorded under every
+             * tier label as a per-tier noise floor (like grab bench). */
+            snprintf(name, sizeof name, "dot_naive/d%zu", d);
+            jrec(name, (long)d, -1, -1, -1, kname,
+                 bench_ns(run_dot_naive, &cx, iters), iters);
+            snprintf(name, sizeof name, "dot_unrolled/d%zu", d);
+            jrec(name, (long)d, -1, -1, -1, kname,
+                 bench_ns(tier ? run_dot_avx2 : run_dot_scalar, &cx,
+                          iters),
+                 iters);
+            snprintf(name, sizeof name, "two_step_center_dot/d%zu", d);
+            jrec(name, (long)d, -1, -1, -1, kname,
+                 bench_ns(tier ? run_ts_avx2 : run_ts_scalar, &cx,
+                          iters),
+                 iters);
+            snprintf(name, sizeof name, "fused_dot_centered/d%zu", d);
+            jrec(name, (long)d, -1, -1, -1, kname,
+                 bench_ns(tier ? run_dc_avx2 : run_dc_scalar, &cx,
+                          iters),
+                 iters);
+
+            size_t n = 256;
+            struct epoch_ctx ec;
+            ec.flat = alloc_vec(n * d, 21);
+            ec.s = cx.x;
+            ec.m = (float *)cx.c;
+            ec.fresh = cx.y;
+            ec.n = n;
+            ec.d = d;
+            ec.avx2 = tier;
+            int eiters = quick ? 2 : (d > 30000 ? 20 : 100);
+            snprintf(name, sizeof name, "grab_observe_epoch/n%zu/d%zu",
+                     n, d);
+            jrec(name, (long)d, (long)n, -1, -1, kname,
+                 bench_ns(run_grab_epoch, &ec, eiters), eiters);
+            free((void *)ec.flat);
+
+            free((void *)cx.a);
+            free((void *)cx.b);
+            free((void *)cx.c);
+            free(cx.x);
+            free(cx.y);
+        }
+
+        size_t d = 4096, n = 512;
+        struct epoch_ctx ec;
+        ec.flat = alloc_vec(n * d, 31);
+        ec.s = alloc_vec(d, 32);
+        ec.m = NULL;
+        ec.fresh = NULL;
+        ec.n = n;
+        ec.d = d;
+        ec.avx2 = tier;
+        int piters = quick ? 3 : 200;
+        char name[64];
+        snprintf(name, sizeof name, "pair_observe/block64/n%zu/d%zu", n,
+                 d);
+        jrec(name, (long)d, (long)n, 64, -1, kname,
+             bench_ns(run_pair_epoch, &ec, piters), piters);
+        free((void *)ec.flat);
+        free(ec.s);
+    }
+
+    char rev[64];
+    git_rev(rev, sizeof rev);
+    FILE *f = fopen(path, "w");
+    if (!f) {
+        fprintf(stderr, "cannot write %s\n", path);
+        exit(1);
+    }
+    fprintf(f, "{\n  \"schema_version\": 1,\n");
+    fprintf(f, "  \"runner\": \"c-mirror\",\n");
+    fprintf(f, "  \"git_rev\": \"%s\",\n", rev);
+    fprintf(f, "  \"results\": [\n");
+    for (int i = 0; i < njrows; i++) {
+        struct jrow *r = &jrows[i];
+        char bd[24], bn[24], bb[24], bw[24];
+        fprintf(f,
+                "    {\"case\": \"%s\", \"d\": %s, \"n\": %s, "
+                "\"B\": %s, \"W\": %s, \"kernel\": \"%s\", "
+                "\"mean_ns\": %.1f, \"iters\": %d}%s\n",
+                r->case_name, jnum(r->d, bd, sizeof bd),
+                jnum(r->n, bn, sizeof bn), jnum(r->b, bb, sizeof bb),
+                jnum(r->w, bw, sizeof bw), r->kernel, r->mean_ns,
+                r->iters, i + 1 < njrows ? "," : "");
+    }
+    fprintf(f, "  ]\n}\n");
+    fclose(f);
+    fprintf(stderr, "wrote %d rows to %s (rev %s)\n", njrows, path, rev);
+}
+
+int main(int argc, char **argv) {
+    int quick = 0;
+    const char *json_path = NULL;
+    for (int i = 1; i < argc; i++) {
+        if (strcmp(argv[i], "--quick") == 0) {
+            quick = 1;
+        } else if (strcmp(argv[i], "--json") == 0 && i + 1 < argc) {
+            json_path = argv[++i];
+        } else {
+            fprintf(stderr,
+                    "usage: bench_mirror [--quick] [--json FILE]\n");
+            return 2;
+        }
+    }
+
+    size_t checks[] = {1, 7, 8, 9, 15, 16, 63, 1024, 7850, 65537};
+    for (size_t i = 0; i < sizeof(checks) / sizeof(checks[0]); i++)
+        check_equivalence(checks[i]);
+    fprintf(stderr, "bit-equivalence: OK\n");
+
+    if (json_path) {
+        run_json_cases(quick, json_path);
+        return 0;
+    }
+
+    size_t dims[] = {1024, 7850, 65536};
+    struct {
+        const char *name;
+        bench_fn scalar, avx2;
+    } cases[] = {
+        {"dot", run_dot_scalar, run_dot_avx2},
+        {"dot_centered", run_dc_scalar, run_dc_avx2},
+        {"dot_diff", run_dd_scalar, run_dd_avx2},
+        {"axpy", run_axpy_scalar, run_axpy_avx2},
+        {"axpy_diff", run_ad_scalar, run_ad_avx2},
+        {"sign_sum_accum", run_ssa_scalar, run_ssa_avx2},
+        {"fold_signed_block", run_fsb_scalar, run_fsb_avx2},
+        {"grab_update", run_gu_scalar, run_gu_avx2},
+    };
+
+    printf("%-20s %8s %14s %14s %8s\n", "kernel", "d", "scalar_ns",
+           "avx2_ns", "speedup");
+    for (size_t di = 0; di < 3; di++) {
+        size_t d = dims[di];
+        struct ctx cx;
+        cx.a = alloc_vec(d, 11);
+        cx.b = alloc_vec(d, 12);
+        cx.c = alloc_vec(d, 13);
+        cx.x = alloc_vec(d, 14);
+        cx.y = alloc_vec(d, 15);
+        cx.len = d;
+        int iters = quick ? 2000 : 20000;
+        if (d > 30000)
+            iters /= 4;
+        for (size_t ci = 0; ci < sizeof(cases) / sizeof(cases[0]); ci++) {
+            double s = bench_ns(cases[ci].scalar, &cx, iters);
+            double v = bench_ns(cases[ci].avx2, &cx, iters);
+            printf("%-20s %8zu %14.1f %14.1f %7.2fx\n", cases[ci].name, d,
+                   s, v, s / v);
+        }
+        free((void *)cx.a); free((void *)cx.b); free((void *)cx.c);
+        free(cx.x); free(cx.y);
+    }
+    return 0;
+}

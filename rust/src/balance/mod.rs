@@ -28,6 +28,18 @@ pub trait Balancer {
     /// Reset any internal state for a fresh sequence.
     fn reset(&mut self) {}
 
+    /// Epoch-boundary checkpoint state. [`Balancer::reset`] already
+    /// clears the per-epoch walk state at every boundary, so the only
+    /// thing that carries across epochs is a stochastic balancer's RNG
+    /// stream position; stateless balancers return `None`.
+    fn save_rng(&self) -> Option<[u64; 4]> {
+        None
+    }
+
+    /// Restore the stream position captured by [`Balancer::save_rng`]
+    /// (no-op for stateless balancers).
+    fn restore_rng(&mut self, _s: [u64; 4]) {}
+
     /// True when `sign(s, c)` equals `+1 iff <s, c> < 0` (Algorithm 5's
     /// decision rule). Callers may then use the fused/batched centered-dot
     /// kernels (`tensor::dot_centered`, `tensor::dot_centered_block`)
@@ -148,6 +160,14 @@ impl Balancer for WalkBalancer {
         tensor::zero(&mut self.s_scaled);
         self.failures = 0;
         self.normalizer = 1e-12;
+    }
+
+    fn save_rng(&self) -> Option<[u64; 4]> {
+        Some(self.rng.state())
+    }
+
+    fn restore_rng(&mut self, s: [u64; 4]) {
+        self.rng = Rng::from_state(s);
     }
 
     fn name(&self) -> &'static str {

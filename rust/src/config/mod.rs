@@ -368,6 +368,25 @@ pub struct TrainConfig {
     /// optimizer step (0 = off). Matches standard practice for the CNN and
     /// the PyTorch LM recipe the paper's WikiText-2 setup follows.
     pub clip_norm: f64,
+    /// Durable run directory (`--checkpoint-dir DIR`): the trainer
+    /// writes a JSON manifest (schema version, config fingerprint,
+    /// policy, kernel tier, git rev) plus per-epoch CRC-framed
+    /// snapshots there, atomically, keeping the newest few. `None`
+    /// (the default) disables checkpointing. See
+    /// docs/determinism.md contract 8.
+    pub checkpoint_dir: Option<String>,
+    /// Snapshot cadence in epochs (`--checkpoint-every N`, default 1):
+    /// a snapshot lands after every N-th epoch and always after the
+    /// final one. Only meaningful with [`TrainConfig::checkpoint_dir`].
+    pub checkpoint_every: usize,
+    /// Resume from the newest snapshot in
+    /// [`TrainConfig::checkpoint_dir`] (`--resume`): the manifest's
+    /// config fingerprint must match this config's (typed
+    /// `FingerprintMismatch` otherwise), the policy is reconstructed
+    /// from config and re-seeded from its saved epoch-boundary state,
+    /// and training continues at the snapshot's epoch + 1 —
+    /// bit-identical to the uninterrupted run (contract 8).
+    pub resume: bool,
 }
 
 impl Default for TrainConfig {
@@ -401,6 +420,9 @@ impl Default for TrainConfig {
             use_pipeline: false,
             workers: 1,
             clip_norm: 0.0,
+            checkpoint_dir: None,
+            checkpoint_every: 1,
+            resume: false,
         }
     }
 }
@@ -446,6 +468,9 @@ impl TrainConfig {
             *self = TrainConfig {
                 metrics_out: self.metrics_out.clone(),
                 artifacts_dir: self.artifacts_dir.clone(),
+                checkpoint_dir: self.checkpoint_dir.clone(),
+                checkpoint_every: self.checkpoint_every,
+                resume: self.resume,
                 ..TrainConfig::for_task(Task::parse(&t)?)
             };
         }
@@ -518,6 +543,20 @@ impl TrainConfig {
         }
         self.workers = args.usize_or("workers", self.workers)?;
         self.clip_norm = args.f64_or("clip", self.clip_norm)?;
+        if let Some(dir) = args.opt_str("checkpoint-dir") {
+            self.checkpoint_dir = Some(dir);
+        }
+        self.checkpoint_every =
+            args.usize_or("checkpoint-every", self.checkpoint_every)?;
+        if args.opt_str("resume").is_some() {
+            bail!(
+                "--resume is a boolean flag and takes no value \
+                 (put it last or before another --flag)"
+            );
+        }
+        if args.flag("resume") {
+            self.resume = true;
+        }
         self.validate()
     }
 
@@ -587,6 +626,17 @@ impl TrainConfig {
         if let Some(m) = doc.get_str("metrics_out") {
             c.metrics_out = Some(m);
         }
+        if let Some(dir) = doc.get_str("checkpoint_dir") {
+            c.checkpoint_dir = Some(dir);
+        }
+        let every = doc
+            .get_int("checkpoint_every")
+            .unwrap_or(c.checkpoint_every as i64);
+        if every < 1 {
+            bail!("checkpoint_every must be >= 1, got {every}");
+        }
+        c.checkpoint_every = every as usize;
+        c.resume = doc.get_bool("resume").unwrap_or(c.resume);
         c.validate()?;
         Ok(c)
     }
@@ -654,6 +704,19 @@ impl TrainConfig {
                  --async-shards or --transport tcp"
             );
         }
+        if self.checkpoint_every == 0 {
+            bail!("checkpoint-every must be >= 1");
+        }
+        if self.resume && self.checkpoint_dir.is_none() {
+            bail!("--resume needs --checkpoint-dir (the run directory)");
+        }
+        if self.checkpoint_dir.is_some() && self.use_pipeline {
+            bail!(
+                "checkpointing is not supported with --pipeline \
+                 (the threaded trainer has no epoch-boundary snapshot \
+                 hook yet)"
+            );
+        }
         if self.ordering == OrderingKind::GreedyOrdering {
             // Greedy stores all stale gradients: warn-level sanity bound so
             // a config cannot accidentally demand hundreds of GiB (the
@@ -675,6 +738,60 @@ impl TrainConfig {
             self.n_examples,
             self.seed
         )
+    }
+
+    /// FNV-1a hash of every *result-relevant* field, recorded in a run
+    /// directory's manifest; `--resume` refuses a directory whose
+    /// fingerprint differs (docs/determinism.md contract 8).
+    ///
+    /// Deliberately excluded: fields the determinism contracts prove
+    /// cannot change the result — the shard transport and async/queue
+    /// knobs (contract 5), the kernel tier (contract 7) — plus pure
+    /// run infrastructure (artifact/metrics/checkpoint paths, eval
+    /// cadence, pipeline workers, and the `resume` flag itself, which
+    /// necessarily differs between the writing and resuming run).
+    pub fn fingerprint(&self) -> u32 {
+        let sched = match self.lr_schedule {
+            LrSchedule::Constant => "constant".to_string(),
+            LrSchedule::ReduceOnPlateau {
+                factor,
+                patience,
+                threshold,
+            } => format!("plateau/{factor}/{patience}/{threshold}"),
+        };
+        let weights = match &self.shard_weights {
+            Some(w) => w
+                .iter()
+                .map(|x| x.to_string())
+                .collect::<Vec<_>>()
+                .join(":"),
+            None => "equal".to_string(),
+        };
+        let canon = format!(
+            "task={};ordering={};balancer={};epochs={};n={};n_eval={};\
+             accum={};lr={};momentum={};wd={};sched={};seed={};\
+             walk_c={};group={};shards={};weights={};elastic={};\
+             clip={}",
+            self.task.name(),
+            self.ordering.name(),
+            self.balancer.name(),
+            self.epochs,
+            self.n_examples,
+            self.n_eval,
+            self.accum_steps,
+            self.lr,
+            self.momentum,
+            self.weight_decay,
+            sched,
+            self.seed,
+            self.walk_c,
+            self.group_size,
+            self.num_shards,
+            weights,
+            self.elastic,
+            self.clip_norm,
+        );
+        crate::util::ser::fnv1a32(canon.as_bytes())
     }
 }
 
@@ -900,5 +1017,68 @@ mod tests {
     fn run_id_stable() {
         let c = TrainConfig::default();
         assert_eq!(c.run_id(), "mnist-grab-alg5-e5-n4096-s0");
+    }
+
+    #[test]
+    fn checkpoint_config_plumbs_through() {
+        let args = Args::parse([
+            "--checkpoint-dir", "/tmp/run",
+            "--checkpoint-every", "2", "--resume",
+        ])
+        .unwrap();
+        let mut c = TrainConfig::default();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.checkpoint_dir.as_deref(), Some("/tmp/run"));
+        assert_eq!(c.checkpoint_every, 2);
+        assert!(c.resume);
+
+        // --resume without a run directory is a config error.
+        let args = Args::parse(["--resume"]).unwrap();
+        let mut c = TrainConfig::default();
+        assert!(c.apply_args(&args).is_err());
+
+        // Checkpointing through the pipeline trainer is refused (no
+        // snapshot hook there yet).
+        let args = Args::parse(
+            ["--checkpoint-dir", "runs/x", "--pipeline"],
+        )
+        .unwrap();
+        let mut c = TrainConfig::default();
+        assert!(c.apply_args(&args).is_err());
+
+        // TOML forms + cadence guard.
+        let doc = TomlDoc::parse(
+            "checkpoint_dir = \"runs/a\"\ncheckpoint_every = 3",
+        )
+        .unwrap();
+        let c = TrainConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.checkpoint_dir.as_deref(), Some("runs/a"));
+        assert_eq!(c.checkpoint_every, 3);
+        let doc = TomlDoc::parse("checkpoint_every = 0").unwrap();
+        assert!(TrainConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn fingerprint_tracks_result_relevant_fields_only() {
+        let a = TrainConfig::default();
+        let mut b = TrainConfig::default();
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        b.seed = 1;
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        let mut b = TrainConfig::default();
+        b.ordering = OrderingKind::PairBalance;
+        assert_ne!(a.fingerprint(), b.fingerprint());
+
+        // Contract-5/7-equivalent knobs and run infrastructure must
+        // NOT shift the fingerprint — a resume with a different
+        // transport or kernel tier is still the same run.
+        let mut c = TrainConfig::default();
+        c.shard_transport = TransportKind::Tcp;
+        c.async_shards = true;
+        c.kernels = KernelKind::Scalar;
+        c.checkpoint_dir = Some("runs/x".into());
+        c.resume = true;
+        c.eval_every = 7;
+        assert_eq!(a.fingerprint(), c.fingerprint());
     }
 }

@@ -34,6 +34,7 @@ use anyhow::Result;
 
 use crate::herding::herding_bound;
 use crate::ordering::{GraBOrder, OrderPolicy, PairBalance, ShardedOrder};
+use crate::train::checkpoint;
 use crate::util::prop::gen;
 use crate::util::rng::Rng;
 use crate::util::ser::{fmt_f, CsvWriter};
@@ -59,6 +60,14 @@ pub struct CdGrabConfig {
     /// comma-separated for a pool); `None` spawns in-process loopback
     /// workers.
     pub connect: Option<String>,
+    /// Durable run root (`--checkpoint-dir`): each policy snapshots its
+    /// ordering state into `<dir>/<policy>/` after each epoch.
+    pub checkpoint_dir: Option<String>,
+    /// Snapshot cadence in epochs (`--checkpoint-every`, default 1).
+    pub checkpoint_every: usize,
+    /// Resume each policy from its latest snapshot (`--resume`); the
+    /// rewritten CSV then covers only the remaining epochs.
+    pub resume: bool,
 }
 
 impl Default for CdGrabConfig {
@@ -71,6 +80,9 @@ impl Default for CdGrabConfig {
             shard_counts: vec![1, 4, 16],
             seed: 0,
             connect: None,
+            checkpoint_dir: None,
+            checkpoint_every: 1,
+            resume: false,
         }
     }
 }
@@ -86,7 +98,29 @@ impl CdGrabConfig {
             shard_counts: vec![1, 2, 4],
             seed: 0,
             connect: None,
+            checkpoint_dir: None,
+            checkpoint_every: 1,
+            resume: false,
         }
+    }
+
+    /// Sweep identity for the run-directory fingerprint gate
+    /// (docs/determinism.md contract 8). `epochs` is deliberately
+    /// excluded — it is a resumable horizon, and extending it is the
+    /// point of resuming — as is `connect` (contract 5: the transport
+    /// never shifts results).
+    pub fn fingerprint(&self) -> u32 {
+        let shards: Vec<String> =
+            self.shard_counts.iter().map(|w| w.to_string()).collect();
+        let canon = format!(
+            "cdgrab;n={};d={};block={};shard_counts={};seed={}",
+            self.n,
+            self.d,
+            self.block,
+            shards.join(":"),
+            self.seed
+        );
+        crate::util::ser::fnv1a32(canon.as_bytes())
     }
 }
 
@@ -230,10 +264,77 @@ pub fn run(cfg: &CdGrabConfig, out_dir: &std::path::Path) -> Result<()> {
     );
     // Per-policy herding column, kept for the cross-transport equality
     // assertion below.
+    let ckpt_root =
+        cfg.checkpoint_dir.as_ref().map(std::path::PathBuf::from);
     let mut herd_cols: Vec<(String, Vec<f32>)> = Vec::new();
     for (name, policy) in policies.iter_mut() {
+        // Durable-run layer (contract 8): one run directory per policy
+        // under --checkpoint-dir; on --resume, restore the policy's
+        // epoch-boundary state and re-run only the remaining epochs.
+        let mut start = 0usize;
+        let run_dir = match &ckpt_root {
+            None => None,
+            Some(root) => {
+                let dir = root.join(name.as_str());
+                let rd = if cfg.resume
+                    && dir.join(checkpoint::MANIFEST_FILE).is_file()
+                {
+                    let rd = checkpoint::RunDir::open(&dir)?;
+                    rd.check_fingerprint(cfg.fingerprint())?;
+                    anyhow::ensure!(
+                        rd.manifest.policy == *name,
+                        "run directory {} belongs to policy {:?}, \
+                         not {:?}",
+                        dir.display(),
+                        rd.manifest.policy,
+                        name
+                    );
+                    if let Some(ckpt) = rd.load_latest()? {
+                        if let Some(bytes) = &ckpt.policy_state {
+                            policy.restore_state(bytes).map_err(|e| {
+                                anyhow::anyhow!("resuming {name}: {e}")
+                            })?;
+                        } else {
+                            let order: Vec<usize> = ckpt
+                                .order
+                                .iter()
+                                .map(|&v| v as usize)
+                                .collect();
+                            anyhow::ensure!(
+                                policy.restore_order(&order),
+                                "policy {name} cannot be re-seeded \
+                                 from the snapshot order"
+                            );
+                        }
+                        start = ckpt.epoch as usize + 1;
+                        eprintln!(
+                            "[cdgrab] {name}: resumed after epoch {} \
+                             from {}",
+                            ckpt.epoch,
+                            dir.display()
+                        );
+                    }
+                    rd
+                } else {
+                    checkpoint::RunDir::create(
+                        &dir,
+                        checkpoint::manifest_for(
+                            cfg.fingerprint(),
+                            &format!(
+                                "cdgrab-n{}-d{}-s{}",
+                                cfg.n, cfg.d, cfg.seed
+                            ),
+                            name,
+                            crate::tensor::default_kernel().name(),
+                            cfg.checkpoint_every as u64,
+                        ),
+                    )?
+                };
+                Some(rd)
+            }
+        };
         let mut col = Vec::with_capacity(cfg.epochs);
-        for epoch in 0..cfg.epochs {
+        for epoch in start..cfg.epochs {
             let (inf, secs) =
                 run_epoch(policy.as_mut(), &vs, &mut flat, cfg.block);
             let link = policy
@@ -271,6 +372,32 @@ pub fn run(cfg: &CdGrabConfig, out_dir: &std::path::Path) -> Result<()> {
                     link.tx_bytes + link.rx_bytes
                 );
             }
+            // Snapshot the policy's epoch-boundary state (its next
+            // permutation is already materialized — epoch_order is
+            // idempotent at a boundary, so this never perturbs the
+            // run).
+            if let Some(rd) = &run_dir {
+                if (epoch + 1) % cfg.checkpoint_every.max(1) == 0
+                    || epoch + 1 == cfg.epochs
+                {
+                    let order: Vec<u64> = policy
+                        .epoch_order(0)
+                        .iter()
+                        .map(|&v| v as u64)
+                        .collect();
+                    rd.save_epoch(
+                        &checkpoint::Checkpoint {
+                            epoch: epoch as u64,
+                            params: Vec::new(),
+                            velocity: Vec::new(),
+                            order,
+                            sched: None,
+                            policy_state: policy.save_state(),
+                        },
+                        checkpoint::DEFAULT_KEEP_LAST,
+                    )?;
+                }
+            }
         }
         herd_cols.push((name.clone(), col));
     }
@@ -293,6 +420,16 @@ pub fn run(cfg: &CdGrabConfig, out_dir: &std::path::Path) -> Result<()> {
         for variant in ["async", "tcp"] {
             let other =
                 col(&herd_cols, &format!("cd-grab-w{w}-{variant}"));
+            if sync.len() != other.len() {
+                // A resumed run after a mid-sweep crash leaves the
+                // policies at different epochs; the cross-transport
+                // gate only applies over a common epoch range.
+                eprintln!(
+                    "[cdgrab] gate skipped: cd-grab-w{w} vs -{variant} \
+                     resumed at different epochs"
+                );
+                continue;
+            }
             anyhow::ensure!(
                 sync == other,
                 "herding diverged: cd-grab-w{w} vs -{variant} \
@@ -306,6 +443,13 @@ pub fn run(cfg: &CdGrabConfig, out_dir: &std::path::Path) -> Result<()> {
     for variant in ["async", "tcp"] {
         let other =
             col(&herd_cols, &format!("cd-grab-skew114-{variant}"));
+        if skew_sync.len() != other.len() {
+            eprintln!(
+                "[cdgrab] gate skipped: cd-grab-skew114 vs -{variant} \
+                 resumed at different epochs"
+            );
+            continue;
+        }
         anyhow::ensure!(
             skew_sync == other,
             "herding diverged: cd-grab-skew114 vs -{variant} \
@@ -319,7 +463,8 @@ pub fn run(cfg: &CdGrabConfig, out_dir: &std::path::Path) -> Result<()> {
     );
 
     for (name, col) in &herd_cols {
-        let inf = *col.last().expect("at least one epoch");
+        // A resumed, already-finished policy runs zero epochs here.
+        let Some(&inf) = col.last() else { continue };
         let verdict = if inf < rand_inf { "beats" } else { "LOSES TO" };
         println!(
             "  {name}: final {inf:.4} {verdict} random ({rand_inf:.4})"
@@ -332,19 +477,23 @@ pub fn run(cfg: &CdGrabConfig, out_dir: &std::path::Path) -> Result<()> {
 mod tests {
     use super::*;
 
-    #[test]
-    fn cdgrab_runs_and_beats_random_at_small_scale() {
-        let dir = std::env::temp_dir().join("grab_cdgrab_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let cfg = CdGrabConfig {
+    fn test_cfg() -> CdGrabConfig {
+        CdGrabConfig {
             n: 256,
             d: 16,
             epochs: 6,
             block: 16,
             shard_counts: vec![1, 4],
             seed: 1,
-            connect: None,
-        };
+            ..CdGrabConfig::small()
+        }
+    }
+
+    #[test]
+    fn cdgrab_runs_and_beats_random_at_small_scale() {
+        let tmp = crate::util::testdir::TestDir::new("cdgrab-exp");
+        let dir = tmp.path().to_path_buf();
+        let cfg = test_cfg();
         // run() itself enforces the sync == async == tcp herding gate
         // and fails the experiment on divergence.
         run(&cfg, &dir).unwrap();
@@ -423,6 +572,95 @@ mod tests {
             .parse()
             .unwrap();
         assert!(wire > 0, "tcp policy reported no wire bytes");
-        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Contract 8 at the experiment layer: a sweep killed after epoch
+    /// e and resumed from its run directory emits herding values for
+    /// the remaining epochs bit-equal to an uninterrupted sweep.
+    #[test]
+    fn cdgrab_resume_matches_uninterrupted_sweep() {
+        fn herd_rows(text: &str) -> Vec<(String, String, String)> {
+            text.lines()
+                .skip(1)
+                .map(|l| {
+                    let mut it = l.split(',');
+                    (
+                        it.next().unwrap().to_string(),
+                        it.next().unwrap().to_string(),
+                        it.next().unwrap().to_string(),
+                    )
+                })
+                .collect()
+        }
+
+        // Uninterrupted reference sweep.
+        let full_tmp =
+            crate::util::testdir::TestDir::new("cdgrab-resume-full");
+        let mut cfg = test_cfg();
+        cfg.shard_counts = vec![2];
+        run(&cfg, full_tmp.path()).unwrap();
+        let full = std::fs::read_to_string(
+            full_tmp.path().join("cdgrab_herding.csv"),
+        )
+        .unwrap();
+
+        // "Crashed" sweep: same config stopped three epochs early,
+        // snapshotting every epoch...
+        let part_tmp =
+            crate::util::testdir::TestDir::new("cdgrab-resume-part");
+        let ckpt = part_tmp.path().join("ckpt");
+        let mut partial = test_cfg();
+        partial.shard_counts = vec![2];
+        partial.epochs = 3;
+        partial.checkpoint_dir =
+            Some(ckpt.to_string_lossy().into_owned());
+        run(&partial, part_tmp.path()).unwrap();
+
+        // ...then resumed out to the full horizon from fresh policy
+        // objects seeded only by the run directories.
+        let mut resumed = test_cfg();
+        resumed.shard_counts = vec![2];
+        resumed.checkpoint_dir =
+            Some(ckpt.to_string_lossy().into_owned());
+        resumed.resume = true;
+        run(&resumed, part_tmp.path()).unwrap();
+        let tail = std::fs::read_to_string(
+            part_tmp.path().join("cdgrab_herding.csv"),
+        )
+        .unwrap();
+
+        // Every resumed (policy, epoch) herding value must match the
+        // uninterrupted sweep exactly (epochs 3..6; `rr` re-emits all
+        // epochs, which the full run also contains).
+        let full_rows = herd_rows(&full);
+        let tail_rows = herd_rows(&tail);
+        assert!(
+            tail_rows.iter().any(|(_, e, _)| e == "3"),
+            "resumed sweep emitted no tail epochs"
+        );
+        // The measured-elastic policy is excluded: its planner keys on
+        // wall-clock EWMA, the documented contract-8 carve-out.
+        for row in tail_rows
+            .iter()
+            .filter(|(p, _, _)| !p.contains("elastic"))
+        {
+            assert!(
+                full_rows.contains(row),
+                "resumed row {row:?} not in the uninterrupted sweep"
+            );
+        }
+
+        // A config whose fingerprint differs must be refused.
+        let mut other = test_cfg();
+        other.shard_counts = vec![2];
+        other.seed = 99;
+        other.checkpoint_dir =
+            Some(ckpt.to_string_lossy().into_owned());
+        other.resume = true;
+        let err = run(&other, part_tmp.path()).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("fingerprint"),
+            "wanted a fingerprint refusal, got: {err:#}"
+        );
     }
 }

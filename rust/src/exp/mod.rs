@@ -55,6 +55,14 @@ pub fn run_from_cli(args: &Args) -> Result<()> {
     let listen = args.opt_str("listen");
     let connect = args.opt_str("connect");
     let max_conns = args.usize_or("max-conns", 0)?; // 0 = serve forever
+    // Durable-run flags (cdgrab only): per-policy run directories with
+    // epoch snapshots (docs/determinism.md contract 8).
+    let checkpoint_dir = args.opt_str("checkpoint-dir");
+    let checkpoint_every = args.usize_or("checkpoint-every", 1)?;
+    if args.opt_str("resume").is_some() {
+        bail!("--resume is a boolean flag and takes no value");
+    }
+    let resume = args.flag("resume");
     args.reject_unknown()?;
     anyhow::ensure!(
         listen.is_none() || connect.is_none(),
@@ -81,6 +89,16 @@ pub fn run_from_cli(args: &Args) -> Result<()> {
             "--connect only applies to `exp cdgrab`"
         );
     }
+    anyhow::ensure!(
+        checkpoint_dir.is_none() || id == "cdgrab",
+        "--checkpoint-dir only applies to `exp cdgrab`"
+    );
+    anyhow::ensure!(checkpoint_every >= 1, "--checkpoint-every must be >= 1");
+    anyhow::ensure!(
+        !resume || checkpoint_dir.is_some(),
+        "--resume needs --checkpoint-dir (the run directory to resume \
+         from)"
+    );
 
     let ids: Vec<&str> = if id == "all" {
         vec!["fig1", "fig2", "fig3", "fig4", "table1", "statement1",
@@ -184,6 +202,9 @@ pub fn run_from_cli(args: &Args) -> Result<()> {
                     cfg.n = n;
                 }
                 cfg.connect = connect.clone();
+                cfg.checkpoint_dir = checkpoint_dir.clone();
+                cfg.checkpoint_every = checkpoint_every;
+                cfg.resume = resume;
                 cdgrab::run(&cfg, &out)?;
             }
             other => bail!(

@@ -7,7 +7,8 @@
 //!             [--transport channel|tcp] [--connect HOST:PORT]
 //!             [--balancer alg5|alg6|kernel] [--epochs N] [--n N]
 //!             [--lr F] [--seed N] [--metrics-out f.csv] [--pipeline]
-//!             [--async-shards]
+//!             [--async-shards] [--checkpoint-dir DIR]
+//!             [--checkpoint-every N] [--resume]
 //! grab exp    fig1|fig2|fig3|fig4|table1|statement1|granularity|
 //!             cdgrab|all [options]
 //!             (cdgrab: --listen HOST:PORT serves shard workers,
@@ -105,6 +106,16 @@ TRAIN OPTIONS:
   --metrics-out FILE.csv   stream per-epoch metrics
   --pipeline               threaded streaming pipeline (overlapped stages)
   --artifacts DIR          artifact directory (default: artifacts)
+  --checkpoint-dir DIR     durable run directory: versioned manifest +
+                           per-epoch snapshots (params, momentum, ordering
+                           state, schedule) — docs/determinism.md
+                           contract 8
+  --checkpoint-every N     snapshot cadence in epochs (default: 1; the
+                           final epoch is always snapshotted)
+  --resume                 resume from the latest snapshot in
+                           --checkpoint-dir; refuses on a config
+                           fingerprint mismatch (boolean flag, put it
+                           last or before another --flag)
 
 EXP OPTIONS (see DESIGN.md experiment index):
   --out DIR                results directory (default: results)
@@ -113,6 +124,13 @@ EXP OPTIONS (see DESIGN.md experiment index):
   --connect HOST:PORT      (cdgrab) point the sweep's TCP policies at a
                            remote worker server instead of loopback
   --max-conns N            (with --listen) exit after serving N links
+  --checkpoint-dir DIR     (cdgrab) per-policy run directories with
+                           epoch snapshots of each policy's ordering
+                           state
+  --checkpoint-every N     (cdgrab) snapshot cadence (default: 1)
+  --resume                 (cdgrab) resume every policy from its latest
+                           snapshot; remaining epochs are bit-equal to
+                           the uninterrupted sweep (boolean flag)
 
 BENCH OPTIONS:
   --out FILE.json          where to write results (default: stdout)

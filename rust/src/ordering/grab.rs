@@ -266,6 +266,82 @@ impl OrderPolicy for GraBOrder {
     fn wants_grads(&self) -> bool {
         true
     }
+
+    fn save_state(&mut self) -> Option<Vec<u8>> {
+        // Epoch-boundary state: the order to follow next plus the stale
+        // mean it was balanced against (s, the fresh accumulator, and
+        // the fill pointers are all reset by `epoch_end`). A stochastic
+        // balancer additionally carries its RNG stream position.
+        let mut out = Vec::new();
+        crate::util::ser::put_u64(&mut out, self.n as u64);
+        crate::util::ser::put_u64(&mut out, self.d as u64);
+        crate::util::ser::put_usize_slice(&mut out, &self.current);
+        crate::util::ser::put_f32_slice(&mut out, &self.stale_mean);
+        match self.balancer.save_rng() {
+            Some(s) => {
+                crate::util::ser::put_u32(&mut out, 1);
+                for w in s {
+                    crate::util::ser::put_u64(&mut out, w);
+                }
+            }
+            None => crate::util::ser::put_u32(&mut out, 0),
+        }
+        Some(out)
+    }
+
+    fn restore_state(&mut self, bytes: &[u8]) -> Result<(), String> {
+        let mut r = crate::util::ser::ByteReader::new(bytes);
+        let parse = (|| {
+            let n = r.u64()? as usize;
+            let d = r.u64()? as usize;
+            let current = r.usize_slice(self.n)?;
+            let stale = r.f32_slice(self.d)?;
+            let rng = match r.u32()? {
+                0 => None,
+                _ => Some([r.u64()?, r.u64()?, r.u64()?, r.u64()?]),
+            };
+            r.finish()?;
+            Ok::<_, crate::util::ser::WireError>((
+                n, d, current, stale, rng,
+            ))
+        })();
+        let (n, d, current, stale, rng) =
+            parse.map_err(|e| format!("grab state: {e}"))?;
+        if n != self.n || d != self.d {
+            return Err(format!(
+                "grab state shape mismatch: snapshot {n}x{d}, \
+                 policy {}x{}",
+                self.n, self.d
+            ));
+        }
+        if stale.len() != self.d {
+            return Err(format!(
+                "grab stale mean has {} entries, expected {}",
+                stale.len(),
+                self.d
+            ));
+        }
+        if !self.restore_order(&current) {
+            return Err(format!(
+                "grab state order is not a permutation of 0..{}",
+                self.n
+            ));
+        }
+        self.stale_mean.copy_from_slice(&stale);
+        if let Some(s) = rng {
+            self.balancer.restore_rng(s);
+        }
+        Ok(())
+    }
+
+    fn restore_order(&mut self, order: &[usize]) -> bool {
+        if !crate::ordering::is_permutation_of(order, self.n) {
+            return false;
+        }
+        self.current.clear();
+        self.current.extend_from_slice(order);
+        true
+    }
 }
 
 #[cfg(test)]

@@ -138,6 +138,16 @@ impl OrderPolicy for GroupedOrder {
         // like the transport counters above.
         self.inner.topology_log()
     }
+
+    fn save_state(&mut self) -> Option<Vec<u8>> {
+        // The group partition and expansion are pure functions of
+        // (n, group_size); only the inner policy's state matters.
+        self.inner.save_state()
+    }
+
+    fn restore_state(&mut self, bytes: &[u8]) -> Result<(), String> {
+        self.inner.restore_state(bytes)
+    }
 }
 
 /// Convenience: GraB over groups of `group_size` (the paper's

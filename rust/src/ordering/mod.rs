@@ -139,6 +139,53 @@ pub trait OrderPolicy: Send {
     fn topology_log(&self) -> Option<&[Topology]> {
         None
     }
+
+    /// Serialize the policy's *epoch-boundary* state for a checkpoint
+    /// (determinism contract 8, `docs/determinism.md`): everything a
+    /// freshly constructed policy of the same config needs to continue
+    /// the run bit-identically from the next epoch. Must only be called
+    /// between epochs (after [`OrderPolicy::epoch_end`], before the
+    /// next [`OrderPolicy::epoch_order`]). `None` for policies whose
+    /// boundary state is fully derivable from config (Sequential,
+    /// ShuffleOnce, FixedOrder).
+    fn save_state(&mut self) -> Option<Vec<u8>> {
+        None
+    }
+
+    /// Restore state captured by [`OrderPolicy::save_state`] into a
+    /// freshly constructed policy of the same config. The error string
+    /// is wrapped into a typed checkpoint error by the trainer.
+    fn restore_state(&mut self, _bytes: &[u8]) -> Result<(), String> {
+        Err(format!(
+            "policy '{}' does not carry restorable checkpoint state",
+            self.name()
+        ))
+    }
+
+    /// Overwrite the permutation the next [`OrderPolicy::epoch_order`]
+    /// call returns with `order` (the legacy single-file
+    /// checkpoint-resume path, which records only the order). Returns
+    /// `false` for policies that cannot adopt an external permutation.
+    fn restore_order(&mut self, _order: &[usize]) -> bool {
+        false
+    }
+}
+
+/// Whether `order` is a permutation of `0..n` — the validation gate on
+/// every checkpoint-restored permutation (a corrupt order must never
+/// reach an epoch loop).
+pub(crate) fn is_permutation_of(order: &[usize], n: usize) -> bool {
+    if order.len() != n {
+        return false;
+    }
+    let mut seen = vec![false; n];
+    for &u in order {
+        if u >= n || seen[u] {
+            return false;
+        }
+        seen[u] = true;
+    }
+    true
 }
 
 /// Random Reshuffling — a fresh uniform permutation each epoch.
@@ -175,6 +222,40 @@ impl OrderPolicy for RandomReshuffle {
     // state_bytes stays 0 (Table 1's "RR needs no extra storage"): the
     // permutation buffer is the borrowed-slice API's transient output,
     // not algorithm state carried between epochs.
+
+    fn save_state(&mut self) -> Option<Vec<u8>> {
+        // The shuffle mutates `order` in place, so resuming the stream
+        // bit-identically needs both the RNG position and the current
+        // permutation the next shuffle will start from.
+        let mut out = Vec::new();
+        for w in self.rng.state() {
+            crate::util::ser::put_u64(&mut out, w);
+        }
+        crate::util::ser::put_usize_slice(&mut out, &self.order);
+        Some(out)
+    }
+
+    fn restore_state(&mut self, bytes: &[u8]) -> Result<(), String> {
+        let n = self.order.len();
+        let mut r = crate::util::ser::ByteReader::new(bytes);
+        let parse = (|| {
+            let s = [r.u64()?, r.u64()?, r.u64()?, r.u64()?];
+            let order = r.usize_slice(n)?;
+            r.finish()?;
+            Ok::<_, crate::util::ser::WireError>((s, order))
+        })();
+        let (s, order) =
+            parse.map_err(|e| format!("rr state: {e}"))?;
+        if !is_permutation_of(&order, n) {
+            return Err(format!(
+                "rr state order is not a permutation of 0..{n}"
+            ));
+        }
+        self.rng = Rng::from_state(s);
+        self.order = order;
+        self.cached_epoch = None;
+        Ok(())
+    }
 }
 
 /// Shuffle Once — one random permutation reused every epoch.
@@ -256,6 +337,41 @@ impl OrderPolicy for FlipFlop {
         // Only the retained even-epoch shuffle is algorithm state (it
         // must be replayed reversed); `out` is a presentation cache.
         self.shuffled.len() * std::mem::size_of::<usize>()
+    }
+
+    fn save_state(&mut self) -> Option<Vec<u8>> {
+        // RNG position plus the retained even-epoch shuffle (an odd
+        // resume epoch replays it reversed; an even one reshuffles it).
+        let mut out = Vec::new();
+        for w in self.rng.state() {
+            crate::util::ser::put_u64(&mut out, w);
+        }
+        crate::util::ser::put_usize_slice(&mut out, &self.shuffled);
+        Some(out)
+    }
+
+    fn restore_state(&mut self, bytes: &[u8]) -> Result<(), String> {
+        let mut r = crate::util::ser::ByteReader::new(bytes);
+        let parse = (|| {
+            let s = [r.u64()?, r.u64()?, r.u64()?, r.u64()?];
+            let shuffled = r.usize_slice(self.n)?;
+            r.finish()?;
+            Ok::<_, crate::util::ser::WireError>((s, shuffled))
+        })();
+        let (s, shuffled) =
+            parse.map_err(|e| format!("flipflop state: {e}"))?;
+        if !shuffled.is_empty() && !is_permutation_of(&shuffled, self.n)
+        {
+            return Err(format!(
+                "flipflop shuffle is not a permutation of 0..{}",
+                self.n
+            ));
+        }
+        self.rng = Rng::from_state(s);
+        self.shuffled = shuffled;
+        self.out.clear();
+        self.cached_epoch = None;
+        Ok(())
     }
 }
 
@@ -356,6 +472,62 @@ impl OrderPolicy for OneStepGraB {
 
     fn wants_grads(&self) -> bool {
         self.frozen.is_none()
+    }
+
+    fn save_state(&mut self) -> Option<Vec<u8>> {
+        let mut out = Vec::new();
+        match &self.frozen {
+            Some(order) => {
+                crate::util::ser::put_u32(&mut out, 1);
+                crate::util::ser::put_usize_slice(&mut out, order);
+            }
+            None => {
+                crate::util::ser::put_u32(&mut out, 0);
+                out.extend_from_slice(&self.inner.save_state()?);
+            }
+        }
+        Some(out)
+    }
+
+    fn restore_state(&mut self, bytes: &[u8]) -> Result<(), String> {
+        let mut r = crate::util::ser::ByteReader::new(bytes);
+        let tag =
+            r.u32().map_err(|e| format!("grab-1step state: {e}"))?;
+        match tag {
+            1 => {
+                let order = (|| {
+                    let o = r.usize_slice(usize::MAX)?;
+                    r.finish()?;
+                    Ok::<_, crate::util::ser::WireError>(o)
+                })()
+                .map_err(|e| format!("grab-1step state: {e}"))?;
+                let n = self.inner.epoch_order(0).len();
+                if !is_permutation_of(&order, n) {
+                    return Err(format!(
+                        "grab-1step frozen order is not a permutation \
+                         of 0..{n}"
+                    ));
+                }
+                self.frozen = Some(order);
+                Ok(())
+            }
+            0 => self.inner.restore_state(r.rest()),
+            t => Err(format!("grab-1step state: unknown tag {t}")),
+        }
+    }
+
+    fn restore_order(&mut self, order: &[usize]) -> bool {
+        match &mut self.frozen {
+            Some(frozen) => {
+                if !is_permutation_of(order, frozen.len()) {
+                    return false;
+                }
+                frozen.clear();
+                frozen.extend_from_slice(order);
+                true
+            }
+            None => self.inner.restore_order(order),
+        }
     }
 }
 

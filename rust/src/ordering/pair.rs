@@ -245,6 +245,53 @@ impl OrderPolicy for PairBalance {
     fn wants_grads(&self) -> bool {
         true
     }
+
+    fn save_state(&mut self) -> Option<Vec<u8>> {
+        // Epoch-boundary state is just the order to follow next: the
+        // running sum, fill pointers, and pending row are all reset by
+        // `epoch_end`, so `current` alone resumes the stream exactly.
+        let mut out = Vec::new();
+        crate::util::ser::put_u64(&mut out, self.n as u64);
+        crate::util::ser::put_u64(&mut out, self.d as u64);
+        crate::util::ser::put_usize_slice(&mut out, &self.current);
+        Some(out)
+    }
+
+    fn restore_state(&mut self, bytes: &[u8]) -> Result<(), String> {
+        let mut r = crate::util::ser::ByteReader::new(bytes);
+        let parse = (|| {
+            let n = r.u64()? as usize;
+            let d = r.u64()? as usize;
+            let current = r.usize_slice(self.n)?;
+            r.finish()?;
+            Ok::<_, crate::util::ser::WireError>((n, d, current))
+        })();
+        let (n, d, current) =
+            parse.map_err(|e| format!("pair state: {e}"))?;
+        if n != self.n || d != self.d {
+            return Err(format!(
+                "pair state shape mismatch: snapshot {n}x{d}, \
+                 policy {}x{}",
+                self.n, self.d
+            ));
+        }
+        if !self.restore_order(&current) {
+            return Err(format!(
+                "pair state order is not a permutation of 0..{}",
+                self.n
+            ));
+        }
+        Ok(())
+    }
+
+    fn restore_order(&mut self, order: &[usize]) -> bool {
+        if !crate::ordering::is_permutation_of(order, self.n) {
+            return false;
+        }
+        self.current.clear();
+        self.current.extend_from_slice(order);
+        true
+    }
 }
 
 #[cfg(test)]

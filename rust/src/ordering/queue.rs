@@ -102,6 +102,10 @@ pub enum ShardMsg {
     /// Epoch boundary: finalize the shard's next local order and report
     /// it back on the worker's report channel.
     EpochEnd,
+    /// Checkpoint resume: overwrite the balancer's next local order with
+    /// a restored permutation (only sent between epochs, before any
+    /// block of the next epoch).
+    Seed(Vec<usize>),
     /// Test-only: make the worker panic, to exercise panic propagation.
     #[cfg(test)]
     Poison,
@@ -206,6 +210,13 @@ impl BlockSender {
     /// Signal the epoch boundary. Returns `false` if the worker is gone.
     pub fn end_epoch(&self) -> bool {
         self.msgs.send(ShardMsg::EpochEnd).is_ok()
+    }
+
+    /// Re-seed the worker balancer's next local order from a checkpoint
+    /// (must only be sent between epochs). Returns `false` if the
+    /// worker is gone.
+    pub fn seed(&self, order: Vec<usize>) -> bool {
+        self.msgs.send(ShardMsg::Seed(order)).is_ok()
     }
 
     /// Times `acquire` had to wait for the worker (queue-full events).

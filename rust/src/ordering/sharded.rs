@@ -1064,6 +1064,44 @@ impl ShardedOrder {
         }
     }
 
+    /// Seed every shard balancer's next local order (checkpoint
+    /// resume, between epochs): inline balancers adopt the order
+    /// directly, transported ones are seeded through their link (a
+    /// `Seed` queue message or TCP frame). Returns `false` if any
+    /// shard refuses (wrong length, dead link, or a transport without
+    /// seeding support).
+    fn seed_locals(&mut self, locals: &[Vec<usize>]) -> bool {
+        if locals.len() != self.topology.num_shards() {
+            return false;
+        }
+        match &mut self.backend {
+            Backend::Strided(shards)
+            | Backend::Gathered { shards, .. } => {
+                for (s, l) in shards.iter_mut().zip(locals) {
+                    if !s.restore_order(l) {
+                        return false;
+                    }
+                }
+            }
+            Backend::Async(shards) => {
+                for (w, l) in locals.iter().enumerate() {
+                    if !crate::ordering::is_permutation_of(
+                        l,
+                        self.topology.sizes[w],
+                    ) {
+                        return false;
+                    }
+                    if !shards.links[w].seed_order(l) {
+                        return false;
+                    }
+                    shards.local_orders[w] = l.clone();
+                }
+            }
+        }
+        self.dirty = true;
+        true
+    }
+
     /// Test-only: make shard `w`'s worker panic on its next dequeue
     /// (async backend only), to exercise boundary panic propagation.
     #[cfg(test)]
@@ -1073,6 +1111,22 @@ impl ShardedOrder {
             _ => panic!("poison_shard needs the async backend"),
         }
     }
+}
+
+/// Append a length-prefixed `u64` vector (topology weights).
+fn put_u64_vec(out: &mut Vec<u8>, v: &[u64]) {
+    crate::util::ser::put_u64(out, v.len() as u64);
+    for &x in v {
+        crate::util::ser::put_u64(out, x);
+    }
+}
+
+fn read_u64_vec(
+    r: &mut crate::util::ser::ByteReader,
+    max: usize,
+) -> Result<Vec<u64>, crate::util::ser::WireError> {
+    let n = r.len(max)?;
+    (0..n).map(|_| r.u64()).collect()
 }
 
 impl OrderPolicy for ShardedOrder {
@@ -1221,6 +1275,211 @@ impl OrderPolicy for ShardedOrder {
 
     fn topology_log(&self) -> Option<&[Topology]> {
         Some(ShardedOrder::topology_log(self))
+    }
+
+    fn save_state(&mut self) -> Option<Vec<u8>> {
+        // Epoch-boundary coordinator state: the current plan, the full
+        // per-epoch topology log (replay input, contract 6), the
+        // elastic schedule position, and each shard's next local order.
+        // Sizes/bases are recomputed from (n, weights) on restore —
+        // `Topology::plan` is pure — so only weights are serialized.
+        // The measured elastic planner's EWMA is deliberately not
+        // carried: its inputs are wall-clock costs, which no resumed
+        // process could reproduce anyway (contract-8 equivalence is
+        // over static and scheduled topologies).
+        let mut out = Vec::new();
+        crate::util::ser::put_u64(&mut out, self.n as u64);
+        crate::util::ser::put_u64(&mut out, self.d as u64);
+        crate::util::ser::put_u64(&mut out, self.topology.generation);
+        put_u64_vec(&mut out, &self.topology.weights);
+        crate::util::ser::put_u64(&mut out, self.log.len() as u64);
+        for t in &self.log {
+            crate::util::ser::put_u64(&mut out, t.generation);
+            put_u64_vec(&mut out, &t.weights);
+        }
+        let boundaries = self
+            .elastic
+            .as_ref()
+            .map(|el| el.boundaries as u64)
+            .unwrap_or(0);
+        crate::util::ser::put_u64(&mut out, boundaries);
+        let num_shards = self.topology.num_shards();
+        crate::util::ser::put_u64(&mut out, num_shards as u64);
+        match &mut self.backend {
+            Backend::Strided(shards)
+            | Backend::Gathered { shards, .. } => {
+                for s in shards.iter_mut() {
+                    crate::util::ser::put_usize_slice(
+                        &mut out,
+                        s.epoch_order(0),
+                    );
+                }
+            }
+            Backend::Async(shards) => {
+                for o in &shards.local_orders {
+                    crate::util::ser::put_usize_slice(&mut out, o);
+                }
+            }
+        }
+        Some(out)
+    }
+
+    fn restore_state(&mut self, bytes: &[u8]) -> Result<(), String> {
+        const MAX_SHARDS: usize = 1 << 16;
+        const MAX_EPOCHS: usize = 1 << 20;
+        let mut r = crate::util::ser::ByteReader::new(bytes);
+        let parse = (|| {
+            let n = r.u64()? as usize;
+            let d = r.u64()? as usize;
+            let generation = r.u64()?;
+            let weights = read_u64_vec(&mut r, MAX_SHARDS)?;
+            let log_len = r.len(MAX_EPOCHS)?;
+            let mut log = Vec::with_capacity(log_len);
+            for _ in 0..log_len {
+                let g = r.u64()?;
+                let w = read_u64_vec(&mut r, MAX_SHARDS)?;
+                log.push((g, w));
+            }
+            let boundaries = r.u64()? as usize;
+            let num_shards = r.len(MAX_SHARDS)?;
+            let mut locals = Vec::with_capacity(num_shards);
+            for _ in 0..num_shards {
+                locals.push(r.usize_slice(self.n)?);
+            }
+            r.finish()?;
+            Ok::<_, crate::util::ser::WireError>((
+                n, d, generation, weights, log, boundaries, locals,
+            ))
+        })();
+        let (n, d, generation, weights, log, boundaries, locals) =
+            parse.map_err(|e| format!("sharded state: {e}"))?;
+        if n != self.n || d != self.d {
+            return Err(format!(
+                "sharded state shape mismatch: snapshot n={n} d={d}, \
+                 policy n={} d={}",
+                self.n, self.d
+            ));
+        }
+        if weights.is_empty() || weights.iter().all(|&w| w == 0) {
+            return Err("sharded state has no usable weights".into());
+        }
+        let expected = Topology::plan(n, generation, &weights);
+        if locals.len() != expected.num_shards() {
+            return Err(format!(
+                "sharded state has {} local orders for {} shards",
+                locals.len(),
+                expected.num_shards()
+            ));
+        }
+        for (w, l) in locals.iter().enumerate() {
+            if !crate::ordering::is_permutation_of(
+                l,
+                expected.sizes[w],
+            ) {
+                return Err(format!(
+                    "shard {w} local order is not a permutation of \
+                     0..{}",
+                    expected.sizes[w]
+                ));
+            }
+        }
+        // Reconcile the live links with the snapshot's plan. A static
+        // coordinator must already match (same config ⇒ same plan); an
+        // elastic one re-links at the recorded sizes and generation —
+        // the same re-handshake a mid-run re-plan performs.
+        if expected.sizes != self.topology.sizes
+            || expected.generation != self.topology.generation
+        {
+            let Some(el) = self.elastic.as_mut() else {
+                return Err(format!(
+                    "sharded state plan (sizes {:?}, generation {}) \
+                     does not match the static topology (sizes {:?})",
+                    expected.sizes,
+                    expected.generation,
+                    self.topology.sizes
+                ));
+            };
+            let Backend::Async(shards) = &mut self.backend else {
+                unreachable!("elastic coordinators are transported");
+            };
+            let links = (el.relink)(
+                &expected.sizes,
+                expected.generation,
+            )
+            .map_err(|e| {
+                format!(
+                    "sharded state re-link at generation {} failed: {e}",
+                    expected.generation
+                )
+            })?;
+            let transport = shards.transport;
+            // Retire the old links' counters, exactly as a mid-run
+            // re-plan does, so transport stats stay cumulative.
+            self.retired_stats =
+                self.retired_stats.merged(shards.stats().total());
+            *shards = AsyncShards::new(
+                links,
+                &expected.sizes,
+                self.d,
+                transport,
+                true,
+            );
+            self.cursors = vec![0; expected.sizes.len()];
+        }
+        if let Some(el) = self.elastic.as_mut() {
+            el.boundaries = boundaries;
+            // A fresh measured planner must track the restored shard
+            // count; its EWMA history is wall-clock and not replayable.
+            if let WeightSource::Measured(p) = &mut el.source {
+                *p = ElasticPlanner::new(expected.num_shards());
+            }
+        }
+        self.topology = expected;
+        self.log = log
+            .into_iter()
+            .map(|(g, w)| Topology::plan(self.n, g, &w))
+            .collect();
+        if !self.seed_locals(&locals) {
+            return Err(
+                "shard links refused the restored local orders \
+                 (dead link or transport without seed support)"
+                    .into(),
+            );
+        }
+        self.observed = 0;
+        Ok(())
+    }
+
+    fn restore_order(&mut self, order: &[usize]) -> bool {
+        // De-merge a global order back into per-shard locals by
+        // replaying the round-robin pattern the merge used — a pure
+        // function of the current plan's sizes. Any global id that
+        // lands outside its round's shard range means the order was
+        // not produced by this topology.
+        if !crate::ordering::is_permutation_of(order, self.n) {
+            return false;
+        }
+        let sizes = self.topology.sizes.clone();
+        let bases = self.topology.bases.clone();
+        let mut locals: Vec<Vec<usize>> =
+            sizes.iter().map(|&s| Vec::with_capacity(s)).collect();
+        let mut taken = vec![0usize; sizes.len()];
+        let mut pos = 0;
+        while pos < self.n {
+            for w in 0..sizes.len() {
+                if taken[w] < sizes[w] {
+                    let g = order[pos];
+                    let local = match g.checked_sub(bases[w]) {
+                        Some(l) if l < sizes[w] => l,
+                        _ => return false,
+                    };
+                    locals[w].push(local);
+                    taken[w] += 1;
+                    pos += 1;
+                }
+            }
+        }
+        self.seed_locals(&locals)
     }
 }
 

@@ -11,6 +11,7 @@
 //! | `Block`    | `u32 rows`, `u32 d`, then `rows × d` f32 bit patterns |
 //! | `EpochEnd` | empty |
 //! | `Report`   | `u32 len`, `u64 state_bytes`, then `len` `u32` unit ids |
+//! | `Seed`     | `u32 len`, then `len` `u32` unit ids (checkpoint resume) |
 //!
 //! Floats travel as raw IEEE-754 bit patterns (`f32::to_bits`), so
 //! NaN payloads, signed zeros, infinities, and subnormals round-trip
@@ -203,6 +204,70 @@ pub fn decode_report(
     Ok((order, state_bytes))
 }
 
+/// Encode a checkpoint-resume seed payload: the shard's restored next
+/// local order (`order` entries must fit u32).
+pub fn encode_seed(order: &[usize], out: &mut Vec<u8>) {
+    assert!(
+        order.len() <= u32::MAX as usize,
+        "order length over wire limit"
+    );
+    out.clear();
+    out.reserve(4 + order.len() * 4);
+    out.extend_from_slice(&(order.len() as u32).to_le_bytes());
+    for &unit in order {
+        debug_assert!(unit <= u32::MAX as usize);
+        out.extend_from_slice(&(unit as u32).to_le_bytes());
+    }
+}
+
+/// Decode a seed payload, validating it as a **permutation** of the
+/// shard's `0..local_n` units — same discipline as [`decode_report`]: a
+/// malformed resume seed must produce a typed error, never silently
+/// corrupt the worker balancer's order.
+pub fn decode_seed(
+    payload: &[u8],
+    local_n: usize,
+) -> Result<Vec<usize>, WireError> {
+    if payload.len() < 4 {
+        return Err(WireError::Malformed(format!(
+            "seed payload is {} bytes, header needs 4",
+            payload.len()
+        )));
+    }
+    let len = u32::from_le_bytes(payload[0..4].try_into().unwrap()) as usize;
+    if len != local_n {
+        return Err(WireError::Malformed(format!(
+            "seed carries {len} units, shard owns {local_n}"
+        )));
+    }
+    if payload.len() != 4 + len * 4 {
+        return Err(WireError::Malformed(format!(
+            "seed declares {len} units ({} bytes) but payload carries {}",
+            4 + len * 4,
+            payload.len()
+        )));
+    }
+    let mut order = Vec::with_capacity(len);
+    let mut seen = vec![false; local_n];
+    for chunk in payload[4..].chunks_exact(4) {
+        let unit = u32::from_le_bytes(chunk.try_into().unwrap()) as usize;
+        if unit >= local_n {
+            return Err(WireError::Malformed(format!(
+                "seed unit id {unit} out of range for shard of {local_n}"
+            )));
+        }
+        if seen[unit] {
+            return Err(WireError::Malformed(format!(
+                "seed repeats unit id {unit}: not a permutation of \
+                 0..{local_n}"
+            )));
+        }
+        seen[unit] = true;
+        order.push(unit);
+    }
+    Ok(order)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -300,6 +365,41 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn seed_roundtrip_and_rejects_non_permutations() {
+        prop::forall("wire seed roundtrip", 32, |rng| {
+            let n = 1 + rng.gen_range(200) as usize;
+            let order = rng.permutation(n);
+            let mut payload = Vec::new();
+            encode_seed(&order, &mut payload);
+            let got = decode_seed(&payload, n).map_err(|e| e.to_string())?;
+            if got != order {
+                return Err("seed changed in transit".into());
+            }
+            Ok(())
+        });
+        let order = vec![2usize, 0, 1];
+        let mut payload = Vec::new();
+        encode_seed(&order, &mut payload);
+        // Wrong shard size, truncation, out-of-range, duplicate.
+        assert!(decode_seed(&payload, 4).is_err());
+        assert!(decode_seed(&payload[..payload.len() - 2], 3).is_err());
+        assert!(decode_seed(&payload[..2], 3).is_err());
+        let last = payload.len() - 4;
+        let mut bad = payload.clone();
+        bad[last..].copy_from_slice(&99u32.to_le_bytes());
+        assert!(matches!(
+            decode_seed(&bad, 3),
+            Err(WireError::Malformed(_))
+        ));
+        let mut bad = payload.clone();
+        bad[last..].copy_from_slice(&2u32.to_le_bytes());
+        assert!(matches!(
+            decode_seed(&bad, 3),
+            Err(WireError::Malformed(_))
+        ));
     }
 
     #[test]

@@ -201,6 +201,15 @@ impl ShardTransport for FaultTransport {
         self.inner.as_ref().map(|i| i.buffer_bytes()).unwrap_or(0)
     }
 
+    fn seed_order(&mut self, order: &[usize]) -> bool {
+        // Seeding happens between epochs, outside the fault window the
+        // plan models (block sends), so it is forwarded unperturbed.
+        match self.inner.as_mut() {
+            Some(inner) => inner.seed_order(order),
+            None => false,
+        }
+    }
+
     #[cfg(test)]
     fn poison(&mut self) {
         if let Some(inner) = self.inner.as_mut() {

@@ -210,6 +210,16 @@ pub trait ShardTransport: Send {
         0
     }
 
+    /// Checkpoint resume: overwrite the shard balancer's next local
+    /// order with a restored permutation of its `0..local_n` units.
+    /// Only legal between epochs (before any block of the next epoch);
+    /// the per-link message ordering guarantee makes the seed land
+    /// before subsequent blocks. Returns `false` if the peer is gone or
+    /// the transport cannot seed. Default: unsupported.
+    fn seed_order(&mut self, _order: &[usize]) -> bool {
+        false
+    }
+
     /// Test hook: make the peer fail on its next dequeue. Default: no-op
     /// (transports without an injectable failure mode).
     #[cfg(test)]
@@ -387,6 +397,13 @@ impl ShardTransport for ChannelTransport {
         self.queue.as_ref().map(|q| q.pool_bytes()).unwrap_or(0)
     }
 
+    fn seed_order(&mut self, order: &[usize]) -> bool {
+        match &self.queue {
+            Some(q) => q.seed(order.to_vec()),
+            None => false,
+        }
+    }
+
     #[cfg(test)]
     fn poison(&mut self) {
         if let Some(q) = &self.queue {
@@ -445,6 +462,21 @@ fn channel_worker_loop(
                 if reports.send(report).is_err() {
                     return; // coordinator gone
                 }
+            }
+            ShardMsg::Seed(order) => {
+                // Checkpoint resume: only legal between epochs. A
+                // mid-epoch seed is a coordinator bug, caught like the
+                // other budget violations.
+                assert!(
+                    cursor == 0,
+                    "shard worker seeded mid-epoch at row {cursor}"
+                );
+                assert!(
+                    balancer.restore_order(&order),
+                    "seed order is not a permutation of the shard's \
+                     {} local units",
+                    balancer.len()
+                );
             }
             #[cfg(test)]
             ShardMsg::Poison => panic!("poisoned shard worker"),

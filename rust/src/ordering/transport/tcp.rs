@@ -37,8 +37,8 @@ use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::time::Duration;
 
 use super::codec::{
-    decode_block, decode_hello, decode_report, encode_block,
-    encode_hello, encode_report, Hello,
+    decode_block, decode_hello, decode_report, decode_seed,
+    encode_block, encode_hello, encode_report, encode_seed, Hello,
 };
 use super::{EpochReport, LinkStats, ShardTransport, TransportError};
 use crate::ordering::queue::ScratchBlock;
@@ -254,6 +254,26 @@ impl ShardTransport for TcpTransport {
             + self.frame_buf.capacity()
             + self.read_buf.capacity()
     }
+
+    fn seed_order(&mut self, order: &[usize]) -> bool {
+        if self.dead.is_some() || order.len() != self.local_n {
+            return false;
+        }
+        let mut payload = std::mem::take(&mut self.payload_buf);
+        encode_seed(order, &mut payload);
+        let ok = match self.write(FrameKind::Seed, &payload) {
+            Ok(()) => true,
+            Err(e) => {
+                self.dead = Some(format!("seed send failed: {e}"));
+                false
+            }
+        };
+        self.payload_buf = payload;
+        // No reply frame: TCP preserves per-link order, so the seed is
+        // guaranteed to be applied before any block that follows it —
+        // the same argument that makes Block ordering sound.
+        ok
+    }
 }
 
 /// Open one TCP link per entry of `sizes` against the same worker
@@ -403,6 +423,25 @@ pub fn serve_connection(
                     &report_payload,
                     &mut scratch,
                 )?;
+            }
+            Ok(FrameKind::Seed) => {
+                // Checkpoint resume: overwrite the balancer's next
+                // local order. Only legal between epochs — a mid-epoch
+                // seed is a protocol violation, answered with a typed
+                // error like every other invalid wire input.
+                if cursor != 0 {
+                    return Err(TransportError::Wire(
+                        WireError::Malformed(format!(
+                            "seed frame mid-epoch after {cursor} of \
+                             {local_n} rows"
+                        )),
+                    ));
+                }
+                let order =
+                    decode_seed(&buf[FRAME_HEADER_LEN..], local_n)?;
+                // decode_seed validated the permutation; a false here
+                // would mean the balancer disagrees on local_n.
+                assert!(balancer.restore_order(&order));
             }
             Ok(other) => {
                 return Err(TransportError::Wire(WireError::Malformed(

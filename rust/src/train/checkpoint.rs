@@ -1,33 +1,180 @@
-//! Checkpointing: binary snapshots of a run (params, momentum, epoch,
-//! ordering permutation) with integrity checksums, so long paper-scale
-//! runs can resume after interruption.
+//! Durable run state: versioned on-disk run directories that a killed
+//! training process can resume from **bit-identically** (determinism
+//! contract 8 in `docs/determinism.md`).
 //!
-//! Format (little-endian):
+//! A run directory holds a JSON manifest plus per-epoch binary
+//! snapshots, written atomically (temp file + rename) and retained to
+//! the last `keep_last`:
+//!
+//! ```text
+//! <dir>/MANIFEST.json        schema version, config fingerprint,
+//!                            run id, policy, kernel tier, git rev
+//! <dir>/epoch-000007.ckpt    snapshot taken after epoch 7
+//! ```
+//!
+//! Snapshot format (little-endian):
 //! ```text
 //! magic "GRABCKPT" | u32 version | u32 crc32(payload) | payload
-//! payload: u64 epoch | u64 d | f32[d] params | f32[d] velocity
-//!        | u64 n | u64[n] order
+//! v1 payload: u64 epoch | u64 d | f32[d] params | f32[d] velocity
+//!           | u64 n | u64[n] order
+//! v2 payload: u64 epoch
+//!           | u64 d | f32[d] params | u64 d | f32[d] velocity
+//!           | u32 sched_tag (1 ⇒ f64 lr | f64 best | u64 bad_epochs)
+//!           | u64 n | u64[n] order
+//!           | u32 policy_tag (1 ⇒ u64 len | opaque policy bytes from
+//!             [`crate::ordering::OrderPolicy::save_state`])
 //! ```
+//!
+//! v2 carries everything the replay contracts need beyond the model:
+//! the LR scheduler's plateau counters and the ordering policy's
+//! epoch-boundary state (GraB's stale mean, the balancer RNG stream,
+//! CD-GraB's per-shard local orders and topology log). v1 files still
+//! load — their extra fields come back as `None` and a resume falls
+//! back to seeding the policy with the recorded permutation only.
+//!
+//! Every failure is a typed [`CheckpointError`]; a corrupt, truncated,
+//! or future-versioned file can never panic or silently resume wrong.
 
+use std::fmt;
 use std::io::{Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use crate::util::ser::{self, ByteReader, Json, WireError};
 
 const MAGIC: &[u8; 8] = b"GRABCKPT";
-const VERSION: u32 = 1;
 
-/// One resumable snapshot.
-#[derive(Clone, Debug, PartialEq)]
-pub struct Checkpoint {
-    /// Epoch the snapshot was taken after.
-    pub epoch: u64,
-    /// Model parameters (flattened, layout per the artifact manifest).
-    pub params: Vec<f32>,
-    /// Optimizer momentum buffer, same layout as `params`.
-    pub velocity: Vec<f32>,
-    /// The ordering policy's next epoch permutation.
-    pub order: Vec<u64>,
+/// Highest snapshot format this build writes and reads.
+pub const SNAPSHOT_VERSION: u32 = 2;
+
+/// Highest manifest schema this build understands.
+pub const MANIFEST_VERSION: u32 = 1;
+
+/// Manifest file name inside a run directory.
+pub const MANIFEST_FILE: &str = "MANIFEST.json";
+
+/// Default retention: snapshots kept per run directory.
+pub const DEFAULT_KEEP_LAST: usize = 3;
+
+/// Typed checkpoint failure — the negative-path contract: every bad
+/// input (torn write, byte flip, wrong directory, version from a newer
+/// build, config drift, pruned epoch) maps to a variant here, never a
+/// panic and never a silently-wrong resume.
+#[derive(Debug)]
+pub enum CheckpointError {
+    /// Filesystem failure (open/create/rename/read/write).
+    Io(std::io::Error),
+    /// The path is not a grab checkpoint (bad magic / no manifest).
+    NotACheckpoint(PathBuf),
+    /// File written by a newer build than this one can read.
+    VersionFromTheFuture {
+        /// Version found in the file.
+        found: u32,
+        /// Highest version this build supports.
+        supported: u32,
+    },
+    /// Stored CRC does not match the payload (corruption/byte flip).
+    BadChecksum(PathBuf),
+    /// File ended before the declared payload did.
+    Truncated(PathBuf),
+    /// Payload parsed but left unconsumed trailing bytes.
+    TrailingBytes(PathBuf),
+    /// Payload contents inconsistent with the declared schema.
+    Malformed(String),
+    /// Manifest fingerprint differs from the resuming config's.
+    FingerprintMismatch {
+        /// Fingerprint recorded in the manifest.
+        manifest: u32,
+        /// Fingerprint of the config trying to resume.
+        config: u32,
+    },
+    /// The requested epoch snapshot is absent from the directory
+    /// (outside the retention window, or never written).
+    MissingEpoch {
+        /// The epoch asked for.
+        epoch: u64,
+        /// The run directory searched.
+        dir: PathBuf,
+    },
+    /// The ordering policy rejected its saved state on restore.
+    PolicyState(String),
+}
+
+impl fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CheckpointError::Io(e) => write!(f, "checkpoint io: {e}"),
+            CheckpointError::NotACheckpoint(p) => {
+                write!(f, "{} is not a grab checkpoint", p.display())
+            }
+            CheckpointError::VersionFromTheFuture {
+                found,
+                supported,
+            } => write!(
+                f,
+                "checkpoint version {found} is from the future \
+                 (this build reads up to {supported})"
+            ),
+            CheckpointError::BadChecksum(p) => write!(
+                f,
+                "checkpoint {} failed CRC check (corrupt/truncated)",
+                p.display()
+            ),
+            CheckpointError::Truncated(p) => {
+                write!(f, "checkpoint {} is truncated", p.display())
+            }
+            CheckpointError::TrailingBytes(p) => write!(
+                f,
+                "trailing bytes in checkpoint {}",
+                p.display()
+            ),
+            CheckpointError::Malformed(why) => {
+                write!(f, "malformed checkpoint: {why}")
+            }
+            CheckpointError::FingerprintMismatch {
+                manifest,
+                config,
+            } => write!(
+                f,
+                "config fingerprint {config:#010x} does not match the \
+                 run directory's {manifest:#010x} — the resuming \
+                 config differs from the one that wrote it"
+            ),
+            CheckpointError::MissingEpoch { epoch, dir } => write!(
+                f,
+                "no snapshot for epoch {epoch} in {} (outside the \
+                 retention window?)",
+                dir.display()
+            ),
+            CheckpointError::PolicyState(why) => {
+                write!(f, "policy state restore failed: {why}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CheckpointError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CheckpointError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for CheckpointError {
+    fn from(e: std::io::Error) -> CheckpointError {
+        CheckpointError::Io(e)
+    }
+}
+
+/// Map a payload-parse [`WireError`] onto the checkpoint error space.
+fn wire_err(e: WireError, path: &Path) -> CheckpointError {
+    match e {
+        WireError::Truncated { .. } => {
+            CheckpointError::Truncated(path.to_path_buf())
+        }
+        other => CheckpointError::Malformed(other.to_string()),
+    }
 }
 
 /// CRC-32 (IEEE 802.3, reflected) — implemented in-tree; the vendored dep
@@ -52,100 +199,472 @@ pub fn crc32(data: &[u8]) -> u32 {
     crc ^ 0xFFFF_FFFF
 }
 
+/// Write `bytes` to `path` atomically: temp file in the same directory,
+/// `sync_all`, then rename — a crash mid-write never corrupts the
+/// previous contents of `path`.
+fn write_atomic(path: &Path, bytes: &[u8]) -> Result<(), CheckpointError> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// One resumable snapshot.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    /// Epoch the snapshot was taken after.
+    pub epoch: u64,
+    /// Model parameters (flattened, layout per the artifact manifest).
+    pub params: Vec<f32>,
+    /// Optimizer momentum buffer, same layout as `params`.
+    pub velocity: Vec<f32>,
+    /// The ordering policy's next epoch permutation.
+    pub order: Vec<u64>,
+    /// LR-scheduler state `(lr, best_loss, bad_epochs)`; `None` in v1
+    /// files (resume keeps the freshly-constructed scheduler).
+    pub sched: Option<(f64, f64, u64)>,
+    /// Opaque epoch-boundary policy state from
+    /// [`crate::ordering::OrderPolicy::save_state`]; `None` in v1
+    /// files or for policies whose state is derivable from config.
+    pub policy_state: Option<Vec<u8>>,
+}
+
 impl Checkpoint {
-    /// Serialize atomically to `path` (temp file + rename).
-    pub fn save(&self, path: &Path) -> Result<()> {
-        anyhow::ensure!(self.params.len() == self.velocity.len(),
-                        "params/velocity length mismatch");
+    /// Serialize (format v2) atomically to `path`.
+    pub fn save(&self, path: &Path) -> Result<(), CheckpointError> {
+        if self.params.len() != self.velocity.len() {
+            return Err(CheckpointError::Malformed(format!(
+                "params/velocity length mismatch: {} vs {}",
+                self.params.len(),
+                self.velocity.len()
+            )));
+        }
         let mut payload = Vec::with_capacity(
-            16 + self.params.len() * 8 + self.order.len() * 8);
-        payload.extend_from_slice(&self.epoch.to_le_bytes());
-        payload.extend_from_slice(
-            &(self.params.len() as u64).to_le_bytes());
-        for v in &self.params {
-            payload.extend_from_slice(&v.to_le_bytes());
+            64 + self.params.len() * 8 + self.order.len() * 8
+                + self.policy_state.as_ref().map_or(0, |b| b.len()),
+        );
+        ser::put_u64(&mut payload, self.epoch);
+        ser::put_f32_slice(&mut payload, &self.params);
+        ser::put_f32_slice(&mut payload, &self.velocity);
+        match self.sched {
+            Some((lr, best, bad)) => {
+                ser::put_u32(&mut payload, 1);
+                ser::put_f64(&mut payload, lr);
+                ser::put_f64(&mut payload, best);
+                ser::put_u64(&mut payload, bad);
+            }
+            None => ser::put_u32(&mut payload, 0),
         }
-        for v in &self.velocity {
-            payload.extend_from_slice(&v.to_le_bytes());
+        ser::put_u64(&mut payload, self.order.len() as u64);
+        for &v in &self.order {
+            ser::put_u64(&mut payload, v);
         }
-        payload.extend_from_slice(
-            &(self.order.len() as u64).to_le_bytes());
-        for v in &self.order {
-            payload.extend_from_slice(&v.to_le_bytes());
+        match &self.policy_state {
+            Some(bytes) => {
+                ser::put_u32(&mut payload, 1);
+                ser::put_u64(&mut payload, bytes.len() as u64);
+                payload.extend_from_slice(bytes);
+            }
+            None => ser::put_u32(&mut payload, 0),
         }
 
-        if let Some(dir) = path.parent() {
-            std::fs::create_dir_all(dir)?;
-        }
-        // Write to a temp file then rename: a crash mid-write never
-        // corrupts the previous checkpoint.
-        let tmp = path.with_extension("tmp");
-        {
-            let mut f = std::fs::File::create(&tmp)
-                .with_context(|| format!("creating {}", tmp.display()))?;
-            f.write_all(MAGIC)?;
-            f.write_all(&VERSION.to_le_bytes())?;
-            f.write_all(&crc32(&payload).to_le_bytes())?;
-            f.write_all(&payload)?;
-            f.sync_all()?;
-        }
-        std::fs::rename(&tmp, path)?;
-        Ok(())
+        let mut file = Vec::with_capacity(16 + payload.len());
+        file.extend_from_slice(MAGIC);
+        file.extend_from_slice(&SNAPSHOT_VERSION.to_le_bytes());
+        file.extend_from_slice(&crc32(&payload).to_le_bytes());
+        file.extend_from_slice(&payload);
+        write_atomic(path, &file)
     }
 
     /// Read + verify (magic, version, CRC) a snapshot from `path`.
-    pub fn load(path: &Path) -> Result<Checkpoint> {
-        let mut f = std::fs::File::open(path)
-            .with_context(|| format!("opening {}", path.display()))?;
+    /// Accepts format v1 and v2; anything newer is
+    /// [`CheckpointError::VersionFromTheFuture`].
+    pub fn load(path: &Path) -> Result<Checkpoint, CheckpointError> {
+        let mut f = std::fs::File::open(path)?;
         let mut header = [0u8; 16];
-        f.read_exact(&mut header)?;
+        if let Err(e) = f.read_exact(&mut header) {
+            return Err(
+                if e.kind() == std::io::ErrorKind::UnexpectedEof {
+                    CheckpointError::Truncated(path.to_path_buf())
+                } else {
+                    CheckpointError::Io(e)
+                },
+            );
+        }
         if &header[0..8] != MAGIC {
-            bail!("{} is not a grab checkpoint", path.display());
+            return Err(CheckpointError::NotACheckpoint(
+                path.to_path_buf(),
+            ));
         }
-        let version = u32::from_le_bytes(header[8..12].try_into()?);
-        if version != VERSION {
-            bail!("unsupported checkpoint version {version}");
+        let version =
+            u32::from_le_bytes(header[8..12].try_into().unwrap());
+        if version == 0 || version > SNAPSHOT_VERSION {
+            return Err(CheckpointError::VersionFromTheFuture {
+                found: version,
+                supported: SNAPSHOT_VERSION,
+            });
         }
-        let want_crc = u32::from_le_bytes(header[12..16].try_into()?);
+        let want_crc =
+            u32::from_le_bytes(header[12..16].try_into().unwrap());
         let mut payload = Vec::new();
         f.read_to_end(&mut payload)?;
         if crc32(&payload) != want_crc {
-            bail!("checkpoint {} failed CRC check (corrupt/truncated)",
-                  path.display());
+            return Err(CheckpointError::BadChecksum(
+                path.to_path_buf(),
+            ));
         }
-        let mut off = 0usize;
-        let mut take = |n: usize| -> Result<&[u8]> {
-            let s = payload
-                .get(off..off + n)
-                .ok_or_else(|| anyhow::anyhow!("truncated payload"))?;
-            off += n;
-            Ok(s)
-        };
-        let epoch = u64::from_le_bytes(take(8)?.try_into()?);
-        let d = u64::from_le_bytes(take(8)?.try_into()?) as usize;
+        let mut r = ByteReader::new(&payload);
+        let ckpt = if version == 1 {
+            Checkpoint::parse_v1(&mut r)
+        } else {
+            Checkpoint::parse_v2(&mut r)
+        }
+        .map_err(|e| wire_err(e, path))?;
+        if r.remaining() != 0 {
+            return Err(CheckpointError::TrailingBytes(
+                path.to_path_buf(),
+            ));
+        }
+        Ok(ckpt)
+    }
+
+    fn parse_v1(r: &mut ByteReader) -> Result<Checkpoint, WireError> {
+        let epoch = r.u64()?;
+        // v1 stored one shared dim prefix and raw (unprefixed) f32s.
+        let d = r.len(r.remaining() / 4)?;
         let mut params = Vec::with_capacity(d);
         for _ in 0..d {
-            params.push(f32::from_le_bytes(take(4)?.try_into()?));
+            let b = r.take(4)?;
+            params.push(f32::from_le_bytes(b.try_into().unwrap()));
         }
         let mut velocity = Vec::with_capacity(d);
         for _ in 0..d {
-            velocity.push(f32::from_le_bytes(take(4)?.try_into()?));
+            let b = r.take(4)?;
+            velocity.push(f32::from_le_bytes(b.try_into().unwrap()));
         }
-        let n = u64::from_le_bytes(take(8)?.try_into()?) as usize;
+        let n = r.len(r.remaining() / 8)?;
         let mut order = Vec::with_capacity(n);
         for _ in 0..n {
-            order.push(u64::from_le_bytes(take(8)?.try_into()?));
+            order.push(r.u64()?);
         }
-        if off != payload.len() {
-            bail!("trailing bytes in checkpoint");
+        Ok(Checkpoint {
+            epoch,
+            params,
+            velocity,
+            order,
+            sched: None,
+            policy_state: None,
+        })
+    }
+
+    fn parse_v2(r: &mut ByteReader) -> Result<Checkpoint, WireError> {
+        let epoch = r.u64()?;
+        let params = r.f32_slice(usize::MAX)?;
+        let velocity = r.f32_slice(usize::MAX)?;
+        let sched = match r.u32()? {
+            0 => None,
+            1 => Some((r.f64()?, r.f64()?, r.u64()?)),
+            t => {
+                return Err(WireError::Malformed(format!(
+                    "unknown scheduler tag {t}"
+                )))
+            }
+        };
+        let n = r.len(r.remaining() / 8)?;
+        let mut order = Vec::with_capacity(n);
+        for _ in 0..n {
+            order.push(r.u64()?);
         }
-        Ok(Checkpoint { epoch, params, velocity, order })
+        let policy_state = match r.u32()? {
+            0 => None,
+            1 => {
+                let len = r.len(r.remaining())?;
+                Some(r.take(len)?.to_vec())
+            }
+            t => {
+                return Err(WireError::Malformed(format!(
+                    "unknown policy-state tag {t}"
+                )))
+            }
+        };
+        Ok(Checkpoint {
+            epoch,
+            params,
+            velocity,
+            order,
+            sched,
+            policy_state,
+        })
+    }
+}
+
+/// The run directory's identity record: which config (by fingerprint)
+/// wrote it, under which policy/kernel tier, at which code revision.
+/// A resume refuses the directory unless the fingerprint matches.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Manifest {
+    /// Manifest schema version ([`MANIFEST_VERSION`] when written).
+    pub schema_version: u32,
+    /// [`crate::config::TrainConfig::fingerprint`] of the writing run.
+    pub fingerprint: u32,
+    /// Human-readable run identity (`TrainConfig::run_id`).
+    pub run_id: String,
+    /// Ordering policy name the run was launched with.
+    pub policy: String,
+    /// Balance-kernel tier name (informational — every tier is
+    /// bit-identical per contract 7, so resume does not gate on it).
+    pub kernel: String,
+    /// `git rev-parse --short HEAD` at write time (informational).
+    pub git_rev: String,
+    /// Snapshot cadence the run was launched with.
+    pub checkpoint_every: u64,
+}
+
+impl Manifest {
+    /// Serialize to the deterministic (key-sorted) JSON layout.
+    pub fn to_json(&self) -> Json {
+        ser::obj(vec![
+            (
+                "schema_version",
+                Json::Num(self.schema_version as f64),
+            ),
+            ("fingerprint", Json::Num(self.fingerprint as f64)),
+            ("run_id", Json::Str(self.run_id.clone())),
+            ("policy", Json::Str(self.policy.clone())),
+            ("kernel", Json::Str(self.kernel.clone())),
+            ("git_rev", Json::Str(self.git_rev.clone())),
+            (
+                "checkpoint_every",
+                Json::Num(self.checkpoint_every as f64),
+            ),
+        ])
+    }
+
+    /// Parse a manifest, refusing schemas from the future.
+    pub fn from_json(j: &Json) -> Result<Manifest, CheckpointError> {
+        let field = |k: &str| -> Result<&Json, CheckpointError> {
+            j.get(k).map_err(|e| {
+                CheckpointError::Malformed(format!("manifest: {e}"))
+            })
+        };
+        let num = |k: &str| -> Result<u64, CheckpointError> {
+            field(k)?.as_f64().map(|x| x as u64).map_err(|e| {
+                CheckpointError::Malformed(format!("manifest: {e}"))
+            })
+        };
+        let text = |k: &str| -> Result<String, CheckpointError> {
+            field(k)?.as_str().map(str::to_string).map_err(|e| {
+                CheckpointError::Malformed(format!("manifest: {e}"))
+            })
+        };
+        let schema_version = num("schema_version")? as u32;
+        if schema_version == 0 || schema_version > MANIFEST_VERSION {
+            return Err(CheckpointError::VersionFromTheFuture {
+                found: schema_version,
+                supported: MANIFEST_VERSION,
+            });
+        }
+        Ok(Manifest {
+            schema_version,
+            fingerprint: num("fingerprint")? as u32,
+            run_id: text("run_id")?,
+            policy: text("policy")?,
+            kernel: text("kernel")?,
+            git_rev: text("git_rev")?,
+            checkpoint_every: num("checkpoint_every")?,
+        })
+    }
+
+    /// Read a manifest file (missing file ⇒
+    /// [`CheckpointError::NotACheckpoint`] on the parent directory).
+    pub fn from_file(path: &Path) -> Result<Manifest, CheckpointError> {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                let dir = path
+                    .parent()
+                    .unwrap_or(Path::new("."))
+                    .to_path_buf();
+                return Err(CheckpointError::NotACheckpoint(dir));
+            }
+            Err(e) => return Err(CheckpointError::Io(e)),
+        };
+        let j = Json::parse(&text).map_err(|e| {
+            CheckpointError::Malformed(format!(
+                "manifest {}: {e}",
+                path.display()
+            ))
+        })?;
+        Manifest::from_json(&j)
+    }
+}
+
+/// `git rev-parse --short HEAD`, or `"unknown"` outside a work tree.
+fn git_rev() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// Build a manifest for a run about to start writing snapshots.
+pub fn manifest_for(
+    fingerprint: u32,
+    run_id: &str,
+    policy: &str,
+    kernel: &str,
+    checkpoint_every: u64,
+) -> Manifest {
+    Manifest {
+        schema_version: MANIFEST_VERSION,
+        fingerprint,
+        run_id: run_id.to_string(),
+        policy: policy.to_string(),
+        kernel: kernel.to_string(),
+        git_rev: git_rev(),
+        checkpoint_every,
+    }
+}
+
+/// A versioned on-disk run directory: manifest + per-epoch snapshots
+/// with retention. All writes are atomic; all reads are CRC-verified.
+pub struct RunDir {
+    dir: PathBuf,
+    /// The directory's identity record.
+    pub manifest: Manifest,
+}
+
+impl RunDir {
+    /// Create (or re-initialize) a run directory, writing the manifest.
+    pub fn create(
+        dir: &Path,
+        manifest: Manifest,
+    ) -> Result<RunDir, CheckpointError> {
+        std::fs::create_dir_all(dir)?;
+        write_atomic(
+            &dir.join(MANIFEST_FILE),
+            manifest.to_json().to_string().as_bytes(),
+        )?;
+        Ok(RunDir { dir: dir.to_path_buf(), manifest })
+    }
+
+    /// Open an existing run directory, reading + validating its
+    /// manifest (missing ⇒ [`CheckpointError::NotACheckpoint`]).
+    pub fn open(dir: &Path) -> Result<RunDir, CheckpointError> {
+        let manifest = Manifest::from_file(&dir.join(MANIFEST_FILE))?;
+        Ok(RunDir { dir: dir.to_path_buf(), manifest })
+    }
+
+    /// The directory path.
+    pub fn path(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Refuse to resume under a config whose fingerprint differs from
+    /// the manifest's.
+    pub fn check_fingerprint(
+        &self,
+        config: u32,
+    ) -> Result<(), CheckpointError> {
+        if self.manifest.fingerprint != config {
+            return Err(CheckpointError::FingerprintMismatch {
+                manifest: self.manifest.fingerprint,
+                config,
+            });
+        }
+        Ok(())
+    }
+
+    /// Snapshot path for `epoch` (`epoch-000007.ckpt`).
+    pub fn epoch_path(&self, epoch: u64) -> PathBuf {
+        self.dir.join(format!("epoch-{epoch:06}.ckpt"))
+    }
+
+    /// Epochs with a snapshot on disk, ascending.
+    pub fn epochs(&self) -> Result<Vec<u64>, CheckpointError> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(&self.dir)? {
+            let name = entry?.file_name();
+            let Some(name) = name.to_str() else { continue };
+            if let Some(e) = name
+                .strip_prefix("epoch-")
+                .and_then(|s| s.strip_suffix(".ckpt"))
+                .and_then(|s| s.parse::<u64>().ok())
+            {
+                out.push(e);
+            }
+        }
+        out.sort_unstable();
+        Ok(out)
+    }
+
+    /// The newest snapshotted epoch, if any.
+    pub fn latest_epoch(&self) -> Result<Option<u64>, CheckpointError> {
+        Ok(self.epochs()?.last().copied())
+    }
+
+    /// Write `ckpt` under its epoch name, then prune snapshots beyond
+    /// the newest `keep_last` (0 is treated as 1 — the snapshot just
+    /// written always survives its own retention pass).
+    pub fn save_epoch(
+        &self,
+        ckpt: &Checkpoint,
+        keep_last: usize,
+    ) -> Result<(), CheckpointError> {
+        ckpt.save(&self.epoch_path(ckpt.epoch))?;
+        let epochs = self.epochs()?;
+        let keep = keep_last.max(1);
+        if epochs.len() > keep {
+            for &old in &epochs[..epochs.len() - keep] {
+                std::fs::remove_file(self.epoch_path(old))?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Load the snapshot for `epoch`
+    /// (absent ⇒ [`CheckpointError::MissingEpoch`]).
+    pub fn load_epoch(
+        &self,
+        epoch: u64,
+    ) -> Result<Checkpoint, CheckpointError> {
+        let path = self.epoch_path(epoch);
+        if !path.exists() {
+            return Err(CheckpointError::MissingEpoch {
+                epoch,
+                dir: self.dir.clone(),
+            });
+        }
+        Checkpoint::load(&path)
+    }
+
+    /// Load the newest snapshot, or `None` for an empty directory.
+    pub fn load_latest(
+        &self,
+    ) -> Result<Option<Checkpoint>, CheckpointError> {
+        match self.latest_epoch()? {
+            Some(e) => Ok(Some(self.load_epoch(e)?)),
+            None => Ok(None),
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::testdir::TestDir;
 
     fn sample() -> Checkpoint {
         Checkpoint {
@@ -153,24 +672,38 @@ mod tests {
             params: vec![1.5, -2.25, 0.0, 3.75],
             velocity: vec![0.1, 0.2, -0.3, 0.4],
             order: vec![3, 1, 0, 2],
+            sched: Some((0.05, 1.25, 2)),
+            policy_state: Some(vec![9, 8, 7, 6, 5]),
         }
+    }
+
+    fn manifest() -> Manifest {
+        manifest_for(0xDEAD_BEEF, "run-1", "grab", "scalar", 1)
     }
 
     #[test]
     fn roundtrip() {
-        let dir = std::env::temp_dir().join("grab_ckpt_test");
-        let path = dir.join("run.ckpt");
+        let dir = TestDir::new("ckpt_roundtrip");
+        let path = dir.path().join("run.ckpt");
         let c = sample();
         c.save(&path).unwrap();
         let back = Checkpoint::load(&path).unwrap();
         assert_eq!(c, back);
-        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn roundtrip_without_optional_fields() {
+        let dir = TestDir::new("ckpt_no_opt");
+        let path = dir.path().join("run.ckpt");
+        let c = Checkpoint { sched: None, policy_state: None, ..sample() };
+        c.save(&path).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap(), c);
     }
 
     #[test]
     fn detects_corruption() {
-        let dir = std::env::temp_dir().join("grab_ckpt_corrupt");
-        let path = dir.join("run.ckpt");
+        let dir = TestDir::new("ckpt_corrupt");
+        let path = dir.path().join("run.ckpt");
         sample().save(&path).unwrap();
         let mut bytes = std::fs::read(&path).unwrap();
         let mid = bytes.len() / 2;
@@ -178,17 +711,123 @@ mod tests {
         std::fs::write(&path, &bytes).unwrap();
         let err = Checkpoint::load(&path).unwrap_err();
         assert!(err.to_string().contains("CRC"), "{err}");
-        let _ = std::fs::remove_dir_all(&dir);
+        assert!(matches!(err, CheckpointError::BadChecksum(_)));
+    }
+
+    #[test]
+    fn detects_corruption_at_every_offset() {
+        // A single byte flip anywhere in the file must surface as a
+        // typed error (checksum, magic, version, or truncation —
+        // depending on what the flip hit), never a wrong Checkpoint.
+        let dir = TestDir::new("ckpt_flip_sweep");
+        let path = dir.path().join("run.ckpt");
+        let c = sample();
+        c.save(&path).unwrap();
+        let good = std::fs::read(&path).unwrap();
+        for off in 0..good.len() {
+            let mut bytes = good.clone();
+            bytes[off] ^= 0x40;
+            std::fs::write(&path, &bytes).unwrap();
+            match Checkpoint::load(&path) {
+                Err(_) => {}
+                Ok(back) => {
+                    // A flip in the CRC'd payload must be caught; only
+                    // a flip that collides back to the same semantics
+                    // could load, which CRC32 makes impossible for a
+                    // single-bit-pattern flip.
+                    panic!(
+                        "byte flip at offset {off} loaded as {back:?}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]
     fn rejects_wrong_magic() {
-        let dir = std::env::temp_dir().join("grab_ckpt_magic");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("bad.ckpt");
+        let dir = TestDir::new("ckpt_magic");
+        let path = dir.path().join("bad.ckpt");
         std::fs::write(&path, b"NOTAGRAB0000000000000000").unwrap();
-        assert!(Checkpoint::load(&path).is_err());
-        let _ = std::fs::remove_dir_all(&dir);
+        let err = Checkpoint::load(&path).unwrap_err();
+        assert!(matches!(err, CheckpointError::NotACheckpoint(_)));
+    }
+
+    #[test]
+    fn rejects_version_from_the_future() {
+        let dir = TestDir::new("ckpt_future");
+        let path = dir.path().join("run.ckpt");
+        sample().save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[8..12].copy_from_slice(&99u32.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        assert!(
+            matches!(
+                err,
+                CheckpointError::VersionFromTheFuture {
+                    found: 99,
+                    supported: SNAPSHOT_VERSION
+                }
+            ),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn rejects_truncated_file() {
+        let dir = TestDir::new("ckpt_trunc");
+        let path = dir.path().join("run.ckpt");
+        sample().save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // Shorter than the 16-byte header.
+        std::fs::write(&path, &bytes[..10]).unwrap();
+        assert!(matches!(
+            Checkpoint::load(&path).unwrap_err(),
+            CheckpointError::Truncated(_)
+        ));
+        // Header intact, payload cut: lands as a CRC failure.
+        std::fs::write(&path, &bytes[..bytes.len() - 3]).unwrap();
+        assert!(matches!(
+            Checkpoint::load(&path).unwrap_err(),
+            CheckpointError::BadChecksum(_)
+        ));
+    }
+
+    #[test]
+    fn loads_v1_format() {
+        // Hand-build a v1 file and check it loads with the legacy
+        // defaults (no scheduler, no policy state).
+        let dir = TestDir::new("ckpt_v1");
+        let path = dir.path().join("v1.ckpt");
+        let params = [1.0f32, 2.0];
+        let velocity = [0.5f32, -0.5];
+        let order = [1u64, 0];
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&3u64.to_le_bytes()); // epoch
+        payload.extend_from_slice(&2u64.to_le_bytes()); // d
+        for v in params {
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+        for v in velocity {
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+        payload.extend_from_slice(&2u64.to_le_bytes()); // n
+        for v in order {
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+        let mut file = Vec::new();
+        file.extend_from_slice(MAGIC);
+        file.extend_from_slice(&1u32.to_le_bytes());
+        file.extend_from_slice(&crc32(&payload).to_le_bytes());
+        file.extend_from_slice(&payload);
+        std::fs::write(&path, &file).unwrap();
+        let c = Checkpoint::load(&path).unwrap();
+        assert_eq!(c.epoch, 3);
+        assert_eq!(c.params, params);
+        assert_eq!(c.velocity, velocity);
+        assert_eq!(c.order, order);
+        assert_eq!(c.sched, None);
+        assert_eq!(c.policy_state, None);
     }
 
     #[test]
@@ -196,5 +835,81 @@ mod tests {
         // "123456789" -> 0xCBF43926 (standard check value)
         assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
         assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn manifest_roundtrip_and_fingerprint_gate() {
+        let dir = TestDir::new("ckpt_manifest");
+        let rd = RunDir::create(dir.path(), manifest()).unwrap();
+        let back = RunDir::open(dir.path()).unwrap();
+        assert_eq!(back.manifest, rd.manifest);
+        back.check_fingerprint(0xDEAD_BEEF).unwrap();
+        let err = back.check_fingerprint(0x1234).unwrap_err();
+        assert!(matches!(
+            err,
+            CheckpointError::FingerprintMismatch {
+                manifest: 0xDEAD_BEEF,
+                config: 0x1234
+            }
+        ));
+    }
+
+    #[test]
+    fn open_without_manifest_is_not_a_checkpoint() {
+        let dir = TestDir::new("ckpt_no_manifest");
+        std::fs::create_dir_all(dir.path()).unwrap();
+        assert!(matches!(
+            RunDir::open(dir.path()).unwrap_err(),
+            CheckpointError::NotACheckpoint(_)
+        ));
+    }
+
+    #[test]
+    fn manifest_from_the_future_is_refused() {
+        let dir = TestDir::new("ckpt_manifest_future");
+        let rd = RunDir::create(dir.path(), manifest()).unwrap();
+        let mpath = rd.path().join(MANIFEST_FILE);
+        let text = std::fs::read_to_string(&mpath).unwrap();
+        let bumped = text.replace(
+            "\"schema_version\":1",
+            "\"schema_version\":9",
+        );
+        assert_ne!(text, bumped, "schema_version key not found");
+        std::fs::write(&mpath, bumped).unwrap();
+        assert!(matches!(
+            RunDir::open(dir.path()).unwrap_err(),
+            CheckpointError::VersionFromTheFuture { found: 9, .. }
+        ));
+    }
+
+    #[test]
+    fn truncated_manifest_is_typed() {
+        let dir = TestDir::new("ckpt_manifest_trunc");
+        let rd = RunDir::create(dir.path(), manifest()).unwrap();
+        let mpath = rd.path().join(MANIFEST_FILE);
+        let text = std::fs::read_to_string(&mpath).unwrap();
+        std::fs::write(&mpath, &text[..text.len() / 2]).unwrap();
+        assert!(matches!(
+            RunDir::open(dir.path()).unwrap_err(),
+            CheckpointError::Malformed(_)
+        ));
+    }
+
+    #[test]
+    fn retention_keeps_last_k_and_missing_epoch_is_typed() {
+        let dir = TestDir::new("ckpt_retention");
+        let rd = RunDir::create(dir.path(), manifest()).unwrap();
+        for e in 0..6u64 {
+            let snap = Checkpoint { epoch: e, ..sample() };
+            rd.save_epoch(&snap, 3).unwrap();
+        }
+        assert_eq!(rd.epochs().unwrap(), vec![3, 4, 5]);
+        assert_eq!(rd.latest_epoch().unwrap(), Some(5));
+        assert_eq!(rd.load_latest().unwrap().unwrap().epoch, 5);
+        let err = rd.load_epoch(1).unwrap_err();
+        assert!(matches!(
+            err,
+            CheckpointError::MissingEpoch { epoch: 1, .. }
+        ));
     }
 }

@@ -97,6 +97,9 @@ pub struct Trainer {
     /// Flattened model parameters (layout per the artifact manifest).
     pub params: Vec<f32>,
     sink: Option<MetricsSink>,
+    /// First epoch [`Trainer::run`] will execute: 0 for a fresh run,
+    /// `ckpt.epoch + 1` after [`Trainer::restore`].
+    start_epoch: usize,
 }
 
 impl Trainer {
@@ -140,18 +143,72 @@ impl Trainer {
             sched,
             params,
             sink,
+            start_epoch: 0,
         })
     }
 
-    /// Train for the configured number of epochs.
+    /// Open/create the configured run directory, applying `--resume`
+    /// (fingerprint-gated restore of the newest snapshot). `None` when
+    /// checkpointing is off.
+    fn prepare_run_dir(&mut self) -> Result<Option<checkpoint::RunDir>> {
+        let Some(dir) = self.cfg.checkpoint_dir.clone() else {
+            return Ok(None);
+        };
+        let dir = std::path::PathBuf::from(dir);
+        let manifest = checkpoint::manifest_for(
+            self.cfg.fingerprint(),
+            &self.cfg.run_id(),
+            self.cfg.ordering.name(),
+            self.cfg.kernels.name(),
+            self.cfg.checkpoint_every as u64,
+        );
+        if self.cfg.resume {
+            let rd = checkpoint::RunDir::open(&dir)?;
+            rd.check_fingerprint(manifest.fingerprint)?;
+            if let Some(ckpt) = rd.load_latest()? {
+                eprintln!(
+                    "[grab] resuming {} from epoch {} ({})",
+                    self.cfg.run_id(),
+                    ckpt.epoch,
+                    rd.path().display()
+                );
+                self.restore(&ckpt)?;
+            }
+            Ok(Some(rd))
+        } else {
+            Ok(Some(checkpoint::RunDir::create(&dir, manifest)?))
+        }
+    }
+
+    /// Train for the configured number of epochs (from
+    /// [`Checkpoint::epoch`]` + 1` after a restore), snapshotting into
+    /// the run directory every `checkpoint_every` epochs when one is
+    /// configured.
+    ///
+    /// [`Checkpoint::epoch`]: checkpoint::Checkpoint::epoch
     pub fn run(&mut self) -> Result<TrainResult> {
-        let mut epochs = Vec::with_capacity(self.cfg.epochs);
-        for epoch in 0..self.cfg.epochs {
+        let run_dir = self.prepare_run_dir()?;
+        let start = self.start_epoch.min(self.cfg.epochs);
+        let mut epochs =
+            Vec::with_capacity(self.cfg.epochs - start);
+        for epoch in start..self.cfg.epochs {
             let m = self.run_epoch(epoch)?;
             if let Some(sink) = &mut self.sink {
                 sink.push(&m)?;
             }
             epochs.push(m);
+            if let Some(rd) = &run_dir {
+                let every = self.cfg.checkpoint_every.max(1);
+                if (epoch + 1) % every == 0
+                    || epoch + 1 == self.cfg.epochs
+                {
+                    let snap = self.snapshot(epoch);
+                    rd.save_epoch(
+                        &snap,
+                        checkpoint::DEFAULT_KEEP_LAST,
+                    )?;
+                }
+            }
         }
         let final_order = self.policy.epoch_order(self.cfg.epochs).to_vec();
         Ok(TrainResult {
@@ -267,8 +324,14 @@ impl Trainer {
         })
     }
 
-    /// Snapshot the run for resumption (params, momentum, next order).
+    /// Snapshot the run for resumption: params, momentum, scheduler
+    /// counters, the policy's order, and its opaque epoch-boundary
+    /// state ([`crate::ordering::OrderPolicy::save_state`]). Must be
+    /// called between epochs (after `run_epoch(epoch)` returned) —
+    /// both the re-borrowed order and the policy state are cache hits
+    /// there, so snapshotting never perturbs the run it records.
     pub fn snapshot(&mut self, epoch: usize) -> checkpoint::Checkpoint {
+        let (lr, best, bad) = self.sched.state();
         checkpoint::Checkpoint {
             epoch: epoch as u64,
             params: self.params.clone(),
@@ -279,18 +342,45 @@ impl Trainer {
                 .iter()
                 .map(|&i| i as u64)
                 .collect(),
+            sched: Some((lr, best, bad as u64)),
+            policy_state: self.policy.save_state(),
         }
     }
 
-    /// Restore params + momentum from a snapshot (ordering policies are
-    /// reconstructed from config; the snapshot order can seed a
-    /// [`crate::ordering::FixedOrder`] run).
+    /// Restore the full run state from a snapshot: params, momentum,
+    /// scheduler counters, and the ordering policy's epoch-boundary
+    /// state — then arm [`Trainer::run`] to continue at
+    /// `ckpt.epoch + 1`. A v1 snapshot (no policy state) falls back to
+    /// seeding the policy's next permutation from the recorded order.
     pub fn restore(&mut self, ckpt: &checkpoint::Checkpoint)
         -> crate::Result<()> {
         anyhow::ensure!(ckpt.params.len() == self.params.len(),
                         "checkpoint dim mismatch");
         self.params.copy_from_slice(&ckpt.params);
         self.opt.set_velocity(&ckpt.velocity)?;
+        if let Some((lr, best, bad)) = ckpt.sched {
+            self.sched.restore_state(lr, best, bad as usize);
+        }
+        if let Some(bytes) = &ckpt.policy_state {
+            self.policy.restore_state(bytes).map_err(|e| {
+                checkpoint::CheckpointError::PolicyState(e)
+            })?;
+        } else if !ckpt.order.is_empty() {
+            // Legacy (v1) snapshot: the recorded permutation is all we
+            // have — seed it where the policy supports that, and warn
+            // (instead of silently diverging) where it does not.
+            let order: Vec<usize> =
+                ckpt.order.iter().map(|&i| i as usize).collect();
+            if !self.policy.restore_order(&order) {
+                eprintln!(
+                    "[grab] warning: policy '{}' cannot adopt the \
+                     checkpoint's order; resuming from its \
+                     config-reconstructed state",
+                    self.policy.name()
+                );
+            }
+        }
+        self.start_epoch = ckpt.epoch as usize + 1;
         Ok(())
     }
 

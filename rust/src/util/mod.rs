@@ -7,4 +7,5 @@ pub mod prop;
 pub mod rng;
 pub mod ser;
 pub mod stats;
+pub mod testdir;
 pub mod timer;

@@ -438,7 +438,9 @@ pub const MAX_FRAME_PAYLOAD: usize = 1 << 28;
 ///
 /// The `Hello`/`Ack` pair is the per-connection handshake; `Block` and
 /// `EpochEnd` mirror the two coordinator→worker `ShardMsg` variants;
-/// `Report` carries the worker→coordinator epoch-order report.
+/// `Report` carries the worker→coordinator epoch-order report; `Seed`
+/// restores a resumed shard balancer's next local order (checkpoint
+/// resume — docs/determinism.md contract 8).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 #[repr(u8)]
 pub enum FrameKind {
@@ -452,6 +454,9 @@ pub enum FrameKind {
     EpochEnd = 4,
     /// Worker → coordinator: the shard's next local epoch order.
     Report = 5,
+    /// Coordinator → worker: re-seed the balancer's next local order
+    /// from a checkpoint (only legal between epochs).
+    Seed = 6,
 }
 
 impl FrameKind {
@@ -463,6 +468,7 @@ impl FrameKind {
             3 => FrameKind::Block,
             4 => FrameKind::EpochEnd,
             5 => FrameKind::Report,
+            6 => FrameKind::Seed,
             other => return Err(WireError::BadKind(other)),
         })
     }
@@ -693,6 +699,146 @@ pub fn read_frame<R: std::io::Read>(
     }
 }
 
+// ---------------------------------------------------------------------------
+// Little-endian payload cursor (checkpoint snapshots, policy-state blobs)
+// ---------------------------------------------------------------------------
+
+/// Append a `u32` little-endian.
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append a `u64` little-endian.
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append an `f64` as its IEEE-754 bit pattern.
+pub fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+/// Append a length-prefixed (`u64`) `f32` slice as raw bit patterns, so
+/// NaN payloads and signed zeros round-trip bit-identically.
+pub fn put_f32_slice(out: &mut Vec<u8>, v: &[f32]) {
+    put_u64(out, v.len() as u64);
+    for &x in v {
+        out.extend_from_slice(&x.to_bits().to_le_bytes());
+    }
+}
+
+/// Append a length-prefixed (`u64`) `usize` slice as `u64`s.
+pub fn put_usize_slice(out: &mut Vec<u8>, v: &[usize]) {
+    put_u64(out, v.len() as u64);
+    for &x in v {
+        put_u64(out, x as u64);
+    }
+}
+
+/// Sequential little-endian reader over a serialized payload. Every
+/// accessor returns a typed [`WireError`] on truncation — reading never
+/// panics — and [`ByteReader::finish`] rejects trailing bytes, so a
+/// payload parses exactly or not at all.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    /// Start reading at the front of `buf`.
+    pub fn new(buf: &'a [u8]) -> ByteReader<'a> {
+        ByteReader { buf, pos: 0 }
+    }
+
+    /// Consume the next `n` raw bytes ([`WireError::Truncated`] if
+    /// fewer remain).
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        let end = self.pos.checked_add(n).ok_or(WireError::Truncated {
+            needed: usize::MAX,
+            got: self.buf.len(),
+        })?;
+        let s = self.buf.get(self.pos..end).ok_or(WireError::Truncated {
+            needed: end,
+            got: self.buf.len(),
+        })?;
+        self.pos = end;
+        Ok(s)
+    }
+
+    /// Read a `u32`.
+    pub fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// Read a `u64`.
+    pub fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Read a `u64` and narrow it to `usize`, rejecting values over
+    /// `max` (guards hostile length prefixes before any allocation).
+    pub fn len(&mut self, max: usize) -> Result<usize, WireError> {
+        let v = self.u64()?;
+        if v > max as u64 {
+            return Err(WireError::Malformed(format!(
+                "length prefix {v} exceeds the {max} cap"
+            )));
+        }
+        Ok(v as usize)
+    }
+
+    /// Read an `f64` bit pattern.
+    pub fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// Read a slice written by [`put_f32_slice`], capped at `max`
+    /// elements.
+    pub fn f32_slice(&mut self, max: usize) -> Result<Vec<f32>, WireError> {
+        let n = self.len(max.min(self.remaining() / 4))?;
+        let bytes = self.take(n * 4)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())))
+            .collect())
+    }
+
+    /// Read a slice written by [`put_usize_slice`], capped at `max`
+    /// elements.
+    pub fn usize_slice(&mut self, max: usize) -> Result<Vec<usize>, WireError> {
+        let n = self.len(max.min(self.remaining() / 8))?;
+        let bytes = self.take(n * 8)?;
+        Ok(bytes
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()) as usize)
+            .collect())
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Consume and return every remaining byte (nested payloads that
+    /// carry their own framing).
+    pub fn rest(&mut self) -> &'a [u8] {
+        let s = &self.buf[self.pos..];
+        self.pos = self.buf.len();
+        s
+    }
+
+    /// Assert the payload was consumed exactly.
+    pub fn finish(&self) -> Result<(), WireError> {
+        if self.pos != self.buf.len() {
+            return Err(WireError::Malformed(format!(
+                "{} trailing bytes after the payload",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
 /// Format a float for CSV/tables with sensible precision.
 pub fn fmt_f(x: f64) -> String {
     if x == 0.0 {
@@ -842,6 +988,51 @@ mod tests {
         assert_eq!(fnv1a32(b""), 0x811c9dc5);
         assert_eq!(fnv1a32(b"a"), 0xe40c292c);
         assert_eq!(fnv1a32(b"foobar"), 0xbf9cf968);
+    }
+
+    #[test]
+    fn byte_reader_roundtrips_and_rejects_truncation() {
+        let mut out = Vec::new();
+        put_u32(&mut out, 7);
+        put_u64(&mut out, u64::MAX);
+        put_f64(&mut out, -0.0);
+        put_f32_slice(&mut out, &[f32::NAN, 1.5]);
+        put_usize_slice(&mut out, &[3, 1, 2]);
+        let mut r = ByteReader::new(&out);
+        assert_eq!(r.u32().unwrap(), 7);
+        assert_eq!(r.u64().unwrap(), u64::MAX);
+        assert_eq!(r.f64().unwrap().to_bits(), (-0.0f64).to_bits());
+        let f = r.f32_slice(16).unwrap();
+        assert_eq!(f.len(), 2);
+        assert!(f[0].is_nan() && f[1] == 1.5);
+        assert_eq!(r.usize_slice(16).unwrap(), vec![3, 1, 2]);
+        r.finish().unwrap();
+
+        // Truncation at every prefix is a typed error, never a panic.
+        for cut in 0..out.len() {
+            let mut r = ByteReader::new(&out[..cut]);
+            let result = (|| -> Result<(), WireError> {
+                r.u32()?;
+                r.u64()?;
+                r.f64()?;
+                r.f32_slice(16)?;
+                r.usize_slice(16)?;
+                r.finish()
+            })();
+            assert!(result.is_err(), "cut={cut}");
+        }
+        // Hostile length prefix is rejected before allocation.
+        let mut bad = Vec::new();
+        put_u64(&mut bad, u64::MAX);
+        assert!(ByteReader::new(&bad).f32_slice(16).is_err());
+        // Trailing bytes are rejected.
+        let mut extra = Vec::new();
+        put_u32(&mut extra, 1);
+        extra.push(0);
+        let mut r = ByteReader::new(&extra);
+        r.u32().unwrap();
+        assert!(r.finish().is_err());
+        assert_eq!(r.remaining(), 1);
     }
 
     #[test]

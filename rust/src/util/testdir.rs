@@ -1,0 +1,45 @@
+//! Unique, self-cleaning temporary directories for tests.
+//!
+//! `cargo test` runs tests from one binary concurrently and runs
+//! several test binaries (lib + each `tests/*.rs`) as separate
+//! processes, so any test writing to a *fixed* path under
+//! `std::env::temp_dir()` can collide with itself. [`TestDir`] makes
+//! each call site unique — process id + an in-process counter + a
+//! human-readable tag — and removes the tree on drop, so a panicking
+//! test still cleans up when its guard unwinds.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+static COUNTER: AtomicUsize = AtomicUsize::new(0);
+
+/// A freshly-created unique temp directory, deleted on drop.
+pub struct TestDir(PathBuf);
+
+impl TestDir {
+    /// Create `<tmp>/grab-test-<pid>-<seq>-<tag>` (the tag names the
+    /// test for post-mortem inspection of leaked trees).
+    pub fn new(tag: &str) -> TestDir {
+        let seq = COUNTER.fetch_add(1, Ordering::Relaxed);
+        let dir = std::env::temp_dir().join(format!(
+            "grab-test-{}-{}-{}",
+            std::process::id(),
+            seq,
+            tag
+        ));
+        std::fs::create_dir_all(&dir)
+            .unwrap_or_else(|e| panic!("creating {}: {e}", dir.display()));
+        TestDir(dir)
+    }
+
+    /// The directory path.
+    pub fn path(&self) -> &Path {
+        &self.0
+    }
+}
+
+impl Drop for TestDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}

@@ -1,0 +1,508 @@
+//! Durable-run test layer (determinism contract 8,
+//! docs/determinism.md): kill a run after any epoch boundary, drop
+//! every in-memory object, resume from the on-disk snapshot, and the
+//! remaining epoch orders — and, with artifacts, the final model
+//! parameters — are bit-equal to an uninterrupted run. Covered for
+//! GraB, PairBalance, and the sharded CD-GraB coordinator over the
+//! synchronous, channel, and loopback-TCP transports at W ∈ {1, 2, 4},
+//! chained down to unsharded PairBalance at W = 1 (mirroring
+//! tests/transport.rs). The negative-path matrix drives every
+//! corruption mode through the public API: each must surface as a
+//! typed [`CheckpointError`], never a panic or a silently-wrong
+//! resume.
+//!
+//! The policy-level suite needs no artifacts; the trainer-level tests
+//! skip (like tests/integration.rs) when `artifacts/` is absent.
+
+use grab::balance::DeterministicBalancer;
+use grab::config::{OrderingKind, Task, TrainConfig};
+use grab::ordering::{
+    stream_static_epoch, GraBOrder, OrderPolicy, PairBalance,
+    RandomReshuffle, ShardedOrder,
+};
+use grab::runtime::Runtime;
+use grab::train::checkpoint::{
+    self, Checkpoint, CheckpointError, RunDir,
+};
+use grab::train::Trainer;
+use grab::util::prop::{self, assert_permutation, gen};
+use grab::util::testdir::TestDir;
+
+fn feed_epoch(p: &mut dyn OrderPolicy, vs: &[Vec<f32>], block: usize) {
+    let mut flat = Vec::new();
+    stream_static_epoch(p, vs, &mut flat, block);
+}
+
+/// The contract-8 core: run `epochs` uninterrupted epochs through one
+/// policy instance; separately run a twin up to (and including) epoch
+/// `kill`, `save_state`, drop it, rebuild a fresh instance from config
+/// alone, `restore_state`, and finish. Every post-kill epoch order must
+/// be bit-equal. Returns the uninterrupted order sequence so callers
+/// can chain policies against each other (the W = 1 gate).
+fn crash_replay(
+    make: &dyn Fn() -> Result<Box<dyn OrderPolicy>, String>,
+    vs: &[Vec<f32>],
+    block: usize,
+    epochs: usize,
+    kill: usize,
+) -> Result<Vec<Vec<usize>>, String> {
+    let mut a = make()?;
+    let mut orders = Vec::with_capacity(epochs);
+    for _ in 0..epochs {
+        feed_epoch(a.as_mut(), vs, block);
+        let order = a.epoch_order(0).to_vec();
+        assert_permutation(&order)?;
+        orders.push(order);
+    }
+
+    let mut b = make()?;
+    for _ in 0..=kill {
+        feed_epoch(b.as_mut(), vs, block);
+    }
+    let state = b
+        .save_state()
+        .ok_or_else(|| format!("{}: no save_state", b.name()))?;
+    let next = b.epoch_order(0).to_vec();
+    drop(b); // the crash: every in-memory object is gone
+
+    let mut c = make()?;
+    c.restore_state(&state)
+        .map_err(|e| format!("{}: restore_state: {e}", c.name()))?;
+    if c.epoch_order(0) != next.as_slice() {
+        return Err(format!(
+            "{}: restored next-epoch order differs from the one \
+             snapshotted at kill={kill}",
+            c.name()
+        ));
+    }
+    for (e, want) in orders.iter().enumerate().skip(kill + 1) {
+        feed_epoch(c.as_mut(), vs, block);
+        if c.epoch_order(0) != want.as_slice() {
+            return Err(format!(
+                "{}: epoch {e} order diverged after resuming from \
+                 kill={kill}",
+                c.name()
+            ));
+        }
+    }
+    Ok(orders)
+}
+
+#[test]
+fn crash_replay_matches_uninterrupted_for_core_policies() {
+    // Random n/d/block and a random kill epoch: snapshot → drop
+    // everything → resume ≡ uninterrupted, for the unsharded balancing
+    // policies.
+    prop::forall("grab/pair crash-replay equivalence", 8, |rng| {
+        let n = 1 + rng.gen_range(60) as usize;
+        let d = 1 + rng.gen_range(6) as usize;
+        let b = 1 + rng.gen_range(9) as usize;
+        let epochs = 4usize;
+        let kill = rng.gen_range(epochs as u64 - 1) as usize;
+        let vs = gen::vec_set(rng, n, d);
+        crash_replay(
+            &|| Ok(Box::new(PairBalance::new(n, d))),
+            &vs,
+            b,
+            epochs,
+            kill,
+        )?;
+        crash_replay(
+            &|| {
+                Ok(Box::new(GraBOrder::new(
+                    n,
+                    d,
+                    Box::new(DeterministicBalancer),
+                )))
+            },
+            &vs,
+            b,
+            epochs,
+            kill,
+        )?;
+        Ok(())
+    });
+}
+
+#[test]
+fn crash_replay_matches_over_channel_and_tcp_sharded_orders() {
+    // The sharded coordinator across its three dispatch paths, W in
+    // {1, 2, 4}: resume must reproduce the uninterrupted orders on
+    // each transport, the transports must agree with each other, and
+    // at W = 1 the chain extends to unsharded PairBalance — so a
+    // resumed socket CD-GraB run is pinned all the way down to the
+    // single-threaded reference.
+    prop::forall("sharded crash-replay equivalence", 6, |rng| {
+        let n = 1 + rng.gen_range(48) as usize;
+        let d = 1 + rng.gen_range(5) as usize;
+        let b = 1 + rng.gen_range(8) as usize;
+        let depth = 1 + rng.gen_range(3) as usize;
+        let epochs = 3usize;
+        let kill = rng.gen_range(epochs as u64 - 1) as usize;
+        let vs = gen::vec_set(rng, n, d);
+        let pair = crash_replay(
+            &|| Ok(Box::new(PairBalance::new(n, d))),
+            &vs,
+            b,
+            epochs,
+            kill,
+        )?;
+        for w in [1usize, 2, 4] {
+            let sync = crash_replay(
+                &|| Ok(Box::new(ShardedOrder::new(n, d, w))),
+                &vs,
+                b,
+                epochs,
+                kill,
+            )?;
+            let channel = crash_replay(
+                &|| {
+                    Ok(Box::new(ShardedOrder::new_async(n, d, w, depth)))
+                },
+                &vs,
+                b,
+                epochs,
+                kill,
+            )?;
+            let tcp = crash_replay(
+                &|| {
+                    ShardedOrder::new_tcp_loopback(n, d, w)
+                        .map(|p| Box::new(p) as Box<dyn OrderPolicy>)
+                        .map_err(|e| format!("loopback spawn: {e}"))
+                },
+                &vs,
+                b,
+                epochs,
+                kill,
+            )?;
+            if channel != sync || tcp != sync {
+                return Err(format!(
+                    "transports disagree at w={w} n={n} d={d} b={b} \
+                     kill={kill}"
+                ));
+            }
+            if w == 1 && sync != pair {
+                return Err(format!(
+                    "w=1 sharded != PairBalance at n={n} d={d} b={b} \
+                     kill={kill}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn snapshotting_is_a_pure_observer() {
+    // The run-with-checkpointing == run-without gate at the policy
+    // layer: snapshot-time re-borrows (`epoch_order`) and `save_state`
+    // must be cache hits, even for policies that mutate on an
+    // epoch-order miss (RandomReshuffle's in-place shuffle).
+    let mut a = RandomReshuffle::new(17, 5);
+    let mut b = RandomReshuffle::new(17, 5);
+    for epoch in 0..4 {
+        let wa = a.epoch_order(epoch).to_vec();
+        let wb = b.epoch_order(epoch).to_vec();
+        let _ = b.save_state();
+        let wb2 = b.epoch_order(epoch).to_vec(); // snapshot re-borrow
+        assert_eq!(wa, wb, "twin diverged before snapshotting");
+        assert_eq!(wb, wb2, "snapshot perturbed the epoch order");
+        a.epoch_end();
+        b.epoch_end();
+    }
+
+    // Same for the balancing policies on a gradient stream.
+    let vs = gen::vec_set(&mut grab::util::rng::Rng::new(11), 24, 3);
+    let mut plain = ShardedOrder::new_async(24, 3, 2, 2);
+    let mut observed = ShardedOrder::new_async(24, 3, 2, 2);
+    for _ in 0..3 {
+        feed_epoch(&mut plain, &vs, 4);
+        feed_epoch(&mut observed, &vs, 4);
+        let _ = observed.save_state();
+        assert_eq!(
+            plain.epoch_order(0),
+            observed.epoch_order(0),
+            "save_state perturbed the sharded coordinator"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Negative-path matrix: every way a run directory can be damaged must
+// surface as a typed CheckpointError through the public API.
+// ---------------------------------------------------------------------
+
+fn sample_checkpoint() -> Checkpoint {
+    Checkpoint {
+        epoch: 3,
+        params: vec![1.0, -2.5, 3.25],
+        velocity: vec![0.5, 0.0, -0.125],
+        order: vec![2, 0, 1],
+        sched: Some((0.1, 0.875, 2)),
+        policy_state: Some(vec![9, 8, 7, 6]),
+    }
+}
+
+#[test]
+fn random_byte_flips_are_always_typed_errors() {
+    let tmp = TestDir::new("ckpt-flips");
+    let path = tmp.path().join("snap.ckpt");
+    sample_checkpoint().save(&path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    let bad_path = tmp.path().join("bad.ckpt");
+    prop::forall("byte flips at random offsets", 48, |rng| {
+        let off = rng.gen_range(bytes.len() as u64) as usize;
+        let mut bad = bytes.clone();
+        bad[off] ^= 0x20;
+        std::fs::write(&bad_path, &bad)
+            .map_err(|e| format!("write: {e}"))?;
+        match Checkpoint::load(&bad_path) {
+            Err(_) => Ok(()), // typed; never a panic
+            Ok(_) => Err(format!(
+                "flip at offset {off} loaded as a valid checkpoint"
+            )),
+        }
+    });
+    // A payload flip specifically is a CRC rejection whose message
+    // says so.
+    let mut bad = bytes.clone();
+    let last = bad.len() - 1;
+    bad[last] ^= 0x20;
+    std::fs::write(&bad_path, &bad).unwrap();
+    let err = Checkpoint::load(&bad_path).unwrap_err();
+    assert!(matches!(err, CheckpointError::BadChecksum(_)));
+    assert!(err.to_string().contains("CRC"), "got: {err}");
+}
+
+#[test]
+fn snapshot_version_from_the_future_is_refused() {
+    let tmp = TestDir::new("ckpt-future");
+    let path = tmp.path().join("snap.ckpt");
+    sample_checkpoint().save(&path).unwrap();
+    let mut bytes = std::fs::read(&path).unwrap();
+    bytes[8..12].copy_from_slice(&9u32.to_le_bytes());
+    std::fs::write(&path, &bytes).unwrap();
+    let err = Checkpoint::load(&path).unwrap_err();
+    assert!(
+        matches!(
+            err,
+            CheckpointError::VersionFromTheFuture { found: 9, .. }
+        ),
+        "got: {err}"
+    );
+}
+
+#[test]
+fn truncated_files_and_manifests_are_typed_errors() {
+    let tmp = TestDir::new("ckpt-trunc");
+    let path = tmp.path().join("snap.ckpt");
+    sample_checkpoint().save(&path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+
+    // Cut anywhere in the file: header cuts are Truncated, payload
+    // cuts fail the CRC — always typed, never a panic.
+    for cut in [1, 8, 15, 16, bytes.len() / 2, bytes.len() - 1] {
+        std::fs::write(&path, &bytes[..cut]).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        assert!(
+            matches!(
+                err,
+                CheckpointError::Truncated(_)
+                    | CheckpointError::BadChecksum(_)
+            ),
+            "cut at {cut}: got {err}"
+        );
+    }
+
+    // A truncated manifest is refused as malformed, with the parse
+    // diagnosis attached.
+    let rd_dir = tmp.path().join("run");
+    RunDir::create(
+        &rd_dir,
+        checkpoint::manifest_for(0xABCD, "run", "pair", "scalar", 1),
+    )
+    .unwrap();
+    let mpath = rd_dir.join(checkpoint::MANIFEST_FILE);
+    let text = std::fs::read_to_string(&mpath).unwrap();
+    std::fs::write(&mpath, &text[..text.len() / 2]).unwrap();
+    let err = RunDir::open(&rd_dir).unwrap_err();
+    assert!(
+        matches!(err, CheckpointError::Malformed(_)),
+        "got: {err}"
+    );
+}
+
+#[test]
+fn fingerprint_mismatch_and_missing_epoch_are_typed_errors() {
+    let tmp = TestDir::new("ckpt-gates");
+    let rd = RunDir::create(
+        tmp.path(),
+        checkpoint::manifest_for(0x1111, "run", "pair", "scalar", 1),
+    )
+    .unwrap();
+    let err = rd.check_fingerprint(0x2222).unwrap_err();
+    assert!(
+        matches!(
+            err,
+            CheckpointError::FingerprintMismatch {
+                manifest: 0x1111,
+                config: 0x2222,
+            }
+        ),
+        "got: {err}"
+    );
+
+    // Retention keeps the last K snapshots; asking for a pruned epoch
+    // is a typed miss, not a bogus read.
+    let mut ckpt = sample_checkpoint();
+    for epoch in 0..6 {
+        ckpt.epoch = epoch;
+        rd.save_epoch(&ckpt, 3).unwrap();
+    }
+    assert_eq!(rd.epochs().unwrap(), vec![3, 4, 5]);
+    let err = rd.load_epoch(0).unwrap_err();
+    assert!(
+        matches!(err, CheckpointError::MissingEpoch { epoch: 0, .. }),
+        "got: {err}"
+    );
+    assert_eq!(rd.load_epoch(5).unwrap().epoch, 5);
+}
+
+// ---------------------------------------------------------------------
+// Trainer-level contract 8: full run state (params + momentum +
+// scheduler + policy), through the CLI-visible --checkpoint-dir /
+// --resume path. Skips without artifacts, like tests/integration.rs.
+// ---------------------------------------------------------------------
+
+fn runtime() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Runtime::open("artifacts").expect("runtime"))
+}
+
+fn tiny_cfg(ordering: OrderingKind) -> TrainConfig {
+    let mut cfg = TrainConfig::for_task(Task::Mnist);
+    cfg.ordering = ordering;
+    cfg.epochs = 4;
+    cfg.n_examples = 128;
+    cfg.n_eval = 256;
+    cfg.seed = 1;
+    cfg
+}
+
+#[test]
+fn trainer_crash_replay_matches_uninterrupted_run() {
+    let Some(rt) = runtime() else { return };
+    for ordering in [
+        OrderingKind::RandomReshuffle,
+        OrderingKind::GraB,
+        OrderingKind::PairBalance,
+        OrderingKind::ShardedPairBalance,
+    ] {
+        let cfg = tiny_cfg(ordering);
+
+        // A: the uninterrupted reference run.
+        let mut a = Trainer::new(cfg.clone(), &rt, None).unwrap();
+        let ra = a.run().unwrap();
+
+        // B: killed after epoch 1; only the run directory survives.
+        let tmp = TestDir::new("trainer-crash");
+        let mut b = Trainer::new(cfg.clone(), &rt, None).unwrap();
+        b.run_epoch(0).unwrap();
+        b.run_epoch(1).unwrap();
+        let snap = b.snapshot(1);
+        let rd = RunDir::create(
+            tmp.path(),
+            checkpoint::manifest_for(
+                cfg.fingerprint(),
+                &cfg.run_id(),
+                cfg.ordering.name(),
+                cfg.kernels.name(),
+                1,
+            ),
+        )
+        .unwrap();
+        rd.save_epoch(&snap, 3).unwrap();
+        drop(b);
+        drop(rd);
+
+        // C: a fresh process image — new trainer, state seeded purely
+        // from the on-disk run directory via the --resume path.
+        let mut c_cfg = cfg.clone();
+        c_cfg.checkpoint_dir =
+            Some(tmp.path().to_string_lossy().into_owned());
+        c_cfg.resume = true;
+        let mut c = Trainer::new(c_cfg, &rt, None).unwrap();
+        let rc = c.run().unwrap();
+
+        assert_eq!(
+            rc.epochs.first().map(|m| m.epoch),
+            Some(2),
+            "{ordering:?}: resume must continue at kill + 1"
+        );
+        assert_eq!(rc.epochs.len(), 2, "{ordering:?}");
+        assert_eq!(
+            rc.final_order, ra.final_order,
+            "{ordering:?}: final orders must be bit-equal"
+        );
+        assert_eq!(
+            c.params, a.params,
+            "{ordering:?}: final params must be bit-equal"
+        );
+    }
+}
+
+#[test]
+fn restore_resumes_at_the_snapshot_epoch_plus_one() {
+    // Regression: `Trainer::restore` used to ignore `ckpt.epoch`, so a
+    // resumed run silently re-executed epoch 0 onward.
+    let Some(rt) = runtime() else { return };
+    let cfg = tiny_cfg(OrderingKind::RandomReshuffle);
+    let mut b = Trainer::new(cfg.clone(), &rt, None).unwrap();
+    b.run_epoch(0).unwrap();
+    let snap = b.snapshot(0);
+    assert_eq!(snap.epoch, 0);
+
+    let mut c = Trainer::new(cfg, &rt, None).unwrap();
+    c.restore(&snap).unwrap();
+    let rc = c.run().unwrap();
+    assert_eq!(rc.epochs.len(), 3, "must not re-run epoch 0");
+    assert_eq!(rc.epochs[0].epoch, 1);
+}
+
+#[test]
+fn resume_refuses_a_mismatched_config_fingerprint() {
+    let Some(rt) = runtime() else { return };
+    let cfg = tiny_cfg(OrderingKind::PairBalance);
+    let tmp = TestDir::new("trainer-fpr");
+    let mut b = Trainer::new(cfg.clone(), &rt, None).unwrap();
+    b.run_epoch(0).unwrap();
+    let rd = RunDir::create(
+        tmp.path(),
+        checkpoint::manifest_for(
+            cfg.fingerprint(),
+            &cfg.run_id(),
+            cfg.ordering.name(),
+            cfg.kernels.name(),
+            1,
+        ),
+    )
+    .unwrap();
+    rd.save_epoch(&b.snapshot(0), 3).unwrap();
+
+    let mut other = cfg.clone();
+    other.seed = 999; // a different run
+    other.checkpoint_dir =
+        Some(tmp.path().to_string_lossy().into_owned());
+    other.resume = true;
+    let err = Trainer::new(other, &rt, None)
+        .unwrap()
+        .run()
+        .unwrap_err();
+    assert!(
+        format!("{err:#}").contains("fingerprint"),
+        "wanted a fingerprint refusal, got: {err:#}"
+    );
+}

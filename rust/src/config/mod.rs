@@ -352,6 +352,14 @@ pub struct TrainConfig {
     /// started with `grab exp cdgrab --listen HOST:PORT`). Requires
     /// `shard_transport = tcp`.
     pub connect: Option<String>,
+    /// Upper bound (seconds) on waiting for any single frame from a
+    /// TCP shard worker (`--read-timeout SECS`, TOML
+    /// `read_timeout_secs`). An expiry surfaces as a typed link
+    /// `Timeout` at the epoch boundary — the signal an elastic run
+    /// re-plans around. Not part of the config fingerprint: it is an
+    /// operational knob, like `epochs`, with no bearing on the orders
+    /// produced.
+    pub read_timeout_secs: u64,
     /// Where artifacts live.
     pub artifacts_dir: String,
     /// Optional metrics CSV path.
@@ -414,6 +422,8 @@ impl Default for TrainConfig {
             shard_transport: TransportKind::Channel,
             kernels: KernelKind::Auto,
             connect: None,
+            read_timeout_secs:
+                crate::ordering::transport::tcp::DEFAULT_READ_TIMEOUT_SECS,
             artifacts_dir: "artifacts".to_string(),
             metrics_out: None,
             eval_every: 1,
@@ -532,6 +542,9 @@ impl TrainConfig {
         if let Some(addr) = args.opt_str("connect") {
             self.connect = Some(addr);
         }
+        self.read_timeout_secs = args
+            .usize_or("read-timeout", self.read_timeout_secs as usize)?
+            as u64;
         self.artifacts_dir =
             args.str_or("artifacts", &self.artifacts_dir);
         if let Some(m) = args.opt_str("metrics-out") {
@@ -620,6 +633,13 @@ impl TrainConfig {
         if let Some(addr) = doc.get_str("connect") {
             c.connect = Some(addr);
         }
+        let rt = doc
+            .get_int("read_timeout_secs")
+            .unwrap_or(c.read_timeout_secs as i64);
+        if rt < 1 {
+            bail!("read_timeout_secs must be >= 1, got {rt}");
+        }
+        c.read_timeout_secs = rt as u64;
         if let Some(a) = doc.get_str("artifacts") {
             c.artifacts_dir = a;
         }
@@ -672,6 +692,12 @@ impl TrainConfig {
         }
         if self.workers == 0 {
             bail!("workers must be >= 1");
+        }
+        if self.read_timeout_secs == 0 {
+            bail!(
+                "--read-timeout must be >= 1 second \
+                 (a zero timeout would block forever)"
+            );
         }
         if self.connect.is_some()
             && self.shard_transport != TransportKind::Tcp
@@ -930,6 +956,33 @@ mod tests {
         assert_eq!(c.connect.as_deref(), Some("h:1"));
         let doc = TomlDoc::parse("transport = \"warp\"").unwrap();
         assert!(TrainConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn read_timeout_config_plumbs_through() {
+        let c = TrainConfig::default();
+        assert_eq!(
+            c.read_timeout_secs,
+            crate::ordering::transport::tcp::DEFAULT_READ_TIMEOUT_SECS
+        );
+
+        let args = Args::parse(["--read-timeout", "5"]).unwrap();
+        let mut c = TrainConfig::default();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.read_timeout_secs, 5);
+
+        // Zero would mean "block forever" — rejected from both sources.
+        let args = Args::parse(["--read-timeout", "0"]).unwrap();
+        let mut c = TrainConfig::default();
+        assert!(c.apply_args(&args).is_err());
+        let doc = TomlDoc::parse("read_timeout_secs = 0").unwrap();
+        assert!(TrainConfig::from_toml(&doc).is_err());
+
+        let doc = TomlDoc::parse("read_timeout_secs = 7").unwrap();
+        assert_eq!(
+            TrainConfig::from_toml(&doc).unwrap().read_timeout_secs,
+            7
+        );
     }
 
     #[test]

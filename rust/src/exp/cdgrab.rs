@@ -60,6 +60,9 @@ pub struct CdGrabConfig {
     /// comma-separated for a pool); `None` spawns in-process loopback
     /// workers.
     pub connect: Option<String>,
+    /// Per-frame read timeout (seconds) on remote worker links
+    /// (`--read-timeout`); ignored for loopback/in-process backends.
+    pub read_timeout_secs: u64,
     /// Durable run root (`--checkpoint-dir`): each policy snapshots its
     /// ordering state into `<dir>/<policy>/` after each epoch.
     pub checkpoint_dir: Option<String>,
@@ -80,6 +83,8 @@ impl Default for CdGrabConfig {
             shard_counts: vec![1, 4, 16],
             seed: 0,
             connect: None,
+            read_timeout_secs:
+                crate::ordering::transport::tcp::DEFAULT_READ_TIMEOUT_SECS,
             checkpoint_dir: None,
             checkpoint_every: 1,
             resume: false,
@@ -98,6 +103,8 @@ impl CdGrabConfig {
             shard_counts: vec![1, 2, 4],
             seed: 0,
             connect: None,
+            read_timeout_secs:
+                crate::ordering::transport::tcp::DEFAULT_READ_TIMEOUT_SECS,
             checkpoint_dir: None,
             checkpoint_every: 1,
             resume: false,
@@ -107,8 +114,8 @@ impl CdGrabConfig {
     /// Sweep identity for the run-directory fingerprint gate
     /// (docs/determinism.md contract 8). `epochs` is deliberately
     /// excluded — it is a resumable horizon, and extending it is the
-    /// point of resuming — as is `connect` (contract 5: the transport
-    /// never shifts results).
+    /// point of resuming — as are `connect` and `read_timeout_secs`
+    /// (contract 5: the transport never shifts results).
     pub fn fingerprint(&self) -> u32 {
         let shards: Vec<String> =
             self.shard_counts.iter().map(|w| w.to_string()).collect();
@@ -208,6 +215,7 @@ pub fn run(cfg: &CdGrabConfig, out_dir: &std::path::Path) -> Result<()> {
                     cfg.n,
                     cfg.d,
                     &vec![1; w],
+                    std::time::Duration::from_secs(cfg.read_timeout_secs),
                 )?)
             }
             None => {
@@ -237,6 +245,7 @@ pub fn run(cfg: &CdGrabConfig, out_dir: &std::path::Path) -> Result<()> {
             cfg.n,
             cfg.d,
             &SKEW_WEIGHTS,
+            std::time::Duration::from_secs(cfg.read_timeout_secs),
         )?),
         None => Box::new(ShardedOrder::new_tcp_loopback_weighted(
             cfg.n,
@@ -290,22 +299,16 @@ pub fn run(cfg: &CdGrabConfig, out_dir: &std::path::Path) -> Result<()> {
                         name
                     );
                     if let Some(ckpt) = rd.load_latest()? {
-                        if let Some(bytes) = &ckpt.policy_state {
-                            policy.restore_state(bytes).map_err(|e| {
-                                anyhow::anyhow!("resuming {name}: {e}")
-                            })?;
-                        } else {
-                            let order: Vec<usize> = ckpt
-                                .order
-                                .iter()
-                                .map(|&v| v as usize)
-                                .collect();
-                            anyhow::ensure!(
-                                policy.restore_order(&order),
-                                "policy {name} cannot be re-seeded \
-                                 from the snapshot order"
-                            );
-                        }
+                        // Same typed resume gate as the trainer
+                        // (PolicyNotResumable instead of a silent
+                        // ordering restart).
+                        checkpoint::restore_policy(
+                            policy.as_mut(),
+                            &ckpt,
+                        )
+                        .map_err(|e| {
+                            anyhow::anyhow!("resuming {name}: {e}")
+                        })?;
                         start = ckpt.epoch as usize + 1;
                         eprintln!(
                             "[cdgrab] {name}: resumed after epoch {} \
@@ -638,8 +641,13 @@ mod tests {
             tail_rows.iter().any(|(_, e, _)| e == "3"),
             "resumed sweep emitted no tail epochs"
         );
-        // The measured-elastic policy is excluded: its planner keys on
-        // wall-clock EWMA, the documented contract-8 carve-out.
+        // The measured-elastic policy is excluded: although a resume
+        // now carries the planner's EWMA (so the resumed process plans
+        // from the same smoothed history — see
+        // `elastic_snapshot_carries_the_planner_ewma`), the costs the
+        // two sweeps *measure after* the boundary are wall-clock and
+        // can differ, so herding equality is not guaranteed row-for-row
+        // — the documented contract-8 carve-out.
         for row in tail_rows
             .iter()
             .filter(|(p, _, _)| !p.contains("elastic"))

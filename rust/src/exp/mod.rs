@@ -55,6 +55,17 @@ pub fn run_from_cli(args: &Args) -> Result<()> {
     let listen = args.opt_str("listen");
     let connect = args.opt_str("connect");
     let max_conns = args.usize_or("max-conns", 0)?; // 0 = serve forever
+    let read_timeout = args.usize_or(
+        "read-timeout",
+        crate::ordering::transport::tcp::DEFAULT_READ_TIMEOUT_SECS
+            as usize,
+    )? as u64;
+    // Order-service modes (cdgrab only): --register turns this process
+    // into a worker that dials a `grab serve` daemon and waits to be
+    // leased to jobs; --service submits the sweep to a daemon instead
+    // of dialing workers directly.
+    let register = args.opt_str("register");
+    let service = args.opt_str("service");
     // Durable-run flags (cdgrab only): per-policy run directories with
     // epoch snapshots (docs/determinism.md contract 8).
     let checkpoint_dir = args.opt_str("checkpoint-dir");
@@ -65,14 +76,21 @@ pub fn run_from_cli(args: &Args) -> Result<()> {
     let resume = args.flag("resume");
     args.reject_unknown()?;
     anyhow::ensure!(
-        listen.is_none() || connect.is_none(),
-        "--listen (serve shard workers) and --connect (dial a worker \
-         server) are mutually exclusive modes"
+        [listen.is_some(), connect.is_some(), register.is_some(),
+         service.is_some()]
+            .iter()
+            .filter(|&&b| b)
+            .count()
+            <= 1,
+        "--listen (serve shard workers), --connect (dial a worker \
+         server), --register (join an order-service daemon), and \
+         --service (submit to a daemon) are mutually exclusive modes"
     );
     anyhow::ensure!(
         max_conns == 0 || listen.is_some(),
         "--max-conns only applies to the --listen server mode"
     );
+    anyhow::ensure!(read_timeout >= 1, "--read-timeout must be >= 1");
     if let Some(addr) = &listen {
         anyhow::ensure!(
             id == "cdgrab",
@@ -81,6 +99,37 @@ pub fn run_from_cli(args: &Args) -> Result<()> {
         return crate::ordering::transport::tcp::run_worker_server(
             addr,
             if max_conns > 0 { Some(max_conns) } else { None },
+        );
+    }
+    if let Some(addr) = &register {
+        anyhow::ensure!(
+            id == "cdgrab",
+            "--register only applies to `exp cdgrab`"
+        );
+        return crate::ordering::transport::tcp::run_registered_worker(
+            addr,
+            std::time::Duration::from_secs(read_timeout),
+        );
+    }
+    if let Some(addr) = &service {
+        anyhow::ensure!(
+            id == "cdgrab",
+            "--service only applies to `exp cdgrab`"
+        );
+        let mut cfg = if paper_scale {
+            cdgrab::CdGrabConfig::default()
+        } else {
+            cdgrab::CdGrabConfig::small()
+        };
+        if epochs > 0 {
+            cfg.epochs = epochs;
+        }
+        if n > 0 {
+            cfg.n = n;
+        }
+        cfg.read_timeout_secs = read_timeout;
+        return crate::service::client::run_job_against_daemon(
+            addr, &cfg, &out,
         );
     }
     if connect.is_some() {
@@ -202,6 +251,7 @@ pub fn run_from_cli(args: &Args) -> Result<()> {
                     cfg.n = n;
                 }
                 cfg.connect = connect.clone();
+                cfg.read_timeout_secs = read_timeout;
                 cfg.checkpoint_dir = checkpoint_dir.clone();
                 cfg.checkpoint_every = checkpoint_every;
                 cfg.resume = resume;

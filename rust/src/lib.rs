@@ -31,7 +31,9 @@
 //! the shard wire-frame layout, and `docs/determinism.md` for the
 //! equivalence contracts (per-example ≡ block, W=1 ≡ PairBalance, sync
 //! ≡ async shards, sync ≡ pipeline, socket ≡ channel transport,
-//! scalar ≡ SIMD ≡ row-parallel kernels) the test suite enforces.
+//! scalar ≡ SIMD ≡ row-parallel kernels) the test suite enforces; the
+//! [`service`] daemon (`grab serve`) runs CD-GraB jobs over a registry
+//! of dialed-in workers behind an HTTP control plane.
 //! `docs/perf.md` covers the balance-kernel tiers and the recorded
 //! `BENCH_*.json` perf trajectory.
 
@@ -48,6 +50,7 @@ pub mod optim;
 pub mod ordering;
 pub mod pipeline;
 pub mod runtime;
+pub mod service;
 pub mod tensor;
 pub mod train;
 pub mod util;

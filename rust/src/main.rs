@@ -12,7 +12,11 @@
 //! grab exp    fig1|fig2|fig3|fig4|table1|statement1|granularity|
 //!             cdgrab|all [options]
 //!             (cdgrab: --listen HOST:PORT serves shard workers,
-//!              --connect HOST:PORT dials a remote worker server)
+//!              --connect HOST:PORT dials a remote worker server,
+//!              --register HOST:PORT joins a `grab serve` daemon,
+//!              --service HOST:PORT submits the job to a daemon)
+//! grab serve  [--listen HOST:PORT] [--http HOST:PORT]
+//!             [--read-timeout SECS]   # order-service daemon
 //! grab bench  [--out BENCH.json] [--quick] [--kernels LIST]
 //!             # balance-kernel perf trajectory (docs/perf.md)
 //! grab inspect [--artifacts DIR]       # artifact/manifest summary
@@ -43,6 +47,7 @@ fn run() -> Result<()> {
     match cmd {
         "train" => cmd_train(&args),
         "exp" => grab::exp::run_from_cli(&args),
+        "serve" => grab::service::run_serve(&args),
         "bench" => grab::bench::run_from_cli(&args),
         "inspect" => cmd_inspect(&args),
         "help" | "--help" => {
@@ -62,6 +67,9 @@ USAGE:
   grab exp <id> [options]  regenerate a paper artifact
                            (fig1|fig2|fig3|fig4|table1|statement1|
                             granularity|cdgrab|all)
+  grab serve [options]     run the order-service daemon: workers dial in
+                           and register; jobs run over the held sockets;
+                           HTTP control plane (docs/service.md)
   grab bench [options]     run the balance/ordering benchmark cases and
                            emit versioned JSON (docs/perf.md)
   grab inspect             show artifact manifest / model layouts
@@ -116,6 +124,22 @@ TRAIN OPTIONS:
                            --checkpoint-dir; refuses on a config
                            fingerprint mismatch (boolean flag, put it
                            last or before another --flag)
+  --read-timeout SECS      per-frame read timeout on remote shard links
+                           (default: 120; a silent peer surfaces as a
+                           typed link timeout at the epoch boundary)
+
+SERVE OPTIONS (order-service daemon — docs/service.md):
+  --listen HOST:PORT       worker registration listener (wire protocol;
+                           default: 127.0.0.1:7470); workers join with
+                           `grab exp cdgrab --register HOST:PORT`
+  --http HOST:PORT         HTTP/1.1 control plane (default:
+                           127.0.0.1:7471): GET /health, GET /metrics
+                           (Prometheus text), POST /jobs, GET /jobs[/ID],
+                           POST /drain
+  --read-timeout SECS      per-frame read timeout on leased worker links
+                           during a job session (default: 120)
+                           SIGTERM drains: running jobs finish, workers
+                           detach only at job boundaries, then exit 0
 
 EXP OPTIONS (see DESIGN.md experiment index):
   --out DIR                results directory (default: results)
@@ -123,6 +147,13 @@ EXP OPTIONS (see DESIGN.md experiment index):
   --listen HOST:PORT       (cdgrab) run as a blocking shard worker server
   --connect HOST:PORT      (cdgrab) point the sweep's TCP policies at a
                            remote worker server instead of loopback
+  --register HOST:PORT     (cdgrab) dial a `grab serve` daemon's registry
+                           and serve job sessions until it drains
+  --service HOST:PORT      (cdgrab) submit one job to a daemon's control
+                           plane, verify its orders bit-equal a local
+                           in-process run, write service_job.csv
+  --read-timeout SECS      (cdgrab) per-frame read timeout on remote
+                           worker links (default: 120)
   --max-conns N            (with --listen) exit after serving N links
   --checkpoint-dir DIR     (cdgrab) per-policy run directories with
                            epoch snapshots of each policy's ordering

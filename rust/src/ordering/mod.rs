@@ -619,16 +619,27 @@ pub fn build_policy(
                 TransportKind::Tcp => match &cfg.connect {
                     Some(addrs) => {
                         let addrs = transport::parse_connect_addrs(addrs);
+                        let read_timeout = std::time::Duration::from_secs(
+                            cfg.read_timeout_secs,
+                        );
                         if cfg.elastic {
                             Box::new(
                                 ShardedOrder::new_tcp_connect_elastic(
-                                    &addrs, n, d, &weights,
+                                    &addrs,
+                                    n,
+                                    d,
+                                    &weights,
+                                    read_timeout,
                                 )?,
                             )
                         } else {
                             Box::new(
                                 ShardedOrder::new_tcp_connect_weighted(
-                                    &addrs, n, d, &weights,
+                                    &addrs,
+                                    n,
+                                    d,
+                                    &weights,
+                                    read_timeout,
                                 )?,
                             )
                         }

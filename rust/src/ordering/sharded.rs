@@ -706,7 +706,15 @@ impl ShardedOrder {
         anyhow::ensure!(d > 0, "tcp shards need a positive dimension");
         let topology = Topology::plan(n, 0, weights);
         let addr = tcp::spawn_loopback(topology.num_shards())?;
-        let links = tcp::connect_shards(addr, &topology.sizes, d, 0)?;
+        // Loopback workers answer in microseconds; the default timeout
+        // only guards against a wedged worker thread.
+        let links = tcp::connect_shards(
+            addr,
+            &topology.sizes,
+            d,
+            0,
+            tcp::default_read_timeout(),
+        )?;
         let shards = AsyncShards::new(
             links,
             &topology.sizes,
@@ -720,7 +728,13 @@ impl ShardedOrder {
             let relink: Relink = Box::new(move |sizes, generation| {
                 let addr = tcp::spawn_loopback(sizes.len())
                     .map_err(crate::ordering::transport::TransportError::Io)?;
-                tcp::connect_shards(addr, sizes, d, generation)
+                tcp::connect_shards(
+                    addr,
+                    sizes,
+                    d,
+                    generation,
+                    tcp::default_read_timeout(),
+                )
             });
             ElasticState { source, relink, boundaries: 0 }
         });
@@ -747,19 +761,31 @@ impl ShardedOrder {
             n,
             d,
             &vec![1; num_shards],
+            tcp::default_read_timeout(),
         )
     }
 
     /// TCP coordinator against a pool of remote worker servers: shard
     /// `w` dials `addrs[w % addrs.len()]` (falling through the list on
-    /// failure), over a weighted topology.
+    /// failure), over a weighted topology. `read_timeout` bounds every
+    /// per-frame wait on a worker socket; an expiry surfaces as
+    /// [`crate::ordering::transport::TransportError::Timeout`] at the
+    /// epoch boundary.
     pub fn new_tcp_connect_weighted(
         addrs: &[String],
         n: usize,
         d: usize,
         weights: &[u64],
+        read_timeout: std::time::Duration,
     ) -> crate::Result<ShardedOrder> {
-        ShardedOrder::tcp_connect_inner(addrs, n, d, weights, None)
+        ShardedOrder::tcp_connect_inner(
+            addrs,
+            n,
+            d,
+            weights,
+            None,
+            read_timeout,
+        )
     }
 
     /// Elastic TCP coordinator against a pool of remote worker servers:
@@ -772,6 +798,7 @@ impl ShardedOrder {
         n: usize,
         d: usize,
         weights: &[u64],
+        read_timeout: std::time::Duration,
     ) -> crate::Result<ShardedOrder> {
         let planner = ElasticPlanner::new(weights.len());
         ShardedOrder::tcp_connect_inner(
@@ -780,6 +807,7 @@ impl ShardedOrder {
             d,
             weights,
             Some(WeightSource::Measured(planner)),
+            read_timeout,
         )
     }
 
@@ -789,12 +817,18 @@ impl ShardedOrder {
         d: usize,
         weights: &[u64],
         source: Option<WeightSource>,
+        read_timeout: std::time::Duration,
     ) -> crate::Result<ShardedOrder> {
         anyhow::ensure!(d > 0, "tcp shards need a positive dimension");
         anyhow::ensure!(!addrs.is_empty(), "need a worker address");
         let topology = Topology::plan(n, 0, weights);
-        let links =
-            tcp::connect_shards_multi(addrs, &topology.sizes, d, 0)?;
+        let links = tcp::connect_shards_multi(
+            addrs,
+            &topology.sizes,
+            d,
+            0,
+            read_timeout,
+        )?;
         let shards = AsyncShards::new(
             links,
             &topology.sizes,
@@ -805,7 +839,13 @@ impl ShardedOrder {
         let elastic = source.map(|source| {
             let addrs = addrs.to_vec();
             let relink: Relink = Box::new(move |sizes, generation| {
-                tcp::connect_shards_multi(&addrs, sizes, d, generation)
+                tcp::connect_shards_multi(
+                    &addrs,
+                    sizes,
+                    d,
+                    generation,
+                    read_timeout,
+                )
             });
             ElasticState { source, relink, boundaries: 0 }
         });
@@ -1283,10 +1323,12 @@ impl OrderPolicy for ShardedOrder {
         // elastic schedule position, and each shard's next local order.
         // Sizes/bases are recomputed from (n, weights) on restore —
         // `Topology::plan` is pure — so only weights are serialized.
-        // The measured elastic planner's EWMA is deliberately not
-        // carried: its inputs are wall-clock costs, which no resumed
-        // process could reproduce anyway (contract-8 equivalence is
-        // over static and scheduled topologies).
+        // The measured elastic planner's EWMA rides along as an
+        // optional trailer (absent from pre-trailer snapshots): the
+        // costs it folded are wall-clock and not replayable, but
+        // *losing* them made a resumed elastic run re-plan from a
+        // cold planner — one epoch of forgotten skew history per
+        // restart, drifting from the uninterrupted run's plans.
         let mut out = Vec::new();
         crate::util::ser::put_u64(&mut out, self.n as u64);
         crate::util::ser::put_u64(&mut out, self.d as u64);
@@ -1321,6 +1363,19 @@ impl OrderPolicy for ShardedOrder {
                 }
             }
         }
+        // Optional trailer: the measured planner's EWMA, one f64 per
+        // live shard. Scheduled/static coordinators write nothing here
+        // and older snapshots end above — the reader keys on
+        // `remaining()`.
+        if let Some(el) = &self.elastic {
+            if let WeightSource::Measured(p) = &el.source {
+                let ewma = p.ewma();
+                crate::util::ser::put_u64(&mut out, ewma.len() as u64);
+                for &e in ewma {
+                    crate::util::ser::put_f64(&mut out, e);
+                }
+            }
+        }
         Some(out)
     }
 
@@ -1346,12 +1401,25 @@ impl OrderPolicy for ShardedOrder {
             for _ in 0..num_shards {
                 locals.push(r.usize_slice(self.n)?);
             }
+            // EWMA trailer (measured-elastic snapshots only; absent
+            // from static/scheduled ones and from pre-trailer blobs).
+            let ewma = if r.remaining() > 0 {
+                let len = r.len(MAX_SHARDS)?;
+                let mut v = Vec::with_capacity(len);
+                for _ in 0..len {
+                    v.push(r.f64()?);
+                }
+                Some(v)
+            } else {
+                None
+            };
             r.finish()?;
             Ok::<_, crate::util::ser::WireError>((
                 n, d, generation, weights, log, boundaries, locals,
+                ewma,
             ))
         })();
-        let (n, d, generation, weights, log, boundaries, locals) =
+        let (n, d, generation, weights, log, boundaries, locals, ewma) =
             parse.map_err(|e| format!("sharded state: {e}"))?;
         if n != self.n || d != self.d {
             return Err(format!(
@@ -1428,10 +1496,29 @@ impl OrderPolicy for ShardedOrder {
         }
         if let Some(el) = self.elastic.as_mut() {
             el.boundaries = boundaries;
-            // A fresh measured planner must track the restored shard
-            // count; its EWMA history is wall-clock and not replayable.
             if let WeightSource::Measured(p) = &mut el.source {
-                *p = ElasticPlanner::new(expected.num_shards());
+                // Rehydrate the planner from the snapshot's EWMA
+                // trailer so a resumed elastic run re-plans from the
+                // same smoothed cost history as the uninterrupted one.
+                // A snapshot without a trailer (pre-trailer format, or
+                // one written by a scheduled coordinator) falls back to
+                // a cold planner at the restored shard count.
+                *p = match ewma {
+                    Some(e) if e.len() == expected.num_shards()
+                        && e.iter().all(|x| x.is_finite() && *x >= 0.0) =>
+                    {
+                        ElasticPlanner::from_ewma(e)
+                    }
+                    Some(e) => {
+                        return Err(format!(
+                            "sharded state EWMA trailer has {} entries \
+                             for {} shards (or non-finite costs)",
+                            e.len(),
+                            expected.num_shards()
+                        ));
+                    }
+                    None => ElasticPlanner::new(expected.num_shards()),
+                };
             }
         }
         self.topology = expected;
@@ -1813,6 +1900,61 @@ mod tests {
                 feed_epoch(&mut p, &vs, 2);
             }
         }
+    }
+
+    #[test]
+    fn elastic_snapshot_carries_the_planner_ewma() {
+        // Contract 8, measured-elastic extension: save_state must carry
+        // the planner's smoothed cost history and restore_state must
+        // rehydrate it — a resumed elastic coordinator re-plans from
+        // the same EWMA as the uninterrupted one. (Before the fix the
+        // restore installed a cold planner, silently dropping the
+        // history.)
+        let n = 32;
+        let d = 2;
+        let vs = gen::vec_set(&mut Rng::new(9), n, d);
+        let mut p = ShardedOrder::new_elastic(n, d, &[1, 1], 4);
+        feed_epoch(&mut p, &vs, 8);
+        let ewma = vec![2.5e-3, 1.0e-3];
+        match &mut p.elastic.as_mut().unwrap().source {
+            WeightSource::Measured(pl) => {
+                *pl = ElasticPlanner::from_ewma(ewma.clone());
+            }
+            _ => panic!("new_elastic must carry a measured planner"),
+        }
+        let state = p.save_state().unwrap();
+
+        let mut q = ShardedOrder::new_elastic(n, d, &[1, 1], 4);
+        q.restore_state(&state).unwrap();
+        match &q.elastic.as_ref().unwrap().source {
+            WeightSource::Measured(pl) => {
+                assert_eq!(pl.ewma(), &ewma[..], "EWMA lost on resume")
+            }
+            _ => panic!("restored coordinator lost its planner"),
+        }
+        assert_eq!(q.epoch_order(0), p.epoch_order(0));
+
+        // Pre-trailer snapshots (24 bytes shorter) must still restore —
+        // with a cold planner at the restored shard count.
+        let legacy = &state[..state.len() - 8 - ewma.len() * 8];
+        let mut r = ShardedOrder::new_elastic(n, d, &[1, 1], 4);
+        r.restore_state(legacy).unwrap();
+        match &r.elastic.as_ref().unwrap().source {
+            WeightSource::Measured(pl) => {
+                assert_eq!(pl.ewma(), &[0.0, 0.0][..])
+            }
+            _ => panic!("legacy restore lost the planner"),
+        }
+
+        // A trailer whose length disagrees with the plan is rejected.
+        let mut bad = legacy.to_vec();
+        crate::util::ser::put_u64(&mut bad, 3);
+        for _ in 0..3 {
+            crate::util::ser::put_f64(&mut bad, 1.0e-3);
+        }
+        assert!(ShardedOrder::new_elastic(n, d, &[1, 1], 4)
+            .restore_state(&bad)
+            .is_err());
     }
 
     #[test]

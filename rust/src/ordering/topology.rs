@@ -249,6 +249,22 @@ impl ElasticPlanner {
         ElasticPlanner { ewma: vec![0.0; num_shards], alpha: 0.4 }
     }
 
+    /// The smoothed per-row cost per live shard, in shard order — the
+    /// planner's full mutable state, exposed so an elastic
+    /// coordinator's snapshot can carry it across a resume
+    /// (docs/determinism.md contract 8).
+    pub fn ewma(&self) -> &[f64] {
+        &self.ewma
+    }
+
+    /// Rebuild a planner from a snapshotted [`ElasticPlanner::ewma`]
+    /// vector. The restored planner folds future epochs exactly as the
+    /// snapshotted one would have: same smoothing factor, same
+    /// history-in-aggregate.
+    pub fn from_ewma(ewma: Vec<f64>) -> ElasticPlanner {
+        ElasticPlanner { ewma, alpha: 0.4 }
+    }
+
     /// Fold one epoch of observations and return the next epoch's
     /// weights **over the surviving shards**, in shard order.
     ///
@@ -597,6 +613,49 @@ mod tests {
             &w,
         );
         assert_eq!(w.len(), 2);
+    }
+
+    #[test]
+    fn planner_restored_from_ewma_plans_like_the_original() {
+        // Contract 8 for the elastic planner: a planner rebuilt from a
+        // snapshotted EWMA vector must produce the same plan sequence
+        // as the one that kept running — a resume must not forget the
+        // smoothed skew history. (Before the fix, restore_state
+        // replaced the planner with a cold one, so the first
+        // post-resume epoch re-planned from scratch.)
+        let mut live = ElasticPlanner::new(2);
+        let mut w = vec![1u64, 1];
+        for _ in 0..4 {
+            w = live.plan(
+                &[4.0e-3, 1.0e-3],
+                &[100, 100],
+                &[true, true],
+                &w,
+            );
+        }
+        let mut resumed = ElasticPlanner::from_ewma(live.ewma().to_vec());
+        assert_eq!(resumed.ewma(), live.ewma());
+        let mut wl = w.clone();
+        let mut wr = w;
+        for (costs, rows) in [
+            ([4.0e-3, 1.0e-3], [100usize, 100]),
+            ([1.0e-3, 1.0e-3], [100, 100]),
+            ([2.0e-3, 1.0e-3], [50, 150]),
+        ] {
+            wl = live.plan(&costs, &rows, &[true, true], &wl);
+            wr = resumed.plan(&costs, &rows, &[true, true], &wr);
+            assert_eq!(wl, wr, "resumed planner diverged");
+        }
+        // A cold planner does NOT match — the history matters, which
+        // is exactly why the snapshot carries it.
+        let mut cold = ElasticPlanner::new(2);
+        let wc = cold.plan(
+            &[1.0e-3, 1.0e-3],
+            &[100, 100],
+            &[true, true],
+            &[1, 4],
+        );
+        assert_eq!(wc, vec![1, 1], "cold planner re-balances instantly");
     }
 
     #[test]

@@ -12,6 +12,8 @@
 //! | `EpochEnd` | empty |
 //! | `Report`   | `u32 len`, `u64 state_bytes`, then `len` `u32` unit ids |
 //! | `Seed`     | `u32 len`, then `len` `u32` unit ids (checkpoint resume) |
+//! | `Register` | `u32 capacity`, `u32 generation`, `u32 name_len`, name bytes |
+//! | `Lease`    | `u32 worker_id`, `u32 generation` |
 //!
 //! Floats travel as raw IEEE-754 bit patterns (`f32::to_bits`), so
 //! NaN payloads, signed zeros, infinities, and subnormals round-trip
@@ -268,6 +270,120 @@ pub fn decode_seed(
     Ok(order)
 }
 
+/// Longest worker name accepted in a [`Register`] payload. Names are
+/// labels for `/metrics` and logs, not identities; the cap keeps a
+/// hostile registration from carrying megabytes of "name".
+pub const MAX_WORKER_NAME: usize = 256;
+
+/// A worker's registration with the order-service daemon: the worker
+/// dialed in and announces how many concurrent shard leases it will
+/// accept, the registry generation it last saw (0 on a fresh dial; a
+/// nonzero stale generation lets the daemon refuse a worker that
+/// wandered in from a previous daemon incarnation), and a display
+/// name.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Register {
+    /// Max concurrent shard leases this worker accepts (>= 1).
+    pub capacity: u32,
+    /// Registry generation the worker last saw (0 = fresh).
+    pub generation: u32,
+    /// Display name for logs and `/metrics` (UTF-8, may be empty).
+    pub name: String,
+}
+
+/// Encode a [`Register`] payload.
+pub fn encode_register(reg: &Register, out: &mut Vec<u8>) {
+    assert!(
+        reg.name.len() <= MAX_WORKER_NAME,
+        "worker name over wire limit"
+    );
+    out.clear();
+    out.reserve(12 + reg.name.len());
+    out.extend_from_slice(&reg.capacity.to_le_bytes());
+    out.extend_from_slice(&reg.generation.to_le_bytes());
+    out.extend_from_slice(&(reg.name.len() as u32).to_le_bytes());
+    out.extend_from_slice(reg.name.as_bytes());
+}
+
+/// Decode a [`Register`] payload, validating the declared name length
+/// against the payload, the name-length cap, UTF-8 validity, and a
+/// positive capacity.
+pub fn decode_register(payload: &[u8]) -> Result<Register, WireError> {
+    if payload.len() < 12 {
+        return Err(WireError::Malformed(format!(
+            "register payload is {} bytes, header needs 12",
+            payload.len()
+        )));
+    }
+    let capacity =
+        u32::from_le_bytes(payload[0..4].try_into().unwrap());
+    let generation =
+        u32::from_le_bytes(payload[4..8].try_into().unwrap());
+    let name_len =
+        u32::from_le_bytes(payload[8..12].try_into().unwrap()) as usize;
+    if name_len > MAX_WORKER_NAME {
+        return Err(WireError::Malformed(format!(
+            "worker name of {name_len} bytes exceeds the \
+             {MAX_WORKER_NAME}-byte cap"
+        )));
+    }
+    if payload.len() != 12 + name_len {
+        return Err(WireError::Malformed(format!(
+            "register declares a {name_len}-byte name ({} bytes) but \
+             payload carries {}",
+            12 + name_len,
+            payload.len()
+        )));
+    }
+    if capacity == 0 {
+        return Err(WireError::Malformed(
+            "register capacity must be >= 1".to_string(),
+        ));
+    }
+    let name = std::str::from_utf8(&payload[12..])
+        .map_err(|_| {
+            WireError::Malformed(
+                "worker name is not valid UTF-8".to_string(),
+            )
+        })?
+        .to_string();
+    Ok(Register { capacity, generation, name })
+}
+
+/// The daemon's acceptance of a [`Register`]: the worker's assigned id
+/// (unique within this daemon incarnation) and the registry generation
+/// the worker now belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Lease {
+    /// Registry-assigned worker id.
+    pub worker_id: u32,
+    /// Registry generation of this daemon incarnation.
+    pub generation: u32,
+}
+
+/// Encode a [`Lease`] payload.
+pub fn encode_lease(lease: Lease, out: &mut Vec<u8>) {
+    out.clear();
+    out.extend_from_slice(&lease.worker_id.to_le_bytes());
+    out.extend_from_slice(&lease.generation.to_le_bytes());
+}
+
+/// Decode a [`Lease`] payload.
+pub fn decode_lease(payload: &[u8]) -> Result<Lease, WireError> {
+    if payload.len() != 8 {
+        return Err(WireError::Malformed(format!(
+            "lease payload is {} bytes, expected 8",
+            payload.len()
+        )));
+    }
+    Ok(Lease {
+        worker_id: u32::from_le_bytes(payload[0..4].try_into().unwrap()),
+        generation: u32::from_le_bytes(
+            payload[4..8].try_into().unwrap(),
+        ),
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -299,6 +415,57 @@ mod tests {
         assert_eq!(decode_hello(&buf).unwrap(), h);
         assert!(decode_hello(&buf[..8]).is_err());
         assert!(decode_hello(&buf[..7]).is_err());
+    }
+
+    #[test]
+    fn register_and_lease_roundtrip() {
+        let mut buf = Vec::new();
+        let reg = Register {
+            capacity: 4,
+            generation: 0,
+            name: "worker-α".to_string(),
+        };
+        encode_register(&reg, &mut buf);
+        assert_eq!(decode_register(&buf).unwrap(), reg);
+        // Truncated header / body, zero capacity, over-cap and
+        // non-UTF-8 names: all typed errors, never panics.
+        assert!(decode_register(&buf[..8]).is_err());
+        assert!(decode_register(&buf[..buf.len() - 1]).is_err());
+        let mut zero = Vec::new();
+        encode_register(
+            &Register {
+                capacity: 1,
+                generation: 0,
+                name: String::new(),
+            },
+            &mut zero,
+        );
+        zero[0..4].copy_from_slice(&0u32.to_le_bytes());
+        assert!(decode_register(&zero).is_err());
+        let mut oversized = Vec::new();
+        oversized.extend_from_slice(&1u32.to_le_bytes());
+        oversized.extend_from_slice(&0u32.to_le_bytes());
+        oversized
+            .extend_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(decode_register(&oversized).is_err());
+        let mut bad_utf8 = Vec::new();
+        encode_register(
+            &Register {
+                capacity: 1,
+                generation: 0,
+                name: "ab".to_string(),
+            },
+            &mut bad_utf8,
+        );
+        bad_utf8[12] = 0xff;
+        bad_utf8[13] = 0xfe;
+        assert!(decode_register(&bad_utf8).is_err());
+
+        let lease = Lease { worker_id: 7, generation: 3 };
+        encode_lease(lease, &mut buf);
+        assert_eq!(buf.len(), 8);
+        assert_eq!(decode_lease(&buf).unwrap(), lease);
+        assert!(decode_lease(&buf[..5]).is_err());
     }
 
     #[test]

@@ -68,6 +68,14 @@ pub enum TransportError {
     Io(std::io::Error),
     /// The peer rejected or botched the connection handshake.
     Handshake(String),
+    /// The peer produced no bytes within the link's configured read
+    /// timeout — a link failure the elastic coordinator can act on at
+    /// the epoch boundary, distinct from a clean disconnect (the socket
+    /// may still be open, just silent).
+    Timeout {
+        /// How long the coordinator waited before giving up.
+        after: std::time::Duration,
+    },
 }
 
 impl std::fmt::Display for TransportError {
@@ -81,6 +89,11 @@ impl std::fmt::Display for TransportError {
             TransportError::Handshake(why) => {
                 write!(f, "handshake failed: {why}")
             }
+            TransportError::Timeout { after } => write!(
+                f,
+                "shard peer silent for {:.1}s (read timeout)",
+                after.as_secs_f64()
+            ),
         }
     }
 }

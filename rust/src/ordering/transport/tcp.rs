@@ -37,8 +37,9 @@ use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::time::Duration;
 
 use super::codec::{
-    decode_block, decode_hello, decode_report, decode_seed,
-    encode_block, encode_hello, encode_report, encode_seed, Hello,
+    decode_block, decode_hello, decode_lease, decode_report,
+    decode_seed, encode_block, encode_hello, encode_register,
+    encode_report, encode_seed, Hello, Register,
 };
 use super::{EpochReport, LinkStats, ShardTransport, TransportError};
 use crate::ordering::queue::ScratchBlock;
@@ -48,11 +49,18 @@ use crate::util::ser::{
     FRAME_HEADER_LEN, MAX_FRAME_PAYLOAD,
 };
 
-/// Upper bound on waiting for any single frame from a peer. Generous —
-/// a healthy worker answers an `EpochEnd` in microseconds — but finite,
-/// so a hung socket turns into a typed boundary error instead of
-/// stalling the run (and CI) forever.
-const READ_TIMEOUT: Duration = Duration::from_secs(120);
+/// Default upper bound (seconds) on waiting for any single frame from a
+/// peer. Generous — a healthy worker answers an `EpochEnd` in
+/// microseconds — but finite, so a hung socket turns into a typed
+/// boundary error instead of stalling the run (and CI) forever.
+/// Overridable per run with `--read-timeout` (the order-service
+/// daemon's registration heartbeats want seconds, not minutes).
+pub const DEFAULT_READ_TIMEOUT_SECS: u64 = 120;
+
+/// [`DEFAULT_READ_TIMEOUT_SECS`] as a [`Duration`].
+pub fn default_read_timeout() -> Duration {
+    Duration::from_secs(DEFAULT_READ_TIMEOUT_SECS)
+}
 
 /// Coordinator-side endpoint of one shard link over TCP. Created by
 /// [`connect`]; implements [`ShardTransport`] with the same observable
@@ -67,6 +75,7 @@ pub struct TcpTransport {
     read_buf: Vec<u8>,
     d: usize,
     local_n: usize,
+    read_timeout: Duration,
     tx_bytes: u64,
     rx_bytes: u64,
     dead: Option<String>,
@@ -84,15 +93,35 @@ pub fn connect<A: ToSocketAddrs>(
     local_n: usize,
     d: usize,
     generation: u64,
+    read_timeout: Duration,
+) -> Result<TcpTransport, TransportError> {
+    let stream = TcpStream::connect(addr)?;
+    from_stream(stream, local_n, d, generation, read_timeout)
+}
+
+/// [`connect`] over an already-open stream — the order-service daemon's
+/// path, where the *worker* dialed in and registered
+/// ([`run_registered_worker`]) and the coordinator performs the same
+/// `Hello`/`Ack` handshake over the held registration socket when the
+/// worker is leased to a job.
+pub fn from_stream(
+    stream: TcpStream,
+    local_n: usize,
+    d: usize,
+    generation: u64,
+    read_timeout: Duration,
 ) -> Result<TcpTransport, TransportError> {
     assert!(d > 0, "tcp shard link needs a positive dimension");
     assert!(
         local_n <= u32::MAX as usize && d <= u32::MAX as usize,
         "shard size / dimension over wire limit"
     );
-    let stream = TcpStream::connect(addr)?;
+    assert!(
+        read_timeout > Duration::ZERO,
+        "a zero read timeout would block forever"
+    );
     stream.set_nodelay(true)?;
-    stream.set_read_timeout(Some(READ_TIMEOUT))?;
+    stream.set_read_timeout(Some(read_timeout))?;
     let mut t = TcpTransport {
         stream,
         pool: vec![ScratchBlock::new(d)],
@@ -101,6 +130,7 @@ pub fn connect<A: ToSocketAddrs>(
         read_buf: Vec::new(),
         d,
         local_n,
+        read_timeout,
         tx_bytes: 0,
         rx_bytes: 0,
         dead: None,
@@ -213,7 +243,25 @@ impl ShardTransport for TcpTransport {
         {
             Ok(k) => k,
             Err(e) => {
-                let err: TransportError = e.into();
+                // A read-timeout expiry is a *link* failure, not a
+                // generic socket error: typed so the elastic
+                // coordinator's boundary re-plan can act on it like
+                // any other lost shard. (SO_RCVTIMEO surfaces as
+                // TimedOut or WouldBlock depending on the platform.)
+                let err = match e {
+                    FrameReadError::Io(ioe)
+                        if matches!(
+                            ioe.kind(),
+                            std::io::ErrorKind::TimedOut
+                                | std::io::ErrorKind::WouldBlock
+                        ) =>
+                    {
+                        TransportError::Timeout {
+                            after: self.read_timeout,
+                        }
+                    }
+                    other => other.into(),
+                };
                 self.dead = Some(err.to_string());
                 return Err(err);
             }
@@ -283,11 +331,18 @@ pub fn connect_shards<A: ToSocketAddrs + Copy>(
     sizes: &[usize],
     d: usize,
     generation: u64,
+    read_timeout: Duration,
 ) -> Result<Vec<Box<dyn ShardTransport>>, TransportError> {
     let mut links: Vec<Box<dyn ShardTransport>> =
         Vec::with_capacity(sizes.len());
     for &size in sizes {
-        links.push(Box::new(connect(addr, size, d, generation)?));
+        links.push(Box::new(connect(
+            addr,
+            size,
+            d,
+            generation,
+            read_timeout,
+        )?));
     }
     Ok(links)
 }
@@ -304,6 +359,7 @@ pub fn connect_shards_multi(
     sizes: &[usize],
     d: usize,
     generation: u64,
+    read_timeout: Duration,
 ) -> Result<Vec<Box<dyn ShardTransport>>, TransportError> {
     assert!(!addrs.is_empty(), "need at least one worker address");
     let mut links: Vec<Box<dyn ShardTransport>> =
@@ -313,7 +369,8 @@ pub fn connect_shards_multi(
         let mut opened = false;
         for k in 0..addrs.len() {
             let addr = &addrs[(w + k) % addrs.len()];
-            match connect(addr.as_str(), size, d, generation) {
+            match connect(addr.as_str(), size, d, generation, read_timeout)
+            {
                 Ok(link) => {
                     links.push(Box::new(link));
                     opened = true;
@@ -550,6 +607,111 @@ pub fn run_worker_server(
     Ok(())
 }
 
+/// Dial an order-service daemon, register, and return the held socket
+/// once the daemon answers with a `Lease`. The registration handshake
+/// is bounded by `read_timeout`; the wait for job traffic afterwards
+/// is not (a registered worker may sit idle between jobs for as long
+/// as the daemon keeps it).
+pub fn register_with_daemon(
+    addr: &str,
+    name: &str,
+    read_timeout: Duration,
+) -> Result<(TcpStream, u32, u32), TransportError> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(read_timeout))?;
+    let mut payload = Vec::new();
+    encode_register(
+        &Register {
+            capacity: 1,
+            generation: 0,
+            name: name.to_string(),
+        },
+        &mut payload,
+    );
+    let mut scratch = Vec::new();
+    write_frame(&mut stream, FrameKind::Register, &payload, &mut scratch)
+        .map_err(|e| {
+            TransportError::Handshake(format!("sending register: {e}"))
+        })?;
+    let mut buf = Vec::new();
+    match read_frame(&mut stream, &mut buf) {
+        Ok(FrameKind::Lease) => {}
+        Ok(other) => {
+            return Err(TransportError::Handshake(format!(
+                "expected lease, daemon sent {other:?}"
+            )))
+        }
+        Err(e) => {
+            return Err(TransportError::Handshake(format!(
+                "reading lease: {e}"
+            )))
+        }
+    }
+    let lease = decode_lease(&buf[FRAME_HEADER_LEN..])?;
+    stream.set_read_timeout(None)?;
+    Ok((stream, lease.worker_id, lease.generation))
+}
+
+/// Run a registered shard worker (`grab exp cdgrab --register ADDR`):
+/// dial the order-service daemon at `addr`, register, and serve the
+/// ordinary `Hello` shard session the daemon runs over the held socket
+/// whenever this worker is leased to a job. One registration serves
+/// one job session — the daemon closes the socket at the job boundary
+/// and the worker re-registers, so a drained worker never detaches
+/// mid-epoch (docs/determinism.md contracts 5/6 are per-session).
+///
+/// Exits `Ok` once the daemon goes away *after* a successful
+/// registration (the drain/shutdown path); fails only when the first
+/// registration cannot be established.
+pub fn run_registered_worker(
+    addr: &str,
+    read_timeout: Duration,
+) -> anyhow::Result<()> {
+    let name = format!("worker-{}", std::process::id());
+    let mut registered_before = false;
+    let mut failures = 0u32;
+    loop {
+        let stream =
+            match register_with_daemon(addr, &name, read_timeout) {
+                Ok((stream, id, generation)) => {
+                    failures = 0;
+                    registered_before = true;
+                    eprintln!(
+                        "[service] registered as {name} \
+                         (worker {id}, registry generation {generation})"
+                    );
+                    stream
+                }
+                Err(e) => {
+                    if registered_before {
+                        eprintln!(
+                            "[service] daemon gone ({e}); worker done"
+                        );
+                        return Ok(());
+                    }
+                    failures += 1;
+                    anyhow::ensure!(
+                        failures < 5,
+                        "could not register with {addr}: {e}"
+                    );
+                    std::thread::sleep(Duration::from_millis(300));
+                    continue;
+                }
+            };
+        match serve_connection(stream) {
+            // Clean close (drain, job boundary, or daemon shutdown):
+            // try to re-register; a refused dial ends the worker above.
+            Ok(()) | Err(TransportError::Disconnected(_)) => {
+                eprintln!("[service] session closed; re-registering");
+            }
+            Err(e) => {
+                eprintln!("[service] session failed ({e}); re-registering");
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -559,7 +721,7 @@ mod tests {
     fn tcp_link_round_trips_an_epoch() {
         let addr = spawn_loopback(1).unwrap();
         let d = 2;
-        let mut link = connect(addr, 4, d, 0).unwrap();
+        let mut link = connect(addr, 4, d, 0, default_read_timeout()).unwrap();
         let mut scratch = link.acquire().unwrap();
         for row in [[1.0f32, 0.0], [-1.0, 0.0], [0.0, 2.0], [0.0, -2.0]] {
             scratch.push_row(&row);
@@ -583,7 +745,7 @@ mod tests {
             let (stream, _) = listener.accept().unwrap();
             drop(stream); // slam the door before the handshake
         });
-        let err = connect(addr, 4, 2, 0).expect_err("handshake must fail");
+        let err = connect(addr, 4, 2, 0, default_read_timeout()).expect_err("handshake must fail");
         assert!(matches!(err, TransportError::Handshake(_)), "{err}");
         h.join().unwrap();
     }
@@ -600,7 +762,7 @@ mod tests {
             let _ = stream.read(&mut sink);
             let _ = stream.write_all(b"definitely not a frame header");
         });
-        let err = connect(addr, 4, 2, 0).expect_err("handshake must fail");
+        let err = connect(addr, 4, 2, 0, default_read_timeout()).expect_err("handshake must fail");
         assert!(matches!(err, TransportError::Handshake(_)), "{err}");
         h.join().unwrap();
     }
@@ -700,7 +862,7 @@ mod tests {
             let _ = read_frame(&mut stream, &mut buf); // first block
             drop(stream);
         });
-        let mut link = connect(addr, 8, 2, 0).unwrap();
+        let mut link = connect(addr, 8, 2, 0, default_read_timeout()).unwrap();
         let mut scratch = link.acquire().unwrap();
         scratch.push_row(&[1.0, -1.0]);
         let _ = link.send_block(scratch);
@@ -710,6 +872,53 @@ mod tests {
         let err = link.recv_report().expect_err("dead peer");
         let msg = err.to_string();
         assert!(!msg.is_empty());
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn silent_peer_times_out_with_a_typed_link_failure() {
+        // A worker that handshakes and then goes silent (wedged, not
+        // dead: the socket stays open) must surface as
+        // TransportError::Timeout after the configured read timeout —
+        // the regression for the hardcoded 120 s READ_TIMEOUT that
+        // made a wedged worker stall CI for two minutes per link.
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let (mut stream, _) = listener.accept().unwrap();
+            let mut buf = Vec::new();
+            assert_eq!(
+                read_frame(&mut stream, &mut buf).unwrap(),
+                FrameKind::Hello
+            );
+            let mut scratch = Vec::new();
+            write_frame(&mut stream, FrameKind::Ack, &[], &mut scratch)
+                .unwrap();
+            // Never answer anything again; hold the socket open until
+            // the coordinator hangs up.
+            while read_frame(&mut stream, &mut buf).is_ok() {}
+        });
+        let timeout = Duration::from_millis(100);
+        let mut link = connect(addr, 2, 2, 0, timeout).unwrap();
+        let mut scratch = link.acquire().unwrap();
+        scratch.push_row(&[1.0, -1.0]);
+        scratch.push_row(&[-1.0, 1.0]);
+        assert!(link.send_block(scratch));
+        assert!(link.end_epoch());
+        let err = link.recv_report().expect_err("silent peer must time out");
+        match err {
+            TransportError::Timeout { after } => {
+                assert_eq!(after, timeout)
+            }
+            other => panic!("expected Timeout, got {other}"),
+        }
+        // The link is dead from here on: a second receive reports the
+        // recorded failure instead of waiting again.
+        assert!(matches!(
+            link.recv_report(),
+            Err(TransportError::Disconnected(_))
+        ));
+        drop(link);
         h.join().unwrap();
     }
 }

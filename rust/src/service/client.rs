@@ -1,0 +1,240 @@
+//! `grab exp cdgrab --service ADDR` — submit a CD-GraB job to a
+//! running `grab serve` daemon and *gate* the result: the daemon's
+//! per-epoch order hashes must be bit-equal to a local in-process
+//! synchronous run of the same `(n, d, block, W, seed)` — determinism
+//! contract 5 (docs/determinism.md) carried over the registered-worker
+//! path — and the daemon's `/metrics` transport counters must cover
+//! the job's own reported link totals. Writes `service_job.csv` (one
+//! row per epoch: daemon vs local hash + herding bound) to the results
+//! directory.
+//!
+//! The shard count is taken from the daemon's fleet: whatever
+//! `workers_available` reports at submission time (the job leases the
+//! whole idle fleet). The local reference run uses the same W, so the
+//! gate is exact whatever fleet size the daemon happens to hold.
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::exp::cdgrab::CdGrabConfig;
+use crate::ordering::{OrderPolicy, ShardedOrder};
+use crate::service::{http, order_hash, JobSpec};
+use crate::util::prop::gen;
+use crate::util::rng::Rng;
+use crate::util::ser::{fmt_f, CsvWriter, Json};
+
+/// Poll cadence while waiting on the daemon job.
+const POLL_EVERY: Duration = Duration::from_millis(100);
+
+/// Run one job against the daemon at `addr` (control-plane address)
+/// and verify it against a local reference run. See the module doc.
+pub fn run_job_against_daemon(
+    addr: &str,
+    cfg: &CdGrabConfig,
+    out_dir: &Path,
+) -> Result<()> {
+    // Size the job to the daemon's idle fleet.
+    let (status, health) = http::get(addr, "/health")
+        .with_context(|| format!("GET /health on {addr}"))?;
+    anyhow::ensure!(status == 200, "/health answered {status}: {health}");
+    let health = Json::parse(&health).context("parsing /health")?;
+    let shards = health.get("workers_available")?.as_usize()?;
+    anyhow::ensure!(
+        shards >= 1,
+        "daemon at {addr} has no registered workers; start some with \
+         `grab exp cdgrab --register <registry addr>`"
+    );
+    let spec = JobSpec {
+        n: cfg.n,
+        d: cfg.d,
+        epochs: cfg.epochs,
+        block: cfg.block,
+        shards: shards.min(64).min(cfg.n),
+        seed: cfg.seed,
+    };
+    eprintln!(
+        "[service] submitting n={} d={} epochs={} block={} W={} to {addr}",
+        spec.n, spec.d, spec.epochs, spec.block, spec.shards
+    );
+
+    let (status, body) =
+        http::post(addr, "/jobs", &spec.to_json().to_string())
+            .context("POST /jobs")?;
+    anyhow::ensure!(
+        status == 202,
+        "job submission answered {status}: {body}"
+    );
+    let job_id = Json::parse(&body)?.get("job")?.as_usize()?;
+
+    // Wait for the job: bounded by the links' own read timeout per
+    // epoch plus slack, so a wedged daemon fails loudly instead of
+    // hanging the client forever.
+    let deadline = Instant::now()
+        + Duration::from_secs(
+            60 + spec.epochs as u64 * cfg.read_timeout_secs,
+        );
+    let job = loop {
+        anyhow::ensure!(
+            Instant::now() < deadline,
+            "job {job_id} still not finished at the polling deadline"
+        );
+        std::thread::sleep(POLL_EVERY);
+        let (status, body) =
+            http::get(addr, &format!("/jobs/{job_id}"))?;
+        anyhow::ensure!(
+            status == 200,
+            "GET /jobs/{job_id} answered {status}: {body}"
+        );
+        let job = Json::parse(&body)?;
+        match job.get("status")?.as_str()? {
+            "running" => continue,
+            "done" => break job,
+            "failed" => {
+                let why = job
+                    .get("error")
+                    .and_then(Json::as_str)
+                    .unwrap_or("unknown");
+                anyhow::bail!("daemon job {job_id} failed: {why}");
+            }
+            other => anyhow::bail!("unknown job status {other:?}"),
+        }
+    };
+
+    let daemon_hashes: Vec<u32> = job
+        .get("epoch_hashes")?
+        .as_arr()?
+        .iter()
+        .map(|v| v.as_f64().map(|x| x as u32))
+        .collect::<Result<_>>()?;
+    let daemon_herd: Vec<f64> = job
+        .get("herd_inf")?
+        .as_arr()?
+        .iter()
+        .map(Json::as_f64)
+        .collect::<Result<_>>()?;
+    let job_tx = job.get("tx_bytes")?.as_f64()? as u64;
+    let job_rx = job.get("rx_bytes")?.as_f64()? as u64;
+    anyhow::ensure!(
+        daemon_hashes.len() == spec.epochs,
+        "daemon reported {} epoch hashes for {} epochs",
+        daemon_hashes.len(),
+        spec.epochs
+    );
+    anyhow::ensure!(
+        job_tx > 0 && job_rx > 0,
+        "daemon job moved no bytes (tx={job_tx}, rx={job_rx}) — the \
+         session cannot have run over worker links"
+    );
+
+    // Local reference: the synchronous in-process coordinator at the
+    // same parameters. Contract 5 says the orders must match the
+    // daemon's TCP session bit-for-bit.
+    let mut rng = Rng::new(spec.seed);
+    let vs = gen::vec_set(&mut rng, spec.n, spec.d);
+    let mut flat = vec![0.0f32; spec.n * spec.d];
+    let mut policy = ShardedOrder::new(spec.n, spec.d, spec.shards);
+    let mut local_hashes = Vec::with_capacity(spec.epochs);
+    let mut local_herd = Vec::with_capacity(spec.epochs);
+    for _ in 0..spec.epochs {
+        crate::ordering::stream_static_epoch(
+            &mut policy,
+            &vs,
+            &mut flat,
+            spec.block,
+        );
+        let order = policy.epoch_order(0);
+        local_hashes.push(order_hash(order));
+        let (inf, _) = crate::herding::herding_bound(&vs, order);
+        local_herd.push(inf as f64);
+    }
+
+    let mut csv = CsvWriter::create(
+        &out_dir.join("service_job.csv"),
+        &[
+            "epoch",
+            "daemon_hash",
+            "local_hash",
+            "daemon_herd_inf",
+            "local_herd_inf",
+        ],
+    )?;
+    for e in 0..spec.epochs {
+        csv.row(&[
+            e.to_string(),
+            format!("{:08x}", daemon_hashes[e]),
+            format!("{:08x}", local_hashes[e]),
+            fmt_f(daemon_herd[e]),
+            fmt_f(local_herd[e]),
+        ])?;
+    }
+    csv.flush()?;
+
+    anyhow::ensure!(
+        daemon_hashes == local_hashes,
+        "daemon orders diverge from the in-process reference \
+         (contract 5 violation): daemon {daemon_hashes:x?} vs local \
+         {local_hashes:x?}"
+    );
+    for (e, (a, b)) in
+        daemon_herd.iter().zip(local_herd.iter()).enumerate()
+    {
+        anyhow::ensure!(
+            (a - b).abs() <= 1e-6 * b.abs().max(1.0),
+            "epoch {e} herding bound diverges: daemon {a} vs local {b}"
+        );
+    }
+
+    // The daemon's exported transport counters must cover this job's
+    // own totals (they fold in at each job boundary).
+    let (status, metrics) = http::get(addr, "/metrics")?;
+    anyhow::ensure!(status == 200, "/metrics answered {status}");
+    let metric_tx = metric_value(&metrics, "grab_transport_tx_bytes_total")
+        .context("missing grab_transport_tx_bytes_total")?;
+    let metric_rx = metric_value(&metrics, "grab_transport_rx_bytes_total")
+        .context("missing grab_transport_rx_bytes_total")?;
+    anyhow::ensure!(
+        metric_tx >= job_tx && metric_rx >= job_rx,
+        "/metrics transport counters (tx={metric_tx}, rx={metric_rx}) \
+         below this job's totals (tx={job_tx}, rx={job_rx})"
+    );
+
+    eprintln!(
+        "[service] job {job_id} verified: {} epochs bit-equal to the \
+         in-process reference at W={}; {} B tx / {} B rx over worker \
+         links (results: {})",
+        spec.epochs,
+        spec.shards,
+        job_tx,
+        job_rx,
+        out_dir.join("service_job.csv").display()
+    );
+    Ok(())
+}
+
+/// Pull one counter/gauge value out of a Prometheus text exposition.
+fn metric_value(text: &str, name: &str) -> Option<u64> {
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix(name) {
+            if let Some(v) = rest.strip_prefix(' ') {
+                return v.trim().parse().ok();
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metric_values_parse_out_of_exposition_text() {
+        let text = "# HELP grab_x Things.\n# TYPE grab_x counter\n\
+                    grab_x 42\ngrab_x_total 7\n";
+        assert_eq!(metric_value(text, "grab_x"), Some(42));
+        assert_eq!(metric_value(text, "grab_x_total"), Some(7));
+        assert_eq!(metric_value(text, "grab_y"), None);
+    }
+}

@@ -1,0 +1,297 @@
+//! Minimal HTTP/1.1 layer for the daemon's control plane.
+//!
+//! Hand-rolled over `std::net` because the vendored dependency closure
+//! has no HTTP crate — and the control plane needs almost nothing:
+//! request line + headers + optional `Content-Length` body in, one
+//! `Connection: close` response out, one TCP connection per exchange.
+//! The same file carries the tiny blocking client used by
+//! `grab exp cdgrab --service`, the tests, and the CI smoke (instead
+//! of curl, where curl is not guaranteed).
+//!
+//! Deliberate non-goals: keep-alive, chunked encoding, TLS, header
+//! continuation lines. Requests are capped (16 KiB of headers, 1 MiB
+//! of body) so a hostile peer cannot make the daemon buffer without
+//! bound.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::ser::Json;
+
+/// Max bytes of request line + headers the server will buffer.
+const MAX_HEAD: usize = 16 * 1024;
+/// Max request body bytes the server will buffer.
+const MAX_BODY: usize = 1024 * 1024;
+
+/// A parsed inbound request: method, path, raw body.
+#[derive(Debug)]
+pub struct Request {
+    /// Uppercase method token (`GET`, `POST`, …).
+    pub method: String,
+    /// Request target as sent (e.g. `/jobs/3`); query strings are not
+    /// split off because no route uses them.
+    pub path: String,
+    /// Raw request body (`Content-Length` bytes; empty when absent).
+    pub body: Vec<u8>,
+}
+
+/// Read one request off `stream`. Errors on malformed request lines,
+/// over-cap heads/bodies, or a peer that hangs up mid-request; the
+/// caller answers errors with a `400` (or just drops the socket).
+pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
+    // Accumulate until the blank line separating head from body.
+    let mut buf: Vec<u8> = Vec::with_capacity(512);
+    let mut chunk = [0u8; 512];
+    let head_end = loop {
+        if let Some(pos) =
+            buf.windows(4).position(|w| w == b"\r\n\r\n")
+        {
+            break pos + 4;
+        }
+        if buf.len() > MAX_HEAD {
+            bail!("request head over {MAX_HEAD} bytes");
+        }
+        let got = stream.read(&mut chunk).context("reading request")?;
+        if got == 0 {
+            bail!("peer closed mid-request ({} bytes in)", buf.len());
+        }
+        buf.extend_from_slice(&chunk[..got]);
+    };
+
+    let head = std::str::from_utf8(&buf[..head_end])
+        .context("request head is not UTF-8")?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = match parts.next() {
+        Some(m) if !m.is_empty() => m.to_ascii_uppercase(),
+        _ => bail!("empty request line"),
+    };
+    let path = match parts.next() {
+        Some(p) => p.to_string(),
+        None => bail!("request line has no path: {request_line:?}"),
+    };
+    match parts.next() {
+        Some(v) if v.starts_with("HTTP/1.") => {}
+        other => bail!("not an HTTP/1.x request: {other:?}"),
+    }
+
+    let mut content_length = 0usize;
+    for line in lines {
+        if let Some((k, v)) = line.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_length = v
+                    .trim()
+                    .parse()
+                    .context("unparseable Content-Length")?;
+            }
+        }
+    }
+    if content_length > MAX_BODY {
+        bail!("request body of {content_length} bytes over {MAX_BODY} cap");
+    }
+
+    let mut body = buf[head_end..].to_vec();
+    while body.len() < content_length {
+        let got = stream.read(&mut chunk).context("reading body")?;
+        if got == 0 {
+            bail!(
+                "peer closed mid-body ({} of {content_length} bytes)",
+                body.len()
+            );
+        }
+        body.extend_from_slice(&chunk[..got]);
+    }
+    body.truncate(content_length);
+    Ok(Request { method, path, body })
+}
+
+/// The reason phrase for the handful of statuses the daemon emits.
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        503 => "Service Unavailable",
+        _ => "Response",
+    }
+}
+
+/// Write a complete `Connection: close` response and flush it. The
+/// caller drops the stream afterwards; the close is the end-of-response
+/// marker the client relies on.
+pub fn respond(
+    stream: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+) -> Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        reason(status),
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body)?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// [`respond`] with a JSON body.
+pub fn respond_json(
+    stream: &mut TcpStream,
+    status: u16,
+    body: &Json,
+) -> Result<()> {
+    respond(
+        stream,
+        status,
+        "application/json",
+        body.to_string().as_bytes(),
+    )
+}
+
+/// Blocking one-shot client request: returns `(status, body)`. Reads
+/// to EOF (the server closes after each response).
+pub fn request(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+) -> Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)
+        .with_context(|| format!("dialing control plane {addr}"))?;
+    stream.set_nodelay(true)?;
+    stream
+        .set_read_timeout(Some(std::time::Duration::from_secs(30)))?;
+    let body = body.unwrap_or("");
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()?;
+
+    let mut raw = Vec::new();
+    stream
+        .read_to_end(&mut raw)
+        .context("reading response")?;
+    let text = String::from_utf8_lossy(&raw);
+    let head_end = text
+        .find("\r\n\r\n")
+        .context("response has no header terminator")?;
+    let status_line = text.lines().next().unwrap_or("");
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .context("response has no status code")?
+        .parse()
+        .context("unparseable status code")?;
+    Ok((status, text[head_end + 4..].to_string()))
+}
+
+/// `GET path` against `addr`.
+pub fn get(addr: &str, path: &str) -> Result<(u16, String)> {
+    request(addr, "GET", path, None)
+}
+
+/// `POST path` with a JSON string body against `addr`.
+pub fn post(addr: &str, path: &str, body: &str) -> Result<(u16, String)> {
+    request(addr, "POST", path, Some(body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    /// One server turn: parse a request, apply `f`, send its response.
+    fn serve_once<F>(f: F) -> String
+    where
+        F: FnOnce(Result<Request>, &mut TcpStream) + Send + 'static,
+    {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        std::thread::spawn(move || {
+            let (mut stream, _) = listener.accept().unwrap();
+            let req = read_request(&mut stream);
+            f(req, &mut stream);
+        });
+        addr
+    }
+
+    #[test]
+    fn request_and_response_round_trip() {
+        let addr = serve_once(|req, stream| {
+            let req = req.unwrap();
+            assert_eq!(req.method, "POST");
+            assert_eq!(req.path, "/jobs");
+            assert_eq!(req.body, b"{\"n\":8}");
+            respond_json(
+                stream,
+                202,
+                &crate::util::ser::obj(vec![(
+                    "job",
+                    Json::Num(0.0),
+                )]),
+            )
+            .unwrap();
+        });
+        let (status, body) = post(&addr, "/jobs", "{\"n\":8}").unwrap();
+        assert_eq!(status, 202);
+        let v = Json::parse(&body).unwrap();
+        assert_eq!(v.get("job").unwrap().as_usize().unwrap(), 0);
+    }
+
+    #[test]
+    fn get_carries_no_body_and_any_status_parses() {
+        let addr = serve_once(|req, stream| {
+            let req = req.unwrap();
+            assert_eq!(req.method, "GET");
+            assert!(req.body.is_empty());
+            respond(stream, 404, "text/plain", b"nope").unwrap();
+        });
+        let (status, body) = get(&addr, "/missing").unwrap();
+        assert_eq!(status, 404);
+        assert_eq!(body, "nope");
+    }
+
+    #[test]
+    fn garbage_request_line_is_rejected_not_panicked() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let (mut stream, _) = listener.accept().unwrap();
+            read_request(&mut stream).is_err()
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        c.write_all(b"not http at all\r\n\r\n").unwrap();
+        drop(c);
+        assert!(h.join().unwrap(), "garbage must parse as an error");
+    }
+
+    #[test]
+    fn oversized_head_is_refused() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let (mut stream, _) = listener.accept().unwrap();
+            read_request(&mut stream).is_err()
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        // A request line that never terminates its head.
+        let junk = vec![b'a'; MAX_HEAD + 1024];
+        let _ = c.write_all(b"GET /");
+        let _ = c.write_all(&junk);
+        let _ = c.flush();
+        assert!(h.join().unwrap(), "oversized head must be an error");
+    }
+}

@@ -1,0 +1,1017 @@
+//! `grab serve` — the long-running order-service daemon.
+//!
+//! Inverts PR 3's connection topology: instead of the coordinator
+//! dialing worker servers (`--connect`), workers dial the daemon and
+//! **register** (`grab exp cdgrab --register ADDR`), and the daemon
+//! parks their sockets in a [`registry::Registry`] until a job leases
+//! them. Jobs arrive over a dependency-free HTTP/1.1 control plane
+//! ([`http`]) and run *inside the daemon*: each leased socket becomes a
+//! [`crate::ordering::transport::tcp::TcpTransport`] via `from_stream`
+//! (the ordinary `Hello` shard session, just over an already-open
+//! connection) and the links compose into a
+//! [`crate::ordering::ShardedOrder`] through its public `from_links`
+//! constructor. The orders a daemon job produces are therefore
+//! bit-equal to the in-process backends at the same `(n, d, block, W)`
+//! — docs/determinism.md contract 5 — which `grab exp cdgrab
+//! --service` and the service test layer both assert.
+//!
+//! Control plane (all responses `Connection: close`):
+//!
+//! | route                | what                                        |
+//! |----------------------|---------------------------------------------|
+//! | `GET /health`        | liveness + worker/job gauges (JSON)         |
+//! | `GET /metrics`       | Prometheus text exposition                  |
+//! | `POST /jobs`         | submit a job (JSON spec) → `202 {job: id}`  |
+//! | `GET /jobs`          | id + status of every job (JSON)             |
+//! | `GET /jobs/<id>`     | full record: per-epoch order hashes,        |
+//! |                      | herding bounds, link counters (JSON)        |
+//! | `POST /drain`        | begin drain (same path as SIGTERM)          |
+//!
+//! Shutdown is drain-then-exit: SIGTERM (or `POST /drain`) stops new
+//! registrations and job submissions, lets running jobs finish — a
+//! leased socket is only ever closed at the job boundary, so a worker
+//! is never detached mid-epoch (contracts 5/6 are per-session) — then
+//! closes the idle held sockets (a clean between-sessions EOF) and
+//! exits. Registered workers observe the closed socket + refused
+//! re-registration and exit 0.
+
+pub mod client;
+pub mod http;
+pub mod registry;
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::herding::herding_bound;
+use crate::ordering::topology::Topology;
+use crate::ordering::transport::codec::{
+    decode_register, encode_lease, Lease,
+};
+use crate::ordering::transport::tcp;
+use crate::ordering::transport::{LinkStats, ShardTransport};
+use crate::ordering::{OrderPolicy, ShardedOrder};
+use crate::util::cli::Args;
+use crate::util::prop::gen;
+use crate::util::rng::Rng;
+use crate::util::ser::{
+    self, obj, read_frame, write_frame, FrameKind, Json, FRAME_HEADER_LEN,
+};
+
+/// How long the daemon waits on a dialing worker's `Register` frame
+/// before giving up on the handshake (bounds how long a dead dialer
+/// can stall the registration accept loop).
+const REGISTER_HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Daemon launch parameters (`grab serve`).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Worker registration listener (`--listen`, wire protocol).
+    pub register_addr: String,
+    /// Control-plane listener (`--http`, HTTP/1.1).
+    pub http_addr: String,
+    /// Per-frame read timeout (seconds) on leased worker links during
+    /// a job session (`--read-timeout`).
+    pub read_timeout_secs: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            register_addr: "127.0.0.1:7470".to_string(),
+            http_addr: "127.0.0.1:7471".to_string(),
+            read_timeout_secs: tcp::DEFAULT_READ_TIMEOUT_SECS,
+        }
+    }
+}
+
+/// What one daemon job runs: the CD-GraB static-gradient epoch loop of
+/// `exp cdgrab`, at a fixed shard count, over leased worker links.
+#[derive(Clone, Copy, Debug)]
+pub struct JobSpec {
+    /// Number of static gradient vectors.
+    pub n: usize,
+    /// Gradient dimension.
+    pub d: usize,
+    /// Epochs (balance passes).
+    pub epochs: usize,
+    /// Observe block width.
+    pub block: usize,
+    /// Shard count = leased workers (one shard per worker).
+    pub shards: usize,
+    /// Seed for the synthetic gradient set.
+    pub seed: u64,
+}
+
+impl JobSpec {
+    /// Parse + validate a spec from a `POST /jobs` JSON body. Caps are
+    /// deliberate: the daemon allocates `n * d` floats per job, and an
+    /// unauthenticated control plane must not be a memory-exhaustion
+    /// vector.
+    pub fn from_json(v: &Json) -> Result<JobSpec> {
+        let spec = JobSpec {
+            n: v.get("n")?.as_usize()?,
+            d: v.get("d")?.as_usize()?,
+            epochs: v.get("epochs")?.as_usize()?,
+            block: v.get("block")?.as_usize()?,
+            shards: v.get("shards")?.as_usize()?,
+            seed: v.get("seed")?.as_f64()? as u64,
+        };
+        anyhow::ensure!(
+            (1..=1 << 20).contains(&spec.n),
+            "n must be in 1..=2^20, got {}",
+            spec.n
+        );
+        anyhow::ensure!(
+            (1..=16384).contains(&spec.d),
+            "d must be in 1..=16384, got {}",
+            spec.d
+        );
+        anyhow::ensure!(
+            (1..=512).contains(&spec.epochs),
+            "epochs must be in 1..=512, got {}",
+            spec.epochs
+        );
+        anyhow::ensure!(spec.block >= 1, "block must be >= 1");
+        anyhow::ensure!(
+            (1..=64).contains(&spec.shards) && spec.shards <= spec.n,
+            "shards must be in 1..=64 and <= n, got {}",
+            spec.shards
+        );
+        Ok(spec)
+    }
+
+    /// The spec as a `POST /jobs` body.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("n", Json::Num(self.n as f64)),
+            ("d", Json::Num(self.d as f64)),
+            ("epochs", Json::Num(self.epochs as f64)),
+            ("block", Json::Num(self.block as f64)),
+            ("shards", Json::Num(self.shards as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+        ])
+    }
+}
+
+/// Lifecycle of a submitted job.
+#[derive(Clone, Debug)]
+pub enum JobStatus {
+    /// Leased its workers; epoch loop in progress.
+    Running,
+    /// All epochs done; record is final.
+    Done,
+    /// Session failed (link error, worker loss, bad spec at runtime).
+    Failed(String),
+}
+
+impl JobStatus {
+    /// Stable status label for JSON/metrics.
+    pub fn label(&self) -> &'static str {
+        match self {
+            JobStatus::Running => "running",
+            JobStatus::Done => "done",
+            JobStatus::Failed(_) => "failed",
+        }
+    }
+}
+
+/// Everything the control plane reports about one job.
+#[derive(Clone, Debug)]
+pub struct JobRecord {
+    /// Daemon-assigned job id (dense from 0).
+    pub id: u64,
+    /// The submitted spec.
+    pub spec: JobSpec,
+    /// Current lifecycle state.
+    pub status: JobStatus,
+    /// `(worker id, name)` of each leased worker, shard order.
+    pub workers: Vec<(u32, String)>,
+    /// FNV-1a hash of each completed epoch's order ([`order_hash`]) —
+    /// what `--service` clients compare against a local run
+    /// (contract 5 without shipping whole permutations).
+    pub epoch_hashes: Vec<u32>,
+    /// Herding ℓ∞ bound after each completed epoch.
+    pub herd_inf: Vec<f64>,
+    /// Link counter totals at completion (zeros while running).
+    pub stats: LinkStats,
+}
+
+impl JobRecord {
+    fn to_json(&self) -> Json {
+        let workers = self
+            .workers
+            .iter()
+            .map(|(id, name)| {
+                obj(vec![
+                    ("id", Json::Num(*id as f64)),
+                    ("name", Json::Str(name.clone())),
+                ])
+            })
+            .collect();
+        let hashes = self
+            .epoch_hashes
+            .iter()
+            .map(|&h| Json::Num(h as f64))
+            .collect();
+        let herd =
+            self.herd_inf.iter().map(|&x| Json::Num(x)).collect();
+        let mut fields = vec![
+            ("id", Json::Num(self.id as f64)),
+            ("status", Json::Str(self.status.label().to_string())),
+            ("n", Json::Num(self.spec.n as f64)),
+            ("d", Json::Num(self.spec.d as f64)),
+            ("epochs", Json::Num(self.spec.epochs as f64)),
+            ("block", Json::Num(self.spec.block as f64)),
+            ("shards", Json::Num(self.spec.shards as f64)),
+            ("seed", Json::Num(self.spec.seed as f64)),
+            ("workers", Json::Arr(workers)),
+            ("epoch_hashes", Json::Arr(hashes)),
+            ("herd_inf", Json::Arr(herd)),
+            ("tx_bytes", Json::Num(self.stats.tx_bytes as f64)),
+            ("rx_bytes", Json::Num(self.stats.rx_bytes as f64)),
+            ("stalls", Json::Num(self.stats.stalls as f64)),
+        ];
+        if let JobStatus::Failed(why) = &self.status {
+            fields.push(("error", Json::Str(why.clone())));
+        }
+        obj(fields)
+    }
+}
+
+/// FNV-1a over an order's unit ids as little-endian `u32`s — the
+/// compact per-epoch fingerprint daemon jobs report and `--service`
+/// clients recompute locally. Two equal-length orders collide only if
+/// the hash does (32-bit, fine for an 8-epoch acceptance gate).
+pub fn order_hash(order: &[usize]) -> u32 {
+    let mut bytes = Vec::with_capacity(order.len() * 4);
+    for &u in order {
+        bytes.extend_from_slice(&(u as u32).to_le_bytes());
+    }
+    ser::fnv1a32(&bytes)
+}
+
+/// Shared daemon state behind the accept loops, handler threads, and
+/// job threads.
+struct State {
+    registry: Mutex<registry::Registry<TcpStream>>,
+    jobs: Mutex<Vec<JobRecord>>,
+    next_job_id: AtomicU64,
+    draining: AtomicBool,
+    shutdown: AtomicBool,
+    jobs_running: AtomicU64,
+    jobs_completed: AtomicU64,
+    jobs_failed: AtomicU64,
+    epochs_total: AtomicU64,
+    /// Link counter totals folded in as jobs complete (`/metrics`
+    /// counters stay monotone; a running job's bytes land at its
+    /// boundary, mirroring how `TransportStats::retired` folds).
+    tx_bytes: AtomicU64,
+    rx_bytes: AtomicU64,
+    stalls: AtomicU64,
+    read_timeout: Duration,
+}
+
+/// A running daemon: two listeners plus the threads behind them.
+/// Constructed by [`OrderService::start`]; tests run it in-process on
+/// port 0, `grab serve` wraps it in [`run_serve`].
+pub struct OrderService {
+    state: Arc<State>,
+    register_addr: SocketAddr,
+    http_addr: SocketAddr,
+    accept_threads: Vec<std::thread::JoinHandle<()>>,
+    job_threads: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+}
+
+impl OrderService {
+    /// Bind both listeners and start the accept loops. Port 0 binds an
+    /// ephemeral port; read it back via
+    /// [`register_addr`](Self::register_addr) / [`http_addr`](Self::http_addr).
+    pub fn start(cfg: &ServeConfig) -> Result<OrderService> {
+        anyhow::ensure!(
+            cfg.read_timeout_secs >= 1,
+            "read timeout must be >= 1 second"
+        );
+        let reg_listener = TcpListener::bind(&cfg.register_addr)
+            .with_context(|| {
+                format!("binding registration listener {}", cfg.register_addr)
+            })?;
+        let http_listener = TcpListener::bind(&cfg.http_addr)
+            .with_context(|| {
+                format!("binding control listener {}", cfg.http_addr)
+            })?;
+        let register_addr = reg_listener.local_addr()?;
+        let http_addr = http_listener.local_addr()?;
+        let state = Arc::new(State {
+            registry: Mutex::new(registry::Registry::new(1)),
+            jobs: Mutex::new(Vec::new()),
+            next_job_id: AtomicU64::new(0),
+            draining: AtomicBool::new(false),
+            shutdown: AtomicBool::new(false),
+            jobs_running: AtomicU64::new(0),
+            jobs_completed: AtomicU64::new(0),
+            jobs_failed: AtomicU64::new(0),
+            epochs_total: AtomicU64::new(0),
+            tx_bytes: AtomicU64::new(0),
+            rx_bytes: AtomicU64::new(0),
+            stalls: AtomicU64::new(0),
+            read_timeout: Duration::from_secs(cfg.read_timeout_secs),
+        });
+        let job_threads = Arc::new(Mutex::new(Vec::new()));
+        let mut accept_threads = Vec::new();
+        {
+            let state = Arc::clone(&state);
+            accept_threads.push(std::thread::spawn(move || {
+                registration_loop(reg_listener, state)
+            }));
+        }
+        {
+            let state = Arc::clone(&state);
+            let job_threads = Arc::clone(&job_threads);
+            accept_threads.push(std::thread::spawn(move || {
+                http_loop(http_listener, state, job_threads)
+            }));
+        }
+        Ok(OrderService {
+            state,
+            register_addr,
+            http_addr,
+            accept_threads,
+            job_threads,
+        })
+    }
+
+    /// Actual registration listener address (resolves port 0).
+    pub fn register_addr(&self) -> String {
+        self.register_addr.to_string()
+    }
+
+    /// Actual control-plane address (resolves port 0).
+    pub fn http_addr(&self) -> String {
+        self.http_addr.to_string()
+    }
+
+    /// Whether a drain has begun (SIGTERM or `POST /drain`).
+    pub fn is_draining(&self) -> bool {
+        self.state.draining.load(Ordering::SeqCst)
+    }
+
+    /// Jobs currently running.
+    pub fn running_jobs(&self) -> u64 {
+        self.state.jobs_running.load(Ordering::SeqCst)
+    }
+
+    /// Begin (or continue) a drain and block until it completes:
+    /// refuse new registrations/jobs, join the running job threads —
+    /// leased sockets close only at their job boundary — then close
+    /// the idle held sockets. Idempotent.
+    pub fn drain(&self) {
+        self.state.draining.store(true, Ordering::SeqCst);
+        let handles: Vec<_> =
+            std::mem::take(&mut *self.job_threads.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+        // Idle workers get a clean between-sessions EOF.
+        let links = self.state.registry.lock().unwrap().drain_links();
+        drop(links);
+    }
+
+    /// Drain, then stop both accept loops and join them. Consumes the
+    /// service; in-process control/registration addresses stop
+    /// answering once this returns.
+    pub fn shutdown(mut self) {
+        self.drain();
+        self.state.shutdown.store(true, Ordering::SeqCst);
+        // Unblock the two accept() calls with one throwaway dial each.
+        let _ = TcpStream::connect(self.register_addr);
+        let _ = TcpStream::connect(self.http_addr);
+        for h in self.accept_threads.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Accept loop for the worker registration listener.
+fn registration_loop(listener: TcpListener, state: Arc<State>) {
+    loop {
+        let conn = listener.accept();
+        if state.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        let stream = match conn {
+            Ok((stream, _)) => stream,
+            Err(e) => {
+                eprintln!("[serve] registration accept failed: {e}");
+                // A broken listener must not spin the core.
+                std::thread::sleep(Duration::from_millis(100));
+                continue;
+            }
+        };
+        if let Err(e) = handle_registration(&state, stream) {
+            eprintln!("[serve] registration refused: {e}");
+        }
+    }
+}
+
+/// One registration handshake: `Register` in, `Lease` out, socket into
+/// the registry. Any error drops the socket (the worker sees EOF and
+/// retries or exits).
+fn handle_registration(state: &State, mut stream: TcpStream) -> Result<()> {
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(REGISTER_HANDSHAKE_TIMEOUT))?;
+    let mut buf = Vec::new();
+    let kind = read_frame(&mut stream, &mut buf)?;
+    anyhow::ensure!(
+        kind == FrameKind::Register,
+        "expected register frame, got {kind:?}"
+    );
+    let reg = decode_register(&buf[FRAME_HEADER_LEN..])?;
+    let mut registry = state.registry.lock().unwrap();
+    if state.draining.load(Ordering::SeqCst) {
+        registry.refuse();
+        anyhow::bail!("draining; {:?} turned away", reg.name);
+    }
+    let generation = registry.generation();
+    if reg.generation != 0 && reg.generation != generation {
+        registry.refuse();
+        anyhow::bail!(
+            "stale registry generation {} from {:?} (current {})",
+            reg.generation,
+            reg.name,
+            generation
+        );
+    }
+    // Reply while holding the lock so the lease's worker id and the
+    // table's assignment cannot diverge; on a failed write the socket
+    // never enters the table.
+    let id = registry.next_worker_id();
+    let mut payload = Vec::new();
+    encode_lease(Lease { worker_id: id, generation }, &mut payload);
+    let mut scratch = Vec::new();
+    write_frame(&mut stream, FrameKind::Lease, &payload, &mut scratch)?;
+    // Job sessions manage their own timeouts via `tcp::from_stream`;
+    // an idle held socket must be allowed to sit quiet indefinitely.
+    stream.set_read_timeout(None)?;
+    let assigned = registry.register(&reg.name, reg.capacity, stream);
+    debug_assert_eq!(assigned, id);
+    eprintln!(
+        "[serve] worker {id} registered: {:?} (capacity {})",
+        reg.name, reg.capacity
+    );
+    Ok(())
+}
+
+/// Accept loop for the control plane; each connection gets a short
+/// handler thread so one slow client cannot stall `/health`.
+fn http_loop(
+    listener: TcpListener,
+    state: Arc<State>,
+    job_threads: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+) {
+    loop {
+        let conn = listener.accept();
+        if state.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        let stream = match conn {
+            Ok((stream, _)) => stream,
+            Err(e) => {
+                eprintln!("[serve] control accept failed: {e}");
+                std::thread::sleep(Duration::from_millis(100));
+                continue;
+            }
+        };
+        let state = Arc::clone(&state);
+        let job_threads = Arc::clone(&job_threads);
+        std::thread::spawn(move || {
+            if let Err(e) = handle_http(&state, &job_threads, stream) {
+                eprintln!("[serve] control request failed: {e}");
+            }
+        });
+    }
+}
+
+/// Route one control-plane request.
+fn handle_http(
+    state: &Arc<State>,
+    job_threads: &Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+    mut stream: TcpStream,
+) -> Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+    let req = match http::read_request(&mut stream) {
+        Ok(req) => req,
+        Err(e) => {
+            let body = obj(vec![("error", Json::Str(format!("{e:#}")))]);
+            return http::respond_json(&mut stream, 400, &body);
+        }
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/health") => {
+            http::respond_json(&mut stream, 200, &health_json(state))
+        }
+        ("GET", "/metrics") => http::respond(
+            &mut stream,
+            200,
+            "text/plain; version=0.0.4",
+            metrics_text(state).as_bytes(),
+        ),
+        ("GET", "/jobs") => {
+            let jobs = state.jobs.lock().unwrap();
+            let list = jobs
+                .iter()
+                .map(|r| {
+                    obj(vec![
+                        ("id", Json::Num(r.id as f64)),
+                        (
+                            "status",
+                            Json::Str(r.status.label().to_string()),
+                        ),
+                    ])
+                })
+                .collect();
+            drop(jobs);
+            http::respond_json(
+                &mut stream,
+                200,
+                &obj(vec![("jobs", Json::Arr(list))]),
+            )
+        }
+        ("POST", "/jobs") => submit_job(state, job_threads, stream, &req),
+        ("POST", "/drain") => {
+            state.draining.store(true, Ordering::SeqCst);
+            eprintln!("[serve] drain requested via control plane");
+            http::respond_json(
+                &mut stream,
+                200,
+                &obj(vec![("status", Json::Str("draining".into()))]),
+            )
+        }
+        ("GET", path) if path.starts_with("/jobs/") => {
+            let body = match path["/jobs/".len()..].parse::<u64>() {
+                Ok(id) => {
+                    let jobs = state.jobs.lock().unwrap();
+                    jobs.iter().find(|r| r.id == id).map(JobRecord::to_json)
+                }
+                Err(_) => None,
+            };
+            match body {
+                Some(v) => http::respond_json(&mut stream, 200, &v),
+                None => http::respond_json(
+                    &mut stream,
+                    404,
+                    &obj(vec![(
+                        "error",
+                        Json::Str(
+                            registry::ServiceError::UnknownJob(0)
+                                .to_string(),
+                        ),
+                    )]),
+                ),
+            }
+        }
+        (_, "/health" | "/metrics" | "/jobs" | "/drain") => {
+            http::respond_json(
+                &mut stream,
+                405,
+                &obj(vec![(
+                    "error",
+                    Json::Str(format!(
+                        "method {} not allowed on {}",
+                        req.method, req.path
+                    )),
+                )]),
+            )
+        }
+        _ => http::respond_json(
+            &mut stream,
+            404,
+            &obj(vec![(
+                "error",
+                Json::Str(format!("no such route {}", req.path)),
+            )]),
+        ),
+    }
+}
+
+/// `POST /jobs`: validate, lease, spawn the job thread, answer 202.
+fn submit_job(
+    state: &Arc<State>,
+    job_threads: &Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+    mut stream: TcpStream,
+    req: &http::Request,
+) -> Result<()> {
+    let spec = std::str::from_utf8(&req.body)
+        .map_err(anyhow::Error::from)
+        .and_then(Json::parse)
+        .and_then(|v| JobSpec::from_json(&v));
+    let spec = match spec {
+        Ok(spec) => spec,
+        Err(e) => {
+            let body = obj(vec![("error", Json::Str(format!("{e:#}")))]);
+            return http::respond_json(&mut stream, 400, &body);
+        }
+    };
+    if state.draining.load(Ordering::SeqCst) {
+        let body = obj(vec![(
+            "error",
+            Json::Str(registry::ServiceError::Draining.to_string()),
+        )]);
+        return http::respond_json(&mut stream, 503, &body);
+    }
+    // Allocate the job id only once the lease is sure to succeed (both
+    // under the registry lock), so a refused submission burns neither
+    // an id nor the submitted-jobs counter.
+    let leased = {
+        let mut registry = state.registry.lock().unwrap();
+        if registry.available() >= spec.shards {
+            let job_id = state.next_job_id.fetch_add(1, Ordering::SeqCst);
+            registry
+                .lease(spec.shards, job_id)
+                .map(|slots| (job_id, slots))
+        } else {
+            Err(registry::ServiceError::NotEnoughWorkers {
+                have: registry.available(),
+                need: spec.shards,
+            })
+        }
+    };
+    let (job_id, slots) = match leased {
+        Ok(x) => x,
+        Err(e) => {
+            let body = obj(vec![("error", Json::Str(e.to_string()))]);
+            return http::respond_json(&mut stream, 409, &body);
+        }
+    };
+    let workers: Vec<(u32, String)> =
+        slots.iter().map(|s| (s.id, s.name.clone())).collect();
+    state.jobs.lock().unwrap().push(JobRecord {
+        id: job_id,
+        spec,
+        status: JobStatus::Running,
+        workers: workers.clone(),
+        epoch_hashes: Vec::new(),
+        herd_inf: Vec::new(),
+        stats: LinkStats::default(),
+    });
+    state.jobs_running.fetch_add(1, Ordering::SeqCst);
+    eprintln!(
+        "[serve] job {job_id}: n={} d={} epochs={} W={} over workers {:?}",
+        spec.n,
+        spec.d,
+        spec.epochs,
+        spec.shards,
+        workers.iter().map(|(id, _)| *id).collect::<Vec<_>>()
+    );
+    {
+        let state = Arc::clone(state);
+        let handle =
+            std::thread::spawn(move || run_job(state, job_id, spec, slots));
+        job_threads.lock().unwrap().push(handle);
+    }
+    let worker_ids = workers
+        .iter()
+        .map(|(id, _)| Json::Num(*id as f64))
+        .collect();
+    http::respond_json(
+        &mut stream,
+        202,
+        &obj(vec![
+            ("job", Json::Num(job_id as f64)),
+            ("workers", Json::Arr(worker_ids)),
+        ]),
+    )
+}
+
+/// Job thread body: run the session, then settle the record and the
+/// daemon counters whatever happened (including a panic somewhere in
+/// the ordering stack — a lost job must not wedge `jobs_running`).
+fn run_job(
+    state: Arc<State>,
+    id: u64,
+    spec: JobSpec,
+    slots: Vec<registry::Slot<TcpStream>>,
+) {
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+        || run_job_inner(&state, id, &spec, slots),
+    ));
+    let outcome: Result<LinkStats, String> = match result {
+        Ok(Ok(stats)) => Ok(stats),
+        Ok(Err(e)) => Err(format!("{e:#}")),
+        Err(panic) => {
+            let msg = panic
+                .downcast_ref::<String>()
+                .map(String::as_str)
+                .or_else(|| panic.downcast_ref::<&str>().copied())
+                .unwrap_or("job thread panicked");
+            Err(msg.to_string())
+        }
+    };
+    {
+        let mut jobs = state.jobs.lock().unwrap();
+        let rec = jobs
+            .iter_mut()
+            .find(|r| r.id == id)
+            .expect("job record exists for its whole lifetime");
+        match outcome {
+            Ok(stats) => {
+                rec.status = JobStatus::Done;
+                rec.stats = stats;
+                state.jobs_completed.fetch_add(1, Ordering::SeqCst);
+                state.tx_bytes.fetch_add(stats.tx_bytes, Ordering::SeqCst);
+                state.rx_bytes.fetch_add(stats.rx_bytes, Ordering::SeqCst);
+                state.stalls.fetch_add(stats.stalls, Ordering::SeqCst);
+                eprintln!("[serve] job {id} done");
+            }
+            Err(why) => {
+                eprintln!("[serve] job {id} failed: {why}");
+                rec.status = JobStatus::Failed(why);
+                state.jobs_failed.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+    }
+    state.registry.lock().unwrap().complete(id);
+    state.jobs_running.fetch_sub(1, Ordering::SeqCst);
+}
+
+/// The actual session: leased sockets → `Hello` handshakes →
+/// `ShardedOrder` → the `exp cdgrab` epoch loop, recording a hash and
+/// herding bound per epoch. Dropping the policy at the end closes the
+/// sockets — the job boundary — and live workers re-register.
+fn run_job_inner(
+    state: &State,
+    id: u64,
+    spec: &JobSpec,
+    slots: Vec<registry::Slot<TcpStream>>,
+) -> Result<LinkStats> {
+    // Daemon jobs run a *static* equal-weight topology: determinism
+    // contract 5 (orders independent of transport) is the service's
+    // acceptance gate, and it only binds at a fixed topology.
+    let topology = Topology::plan(spec.n, 0, &vec![1u64; spec.shards]);
+    let mut links: Vec<Box<dyn ShardTransport>> =
+        Vec::with_capacity(spec.shards);
+    for (w, slot) in slots.into_iter().enumerate() {
+        let label = format!("{} ({})", slot.id, slot.name);
+        let link = tcp::from_stream(
+            slot.link,
+            topology.sizes[w],
+            spec.d,
+            0,
+            state.read_timeout,
+        )
+        .with_context(|| format!("hello to worker {label} (shard {w})"))?;
+        links.push(Box::new(link));
+    }
+    let mut policy = ShardedOrder::from_links(
+        spec.n, spec.d, topology, links, "tcp", None,
+    );
+    let mut rng = Rng::new(spec.seed);
+    let vs = gen::vec_set(&mut rng, spec.n, spec.d);
+    let mut flat = vec![0.0f32; spec.n * spec.d];
+    for _ in 0..spec.epochs {
+        crate::ordering::stream_static_epoch(
+            &mut policy,
+            &vs,
+            &mut flat,
+            spec.block,
+        );
+        let order = policy.epoch_order(0);
+        let hash = order_hash(order);
+        let (inf, _) = herding_bound(&vs, order);
+        let mut jobs = state.jobs.lock().unwrap();
+        let rec = jobs
+            .iter_mut()
+            .find(|r| r.id == id)
+            .expect("job record exists for its whole lifetime");
+        rec.epoch_hashes.push(hash);
+        rec.herd_inf.push(inf as f64);
+        drop(jobs);
+        state.epochs_total.fetch_add(1, Ordering::SeqCst);
+    }
+    Ok(policy
+        .transport_stats()
+        .map(|s| s.total())
+        .unwrap_or_default())
+}
+
+/// `GET /health` body.
+fn health_json(state: &State) -> Json {
+    let registry = state.registry.lock().unwrap();
+    let status = if state.draining.load(Ordering::SeqCst) {
+        "draining"
+    } else {
+        "ok"
+    };
+    obj(vec![
+        ("status", Json::Str(status.to_string())),
+        (
+            "workers_available",
+            Json::Num(registry.available() as f64),
+        ),
+        ("workers_leased", Json::Num(registry.leased() as f64)),
+        (
+            "jobs_running",
+            Json::Num(state.jobs_running.load(Ordering::SeqCst) as f64),
+        ),
+        ("generation", Json::Num(registry.generation() as f64)),
+    ])
+}
+
+/// `GET /metrics` body — Prometheus text exposition. The
+/// `grab_transport_*` counters are [`crate::ordering::transport::TransportStats`]
+/// totals folded in at each job boundary, so they are monotone and
+/// match the per-job `tx_bytes`/`rx_bytes`/`stalls` fields exactly.
+fn metrics_text(state: &State) -> String {
+    let (available, leased, generation, reg_total, reg_refused) = {
+        let registry = state.registry.lock().unwrap();
+        (
+            registry.available(),
+            registry.leased(),
+            registry.generation(),
+            registry.registrations_total(),
+            registry.registrations_refused(),
+        )
+    };
+    let mut out = String::new();
+    let mut metric = |name: &str, kind: &str, help: &str, value: u64| {
+        out.push_str(&format!(
+            "# HELP {name} {help}\n# TYPE {name} {kind}\n{name} {value}\n"
+        ));
+    };
+    metric(
+        "grab_workers_available",
+        "gauge",
+        "Registered workers not leased to a job.",
+        available as u64,
+    );
+    metric(
+        "grab_workers_leased",
+        "gauge",
+        "Workers leased to running jobs.",
+        leased as u64,
+    );
+    metric(
+        "grab_registry_generation",
+        "gauge",
+        "Registry generation carried in every lease.",
+        generation as u64,
+    );
+    metric(
+        "grab_registrations_total",
+        "counter",
+        "Successful worker registrations.",
+        reg_total,
+    );
+    metric(
+        "grab_registrations_refused_total",
+        "counter",
+        "Registrations refused (draining, stale generation, bad frame).",
+        reg_refused,
+    );
+    metric(
+        "grab_jobs_submitted_total",
+        "counter",
+        "Jobs accepted by POST /jobs.",
+        state.next_job_id.load(Ordering::SeqCst),
+    );
+    metric(
+        "grab_jobs_completed_total",
+        "counter",
+        "Jobs that finished every epoch.",
+        state.jobs_completed.load(Ordering::SeqCst),
+    );
+    metric(
+        "grab_jobs_failed_total",
+        "counter",
+        "Jobs that failed (link error or panic).",
+        state.jobs_failed.load(Ordering::SeqCst),
+    );
+    metric(
+        "grab_jobs_running",
+        "gauge",
+        "Jobs currently running.",
+        state.jobs_running.load(Ordering::SeqCst),
+    );
+    metric(
+        "grab_job_epochs_total",
+        "counter",
+        "Epochs completed across all jobs.",
+        state.epochs_total.load(Ordering::SeqCst),
+    );
+    metric(
+        "grab_transport_tx_bytes_total",
+        "counter",
+        "Coordinator-to-worker payload bytes (completed jobs' \
+         TransportStats totals).",
+        state.tx_bytes.load(Ordering::SeqCst),
+    );
+    metric(
+        "grab_transport_rx_bytes_total",
+        "counter",
+        "Worker-to-coordinator payload bytes (completed jobs' \
+         TransportStats totals).",
+        state.rx_bytes.load(Ordering::SeqCst),
+    );
+    metric(
+        "grab_transport_stalls_total",
+        "counter",
+        "Link backpressure stalls (completed jobs' TransportStats \
+         totals; 0 for pure-TCP links).",
+        state.stalls.load(Ordering::SeqCst),
+    );
+    metric(
+        "grab_draining",
+        "gauge",
+        "1 once a drain has begun.",
+        state.draining.load(Ordering::SeqCst) as u64,
+    );
+    out
+}
+
+/// SIGTERM/SIGINT latch. Raw `signal(2)` binding because the vendored
+/// dependency closure has no `libc` crate; an `AtomicBool` store is
+/// async-signal-safe.
+#[cfg(unix)]
+mod sig {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static TERM: AtomicBool = AtomicBool::new(false);
+
+    extern "C" fn on_term(_sig: i32) {
+        TERM.store(true, Ordering::SeqCst);
+    }
+
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+
+    pub fn install() {
+        unsafe {
+            signal(SIGTERM, on_term);
+            signal(SIGINT, on_term);
+        }
+    }
+
+    pub fn requested() -> bool {
+        TERM.load(Ordering::SeqCst)
+    }
+}
+
+/// `grab serve` entry point: parse flags, start the daemon, wait for a
+/// drain trigger (SIGTERM/SIGINT on unix, `POST /drain` anywhere),
+/// drain, exit 0.
+pub fn run_serve(args: &Args) -> Result<()> {
+    let defaults = ServeConfig::default();
+    let cfg = ServeConfig {
+        register_addr: args.str_or("listen", &defaults.register_addr),
+        http_addr: args.str_or("http", &defaults.http_addr),
+        read_timeout_secs: {
+            let rt = args
+                .u64_or("read-timeout", tcp::DEFAULT_READ_TIMEOUT_SECS)?;
+            anyhow::ensure!(
+                rt >= 1,
+                "--read-timeout must be >= 1 second"
+            );
+            rt
+        },
+    };
+    args.reject_unknown()?;
+
+    #[cfg(unix)]
+    sig::install();
+
+    let service = OrderService::start(&cfg)?;
+    eprintln!(
+        "[serve] worker registry on {} (wire v{}; register with \
+         `grab exp cdgrab --register {}`)",
+        service.register_addr(),
+        ser::WIRE_VERSION,
+        service.register_addr()
+    );
+    eprintln!(
+        "[serve] control plane on http://{} \
+         (/health /metrics /jobs /drain)",
+        service.http_addr()
+    );
+    loop {
+        std::thread::sleep(Duration::from_millis(200));
+        #[cfg(unix)]
+        if sig::requested() {
+            eprintln!("[serve] SIGTERM: draining");
+            break;
+        }
+        if service.is_draining() && service.running_jobs() == 0 {
+            eprintln!("[serve] drain requested; no jobs left");
+            break;
+        }
+    }
+    service.shutdown();
+    eprintln!("[serve] drained; all workers detached at job boundaries");
+    Ok(())
+}

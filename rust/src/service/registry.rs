@@ -1,0 +1,319 @@
+//! Worker registry for the order-service daemon.
+//!
+//! Workers dial the daemon and *register* (a `Register`/`Lease`
+//! handshake over the shard wire protocol); the daemon parks each
+//! accepted socket here until a job leases it. The registry is pure
+//! bookkeeping — generic over the held link type `S` so the daemon can
+//! hold `TcpStream`s while the property tests drive the same state
+//! machine with `()` links and no sockets at all.
+//!
+//! Invariants the tests pin down:
+//!
+//! - worker ids are unique and strictly increasing for the lifetime of
+//!   a registry (an id is never reused, even after its socket is gone);
+//! - leasing is **all-or-nothing**: a lease that cannot be filled
+//!   leaves the available pool untouched;
+//! - leases are filled in registration order (FIFO), so a stable fleet
+//!   yields a deterministic shard → worker assignment (the order the
+//!   coordinator's `Hello`s go out in — docs/determinism.md contract 5
+//!   makes the *orders* independent of this, but a deterministic
+//!   assignment keeps logs and metrics reproducible);
+//! - one lease covers one job session: `complete` forgets the leased
+//!   slots instead of returning them (the daemon closes the sockets at
+//!   the job boundary and live workers re-register fresh).
+
+use std::fmt;
+
+/// A registered worker: identity plus the held link.
+#[derive(Debug)]
+pub struct Slot<S> {
+    /// Registry-assigned worker id (unique per daemon lifetime).
+    pub id: u32,
+    /// Self-reported worker name (e.g. `worker-<pid>`).
+    pub name: String,
+    /// Self-reported shard capacity (currently always 1).
+    pub capacity: u32,
+    /// The held connection (a `TcpStream` in the daemon; `()` in
+    /// state-machine tests).
+    pub link: S,
+}
+
+/// Typed registry/control-plane failures, surfaced as HTTP error
+/// bodies by the daemon.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServiceError {
+    /// A job asked for more workers than are currently registered and
+    /// idle.
+    NotEnoughWorkers {
+        /// Workers available to lease right now.
+        have: usize,
+        /// Workers the job asked for.
+        need: usize,
+    },
+    /// The daemon is draining and refuses new work.
+    Draining,
+    /// A job id that the daemon has never issued.
+    UnknownJob(u64),
+}
+
+impl fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServiceError::NotEnoughWorkers { have, need } => write!(
+                f,
+                "need {need} registered worker(s), have {have} \
+                 (start more with `grab exp cdgrab --register ADDR`)"
+            ),
+            ServiceError::Draining => {
+                write!(f, "daemon is draining; not accepting new work")
+            }
+            ServiceError::UnknownJob(id) => {
+                write!(f, "no such job {id}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
+
+/// The daemon's worker table: available slots (holding live sockets),
+/// lease bookkeeping, and the counters behind `/metrics`.
+#[derive(Debug)]
+pub struct Registry<S> {
+    generation: u32,
+    next_id: u32,
+    available: Vec<Slot<S>>,
+    /// `(job id, worker id, worker name)` per leased slot.
+    leased: Vec<(u64, u32, String)>,
+    registrations_total: u64,
+    registrations_refused: u64,
+}
+
+impl<S> Registry<S> {
+    /// An empty registry at the given generation (`>= 1`; workers send
+    /// generation 0 to mean "fresh registration", so a live registry
+    /// can never be at 0).
+    pub fn new(generation: u32) -> Registry<S> {
+        assert!(generation >= 1, "registry generation 0 is reserved");
+        Registry {
+            generation,
+            next_id: 0,
+            available: Vec::new(),
+            leased: Vec::new(),
+            registrations_total: 0,
+            registrations_refused: 0,
+        }
+    }
+
+    /// The registry generation carried in every `Lease`.
+    pub fn generation(&self) -> u32 {
+        self.generation
+    }
+
+    /// The id the *next* successful [`register`](Self::register) will
+    /// assign — lets the daemon write the `Lease` reply before moving
+    /// the socket into the table (both under one registry lock).
+    pub fn next_worker_id(&self) -> u32 {
+        self.next_id
+    }
+
+    /// Park a worker's link; returns the assigned worker id.
+    pub fn register(&mut self, name: &str, capacity: u32, link: S) -> u32 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.registrations_total += 1;
+        self.available.push(Slot {
+            id,
+            name: name.to_string(),
+            capacity,
+            link,
+        });
+        id
+    }
+
+    /// Count a refused registration (draining, stale generation, or a
+    /// malformed handshake) for `/metrics`.
+    pub fn refuse(&mut self) {
+        self.registrations_refused += 1;
+    }
+
+    /// Lease `count` workers to `job`, all-or-nothing and in
+    /// registration (FIFO) order. On success the slots — sockets and
+    /// all — move to the caller; the registry keeps only the
+    /// `(job, id, name)` bookkeeping until [`complete`](Self::complete).
+    pub fn lease(
+        &mut self,
+        count: usize,
+        job: u64,
+    ) -> Result<Vec<Slot<S>>, ServiceError> {
+        if count == 0 || self.available.len() < count {
+            return Err(ServiceError::NotEnoughWorkers {
+                have: self.available.len(),
+                need: count,
+            });
+        }
+        let slots: Vec<Slot<S>> = self.available.drain(..count).collect();
+        for s in &slots {
+            self.leased.push((job, s.id, s.name.clone()));
+        }
+        Ok(slots)
+    }
+
+    /// Forget the lease bookkeeping for `job` (its sockets were
+    /// consumed by the session and closed at the job boundary); returns
+    /// how many slots the job held.
+    pub fn complete(&mut self, job: u64) -> usize {
+        let before = self.leased.len();
+        self.leased.retain(|(j, _, _)| *j != job);
+        before - self.leased.len()
+    }
+
+    /// Workers registered and idle.
+    pub fn available(&self) -> usize {
+        self.available.len()
+    }
+
+    /// Workers currently leased to running jobs.
+    pub fn leased(&self) -> usize {
+        self.leased.len()
+    }
+
+    /// `(worker id, name)` pairs leased to `job`, in lease order.
+    pub fn leased_to(&self, job: u64) -> Vec<(u32, String)> {
+        self.leased
+            .iter()
+            .filter(|(j, _, _)| *j == job)
+            .map(|(_, id, name)| (*id, name.clone()))
+            .collect()
+    }
+
+    /// Successful registrations, lifetime total.
+    pub fn registrations_total(&self) -> u64 {
+        self.registrations_total
+    }
+
+    /// Refused registrations, lifetime total.
+    pub fn registrations_refused(&self) -> u64 {
+        self.registrations_refused
+    }
+
+    /// Take every idle link out of the table (the drain path: dropping
+    /// the returned `TcpStream`s is a clean EOF to workers sitting
+    /// *between* job sessions — never mid-epoch).
+    pub fn drain_links(&mut self) -> Vec<S> {
+        self.available.drain(..).map(|s| s.link).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn ids_are_unique_and_monotone() {
+        let mut r: Registry<()> = Registry::new(1);
+        let a = r.register("a", 1, ());
+        let b = r.register("b", 1, ());
+        assert_eq!((a, b), (0, 1));
+        // Lease + complete must not recycle ids.
+        let _ = r.lease(2, 0).unwrap();
+        r.complete(0);
+        let c = r.register("c", 1, ());
+        assert_eq!(c, 2);
+        assert_eq!(r.next_worker_id(), 3);
+    }
+
+    #[test]
+    fn lease_is_all_or_nothing_and_fifo() {
+        let mut r: Registry<()> = Registry::new(1);
+        r.register("w0", 1, ());
+        r.register("w1", 1, ());
+        // Too many: the pool must be untouched.
+        let err = r.lease(3, 7).unwrap_err();
+        assert_eq!(err, ServiceError::NotEnoughWorkers { have: 2, need: 3 });
+        assert_eq!(r.available(), 2);
+        assert_eq!(r.leased(), 0);
+        // Zero is a caller bug, also refused.
+        assert!(r.lease(0, 7).is_err());
+        // FIFO: first registered, first leased.
+        let slots = r.lease(2, 7).unwrap();
+        let ids: Vec<u32> = slots.iter().map(|s| s.id).collect();
+        assert_eq!(ids, vec![0, 1]);
+        assert_eq!(r.leased_to(7), vec![(0, "w0".into()), (1, "w1".into())]);
+        assert_eq!(r.available(), 0);
+        assert_eq!(r.complete(7), 2);
+        assert_eq!(r.leased(), 0);
+    }
+
+    #[test]
+    fn counters_track_registrations_and_refusals() {
+        let mut r: Registry<()> = Registry::new(3);
+        assert_eq!(r.generation(), 3);
+        r.register("a", 1, ());
+        r.refuse();
+        r.register("b", 2, ());
+        assert_eq!(r.registrations_total(), 2);
+        assert_eq!(r.registrations_refused(), 1);
+        assert_eq!(r.drain_links().len(), 2);
+        assert_eq!(r.available(), 0);
+    }
+
+    /// Random op sequences keep the table's counts consistent and the
+    /// id stream strictly increasing — the state-machine property the
+    /// daemon's accounting (and `/metrics` gauges) rests on.
+    #[test]
+    fn random_op_sequences_preserve_invariants() {
+        for seed in 0..20u64 {
+            let mut rng = Rng::new(0xc0ffee ^ seed);
+            let mut r: Registry<()> = Registry::new(1);
+            let mut live_jobs: Vec<u64> = Vec::new();
+            let mut next_job = 0u64;
+            let mut last_id_seen: Option<u32> = None;
+            let mut expected_leased = 0usize;
+            let mut expected_available = 0usize;
+            for _ in 0..200 {
+                match rng.gen_range(3) {
+                    0 => {
+                        let id = r.register("w", 1, ());
+                        if let Some(prev) = last_id_seen {
+                            assert!(id > prev, "id stream must increase");
+                        }
+                        last_id_seen = Some(id);
+                        expected_available += 1;
+                    }
+                    1 => {
+                        let want = rng.gen_range(4) as usize + 1;
+                        let job = next_job;
+                        match r.lease(want, job) {
+                            Ok(slots) => {
+                                assert_eq!(slots.len(), want);
+                                next_job += 1;
+                                live_jobs.push(job);
+                                expected_available -= want;
+                                expected_leased += want;
+                            }
+                            Err(ServiceError::NotEnoughWorkers {
+                                have,
+                                need,
+                            }) => {
+                                assert_eq!(have, expected_available);
+                                assert_eq!(need, want);
+                            }
+                            Err(other) => panic!("unexpected {other}"),
+                        }
+                    }
+                    _ => {
+                        if let Some(job) = live_jobs.pop() {
+                            let freed = r.complete(job);
+                            assert!(freed >= 1);
+                            expected_leased -= freed;
+                        }
+                    }
+                }
+                assert_eq!(r.available(), expected_available);
+                assert_eq!(r.leased(), expected_leased);
+            }
+        }
+    }
+}

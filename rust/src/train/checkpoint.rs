@@ -97,6 +97,11 @@ pub enum CheckpointError {
     },
     /// The ordering policy rejected its saved state on restore.
     PolicyState(String),
+    /// The snapshot carries no policy state and the (gradient-driven)
+    /// policy cannot adopt the recorded order either — resuming would
+    /// silently restart its ordering from scratch while claiming a
+    /// clean resume, so it is refused instead.
+    PolicyNotResumable(String),
 }
 
 impl fmt::Display for CheckpointError {
@@ -148,6 +153,13 @@ impl fmt::Display for CheckpointError {
             CheckpointError::PolicyState(why) => {
                 write!(f, "policy state restore failed: {why}")
             }
+            CheckpointError::PolicyNotResumable(name) => write!(
+                f,
+                "policy '{name}' is not resumable from this snapshot: \
+                 it carries no saved ordering state and cannot adopt \
+                 the recorded order (resuming would silently restart \
+                 its ordering)"
+            ),
         }
     }
 }
@@ -214,6 +226,47 @@ fn write_atomic(path: &Path, bytes: &[u8]) -> Result<(), CheckpointError> {
     }
     std::fs::rename(&tmp, path)?;
     Ok(())
+}
+
+/// Restore an ordering policy's epoch-boundary state from a snapshot —
+/// the one shared resume gate (trainer and `exp cdgrab` both route
+/// through it, so the refusal semantics cannot diverge):
+///
+/// * snapshots with policy state restore it (typed
+///   [`CheckpointError::PolicyState`] on rejection);
+/// * legacy order-only snapshots seed the recorded permutation where
+///   the policy supports that;
+/// * a gradient-driven policy that can do neither is **refused** with
+///   [`CheckpointError::PolicyNotResumable`] — before this gate a
+///   greedy resume silently restarted its ordering from scratch;
+/// * stateless policies (order derivable from config alone) resume
+///   from their freshly constructed state, which is exact for them.
+pub fn restore_policy(
+    policy: &mut dyn crate::ordering::OrderPolicy,
+    ckpt: &Checkpoint,
+) -> Result<(), CheckpointError> {
+    if let Some(bytes) = &ckpt.policy_state {
+        return policy
+            .restore_state(bytes)
+            .map_err(CheckpointError::PolicyState);
+    }
+    if ckpt.order.is_empty() {
+        return Ok(());
+    }
+    let order: Vec<usize> =
+        ckpt.order.iter().map(|&i| i as usize).collect();
+    if policy.restore_order(&order) {
+        Ok(())
+    } else if policy.wants_grads() {
+        Err(CheckpointError::PolicyNotResumable(
+            policy.name().to_string(),
+        ))
+    } else {
+        // Config-derivable order (Sequential, ShuffleOnce, FixedOrder):
+        // the reconstructed policy already follows the snapshot's
+        // permutation, so there is nothing to restore.
+        Ok(())
+    }
 }
 
 /// One resumable snapshot.
@@ -698,6 +751,76 @@ mod tests {
         let c = Checkpoint { sched: None, policy_state: None, ..sample() };
         c.save(&path).unwrap();
         assert_eq!(Checkpoint::load(&path).unwrap(), c);
+    }
+
+    #[test]
+    fn restore_policy_gates_each_resume_shape() {
+        use crate::ordering::{GreedyOrder, OrderPolicy, Sequential};
+
+        // Stateful snapshot → restore_state path.
+        let mut greedy = GreedyOrder::new(4, 2);
+        let state = greedy.save_state().unwrap();
+        let mut fresh = GreedyOrder::new(4, 2);
+        let ckpt = Checkpoint {
+            epoch: 0,
+            params: Vec::new(),
+            velocity: Vec::new(),
+            order: vec![2, 0, 3, 1],
+            sched: None,
+            policy_state: Some(state),
+        };
+        restore_policy(&mut fresh, &ckpt).unwrap();
+
+        // Legacy order-only snapshot → a policy that can adopt it does.
+        let legacy = Checkpoint { policy_state: None, ..ckpt.clone() };
+        let mut fresh = GreedyOrder::new(4, 2);
+        restore_policy(&mut fresh, &legacy).unwrap();
+        assert_eq!(fresh.epoch_order(0), &[2, 0, 3, 1]);
+
+        // A gradient-driven policy that can neither restore state nor
+        // adopt the order is refused with the typed variant — the
+        // silent-restart regression this gate exists for.
+        struct NoResume;
+        impl OrderPolicy for NoResume {
+            fn name(&self) -> &'static str {
+                "no-resume"
+            }
+            fn epoch_order(&mut self, _epoch: usize) -> &[usize] {
+                &[]
+            }
+            fn observe_block(
+                &mut self,
+                _range: std::ops::Range<usize>,
+                _block: &crate::ordering::GradBlock,
+            ) {
+            }
+            fn epoch_end(&mut self) {}
+            fn state_bytes(&self) -> usize {
+                0
+            }
+            fn wants_grads(&self) -> bool {
+                true
+            }
+        }
+        let err = restore_policy(&mut NoResume, &legacy).unwrap_err();
+        assert!(
+            matches!(err, CheckpointError::PolicyNotResumable(_)),
+            "{err}"
+        );
+        assert!(err.to_string().contains("not resumable"), "{err}");
+
+        // Stateless policies resume from config-reconstructed state.
+        let mut seq = Sequential::new(4);
+        restore_policy(&mut seq, &legacy).unwrap();
+
+        // Corrupt policy state maps to the PolicyState variant.
+        let bad = Checkpoint {
+            policy_state: Some(vec![0xFF; 3]),
+            ..ckpt
+        };
+        let mut fresh = GreedyOrder::new(4, 2);
+        let err = restore_policy(&mut fresh, &bad).unwrap_err();
+        assert!(matches!(err, CheckpointError::PolicyState(_)), "{err}");
     }
 
     #[test]

@@ -351,7 +351,10 @@ impl Trainer {
     /// scheduler counters, and the ordering policy's epoch-boundary
     /// state — then arm [`Trainer::run`] to continue at
     /// `ckpt.epoch + 1`. A v1 snapshot (no policy state) falls back to
-    /// seeding the policy's next permutation from the recorded order.
+    /// seeding the policy's next permutation from the recorded order;
+    /// a gradient-driven policy that cannot adopt it is refused with
+    /// [`checkpoint::CheckpointError::PolicyNotResumable`] (see
+    /// [`checkpoint::restore_policy`]).
     pub fn restore(&mut self, ckpt: &checkpoint::Checkpoint)
         -> crate::Result<()> {
         anyhow::ensure!(ckpt.params.len() == self.params.len(),
@@ -361,25 +364,11 @@ impl Trainer {
         if let Some((lr, best, bad)) = ckpt.sched {
             self.sched.restore_state(lr, best, bad as usize);
         }
-        if let Some(bytes) = &ckpt.policy_state {
-            self.policy.restore_state(bytes).map_err(|e| {
-                checkpoint::CheckpointError::PolicyState(e)
-            })?;
-        } else if !ckpt.order.is_empty() {
-            // Legacy (v1) snapshot: the recorded permutation is all we
-            // have — seed it where the policy supports that, and warn
-            // (instead of silently diverging) where it does not.
-            let order: Vec<usize> =
-                ckpt.order.iter().map(|&i| i as usize).collect();
-            if !self.policy.restore_order(&order) {
-                eprintln!(
-                    "[grab] warning: policy '{}' cannot adopt the \
-                     checkpoint's order; resuming from its \
-                     config-reconstructed state",
-                    self.policy.name()
-                );
-            }
-        }
+        // Shared typed resume gate: restores saved policy state, seeds
+        // legacy order-only snapshots, and *refuses* (typed
+        // `PolicyNotResumable`) a gradient-driven policy that would
+        // silently restart its ordering — never a warning-and-diverge.
+        checkpoint::restore_policy(self.policy.as_mut(), ckpt)?;
         self.start_epoch = ckpt.epoch as usize + 1;
         Ok(())
     }

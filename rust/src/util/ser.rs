@@ -423,8 +423,10 @@ impl CsvWriter {
 ///
 /// History: 1 = the original frame set; 2 = `Hello` grew a `u32`
 /// topology generation (elastic re-handshakes), so a v1 peer must be
-/// turned away at the version check rather than die in `decode_hello`.
-pub const WIRE_VERSION: u8 = 2;
+/// turned away at the version check rather than die in `decode_hello`;
+/// 3 = `Register`/`Lease` frames for the order-service daemon's
+/// worker registry (workers dial in instead of being dialed).
+pub const WIRE_VERSION: u8 = 3;
 
 /// Bytes of the fixed frame header preceding every payload.
 pub const FRAME_HEADER_LEN: usize = 12;
@@ -440,7 +442,11 @@ pub const MAX_FRAME_PAYLOAD: usize = 1 << 28;
 /// `EpochEnd` mirror the two coordinator→worker `ShardMsg` variants;
 /// `Report` carries the worker→coordinator epoch-order report; `Seed`
 /// restores a resumed shard balancer's next local order (checkpoint
-/// resume — docs/determinism.md contract 8).
+/// resume — docs/determinism.md contract 8). `Register`/`Lease` are
+/// the order-service daemon's worker-registry handshake: a worker
+/// dials the daemon and registers once, then the daemon runs the
+/// ordinary `Hello` session over the held socket each time the worker
+/// is leased to a job.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 #[repr(u8)]
 pub enum FrameKind {
@@ -457,6 +463,11 @@ pub enum FrameKind {
     /// Coordinator → worker: re-seed the balancer's next local order
     /// from a checkpoint (only legal between epochs).
     Seed = 6,
+    /// Worker → daemon: join the worker registry (capacity, name).
+    Register = 7,
+    /// Daemon → worker: registration accepted (worker id, registry
+    /// generation).
+    Lease = 8,
 }
 
 impl FrameKind {
@@ -469,6 +480,8 @@ impl FrameKind {
             4 => FrameKind::EpochEnd,
             5 => FrameKind::Report,
             6 => FrameKind::Seed,
+            7 => FrameKind::Register,
+            8 => FrameKind::Lease,
             other => return Err(WireError::BadKind(other)),
         })
     }

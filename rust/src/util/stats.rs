@@ -24,6 +24,15 @@ pub struct Summary {
 
 impl Summary {
     /// Summarize a non-empty sample.
+    ///
+    /// Never panics, whatever the sample contains: ordering uses
+    /// [`f64::total_cmp`], under which NaN with a cleared sign bit
+    /// sorts *above* `+inf` and NaN with a set sign bit sorts *below*
+    /// `-inf`. So a positive NaN sample lands in `max` (and can bleed
+    /// into `p95`/`p50` by interpolation), a negative NaN lands in
+    /// `min`, and `mean`/`std` are NaN whenever any sample is — the
+    /// poison stays visible in the summary instead of killing the
+    /// whole bench/metrics path.
     pub fn of(xs: &[f64]) -> Summary {
         assert!(!xs.is_empty(), "Summary::of on empty slice");
         let n = xs.len();
@@ -31,7 +40,7 @@ impl Summary {
         let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
             / n as f64;
         let mut sorted = xs.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(f64::total_cmp);
         Summary {
             n,
             mean,
@@ -142,6 +151,35 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 5.0);
         assert!((s.p50 - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_survives_nan_and_infinities() {
+        // Regression: a single NaN timing/loss sample used to panic the
+        // whole summary via `partial_cmp().unwrap()`. With total_cmp a
+        // positive-bit NaN sorts above +inf (so it surfaces in `max`),
+        // a negative-bit NaN sorts below -inf (so it surfaces in
+        // `min`), and the moments go NaN instead of aborting.
+        let s = Summary::of(&[1.0, f64::NAN, 2.0, 3.0]);
+        assert_eq!(s.n, 4);
+        assert!(s.mean.is_nan() && s.std.is_nan());
+        assert_eq!(s.min, 1.0);
+        assert!(s.max.is_nan());
+
+        let s = Summary::of(&[f64::NEG_INFINITY, -1.0, f64::INFINITY]);
+        assert_eq!(s.min, f64::NEG_INFINITY);
+        assert_eq!(s.max, f64::INFINITY);
+        assert_eq!(s.p50, -1.0);
+
+        // NaN with the sign bit set lands at the bottom, not the top.
+        let neg_nan = f64::from_bits(0xfff8_0000_0000_0001);
+        let s = Summary::of(&[neg_nan, 0.0, 5.0, f64::INFINITY]);
+        assert!(s.min.is_nan());
+        assert_eq!(s.max, f64::INFINITY);
+
+        // An all-NaN sample is still a summary, not a panic.
+        let s = Summary::of(&[f64::NAN, f64::NAN]);
+        assert!(s.min.is_nan() && s.max.is_nan() && s.p50.is_nan());
     }
 
     #[test]

@@ -1,0 +1,348 @@
+//! Order-service layer tests: control-plane endpoint contracts, the
+//! worker registration lifecycle, drain semantics, and the service
+//! smoke — a daemon job's per-epoch orders must be bit-equal to the
+//! in-process synchronous coordinator at the same parameters
+//! (docs/determinism.md contract 5 over the registered-worker path).
+//!
+//! Everything runs in-process on port 0: the daemon is an
+//! [`OrderService`] handle, the "remote" workers are threads running
+//! the same `run_registered_worker` loop that `grab exp cdgrab
+//! --register` runs, and the control plane is exercised through the
+//! same `service::http` client the `--service` mode uses. The
+//! two-*process* version of the same chain is the CI `service` job.
+
+use std::time::{Duration, Instant};
+
+use grab::exp::cdgrab::CdGrabConfig;
+use grab::ordering::transport::tcp;
+use grab::ordering::{OrderPolicy, ShardedOrder};
+use grab::service::http;
+use grab::service::{order_hash, JobSpec, OrderService, ServeConfig};
+use grab::util::prop::gen;
+use grab::util::rng::Rng;
+use grab::util::ser::Json;
+use grab::util::testdir::TestDir;
+
+/// An in-process daemon on ephemeral ports.
+fn start_service() -> OrderService {
+    OrderService::start(&ServeConfig {
+        register_addr: "127.0.0.1:0".to_string(),
+        http_addr: "127.0.0.1:0".to_string(),
+        read_timeout_secs: 30,
+    })
+    .expect("daemon starts on port 0")
+}
+
+/// Spawn `count` registered-worker threads against `register_addr`.
+fn spawn_workers(
+    register_addr: &str,
+    count: usize,
+) -> Vec<std::thread::JoinHandle<anyhow::Result<()>>> {
+    (0..count)
+        .map(|_| {
+            let addr = register_addr.to_string();
+            std::thread::spawn(move || {
+                tcp::run_registered_worker(
+                    &addr,
+                    Duration::from_secs(10),
+                )
+            })
+        })
+        .collect()
+}
+
+/// Poll `/health` until `workers_available` reaches `want`.
+fn wait_for_workers(http_addr: &str, want: usize) {
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        let (status, body) = http::get(http_addr, "/health").unwrap();
+        assert_eq!(status, 200);
+        let v = Json::parse(&body).unwrap();
+        let have = v
+            .get("workers_available")
+            .unwrap()
+            .as_usize()
+            .unwrap();
+        if have >= want {
+            return;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "only {have}/{want} workers registered before the deadline"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+/// Poll `/jobs/<id>` until it leaves `running`; panics on the deadline.
+fn wait_for_job(http_addr: &str, id: u64) -> Json {
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        assert!(
+            Instant::now() < deadline,
+            "job {id} still running at the deadline"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+        let (status, body) =
+            http::get(http_addr, &format!("/jobs/{id}")).unwrap();
+        assert_eq!(status, 200, "GET /jobs/{id}: {body}");
+        let v = Json::parse(&body).unwrap();
+        if v.get("status").unwrap().as_str().unwrap() != "running" {
+            return v;
+        }
+    }
+}
+
+/// Pull one metric value out of a `/metrics` scrape.
+fn metric(http_addr: &str, name: &str) -> u64 {
+    let (status, text) = http::get(http_addr, "/metrics").unwrap();
+    assert_eq!(status, 200);
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix(name) {
+            if let Some(v) = rest.strip_prefix(' ') {
+                return v.trim().parse().unwrap();
+            }
+        }
+    }
+    panic!("metric {name} missing from exposition:\n{text}");
+}
+
+#[test]
+fn control_plane_endpoint_contracts() {
+    let service = start_service();
+    let addr = service.http_addr();
+
+    // Health: empty daemon, not draining.
+    let (status, body) = http::get(&addr, "/health").unwrap();
+    assert_eq!(status, 200);
+    let v = Json::parse(&body).unwrap();
+    assert_eq!(v.get("status").unwrap().as_str().unwrap(), "ok");
+    assert_eq!(
+        v.get("workers_available").unwrap().as_usize().unwrap(),
+        0
+    );
+    assert_eq!(v.get("generation").unwrap().as_usize().unwrap(), 1);
+
+    // Metrics: parseable exposition with the gauges at zero.
+    assert_eq!(metric(&addr, "grab_workers_available"), 0);
+    assert_eq!(metric(&addr, "grab_jobs_submitted_total"), 0);
+    assert_eq!(metric(&addr, "grab_draining"), 0);
+
+    // Unknown route → 404; wrong method → 405; garbage body → 400.
+    let (status, _) = http::get(&addr, "/nope").unwrap();
+    assert_eq!(status, 404);
+    let (status, _) = http::post(&addr, "/health", "").unwrap();
+    assert_eq!(status, 405);
+    let (status, body) =
+        http::post(&addr, "/jobs", "not json").unwrap();
+    assert_eq!(status, 400, "{body}");
+
+    // A well-formed job with no workers is refused, and the refusal
+    // burns no job id.
+    let spec = JobSpec {
+        n: 64,
+        d: 4,
+        epochs: 1,
+        block: 8,
+        shards: 1,
+        seed: 0,
+    };
+    let (status, body) =
+        http::post(&addr, "/jobs", &spec.to_json().to_string()).unwrap();
+    assert_eq!(status, 409, "{body}");
+    assert_eq!(metric(&addr, "grab_jobs_submitted_total"), 0);
+
+    // Spec validation happens before leasing: zero shards is a 400.
+    let (status, body) = http::post(
+        &addr,
+        "/jobs",
+        "{\"n\":64,\"d\":4,\"epochs\":1,\"block\":8,\"shards\":0,\"seed\":0}",
+    )
+    .unwrap();
+    assert_eq!(status, 400, "{body}");
+
+    service.shutdown();
+}
+
+#[test]
+fn workers_register_lease_and_drain_cleanly() {
+    let service = start_service();
+    let addr = service.http_addr();
+    let workers = spawn_workers(&service.register_addr(), 2);
+    wait_for_workers(&addr, 2);
+
+    assert_eq!(metric(&addr, "grab_registrations_total"), 2);
+    assert_eq!(metric(&addr, "grab_workers_available"), 2);
+    assert_eq!(metric(&addr, "grab_workers_leased"), 0);
+
+    // Shutdown = drain: idle sockets close between sessions and the
+    // workers exit 0, exactly like SIGTERM on the real daemon.
+    service.shutdown();
+    for w in workers {
+        w.join()
+            .expect("worker thread exits")
+            .expect("worker exits cleanly after a drain");
+    }
+}
+
+#[test]
+fn daemon_job_is_bit_equal_to_the_in_process_coordinator() {
+    let service = start_service();
+    let addr = service.http_addr();
+    let workers = spawn_workers(&service.register_addr(), 2);
+    wait_for_workers(&addr, 2);
+
+    let spec = JobSpec {
+        n: 256,
+        d: 16,
+        epochs: 3,
+        block: 32,
+        shards: 2,
+        seed: 7,
+    };
+    let (status, body) =
+        http::post(&addr, "/jobs", &spec.to_json().to_string()).unwrap();
+    assert_eq!(status, 202, "{body}");
+    let job_id =
+        Json::parse(&body).unwrap().get("job").unwrap().as_usize().unwrap()
+            as u64;
+    assert_eq!(job_id, 0);
+
+    let job = wait_for_job(&addr, job_id);
+    assert_eq!(
+        job.get("status").unwrap().as_str().unwrap(),
+        "done",
+        "{job:?}"
+    );
+    let daemon_hashes: Vec<u32> = job
+        .get("epoch_hashes")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as u32)
+        .collect();
+    let job_tx = job.get("tx_bytes").unwrap().as_f64().unwrap() as u64;
+    let job_rx = job.get("rx_bytes").unwrap().as_f64().unwrap() as u64;
+    assert!(job_tx > 0 && job_rx > 0, "job moved no bytes");
+
+    // The contract-5 gate: same (n, d, block, W, seed) through the
+    // in-process synchronous coordinator.
+    let mut rng = Rng::new(spec.seed);
+    let vs = gen::vec_set(&mut rng, spec.n, spec.d);
+    let mut flat = vec![0.0f32; spec.n * spec.d];
+    let mut policy = ShardedOrder::new(spec.n, spec.d, spec.shards);
+    let mut local_hashes = Vec::new();
+    for _ in 0..spec.epochs {
+        grab::ordering::stream_static_epoch(
+            &mut policy,
+            &vs,
+            &mut flat,
+            spec.block,
+        );
+        local_hashes.push(order_hash(policy.epoch_order(0)));
+    }
+    assert_eq!(
+        daemon_hashes, local_hashes,
+        "daemon orders diverge from the in-process coordinator"
+    );
+
+    // One lease = one session: the daemon closed both sockets at the
+    // job boundary and the workers re-registered fresh.
+    wait_for_workers(&addr, 2);
+    assert_eq!(metric(&addr, "grab_registrations_total"), 4);
+
+    // The exported transport counters are exactly this job's totals.
+    assert_eq!(metric(&addr, "grab_jobs_completed_total"), 1);
+    assert_eq!(metric(&addr, "grab_jobs_failed_total"), 0);
+    assert_eq!(
+        metric(&addr, "grab_transport_tx_bytes_total"),
+        job_tx
+    );
+    assert_eq!(
+        metric(&addr, "grab_transport_rx_bytes_total"),
+        job_rx
+    );
+    assert_eq!(
+        metric(&addr, "grab_job_epochs_total"),
+        spec.epochs as u64
+    );
+
+    service.shutdown();
+    for w in workers {
+        w.join().unwrap().unwrap();
+    }
+}
+
+#[test]
+fn drain_refuses_new_registrations_and_jobs() {
+    let service = start_service();
+    let addr = service.http_addr();
+
+    let (status, body) = http::post(&addr, "/drain", "").unwrap();
+    assert_eq!(status, 200, "{body}");
+
+    let (_, body) = http::get(&addr, "/health").unwrap();
+    let v = Json::parse(&body).unwrap();
+    assert_eq!(v.get("status").unwrap().as_str().unwrap(), "draining");
+    assert_eq!(metric(&addr, "grab_draining"), 1);
+
+    // New work is refused with a 503.
+    let spec = JobSpec {
+        n: 64,
+        d: 4,
+        epochs: 1,
+        block: 8,
+        shards: 1,
+        seed: 0,
+    };
+    let (status, body) =
+        http::post(&addr, "/jobs", &spec.to_json().to_string()).unwrap();
+    assert_eq!(status, 503, "{body}");
+
+    // A draining daemon turns registrations away (the worker's dial
+    // succeeds, the lease never comes).
+    let refused = tcp::register_with_daemon(
+        &service.register_addr(),
+        "late-worker",
+        Duration::from_secs(5),
+    );
+    assert!(refused.is_err(), "draining daemon must refuse to lease");
+    assert!(metric(&addr, "grab_registrations_refused_total") >= 1);
+
+    service.shutdown();
+}
+
+/// The `--service` client end-to-end: submit, poll, verify against the
+/// local reference, write the CSV — the same code path the CI smoke
+/// drives across two real processes.
+#[test]
+fn service_client_gates_the_daemon_and_writes_the_csv() {
+    let service = start_service();
+    let workers = spawn_workers(&service.register_addr(), 2);
+    wait_for_workers(&service.http_addr(), 2);
+
+    let cfg = CdGrabConfig {
+        n: 256,
+        d: 16,
+        epochs: 3,
+        block: 32,
+        ..CdGrabConfig::small()
+    };
+    let dir = TestDir::new("service-client");
+    grab::service::client::run_job_against_daemon(
+        &service.http_addr(),
+        &cfg,
+        dir.path(),
+    )
+    .expect("client verifies the daemon against the local reference");
+    let csv = std::fs::read_to_string(dir.path().join("service_job.csv"))
+        .expect("client wrote service_job.csv");
+    assert_eq!(csv.lines().count(), cfg.epochs + 1, "header + one row/epoch");
+    assert!(csv.starts_with("epoch,daemon_hash,local_hash"));
+
+    service.shutdown();
+    for w in workers {
+        w.join().unwrap().unwrap();
+    }
+}

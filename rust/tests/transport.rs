@@ -390,7 +390,7 @@ mod chaos {
         // must get a typed error — no hang, no bogus report.
         let addr = tcp::spawn_loopback(1).unwrap();
         let (n, d) = (8, 2);
-        let inner = tcp::connect(addr, n, d, 0).unwrap();
+        let inner = tcp::connect(addr, n, d, 0, tcp::default_read_timeout()).unwrap();
         let mut link = FaultTransport::new(
             Box::new(inner),
             FaultPlan::drop_block(1),
@@ -412,7 +412,7 @@ mod chaos {
         // typed rejection, never a silent double-balance.
         let addr = tcp::spawn_loopback(1).unwrap();
         let (n, d) = (8, 2);
-        let inner = tcp::connect(addr, n, d, 0).unwrap();
+        let inner = tcp::connect(addr, n, d, 0, tcp::default_read_timeout()).unwrap();
         let mut link = FaultTransport::new(
             Box::new(inner),
             FaultPlan::duplicate_block(3),
@@ -436,7 +436,7 @@ mod chaos {
             let drop_at = plan.drop_blocks[0];
             let addr = tcp::spawn_loopback(1).unwrap();
             let (n, d) = (8, 3);
-            let inner = tcp::connect(addr, n, d, 0).unwrap();
+            let inner = tcp::connect(addr, n, d, 0, tcp::default_read_timeout()).unwrap();
             let mut link = FaultTransport::new(
                 Box::new(inner),
                 FaultPlan::drop_block(drop_at),

@@ -1,0 +1,242 @@
+//! Lexical Rust scanner for the audit pass.
+//!
+//! [`scan`] splits a source file into two parallel views with identical
+//! line structure: `code`, where every comment and string/char-literal
+//! *content* is blanked to spaces, and `comment_lines`, the comment text
+//! found on each line. Rules match against `code` so that a forbidden
+//! pattern quoted inside a string literal or discussed in a comment
+//! (both of which exist in this tree) can never fire, while waiver and
+//! `SAFETY:` detection read `comment_lines` only.
+//!
+//! The scanner is a byte-level state machine handling the Rust surface
+//! that matters for blanking: line comments, nested block comments,
+//! plain/byte strings with escapes, raw and byte-raw strings with any
+//! `#` count, and char literals — disambiguated from lifetimes and loop
+//! labels (`'a'` is a literal, `'static` is not) by the "identifier
+//! char not followed by a closing quote" rule. It does not need to be a
+//! full lexer: anything it cannot classify stays in `code` as-is, which
+//! can only ever *add* findings, never hide one.
+
+/// A scanned source file: blanked code plus per-line comment text.
+pub(crate) struct Scan {
+    /// The source with comment and literal contents replaced by spaces.
+    /// Newlines are preserved, so byte offsets map to the original
+    /// file's line numbers.
+    pub code: String,
+    /// `comment_lines[i]` is the comment text on 1-based line `i + 1`
+    /// (empty where the line has no comment).
+    pub comment_lines: Vec<String>,
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Scan `src` into its code and comment views.
+pub(crate) fn scan(src: &str) -> Scan {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut code = vec![b' '; n];
+    let mut comm = vec![b' '; n];
+    let mut i = 0usize;
+    while i < n {
+        let c = b[i];
+        let prev_ident = i > 0 && is_ident(b[i - 1]);
+
+        // Line comment: copy to the comment view through end of line.
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            while i < n && b[i] != b'\n' {
+                comm[i] = b[i];
+                i += 1;
+            }
+            continue;
+        }
+
+        // Block comment, tracking nesting (Rust block comments nest).
+        if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let mut depth = 0usize;
+            while i < n {
+                if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                    depth += 1;
+                    comm[i] = b[i];
+                    comm[i + 1] = b[i + 1];
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < n && b[i + 1] == b'/' {
+                    depth -= 1;
+                    comm[i] = b[i];
+                    comm[i + 1] = b[i + 1];
+                    i += 2;
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    comm[i] = b[i];
+                    i += 1;
+                }
+            }
+            continue;
+        }
+
+        // Raw / byte-raw string: r"..", r#".."#, br".." — blank through
+        // the matching `"` + same number of `#`s. The prefix must not
+        // continue an identifier (`carry` is not `r"ry"`).
+        if !prev_ident && (c == b'r' || (c == b'b' && i + 1 < n && b[i + 1] == b'r')) {
+            let j = i + if c == b'b' { 2 } else { 1 };
+            let mut hashes = 0usize;
+            while j + hashes < n && b[j + hashes] == b'#' {
+                hashes += 1;
+            }
+            if j + hashes < n && b[j + hashes] == b'"' {
+                i = j + hashes + 1;
+                while i < n {
+                    if b[i] == b'"' {
+                        let mut h = 0usize;
+                        while h < hashes && i + 1 + h < n && b[i + 1 + h] == b'#' {
+                            h += 1;
+                        }
+                        if h == hashes {
+                            i += 1 + hashes;
+                            break;
+                        }
+                    }
+                    i += 1;
+                }
+                continue;
+            }
+        }
+
+        // Byte string / byte char: skip the `b` prefix and handle the
+        // quote below exactly like the unprefixed form.
+        let mut i2 = i;
+        if !prev_ident && c == b'b' && i + 1 < n && (b[i + 1] == b'"' || b[i + 1] == b'\'') {
+            i2 = i + 1;
+        }
+        let c = b[i2];
+
+        // Plain string literal with escapes.
+        if c == b'"' {
+            i = i2 + 1;
+            while i < n {
+                if b[i] == b'\\' {
+                    i += 2;
+                } else if b[i] == b'"' {
+                    i += 1;
+                    break;
+                } else {
+                    i += 1;
+                }
+            }
+            continue;
+        }
+
+        // Char literal vs lifetime/loop label: after `'`, an identifier
+        // char NOT followed by a closing `'` is a lifetime (kept as
+        // code); otherwise consume a char literal (bounded at end of
+        // line so an apostrophe in a malformed spot cannot eat the
+        // file).
+        if c == b'\'' {
+            let nxt = if i2 + 1 < n { b[i2 + 1] } else { 0 };
+            let nxt2 = if i2 + 2 < n { b[i2 + 2] } else { 0 };
+            if nxt != 0 && nxt != b'\\' && is_ident(nxt) && nxt2 != b'\'' {
+                code[i] = b[i];
+                i += 1;
+                continue;
+            }
+            i = i2 + 1;
+            while i < n && b[i] != b'\n' {
+                if b[i] == b'\\' {
+                    i += 2;
+                } else if b[i] == b'\'' {
+                    i += 1;
+                    break;
+                } else {
+                    i += 1;
+                }
+            }
+            continue;
+        }
+
+        code[i] = b[i];
+        i += 1;
+    }
+
+    // Newlines exist in both views so line numbering is shared.
+    for (idx, &ch) in b.iter().enumerate() {
+        if ch == b'\n' {
+            code[idx] = b'\n';
+            comm[idx] = b'\n';
+        }
+    }
+
+    let code = String::from_utf8_lossy(&code).into_owned();
+    let comment_lines = String::from_utf8_lossy(&comm)
+        .split('\n')
+        .map(str::to_string)
+        .collect();
+    Scan { code, comment_lines }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_and_comments_are_blanked_code_survives() {
+        let src = "let x = \"partial_cmp\"; // partial_cmp here\nlet y = 1;\n";
+        let s = scan(src);
+        assert!(!s.code.contains("partial_cmp"));
+        assert!(s.code.contains("let x ="));
+        assert!(s.code.contains("let y = 1;"));
+        assert!(s.comment_lines[0].contains("partial_cmp"));
+        assert_eq!(s.comment_lines[1], "");
+    }
+
+    #[test]
+    fn raw_and_byte_strings_are_blanked() {
+        let src = concat!(
+            "let a = r#\"unsafe \"quoted\" inside\"#;\n",
+            "let b = br\"HashMap\";\n",
+            "let c = b\"SystemTime\";\n",
+        );
+        let s = scan(src);
+        assert!(!s.code.contains("unsafe"));
+        assert!(!s.code.contains("HashMap"));
+        assert!(!s.code.contains("SystemTime"));
+        assert_eq!(s.code.matches('\n').count(), 3);
+    }
+
+    #[test]
+    fn lifetimes_stay_code_char_literals_are_blanked() {
+        let src = "fn f<'a>(x: &'a str) -> char { 'x' }\n'static;\n";
+        let s = scan(src);
+        // Lifetime names survive; the char literal's content does not.
+        assert!(s.code.contains("&'a str"));
+        assert!(!s.code.contains("'x'"));
+        assert!(s.code.contains("'static"));
+    }
+
+    #[test]
+    fn nested_block_comments_end_where_rust_says() {
+        let src = "/* outer /* inner */ still comment */ let z = 3;\n";
+        let s = scan(src);
+        assert!(!s.code.contains("outer"));
+        assert!(!s.code.contains("still comment"));
+        assert!(s.code.contains("let z = 3;"));
+        assert!(s.comment_lines[0].contains("inner"));
+    }
+
+    #[test]
+    fn escaped_quotes_do_not_end_literals() {
+        let src = "let s = \"a\\\"unsafe\\\"b\"; let t = '\\''; let u = 9;\n";
+        let s = scan(src);
+        assert!(!s.code.contains("unsafe"));
+        assert!(s.code.contains("let u = 9;"));
+    }
+
+    #[test]
+    fn identifier_ending_in_r_is_not_a_raw_string() {
+        let src = "let carry = var\"\"; // `var\"\"` is nonsense but `r` must not bind\n";
+        let s = scan(src);
+        assert!(s.code.contains("let carry = var"));
+    }
+}

@@ -1,0 +1,222 @@
+//! `grab audit` — the repo-native determinism/safety lint pass.
+//!
+//! A source-level audit over `src/`, `tests/`, and `benches/` enforcing
+//! the invariants the determinism contracts (docs/determinism.md)
+//! depend on but the type system cannot express: NaN-safe float
+//! ordering (D01), no order-randomized containers in result-relevant
+//! modules (D02), wall-clock reads only at allowlisted sites (D03), no
+//! FMA in the kernel tier (D04), `SAFETY:` justifications on every
+//! `unsafe` (S01), and no bare truncating casts in the wire layers
+//! (W01). Rules are lexical — [`lex`] blanks comments and string
+//! literals first, so quoting a forbidden pattern in a doc comment or a
+//! test fixture never trips the pass, and no violation can hide behind
+//! failed type inference.
+//!
+//! Findings print as `path:line: RULE: message` and make the command
+//! exit non-zero. A site that genuinely needs an exemption carries an
+//! `audit: allow` waiver comment naming the rule and a quoted reason
+//! (syntax in docs/audit.md) on its own or the preceding line; the pass
+//! re-checks waivers — unknown rules, missing reasons, and waivers that
+//! no longer match a finding are violations themselves (rule `A00`).
+//!
+//! The pass is wired into CI as a gate in front of the test jobs, with
+//! Miri and AddressSanitizer jobs covering the dynamic UB classes a
+//! lexical pass cannot see (docs/audit.md has the scope table).
+//! `tools/audit_mirror.py` is a Python mirror of this module for hosts
+//! without a Rust toolchain; the fixture suite in `tests/audit.rs` is
+//! the semantics contract keeping the two in sync.
+
+pub(crate) mod lex;
+pub(crate) mod rules;
+
+pub use rules::{Rule, RULES};
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::cli::Args;
+
+/// One audit violation at a specific source location.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    /// Rule id (`D01`, …, or `A00` for waiver hygiene).
+    pub rule: &'static str,
+    /// Path relative to the crate root, `/`-separated.
+    pub path: String,
+    /// 1-based line of the offending token.
+    pub line: usize,
+    /// Human-readable description of the violation.
+    pub message: String,
+}
+
+/// The result of auditing a tree.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// Surviving violations, ordered by path then line.
+    pub findings: Vec<Finding>,
+    /// Findings absorbed by well-formed waivers (kept so callers can
+    /// assert waiver policy — the self-audit requires zero S01/D01
+    /// waivers on the shipped tree).
+    pub waived: Vec<Finding>,
+    /// Number of `.rs` files scanned.
+    pub files_scanned: usize,
+}
+
+/// Audit a single file's source text. `rel_path` is the crate-relative
+/// `/`-separated path (`src/util/ser.rs`) the per-rule scopes match
+/// against. Returns the surviving findings and the waived findings —
+/// this is the whole engine; [`run`] just walks the tree and feeds it.
+pub fn audit_source(rel_path: &str, source: &str) -> (Vec<Finding>, Vec<Finding>) {
+    rules::check_source(rel_path, source)
+}
+
+/// Audit every `.rs` file under `<root>/src`, `<root>/tests`, and
+/// `<root>/benches`, where `root` is the crate root (the directory
+/// holding `Cargo.toml`). Files are visited in sorted path order so
+/// output is deterministic.
+pub fn run(root: &Path) -> Result<Report> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    for sub in ["src", "tests", "benches"] {
+        collect_rs(&root.join(sub), &mut files)?;
+    }
+    files.sort();
+    if files.is_empty() {
+        bail!(
+            "no .rs files under {} (expected a crate root with \
+             src/, tests/, benches/)",
+            root.display()
+        );
+    }
+    let mut report = Report::default();
+    for path in &files {
+        let rel = path
+            .strip_prefix(root)
+            .expect("walked paths start at root")
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        let source = fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let (findings, waived) = audit_source(&rel, &source);
+        report.findings.extend(findings);
+        report.waived.extend(waived);
+        report.files_scanned += 1;
+    }
+    Ok(report)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    if !dir.is_dir() {
+        return Ok(());
+    }
+    let entries = fs::read_dir(dir)
+        .with_context(|| format!("listing {}", dir.display()))?;
+    for entry in entries {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Find the crate root from the current directory: `rust/` when
+/// invoked at the repository root, `.` when invoked inside `rust/`.
+fn locate_root() -> Result<PathBuf> {
+    for candidate in ["rust", "."] {
+        let root = PathBuf::from(candidate);
+        if root.join("src").is_dir() && root.join("Cargo.toml").is_file() {
+            return Ok(root);
+        }
+    }
+    bail!(
+        "cannot find the crate root (run from the repository root or \
+         rust/, or pass --root DIR)"
+    );
+}
+
+/// `grab audit` entry point: scan the tree, print findings, exit
+/// non-zero on any violation.
+///
+/// Flags: `--root DIR` (crate root; auto-detected otherwise) and
+/// `--list` (print the rule table and exit).
+pub fn run_from_cli(args: &Args) -> Result<()> {
+    let list = args.flag("list");
+    let root = args.opt_str("root").map(PathBuf::from);
+    args.reject_unknown()?;
+
+    if list {
+        println!("{:<5} {:<45} summary", "rule", "scope");
+        for rule in &RULES {
+            println!("{:<5} {:<45} {}", rule.id, rule.scope, rule.summary);
+        }
+        println!(
+            "A00   (implicit)                                    \
+             waiver hygiene: malformed or stale waivers; not waivable"
+        );
+        return Ok(());
+    }
+
+    let root = match root {
+        Some(r) => r,
+        None => locate_root()?,
+    };
+    let report = run(&root)?;
+    for f in &report.findings {
+        println!("{}/{}:{}: {}: {}", root.display(), f.path, f.line, f.rule, f.message);
+    }
+    eprintln!(
+        "audit: {} violation(s), {} waiver(s) honored, {} file(s) scanned",
+        report.findings.len(),
+        report.waived.len(),
+        report.files_scanned
+    );
+    if !report.findings.is_empty() {
+        bail!("audit failed with {} violation(s)", report.findings.len());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The fixture matrix (positive/negative/waiver per rule) lives in
+    // tests/audit.rs; these unit tests cover the walker and the report
+    // plumbing, and run under Miri.
+
+    #[test]
+    fn audit_source_reports_crate_relative_path_and_line() {
+        let src = "fn f() {\n    let p = std::time::SystemTime::now();\n}\n";
+        let (findings, waived) = audit_source("src/train/run.rs", src);
+        assert!(waived.is_empty());
+        assert_eq!(findings.len(), 1);
+        assert_eq!(findings[0].rule, "D03");
+        assert_eq!(findings[0].path, "src/train/run.rs");
+        assert_eq!(findings[0].line, 2);
+    }
+
+    #[test]
+    fn clean_source_is_clean() {
+        let src = "/// Doc.\npub fn ok(a: f32, b: f32) -> bool {\n    \
+                   a.total_cmp(&b).is_lt()\n}\n";
+        let (findings, waived) = audit_source("src/herding/x.rs", src);
+        assert!(findings.is_empty(), "{findings:?}");
+        assert!(waived.is_empty());
+    }
+
+    #[test]
+    fn rules_table_is_sorted_and_unique() {
+        let ids: Vec<&str> = RULES.iter().map(|r| r.id).collect();
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(ids, sorted, "RULES must stay in sorted id order");
+        assert_eq!(ids.len(), 6);
+    }
+}

@@ -1,0 +1,411 @@
+//! The audit rule set and the per-file checker.
+//!
+//! Each rule is keyed to a determinism or safety contract
+//! (docs/determinism.md, docs/audit.md) and matches *lexically* against
+//! the blanked code view from [`super::lex`] — no type information, so
+//! a rule can be conservative but never silently misses a site because
+//! inference failed. Waivers — `audit: allow` comments naming a rule
+//! and a quoted reason (syntax in docs/audit.md) — are parsed from the
+//! comment view and cover same-rule findings on their own line and the
+//! next; malformed or unused waivers are themselves findings (rule
+//! `A00`, which is not waivable).
+
+use super::lex::{scan, Scan};
+use super::Finding;
+
+/// Integer cast targets rule W01 treats as potentially truncating.
+const INT_TYPES: [&str; 12] = [
+    "u8", "u16", "u32", "u64", "u128", "usize", "i8", "i16", "i32", "i64",
+    "i128", "isize",
+];
+
+/// Module prefixes whose containers feed epoch orders (rule D02).
+const D02_DIRS: [&str; 5] = [
+    "src/ordering/",
+    "src/balance/",
+    "src/herding/",
+    "src/tensor/",
+    "src/train/",
+];
+
+/// The allowlisted clock sites for rule D03: the bench harness's own
+/// timer, the elastic coordinator's per-shard cost clocks, and the
+/// service client's connect/read deadlines. Everything else in `src/`
+/// must stay wall-clock-free so time can never reach a static-path
+/// order.
+const D03_ALLOW: [&str; 3] = [
+    "src/util/timer.rs",
+    "src/ordering/sharded.rs",
+    "src/service/client.rs",
+];
+
+/// The wire layers rule W01 covers: every byte that crosses a socket or
+/// a checkpoint file is produced/consumed here.
+const W01_FILES: [&str; 3] = [
+    "src/util/ser.rs",
+    "src/ordering/transport/codec.rs",
+    "src/service/http.rs",
+];
+
+/// How many lines above an `unsafe` token rule S01 searches for a
+/// `SAFETY:` comment.
+const SAFETY_LOOKBACK: usize = 6;
+
+/// A rule's identity and scope, for `grab audit --list` and the docs.
+pub struct Rule {
+    /// Stable rule id (`D01`, `S01`, …) used in findings and waivers.
+    pub id: &'static str,
+    /// Where the rule applies, in one phrase.
+    pub scope: &'static str,
+    /// What the rule forbids and why, in one sentence.
+    pub summary: &'static str,
+}
+
+/// Every shipped rule, in id order. `A00` (waiver hygiene) is implicit:
+/// it guards the waiver mechanism itself and cannot be waived.
+pub const RULES: [Rule; 6] = [
+    Rule {
+        id: "D01",
+        scope: "all scanned sources",
+        summary: "no `partial_cmp` unwrap/expect chains and no \
+                  sort/min/max comparators built on `partial_cmp` — \
+                  NaN either panics or breaks the ordering; use \
+                  `total_cmp`",
+    },
+    Rule {
+        id: "D02",
+        scope: "ordering/, balance/, herding/, tensor/, train/",
+        summary: "no `HashMap`/`HashSet` where iteration order could \
+                  leak into an epoch order; use BTreeMap/BTreeSet/Vec",
+    },
+    Rule {
+        id: "D03",
+        scope: "src/ outside the allowlisted clock sites",
+        summary: "no `Instant::now`/`SystemTime` — wall-clock must \
+                  never reach a static-path order",
+    },
+    Rule {
+        id: "D04",
+        scope: "src/tensor/",
+        summary: "no `mul_add`/FMA — contract 7 bit-equality needs \
+                  separate mul then add",
+    },
+    Rule {
+        id: "S01",
+        scope: "all scanned sources",
+        summary: "every `unsafe` must carry a `// SAFETY:` comment on \
+                  the same line or within the 6 lines above",
+    },
+    Rule {
+        id: "W01",
+        scope: "util/ser.rs, ordering/transport/codec.rs, \
+                service/http.rs",
+        summary: "no bare `as` integer casts in the wire layers; use \
+                  the checked conversions in util::ser",
+    },
+];
+
+fn is_word(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Byte offsets of whole-word occurrences of `needle` in `code`.
+fn find_words(code: &str, needle: &str) -> Vec<usize> {
+    let cb = code.as_bytes();
+    let mut out = Vec::new();
+    let mut start = 0usize;
+    while let Some(pos) = code[start..].find(needle) {
+        let off = start + pos;
+        let before_ok = off == 0 || !is_word(cb[off - 1]);
+        let end = off + needle.len();
+        let after_ok = end >= cb.len() || !is_word(cb[end]);
+        if before_ok && after_ok {
+            out.push(off);
+        }
+        start = off + 1;
+    }
+    out
+}
+
+fn skip_ws(code: &[u8], mut i: usize) -> usize {
+    while i < code.len() && code[i].is_ascii_whitespace() {
+        i += 1;
+    }
+    i
+}
+
+/// `i` points at `(`; returns the index just past the matching `)`.
+fn balanced_span(code: &[u8], mut i: usize) -> usize {
+    let mut depth = 0i64;
+    while i < code.len() {
+        match code[i] {
+            b'(' => depth += 1,
+            b')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return i + 1;
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    i
+}
+
+fn line_of(code: &str, off: usize) -> usize {
+    code.as_bytes()[..off].iter().filter(|&&b| b == b'\n').count() + 1
+}
+
+fn check_d01(code: &str, mut emit: impl FnMut(usize, String)) {
+    let cb = code.as_bytes();
+    for off in find_words(code, "partial_cmp") {
+        let mut j = skip_ws(cb, off + "partial_cmp".len());
+        if j >= cb.len() || cb[j] != b'(' {
+            continue;
+        }
+        j = skip_ws(cb, balanced_span(cb, j));
+        if j < cb.len() && cb[j] == b'.' {
+            j = skip_ws(cb, j + 1);
+            for m in ["unwrap", "expect"] {
+                let hit = code[j..].starts_with(m)
+                    && (j + m.len() >= cb.len() || !is_word(cb[j + m.len()]));
+                if hit {
+                    emit(
+                        off,
+                        format!(
+                            "`partial_cmp(..).{m}()` panics on NaN; \
+                             compare floats with `total_cmp`"
+                        ),
+                    );
+                }
+            }
+        }
+    }
+    for fun in ["sort_by", "sort_unstable_by", "max_by", "min_by"] {
+        for off in find_words(code, fun) {
+            let j = skip_ws(cb, off + fun.len());
+            if j >= cb.len() || cb[j] != b'(' {
+                continue;
+            }
+            let body = &code[j..balanced_span(cb, j)];
+            if !find_words(body, "partial_cmp").is_empty() {
+                emit(
+                    off,
+                    format!(
+                        "`{fun}` comparator uses `partial_cmp`: NaN \
+                         ordering is undefined; use `total_cmp`"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// One parsed waiver comment.
+struct Waiver {
+    rule: String,
+    line: usize,
+    used: bool,
+}
+
+/// Parse the text after the waiver marker (everything following the
+/// opening paren); `Some(rule)` on a well-formed waiver with a known
+/// rule and a non-empty reason.
+fn parse_waiver_body(body: &str) -> Option<String> {
+    let s = body.trim_start();
+    let sb = s.as_bytes();
+    if sb.len() < 3
+        || !sb[0].is_ascii_uppercase()
+        || !sb[1].is_ascii_digit()
+        || !sb[2].is_ascii_digit()
+    {
+        return None;
+    }
+    let rule = &s[..3];
+    if !RULES.iter().any(|r| r.id == rule) {
+        return None;
+    }
+    let s = s[3..].trim_start().strip_prefix(',')?;
+    let s = s.trim_start().strip_prefix("reason")?;
+    let s = s.trim_start().strip_prefix('=')?;
+    let s = s.trim_start().strip_prefix('"')?;
+    let end = s.find('"')?;
+    let reason = &s[..end];
+    s[end + 1..].trim_start().strip_prefix(')')?;
+    if reason.trim().is_empty() {
+        return None;
+    }
+    Some(rule.to_string())
+}
+
+/// Audit one file's source. `rel_path` is the path relative to the
+/// crate root with `/` separators (`src/util/ser.rs`), which is what
+/// the per-rule scopes match against. Returns the surviving findings
+/// (sorted by line) and the findings absorbed by waivers (so callers
+/// can assert waiver policy — e.g. the self-audit requires zero
+/// S01/D01 waivers).
+pub(crate) fn check_source(rel_path: &str, source: &str) -> (Vec<Finding>, Vec<Finding>) {
+    let Scan { code, comment_lines } = scan(source);
+    let mut findings: Vec<(&'static str, usize, String)> = Vec::new();
+
+    check_d01(&code, |off, msg| {
+        findings.push(("D01", line_of(&code, off), msg));
+    });
+
+    if D02_DIRS.iter().any(|d| rel_path.starts_with(d)) {
+        for name in ["HashMap", "HashSet"] {
+            for off in find_words(&code, name) {
+                findings.push((
+                    "D02",
+                    line_of(&code, off),
+                    format!(
+                        "`{name}` iteration order is randomized per \
+                         process and can leak into an epoch order; use \
+                         BTreeMap/BTreeSet/Vec"
+                    ),
+                ));
+            }
+        }
+    }
+
+    if rel_path.starts_with("src/") && !D03_ALLOW.contains(&rel_path) {
+        for needle in ["Instant::now", "SystemTime"] {
+            for off in find_words(&code, needle) {
+                findings.push((
+                    "D03",
+                    line_of(&code, off),
+                    format!(
+                        "wall-clock read (`{needle}`) outside the \
+                         allowlisted clock sites can reach a \
+                         static-path order"
+                    ),
+                ));
+            }
+        }
+    }
+
+    for off in find_words(&code, "unsafe") {
+        let line = line_of(&code, off);
+        let lo = line.saturating_sub(1 + SAFETY_LOOKBACK);
+        let hi = line.min(comment_lines.len());
+        let covered = (lo..hi).any(|k| comment_lines[k].contains("SAFETY:"));
+        if !covered {
+            findings.push((
+                "S01",
+                line,
+                format!(
+                    "`unsafe` without a `// SAFETY:` comment in the \
+                     {SAFETY_LOOKBACK} lines above"
+                ),
+            ));
+        }
+    }
+
+    if rel_path.starts_with("src/tensor/") {
+        for off in find_words(&code, "mul_add") {
+            findings.push((
+                "D04",
+                line_of(&code, off),
+                "`mul_add` fuses mul+add (FMA): contract 7 \
+                 bit-equality needs separate mul then add"
+                    .to_string(),
+            ));
+        }
+        let mut start = 0usize;
+        while let Some(pos) = code[start..].find("fmadd") {
+            let off = start + pos;
+            findings.push((
+                "D04",
+                line_of(&code, off),
+                "FMA intrinsic: contract 7 bit-equality needs \
+                 separate mul then add"
+                    .to_string(),
+            ));
+            start = off + 1;
+        }
+    }
+
+    if W01_FILES.contains(&rel_path) {
+        let cb = code.as_bytes();
+        for off in find_words(&code, "as") {
+            let j = skip_ws(cb, off + 2);
+            let mut end = j;
+            while end < cb.len() && is_word(cb[end]) {
+                end += 1;
+            }
+            let target = &code[j..end];
+            if INT_TYPES.contains(&target) {
+                findings.push((
+                    "W01",
+                    line_of(&code, off),
+                    format!(
+                        "bare `as {target}` cast in a wire layer can \
+                         truncate silently; use the checked \
+                         conversions in util::ser"
+                    ),
+                ));
+            }
+        }
+    }
+
+    // Waivers.
+    let mut waivers: Vec<Waiver> = Vec::new();
+    const MARKER: &str = "audit: allow(";
+    for (idx, ctext) in comment_lines.iter().enumerate() {
+        let Some(pos) = ctext.find(MARKER) else { continue };
+        let line = idx + 1;
+        match parse_waiver_body(&ctext[pos + MARKER.len()..]) {
+            Some(rule) => waivers.push(Waiver { rule, line, used: false }),
+            None => findings.push((
+                "A00",
+                line,
+                "malformed waiver: expected `audit: allow(<rule>, \
+                 reason = \"...\")` with a known rule and a non-empty \
+                 reason"
+                    .to_string(),
+            )),
+        }
+    }
+
+    let mut kept: Vec<(&'static str, usize, String)> = Vec::new();
+    let mut waived: Vec<(&'static str, usize, String)> = Vec::new();
+    for f in findings {
+        let hit = waivers
+            .iter_mut()
+            .find(|w| w.rule == f.0 && (f.1 == w.line || f.1 == w.line + 1));
+        match hit {
+            Some(w) => {
+                w.used = true;
+                waived.push(f);
+            }
+            None => kept.push(f),
+        }
+    }
+    for w in &waivers {
+        if !w.used {
+            kept.push((
+                "A00",
+                w.line,
+                format!(
+                    "stale waiver: no {} finding on this or the next \
+                     line",
+                    w.rule
+                ),
+            ));
+        }
+    }
+    kept.sort_by_key(|f| f.1);
+
+    let to_findings = |v: Vec<(&'static str, usize, String)>| -> Vec<Finding> {
+        v.into_iter()
+            .map(|(rule, line, message)| Finding {
+                rule,
+                path: rel_path.to_string(),
+                line,
+                message,
+            })
+            .collect()
+    };
+    (to_findings(kept), to_findings(waived))
+}

@@ -111,10 +111,31 @@ mod tests {
         let (_, greedy_l2) = herding_bound(&vs, &greedy);
         // Sorted-by-first-coordinate is a pathologically bad order.
         let mut bad: Vec<usize> = (0..vs.len()).collect();
-        bad.sort_by(|&a, &b| vs[a][0].partial_cmp(&vs[b][0]).unwrap());
+        bad.sort_by(|&a, &b| vs[a][0].total_cmp(&vs[b][0]));
         let (_, bad_l2) = herding_bound(&vs, &bad);
         assert!(greedy_l2 < bad_l2 / 2.0,
                 "greedy {greedy_l2} vs bad {bad_l2}");
+    }
+
+    #[test]
+    fn greedy_survives_nan_inputs() {
+        // A NaN projected cost must never panic the selection loop (the
+        // `partial_cmp().unwrap()` bug class from PR 8's `Summary::of`,
+        // audit rule D01): `score < best_score` is simply false for NaN,
+        // so poisoned candidates are picked last and the output is still
+        // a permutation.
+        let vs = vec![
+            vec![1.0f32, 2.0],
+            vec![f32::NAN, 0.0],
+            vec![-1.0, -2.0],
+            vec![0.5, f32::NAN],
+            vec![3.0, -1.0],
+        ];
+        assert_permutation(&greedy_order(&vs)).unwrap();
+        assert_permutation(&greedy_order_raw(&vs)).unwrap();
+        // All-NaN input: still a permutation, still no panic.
+        let poisoned = vec![vec![f32::NAN; 3]; 4];
+        assert_permutation(&greedy_order(&poisoned)).unwrap();
     }
 
     #[test]

@@ -35,10 +35,13 @@
 //! [`service`] daemon (`grab serve`) runs CD-GraB jobs over a registry
 //! of dialed-in workers behind an HTTP control plane.
 //! `docs/perf.md` covers the balance-kernel tiers and the recorded
-//! `BENCH_*.json` perf trajectory.
+//! `BENCH_*.json` perf trajectory, and `docs/audit.md` the [`audit`]
+//! static pass (`grab audit`) that keeps the contracts' source-level
+//! invariants from regressing.
 
 #![warn(missing_docs)]
 
+pub mod audit;
 pub mod balance;
 pub mod bench;
 pub mod config;

@@ -19,6 +19,8 @@
 //!             [--read-timeout SECS]   # order-service daemon
 //! grab bench  [--out BENCH.json] [--quick] [--kernels LIST]
 //!             # balance-kernel perf trajectory (docs/perf.md)
+//! grab audit  [--root DIR] [--list]    # determinism/safety lint pass
+//!             # (docs/audit.md); non-zero exit on violations
 //! grab inspect [--artifacts DIR]       # artifact/manifest summary
 //! ```
 
@@ -49,6 +51,7 @@ fn run() -> Result<()> {
         "exp" => grab::exp::run_from_cli(&args),
         "serve" => grab::service::run_serve(&args),
         "bench" => grab::bench::run_from_cli(&args),
+        "audit" => grab::audit::run_from_cli(&args),
         "inspect" => cmd_inspect(&args),
         "help" | "--help" => {
             print!("{}", HELP);
@@ -72,6 +75,10 @@ USAGE:
                            HTTP control plane (docs/service.md)
   grab bench [options]     run the balance/ordering benchmark cases and
                            emit versioned JSON (docs/perf.md)
+  grab audit [options]     lint src/tests/benches against the
+                           determinism/safety rules (docs/audit.md);
+                           prints path:line findings, exits non-zero on
+                           any violation
   grab inspect             show artifact manifest / model layouts
   grab help
 
@@ -169,6 +176,11 @@ BENCH OPTIONS:
                            (default: scalar,simd,simd+par)
   --quick                  reduced iteration budget (CI smoke mode;
                            boolean flag, put it last)
+
+AUDIT OPTIONS:
+  --root DIR               crate root to scan (default: auto-detect
+                           rust/ or .)
+  --list                   print the rule table and exit
 ";
 
 fn cmd_train(args: &Args) -> Result<()> {

@@ -24,7 +24,10 @@
 //! [`WireError`] on any mismatch; decoders never panic and never
 //! partially fill their output.
 
-use crate::util::ser::{WireError, MAX_FRAME_PAYLOAD};
+use crate::util::ser::{
+    u32_from_usize, u64_from_usize, usize_from_u32, usize_from_u64,
+    WireError, MAX_FRAME_PAYLOAD,
+};
 
 /// Handshake parameters announced by the coordinator when opening one
 /// shard link: the shard's local unit count, the gradient dimension,
@@ -74,8 +77,10 @@ pub fn encode_block(data: &[f32], d: usize, out: &mut Vec<u8>) {
     let rows = data.len() / d;
     out.clear();
     out.reserve(8 + data.len() * 4);
-    out.extend_from_slice(&(rows as u32).to_le_bytes());
-    out.extend_from_slice(&(d as u32).to_le_bytes());
+    let rows32 = u32_from_usize(rows).expect("block rows over wire limit");
+    let d32 = u32_from_usize(d).expect("block dimension over wire limit");
+    out.extend_from_slice(&rows32.to_le_bytes());
+    out.extend_from_slice(&d32.to_le_bytes());
     for &x in data {
         out.extend_from_slice(&x.to_bits().to_le_bytes());
     }
@@ -96,8 +101,9 @@ pub fn decode_block(
         )));
     }
     let rows =
-        u32::from_le_bytes(payload[0..4].try_into().unwrap()) as usize;
-    let d = u32::from_le_bytes(payload[4..8].try_into().unwrap()) as usize;
+        usize_from_u32(u32::from_le_bytes(payload[0..4].try_into().unwrap()));
+    let d =
+        usize_from_u32(u32::from_le_bytes(payload[4..8].try_into().unwrap()));
     if d != expect_d {
         return Err(WireError::Malformed(format!(
             "block dimension {d} does not match the link's {expect_d}"
@@ -137,17 +143,15 @@ pub fn encode_report(
     state_bytes: usize,
     out: &mut Vec<u8>,
 ) {
-    assert!(
-        order.len() <= u32::MAX as usize,
-        "order length over wire limit"
-    );
+    let len =
+        u32_from_usize(order.len()).expect("order length over wire limit");
     out.clear();
     out.reserve(12 + order.len() * 4);
-    out.extend_from_slice(&(order.len() as u32).to_le_bytes());
-    out.extend_from_slice(&(state_bytes as u64).to_le_bytes());
+    out.extend_from_slice(&len.to_le_bytes());
+    out.extend_from_slice(&u64_from_usize(state_bytes).to_le_bytes());
     for &unit in order {
-        debug_assert!(unit <= u32::MAX as usize);
-        out.extend_from_slice(&(unit as u32).to_le_bytes());
+        let unit = u32_from_usize(unit).expect("unit id over wire limit");
+        out.extend_from_slice(&unit.to_le_bytes());
     }
 }
 
@@ -167,9 +171,10 @@ pub fn decode_report(
         )));
     }
     let len =
-        u32::from_le_bytes(payload[0..4].try_into().unwrap()) as usize;
-    let state_bytes =
-        u64::from_le_bytes(payload[4..12].try_into().unwrap()) as usize;
+        usize_from_u32(u32::from_le_bytes(payload[0..4].try_into().unwrap()));
+    let state_bytes = usize_from_u64(u64::from_le_bytes(
+        payload[4..12].try_into().unwrap(),
+    ))?;
     if len != local_n {
         return Err(WireError::Malformed(format!(
             "report carries {len} units, shard owns {local_n}"
@@ -187,7 +192,7 @@ pub fn decode_report(
     let mut seen = vec![false; local_n];
     for chunk in payload[12..].chunks_exact(4) {
         let unit =
-            u32::from_le_bytes(chunk.try_into().unwrap()) as usize;
+            usize_from_u32(u32::from_le_bytes(chunk.try_into().unwrap()));
         if unit >= local_n {
             return Err(WireError::Malformed(format!(
                 "report unit id {unit} out of range for shard of \
@@ -209,16 +214,14 @@ pub fn decode_report(
 /// Encode a checkpoint-resume seed payload: the shard's restored next
 /// local order (`order` entries must fit u32).
 pub fn encode_seed(order: &[usize], out: &mut Vec<u8>) {
-    assert!(
-        order.len() <= u32::MAX as usize,
-        "order length over wire limit"
-    );
+    let len =
+        u32_from_usize(order.len()).expect("order length over wire limit");
     out.clear();
     out.reserve(4 + order.len() * 4);
-    out.extend_from_slice(&(order.len() as u32).to_le_bytes());
+    out.extend_from_slice(&len.to_le_bytes());
     for &unit in order {
-        debug_assert!(unit <= u32::MAX as usize);
-        out.extend_from_slice(&(unit as u32).to_le_bytes());
+        let unit = u32_from_usize(unit).expect("unit id over wire limit");
+        out.extend_from_slice(&unit.to_le_bytes());
     }
 }
 
@@ -236,7 +239,8 @@ pub fn decode_seed(
             payload.len()
         )));
     }
-    let len = u32::from_le_bytes(payload[0..4].try_into().unwrap()) as usize;
+    let len =
+        usize_from_u32(u32::from_le_bytes(payload[0..4].try_into().unwrap()));
     if len != local_n {
         return Err(WireError::Malformed(format!(
             "seed carries {len} units, shard owns {local_n}"
@@ -252,7 +256,8 @@ pub fn decode_seed(
     let mut order = Vec::with_capacity(len);
     let mut seen = vec![false; local_n];
     for chunk in payload[4..].chunks_exact(4) {
-        let unit = u32::from_le_bytes(chunk.try_into().unwrap()) as usize;
+        let unit =
+            usize_from_u32(u32::from_le_bytes(chunk.try_into().unwrap()));
         if unit >= local_n {
             return Err(WireError::Malformed(format!(
                 "seed unit id {unit} out of range for shard of {local_n}"
@@ -301,7 +306,9 @@ pub fn encode_register(reg: &Register, out: &mut Vec<u8>) {
     out.reserve(12 + reg.name.len());
     out.extend_from_slice(&reg.capacity.to_le_bytes());
     out.extend_from_slice(&reg.generation.to_le_bytes());
-    out.extend_from_slice(&(reg.name.len() as u32).to_le_bytes());
+    let name_len =
+        u32_from_usize(reg.name.len()).expect("worker name over wire limit");
+    out.extend_from_slice(&name_len.to_le_bytes());
     out.extend_from_slice(reg.name.as_bytes());
 }
 
@@ -320,7 +327,7 @@ pub fn decode_register(payload: &[u8]) -> Result<Register, WireError> {
     let generation =
         u32::from_le_bytes(payload[4..8].try_into().unwrap());
     let name_len =
-        u32::from_le_bytes(payload[8..12].try_into().unwrap()) as usize;
+        usize_from_u32(u32::from_le_bytes(payload[8..12].try_into().unwrap()));
     if name_len > MAX_WORKER_NAME {
         return Err(WireError::Malformed(format!(
             "worker name of {name_len} bytes exceeds the \
@@ -400,7 +407,11 @@ mod tests {
             2 => f32::INFINITY,
             3 => f32::NEG_INFINITY,
             4 => -0.0,
-            5 => f32::from_bits(1 + rng.gen_range(0x10) as u32), // subnormal
+            5 => {
+                // subnormal
+                let low = u32::try_from(rng.gen_range(0x10)).unwrap();
+                f32::from_bits(1 + low)
+            }
             6 => f32::MIN_POSITIVE / 2.0,
             _ => rng.gauss() as f32,
         }
@@ -474,8 +485,8 @@ mod tests {
         // subnormal payloads encode→decode bit-identically, and frames
         // are stable across re-encoding.
         prop::forall("wire block roundtrip", 64, |rng| {
-            let d = 1 + rng.gen_range(32) as usize;
-            let rows = rng.gen_range(17) as usize;
+            let d = 1 + rng.gen_index(32);
+            let rows = rng.gen_index(17);
             let data: Vec<f32> =
                 (0..rows * d).map(|_| weird_f32(rng)).collect();
             let mut payload = Vec::new();
@@ -514,9 +525,9 @@ mod tests {
     #[test]
     fn report_roundtrip_over_random_orders() {
         prop::forall("wire report roundtrip", 32, |rng| {
-            let n = 1 + rng.gen_range(200) as usize;
+            let n = 1 + rng.gen_index(200);
             let order = rng.permutation(n);
-            let state = rng.gen_range(1 << 20) as usize;
+            let state = rng.gen_index(1 << 20);
             let mut payload = Vec::new();
             encode_report(&order, state, &mut payload);
             let (got, got_state) = decode_report(&payload, n)
@@ -537,7 +548,7 @@ mod tests {
     #[test]
     fn seed_roundtrip_and_rejects_non_permutations() {
         prop::forall("wire seed roundtrip", 32, |rng| {
-            let n = 1 + rng.gen_range(200) as usize;
+            let n = 1 + rng.gen_index(200);
             let order = rng.permutation(n);
             let mut payload = Vec::new();
             encode_seed(&order, &mut payload);
@@ -595,7 +606,9 @@ mod tests {
         let mut bad = payload.clone();
         bad[0..4].copy_from_slice(&(u32::MAX / 2).to_le_bytes());
         bad[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
-        assert!(decode_block(&bad, u32::MAX as usize, &mut out).is_err());
+        assert!(
+            decode_block(&bad, usize_from_u32(u32::MAX), &mut out).is_err()
+        );
 
         // Truncated body.
         assert!(matches!(

@@ -213,6 +213,11 @@ mod tests {
     use super::*;
     use std::net::TcpListener;
 
+    // Every test here drives a real loopback socket, which Miri cannot
+    // model — hence the `cfg_attr(miri, ignore)` gates. The pure
+    // parsing layers these tests exercise are covered under Miri via
+    // the codec and ser unit suites.
+
     /// One server turn: parse a request, apply `f`, send its response.
     fn serve_once<F>(f: F) -> String
     where
@@ -229,6 +234,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn request_and_response_round_trip() {
         let addr = serve_once(|req, stream| {
             let req = req.unwrap();
@@ -252,6 +258,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn get_carries_no_body_and_any_status_parses() {
         let addr = serve_once(|req, stream| {
             let req = req.unwrap();
@@ -265,6 +272,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn garbage_request_line_is_rejected_not_panicked() {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
@@ -279,6 +287,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn oversized_head_is_refused() {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();

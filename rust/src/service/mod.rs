@@ -952,6 +952,11 @@ mod sig {
     const SIGTERM: i32 = 15;
 
     pub fn install() {
+        // SAFETY: FFI call to POSIX `signal(2)` with valid constant
+        // signal numbers and a handler that only performs an atomic
+        // store — async-signal-safe, no allocation, no locks, no
+        // reentrancy hazard. Replacing a previous disposition is fine:
+        // the daemon installs these once at startup.
         unsafe {
             signal(SIGTERM, on_term);
             signal(SIGINT, on_term);

@@ -33,6 +33,9 @@ use std::arch::x86_64::{
 ///
 /// # Safety
 /// Requires AVX2 (callers dispatch via `Kernel::simd_active`).
+// SAFETY: the only unsafety is executing AVX2 instructions, which the
+// caller contract guarantees are available; the store targets a local
+// 8-float array via the unaligned `_mm256_storeu_ps`, exactly in bounds.
 #[target_feature(enable = "avx2")]
 unsafe fn hsum(v: __m256) -> f32 {
     let mut lanes = [0.0f32; 8];
@@ -44,6 +47,9 @@ unsafe fn hsum(v: __m256) -> f32 {
 ///
 /// # Safety
 /// Requires AVX2 (callers dispatch via `Kernel::simd_active`).
+// SAFETY: AVX2 is guaranteed by the caller contract; every
+// `_mm256_loadu_ps` (unaligned, no alignment precondition) reads an
+// 8-float `chunks_exact(8)` window, so all accesses are in bounds.
 #[target_feature(enable = "avx2")]
 pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
     assert_eq!(a.len(), b.len());
@@ -67,6 +73,9 @@ pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
 ///
 /// # Safety
 /// Requires AVX2 (callers dispatch via `Kernel::simd_active`).
+// SAFETY: AVX2 is guaranteed by the caller contract; unaligned
+// loads/stores cover disjoint `chunks_exact(8)` / `chunks_exact_mut(8)`
+// windows of the argument slices, so all accesses are in bounds.
 #[target_feature(enable = "avx2")]
 pub unsafe fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
     assert_eq!(x.len(), y.len());
@@ -89,6 +98,9 @@ pub unsafe fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
 ///
 /// # Safety
 /// Requires AVX2 (callers dispatch via `Kernel::simd_active`).
+// SAFETY: AVX2 is guaranteed by the caller contract; every unaligned
+// load reads an 8-float `chunks_exact(8)` window of a length-checked
+// slice, so all accesses are in bounds.
 #[target_feature(enable = "avx2")]
 pub unsafe fn dot_centered(s: &[f32], g: &[f32], m: &[f32]) -> f32 {
     assert_eq!(s.len(), g.len());
@@ -120,6 +132,9 @@ pub unsafe fn dot_centered(s: &[f32], g: &[f32], m: &[f32]) -> f32 {
 ///
 /// # Safety
 /// Requires AVX2 (callers dispatch via `Kernel::simd_active`).
+// SAFETY: AVX2 is guaranteed by the caller contract; every unaligned
+// load reads an 8-float `chunks_exact(8)` window of a length-checked
+// slice, so all accesses are in bounds.
 #[target_feature(enable = "avx2")]
 pub unsafe fn dot_diff(s: &[f32], a: &[f32], b: &[f32]) -> f32 {
     assert_eq!(s.len(), a.len());
@@ -151,6 +166,9 @@ pub unsafe fn dot_diff(s: &[f32], a: &[f32], b: &[f32]) -> f32 {
 ///
 /// # Safety
 /// Requires AVX2 (callers dispatch via `Kernel::simd_active`).
+// SAFETY: AVX2 is guaranteed by the caller contract; unaligned
+// loads/stores cover disjoint `chunks_exact(8)` / `chunks_exact_mut(8)`
+// windows of length-checked slices, so all accesses are in bounds.
 #[target_feature(enable = "avx2")]
 pub unsafe fn axpy_diff(eps: f32, a: &[f32], b: &[f32], s: &mut [f32]) {
     assert_eq!(s.len(), a.len());
@@ -182,6 +200,9 @@ pub unsafe fn axpy_diff(eps: f32, a: &[f32], b: &[f32], s: &mut [f32]) {
 ///
 /// # Safety
 /// Requires AVX2 (callers dispatch via `Kernel::simd_active`).
+// SAFETY: AVX2 is guaranteed by the caller contract; unaligned
+// loads/stores cover disjoint `chunks_exact(8)` / `chunks_exact_mut(8)`
+// windows of length-checked slices, so all accesses are in bounds.
 #[target_feature(enable = "avx2")]
 pub unsafe fn sign_sum_accum(
     eps: f32,
@@ -220,6 +241,9 @@ pub unsafe fn sign_sum_accum(
 ///
 /// # Safety
 /// Requires AVX2 (callers dispatch via `Kernel::simd_active`).
+// SAFETY: AVX2 is guaranteed by the caller contract; unaligned
+// loads/stores cover disjoint `chunks_exact(8)` / `chunks_exact_mut(8)`
+// windows of length-checked slices, so all accesses are in bounds.
 #[target_feature(enable = "avx2")]
 pub unsafe fn fold_signed_block(
     signed: &[f32],
@@ -271,7 +295,10 @@ mod tests {
             .collect()
     }
 
+    // Miri cannot execute vendor intrinsics (and reports no AVX2), so
+    // the SIMD-vs-scalar equivalence tests only run natively.
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn avx2_reductions_match_scalar_bits_on_hostile_floats() {
         if !std::is_x86_feature_detected!("avx2") {
             eprintln!("skip: host lacks AVX2");
@@ -304,6 +331,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn avx2_updates_match_scalar_bits_on_hostile_floats() {
         if !std::is_x86_feature_detected!("avx2") {
             eprintln!("skip: host lacks AVX2");

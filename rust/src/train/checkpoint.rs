@@ -561,6 +561,11 @@ impl Manifest {
 
 /// `git rev-parse --short HEAD`, or `"unknown"` outside a work tree.
 fn git_rev() -> String {
+    // Miri cannot spawn processes; the checkpoint suite runs under it,
+    // so take the same fallback a non-git checkout gets.
+    if cfg!(miri) {
+        return "unknown".to_string();
+    }
     std::process::Command::new("git")
         .args(["rev-parse", "--short", "HEAD"])
         .output()

@@ -104,6 +104,14 @@ impl Rng {
         (m >> 64) as u64
     }
 
+    /// Uniform index in `[0, bound)` — [`Rng::gen_range`] with the
+    /// `usize` conversions done once here, so W01-scoped wire-layer
+    /// tests can draw sizes without bare `as` casts.
+    #[inline]
+    pub fn gen_index(&mut self, bound: usize) -> usize {
+        self.gen_range(bound as u64) as usize
+    }
+
     /// Uniform in `[0, 1)` with 53 bits of precision.
     #[inline]
     pub fn f64(&mut self) -> f64 {

@@ -81,9 +81,10 @@ impl Json {
     /// The value as a non-negative integer.
     pub fn as_usize(&self) -> Result<usize> {
         let x = self.as_f64()?;
-        if x < 0.0 || x.fract() != 0.0 {
+        if x < 0.0 || x.fract() != 0.0 || x > 9_007_199_254_740_992.0 {
             bail!("not a non-negative integer: {x}");
         }
+        // audit: allow(W01, reason = "f64 -> usize has no try_from; range-checked to [0, 2^53] above so the cast is exact")
         Ok(x as usize)
     }
 
@@ -116,6 +117,7 @@ impl Json {
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(x) => {
                 if x.fract() == 0.0 && x.abs() < 1e15 {
+                    // audit: allow(W01, reason = "f64 -> i64 has no try_from; fract == 0 and |x| < 1e15 < 2^53 make the cast exact")
                     let _ = write!(out, "{}", *x as i64);
                 } else {
                     let _ = write!(out, "{x}");
@@ -157,8 +159,8 @@ fn write_escaped(out: &mut String, s: &str) {
             '\n' => out.push_str("\\n"),
             '\r' => out.push_str("\\r"),
             '\t' => out.push_str("\\t"),
-            c if (c as u32) < 0x20 => {
-                let _ = write!(out, "\\u{:04x}", c as u32);
+            c if u32::from(c) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", u32::from(c));
             }
             c => out.push(c),
         }
@@ -485,6 +487,12 @@ impl FrameKind {
             other => return Err(WireError::BadKind(other)),
         })
     }
+
+    /// Encode this frame kind as its wire byte.
+    pub const fn byte(self) -> u8 {
+        // audit: allow(W01, reason = "fieldless repr(u8) enum to its declared discriminant; the cast is lossless by construction")
+        self as u8
+    }
 }
 
 /// Typed decode failures of the wire layer. Every malformed input maps to
@@ -552,6 +560,53 @@ impl std::fmt::Display for WireError {
 
 impl std::error::Error for WireError {}
 
+// ---------------------------------------------------------------------------
+// Checked wire-width conversions
+// ---------------------------------------------------------------------------
+//
+// The wire layers (this module, `ordering::transport::codec`,
+// `service::http`) never use bare `as` casts between integer widths —
+// audit rule W01 (`grab audit`, docs/audit.md). Widenings that are
+// lossless on every supported target are concentrated in the two const
+// fns below (the only waived casts); narrowings go through the checked
+// helpers and surface a typed [`WireError`].
+
+const _: () = assert!(usize::BITS >= 32, "wire layer assumes usize >= 32 bits");
+const _: () = assert!(usize::BITS <= 64, "wire layer assumes usize <= 64 bits");
+
+/// Lossless `u32` → `usize` widening (`usize` is at least 32 bits on
+/// every supported target — const-asserted above).
+pub const fn usize_from_u32(v: u32) -> usize {
+    // audit: allow(W01, reason = "lossless widening: usize is at least 32 bits on every supported target (const-asserted)")
+    v as usize
+}
+
+/// Lossless `usize` → `u64` widening (`usize` is at most 64 bits on
+/// every supported target — const-asserted above).
+pub const fn u64_from_usize(v: usize) -> u64 {
+    // audit: allow(W01, reason = "lossless widening: usize is at most 64 bits on every supported target (const-asserted)")
+    v as u64
+}
+
+/// Checked `u64` → `usize` narrowing; values over `usize::MAX` are a
+/// [`WireError::Malformed`] (only reachable on 32-bit targets).
+pub fn usize_from_u64(v: u64) -> Result<usize, WireError> {
+    usize::try_from(v).map_err(|_| {
+        WireError::Malformed(format!(
+            "value {v} exceeds usize::MAX on this target"
+        ))
+    })
+}
+
+/// Checked `usize` → `u32` narrowing; values over `u32::MAX` are a
+/// [`WireError::Oversized`].
+pub fn u32_from_usize(v: usize) -> Result<u32, WireError> {
+    u32::try_from(v).map_err(|_| WireError::Oversized {
+        declared: v,
+        max: usize_from_u32(u32::MAX),
+    })
+}
+
 /// FNV-1a 32-bit hash — the frame checksum. Not cryptographic; it exists
 /// to catch truncation, bit flips, and framing desync, and it keeps the
 /// wire layer dependency-free. (Checkpoint files use the in-tree crc32
@@ -568,7 +623,7 @@ pub fn fnv1a32(bytes: &[u8]) -> u32 {
 pub fn fnv1a32_continue(seed: u32, bytes: &[u8]) -> u32 {
     let mut h = seed;
     for &b in bytes {
-        h ^= b as u32;
+        h ^= u32::from(b);
         h = h.wrapping_mul(0x0100_0193);
     }
     h
@@ -593,9 +648,11 @@ pub fn encode_frame(kind: FrameKind, payload: &[u8], out: &mut Vec<u8>) {
     );
     let start = out.len();
     out.push(WIRE_VERSION);
-    out.push(kind as u8);
+    out.push(kind.byte());
     out.extend_from_slice(&0u16.to_le_bytes());
-    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    let len = u32_from_usize(payload.len())
+        .expect("frame payload over protocol cap");
+    out.extend_from_slice(&len.to_le_bytes());
     let sum =
         fnv1a32_continue(fnv1a32(&out[start..start + 8]), payload);
     out.extend_from_slice(&sum.to_le_bytes());
@@ -619,7 +676,7 @@ pub fn decode_frame(
     }
     let kind = FrameKind::from_byte(bytes[1])?;
     let len =
-        u32::from_le_bytes(bytes[4..8].try_into().unwrap()) as usize;
+        usize_from_u32(u32::from_le_bytes(bytes[4..8].try_into().unwrap()));
     if len > MAX_FRAME_PAYLOAD {
         return Err(WireError::Oversized {
             declared: len,
@@ -696,7 +753,8 @@ pub fn read_frame<R: std::io::Read>(
     }
     let kind =
         FrameKind::from_byte(buf[1]).map_err(FrameReadError::Wire)?;
-    let len = u32::from_le_bytes(buf[4..8].try_into().unwrap()) as usize;
+    let len =
+        usize_from_u32(u32::from_le_bytes(buf[4..8].try_into().unwrap()));
     if len > MAX_FRAME_PAYLOAD {
         return Err(FrameReadError::Wire(WireError::Oversized {
             declared: len,
@@ -734,7 +792,7 @@ pub fn put_f64(out: &mut Vec<u8>, v: f64) {
 /// Append a length-prefixed (`u64`) `f32` slice as raw bit patterns, so
 /// NaN payloads and signed zeros round-trip bit-identically.
 pub fn put_f32_slice(out: &mut Vec<u8>, v: &[f32]) {
-    put_u64(out, v.len() as u64);
+    put_u64(out, u64_from_usize(v.len()));
     for &x in v {
         out.extend_from_slice(&x.to_bits().to_le_bytes());
     }
@@ -742,9 +800,9 @@ pub fn put_f32_slice(out: &mut Vec<u8>, v: &[f32]) {
 
 /// Append a length-prefixed (`u64`) `usize` slice as `u64`s.
 pub fn put_usize_slice(out: &mut Vec<u8>, v: &[usize]) {
-    put_u64(out, v.len() as u64);
+    put_u64(out, u64_from_usize(v.len()));
     for &x in v {
-        put_u64(out, x as u64);
+        put_u64(out, u64_from_usize(x));
     }
 }
 
@@ -792,12 +850,12 @@ impl<'a> ByteReader<'a> {
     /// `max` (guards hostile length prefixes before any allocation).
     pub fn len(&mut self, max: usize) -> Result<usize, WireError> {
         let v = self.u64()?;
-        if v > max as u64 {
+        if v > u64_from_usize(max) {
             return Err(WireError::Malformed(format!(
                 "length prefix {v} exceeds the {max} cap"
             )));
         }
-        Ok(v as usize)
+        usize_from_u64(v)
     }
 
     /// Read an `f64` bit pattern.
@@ -821,10 +879,10 @@ impl<'a> ByteReader<'a> {
     pub fn usize_slice(&mut self, max: usize) -> Result<Vec<usize>, WireError> {
         let n = self.len(max.min(self.remaining() / 8))?;
         let bytes = self.take(n * 8)?;
-        Ok(bytes
+        bytes
             .chunks_exact(8)
-            .map(|c| u64::from_le_bytes(c.try_into().unwrap()) as usize)
-            .collect())
+            .map(|c| usize_from_u64(u64::from_le_bytes(c.try_into().unwrap())))
+            .collect()
     }
 
     /// Bytes not yet consumed.

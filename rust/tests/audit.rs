@@ -1,0 +1,380 @@
+//! Fixture matrix for the `grab audit` static pass (docs/audit.md).
+//!
+//! Every rule gets at least a positive fixture (a minimal bad snippet
+//! producing exactly the expected `rule @ line`), a negative twin (the
+//! compliant rewrite, or the same snippet at an out-of-scope path), and
+//! a waiver case. The waiver-hygiene rule `A00` gets its own matrix:
+//! malformed, unknown-rule, empty-reason, and stale waivers. Fixtures
+//! live in string literals, which the audit lexer blanks before any
+//! rule runs — so this file can quote every forbidden pattern without
+//! tripping the pass it is testing.
+//!
+//! The closing test is the self-audit: the shipped tree must come back
+//! clean, with zero `S01`/`D01` waivers (those two rules are cheap to
+//! satisfy outright, so exemptions are not accepted). This suite is
+//! also the semantics contract for `tools/audit_mirror.py`: any rule
+//! change must land in a fixture here and in the mirror together.
+
+use grab::audit::{audit_source, run, Finding};
+
+/// Rule ids of the findings, in order.
+fn rules_of(findings: &[Finding]) -> Vec<&'static str> {
+    findings.iter().map(|f| f.rule).collect()
+}
+
+/// `(rule, line)` pairs of the findings, in order.
+fn sites_of(findings: &[Finding]) -> Vec<(&'static str, usize)> {
+    findings.iter().map(|f| (f.rule, f.line)).collect()
+}
+
+/// Audit a fixture and assert it produced no waivers.
+fn check(path: &str, src: &str) -> Vec<Finding> {
+    let (findings, waived) = audit_source(path, src);
+    assert!(waived.is_empty(), "unexpected waivers: {waived:?}");
+    findings
+}
+
+// ---------------------------------------------------------------- D01
+
+#[test]
+fn d01_flags_partial_cmp_unwrap_and_expect_chains() {
+    let src = concat!(
+        "fn f(a: f32, b: f32) -> std::cmp::Ordering {\n",
+        "    a.partial_cmp(&b).unwrap()\n",
+        "}\n",
+        "fn g(a: f64, b: f64) -> std::cmp::Ordering {\n",
+        "    a.partial_cmp(&b).expect(\"ordered\")\n",
+        "}\n",
+    );
+    let findings = check("src/util/x.rs", src);
+    assert_eq!(sites_of(&findings), [("D01", 2), ("D01", 5)]);
+}
+
+#[test]
+fn d01_follows_the_chain_across_lines() {
+    let src = concat!(
+        "fn f(a: f32, b: f32) -> std::cmp::Ordering {\n",
+        "    a.partial_cmp(&b)\n",
+        "        .unwrap()\n",
+        "}\n",
+    );
+    let findings = check("tests/x.rs", src);
+    assert_eq!(sites_of(&findings), [("D01", 2)]);
+}
+
+#[test]
+fn d01_flags_sort_and_min_max_comparators_built_on_partial_cmp() {
+    let src = concat!(
+        "fn f(v: &mut [f32]) {\n",
+        "    v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n",
+        "    v.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap());\n",
+        "}\n",
+        "fn g(v: &[f32]) -> Option<&f32> {\n",
+        "    v.iter().max_by(|a, b| a.partial_cmp(b).unwrap())\n",
+        "}\n",
+    );
+    let findings = check("benches/x.rs", src);
+    // The comparator body *also* matches the unwrap-chain pattern, so
+    // the sort lines each carry two findings; what matters is that
+    // every offending line is reported under D01.
+    assert!(findings.iter().all(|f| f.rule == "D01"));
+    let mut lines: Vec<usize> = findings.iter().map(|f| f.line).collect();
+    lines.dedup();
+    assert_eq!(lines, [2, 3, 6]);
+}
+
+#[test]
+fn d01_stays_silent_on_total_cmp_and_on_sort_by_key() {
+    let src = concat!(
+        "fn f(v: &mut [f32]) {\n",
+        "    v.sort_by(|a, b| a.total_cmp(b));\n",
+        "    v.sort_by_key(|x| x.to_bits());\n",
+        "}\n",
+        "fn g(a: f32, b: f32) -> bool {\n",
+        "    a.partial_cmp(&b).is_some()\n",
+        "}\n",
+    );
+    assert!(check("src/herding/x.rs", src).is_empty());
+}
+
+#[test]
+fn d01_ignores_the_pattern_inside_strings_and_comments() {
+    let src = concat!(
+        "// a.partial_cmp(&b).unwrap() is exactly what D01 forbids\n",
+        "const HINT: &str = \"use total_cmp, not \\\n",
+        "    partial_cmp(&b).unwrap()\";\n",
+    );
+    assert!(check("src/util/x.rs", src).is_empty());
+}
+
+// ---------------------------------------------------------------- D02
+
+#[test]
+fn d02_flags_hash_containers_in_order_relevant_modules() {
+    let src = concat!(
+        "use std::collections::{HashMap, HashSet};\n",
+        "fn f() -> HashMap<u32, u32> {\n",
+        "    HashMap::new()\n",
+        "}\n",
+    );
+    let findings = check("src/ordering/x.rs", src);
+    assert_eq!(sites_of(&findings), [("D02", 1), ("D02", 1), ("D02", 2), ("D02", 3)]);
+}
+
+#[test]
+fn d02_is_scoped_to_the_listed_module_trees() {
+    let src = "use std::collections::HashMap;\n";
+    assert!(check("src/util/x.rs", src).is_empty());
+    assert!(check("src/service/x.rs", src).is_empty());
+    assert_eq!(rules_of(&check("src/balance/x.rs", src)), ["D02"]);
+    assert_eq!(rules_of(&check("src/train/x.rs", src)), ["D02"]);
+}
+
+#[test]
+fn d02_accepts_btree_containers_everywhere() {
+    let src = concat!(
+        "use std::collections::{BTreeMap, BTreeSet};\n",
+        "fn f() -> BTreeMap<u32, u32> {\n",
+        "    BTreeMap::new()\n",
+        "}\n",
+    );
+    assert!(check("src/ordering/x.rs", src).is_empty());
+}
+
+// ---------------------------------------------------------------- D03
+
+#[test]
+fn d03_flags_wall_clock_reads_outside_the_allowlist() {
+    let src = concat!(
+        "fn f() -> std::time::Instant {\n",
+        "    std::time::Instant::now()\n",
+        "}\n",
+        "fn g() -> std::time::SystemTime {\n",
+        "    std::time::SystemTime::now()\n",
+        "}\n",
+    );
+    let findings = check("src/train/x.rs", src);
+    assert_eq!(sites_of(&findings), [("D03", 2), ("D03", 4), ("D03", 5)]);
+}
+
+#[test]
+fn d03_allows_the_listed_clock_sites_and_non_src_trees() {
+    let src = "fn f() { let _ = std::time::Instant::now(); }\n";
+    assert!(check("src/util/timer.rs", src).is_empty());
+    assert!(check("src/ordering/sharded.rs", src).is_empty());
+    assert!(check("src/service/client.rs", src).is_empty());
+    // Tests and benches may time things freely; D03 is a src/ rule.
+    assert!(check("tests/x.rs", src).is_empty());
+    assert!(check("benches/x.rs", src).is_empty());
+}
+
+// ---------------------------------------------------------------- D04
+
+#[test]
+fn d04_flags_mul_add_and_fma_intrinsics_in_tensor() {
+    let src = concat!(
+        "fn f(a: f32, b: f32, c: f32) -> f32 {\n",
+        "    a.mul_add(b, c)\n",
+        "}\n",
+        "fn g() {\n",
+        "    // the intrinsic name matches by substring:\n",
+        "    let _ = _mm256_fmadd_ps;\n",
+        "}\n",
+    );
+    let findings = check("src/tensor/x.rs", src);
+    assert_eq!(sites_of(&findings), [("D04", 2), ("D04", 6)]);
+}
+
+#[test]
+fn d04_is_scoped_to_tensor() {
+    let src = "fn f(a: f64, b: f64, c: f64) -> f64 { a.mul_add(b, c) }\n";
+    assert!(check("src/util/x.rs", src).is_empty());
+    assert!(check("tests/x.rs", src).is_empty());
+}
+
+// ---------------------------------------------------------------- S01
+
+#[test]
+fn s01_flags_unsafe_without_a_safety_comment() {
+    let src = concat!(
+        "fn f(p: *const u32) -> u32 {\n",
+        "    unsafe { *p }\n",
+        "}\n",
+    );
+    let findings = check("src/tensor/x.rs", src);
+    assert_eq!(sites_of(&findings), [("S01", 2)]);
+}
+
+#[test]
+fn s01_accepts_safety_on_the_same_line_or_within_the_lookback() {
+    let src = concat!(
+        "fn f(p: *const u32) -> u32 {\n",
+        "    unsafe { *p } // SAFETY: caller guarantees p is valid\n",
+        "}\n",
+        "// SAFETY: caller guarantees p is valid and aligned; the\n",
+        "// pointee outlives this call.\n",
+        "#[inline]\n",
+        "fn g(p: *const u32) -> u32 {\n",
+        "    unsafe { *p }\n",
+        "}\n",
+    );
+    assert!(check("src/tensor/x.rs", src).is_empty());
+}
+
+#[test]
+fn s01_rejects_a_safety_comment_beyond_the_lookback() {
+    let src = concat!(
+        "// SAFETY: too far away to count\n",
+        "//\n//\n//\n//\n//\n//\n",
+        "fn f(p: *const u32) -> u32 {\n",
+        "    unsafe { *p }\n",
+        "}\n",
+    );
+    let findings = check("src/tensor/x.rs", src);
+    assert_eq!(sites_of(&findings), [("S01", 9)]);
+}
+
+#[test]
+fn s01_ignores_the_word_unsafe_in_comments_and_strings() {
+    let src = concat!(
+        "//! Discusses unsafe code without containing any.\n",
+        "const W: &str = \"unsafe\";\n",
+    );
+    assert!(check("src/util/x.rs", src).is_empty());
+}
+
+// ---------------------------------------------------------------- W01
+
+#[test]
+fn w01_flags_bare_integer_casts_in_the_wire_layers() {
+    let src = concat!(
+        "fn f(v: u64, w: usize) -> (usize, u32) {\n",
+        "    (v as usize, w as u32)\n",
+        "}\n",
+    );
+    for path in ["src/util/ser.rs", "src/ordering/transport/codec.rs", "src/service/http.rs"] {
+        let findings = check(path, src);
+        assert_eq!(sites_of(&findings), [("W01", 2), ("W01", 2)], "{path}");
+    }
+}
+
+#[test]
+fn w01_is_scoped_to_the_wire_layers_and_to_integer_targets() {
+    let cast = "fn f(v: u64) -> usize { v as usize }\n";
+    assert!(check("src/util/rng.rs", cast).is_empty());
+    assert!(check("src/tensor/x.rs", cast).is_empty());
+    let float = "fn f(v: u64) -> f64 { v as f64 }\n";
+    assert!(check("src/util/ser.rs", float).is_empty());
+    // `as` as part of an identifier or a trait import must not match.
+    let ident = "use std::io::Read as _;\nfn base(x: u32) -> u32 { x }\n";
+    assert!(check("src/util/ser.rs", ident).is_empty());
+}
+
+// ------------------------------------------------------------- waivers
+
+#[test]
+fn waiver_on_the_same_line_absorbs_the_finding() {
+    let src = concat!(
+        "fn f(v: u64) -> usize {\n",
+        "    v as usize // audit: allow(W01, reason = \"fixture\")\n",
+        "}\n",
+    );
+    let (findings, waived) = audit_source("src/util/ser.rs", src);
+    assert!(findings.is_empty(), "{findings:?}");
+    assert_eq!(sites_of(&waived), [("W01", 2)]);
+}
+
+#[test]
+fn waiver_on_the_previous_line_absorbs_the_finding() {
+    let src = concat!(
+        "fn f(v: u64) -> usize {\n",
+        "    // audit: allow(W01, reason = \"fixture: exercised range\")\n",
+        "    v as usize\n",
+        "}\n",
+    );
+    let (findings, waived) = audit_source("src/util/ser.rs", src);
+    assert!(findings.is_empty(), "{findings:?}");
+    assert_eq!(sites_of(&waived), [("W01", 3)]);
+}
+
+#[test]
+fn waiver_covers_only_its_own_rule() {
+    let src = concat!(
+        "fn f(v: u64) -> usize {\n",
+        "    // audit: allow(D01, reason = \"wrong rule for this site\")\n",
+        "    v as usize\n",
+        "}\n",
+    );
+    let (findings, waived) = audit_source("src/util/ser.rs", src);
+    assert!(waived.is_empty());
+    // The cast survives as W01 and the unused D01 waiver goes stale.
+    assert_eq!(rules_of(&findings), ["A00", "W01"]);
+}
+
+#[test]
+fn malformed_unknown_and_empty_reason_waivers_are_a00() {
+    let cases = [
+        "fn a() {} // audit: allow(W01)\n",
+        "fn b() {} // audit: allow(W01, reason = )\n",
+        "fn c() {} // audit: allow(W01, reason = \"\")\n",
+        "fn d() {} // audit: allow(Z99, reason = \"unknown rule\")\n",
+        "fn e() {} // audit: allow(A00, reason = \"A00 is not waivable\")\n",
+    ];
+    for src in cases {
+        let (findings, waived) = audit_source("src/util/x.rs", src);
+        assert!(waived.is_empty());
+        assert_eq!(sites_of(&findings), [("A00", 1)], "{src}");
+    }
+}
+
+#[test]
+fn stale_waiver_with_no_matching_finding_is_a00() {
+    let src = concat!(
+        "// audit: allow(W01, reason = \"the cast below was removed\")\n",
+        "fn f(v: u64) -> u64 {\n",
+        "    v\n",
+        "}\n",
+    );
+    let (findings, waived) = audit_source("src/util/ser.rs", src);
+    assert!(waived.is_empty());
+    assert_eq!(sites_of(&findings), [("A00", 1)]);
+}
+
+#[test]
+fn one_waiver_covers_multiple_findings_on_its_lines_only() {
+    let src = concat!(
+        "fn f(v: u64, w: u64) -> (usize, usize) {\n",
+        "    // audit: allow(W01, reason = \"fixture: both casts\")\n",
+        "    (v as usize, w as usize)\n",
+        "}\n",
+        "fn g(v: u64) -> usize {\n",
+        "    v as usize\n",
+        "}\n",
+    );
+    let (findings, waived) = audit_source("src/util/ser.rs", src);
+    // Line 3's two casts are both covered; line 6's is out of range.
+    assert_eq!(sites_of(&waived), [("W01", 3), ("W01", 3)]);
+    assert_eq!(sites_of(&findings), [("W01", 6)]);
+}
+
+// ---------------------------------------------------------- self-audit
+
+#[test]
+fn shipped_tree_is_clean_with_no_s01_or_d01_waivers() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = run(root).expect("audit walks src/, tests/, benches/");
+    assert!(
+        report.findings.is_empty(),
+        "shipped tree has audit violations:\n{:#?}",
+        report.findings
+    );
+    for f in &report.waived {
+        assert!(
+            f.rule != "S01" && f.rule != "D01",
+            "{} waivers are not accepted (docs/audit.md): {f:?}",
+            f.rule
+        );
+    }
+    // The walker saw the real tree, not an empty directory.
+    assert!(report.files_scanned >= 70, "{}", report.files_scanned);
+}

@@ -1,0 +1,343 @@
+#!/usr/bin/env python3
+"""Reference mirror of `grab audit` (rust/src/audit/) for hosts without a
+Rust toolchain.
+
+The Rust implementation is canonical — this mirror exists so the audit can
+be run (and its rule set prototyped) on snapshot hosts that cannot build
+the crate, the same provenance arrangement as tools/bench_mirror.c for the
+perf trajectory. Keep the two implementations in sync: the fixture suite in
+rust/tests/audit.rs is the semantics contract, and docs/audit.md documents
+every rule this file implements.
+
+Usage:
+    python3 tools/audit_mirror.py [--root rust]
+
+Exit status: 0 on a clean tree, 1 when any violation is found.
+"""
+
+import os
+import re
+import sys
+
+WORD = re.compile(r"[A-Za-z0-9_]")
+
+INT_TYPES = {
+    "u8", "u16", "u32", "u64", "u128", "usize",
+    "i8", "i16", "i32", "i64", "i128", "isize",
+}
+
+D02_DIRS = (
+    "src/ordering/", "src/balance/", "src/herding/", "src/tensor/",
+    "src/train/",
+)
+D03_ALLOW = {
+    "src/util/timer.rs", "src/ordering/sharded.rs", "src/service/client.rs",
+}
+W01_FILES = {
+    "src/util/ser.rs", "src/ordering/transport/codec.rs",
+    "src/service/http.rs",
+}
+SAFETY_LOOKBACK = 6
+
+RULE_IDS = {"D01", "D02", "D03", "D04", "S01", "W01"}
+
+
+def scan(text):
+    """Split source into (code, comment_lines): code has comment and
+    string/char-literal contents blanked to spaces (newlines kept);
+    comment_lines[i] is the comment text appearing on line i (0-based)."""
+    b = text
+    n = len(b)
+    code = [" "] * n
+    comm = [" "] * n
+    i = 0
+
+    def ident_char(c):
+        return bool(WORD.match(c))
+
+    while i < n:
+        c = b[i]
+        prev_ident = i > 0 and ident_char(b[i - 1])
+        if c == "/" and i + 1 < n and b[i + 1] == "/":
+            while i < n and b[i] != "\n":
+                comm[i] = b[i]
+                i += 1
+            continue
+        if c == "/" and i + 1 < n and b[i + 1] == "*":
+            depth = 0
+            while i < n:
+                if b[i] == "/" and i + 1 < n and b[i + 1] == "*":
+                    depth += 1
+                    comm[i] = b[i]
+                    comm[i + 1] = b[i + 1]
+                    i += 2
+                elif b[i] == "*" and i + 1 < n and b[i + 1] == "/":
+                    depth -= 1
+                    comm[i] = b[i]
+                    comm[i + 1] = b[i + 1]
+                    i += 2
+                    if depth == 0:
+                        break
+                else:
+                    comm[i] = b[i]
+                    i += 1
+            continue
+        if not prev_ident and (
+            c == "r" or (c == "b" and i + 1 < n and b[i + 1] == "r")
+        ):
+            j = i + (2 if c == "b" else 1)
+            k = 0
+            while j + k < n and b[j + k] == "#":
+                k += 1
+            if j + k < n and b[j + k] == '"':
+                # Raw (byte) string: blank through `"` + k hashes.
+                i = j + k + 1
+                term = '"' + "#" * k
+                end = b.find(term, i)
+                i = n if end < 0 else end + len(term)
+                continue
+        if not prev_ident and c == "b" and i + 1 < n and b[i + 1] in "\"'":
+            i += 1  # byte string/char: fall through on the quote
+            c = b[i]
+        if c == '"':
+            i += 1
+            while i < n:
+                if b[i] == "\\":
+                    i += 2
+                elif b[i] == '"':
+                    i += 1
+                    break
+                else:
+                    i += 1
+            continue
+        if c == "'":
+            nxt = b[i + 1] if i + 1 < n else ""
+            nxt2 = b[i + 2] if i + 2 < n else ""
+            if nxt and nxt != "\\" and ident_char(nxt) and nxt2 != "'":
+                # Lifetime or loop label: keep the quote as code.
+                code[i] = c
+                i += 1
+                continue
+            i += 1
+            while i < n and b[i] != "\n":
+                if b[i] == "\\":
+                    i += 2
+                elif b[i] == "'":
+                    i += 1
+                    break
+                else:
+                    i += 1
+            continue
+        code[i] = c
+        i += 1
+
+    for idx, ch in enumerate(b):
+        if ch == "\n":
+            code[idx] = "\n"
+            comm[idx] = "\n"
+    return "".join(code), "".join(comm).split("\n")
+
+
+def word_at(code, off, length):
+    before = code[off - 1] if off > 0 else " "
+    after = code[off + length] if off + length < len(code) else " "
+    return not WORD.match(before) and not WORD.match(after)
+
+
+def find_words(code, needle):
+    out = []
+    start = 0
+    while True:
+        off = code.find(needle, start)
+        if off < 0:
+            return out
+        if word_at(code, off, len(needle)):
+            out.append(off)
+        start = off + 1
+
+
+def skip_ws(code, i):
+    while i < len(code) and code[i] in " \t\n\r":
+        i += 1
+    return i
+
+
+def balanced_span(code, i):
+    """i points at '('; return index just past the matching ')'."""
+    depth = 0
+    while i < len(code):
+        if code[i] == "(":
+            depth += 1
+        elif code[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return i + 1
+        i += 1
+    return i
+
+
+def line_of(text, off):
+    return text.count("\n", 0, off) + 1
+
+
+def check_d01(code):
+    hits = []
+    for off in find_words(code, "partial_cmp"):
+        j = skip_ws(code, off + len("partial_cmp"))
+        if j >= len(code) or code[j] != "(":
+            continue
+        j = skip_ws(code, balanced_span(code, j))
+        if j < len(code) and code[j] == ".":
+            j = skip_ws(code, j + 1)
+            for m in ("unwrap", "expect"):
+                if code.startswith(m, j) and word_at(code, j, len(m)):
+                    hits.append((off, "`partial_cmp(..).%s()` panics on "
+                                 "NaN; compare floats with `total_cmp`"
+                                 % m))
+    for fn in ("sort_by", "sort_unstable_by", "max_by", "min_by"):
+        for off in find_words(code, fn):
+            j = skip_ws(code, off + len(fn))
+            if j >= len(code) or code[j] != "(":
+                continue
+            body = code[j:balanced_span(code, j)]
+            if find_words(body, "partial_cmp"):
+                hits.append((off, "`%s` comparator uses `partial_cmp`: "
+                             "NaN ordering is undefined; use `total_cmp`"
+                             % fn))
+    return hits
+
+
+def check_file(rel, text):
+    code, comments = scan(text)
+    findings = []  # (rule, line, message)
+
+    for off, msg in check_d01(code):
+        findings.append(("D01", line_of(code, off), msg))
+
+    if any(rel.startswith(d) for d in D02_DIRS):
+        for name in ("HashMap", "HashSet"):
+            for off in find_words(code, name):
+                findings.append(("D02", line_of(code, off),
+                                 "`%s` iteration order is randomized per "
+                                 "process and can leak into an epoch "
+                                 "order; use BTreeMap/BTreeSet/Vec"
+                                 % name))
+
+    if rel.startswith("src/") and rel not in D03_ALLOW:
+        for needle in ("Instant::now", "SystemTime"):
+            for off in find_words(code, needle):
+                findings.append(("D03", line_of(code, off),
+                                 "wall-clock read (`%s`) outside the "
+                                 "allowlisted clock sites can reach a "
+                                 "static-path order" % needle))
+
+    for off in find_words(code, "unsafe"):
+        line = line_of(code, off)
+        lo = max(0, line - 1 - SAFETY_LOOKBACK)
+        covered = any("SAFETY:" in comments[k]
+                      for k in range(lo, min(line, len(comments))))
+        if not covered:
+            findings.append(("S01", line,
+                             "`unsafe` without a `// SAFETY:` comment in "
+                             "the %d lines above" % SAFETY_LOOKBACK))
+
+    if rel.startswith("src/tensor/"):
+        for off in find_words(code, "mul_add"):
+            findings.append(("D04", line_of(code, off),
+                             "`mul_add` fuses mul+add (FMA): contract 7 "
+                             "bit-equality needs separate mul then add"))
+        idx = 0
+        while True:
+            off = code.find("fmadd", idx)
+            if off < 0:
+                break
+            findings.append(("D04", line_of(code, off),
+                             "FMA intrinsic: contract 7 bit-equality "
+                             "needs separate mul then add"))
+            idx = off + 1
+
+    if rel in W01_FILES:
+        for off in find_words(code, "as"):
+            j = skip_ws(code, off + 2)
+            m = re.match(r"[A-Za-z0-9_]+", code[j:j + 8])
+            if m and m.group(0) in INT_TYPES:
+                findings.append(("W01", line_of(code, off),
+                                 "bare `as %s` cast in a wire layer can "
+                                 "truncate silently; use the checked "
+                                 "conversions in util::ser" % m.group(0)))
+
+    # Waivers: `// audit: allow(RULE, reason = "...")` covers same-rule
+    # findings on its own line and the next line.
+    waivers = []
+    for lineno0, ctext in enumerate(comments):
+        marker = "audit: allow("
+        pos = ctext.find(marker)
+        if pos < 0:
+            continue
+        lineno = lineno0 + 1
+        body = ctext[pos + len(marker):]
+        m = re.match(
+            r"\s*([A-Z][0-9]{2})\s*,\s*reason\s*=\s*\"([^\"]*)\"\s*\)",
+            body,
+        )
+        if not m or not m.group(2).strip() or m.group(1) not in RULE_IDS:
+            findings.append(("A00", lineno,
+                             "malformed waiver: expected `audit: "
+                             "allow(<rule>, reason = \"...\")` with a "
+                             "known rule and a non-empty reason"))
+            continue
+        waivers.append({"rule": m.group(1), "line": lineno, "used": False})
+
+    kept, waived = [], []
+    for f in findings:
+        rule, line, _ = f
+        hit = None
+        for w in waivers:
+            if w["rule"] == rule and line in (w["line"], w["line"] + 1):
+                hit = w
+                break
+        if hit:
+            hit["used"] = True
+            waived.append(f)
+        else:
+            kept.append(f)
+    for w in waivers:
+        if not w["used"]:
+            kept.append(("A00", w["line"],
+                         "stale waiver: no %s finding on this or the "
+                         "next line" % w["rule"]))
+    kept.sort(key=lambda f: f[1])
+    return kept, waived
+
+
+def main():
+    root = "rust"
+    args = sys.argv[1:]
+    if args[:1] == ["--root"]:
+        root = args[1]
+    files = []
+    for sub in ("src", "tests", "benches"):
+        base = os.path.join(root, sub)
+        for dirpath, _, names in os.walk(base):
+            for name in sorted(names):
+                if name.endswith(".rs"):
+                    files.append(os.path.join(dirpath, name))
+    files.sort()
+    total, waived_total = 0, 0
+    for path in files:
+        rel = os.path.relpath(path, root).replace(os.sep, "/")
+        with open(path, encoding="utf-8") as fh:
+            text = fh.read()
+        kept, waived = check_file(rel, text)
+        waived_total += len(waived)
+        for rule, line, msg in kept:
+            print("%s:%d: %s: %s" % (path, line, rule, msg))
+            total += 1
+    print("audit(mirror): %d violation(s), %d waiver(s) honored, "
+          "%d file(s) scanned" % (total, waived_total, len(files)),
+          file=sys.stderr)
+    sys.exit(1 if total else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -17,12 +17,17 @@
 //!     backend, the elastic layer's motivating measurement;
 //!   * the wire codec: block-frame encode/decode throughput vs the raw
 //!     gather cost it rides on (what serialization adds per row before
-//!     the socket is even touched).
+//!     the socket is even touched);
+//!   * the streaming reservoir (`StreamOrder`): window-advance cost vs
+//!     reservoir size, static membership vs count-neutral churn — what
+//!     the admit/evict/carry-out bookkeeping adds per window over bare
+//!     pair balancing (contract 9 says the orders are identical).
 //!
 //! Run: `cargo bench --bench ordering_overhead`
 
 use grab::balance::DeterministicBalancer;
 use grab::herding::herding_bound;
+use grab::ordering::stream::{DriftPlan, StreamOrder};
 use grab::ordering::transport::codec;
 use grab::ordering::{stream_static_epoch, GradBlock, GraBOrder,
                      GreedyOrder, OrderPolicy, PairBalance,
@@ -219,10 +224,12 @@ fn pair_vs_grab_herding_section() {
         ("cd-grab-w4", Box::new(ShardedOrder::new(n, d, 4))),
     ];
     for (name, policy) in policies.iter_mut() {
-        for _ in 0..epochs {
-            stream_static_epoch(policy.as_mut(), &vs, &mut flat, block);
+        for epoch in 0..epochs {
+            stream_static_epoch(
+                policy.as_mut(), epoch, &vs, &mut flat, block,
+            );
         }
-        let (inf, _) = herding_bound(&vs, policy.epoch_order(0));
+        let (inf, _) = herding_bound(&vs, policy.epoch_order(epochs));
         println!(
             "{name}: {inf:.4} after {epochs} epochs \
              ({:.1}x below random)",
@@ -425,6 +432,61 @@ fn wire_codec_section() {
     );
 }
 
+fn stream_reservoir_section() {
+    println!(
+        "\n== streaming reservoir: window advance cost vs reservoir \
+         size =="
+    );
+    let d = 256;
+    let block = 64;
+    for n in [256usize, 1024, 4096] {
+        let mut rng = Rng::new(n as u64);
+        let flat: Vec<f32> =
+            (0..n * d).map(|_| rng.gauss() as f32).collect();
+
+        // Static membership: the reservoir degenerates to PairBalance
+        // (contract 9), so this row is the window-advance overhead the
+        // reservoir bookkeeping adds over pair_observe.
+        let mut staticr = StreamOrder::prefilled(n, d);
+        let st = Bench::new(format!("stream_window/static/n{n}/d{d}"))
+            .with_iters(5, 60)
+            .run(|| {
+                staticr.run_window(
+                    &mut |unit, out| {
+                        let u = unit as usize % n;
+                        out.copy_from_slice(&flat[u * d..(u + 1) * d]);
+                    },
+                    block,
+                );
+            });
+
+        // Count-neutral churn: n/16 admits per window, FIFO eviction
+        // absorbing them — adds plan derivation + carry-out per window
+        // but never rebuilds the backend.
+        let rate = (n / 16).max(1);
+        let drift = DriftPlan::steady(7, rate);
+        let mut churn = StreamOrder::prefilled(n, d);
+        let mut next_unit = n as u64;
+        let ch =
+            Bench::new(format!("stream_window/churn{rate}/n{n}/d{d}"))
+                .with_iters(5, 60)
+                .run(|| {
+                    churn.drive_window(&drift, &mut next_unit, block);
+                });
+
+        println!(
+            "n={n}: static {:.1} ns/unit, churn({rate}/window) {:.1} \
+             ns/unit ({:.2}x; {} evictions across all windows incl. \
+             warmup, {} replans)",
+            st.summary.mean / n as f64 * 1e9,
+            ch.summary.mean / n as f64 * 1e9,
+            ch.summary.mean / st.summary.mean,
+            churn.stats().evictions,
+            churn.stats().replans,
+        );
+    }
+}
+
 fn main() {
     table1_section();
     block_vs_per_example_section();
@@ -432,4 +494,5 @@ fn main() {
     sharded_dispatch_section();
     skewed_dispatch_section();
     wire_codec_section();
+    stream_reservoir_section();
 }

@@ -31,6 +31,7 @@ use anyhow::bail;
 
 use crate::balance::DeterministicBalancer;
 use crate::config::KernelKind;
+use crate::ordering::stream::{DriftPlan, StreamOrder};
 use crate::ordering::transport::codec;
 use crate::ordering::{
     GradBlock, GraBOrder, GreedyOrder, OrderPolicy, PairBalance,
@@ -390,6 +391,46 @@ fn ordering_overhead_cases(
             codec::decode_block(body, d, &mut decoded).expect("block");
         });
     push(out, r, k, Some(d), None, Some(rows), None);
+
+    // Streaming reservoir: window-advance cost vs reservoir size —
+    // static membership (== PairBalance work, contract 9) vs
+    // count-neutral churn (plan derivation + carry-out on top, no
+    // backend rebuild). Policies persist so each iteration is one
+    // steady-state window.
+    let d = 256;
+    let block = 64;
+    for n in [256usize, 1024, 4096] {
+        let mut rng = Rng::new(n as u64);
+        let flat: Vec<f32> =
+            (0..n * d).map(|_| rng.gauss() as f32).collect();
+        let mut staticr = StreamOrder::prefilled(n, d);
+        let r = series(format!("stream_window/static/n{n}/d{d}"), quick, 5, 60)
+            .run(|| {
+                staticr.run_window(
+                    &mut |unit, out| {
+                        let u = unit as usize % n;
+                        out.copy_from_slice(&flat[u * d..(u + 1) * d]);
+                    },
+                    block,
+                );
+            });
+        push(out, r, k, Some(d), Some(n), Some(block), None);
+
+        let rate = (n / 16).max(1);
+        let drift = DriftPlan::steady(7, rate);
+        let mut churn = StreamOrder::prefilled(n, d);
+        let mut next_unit = n as u64;
+        let r = series(
+            format!("stream_window/churn{rate}/n{n}/d{d}"),
+            quick,
+            5,
+            60,
+        )
+        .run(|| {
+            churn.drive_window(&drift, &mut next_unit, block);
+        });
+        push(out, r, k, Some(d), Some(n), Some(block), None);
+    }
 }
 
 fn git_rev() -> String {

@@ -82,6 +82,14 @@ pub enum OrderingKind {
     /// CD-GraB: `num_shards` PairBalance workers over disjoint unit
     /// ranges with a round-robin coordinator merge.
     ShardedPairBalance,
+    /// Streaming pair balancing over a bounded sliding reservoir of
+    /// live examples (`ordering::StreamOrder`): units are admitted and
+    /// retired at window boundaries instead of swept in fixed epochs.
+    /// In the synchronous trainer the reservoir spans the whole
+    /// dataset (one window per epoch ≡ PairBalance, determinism
+    /// contract 9); sliding windows run through `grab exp stream` and
+    /// daemon stream jobs. See docs/streaming.md.
+    Stream,
     /// Plain in-order pass (sanity baseline; not in the paper's plots).
     Sequential,
 }
@@ -105,10 +113,11 @@ impl OrderingKind {
             "cd-grab" | "cdgrab" | "sharded-pair" => {
                 OrderingKind::ShardedPairBalance
             }
+            "stream" | "stream-pair" => OrderingKind::Stream,
             "seq" | "sequential" => OrderingKind::Sequential,
             _ => bail!(
                 "unknown ordering {s:?} (rr|so|flipflop|greedy|grab|\
-                 grab-1step|grab-retrain|pair|cd-grab|seq)"
+                 grab-1step|grab-retrain|pair|cd-grab|stream|seq)"
             ),
         })
     }
@@ -125,6 +134,7 @@ impl OrderingKind {
             OrderingKind::RetrainFromGraB => "grab-retrain",
             OrderingKind::PairBalance => "pair",
             OrderingKind::ShardedPairBalance => "cd-grab",
+            OrderingKind::Stream => "stream",
             OrderingKind::Sequential => "seq",
         }
     }
@@ -341,6 +351,22 @@ pub struct TrainConfig {
     /// contract 5). Ignored by orderings other than
     /// [`OrderingKind::ShardedPairBalance`].
     pub shard_transport: TransportKind,
+    /// Streaming reservoir capacity in units (`--window N`, TOML
+    /// `stream_window`), for [`OrderingKind::Stream`]: the bound on
+    /// how many live examples the sliding reservoir balances at once.
+    /// `0` (the default) sizes the reservoir to the whole dataset.
+    /// The synchronous trainer sweeps every example each epoch, so it
+    /// requires `0` or a capacity ≥ `n_examples`; smaller sliding
+    /// windows run through `grab exp stream` and daemon stream jobs
+    /// (see docs/streaming.md).
+    pub stream_window: usize,
+    /// Fresh units admitted per window (`--admit-rate R`, TOML
+    /// `stream_admit_rate`), for [`OrderingKind::Stream`] streaming
+    /// runs: each boundary admits `R` new examples and FIFO-evicts the
+    /// oldest once the reservoir is full. `0` (the default) freezes
+    /// the membership — the static schedule that reproduces
+    /// PairBalance bit-for-bit (determinism contract 9).
+    pub stream_admit_rate: usize,
     /// Balance-kernel dispatch tier
     /// (`--kernels auto|scalar|simd|simd+par`), installed as the
     /// process-wide default before policies are built. Every tier is
@@ -420,6 +446,8 @@ impl Default for TrainConfig {
             async_shards: false,
             shard_queue_depth: 4,
             shard_transport: TransportKind::Channel,
+            stream_window: 0,
+            stream_admit_rate: 0,
             kernels: KernelKind::Auto,
             connect: None,
             read_timeout_secs:
@@ -536,6 +564,30 @@ impl TrainConfig {
         if let Some(t) = args.opt_str("transport") {
             self.shard_transport = TransportKind::parse(&t)?;
         }
+        if args.opt_str("stream").is_some() {
+            bail!(
+                "--stream is a boolean flag and takes no value \
+                 (put it last or before another --flag)"
+            );
+        }
+        if args.flag("stream") {
+            // Sugar for `--ordering stream`; an explicit contradictory
+            // `--ordering` is a config error, not a silent override.
+            if args.opt_str("ordering").is_some()
+                && self.ordering != OrderingKind::Stream
+            {
+                bail!(
+                    "--stream conflicts with --ordering {} \
+                     (--stream means --ordering stream)",
+                    self.ordering.name()
+                );
+            }
+            self.ordering = OrderingKind::Stream;
+        }
+        self.stream_window =
+            args.usize_or("window", self.stream_window)?;
+        self.stream_admit_rate =
+            args.usize_or("admit-rate", self.stream_admit_rate)?;
         if let Some(k) = args.opt_str("kernels") {
             self.kernels = KernelKind::parse(&k)?;
         }
@@ -627,6 +679,20 @@ impl TrainConfig {
         if let Some(t) = doc.get_str("transport") {
             c.shard_transport = TransportKind::parse(&t)?;
         }
+        let window = doc
+            .get_int("stream_window")
+            .unwrap_or(c.stream_window as i64);
+        if window < 0 {
+            bail!("stream_window must be >= 0, got {window}");
+        }
+        c.stream_window = window as usize;
+        let admit = doc
+            .get_int("stream_admit_rate")
+            .unwrap_or(c.stream_admit_rate as i64);
+        if admit < 0 {
+            bail!("stream_admit_rate must be >= 0, got {admit}");
+        }
+        c.stream_admit_rate = admit as usize;
         if let Some(k) = doc.get_str("kernels") {
             c.kernels = KernelKind::parse(&k)?;
         }
@@ -736,11 +802,40 @@ impl TrainConfig {
         if self.resume && self.checkpoint_dir.is_none() {
             bail!("--resume needs --checkpoint-dir (the run directory)");
         }
-        if self.checkpoint_dir.is_some() && self.use_pipeline {
+        if self.ordering == OrderingKind::Stream
+            && self.stream_window != 0
+            && self.stream_window < self.n_examples
+        {
             bail!(
-                "checkpointing is not supported with --pipeline \
-                 (the threaded trainer has no epoch-boundary snapshot \
-                 hook yet)"
+                "--window {} is smaller than the dataset (n = {}): the \
+                 synchronous trainer sweeps every example each epoch, \
+                 so its reservoir must span the dataset. Run a sliding \
+                 window through `grab exp stream` or a daemon stream \
+                 job instead (docs/streaming.md)",
+                self.stream_window,
+                self.n_examples
+            );
+        }
+        if self.stream_window != 0
+            && self.ordering != OrderingKind::Stream
+        {
+            bail!(
+                "--window requires --stream (got ordering {})",
+                self.ordering.name()
+            );
+        }
+        if self.stream_admit_rate != 0 {
+            if self.ordering != OrderingKind::Stream {
+                bail!(
+                    "--admit-rate requires --stream (got ordering {})",
+                    self.ordering.name()
+                );
+            }
+            bail!(
+                "--admit-rate is only meaningful for sliding-reservoir \
+                 runs, and `grab train` sweeps a fixed dataset: drive \
+                 membership churn through `grab exp stream --admit-rate` \
+                 or a daemon stream job (docs/streaming.md)"
             );
         }
         if self.ordering == OrderingKind::GreedyOrdering {
@@ -797,7 +892,7 @@ impl TrainConfig {
             "task={};ordering={};balancer={};epochs={};n={};n_eval={};\
              accum={};lr={};momentum={};wd={};sched={};seed={};\
              walk_c={};group={};shards={};weights={};elastic={};\
-             clip={}",
+             clip={};window={};admit={}",
             self.task.name(),
             self.ordering.name(),
             self.balancer.name(),
@@ -816,6 +911,8 @@ impl TrainConfig {
             weights,
             self.elastic,
             self.clip_norm,
+            self.stream_window,
+            self.stream_admit_rate,
         );
         crate::util::ser::fnv1a32(canon.as_bytes())
     }
@@ -845,10 +942,64 @@ mod tests {
             OrderingKind::RetrainFromGraB,
             OrderingKind::PairBalance,
             OrderingKind::ShardedPairBalance,
+            OrderingKind::Stream,
             OrderingKind::Sequential,
         ] {
             assert_eq!(OrderingKind::parse(o.name()).unwrap(), o);
         }
+    }
+
+    #[test]
+    fn stream_config_plumbs_through() {
+        // --stream is sugar for --ordering stream.
+        let args = Args::parse(["--stream"]).unwrap();
+        let mut c = TrainConfig::default();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.ordering, OrderingKind::Stream);
+
+        // A window spanning the dataset is accepted…
+        let args =
+            Args::parse(["--stream", "--window", "4096"]).unwrap();
+        let mut c = TrainConfig::default();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.stream_window, 4096);
+        // …a sliding (smaller) window is the exp/daemon drivers' job.
+        let args = Args::parse(["--stream", "--window", "64"]).unwrap();
+        let mut c = TrainConfig::default();
+        assert!(c.apply_args(&args).is_err());
+
+        // --window / --admit-rate without --stream are config errors,
+        // as is --stream against a contradictory --ordering.
+        let args = Args::parse(["--window", "4096"]).unwrap();
+        let mut c = TrainConfig::default();
+        assert!(c.apply_args(&args).is_err());
+        let args = Args::parse(["--admit-rate", "2"]).unwrap();
+        let mut c = TrainConfig::default();
+        assert!(c.apply_args(&args).is_err());
+        let args =
+            Args::parse(["--stream", "--ordering", "grab"]).unwrap();
+        let mut c = TrainConfig::default();
+        assert!(c.apply_args(&args).is_err());
+
+        // The sync trainer cannot honor membership churn — loud error
+        // pointing at the sliding-reservoir drivers.
+        let args =
+            Args::parse(["--stream", "--admit-rate", "2"]).unwrap();
+        let mut c = TrainConfig::default();
+        assert!(c.apply_args(&args).is_err());
+
+        // TOML forms + negative guards.
+        let doc = TomlDoc::parse(
+            "ordering = \"stream\"\nstream_window = 4096",
+        )
+        .unwrap();
+        let c = TrainConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.ordering, OrderingKind::Stream);
+        assert_eq!(c.stream_window, 4096);
+        let doc = TomlDoc::parse("stream_window = -1").unwrap();
+        assert!(TrainConfig::from_toml(&doc).is_err());
+        let doc = TomlDoc::parse("stream_admit_rate = -2").unwrap();
+        assert!(TrainConfig::from_toml(&doc).is_err());
     }
 
     #[test]
@@ -1090,14 +1241,17 @@ mod tests {
         let mut c = TrainConfig::default();
         assert!(c.apply_args(&args).is_err());
 
-        // Checkpointing through the pipeline trainer is refused (no
-        // snapshot hook there yet).
+        // Checkpointing through the pipeline trainer is supported:
+        // PipelineTrainer snapshots at its epoch barrier (contract 8
+        // covers both trainers).
         let args = Args::parse(
             ["--checkpoint-dir", "runs/x", "--pipeline"],
         )
         .unwrap();
         let mut c = TrainConfig::default();
-        assert!(c.apply_args(&args).is_err());
+        c.apply_args(&args).unwrap();
+        assert!(c.use_pipeline);
+        assert_eq!(c.checkpoint_dir.as_deref(), Some("runs/x"));
 
         // TOML forms + cadence guard.
         let doc = TomlDoc::parse(
@@ -1133,5 +1287,10 @@ mod tests {
         c.resume = true;
         c.eval_every = 7;
         assert_eq!(a.fingerprint(), c.fingerprint());
+
+        // The streaming reservoir shape is result-relevant.
+        let mut s = TrainConfig::default();
+        s.stream_window = 8192;
+        assert_ne!(a.fingerprint(), s.fingerprint());
     }
 }

@@ -135,13 +135,17 @@ impl CdGrabConfig {
 /// returns (herding ℓ∞ after the epoch, observe+epoch_end seconds).
 fn run_epoch(
     policy: &mut dyn OrderPolicy,
+    epoch: usize,
     vs: &[Vec<f32>],
     flat: &mut Vec<f32>,
     block: usize,
 ) -> (f32, f64) {
-    let secs =
-        crate::ordering::stream_static_epoch(policy, vs, flat, block);
-    let (inf, _) = herding_bound(vs, policy.epoch_order(0));
+    let secs = crate::ordering::stream_static_epoch(
+        policy, epoch, vs, flat, block,
+    );
+    // The order just finalized for the *next* epoch is what the
+    // herding gate scores.
+    let (inf, _) = herding_bound(vs, policy.epoch_order(epoch + 1));
     (inf, secs)
 }
 
@@ -338,8 +342,9 @@ pub fn run(cfg: &CdGrabConfig, out_dir: &std::path::Path) -> Result<()> {
         };
         let mut col = Vec::with_capacity(cfg.epochs);
         for epoch in start..cfg.epochs {
-            let (inf, secs) =
-                run_epoch(policy.as_mut(), &vs, &mut flat, cfg.block);
+            let (inf, secs) = run_epoch(
+                policy.as_mut(), epoch, &vs, &mut flat, cfg.block,
+            );
             let link = policy
                 .transport_stats()
                 .map(|s| s.total())

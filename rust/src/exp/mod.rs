@@ -10,6 +10,7 @@
 //! grab exp table1      # Table 1 measured compute/storage overhead
 //! grab exp statement1  # Statement 1 greedy vs random scaling
 //! grab exp cdgrab      # CD-GraB pair/sharded herding bounds
+//! grab exp stream      # sliding-reservoir streaming (contract 9)
 //! grab exp all         # everything, small scale
 //! ```
 
@@ -20,6 +21,7 @@ pub mod fig3;
 pub mod fig4;
 pub mod granularity;
 pub mod statement1;
+pub mod stream;
 pub mod table1;
 
 use std::path::PathBuf;
@@ -74,7 +76,19 @@ pub fn run_from_cli(args: &Args) -> Result<()> {
         bail!("--resume is a boolean flag and takes no value");
     }
     let resume = args.flag("resume");
+    // Streaming flag (stream only): fresh admits per window on the
+    // churn schedules.
+    let admit_rate = match args.opt_str("admit-rate") {
+        Some(s) => Some(s.parse::<usize>().map_err(|_| {
+            anyhow::anyhow!("--admit-rate wants an integer, got {s:?}")
+        })?),
+        None => None,
+    };
     args.reject_unknown()?;
+    anyhow::ensure!(
+        admit_rate.is_none() || id == "stream",
+        "--admit-rate only applies to `exp stream`"
+    );
     anyhow::ensure!(
         [listen.is_some(), connect.is_some(), register.is_some(),
          service.is_some()]
@@ -151,7 +165,7 @@ pub fn run_from_cli(args: &Args) -> Result<()> {
 
     let ids: Vec<&str> = if id == "all" {
         vec!["fig1", "fig2", "fig3", "fig4", "table1", "statement1",
-             "granularity", "cdgrab"]
+             "granularity", "cdgrab", "stream"]
     } else {
         vec![id.as_str()]
     };
@@ -257,9 +271,26 @@ pub fn run_from_cli(args: &Args) -> Result<()> {
                 cfg.resume = resume;
                 cdgrab::run(&cfg, &out)?;
             }
+            "stream" => {
+                let mut cfg = if paper_scale {
+                    stream::StreamExpConfig::default()
+                } else {
+                    stream::StreamExpConfig::small()
+                };
+                if epochs > 0 {
+                    cfg.windows = epochs;
+                }
+                if n > 0 {
+                    cfg.n = n;
+                }
+                if let Some(r) = admit_rate {
+                    cfg.admit_rate = r;
+                }
+                stream::run(&cfg, &out)?;
+            }
             other => bail!(
                 "unknown experiment {other:?} (fig1|fig2|fig3|fig4|\
-                 table1|statement1|granularity|cdgrab|all)"
+                 table1|statement1|granularity|cdgrab|stream|all)"
             ),
         }
     }

@@ -1,0 +1,300 @@
+//! `grab exp stream` — streaming ordering-quality experiment: a
+//! [`StreamOrder`] sliding reservoir driven through frozen
+//! [`DriftPlan`] schedules, with the two halves of determinism
+//! contract 9 (docs/determinism.md) asserted by the run itself:
+//!
+//! 1. **Static half** — a prefilled reservoir with no membership
+//!    events produces per-window orders bit-equal to a bare
+//!    [`PairBalance`] over the same gradients (streaming is a strict
+//!    generalization, not a different algorithm).
+//! 2. **Transport half** — on a count-neutral schedule (steady churn
+//!    over a full reservoir: every admit FIFO-evicts one unit, so the
+//!    live count never changes), the sharded reservoir's merged orders
+//!    are bit-equal across channel and loopback-TCP backends at every
+//!    swept shard count. This is the same schedule the daemon's
+//!    `stream` jobs run over leased links.
+//!
+//! Beyond the gates, a drift suite (explicit retirements, burst
+//! admits, distribution shift) exercises the resize/re-link path and
+//! records how the per-window herding bound and the carried-out
+//! survivor accumulator behave under churn. Writes
+//! `stream_windows.csv`: one row per (scenario, backend, window) with
+//! the live count, herding bound, carry norm, lifetime reservoir
+//! counters, and the ordering-overhead seconds.
+
+use anyhow::Result;
+
+use crate::ordering::stream::{DriftPlan, StreamOrder};
+use crate::ordering::{OrderPolicy, PairBalance};
+use crate::service::order_hash;
+use crate::util::ser::{fmt_f, CsvWriter};
+
+/// Parameters of the streaming reservoir experiment.
+pub struct StreamExpConfig {
+    /// Reservoir capacity, fully prefilled with units `0..n`.
+    pub n: usize,
+    /// Gradient dimension.
+    pub d: usize,
+    /// Windows per scenario.
+    pub windows: usize,
+    /// Observe block width.
+    pub block: usize,
+    /// Fresh units admitted per window on the churn schedules
+    /// (`--admit-rate`).
+    pub admit_rate: usize,
+    /// Shard counts swept on the count-neutral transport gate.
+    pub shard_counts: Vec<usize>,
+    /// Seed for every drift plan (gradients and retirement sampling).
+    pub seed: u64,
+}
+
+impl Default for StreamExpConfig {
+    fn default() -> Self {
+        StreamExpConfig {
+            n: 2048,
+            d: 128,
+            windows: 8,
+            block: 32,
+            admit_rate: 32,
+            shard_counts: vec![1, 4],
+            seed: 0,
+        }
+    }
+}
+
+impl StreamExpConfig {
+    /// CI-speed scale (sweeps the acceptance set W ∈ {1, 2, 4}).
+    pub fn small() -> StreamExpConfig {
+        StreamExpConfig {
+            n: 256,
+            d: 32,
+            windows: 6,
+            block: 16,
+            admit_rate: 8,
+            shard_counts: vec![1, 2, 4],
+            seed: 0,
+        }
+    }
+}
+
+/// Drive `policy` through `cfg.windows` windows of `drift`, writing
+/// one CSV row per window; returns the per-window order hashes (of the
+/// order each boundary finalizes for the *next* window).
+fn drive(
+    cfg: &StreamExpConfig,
+    csv: &mut CsvWriter,
+    scenario: &str,
+    backend: &str,
+    policy: &mut StreamOrder,
+    drift: &DriftPlan,
+) -> Result<Vec<u32>> {
+    let mut next_unit = cfg.n as u64;
+    let mut hashes = Vec::with_capacity(cfg.windows);
+    for window in 0..cfg.windows {
+        let secs = policy.drive_window(drift, &mut next_unit, cfg.block);
+        let stats = policy.stats();
+        hashes.push(order_hash(policy.epoch_order(window + 1)));
+        csv.row(&[
+            scenario.to_string(),
+            backend.to_string(),
+            window.to_string(),
+            policy.len().to_string(),
+            fmt_f(stats.last_window_inf as f64),
+            fmt_f(stats.carry_inf as f64),
+            stats.admits.to_string(),
+            stats.evictions.to_string(),
+            stats.replans.to_string(),
+            fmt_f(secs),
+        ])?;
+    }
+    Ok(hashes)
+}
+
+/// Run the experiment and write `stream_windows.csv` to `out_dir`.
+/// Fails if either contract-9 gate is violated.
+pub fn run(cfg: &StreamExpConfig, out_dir: &std::path::Path) -> Result<()> {
+    anyhow::ensure!(cfg.n >= 1, "need a non-empty reservoir");
+    anyhow::ensure!(
+        cfg.admit_rate <= cfg.n,
+        "admit rate {} exceeds reservoir capacity {}",
+        cfg.admit_rate,
+        cfg.n
+    );
+    let mut csv = CsvWriter::create(
+        &out_dir.join("stream_windows.csv"),
+        &["scenario", "backend", "window", "live", "herd_inf",
+          "carry_inf", "admits", "evictions", "replans", "order_secs"],
+    )?;
+    let units: Vec<u64> = (0..cfg.n as u64).collect();
+
+    println!(
+        "\nstream — sliding reservoir, n={} d={} block={} \
+         admit_rate={} over {} windows:",
+        cfg.n, cfg.d, cfg.block, cfg.admit_rate, cfg.windows
+    );
+
+    // ── Gate 1: the static half of contract 9. ──────────────────────
+    // A prefilled reservoir with no membership events must replay a
+    // bare PairBalance bit-for-bit, window for window.
+    let static_plan = DriftPlan::steady(cfg.seed, 0);
+    let mut static_res = StreamOrder::prefilled(cfg.n, cfg.d);
+    let static_hashes = drive(
+        cfg, &mut csv, "static", "unsharded", &mut static_res,
+        &static_plan,
+    )?;
+    // The steady plan's gradients are window-independent (no shift),
+    // so the PairBalance reference sees the identical static set.
+    let vs: Vec<Vec<f32>> = units
+        .iter()
+        .map(|&u| {
+            let mut g = vec![0.0f32; cfg.d];
+            static_plan.grad(u, 0, &mut g);
+            g
+        })
+        .collect();
+    let mut pair = PairBalance::new(cfg.n, cfg.d);
+    let mut flat = vec![0.0f32; cfg.n * cfg.d];
+    let mut pair_hashes = Vec::with_capacity(cfg.windows);
+    for epoch in 0..cfg.windows {
+        crate::ordering::stream_static_epoch(
+            &mut pair, epoch, &vs, &mut flat, cfg.block,
+        );
+        pair_hashes.push(order_hash(pair.epoch_order(epoch + 1)));
+    }
+    anyhow::ensure!(
+        static_hashes == pair_hashes,
+        "contract 9 (static half) violated: a static reservoir \
+         diverged from PairBalance ({static_hashes:x?} vs \
+         {pair_hashes:x?})"
+    );
+    println!(
+        "  static gate: {} windows bit-equal to PairBalance",
+        cfg.windows
+    );
+
+    // ── Steady churn, unsharded: the reference streaming scenario. ──
+    let steady = DriftPlan::steady(cfg.seed, cfg.admit_rate);
+    let mut res = StreamOrder::with_units(cfg.n, cfg.d, &units);
+    drive(cfg, &mut csv, "steady", "unsharded", &mut res, &steady)?;
+
+    // ── Gate 2: the transport half of contract 9. ───────────────────
+    // The same frozen count-neutral schedule through channel and
+    // loopback-TCP sharded reservoirs at every swept W: the merged
+    // orders must be bit-equal per window, and no boundary may have
+    // re-linked.
+    for &w in &cfg.shard_counts {
+        let mut chan = StreamOrder::sharded_channel(
+            cfg.n, cfg.d, &units, w, 4,
+        );
+        let chan_hashes = drive(
+            cfg, &mut csv, "steady", &format!("channel-w{w}"),
+            &mut chan, &steady,
+        )?;
+        let mut tcp =
+            StreamOrder::sharded_tcp_loopback(cfg.n, cfg.d, &units, w)?;
+        let tcp_hashes = drive(
+            cfg, &mut csv, "steady", &format!("tcp-w{w}"), &mut tcp,
+            &steady,
+        )?;
+        anyhow::ensure!(
+            chan_hashes == tcp_hashes,
+            "contract 9 (transport half) violated at W={w}: channel \
+             vs tcp orders diverged ({chan_hashes:x?} vs \
+             {tcp_hashes:x?})"
+        );
+        anyhow::ensure!(
+            chan.stats().replans == 0 && tcp.stats().replans == 0,
+            "count-neutral schedule re-linked at W={w} (channel {} / \
+             tcp {} replans)",
+            chan.stats().replans,
+            tcp.stats().replans
+        );
+        println!(
+            "  transport gate W={w}: {} windows bit-equal \
+             channel == tcp, 0 re-links",
+            cfg.windows
+        );
+    }
+
+    // ── Drift suite: the resize/re-link paths, recorded not gated. ──
+    // Churn with retire_rate > admit_rate shrinks the reservoir every
+    // boundary (on a *full* reservoir a retire deficit is topped up by
+    // FIFO eviction, so only an excess of retirements resizes); bursts
+    // overflow FIFO on a full reservoir (count-neutral again); shift
+    // drifts the gradient distribution itself.
+    let churn = DriftPlan::churn(
+        cfg.seed,
+        cfg.admit_rate,
+        (cfg.admit_rate * 2).max(1),
+    );
+    let mut res = StreamOrder::with_units(cfg.n, cfg.d, &units);
+    drive(cfg, &mut csv, "churn", "unsharded", &mut res, &churn)?;
+    let bursty = DriftPlan::bursty(
+        cfg.seed,
+        cfg.admit_rate,
+        2,
+        cfg.admit_rate,
+    );
+    let mut res = StreamOrder::with_units(cfg.n, cfg.d, &units);
+    drive(cfg, &mut csv, "bursty", "unsharded", &mut res, &bursty)?;
+    let shift = DriftPlan {
+        shift_per_window: 0.05,
+        ..DriftPlan::steady(cfg.seed, cfg.admit_rate)
+    };
+    let mut res = StreamOrder::with_units(cfg.n, cfg.d, &units);
+    drive(cfg, &mut csv, "shift", "unsharded", &mut res, &shift)?;
+    csv.flush()?;
+
+    println!(
+        "  drift suite: churn/bursty/shift recorded (results: {})",
+        out_dir.join("stream_windows.csv").display()
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stream_exp_runs_and_enforces_the_contract_9_gates() {
+        let tmp = crate::util::testdir::TestDir::new("stream-exp");
+        let cfg = StreamExpConfig {
+            n: 64,
+            d: 8,
+            windows: 4,
+            block: 8,
+            admit_rate: 4,
+            shard_counts: vec![1, 2],
+            seed: 3,
+        };
+        // run() itself enforces both contract-9 gates and fails the
+        // experiment on divergence.
+        run(&cfg, tmp.path()).unwrap();
+        let text = std::fs::read_to_string(
+            tmp.path().join("stream_windows.csv"),
+        )
+        .unwrap();
+        // Header + windows x (static + steady-unsharded +
+        // 2 backends x 2 shard counts + churn + bursty + shift).
+        assert_eq!(text.lines().count(), 1 + 4 * (5 + 2 * 2));
+        assert!(text.starts_with("scenario,backend,window,live"));
+        // Steady churn on a full reservoir is count-neutral: the live
+        // column stays at n and nothing ever re-links.
+        for line in text.lines().filter(|l| l.starts_with("steady,")) {
+            let cols: Vec<&str> = line.split(',').collect();
+            assert_eq!(cols[3], "64", "live count drifted: {line}");
+            assert_eq!(cols[8], "0", "steady schedule re-linked: {line}");
+        }
+        // Churn at admit 4 / retire 2 shrinks-or-grows every boundary:
+        // its final row must have recorded re-plans.
+        let churn_last = text
+            .lines()
+            .filter(|l| l.starts_with("churn,"))
+            .last()
+            .unwrap();
+        let replans: u64 =
+            churn_last.split(',').nth(8).unwrap().parse().unwrap();
+        assert!(replans > 0, "churn never resized: {churn_last}");
+    }
+}

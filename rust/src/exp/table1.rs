@@ -77,8 +77,9 @@ fn measure(
 ) -> (f64, usize) {
     let secs = if policy.wants_grads() {
         let mut flat = Vec::new();
+        // One measured epoch per policy instance, so the index is 0.
         crate::ordering::stream_static_epoch(
-            policy, vs, &mut flat, BLOCK,
+            policy, 0, vs, &mut flat, BLOCK,
         )
     } else {
         // Consistent with stream_static_epoch's stopwatch: epoch_order

@@ -3,14 +3,14 @@
 //! ```text
 //! grab train  [--config f.toml] [--task mnist|cifar|wiki|glue]
 //!             [--ordering rr|so|flipflop|greedy|grab|grab-1step|pair|
-//!              cd-grab|seq] [--shards W] [--queue-depth N]
+//!              cd-grab|stream|seq] [--shards W] [--queue-depth N]
 //!             [--transport channel|tcp] [--connect HOST:PORT]
 //!             [--balancer alg5|alg6|kernel] [--epochs N] [--n N]
 //!             [--lr F] [--seed N] [--metrics-out f.csv] [--pipeline]
-//!             [--async-shards] [--checkpoint-dir DIR]
-//!             [--checkpoint-every N] [--resume]
+//!             [--async-shards] [--stream] [--window N]
+//!             [--checkpoint-dir DIR] [--checkpoint-every N] [--resume]
 //! grab exp    fig1|fig2|fig3|fig4|table1|statement1|granularity|
-//!             cdgrab|all [options]
+//!             cdgrab|stream|all [options]
 //!             (cdgrab: --listen HOST:PORT serves shard workers,
 //!              --connect HOST:PORT dials a remote worker server,
 //!              --register HOST:PORT joins a `grab serve` daemon,
@@ -69,7 +69,7 @@ USAGE:
   grab train [options]     train one run (task x ordering)
   grab exp <id> [options]  regenerate a paper artifact
                            (fig1|fig2|fig3|fig4|table1|statement1|
-                            granularity|cdgrab|all)
+                            granularity|cdgrab|stream|all)
   grab serve [options]     run the order-service daemon: workers dial in
                            and register; jobs run over the held sockets;
                            HTTP control plane (docs/service.md)
@@ -115,6 +115,17 @@ TRAIN OPTIONS:
                            balance-kernel dispatch tier (default: auto =
                            probe AVX2 once; every tier emits bit-identical
                            epoch orders — docs/determinism.md contract 7)
+  --stream                 sugar for --ordering stream: pair balancing
+                           through the sliding-reservoir policy; with
+                           the trainer the reservoir spans the whole
+                           dataset, one window per epoch, bit-equal to
+                           --ordering pair (docs/determinism.md
+                           contract 9; boolean flag, put it last or
+                           before another --flag)
+  --window N               reservoir capacity in units (with --stream;
+                           must cover the dataset here — sliding
+                           windows run through `grab exp stream` and
+                           daemon stream jobs, docs/streaming.md)
   --balancer alg5|alg6|kernel
   --epochs N --n N --n-eval N --accum N
   --lr F --momentum F --wd F --seed N
@@ -169,6 +180,11 @@ EXP OPTIONS (see DESIGN.md experiment index):
   --resume                 (cdgrab) resume every policy from its latest
                            snapshot; remaining epochs are bit-equal to
                            the uninterrupted sweep (boolean flag)
+  --admit-rate R           (stream) fresh units admitted per window on
+                           the churn schedules; FIFO eviction keeps the
+                           full reservoir count-neutral
+                           (docs/streaming.md)
+  --epochs N               (stream) windows per scenario
 
 BENCH OPTIONS:
   --out FILE.json          where to write results (default: stdout)

@@ -547,9 +547,9 @@ mod tests {
         let rand_inf = rand_acc / 5.0;
         let mut g = grab(n, d);
         let mut flat = Vec::new();
-        for _epoch in 0..8 {
+        for epoch in 0..8 {
             crate::ordering::stream_static_epoch(
-                &mut g, &vs, &mut flat, b,
+                &mut g, epoch, &vs, &mut flat, b,
             );
         }
         let (grab_inf, _) = herding_bound(&vs, g.epoch_order(0));

@@ -23,6 +23,7 @@ mod greedy;
 pub mod pair;
 pub mod queue;
 pub mod sharded;
+pub mod stream;
 pub mod topology;
 pub mod transport;
 
@@ -30,6 +31,7 @@ pub use grab::GraBOrder;
 pub use greedy::GreedyOrder;
 pub use pair::PairBalance;
 pub use sharded::ShardedOrder;
+pub use stream::StreamOrder;
 pub use topology::Topology;
 
 pub use crate::tensor::GradBlock;
@@ -531,15 +533,29 @@ impl OrderPolicy for OneStepGraB {
     }
 }
 
-/// Stream one epoch of a static vector set through a policy: gather the
-/// rows of `vs` into `flat` in the policy's visit order (the loader
+/// Stream epoch `epoch` of a static vector set through a policy: gather
+/// the rows of `vs` into `flat` in the policy's visit order (the loader
 /// stage's job in real training, kept outside the timed section), stream
 /// `block`-row [`GradBlock`]s through
 /// [`OrderPolicy::observe_block`], and end the epoch. Returns the
 /// observe + epoch_end wall-clock seconds. Shared by the static-gradient
 /// experiments, tests, and benches.
+///
+/// The epoch index is forwarded to [`OrderPolicy::epoch_order`] — an
+/// epoch-keyed policy (RandomReshuffle, FlipFlop) reshuffles per epoch
+/// exactly as it would under the trainer; multi-epoch callers must pass
+/// their real epoch counter, not 0.
+///
+/// # Panics
+///
+/// Hard input contracts (release builds included — a violation in a
+/// release caller used to silently truncate or corrupt the gathered
+/// buffer): `block` must be positive, every row of `vs` must have the
+/// same dimension, and the policy's order must cover exactly `vs.len()`
+/// units.
 pub fn stream_static_epoch(
     policy: &mut dyn OrderPolicy,
+    epoch: usize,
     vs: &[Vec<f32>],
     flat: &mut Vec<f32>,
     block: usize,
@@ -547,11 +563,25 @@ pub fn stream_static_epoch(
     assert!(block > 0, "block must be positive");
     let n = vs.len();
     let d = vs.first().map_or(0, |v| v.len());
+    for (u, v) in vs.iter().enumerate() {
+        assert_eq!(
+            v.len(),
+            d,
+            "ragged vector set: vs[{u}] has {} values, expected d={d}",
+            v.len()
+        );
+    }
     flat.clear();
     flat.resize(n * d, 0.0);
     {
-        let order = policy.epoch_order(0);
-        debug_assert_eq!(order.len(), n);
+        let pname = policy.name();
+        let order = policy.epoch_order(epoch);
+        assert_eq!(
+            order.len(),
+            n,
+            "policy '{pname}' returned a {}-unit order for {n} vectors",
+            order.len()
+        );
         for (pos, &unit) in order.iter().enumerate() {
             flat[pos * d..(pos + 1) * d].copy_from_slice(&vs[unit]);
         }
@@ -609,6 +639,19 @@ pub fn build_policy(
             Box::new(OneStepGraB::new(grab_from_cfg(cfg, n, d)))
         }
         OrderingKind::PairBalance => Box::new(PairBalance::new(n, d)),
+        OrderingKind::Stream => {
+            // The trainer's epoch loop visits all `n` units per epoch,
+            // so its reservoir is the whole dataset: one window per
+            // epoch, statically scheduled — exactly PairBalance
+            // (contract 9's static half), plus the window bookkeeping.
+            // Sliding reservoirs (admits/retires mid-run) are driven by
+            // the streaming surfaces: `grab exp stream` and the daemon's
+            // stream jobs. `--window` beyond the dataset leaves slack
+            // capacity (validate() rejects windows below `n`).
+            let units: Vec<u64> = (0..n as u64).collect();
+            let capacity = cfg.stream_window.max(n).max(1);
+            Box::new(StreamOrder::with_units(capacity, d, &units))
+        }
         OrderingKind::ShardedPairBalance => {
             // The starting topology: pinned `--weights`, or equal.
             let weights: Vec<u64> = cfg
@@ -777,6 +820,7 @@ mod tests {
             OrderingKind::GraB,
             OrderingKind::OneStepGraB,
             OrderingKind::PairBalance,
+            OrderingKind::Stream,
             OrderingKind::ShardedPairBalance,
             OrderingKind::Sequential,
         ] {
@@ -840,6 +884,53 @@ mod tests {
         let stats = p.transport_stats().expect("transported policy");
         assert_eq!(stats.transport, "tcp");
         assert_eq!(stats.per_shard.len(), 2);
+    }
+
+    #[test]
+    fn stream_static_epoch_threads_the_epoch_index() {
+        // Regression: the helper used to hardcode `epoch_order(0)`, so
+        // epoch-keyed policies (RandomReshuffle caches per epoch index)
+        // silently replayed epoch 0's permutation for every streamed
+        // epoch. The streamed orders must now match a directly driven
+        // policy epoch-for-epoch.
+        let n = 32;
+        let d = 2;
+        let vs: Vec<Vec<f32>> =
+            (0..n).map(|i| vec![i as f32, -(i as f32)]).collect();
+        let mut streamed = RandomReshuffle::new(n, 7);
+        let mut direct = RandomReshuffle::new(n, 7);
+        let mut flat = Vec::new();
+        let mut orders = Vec::new();
+        for epoch in 0..3 {
+            stream_static_epoch(&mut streamed, epoch, &vs, &mut flat, 8);
+            let got = streamed.epoch_order(epoch).to_vec();
+            assert_eq!(got, direct.epoch_order(epoch).to_vec());
+            orders.push(got);
+        }
+        assert_ne!(orders[0], orders[1], "epoch 1 must reshuffle");
+        assert_ne!(orders[1], orders[2], "epoch 2 must reshuffle");
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged vector set")]
+    fn stream_static_epoch_rejects_ragged_rows() {
+        // A ragged `vs` used to silently corrupt the gathered buffer in
+        // release builds (d was derived from row 0 alone).
+        let vs = vec![vec![1.0f32, 2.0], vec![3.0f32]];
+        let mut p = Sequential::new(2);
+        let mut flat = Vec::new();
+        stream_static_epoch(&mut p, 0, &vs, &mut flat, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "2-unit order for 3 vectors")]
+    fn stream_static_epoch_rejects_short_orders() {
+        // An order shorter than `vs` used to be a debug-only assert —
+        // release callers truncated the epoch instead of failing.
+        let vs = vec![vec![0.0f32]; 3];
+        let mut p = FixedOrder::new(vec![1, 0], "grab-retrain");
+        let mut flat = Vec::new();
+        stream_static_epoch(&mut p, 0, &vs, &mut flat, 1);
     }
 
     #[test]

@@ -58,6 +58,10 @@ pub struct PairBalance {
     pub epoch_balance_inf: f32,
     /// Count of +1 signs this epoch (for tests/metrics).
     pub plus_signs: usize,
+    /// Sign assigned to each visit position (`+1`/`-1`), fully
+    /// overwritten every epoch (each position is placed exactly once).
+    /// Read back by the streaming reservoir's carry-out.
+    signs: Vec<i8>,
     observed: usize,
     /// Kernel tier for the pair decision/update kernels. The balancing
     /// chain is sequential (each pair reads the `s` the previous pair
@@ -91,9 +95,21 @@ impl PairBalance {
             have_pending: false,
             epoch_balance_inf: 0.0,
             plus_signs: 0,
+            signs: vec![0; n],
             observed: 0,
             kernel,
         }
+    }
+
+    /// The ±1 sign assigned to each *visit position* of the most
+    /// recently completed epoch (entry `p` is the sign of the example
+    /// visited at position `p`). Every position is placed exactly once
+    /// per epoch, so the buffer is fully overwritten each epoch; before
+    /// the first `epoch_end` the entries are 0. The streaming reservoir
+    /// ([`crate::ordering::StreamOrder`]) uses these to carry an evicted
+    /// unit's signed contribution out of its survivor accumulator.
+    pub fn last_epoch_signs(&self) -> &[i8] {
+        &self.signs
     }
 
     /// The `state_bytes` a freshly constructed balancer over `n` units
@@ -103,6 +119,13 @@ impl PairBalance {
     pub fn initial_state_bytes(n: usize, d: usize) -> usize {
         2 * d * std::mem::size_of::<f32>()
             + 2 * n * std::mem::size_of::<usize>()
+    }
+
+    /// The kernel tier this balancer dispatches through — lets the
+    /// streaming reservoir rebuild a resized balancer on the *same*
+    /// tier (determinism contract 7 must survive a re-plan).
+    pub fn kernel(&self) -> Kernel {
+        self.kernel
     }
 
     /// Number of ordering units.
@@ -123,9 +146,11 @@ impl PairBalance {
             self.next[self.l] = unit;
             self.l += 1;
             self.plus_signs += 1;
+            self.signs[pos] = 1;
         } else {
             self.r -= 1;
             self.next[self.r] = unit;
+            self.signs[pos] = -1;
         }
     }
 
@@ -303,7 +328,7 @@ mod tests {
 
     fn feed_epoch(p: &mut PairBalance, vs: &[Vec<f32>], block: usize) {
         let mut flat = Vec::new();
-        crate::ordering::stream_static_epoch(p, vs, &mut flat, block);
+        crate::ordering::stream_static_epoch(p, 0, vs, &mut flat, block);
     }
 
     #[test]
@@ -343,6 +368,9 @@ mod tests {
         p.epoch_end();
         assert_eq!(p.epoch_order(1), &[1, 2, 3, 0]);
         assert_eq!(p.s, vec![0.0, 0.0]);
+        // Per-position signs of the completed epoch: pair 1 balanced to
+        // -1/+1, pair 2 to +1/-1 (the carry-out's view of the epoch).
+        assert_eq!(p.last_epoch_signs(), &[-1, 1, 1, -1]);
     }
 
     #[test]

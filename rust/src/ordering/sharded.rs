@@ -1583,7 +1583,10 @@ mod tests {
         block: usize,
     ) {
         let mut flat = Vec::new();
-        crate::ordering::stream_static_epoch(p, vs, &mut flat, block);
+        // Epoch 0 everywhere: every policy in this suite is
+        // epoch-agnostic (sharded/pair orders depend only on the
+        // observed gradient stream).
+        crate::ordering::stream_static_epoch(p, 0, vs, &mut flat, block);
     }
 
     fn shard_sizes(s: &ShardedOrder) -> Vec<usize> {

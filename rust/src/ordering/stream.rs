@@ -1,0 +1,1298 @@
+//! Streaming online ordering over a bounded sliding reservoir.
+//!
+//! GraB's framing is explicitly *online* — Algorithm 4 balances
+//! gradients as they stream by — yet a trainer built around
+//! [`OrderPolicy`] sweeps a fixed dataset in whole epochs.
+//! [`StreamOrder`] closes that gap: it pair-balances over a bounded
+//! reservoir of *live* examples whose membership changes mid-run.
+//! External units (dataset row ids, request ids, …) are admitted and
+//! retired through [`StreamOrder::admit`] / [`StreamOrder::retire`];
+//! the events queue up and are applied at the next *window boundary*
+//! (the streaming analogue of an epoch boundary), where
+//! [`ReservoirPlan::advance`] re-plans the unit set — the set-level
+//! generalization of the elastic [`Topology`](super::Topology)
+//! machinery, which re-plans unit *ranges* per epoch.
+//!
+//! # Reservoir model
+//!
+//! Live units occupy contiguous *slots* `0..n`; the inner balancer
+//! (a [`PairBalance`], or a [`ShardedOrder`] for the distributed
+//! variant) only ever sees slots. The boundary relabeling is
+//! *slot-stable*: survivors keep their slot, admits back-fill the
+//! lowest freed slots (inheriting the departed unit's position in the
+//! already-constructed next order), overflow admits append new slots,
+//! and only a net shrink compacts slots downward. The payoff is that a
+//! **count-neutral** boundary — every admit matched by a retire or
+//! eviction — leaves the inner balancer completely untouched, so the
+//! balancing stream (and hence channel/TCP bit-equality, determinism
+//! contract 9) is independent of membership churn. When the count does
+//! change, the unsharded balancer is rebuilt over the new slot range
+//! and re-seeded with the surviving order (appended slots at the
+//! back); the sharded balancer re-links at the new size and restarts
+//! from the identity order — the documented graceful degradation,
+//! since a merged order cannot be transplanted across shard layouts.
+//!
+//! # Carry-out
+//!
+//! PairBalance zeroes its signed accumulator at every boundary, so the
+//! cross-window herding state lives here: after each window the
+//! reservoir recomputes the survivor accumulator `Σ ε_t g_t` from the
+//! balancer's per-position signs ([`PairBalance::last_epoch_signs`])
+//! and its per-slot gradient cache, and every departing unit's signed
+//! contribution is subtracted out — so the reported bound
+//! ([`StreamStats::carry_inf`]) stays well-defined on the survivors.
+//!
+//! # Determinism (contract 9, `docs/determinism.md`)
+//!
+//! A static schedule (no admits, no retires) is bit-for-bit
+//! [`PairBalance`]: the inner balancer is never touched between
+//! windows. A *frozen* admit/retire schedule replays bit-for-bit —
+//! [`ReservoirPlan::advance`] and [`DriftPlan`] are pure in their
+//! inputs, and nothing on the boundary path reads a clock or an
+//! address.
+
+use std::fmt;
+use std::ops::Range;
+
+use crate::herding::herding_bound;
+use crate::ordering::topology::{ReservoirPlan, ReservoirStep};
+use crate::ordering::{
+    transport, GradBlock, OrderPolicy, PairBalance, ShardedOrder, Topology,
+};
+use crate::tensor::norm_inf;
+use crate::util::rng::Rng;
+use crate::util::timer::Stopwatch;
+
+/// A failed [`StreamOrder::admit`] / [`StreamOrder::retire`] call. The
+/// reservoir state is unchanged on every error path.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StreamError {
+    /// The admitted unit's gradient dimension does not match the
+    /// reservoir's.
+    DimMismatch {
+        /// The offending unit id.
+        unit: u64,
+        /// The dimension the caller declared.
+        got: usize,
+        /// The reservoir's fixed dimension.
+        want: usize,
+    },
+    /// Admit of a unit that is already live in the reservoir.
+    AlreadyLive(u64),
+    /// The unit already has an admit or retire queued for the next
+    /// boundary (re-admitting a retiring unit within one window is
+    /// rejected as ambiguous).
+    AlreadyPending(u64),
+    /// Retire of a unit that is not live (never admitted, already
+    /// departed, or still pending admission).
+    NotLive(u64),
+    /// More admits queued in one window than the reservoir's capacity
+    /// — applying them would evict same-boundary admits, which the
+    /// FIFO eviction rule forbids.
+    WindowOverflow {
+        /// The reservoir capacity the admit queue collided with.
+        capacity: usize,
+    },
+}
+
+impl fmt::Display for StreamError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StreamError::DimMismatch { unit, got, want } => write!(
+                f,
+                "unit {unit} has gradient dimension {got}, reservoir \
+                 expects {want}"
+            ),
+            StreamError::AlreadyLive(u) => {
+                write!(f, "unit {u} is already live in the reservoir")
+            }
+            StreamError::AlreadyPending(u) => write!(
+                f,
+                "unit {u} already has a membership event queued for the \
+                 next window boundary"
+            ),
+            StreamError::NotLive(u) => {
+                write!(f, "unit {u} is not live in the reservoir")
+            }
+            StreamError::WindowOverflow { capacity } => write!(
+                f,
+                "more than {capacity} admits queued in one window \
+                 (reservoir capacity)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for StreamError {}
+
+/// Lifetime counters and per-window diagnostics of a [`StreamOrder`],
+/// surfaced through the daemon's `/metrics` and the `exp stream` CSV.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StreamStats {
+    /// Windows completed (boundaries crossed).
+    pub windows: u64,
+    /// Units admitted across all boundaries.
+    pub admits: u64,
+    /// Units explicitly retired.
+    pub retires: u64,
+    /// Units evicted by FIFO overflow.
+    pub evictions: u64,
+    /// Boundaries whose membership change resized the reservoir and
+    /// forced a balancer rebuild (sharded: a re-link).
+    pub replans: u64,
+    /// Herding bound `max_k ‖Σ_{t<k} (g_t − ḡ)‖∞` of the most recently
+    /// completed window, over the cached gradients in visit order.
+    pub last_window_inf: f32,
+    /// `‖Σ ε_t g_t‖∞` over the *survivors* of the last boundary —
+    /// the signed accumulator after departing units carried their
+    /// contribution out. Unsharded reservoirs only (worker signs never
+    /// leave the shards); 0 for sharded.
+    pub carry_inf: f32,
+}
+
+/// The inner balancer a [`StreamOrder`] delegates slot ordering to.
+enum Backend {
+    /// Single-process pair balancing.
+    Pair(PairBalance),
+    /// Distributed pair balancing over shard transports. `relink`
+    /// rebuilds the coordinator when a boundary resizes the reservoir;
+    /// `None` forbids resizing (fixed daemon-leased links).
+    Sharded {
+        inner: ShardedOrder,
+        relink: Option<StreamRelink>,
+    },
+}
+
+/// Rebuilds a sharded backend at a new reservoir size: called with
+/// `(n, generation)` at every resizing boundary and must return a
+/// coordinator over exactly `n` units. The fresh coordinator starts
+/// from the identity order — a merged order cannot be transplanted
+/// across shard layouts (see the module docs on graceful degradation).
+pub type StreamRelink =
+    Box<dyn FnMut(usize, u64) -> crate::Result<ShardedOrder> + Send>;
+
+/// Streaming pair-balancing policy over a bounded sliding reservoir —
+/// see the module docs for the model. Implements [`OrderPolicy`] so
+/// one *window* runs exactly like one epoch (`epoch_order` →
+/// `observe_block`… → `epoch_end`); queued [`StreamOrder::admit`] /
+/// [`StreamOrder::retire`] events are applied inside `epoch_end`.
+pub struct StreamOrder {
+    d: usize,
+    capacity: usize,
+    backend: Backend,
+    /// The live membership (slot → unit).
+    plan: ReservoirPlan,
+    /// Every boundary's plan, in order — the membership analogue of
+    /// the elastic coordinator's topology log: together with the run
+    /// seed it makes a streamed run replayable.
+    log: Vec<ReservoirPlan>,
+    pending_admits: Vec<u64>,
+    pending_retires: Vec<u64>,
+    /// Last observed gradient of each slot's unit (window-fresh).
+    grads: Vec<Vec<f32>>,
+    /// Signed survivor accumulator `Σ ε_t g_t` (unsharded only).
+    s_live: Vec<f32>,
+    /// The order being followed this window, captured at
+    /// `epoch_order` so `observe_block` can cache rows by slot.
+    order_cache: Vec<usize>,
+    /// Windows completed so far (== the next window's epoch index).
+    windows: usize,
+    stats: StreamStats,
+    /// Gather scratch reused across [`StreamOrder::run_window`] calls.
+    scratch: Vec<f32>,
+}
+
+impl StreamOrder {
+    /// An empty reservoir of `capacity` slots over gradient dimension
+    /// `d`; fill it with [`StreamOrder::admit`] before the first
+    /// window.
+    pub fn new(capacity: usize, d: usize) -> StreamOrder {
+        StreamOrder::with_units(capacity, d, &[])
+    }
+
+    /// The static trainer configuration: the reservoir *is* the
+    /// dataset — units `0..n` fill `n` slots of an `n`-capacity
+    /// reservoir, one window per epoch. With no membership events this
+    /// is bit-for-bit [`PairBalance`] (contract 9's static half).
+    pub fn prefilled(n: usize, d: usize) -> StreamOrder {
+        let units: Vec<u64> = (0..n as u64).collect();
+        StreamOrder::with_units(n.max(1), d, &units)
+    }
+
+    /// A reservoir of `capacity` slots pre-filled with `units`
+    /// (distinct, at most `capacity` of them).
+    pub fn with_units(
+        capacity: usize,
+        d: usize,
+        units: &[u64],
+    ) -> StreamOrder {
+        assert!(capacity >= 1, "reservoir capacity must be positive");
+        assert!(d >= 1, "gradient dimension must be positive");
+        assert!(
+            units.len() <= capacity,
+            "initial fill ({}) exceeds reservoir capacity ({capacity})",
+            units.len()
+        );
+        let plan = ReservoirPlan::initial(units);
+        let n = plan.len();
+        StreamOrder {
+            d,
+            capacity,
+            backend: Backend::Pair(PairBalance::new(n, d)),
+            log: vec![plan.clone()],
+            plan,
+            pending_admits: Vec::new(),
+            pending_retires: Vec::new(),
+            grads: vec![vec![0.0; d]; n],
+            s_live: vec![0.0; d],
+            order_cache: Vec::new(),
+            windows: 0,
+            stats: StreamStats::default(),
+            scratch: Vec::new(),
+        }
+    }
+
+    /// A sharded reservoir delegating to a pre-built coordinator
+    /// (`inner` must span exactly `units.len()` units). `relink`
+    /// rebuilds the coordinator at resizing boundaries; pass `None`
+    /// to forbid resizing — count-neutral boundaries then still work
+    /// over fixed links (the daemon's leased-socket configuration),
+    /// but a resizing boundary panics.
+    pub fn sharded(
+        capacity: usize,
+        d: usize,
+        units: &[u64],
+        inner: ShardedOrder,
+        relink: Option<StreamRelink>,
+    ) -> StreamOrder {
+        let mut s = StreamOrder::with_units(capacity, d, units);
+        s.backend = Backend::Sharded { inner, relink };
+        s
+    }
+
+    /// A sharded reservoir over in-process channel transports with
+    /// `shards` equal-weight workers of queue depth `depth`, re-linked
+    /// automatically at resizing boundaries.
+    pub fn sharded_channel(
+        capacity: usize,
+        d: usize,
+        units: &[u64],
+        shards: usize,
+        depth: usize,
+    ) -> StreamOrder {
+        assert!(shards >= 1, "need at least one shard");
+        let link = move |n: usize, generation: u64| {
+            let topology =
+                Topology::plan(n, generation, &vec![1u64; shards]);
+            let links =
+                transport::spawn_channel_shards(&topology.sizes, d, depth);
+            Ok(ShardedOrder::from_links(
+                n, d, topology, links, "channel", None,
+            ))
+        };
+        let mut relink: StreamRelink = Box::new(link);
+        let inner = relink(units.len(), 0)
+            .expect("channel shard spawn cannot fail");
+        StreamOrder::sharded(capacity, d, units, inner, Some(relink))
+    }
+
+    /// A sharded reservoir over loopback TCP with `shards`
+    /// equal-weight workers, re-linked (fresh loopback pool + fresh
+    /// connections) at resizing boundaries.
+    pub fn sharded_tcp_loopback(
+        capacity: usize,
+        d: usize,
+        units: &[u64],
+        shards: usize,
+    ) -> crate::Result<StreamOrder> {
+        assert!(shards >= 1, "need at least one shard");
+        let link = move |n: usize,
+                         generation: u64|
+              -> crate::Result<ShardedOrder> {
+            let topology =
+                Topology::plan(n, generation, &vec![1u64; shards]);
+            let addr = transport::tcp::spawn_loopback(shards)?;
+            let links = transport::tcp::connect_shards(
+                addr,
+                &topology.sizes,
+                d,
+                generation,
+                transport::tcp::default_read_timeout(),
+            )?;
+            Ok(ShardedOrder::from_links(
+                n, d, topology, links, "tcp", None,
+            ))
+        };
+        let mut relink: StreamRelink = Box::new(link);
+        let inner = relink(units.len(), 0)?;
+        Ok(StreamOrder::sharded(capacity, d, units, inner, Some(relink)))
+    }
+
+    /// Queue `unit` (gradient dimension `d`) for admission at the next
+    /// window boundary. The reservoir is unchanged until then.
+    pub fn admit(&mut self, unit: u64, d: usize) -> Result<(), StreamError> {
+        if d != self.d {
+            return Err(StreamError::DimMismatch {
+                unit,
+                got: d,
+                want: self.d,
+            });
+        }
+        if self.plan.slot_of(unit).is_some() {
+            return Err(StreamError::AlreadyLive(unit));
+        }
+        if self.pending_admits.contains(&unit)
+            || self.pending_retires.contains(&unit)
+        {
+            return Err(StreamError::AlreadyPending(unit));
+        }
+        if self.pending_admits.len() == self.capacity {
+            return Err(StreamError::WindowOverflow {
+                capacity: self.capacity,
+            });
+        }
+        self.pending_admits.push(unit);
+        Ok(())
+    }
+
+    /// Queue `unit` for retirement at the next window boundary.
+    pub fn retire(&mut self, unit: u64) -> Result<(), StreamError> {
+        if self.plan.slot_of(unit).is_none() {
+            return Err(StreamError::NotLive(unit));
+        }
+        if self.pending_retires.contains(&unit) {
+            return Err(StreamError::AlreadyPending(unit));
+        }
+        self.pending_retires.push(unit);
+        Ok(())
+    }
+
+    /// The live unit ids, by slot.
+    pub fn live_units(&self) -> &[u64] {
+        &self.plan.units
+    }
+
+    /// Number of live units (the inner balancer's `n`).
+    pub fn len(&self) -> usize {
+        self.plan.len()
+    }
+
+    /// Whether the reservoir is empty.
+    pub fn is_empty(&self) -> bool {
+        self.plan.is_empty()
+    }
+
+    /// The reservoir's slot capacity.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Windows completed so far — also the epoch index of the *next*
+    /// window.
+    pub fn windows(&self) -> usize {
+        self.windows
+    }
+
+    /// Lifetime counters and last-window diagnostics.
+    pub fn stats(&self) -> StreamStats {
+        self.stats
+    }
+
+    /// The current membership plan.
+    pub fn current_plan(&self) -> &ReservoirPlan {
+        &self.plan
+    }
+
+    /// Every boundary's membership plan, oldest first (entry 0 is the
+    /// initial fill) — with the run seed this replays the whole
+    /// streamed run (contract 9).
+    pub fn plan_log(&self) -> &[ReservoirPlan] {
+        &self.log
+    }
+
+    /// Run one complete window: gather each live unit's gradient
+    /// through `grads(unit, out)` in visit order, stream the blocks
+    /// through the balancer, and cross the boundary (applying queued
+    /// membership events). Returns the ordering-overhead seconds, like
+    /// [`stream_static_epoch`](super::stream_static_epoch) — the
+    /// gather itself is untimed.
+    pub fn run_window(
+        &mut self,
+        grads: &mut dyn FnMut(u64, &mut [f32]),
+        block: usize,
+    ) -> f64 {
+        assert!(block > 0, "block must be positive");
+        let n = self.plan.len();
+        let d = self.d;
+        let epoch = self.windows;
+        let order: Vec<usize> = self.epoch_order(epoch).to_vec();
+        let mut flat = std::mem::take(&mut self.scratch);
+        flat.clear();
+        flat.resize(n * d, 0.0);
+        for (pos, &slot) in order.iter().enumerate() {
+            let unit = self.plan.units[slot];
+            grads(unit, &mut flat[pos * d..(pos + 1) * d]);
+        }
+        let sw = Stopwatch::start();
+        let mut pos = 0;
+        while pos < n {
+            let rows = block.min(n - pos);
+            let b = GradBlock::new(&flat[pos * d..(pos + rows) * d], d);
+            self.observe_block(pos..pos + rows, &b);
+            pos += rows;
+        }
+        self.epoch_end();
+        let secs = sw.secs();
+        self.scratch = flat;
+        secs
+    }
+
+    /// Run one window driven by a [`DriftPlan`]: queue the plan's
+    /// events for this window index, then [`StreamOrder::run_window`]
+    /// with the plan's drifting gradient generator. `next_unit` is the
+    /// monotone fresh-unit counter, advanced by the admits.
+    pub fn drive_window(
+        &mut self,
+        drift: &DriftPlan,
+        next_unit: &mut u64,
+        block: usize,
+    ) -> f64 {
+        let live = self.plan.units.clone();
+        let ev = drift.events(self.windows, &live, next_unit);
+        for &u in &ev.admits {
+            self.admit(u, self.d)
+                .expect("drift plan admitted an invalid unit");
+        }
+        for &u in &ev.retires {
+            self.retire(u).expect("drift plan retired an invalid unit");
+        }
+        let window = self.windows;
+        self.run_window(&mut |unit, out| drift.grad(unit, window, out), block)
+    }
+
+    /// Cross the window boundary: apply queued events, carry departing
+    /// contributions out of the survivor accumulator, relabel the
+    /// per-slot caches, and rebuild the balancer if the count changed.
+    /// `signs_by_slot` are the completed window's per-slot signs
+    /// (zeros when unknown).
+    fn apply_boundary(&mut self, signs_by_slot: &[i8]) {
+        let admits = std::mem::take(&mut self.pending_admits);
+        let retires = std::mem::take(&mut self.pending_retires);
+        let step = self.plan.advance(&admits, &retires, self.capacity);
+        self.stats.admits += step.plan.admitted.len() as u64;
+        self.stats.retires += step.plan.retired.len() as u64;
+        self.stats.evictions += step.plan.evicted.len() as u64;
+        if step.changed {
+            self.carry_out_departed(&step, signs_by_slot);
+            self.remap_caches(&step);
+            if step.resized {
+                self.stats.replans += 1;
+                self.rebuild_backend(&step);
+            }
+        }
+        self.plan = step.plan;
+        self.log.push(self.plan.clone());
+        self.stats.carry_inf = norm_inf(&self.s_live);
+    }
+
+    /// Subtract every departing unit's signed contribution from the
+    /// survivor accumulator (unsharded only — worker signs never leave
+    /// the shards).
+    fn carry_out_departed(&mut self, step: &ReservoirStep, signs: &[i8]) {
+        if !matches!(self.backend, Backend::Pair(_)) {
+            return;
+        }
+        for unit in step.plan.retired.iter().chain(&step.plan.evicted) {
+            let Some(old_slot) = self.plan.slot_of(*unit) else {
+                continue;
+            };
+            let sign = f32::from(signs.get(old_slot).copied().unwrap_or(0));
+            if sign == 0.0 {
+                continue;
+            }
+            for (acc, &g) in
+                self.s_live.iter_mut().zip(&self.grads[old_slot])
+            {
+                *acc -= sign * g;
+            }
+        }
+    }
+
+    /// Relabel the per-slot gradient cache to the new slots; admitted
+    /// units start cold (zero cache).
+    fn remap_caches(&mut self, step: &ReservoirStep) {
+        let new_n = step.plan.len();
+        let mut grads = vec![vec![0.0f32; self.d]; new_n];
+        for (old_slot, &m) in step.slot_map.iter().enumerate() {
+            let Some(new_slot) = m else { continue };
+            // A back-filled slot maps Some but carries a *new* unit —
+            // only relabel the cache when the unit actually survived.
+            if step.plan.units[new_slot] == self.plan.units[old_slot] {
+                std::mem::swap(
+                    &mut grads[new_slot],
+                    &mut self.grads[old_slot],
+                );
+            }
+        }
+        self.grads = grads;
+    }
+
+    /// Rebuild the balancer over the resized slot range. Unsharded:
+    /// a fresh `PairBalance` (same kernel tier) re-seeded with the
+    /// surviving order, appended slots at the back. Sharded: a fresh
+    /// re-link at the new size — the order resets to identity
+    /// (documented graceful degradation).
+    fn rebuild_backend(&mut self, step: &ReservoirStep) {
+        let new_n = step.plan.len();
+        match &mut self.backend {
+            Backend::Pair(p) => {
+                let mut order = Vec::with_capacity(new_n);
+                for &old_slot in p.epoch_order(0) {
+                    if let Some(new_slot) = step.slot_map[old_slot] {
+                        order.push(new_slot);
+                    }
+                }
+                order.extend_from_slice(&step.appended);
+                let mut fresh =
+                    PairBalance::with_kernel(new_n, self.d, p.kernel());
+                let ok = fresh.restore_order(&order);
+                assert!(ok, "remapped survivor order must be a permutation");
+                *p = fresh;
+            }
+            Backend::Sharded { inner, relink } => {
+                let relink = relink.as_mut().unwrap_or_else(|| {
+                    panic!(
+                        "reservoir resized to {new_n} units over fixed \
+                         shard links (admit/retire counts must match \
+                         per window when no relink is configured)"
+                    )
+                });
+                *inner = relink(new_n, step.plan.generation)
+                    .expect("stream reservoir re-link failed");
+            }
+        }
+    }
+}
+
+impl OrderPolicy for StreamOrder {
+    fn name(&self) -> &'static str {
+        match self.backend {
+            Backend::Pair(_) => "stream",
+            Backend::Sharded { .. } => "stream-cd",
+        }
+    }
+
+    fn epoch_order(&mut self, epoch: usize) -> &[usize] {
+        let inner: &mut dyn OrderPolicy = match &mut self.backend {
+            Backend::Pair(p) => p,
+            Backend::Sharded { inner, .. } => inner,
+        };
+        let order = inner.epoch_order(epoch);
+        self.order_cache.clear();
+        self.order_cache.extend_from_slice(order);
+        &self.order_cache
+    }
+
+    fn observe_block(&mut self, range: Range<usize>, block: &GradBlock) {
+        assert_eq!(
+            self.order_cache.len(),
+            self.plan.len(),
+            "observe_block before epoch_order on a StreamOrder window"
+        );
+        for (i, row) in block.iter_rows().enumerate() {
+            let slot = self.order_cache[range.start + i];
+            self.grads[slot].copy_from_slice(row);
+        }
+        match &mut self.backend {
+            Backend::Pair(p) => p.observe_block(range, block),
+            Backend::Sharded { inner, .. } => {
+                inner.observe_block(range, block)
+            }
+        }
+    }
+
+    fn epoch_end(&mut self) {
+        let n = self.plan.len();
+        let have_order = self.order_cache.len() == n && n > 0;
+        match &mut self.backend {
+            Backend::Pair(p) => p.epoch_end(),
+            Backend::Sharded { inner, .. } => inner.epoch_end(),
+        }
+        self.windows += 1;
+        self.stats.windows += 1;
+        let mut signs_by_slot = vec![0i8; n];
+        if have_order {
+            if let Backend::Pair(p) = &self.backend {
+                let signs = p.last_epoch_signs();
+                // Recompute the survivor accumulator Σ ε_t g_t for the
+                // completed window in visit order.
+                self.s_live.iter_mut().for_each(|v| *v = 0.0);
+                for (pos, &slot) in self.order_cache.iter().enumerate() {
+                    signs_by_slot[slot] = signs[pos];
+                    let sign = f32::from(signs[pos]);
+                    if sign == 0.0 {
+                        continue;
+                    }
+                    for (acc, &g) in
+                        self.s_live.iter_mut().zip(&self.grads[slot])
+                    {
+                        *acc += sign * g;
+                    }
+                }
+            }
+            let (inf, _two) =
+                herding_bound(&self.grads, &self.order_cache);
+            self.stats.last_window_inf = inf;
+        }
+        self.apply_boundary(&signs_by_slot);
+        self.order_cache.clear();
+    }
+
+    fn state_bytes(&self) -> usize {
+        let inner = match &self.backend {
+            Backend::Pair(p) => OrderPolicy::state_bytes(p),
+            Backend::Sharded { inner, .. } => inner.state_bytes(),
+        };
+        // Membership (unit + seq per slot) + per-slot gradient cache +
+        // the survivor accumulator.
+        inner
+            + self.plan.len() * 2 * std::mem::size_of::<u64>()
+            + self.plan.len() * self.d * std::mem::size_of::<f32>()
+            + self.d * std::mem::size_of::<f32>()
+    }
+
+    fn wants_grads(&self) -> bool {
+        true
+    }
+
+    fn transport_stats(&self) -> Option<transport::TransportStats> {
+        match &self.backend {
+            Backend::Pair(_) => None,
+            Backend::Sharded { inner, .. } => inner.transport_stats(),
+        }
+    }
+
+    fn topology_log(&self) -> Option<&[Topology]> {
+        match &self.backend {
+            Backend::Pair(_) => None,
+            Backend::Sharded { inner, .. } => inner.topology_log(),
+        }
+    }
+
+    fn save_state(&mut self) -> Option<Vec<u8>> {
+        // Checkpointing covers the static trainer configuration only:
+        // a reservoir with live membership history cannot be rebuilt
+        // from config alone, so it refuses rather than lie.
+        if self.plan.generation > 0
+            || !self.pending_admits.is_empty()
+            || !self.pending_retires.is_empty()
+        {
+            return None;
+        }
+        match &mut self.backend {
+            Backend::Pair(p) => p.save_state(),
+            Backend::Sharded { inner, .. } => inner.save_state(),
+        }
+    }
+
+    fn restore_state(&mut self, bytes: &[u8]) -> Result<(), String> {
+        if self.plan.generation > 0 {
+            return Err(
+                "streamed reservoir with membership events is not \
+                 checkpointable"
+                    .to_string(),
+            );
+        }
+        match &mut self.backend {
+            Backend::Pair(p) => p.restore_state(bytes),
+            Backend::Sharded { inner, .. } => inner.restore_state(bytes),
+        }
+    }
+
+    fn restore_order(&mut self, order: &[usize]) -> bool {
+        self.order_cache.clear();
+        match &mut self.backend {
+            Backend::Pair(p) => p.restore_order(order),
+            Backend::Sharded { inner, .. } => inner.restore_order(order),
+        }
+    }
+}
+
+/// The membership events a [`DriftPlan`] emits for one window.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct StreamEvents {
+    /// Fresh units to admit (monotone ids from the plan's counter).
+    pub admits: Vec<u64>,
+    /// Live units to retire.
+    pub retires: Vec<u64>,
+}
+
+/// Seeded drift injection for streaming runs — the membership-churn
+/// analogue of the fault-injection transport: distribution shift,
+/// burst admits, and mass retirements, all pure functions of
+/// `(seed, window, live set)` so a frozen schedule replays bit-for-bit
+/// (contract 9) and every degradation scenario is reproducible.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DriftPlan {
+    /// Seed for retirement sampling and gradient generation.
+    pub seed: u64,
+    /// Fresh units admitted every window.
+    pub admit_rate: usize,
+    /// Live units retired (sampled without replacement) every window.
+    pub retire_rate: usize,
+    /// Every `burst_every`-th window additionally admits
+    /// `burst_size` units (0 disables bursts).
+    pub burst_every: usize,
+    /// Extra admits on a burst window.
+    pub burst_size: usize,
+    /// Every `mass_retire_every`-th window (>0) retires half the live
+    /// set (0 disables mass retirements).
+    pub mass_retire_every: usize,
+    /// Distribution shift: each unit's gradient drifts by
+    /// `shift_per_window × window` along a fixed seeded direction.
+    pub shift_per_window: f32,
+}
+
+impl DriftPlan {
+    /// Steady churn: `admit_rate` fresh units per window, FIFO
+    /// eviction does the retiring. Keeps the live count constant once
+    /// the reservoir is full — the daemon's count-neutral schedule.
+    pub fn steady(seed: u64, admit_rate: usize) -> DriftPlan {
+        DriftPlan {
+            seed,
+            admit_rate,
+            retire_rate: 0,
+            burst_every: 0,
+            burst_size: 0,
+            mass_retire_every: 0,
+            shift_per_window: 0.0,
+        }
+    }
+
+    /// Steady churn with explicit random retirements.
+    pub fn churn(
+        seed: u64,
+        admit_rate: usize,
+        retire_rate: usize,
+    ) -> DriftPlan {
+        DriftPlan {
+            retire_rate,
+            ..DriftPlan::steady(seed, admit_rate)
+        }
+    }
+
+    /// Steady churn with periodic admit bursts.
+    pub fn bursty(
+        seed: u64,
+        admit_rate: usize,
+        burst_every: usize,
+        burst_size: usize,
+    ) -> DriftPlan {
+        DriftPlan {
+            burst_every,
+            burst_size,
+            ..DriftPlan::steady(seed, admit_rate)
+        }
+    }
+
+    /// The membership events for window `window` given the live set.
+    /// `next_unit` is the monotone fresh-unit counter (advanced by the
+    /// admits). Pure in `(self, window, live, *next_unit)`.
+    pub fn events(
+        &self,
+        window: usize,
+        live: &[u64],
+        next_unit: &mut u64,
+    ) -> StreamEvents {
+        let mut admits = Vec::new();
+        let mut n_admit = self.admit_rate;
+        if self.burst_every > 0
+            && window % self.burst_every == self.burst_every - 1
+        {
+            n_admit += self.burst_size;
+        }
+        for _ in 0..n_admit {
+            admits.push(*next_unit);
+            *next_unit += 1;
+        }
+        let mut retires = Vec::new();
+        if self.retire_rate > 0 && !live.is_empty() {
+            let mut rng = Rng::new(
+                self.seed
+                    ^ (window as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                    ^ 0xD51F_7A11,
+            );
+            let mut pool: Vec<u64> = live.to_vec();
+            for _ in 0..self.retire_rate.min(pool.len()) {
+                let i = rng.gen_index(pool.len());
+                retires.push(pool.swap_remove(i));
+            }
+        }
+        if self.mass_retire_every > 0
+            && window > 0
+            && window % self.mass_retire_every == 0
+        {
+            // Mass retirement: drop the first half of the live set
+            // (slot order) that isn't already leaving.
+            let target = live.len() / 2;
+            for &u in live {
+                if retires.len() >= target {
+                    break;
+                }
+                if !retires.contains(&u) {
+                    retires.push(u);
+                }
+            }
+        }
+        StreamEvents { admits, retires }
+    }
+
+    /// Fill `out` with `unit`'s gradient at window `window`: a seeded
+    /// per-unit base in `[-1, 1)` plus `shift_per_window × window`
+    /// along a fixed seeded drift direction. Pure in its inputs.
+    pub fn grad(&self, unit: u64, window: usize, out: &mut [f32]) {
+        let mut rng = Rng::new(
+            self.seed
+                ^ unit.wrapping_mul(0xA076_1D64_78BD_642F)
+                ^ 0x57AB_11E5,
+        );
+        for v in out.iter_mut() {
+            *v = rng.f32() * 2.0 - 1.0;
+        }
+        if self.shift_per_window != 0.0 && window > 0 {
+            let mut dir = Rng::new(self.seed ^ 0xD21F_0D1F);
+            let scale = self.shift_per_window * window as f32;
+            for v in out.iter_mut() {
+                *v += scale * (dir.f32() * 2.0 - 1.0);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ordering::stream_static_epoch;
+    use crate::util::prop::{assert_permutation, gen};
+
+    /// Drive `s` through one window of `vs` (slot-indexed) and return
+    /// the visit order it used.
+    fn feed_window(
+        s: &mut StreamOrder,
+        vs: &[Vec<f32>],
+        block: usize,
+    ) -> Vec<usize> {
+        let epoch = s.windows();
+        let order = s.epoch_order(epoch).to_vec();
+        let d = vs[0].len();
+        let mut flat = Vec::new();
+        for &slot in &order {
+            flat.extend_from_slice(&vs[slot]);
+        }
+        let mut pos = 0;
+        let n = order.len();
+        while pos < n {
+            let rows = block.min(n - pos);
+            let b = GradBlock::new(&flat[pos * d..(pos + rows) * d], d);
+            s.observe_block(pos..pos + rows, &b);
+            pos += rows;
+        }
+        s.epoch_end();
+        order
+    }
+
+    #[test]
+    fn static_schedule_is_pair_balance_bit_for_bit() {
+        // Contract 9, static half: no membership events → the inner
+        // balancer is never touched between windows, so every window's
+        // order matches PairBalance exactly.
+        let mut rng = Rng::new(901);
+        let n = 64;
+        let d = 8;
+        let vs = gen::vec_set(&mut rng, n, d);
+        let mut pair = PairBalance::new(n, d);
+        let mut stream = StreamOrder::prefilled(n, d);
+        let mut flat = Vec::new();
+        for epoch in 0..6 {
+            let want =
+                { pair.epoch_order(epoch).to_vec() };
+            let got = feed_window(&mut stream, &vs, 16);
+            assert_eq!(got, want, "window {epoch} diverged");
+            stream_static_epoch(&mut pair, epoch, &vs, &mut flat, 16);
+        }
+        assert_eq!(stream.stats().windows, 6);
+        assert_eq!(stream.stats().replans, 0);
+        assert_eq!(stream.plan_log().len(), 7);
+    }
+
+    #[test]
+    fn count_neutral_churn_keeps_the_balancer_untouched() {
+        // Retire one + admit one per boundary: the admit back-fills
+        // the freed slot, the count never changes, and the balancer is
+        // never rebuilt — the orders stay identical to a pure
+        // PairBalance run over the same slot gradients.
+        let mut rng = Rng::new(902);
+        let n = 32;
+        let d = 4;
+        let vs = gen::vec_set(&mut rng, n, d);
+        let mut pair = PairBalance::new(n, d);
+        let mut stream = StreamOrder::prefilled(n, d);
+        let mut next_unit = n as u64;
+        let mut flat = Vec::new();
+        for epoch in 0..5 {
+            let oldest = stream.live_units()[stream
+                .current_plan()
+                .admit_seq
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, &s)| s)
+                .unwrap()
+                .0];
+            stream.retire(oldest).unwrap();
+            stream.admit(next_unit, d).unwrap();
+            next_unit += 1;
+            let got = feed_window(&mut stream, &vs, 8);
+            let want = pair.epoch_order(epoch).to_vec();
+            assert_eq!(got, want, "window {epoch} diverged under churn");
+            stream_static_epoch(&mut pair, epoch, &vs, &mut flat, 8);
+        }
+        assert_eq!(stream.len(), n);
+        assert_eq!(stream.stats().replans, 0);
+        assert_eq!(stream.stats().retires, 5);
+        assert_eq!(stream.stats().admits, 5);
+    }
+
+    #[test]
+    fn admit_retire_lifecycle_and_errors() {
+        let mut s = StreamOrder::with_units(4, 2, &[10, 11, 12]);
+        assert_eq!(
+            s.admit(10, 2),
+            Err(StreamError::AlreadyLive(10))
+        );
+        assert_eq!(
+            s.admit(20, 3),
+            Err(StreamError::DimMismatch { unit: 20, got: 3, want: 2 })
+        );
+        assert_eq!(s.retire(99), Err(StreamError::NotLive(99)));
+        s.admit(20, 2).unwrap();
+        assert_eq!(s.admit(20, 2), Err(StreamError::AlreadyPending(20)));
+        assert_eq!(s.retire(20), Err(StreamError::NotLive(20)));
+        s.retire(11).unwrap();
+        assert_eq!(s.retire(11), Err(StreamError::AlreadyPending(11)));
+        assert_eq!(
+            s.admit(11, 2),
+            Err(StreamError::AlreadyPending(11))
+        );
+        // Events apply only at the boundary.
+        assert_eq!(s.live_units(), &[10, 11, 12]);
+        let vs = vec![vec![1.0, 0.0]; 3];
+        feed_window(&mut s, &vs, 2);
+        // 11 retired; 20 back-filled its slot; count neutral.
+        assert_eq!(s.live_units(), &[10, 20, 12]);
+        assert_eq!(s.stats().replans, 0);
+    }
+
+    #[test]
+    fn admit_queue_is_bounded_by_capacity() {
+        let mut s = StreamOrder::new(2, 1);
+        s.admit(0, 1).unwrap();
+        s.admit(1, 1).unwrap();
+        assert_eq!(
+            s.admit(2, 1),
+            Err(StreamError::WindowOverflow { capacity: 2 })
+        );
+    }
+
+    #[test]
+    fn fifo_eviction_when_full() {
+        let mut s = StreamOrder::with_units(3, 1, &[5, 6, 7]);
+        s.admit(8, 1).unwrap();
+        let vs = vec![vec![1.0]; 3];
+        feed_window(&mut s, &vs, 1);
+        // 5 is the oldest admission → evicted; 8 back-fills its slot.
+        assert_eq!(s.live_units(), &[8, 6, 7]);
+        assert_eq!(s.stats().evictions, 1);
+        assert_eq!(s.current_plan().evicted, vec![5]);
+    }
+
+    #[test]
+    fn resize_remaps_the_surviving_order() {
+        // Shrink by one: the balancer rebuilds over the compacted
+        // slots, re-seeded with the survivors in their old-order
+        // positions — and every subsequent window stays a valid
+        // permutation.
+        let mut rng = Rng::new(903);
+        let n = 9;
+        let d = 3;
+        let vs = gen::vec_set(&mut rng, n, d);
+        // Reference: the order a bare PairBalance would plan for
+        // window 2 after seeing the same two windows of gradients.
+        let mut pair = PairBalance::new(n, d);
+        let mut flat = Vec::new();
+        stream_static_epoch(&mut pair, 0, &vs, &mut flat, 4);
+        stream_static_epoch(&mut pair, 1, &vs, &mut flat, 4);
+        let over_old = pair.epoch_order(2).to_vec();
+        let mut s = StreamOrder::prefilled(n, d);
+        feed_window(&mut s, &vs, 4);
+        let retired_slot = 4usize; // prefilled: unit 4 lives in slot 4
+        s.retire(4).unwrap();
+        feed_window(&mut s, &vs, 4);
+        assert_eq!(s.len(), n - 1);
+        assert_eq!(s.stats().replans, 1);
+        let next = s.epoch_order(2).to_vec();
+        assert_eq!(next.len(), n - 1);
+        assert_permutation(&next).unwrap();
+        // The survivors' relative order is preserved: dropping the
+        // retired slot from the reference plan and compacting slot
+        // labels must give exactly the new order.
+        let want: Vec<usize> = over_old
+            .iter()
+            .filter(|&&slot| slot != retired_slot)
+            .map(|&slot| {
+                if slot > retired_slot { slot - 1 } else { slot }
+            })
+            .collect();
+        assert_eq!(next, want);
+        let vs2 = gen::vec_set(&mut rng, n - 1, d);
+        feed_window(&mut s, &vs2, 4);
+        let after = s.epoch_order(3).to_vec();
+        assert_eq!(after.len(), n - 1);
+        assert_permutation(&after).unwrap();
+    }
+
+    #[test]
+    fn carry_out_subtracts_departed_contributions() {
+        // After a boundary that retires unit u, the survivor
+        // accumulator equals Σ ε_t g_t over the window minus u's
+        // signed contribution — computed independently here.
+        let mut rng = Rng::new(904);
+        let n = 8;
+        let d = 4;
+        let vs = gen::vec_set(&mut rng, n, d);
+        let mut s = StreamOrder::prefilled(n, d);
+        let order = {
+            let o = s.epoch_order(0).to_vec();
+            let d_ = d;
+            let mut flat = Vec::new();
+            for &slot in &o {
+                flat.extend_from_slice(&vs[slot]);
+            }
+            s.retire(3).unwrap();
+            let b = GradBlock::new(&flat, d_);
+            s.observe_block(0..n, &b);
+            s.epoch_end();
+            o
+        };
+        // Reference: the same window through a bare PairBalance gives
+        // the signs; sum survivors only.
+        let mut pair = PairBalance::new(n, d);
+        let mut flat = Vec::new();
+        stream_static_epoch(&mut pair, 0, &vs, &mut flat, n);
+        let signs = pair.last_epoch_signs();
+        let mut want = vec![0.0f32; d];
+        for (pos, &slot) in order.iter().enumerate() {
+            if slot == 3 {
+                continue; // unit 3 == slot 3 in a prefilled reservoir
+            }
+            for (w, &g) in want.iter_mut().zip(&vs[slot]) {
+                *w += f32::from(signs[pos]) * g;
+            }
+        }
+        assert!(
+            (s.stats().carry_inf - norm_inf(&want)).abs() < 1e-6,
+            "carry_inf {} != reference {}",
+            s.stats().carry_inf,
+            norm_inf(&want)
+        );
+    }
+
+    #[test]
+    fn drift_plan_is_pure_and_replays() {
+        let plan = DriftPlan {
+            seed: 77,
+            admit_rate: 2,
+            retire_rate: 1,
+            burst_every: 3,
+            burst_size: 4,
+            mass_retire_every: 5,
+            shift_per_window: 0.1,
+        };
+        let live: Vec<u64> = (0..10).collect();
+        let mut c1 = 10u64;
+        let mut c2 = 10u64;
+        let e1 = plan.events(4, &live, &mut c1);
+        let e2 = plan.events(4, &live, &mut c2);
+        assert_eq!(e1, e2);
+        assert_eq!(c1, c2);
+        let mut g1 = vec![0.0f32; 6];
+        let mut g2 = vec![0.0f32; 6];
+        plan.grad(3, 7, &mut g1);
+        plan.grad(3, 7, &mut g2);
+        assert_eq!(g1, g2);
+        let mut g3 = vec![0.0f32; 6];
+        plan.grad(3, 8, &mut g3);
+        assert_ne!(g1, g3, "shifted windows must drift the gradient");
+    }
+
+    #[test]
+    fn driven_windows_replay_bit_for_bit() {
+        // Contract 9, frozen-schedule half (unsharded): two reservoirs
+        // driven by the same DriftPlan produce identical orders,
+        // plans, and stats at every window.
+        let drift = DriftPlan {
+            seed: 41,
+            admit_rate: 3,
+            retire_rate: 2,
+            burst_every: 4,
+            burst_size: 5,
+            mass_retire_every: 6,
+            shift_per_window: 0.05,
+        };
+        let units: Vec<u64> = (0..20).collect();
+        let mut a = StreamOrder::with_units(24, 6, &units);
+        let mut b = StreamOrder::with_units(24, 6, &units);
+        let mut ca = units.len() as u64;
+        let mut cb = units.len() as u64;
+        for w in 0..12 {
+            a.drive_window(&drift, &mut ca, 7);
+            b.drive_window(&drift, &mut cb, 7);
+            assert_eq!(
+                a.live_units(),
+                b.live_units(),
+                "window {w} membership diverged"
+            );
+            assert_eq!(a.stats(), b.stats(), "window {w} stats diverged");
+        }
+        let wa = a.windows();
+        assert_eq!(a.epoch_order(wa), b.epoch_order(wa));
+        assert!(a.stats().last_window_inf.is_finite());
+        assert!(a.stats().carry_inf.is_finite());
+        assert!(a.stats().evictions > 0 || a.stats().retires > 0);
+    }
+
+    #[test]
+    fn burst_admits_and_mass_retirements_degrade_gracefully() {
+        // Heavy churn: every window stays a valid permutation of the
+        // live count and every reported bound stays finite.
+        let drift = DriftPlan {
+            seed: 5150,
+            admit_rate: 1,
+            retire_rate: 0,
+            burst_every: 3,
+            burst_size: 9,
+            mass_retire_every: 4,
+            shift_per_window: 0.5,
+        };
+        let units: Vec<u64> = (0..8).collect();
+        let mut s = StreamOrder::with_units(16, 4, &units);
+        let mut next = units.len() as u64;
+        for w in 0..16 {
+            s.drive_window(&drift, &mut next, 4);
+            let n = s.len();
+            assert!(n >= 1, "window {w} emptied the reservoir");
+            let win = s.windows();
+            let order = s.epoch_order(win).to_vec();
+            assert_eq!(order.len(), n);
+            assert_permutation(&order).unwrap();
+            assert!(s.stats().last_window_inf.is_finite());
+            assert!(s.stats().carry_inf.is_finite());
+        }
+        assert!(s.stats().evictions > 0, "bursts must overflow FIFO");
+        assert!(s.stats().retires > 0, "mass retirements must fire");
+        assert!(s.stats().replans > 0, "churn must resize at least once");
+        // The plan log replays the whole membership history.
+        assert_eq!(s.plan_log().len(), 17);
+        assert_eq!(
+            s.plan_log().last().unwrap().units,
+            s.live_units()
+        );
+    }
+
+    #[test]
+    fn sharded_channel_matches_unsharded_on_count_neutral_churn() {
+        // Count-neutral churn never touches the inner coordinators, so
+        // the sharded reservoir over channel transports must follow
+        // the same orders as CD-GraB would — and admits/evictions work
+        // over the fixed links without a re-link.
+        let drift = DriftPlan::steady(11, 2);
+        let units: Vec<u64> = (0..24).collect();
+        let mut s =
+            StreamOrder::sharded_channel(24, 4, &units, 3, 2);
+        let mut next = units.len() as u64;
+        for _ in 0..4 {
+            s.drive_window(&drift, &mut next, 6);
+            assert_eq!(s.len(), 24);
+        }
+        assert_eq!(s.stats().replans, 0);
+        assert_eq!(s.stats().evictions, 8);
+        assert_eq!(s.name(), "stream-cd");
+        assert!(s.transport_stats().is_some());
+        let w = s.windows();
+        let order = s.epoch_order(w).to_vec();
+        assert_eq!(order.len(), 24);
+        assert_permutation(&order).unwrap();
+    }
+
+    #[test]
+    fn sharded_resize_relinks_and_recovers() {
+        let units: Vec<u64> = (0..12).collect();
+        let mut s =
+            StreamOrder::sharded_channel(16, 3, &units, 2, 2);
+        let vs: Vec<Vec<f32>> = (0..12)
+            .map(|i| vec![i as f32, 1.0, -1.0])
+            .collect();
+        feed_window(&mut s, &vs, 4);
+        s.admit(100, 3).unwrap();
+        s.admit(101, 3).unwrap();
+        feed_window(&mut s, &vs, 4);
+        assert_eq!(s.len(), 14, "admits must grow the reservoir");
+        assert_eq!(s.stats().replans, 1);
+        let vs2: Vec<Vec<f32>> =
+            (0..14).map(|i| vec![-(i as f32), 0.5, 2.0]).collect();
+        feed_window(&mut s, &vs2, 4);
+        let w = s.windows();
+        let order = s.epoch_order(w).to_vec();
+        assert_eq!(order.len(), 14);
+        assert_permutation(&order).unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "over fixed shard links")]
+    fn sharded_resize_without_relink_panics() {
+        let units: Vec<u64> = (0..6).collect();
+        let topology = Topology::plan(6, 0, &[1, 1]);
+        let links =
+            transport::spawn_channel_shards(&topology.sizes, 2, 2);
+        let inner = ShardedOrder::from_links(
+            6, 2, topology, links, "channel", None,
+        );
+        let mut s = StreamOrder::sharded(8, 2, &units, inner, None);
+        s.retire(0).unwrap();
+        let vs = vec![vec![1.0, -1.0]; 6];
+        feed_window(&mut s, &vs, 2);
+    }
+
+    #[test]
+    fn prefilled_static_save_restore_roundtrips() {
+        // Contract 8 still holds for the trainer's static stream
+        // configuration; a reservoir with membership history refuses.
+        let mut rng = Rng::new(905);
+        let vs = gen::vec_set(&mut rng, 10, 3);
+        let mut s = StreamOrder::prefilled(10, 3);
+        feed_window(&mut s, &vs, 5);
+        let state = s.save_state().expect("static stream must checkpoint");
+        let mut fresh = StreamOrder::prefilled(10, 3);
+        fresh.restore_state(&state).unwrap();
+        assert_eq!(
+            s.epoch_order(1).to_vec(),
+            fresh.epoch_order(1).to_vec()
+        );
+        let mut churned = StreamOrder::prefilled(10, 3);
+        churned.retire(0).unwrap();
+        feed_window(&mut churned, &vs, 5);
+        assert!(
+            churned.save_state().is_none(),
+            "membership history must refuse to checkpoint"
+        );
+    }
+}

@@ -361,6 +361,226 @@ fn gcd(a: u64, b: u64) -> u64 {
     }
 }
 
+/// One window's frozen reservoir membership — the streaming analogue
+/// of [`Topology`]. Where `Topology` re-plans the unit *ranges* a fixed
+/// set of `n` units is split into at each epoch boundary, a
+/// `ReservoirPlan` re-plans the unit *set* itself at each window
+/// boundary: which external units are live, which slot each occupies,
+/// and which were admitted, retired, or evicted by the boundary's
+/// events. [`crate::ordering::StreamOrder`] records one plan per
+/// window, so a streamed run replays bit-for-bit from its logged event
+/// schedule — the same discipline that makes elastic topologies
+/// replayable (contract 6), extended to membership (contract 9,
+/// `docs/determinism.md`).
+///
+/// Slot discipline (what keeps balancer state meaningful across a
+/// boundary): surviving units **keep their slot**, admitted units fill
+/// the lowest freed slots first (inheriting the departed unit's
+/// position in the balancer's next order), overflow admits append new
+/// slots, and only a net shrink compacts slots downward (ascending, so
+/// survivor order is preserved). Eviction is FIFO by admission
+/// sequence number: when admits would push the live count past
+/// `capacity`, the oldest-admitted survivors leave first.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ReservoirPlan {
+    /// Monotone membership-change counter: 0 for the initial fill,
+    /// bumped at every boundary whose events changed the live set.
+    pub generation: u64,
+    /// External unit id living in each slot (`units[slot]`); slots are
+    /// the reservoir's contiguous balancing indices `0..len`.
+    pub units: Vec<u64>,
+    /// Admission sequence number of each slot's unit (FIFO eviction
+    /// key; unique per admission, never reused).
+    pub admit_seq: Vec<u64>,
+    /// Next admission sequence number to hand out.
+    pub next_seq: u64,
+    /// Units admitted by the boundary that produced this plan.
+    pub admitted: Vec<u64>,
+    /// Units retired (explicitly removed) by that boundary.
+    pub retired: Vec<u64>,
+    /// Units evicted (FIFO overflow) by that boundary.
+    pub evicted: Vec<u64>,
+}
+
+/// The result of advancing a [`ReservoirPlan`] across one window
+/// boundary: the next plan plus the slot relabeling the balancer needs
+/// to carry its state (next order, cached gradients, signs) across the
+/// membership change.
+#[derive(Debug)]
+pub struct ReservoirStep {
+    /// The next window's plan.
+    pub plan: ReservoirPlan,
+    /// `slot_map[old_slot]` is the unit's new slot, or `None` when the
+    /// old slot's unit departed and no admit back-filled the slot.
+    /// Identity (modulo `None`s) unless the boundary shrank the
+    /// reservoir.
+    pub slot_map: Vec<Option<usize>>,
+    /// New slots beyond the old reservoir length, occupied by overflow
+    /// admits (ascending). These units have no position in the old
+    /// order and are appended at the back of the next window's order.
+    pub appended: Vec<usize>,
+    /// Whether the live set changed at all (admit, retire, or evict).
+    pub changed: bool,
+    /// Whether the live *count* changed — a resized reservoir forces
+    /// the balancer to rebuild over the new slot range.
+    pub resized: bool,
+}
+
+impl ReservoirPlan {
+    /// The initial fill: `units` occupy slots `0..len` with admission
+    /// sequence numbers `0..len`. Unit ids must be distinct.
+    pub fn initial(units: &[u64]) -> ReservoirPlan {
+        for (i, u) in units.iter().enumerate() {
+            assert!(
+                !units[..i].contains(u),
+                "duplicate unit {u} in initial reservoir"
+            );
+        }
+        ReservoirPlan {
+            generation: 0,
+            units: units.to_vec(),
+            admit_seq: (0..units.len() as u64).collect(),
+            next_seq: units.len() as u64,
+            admitted: units.to_vec(),
+            retired: Vec::new(),
+            evicted: Vec::new(),
+        }
+    }
+
+    /// Number of live units (occupied slots).
+    pub fn len(&self) -> usize {
+        self.units.len()
+    }
+
+    /// Whether the reservoir is empty.
+    pub fn is_empty(&self) -> bool {
+        self.units.is_empty()
+    }
+
+    /// Slot of `unit`, if live.
+    pub fn slot_of(&self, unit: u64) -> Option<usize> {
+        self.units.iter().position(|&u| u == unit)
+    }
+
+    /// Compact `"+a/-r/~e"` label of the boundary's events (admits /
+    /// retires / evictions) for logs and CSV columns.
+    pub fn events_label(&self) -> String {
+        format!(
+            "+{}/-{}/~{}",
+            self.admitted.len(),
+            self.retired.len(),
+            self.evicted.len()
+        )
+    }
+
+    /// Advance the membership across one window boundary: apply
+    /// `retires` (each must name a live unit), then `admits` (each must
+    /// be fresh — not live and not retiring this boundary), evicting
+    /// the oldest-admitted survivors FIFO whenever the live count would
+    /// exceed `capacity`. Pure in its inputs — the same (plan, events,
+    /// capacity) always produce the same step, which is what makes a
+    /// frozen admit/retire schedule replay bit-for-bit.
+    pub fn advance(
+        &self,
+        admits: &[u64],
+        retires: &[u64],
+        capacity: usize,
+    ) -> ReservoirStep {
+        assert!(capacity >= 1, "reservoir capacity must be positive");
+        let old_n = self.units.len();
+        // Slot state while applying events: Some((unit, seq)) = occupied.
+        let mut slots: Vec<Option<(u64, u64)>> = self
+            .units
+            .iter()
+            .zip(&self.admit_seq)
+            .map(|(&u, &s)| Some((u, s)))
+            .collect();
+        let mut retired = Vec::new();
+        for &r in retires {
+            let slot = slots
+                .iter()
+                .position(|e| matches!(e, Some((u, _)) if *u == r))
+                .unwrap_or_else(|| {
+                    panic!("retire of unit {r} which is not live")
+                });
+            slots[slot] = None;
+            retired.push(r);
+        }
+        for (i, a) in admits.iter().enumerate() {
+            assert!(
+                !admits[..i].contains(a),
+                "duplicate admit of unit {a}"
+            );
+            assert!(
+                !slots
+                    .iter()
+                    .any(|e| matches!(e, Some((u, _)) if u == a)),
+                "admit of unit {a} which is already live"
+            );
+        }
+        // FIFO eviction: make room for the admits within capacity.
+        let live = slots.iter().filter(|e| e.is_some()).count();
+        let over = (live + admits.len()).saturating_sub(capacity);
+        let mut evicted = Vec::new();
+        for _ in 0..over {
+            let oldest = slots
+                .iter()
+                .enumerate()
+                .filter_map(|(i, e)| e.map(|(u, s)| (s, i, u)))
+                .min()
+                .expect("eviction from an empty reservoir");
+            slots[oldest.1] = None;
+            evicted.push(oldest.2);
+        }
+        // Admits fill the lowest freed slots first, then append.
+        let mut next_seq = self.next_seq;
+        for &a in admits {
+            let seq = next_seq;
+            next_seq += 1;
+            match slots.iter().position(|e| e.is_none()) {
+                Some(free) => slots[free] = Some((a, seq)),
+                None => slots.push(Some((a, seq))),
+            }
+        }
+        // Compact remaining holes (net shrink) ascending; otherwise the
+        // relabeling is the identity on occupied slots.
+        let mut slot_map = vec![None; old_n];
+        let mut appended = Vec::new();
+        let mut units = Vec::new();
+        let mut admit_seq = Vec::new();
+        for (old_slot, entry) in slots.iter().enumerate() {
+            let Some((u, s)) = entry else { continue };
+            let new_slot = units.len();
+            if old_slot < old_n {
+                slot_map[old_slot] = Some(new_slot);
+            } else {
+                appended.push(new_slot);
+            }
+            units.push(*u);
+            admit_seq.push(*s);
+        }
+        let changed = !(retired.is_empty()
+            && evicted.is_empty()
+            && admits.is_empty());
+        let resized = units.len() != old_n;
+        ReservoirStep {
+            plan: ReservoirPlan {
+                generation: self.generation + u64::from(changed),
+                units,
+                admit_seq,
+                next_seq,
+                admitted: admits.to_vec(),
+                retired,
+                evicted,
+            },
+            slot_map,
+            appended,
+            changed,
+            resized,
+        }
+    }
+}
+
 /// Where an elastic coordinator's next-epoch weights come from.
 pub enum WeightSource {
     /// Measure link costs and re-plan when the skew is sustained (the
@@ -656,6 +876,92 @@ mod tests {
             &[1, 4],
         );
         assert_eq!(wc, vec![1, 1], "cold planner re-balances instantly");
+    }
+
+    #[test]
+    fn reservoir_static_boundary_is_identity() {
+        let plan = ReservoirPlan::initial(&[10, 11, 12, 13]);
+        let step = plan.advance(&[], &[], 4);
+        assert!(!step.changed);
+        assert!(!step.resized);
+        assert_eq!(step.plan.generation, 0);
+        assert_eq!(step.plan.units, vec![10, 11, 12, 13]);
+        assert_eq!(
+            step.slot_map,
+            vec![Some(0), Some(1), Some(2), Some(3)]
+        );
+        assert!(step.appended.is_empty());
+    }
+
+    #[test]
+    fn reservoir_admit_fills_lowest_freed_slot() {
+        // Retire the unit in slot 1; the admit inherits that slot (and
+        // with it the departed unit's position in the next order).
+        let plan = ReservoirPlan::initial(&[10, 11, 12, 13]);
+        let step = plan.advance(&[99], &[11], 4);
+        assert!(step.changed);
+        assert!(!step.resized, "count-neutral boundary keeps the size");
+        assert_eq!(step.plan.units, vec![10, 99, 12, 13]);
+        // The back-filled slot stays mapped (the admit inherits the
+        // departed unit's order position); StreamOrder zeroes the
+        // slot's gradient/sign caches via `plan.admitted`.
+        assert_eq!(
+            step.slot_map,
+            vec![Some(0), Some(1), Some(2), Some(3)]
+        );
+        assert_eq!(step.plan.retired, vec![11]);
+        assert_eq!(step.plan.admitted, vec![99]);
+        assert_eq!(step.plan.generation, 1);
+    }
+
+    #[test]
+    fn reservoir_evicts_fifo_when_full() {
+        // Admitting into a full reservoir evicts the oldest-admitted
+        // unit; the admit takes its freed slot, so the size holds.
+        let plan = ReservoirPlan::initial(&[10, 11, 12]);
+        let step = plan.advance(&[20], &[], 3);
+        assert_eq!(step.plan.evicted, vec![10]);
+        assert_eq!(step.plan.units, vec![20, 11, 12]);
+        // A second boundary evicts the next-oldest (11), not the fresh
+        // admit in slot 0 — FIFO is by admission sequence, not slot.
+        let step2 = step.plan.advance(&[21], &[], 3);
+        assert_eq!(step2.plan.evicted, vec![11]);
+        assert_eq!(step2.plan.units, vec![20, 21, 12]);
+    }
+
+    #[test]
+    fn reservoir_shrink_compacts_slots_ascending() {
+        let plan = ReservoirPlan::initial(&[10, 11, 12, 13, 14]);
+        let step = plan.advance(&[], &[11, 13], 5);
+        assert!(step.resized);
+        assert_eq!(step.plan.units, vec![10, 12, 14]);
+        assert_eq!(
+            step.slot_map,
+            vec![Some(0), None, Some(1), None, Some(2)]
+        );
+        // Growth back up: one admit fills slot order at the end.
+        let step2 = step.plan.advance(&[30, 31], &[], 5);
+        assert!(step2.resized);
+        assert_eq!(step2.plan.units, vec![10, 12, 14, 30, 31]);
+        assert_eq!(step2.appended, vec![3, 4]);
+    }
+
+    #[test]
+    fn reservoir_advance_is_pure() {
+        let plan = ReservoirPlan::initial(&[1, 2, 3, 4, 5, 6]);
+        let a = plan.advance(&[7, 8], &[2, 5], 6);
+        let b = plan.advance(&[7, 8], &[2, 5], 6);
+        assert_eq!(a.plan, b.plan);
+        assert_eq!(a.slot_map, b.slot_map);
+        assert_eq!(plan.events_label(), "+6/-0/~0");
+        assert_eq!(a.plan.events_label(), "+2/-2/~0");
+    }
+
+    #[test]
+    #[should_panic(expected = "not live")]
+    fn reservoir_rejects_unknown_retires() {
+        let plan = ReservoirPlan::initial(&[1, 2, 3]);
+        let _ = plan.advance(&[], &[9], 3);
     }
 
     #[test]

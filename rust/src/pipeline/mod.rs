@@ -45,7 +45,7 @@ use crate::model::build_datasets;
 use crate::optim::{GradAccumulator, MomentumSgd, Scheduler};
 use crate::ordering::{build_policy, GradBlock, OrderPolicy};
 use crate::runtime::Runtime;
-use crate::train::{EpochMetrics, TrainResult};
+use crate::train::{checkpoint, EpochMetrics, TrainResult};
 use crate::util::timer::Stopwatch;
 
 /// Work item sent to the grad stage.
@@ -93,6 +93,9 @@ pub struct PipelineTrainer {
     batch: usize,
     /// Queue/stall counters accumulated across epochs.
     pub stats: PipelineStats,
+    /// First epoch [`PipelineTrainer::run`] will execute: 0 for a
+    /// fresh run, `ckpt.epoch + 1` after [`PipelineTrainer::restore`].
+    start_epoch: usize,
 }
 
 impl PipelineTrainer {
@@ -117,14 +120,106 @@ impl PipelineTrainer {
             dim: entry.dim,
             batch: entry.batch,
             stats: PipelineStats::default(),
+            start_epoch: 0,
         })
     }
 
-    /// Run all epochs through the pipeline.
+    /// Open/create the configured run directory, applying `--resume`
+    /// (fingerprint-gated restore of the newest snapshot). `None` when
+    /// checkpointing is off. Mirrors the sync trainer's gate so
+    /// determinism contract 8 covers both loops.
+    fn prepare_run_dir(&mut self) -> Result<Option<checkpoint::RunDir>> {
+        let Some(dir) = self.cfg.checkpoint_dir.clone() else {
+            return Ok(None);
+        };
+        let dir = std::path::PathBuf::from(dir);
+        let manifest = checkpoint::manifest_for(
+            self.cfg.fingerprint(),
+            &self.cfg.run_id(),
+            self.cfg.ordering.name(),
+            self.cfg.kernels.name(),
+            self.cfg.checkpoint_every as u64,
+        );
+        if self.cfg.resume {
+            let rd = checkpoint::RunDir::open(&dir)?;
+            rd.check_fingerprint(manifest.fingerprint)?;
+            if let Some(ckpt) = rd.load_latest()? {
+                eprintln!(
+                    "[grab] resuming {}-pipeline from epoch {} ({})",
+                    self.cfg.run_id(),
+                    ckpt.epoch,
+                    rd.path().display()
+                );
+                self.restore(&ckpt)?;
+            }
+            Ok(Some(rd))
+        } else {
+            Ok(Some(checkpoint::RunDir::create(&dir, manifest)?))
+        }
+    }
+
+    /// Snapshot the run for resumption. Must be called between epochs
+    /// (after `run_epoch(epoch)` returned): the stage threads are
+    /// joined there, so the coordinator-owned params/optimizer/policy
+    /// state *is* the whole run state — the pipeline's epoch barrier
+    /// makes its snapshot exactly as complete as the sync trainer's.
+    pub fn snapshot(&mut self, epoch: usize) -> checkpoint::Checkpoint {
+        let (lr, best, bad) = self.sched.state();
+        checkpoint::Checkpoint {
+            epoch: epoch as u64,
+            params: self.params.clone(),
+            velocity: self.opt.velocity().to_vec(),
+            order: self
+                .policy
+                .epoch_order(epoch)
+                .iter()
+                .map(|&i| i as u64)
+                .collect(),
+            sched: Some((lr, best, bad as u64)),
+            policy_state: self.policy.save_state(),
+        }
+    }
+
+    /// Restore the full run state from a snapshot and arm
+    /// [`PipelineTrainer::run`] to continue at `ckpt.epoch + 1`. Same
+    /// typed resume gate as the sync trainer
+    /// ([`checkpoint::restore_policy`]).
+    pub fn restore(&mut self, ckpt: &checkpoint::Checkpoint)
+        -> crate::Result<()> {
+        anyhow::ensure!(ckpt.params.len() == self.params.len(),
+                        "checkpoint dim mismatch");
+        self.params.copy_from_slice(&ckpt.params);
+        self.opt.set_velocity(&ckpt.velocity)?;
+        if let Some((lr, best, bad)) = ckpt.sched {
+            self.sched.restore_state(lr, best, bad as usize);
+        }
+        checkpoint::restore_policy(self.policy.as_mut(), ckpt)?;
+        self.start_epoch = ckpt.epoch as usize + 1;
+        Ok(())
+    }
+
+    /// Run all epochs through the pipeline (from the restored epoch
+    /// after [`PipelineTrainer::restore`]), snapshotting into the run
+    /// directory every `checkpoint_every` epochs when one is
+    /// configured.
     pub fn run(&mut self) -> Result<TrainResult> {
-        let mut epochs = Vec::with_capacity(self.cfg.epochs);
-        for epoch in 0..self.cfg.epochs {
+        let run_dir = self.prepare_run_dir()?;
+        let start = self.start_epoch.min(self.cfg.epochs);
+        let mut epochs = Vec::with_capacity(self.cfg.epochs - start);
+        for epoch in start..self.cfg.epochs {
             epochs.push(self.run_epoch(epoch)?);
+            if let Some(rd) = &run_dir {
+                let every = self.cfg.checkpoint_every.max(1);
+                if (epoch + 1) % every == 0
+                    || epoch + 1 == self.cfg.epochs
+                {
+                    let snap = self.snapshot(epoch);
+                    rd.save_epoch(
+                        &snap,
+                        checkpoint::DEFAULT_KEEP_LAST,
+                    )?;
+                }
+            }
         }
         let final_order = self.policy.epoch_order(self.cfg.epochs).to_vec();
         Ok(TrainResult {
@@ -137,7 +232,10 @@ impl PipelineTrainer {
         })
     }
 
-    fn run_epoch(&mut self, epoch: usize) -> Result<EpochMetrics> {
+    /// One pipelined epoch. Public for the crash-replay test layer
+    /// (tests/checkpoint.rs kills a run between epochs), mirroring
+    /// [`crate::train::Trainer::run_epoch`].
+    pub fn run_epoch(&mut self, epoch: usize) -> Result<EpochMetrics> {
         let sw_epoch = Stopwatch::start();
         let b = self.batch;
         let d = self.dim;

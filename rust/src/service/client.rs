@@ -20,7 +20,7 @@ use anyhow::{Context, Result};
 
 use crate::exp::cdgrab::CdGrabConfig;
 use crate::ordering::{OrderPolicy, ShardedOrder};
-use crate::service::{http, order_hash, JobSpec};
+use crate::service::{http, order_hash, JobKind, JobSpec};
 use crate::util::prop::gen;
 use crate::util::rng::Rng;
 use crate::util::ser::{fmt_f, CsvWriter, Json};
@@ -47,12 +47,14 @@ pub fn run_job_against_daemon(
          `grab exp cdgrab --register <registry addr>`"
     );
     let spec = JobSpec {
+        kind: JobKind::CdGrab,
         n: cfg.n,
         d: cfg.d,
         epochs: cfg.epochs,
         block: cfg.block,
         shards: shards.min(64).min(cfg.n),
         seed: cfg.seed,
+        admit_rate: 0,
     };
     eprintln!(
         "[service] submitting n={} d={} epochs={} block={} W={} to {addr}",
@@ -137,14 +139,15 @@ pub fn run_job_against_daemon(
     let mut policy = ShardedOrder::new(spec.n, spec.d, spec.shards);
     let mut local_hashes = Vec::with_capacity(spec.epochs);
     let mut local_herd = Vec::with_capacity(spec.epochs);
-    for _ in 0..spec.epochs {
+    for epoch in 0..spec.epochs {
         crate::ordering::stream_static_epoch(
             &mut policy,
+            epoch,
             &vs,
             &mut flat,
             spec.block,
         );
-        let order = policy.epoch_order(0);
+        let order = policy.epoch_order(epoch + 1);
         local_hashes.push(order_hash(order));
         let (inf, _) = crate::herding::herding_bound(&vs, order);
         local_herd.push(inf as f64);

@@ -15,6 +15,16 @@
 //! — docs/determinism.md contract 5 — which `grab exp cdgrab
 //! --service` and the service test layer both assert.
 //!
+//! Jobs come in two kinds ([`JobKind`]): the classic `cdgrab` static
+//! epoch loop, and `stream` — a sliding-reservoir
+//! [`crate::ordering::StreamOrder`] over the same leased links, driven
+//! by a frozen count-neutral [`DriftPlan::steady`] churn schedule
+//! (`admit_rate` fresh units per window, FIFO eviction retiring as
+//! many). Stream jobs report per-window order hashes and herding
+//! bounds through `GET /jobs/<id>` and reservoir counters through
+//! `/metrics`; contract 9 (docs/determinism.md) makes them bit-equal
+//! to an in-process reservoir replaying the same frozen schedule.
+//!
 //! Control plane (all responses `Connection: close`):
 //!
 //! | route                | what                                        |
@@ -51,6 +61,7 @@ use crate::ordering::topology::Topology;
 use crate::ordering::transport::codec::{
     decode_register, encode_lease, Lease,
 };
+use crate::ordering::stream::{DriftPlan, StreamOrder, StreamStats};
 use crate::ordering::transport::tcp;
 use crate::ordering::transport::{LinkStats, ShardTransport};
 use crate::ordering::{OrderPolicy, ShardedOrder};
@@ -88,22 +99,56 @@ impl Default for ServeConfig {
     }
 }
 
-/// What one daemon job runs: the CD-GraB static-gradient epoch loop of
-/// `exp cdgrab`, at a fixed shard count, over leased worker links.
+/// Which session loop a daemon job runs over its leased links.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobKind {
+    /// The CD-GraB static-gradient epoch loop of `exp cdgrab`.
+    CdGrab,
+    /// The sliding-reservoir streaming loop: a [`StreamOrder`] over
+    /// the leased links driven by a count-neutral
+    /// [`DriftPlan::steady`] schedule (`admit_rate` fresh units per
+    /// window, FIFO eviction retiring as many), one window per
+    /// "epoch". Count-neutrality is what lets the reservoir run over
+    /// *fixed* daemon-leased sockets: the live count never changes, so
+    /// no boundary ever needs a re-link.
+    Stream,
+}
+
+impl JobKind {
+    /// Stable kind label for JSON/logs.
+    pub fn label(&self) -> &'static str {
+        match self {
+            JobKind::CdGrab => "cdgrab",
+            JobKind::Stream => "stream",
+        }
+    }
+}
+
+/// What one daemon job runs, at a fixed shard count, over leased
+/// worker links: the `exp cdgrab` static epoch loop
+/// ([`JobKind::CdGrab`]) or the sliding-reservoir streaming loop
+/// ([`JobKind::Stream`]).
 #[derive(Clone, Copy, Debug)]
 pub struct JobSpec {
-    /// Number of static gradient vectors.
+    /// Session loop to run.
+    pub kind: JobKind,
+    /// Number of static gradient vectors (stream: reservoir capacity
+    /// and initial fill).
     pub n: usize,
     /// Gradient dimension.
     pub d: usize,
-    /// Epochs (balance passes).
+    /// Epochs (balance passes; stream: windows).
     pub epochs: usize,
     /// Observe block width.
     pub block: usize,
     /// Shard count = leased workers (one shard per worker).
     pub shards: usize,
-    /// Seed for the synthetic gradient set.
+    /// Seed for the synthetic gradient set (stream: the drift plan).
     pub seed: u64,
+    /// Stream jobs only: fresh units admitted per window (FIFO
+    /// eviction keeps the live count at `n`). Must be 0 for cdgrab
+    /// jobs; 0 on a stream job means a static membership (no churn).
+    pub admit_rate: usize,
 }
 
 impl JobSpec {
@@ -112,13 +157,31 @@ impl JobSpec {
     /// unauthenticated control plane must not be a memory-exhaustion
     /// vector.
     pub fn from_json(v: &Json) -> Result<JobSpec> {
+        // `kind`/`admit_rate` are optional so PR-6-era cdgrab clients
+        // keep working unchanged.
+        let kind = match v.get("kind") {
+            Ok(k) => match k.as_str()? {
+                "cdgrab" => JobKind::CdGrab,
+                "stream" => JobKind::Stream,
+                other => anyhow::bail!(
+                    "unknown job kind {other:?} (want cdgrab|stream)"
+                ),
+            },
+            Err(_) => JobKind::CdGrab,
+        };
+        let admit_rate = match v.get("admit_rate") {
+            Ok(x) => x.as_usize()?,
+            Err(_) => 0,
+        };
         let spec = JobSpec {
+            kind,
             n: v.get("n")?.as_usize()?,
             d: v.get("d")?.as_usize()?,
             epochs: v.get("epochs")?.as_usize()?,
             block: v.get("block")?.as_usize()?,
             shards: v.get("shards")?.as_usize()?,
             seed: v.get("seed")?.as_f64()? as u64,
+            admit_rate,
         };
         anyhow::ensure!(
             (1..=1 << 20).contains(&spec.n),
@@ -141,18 +204,35 @@ impl JobSpec {
             "shards must be in 1..=64 and <= n, got {}",
             spec.shards
         );
+        match spec.kind {
+            JobKind::CdGrab => anyhow::ensure!(
+                spec.admit_rate == 0,
+                "admit_rate only applies to stream jobs"
+            ),
+            // A full reservoir admits at most n units per boundary
+            // (the admit queue is capacity-bounded), and the
+            // count-neutral invariant over fixed links needs the
+            // evictions to keep up with the admits.
+            JobKind::Stream => anyhow::ensure!(
+                spec.admit_rate <= spec.n,
+                "admit_rate must be <= n for stream jobs, got {}",
+                spec.admit_rate
+            ),
+        }
         Ok(spec)
     }
 
     /// The spec as a `POST /jobs` body.
     pub fn to_json(&self) -> Json {
         obj(vec![
+            ("kind", Json::Str(self.kind.label().to_string())),
             ("n", Json::Num(self.n as f64)),
             ("d", Json::Num(self.d as f64)),
             ("epochs", Json::Num(self.epochs as f64)),
             ("block", Json::Num(self.block as f64)),
             ("shards", Json::Num(self.shards as f64)),
             ("seed", Json::Num(self.seed as f64)),
+            ("admit_rate", Json::Num(self.admit_rate as f64)),
         ])
     }
 }
@@ -192,10 +272,16 @@ pub struct JobRecord {
     pub workers: Vec<(u32, String)>,
     /// FNV-1a hash of each completed epoch's order ([`order_hash`]) —
     /// what `--service` clients compare against a local run
-    /// (contract 5 without shipping whole permutations).
+    /// (contract 5 without shipping whole permutations; contract 9 for
+    /// stream jobs). For stream jobs each entry hashes the order the
+    /// window boundary finalized for the *next* window.
     pub epoch_hashes: Vec<u32>,
-    /// Herding ℓ∞ bound after each completed epoch.
+    /// Herding ℓ∞ bound after each completed epoch (stream: the
+    /// completed window's bound over its cached gradients).
     pub herd_inf: Vec<f64>,
+    /// Stream jobs: the reservoir's lifetime counters, refreshed at
+    /// every window boundary. `None` for cdgrab jobs.
+    pub stream: Option<StreamStats>,
     /// Link counter totals at completion (zeros while running).
     pub stats: LinkStats,
 }
@@ -221,6 +307,7 @@ impl JobRecord {
             self.herd_inf.iter().map(|&x| Json::Num(x)).collect();
         let mut fields = vec![
             ("id", Json::Num(self.id as f64)),
+            ("kind", Json::Str(self.spec.kind.label().to_string())),
             ("status", Json::Str(self.status.label().to_string())),
             ("n", Json::Num(self.spec.n as f64)),
             ("d", Json::Num(self.spec.d as f64)),
@@ -228,6 +315,7 @@ impl JobRecord {
             ("block", Json::Num(self.spec.block as f64)),
             ("shards", Json::Num(self.spec.shards as f64)),
             ("seed", Json::Num(self.spec.seed as f64)),
+            ("admit_rate", Json::Num(self.spec.admit_rate as f64)),
             ("workers", Json::Arr(workers)),
             ("epoch_hashes", Json::Arr(hashes)),
             ("herd_inf", Json::Arr(herd)),
@@ -235,6 +323,16 @@ impl JobRecord {
             ("rx_bytes", Json::Num(self.stats.rx_bytes as f64)),
             ("stalls", Json::Num(self.stats.stalls as f64)),
         ];
+        if let Some(s) = &self.stream {
+            fields.push(("windows", Json::Num(s.windows as f64)));
+            fields.push(("admits", Json::Num(s.admits as f64)));
+            fields.push(("evictions", Json::Num(s.evictions as f64)));
+            fields.push(("replans", Json::Num(s.replans as f64)));
+            fields.push((
+                "last_window_inf",
+                Json::Num(s.last_window_inf as f64),
+            ));
+        }
         if let JobStatus::Failed(why) = &self.status {
             fields.push(("error", Json::Str(why.clone())));
         }
@@ -266,6 +364,12 @@ struct State {
     jobs_completed: AtomicU64,
     jobs_failed: AtomicU64,
     epochs_total: AtomicU64,
+    /// Stream-job reservoir counters: windows advance live (one per
+    /// boundary), admits/evictions fold in at the job boundary like
+    /// the transport counters below.
+    stream_windows: AtomicU64,
+    stream_admits: AtomicU64,
+    stream_evictions: AtomicU64,
     /// Link counter totals folded in as jobs complete (`/metrics`
     /// counters stay monotone; a running job's bytes land at its
     /// boundary, mirroring how `TransportStats::retired` folds).
@@ -315,6 +419,9 @@ impl OrderService {
             jobs_completed: AtomicU64::new(0),
             jobs_failed: AtomicU64::new(0),
             epochs_total: AtomicU64::new(0),
+            stream_windows: AtomicU64::new(0),
+            stream_admits: AtomicU64::new(0),
+            stream_evictions: AtomicU64::new(0),
             tx_bytes: AtomicU64::new(0),
             rx_bytes: AtomicU64::new(0),
             stalls: AtomicU64::new(0),
@@ -655,11 +762,14 @@ fn submit_job(
         workers: workers.clone(),
         epoch_hashes: Vec::new(),
         herd_inf: Vec::new(),
+        stream: None,
         stats: LinkStats::default(),
     });
     state.jobs_running.fetch_add(1, Ordering::SeqCst);
     eprintln!(
-        "[serve] job {job_id}: n={} d={} epochs={} W={} over workers {:?}",
+        "[serve] job {job_id} ({}): n={} d={} epochs={} W={} over \
+         workers {:?}",
+        spec.kind.label(),
         spec.n,
         spec.d,
         spec.epochs,
@@ -738,9 +848,11 @@ fn run_job(
 }
 
 /// The actual session: leased sockets → `Hello` handshakes →
-/// `ShardedOrder` → the `exp cdgrab` epoch loop, recording a hash and
-/// herding bound per epoch. Dropping the policy at the end closes the
-/// sockets — the job boundary — and live workers re-register.
+/// `ShardedOrder` → the job kind's loop (the `exp cdgrab` epoch loop,
+/// or a sliding reservoir over the same links), recording a hash and
+/// herding bound per epoch/window. Dropping the policy at the end
+/// closes the sockets — the job boundary — and live workers
+/// re-register.
 fn run_job_inner(
     state: &State,
     id: u64,
@@ -748,8 +860,10 @@ fn run_job_inner(
     slots: Vec<registry::Slot<TcpStream>>,
 ) -> Result<LinkStats> {
     // Daemon jobs run a *static* equal-weight topology: determinism
-    // contract 5 (orders independent of transport) is the service's
-    // acceptance gate, and it only binds at a fixed topology.
+    // contracts 5/9 (orders independent of transport) are the
+    // service's acceptance gate, and they only bind at a fixed
+    // topology. Stream jobs keep it fixed by construction — the
+    // steady drift schedule is count-neutral, so no boundary resizes.
     let topology = Topology::plan(spec.n, 0, &vec![1u64; spec.shards]);
     let mut links: Vec<Box<dyn ShardTransport>> =
         Vec::with_capacity(spec.shards);
@@ -765,20 +879,37 @@ fn run_job_inner(
         .with_context(|| format!("hello to worker {label} (shard {w})"))?;
         links.push(Box::new(link));
     }
-    let mut policy = ShardedOrder::from_links(
+    let inner = ShardedOrder::from_links(
         spec.n, spec.d, topology, links, "tcp", None,
     );
+    match spec.kind {
+        JobKind::CdGrab => run_cdgrab_job(state, id, spec, inner),
+        JobKind::Stream => run_stream_job(state, id, spec, inner),
+    }
+}
+
+/// [`JobKind::CdGrab`] session body: the static-gradient epoch loop.
+fn run_cdgrab_job(
+    state: &State,
+    id: u64,
+    spec: &JobSpec,
+    mut policy: ShardedOrder,
+) -> Result<LinkStats> {
     let mut rng = Rng::new(spec.seed);
     let vs = gen::vec_set(&mut rng, spec.n, spec.d);
     let mut flat = vec![0.0f32; spec.n * spec.d];
-    for _ in 0..spec.epochs {
+    for epoch in 0..spec.epochs {
         crate::ordering::stream_static_epoch(
             &mut policy,
+            epoch,
             &vs,
             &mut flat,
             spec.block,
         );
-        let order = policy.epoch_order(0);
+        // Hash the order the boundary just finalized for epoch + 1 —
+        // keyed to the real epoch index, so an epoch-keyed policy
+        // would replay correctly too.
+        let order = policy.epoch_order(epoch + 1);
         let hash = order_hash(order);
         let (inf, _) = herding_bound(&vs, order);
         let mut jobs = state.jobs.lock().unwrap();
@@ -791,6 +922,53 @@ fn run_job_inner(
         drop(jobs);
         state.epochs_total.fetch_add(1, Ordering::SeqCst);
     }
+    Ok(policy
+        .transport_stats()
+        .map(|s| s.total())
+        .unwrap_or_default())
+}
+
+/// [`JobKind::Stream`] session body: wrap the leased-link coordinator
+/// in a [`StreamOrder`] reservoir and drive `spec.epochs` windows of a
+/// frozen [`DriftPlan::steady`] schedule. On a full reservoir that
+/// schedule is count-neutral (every admit FIFO-evicts the oldest
+/// unit), so the fixed links never need a re-link — `relink: None`
+/// enforces exactly that. Per window we record the hash of the next
+/// window's order and the completed window's herding bound, which is
+/// what a local channel-backed reference reproduces bit-for-bit
+/// (contract 9).
+fn run_stream_job(
+    state: &State,
+    id: u64,
+    spec: &JobSpec,
+    inner: ShardedOrder,
+) -> Result<LinkStats> {
+    let units: Vec<u64> = (0..spec.n as u64).collect();
+    let mut policy =
+        StreamOrder::sharded(spec.n, spec.d, &units, inner, None);
+    let drift = DriftPlan::steady(spec.seed, spec.admit_rate);
+    let mut next_unit = spec.n as u64;
+    for window in 0..spec.epochs {
+        policy.drive_window(&drift, &mut next_unit, spec.block);
+        let stats = policy.stats();
+        let hash = order_hash(policy.epoch_order(window + 1));
+        let mut jobs = state.jobs.lock().unwrap();
+        let rec = jobs
+            .iter_mut()
+            .find(|r| r.id == id)
+            .expect("job record exists for its whole lifetime");
+        rec.epoch_hashes.push(hash);
+        rec.herd_inf.push(stats.last_window_inf as f64);
+        rec.stream = Some(stats);
+        drop(jobs);
+        state.epochs_total.fetch_add(1, Ordering::SeqCst);
+        state.stream_windows.fetch_add(1, Ordering::SeqCst);
+    }
+    let stats = policy.stats();
+    state.stream_admits.fetch_add(stats.admits, Ordering::SeqCst);
+    state
+        .stream_evictions
+        .fetch_add(stats.evictions, Ordering::SeqCst);
     Ok(policy
         .transport_stats()
         .map(|s| s.total())
@@ -898,8 +1076,27 @@ fn metrics_text(state: &State) -> String {
     metric(
         "grab_job_epochs_total",
         "counter",
-        "Epochs completed across all jobs.",
+        "Epochs completed across all jobs (stream windows included).",
         state.epochs_total.load(Ordering::SeqCst),
+    );
+    metric(
+        "grab_stream_windows_total",
+        "counter",
+        "Reservoir windows completed across stream jobs.",
+        state.stream_windows.load(Ordering::SeqCst),
+    );
+    metric(
+        "grab_stream_admits_total",
+        "counter",
+        "Units admitted across stream jobs (completed jobs' totals).",
+        state.stream_admits.load(Ordering::SeqCst),
+    );
+    metric(
+        "grab_stream_evictions_total",
+        "counter",
+        "Units FIFO-evicted across stream jobs (completed jobs' \
+         totals).",
+        state.stream_evictions.load(Ordering::SeqCst),
     );
     metric(
         "grab_transport_tx_bytes_total",

@@ -11,6 +11,11 @@
 //! typed [`CheckpointError`], never a panic or a silently-wrong
 //! resume.
 //!
+//! Contract 8 covers **both** trainers: the synchronous loop and the
+//! threaded pipeline snapshot through the same `RunDir` gate (the
+//! pipeline at its epoch barrier, where the stage threads are joined),
+//! and their snapshots are interchangeable.
+//!
 //! The policy-level suite needs no artifacts; the trainer-level tests
 //! skip (like tests/integration.rs) when `artifacts/` is absent.
 
@@ -20,6 +25,7 @@ use grab::ordering::{
     stream_static_epoch, GraBOrder, OrderPolicy, PairBalance,
     RandomReshuffle, ShardedOrder,
 };
+use grab::pipeline::PipelineTrainer;
 use grab::runtime::Runtime;
 use grab::train::checkpoint::{
     self, Checkpoint, CheckpointError, RunDir,
@@ -30,7 +36,8 @@ use grab::util::testdir::TestDir;
 
 fn feed_epoch(p: &mut dyn OrderPolicy, vs: &[Vec<f32>], block: usize) {
     let mut flat = Vec::new();
-    stream_static_epoch(p, vs, &mut flat, block);
+    // Epoch-agnostic policies only in this suite, so index 0 is exact.
+    stream_static_epoch(p, 0, vs, &mut flat, block);
 }
 
 /// The contract-8 core: run `epochs` uninterrupted epochs through one
@@ -450,6 +457,85 @@ fn trainer_crash_replay_matches_uninterrupted_run() {
         assert_eq!(
             c.params, a.params,
             "{ordering:?}: final params must be bit-equal"
+        );
+    }
+}
+
+#[test]
+fn pipeline_crash_replay_matches_uninterrupted_run() {
+    // Contract 8's pipeline half: the threaded trainer snapshots at
+    // its epoch barrier (stage threads joined, coordinator owns all
+    // state), so kill-and-resume is bit-equal there too — including
+    // against a *sync* reference, since both loops are bit-identical.
+    let Some(rt) = runtime() else { return };
+    for ordering in
+        [OrderingKind::RandomReshuffle, OrderingKind::PairBalance]
+    {
+        let mut cfg = tiny_cfg(ordering);
+        cfg.use_pipeline = true;
+
+        // A: the uninterrupted pipelined reference run.
+        let mut a = PipelineTrainer::new(cfg.clone(), &rt).unwrap();
+        let ra = a.run().unwrap();
+
+        // B: killed after epoch 1; only the run directory survives.
+        let tmp = TestDir::new("pipeline-crash");
+        let mut b = PipelineTrainer::new(cfg.clone(), &rt).unwrap();
+        b.run_epoch(0).unwrap();
+        b.run_epoch(1).unwrap();
+        let snap = b.snapshot(1);
+        let rd = RunDir::create(
+            tmp.path(),
+            checkpoint::manifest_for(
+                cfg.fingerprint(),
+                &cfg.run_id(),
+                cfg.ordering.name(),
+                cfg.kernels.name(),
+                1,
+            ),
+        )
+        .unwrap();
+        rd.save_epoch(&snap, 3).unwrap();
+        drop(b);
+        drop(rd);
+
+        // C: a fresh process image resumed via --checkpoint-dir +
+        // --resume, exactly like the sync trainer's path.
+        let mut c_cfg = cfg.clone();
+        c_cfg.checkpoint_dir =
+            Some(tmp.path().to_string_lossy().into_owned());
+        c_cfg.resume = true;
+        let mut c = PipelineTrainer::new(c_cfg, &rt).unwrap();
+        let rc = c.run().unwrap();
+
+        assert_eq!(
+            rc.epochs.first().map(|m| m.epoch),
+            Some(2),
+            "{ordering:?}: pipeline resume must continue at kill + 1"
+        );
+        assert_eq!(rc.epochs.len(), 2, "{ordering:?}");
+        assert_eq!(
+            rc.final_order, ra.final_order,
+            "{ordering:?}: pipeline final orders must be bit-equal"
+        );
+        assert_eq!(
+            c.params, a.params,
+            "{ordering:?}: pipeline final params must be bit-equal"
+        );
+
+        // Cross-trainer: the sync loop resumed from the *pipeline's*
+        // snapshot lands on the same final params (both loops are
+        // bit-identical, so their snapshots are interchangeable).
+        let mut s = Trainer::new(cfg.clone(), &rt, None).unwrap();
+        s.restore(&snap).unwrap();
+        let rs = s.run().unwrap();
+        assert_eq!(
+            rs.final_order, ra.final_order,
+            "{ordering:?}: sync-from-pipeline-snapshot order"
+        );
+        assert_eq!(
+            s.params, a.params,
+            "{ordering:?}: sync-from-pipeline-snapshot params"
         );
     }
 }

@@ -194,7 +194,8 @@ fn block_kernels_match_scalar_bits_across_the_parallel_threshold() {
 
 fn feed_epoch(p: &mut dyn OrderPolicy, vs: &[Vec<f32>], block: usize) {
     let mut flat = Vec::new();
-    stream_static_epoch(p, vs, &mut flat, block);
+    // Epoch-agnostic policies only in this suite, so index 0 is exact.
+    stream_static_epoch(p, 0, vs, &mut flat, block);
 }
 
 #[test]

@@ -14,10 +14,13 @@
 use std::time::{Duration, Instant};
 
 use grab::exp::cdgrab::CdGrabConfig;
+use grab::ordering::stream::{DriftPlan, StreamOrder};
 use grab::ordering::transport::tcp;
 use grab::ordering::{OrderPolicy, ShardedOrder};
 use grab::service::http;
-use grab::service::{order_hash, JobSpec, OrderService, ServeConfig};
+use grab::service::{
+    order_hash, JobKind, JobSpec, OrderService, ServeConfig,
+};
 use grab::util::prop::gen;
 use grab::util::rng::Rng;
 use grab::util::ser::Json;
@@ -140,12 +143,14 @@ fn control_plane_endpoint_contracts() {
     // A well-formed job with no workers is refused, and the refusal
     // burns no job id.
     let spec = JobSpec {
+        kind: JobKind::CdGrab,
         n: 64,
         d: 4,
         epochs: 1,
         block: 8,
         shards: 1,
         seed: 0,
+        admit_rate: 0,
     };
     let (status, body) =
         http::post(&addr, "/jobs", &spec.to_json().to_string()).unwrap();
@@ -193,12 +198,14 @@ fn daemon_job_is_bit_equal_to_the_in_process_coordinator() {
     wait_for_workers(&addr, 2);
 
     let spec = JobSpec {
+        kind: JobKind::CdGrab,
         n: 256,
         d: 16,
         epochs: 3,
         block: 32,
         shards: 2,
         seed: 7,
+        admit_rate: 0,
     };
     let (status, body) =
         http::post(&addr, "/jobs", &spec.to_json().to_string()).unwrap();
@@ -233,14 +240,15 @@ fn daemon_job_is_bit_equal_to_the_in_process_coordinator() {
     let mut flat = vec![0.0f32; spec.n * spec.d];
     let mut policy = ShardedOrder::new(spec.n, spec.d, spec.shards);
     let mut local_hashes = Vec::new();
-    for _ in 0..spec.epochs {
+    for epoch in 0..spec.epochs {
         grab::ordering::stream_static_epoch(
             &mut policy,
+            epoch,
             &vs,
             &mut flat,
             spec.block,
         );
-        local_hashes.push(order_hash(policy.epoch_order(0)));
+        local_hashes.push(order_hash(policy.epoch_order(epoch + 1)));
     }
     assert_eq!(
         daemon_hashes, local_hashes,
@@ -274,6 +282,142 @@ fn daemon_job_is_bit_equal_to_the_in_process_coordinator() {
     }
 }
 
+/// A `stream` daemon job over real leased TCP links must replay
+/// bit-for-bit against an in-process channel-backed reservoir driving
+/// the identical frozen `DriftPlan::steady` schedule — determinism
+/// contract 9 (docs/determinism.md) carried over the registered-worker
+/// path — and the per-window reservoir counters must land in both the
+/// job record and `/metrics`.
+#[test]
+fn stream_job_is_bit_equal_to_an_in_process_reservoir() {
+    let service = start_service();
+    let addr = service.http_addr();
+    let workers = spawn_workers(&service.register_addr(), 2);
+    wait_for_workers(&addr, 2);
+
+    let spec = JobSpec {
+        kind: JobKind::Stream,
+        n: 96,
+        d: 8,
+        epochs: 4,
+        block: 16,
+        shards: 2,
+        seed: 11,
+        admit_rate: 3,
+    };
+    let (status, body) =
+        http::post(&addr, "/jobs", &spec.to_json().to_string()).unwrap();
+    assert_eq!(status, 202, "{body}");
+    let job_id =
+        Json::parse(&body).unwrap().get("job").unwrap().as_usize().unwrap()
+            as u64;
+
+    let job = wait_for_job(&addr, job_id);
+    assert_eq!(
+        job.get("status").unwrap().as_str().unwrap(),
+        "done",
+        "{job:?}"
+    );
+    assert_eq!(job.get("kind").unwrap().as_str().unwrap(), "stream");
+    let daemon_hashes: Vec<u32> = job
+        .get("epoch_hashes")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as u32)
+        .collect();
+    let daemon_herd: Vec<f64> = job
+        .get("herd_inf")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap())
+        .collect();
+    assert_eq!(daemon_hashes.len(), spec.epochs);
+
+    // The count-neutral steady schedule on a full reservoir: every
+    // window admits `admit_rate` fresh units and FIFO-evicts as many,
+    // so the fixed leased links never re-link.
+    let windows = job.get("windows").unwrap().as_f64().unwrap() as u64;
+    let admits = job.get("admits").unwrap().as_f64().unwrap() as u64;
+    let evictions =
+        job.get("evictions").unwrap().as_f64().unwrap() as u64;
+    let replans = job.get("replans").unwrap().as_f64().unwrap() as u64;
+    assert_eq!(windows, spec.epochs as u64);
+    assert_eq!(admits, (spec.epochs * spec.admit_rate) as u64);
+    assert_eq!(evictions, admits, "steady churn is count-neutral");
+    assert_eq!(replans, 0, "fixed links must never re-link");
+
+    // The contract-9 gate: an in-process channel-backed reservoir
+    // replaying the identical frozen schedule.
+    let units: Vec<u64> = (0..spec.n as u64).collect();
+    let mut local = StreamOrder::sharded_channel(
+        spec.n,
+        spec.d,
+        &units,
+        spec.shards,
+        2,
+    );
+    let drift = DriftPlan::steady(spec.seed, spec.admit_rate);
+    let mut next_unit = spec.n as u64;
+    let mut local_hashes = Vec::new();
+    let mut local_herd = Vec::new();
+    for window in 0..spec.epochs {
+        local.drive_window(&drift, &mut next_unit, spec.block);
+        local_hashes.push(order_hash(local.epoch_order(window + 1)));
+        local_herd.push(local.stats().last_window_inf as f64);
+    }
+    assert_eq!(
+        daemon_hashes, local_hashes,
+        "daemon reservoir orders diverge from the in-process replay"
+    );
+    for (w, (a, b)) in
+        daemon_herd.iter().zip(local_herd.iter()).enumerate()
+    {
+        assert!(
+            (a - b).abs() <= 1e-6 * b.abs().max(1.0),
+            "window {w} herding bound diverges: daemon {a} vs local {b}"
+        );
+    }
+
+    // Reservoir counters surface in the exposition too.
+    assert_eq!(
+        metric(&addr, "grab_stream_windows_total"),
+        spec.epochs as u64
+    );
+    assert_eq!(metric(&addr, "grab_stream_admits_total"), admits);
+    assert_eq!(metric(&addr, "grab_stream_evictions_total"), evictions);
+    assert_eq!(
+        metric(&addr, "grab_job_epochs_total"),
+        spec.epochs as u64
+    );
+
+    // Spec validation: admit_rate is stream-only and capacity-bounded.
+    let (status, body) = http::post(
+        &addr,
+        "/jobs",
+        "{\"n\":64,\"d\":4,\"epochs\":1,\"block\":8,\"shards\":1,\
+         \"seed\":0,\"admit_rate\":2}",
+    )
+    .unwrap();
+    assert_eq!(status, 400, "{body}");
+    let (status, body) = http::post(
+        &addr,
+        "/jobs",
+        "{\"kind\":\"stream\",\"n\":64,\"d\":4,\"epochs\":1,\
+         \"block\":8,\"shards\":1,\"seed\":0,\"admit_rate\":65}",
+    )
+    .unwrap();
+    assert_eq!(status, 400, "{body}");
+
+    service.shutdown();
+    for w in workers {
+        w.join().unwrap().unwrap();
+    }
+}
+
 #[test]
 fn drain_refuses_new_registrations_and_jobs() {
     let service = start_service();
@@ -289,12 +433,14 @@ fn drain_refuses_new_registrations_and_jobs() {
 
     // New work is refused with a 503.
     let spec = JobSpec {
+        kind: JobKind::CdGrab,
         n: 64,
         d: 4,
         epochs: 1,
         block: 8,
         shards: 1,
         seed: 0,
+        admit_rate: 0,
     };
     let (status, body) =
         http::post(&addr, "/jobs", &spec.to_json().to_string()).unwrap();

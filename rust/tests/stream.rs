@@ -1,0 +1,195 @@
+//! Streaming-reservoir test layer (determinism contract 9,
+//! docs/determinism.md): a [`StreamOrder`] window is one epoch, and
+//! the contract has two halves — **static**: a prefilled reservoir
+//! with no membership events replays a bare [`PairBalance`]
+//! bit-for-bit; **transport**: on a count-neutral frozen schedule the
+//! sharded reservoir's merged orders are bit-equal across channel and
+//! loopback-TCP backends at every acceptance shard count W ∈ {1, 2, 4}
+//! (the same schedule the daemon's `stream` jobs run over leased
+//! sockets). Frozen schedules are also *replayable*: the same seed and
+//! drift plan reproduce every window order, membership plan, and
+//! reservoir counter exactly.
+//!
+//! These tests need no artifacts but do open real loopback sockets;
+//! CI runs this target under a timeout guard so a hung socket fails
+//! fast.
+
+use grab::ordering::stream::{DriftPlan, StreamOrder};
+use grab::ordering::{stream_static_epoch, OrderPolicy, PairBalance};
+use grab::service::order_hash;
+use grab::util::prop::{self, assert_permutation, gen};
+
+/// Feed one window of slot-indexed gradients `vs` through `s`.
+fn feed_window(s: &mut StreamOrder, vs: &[Vec<f32>], block: usize) {
+    s.run_window(
+        &mut |unit, out| out.copy_from_slice(&vs[unit as usize]),
+        block,
+    );
+}
+
+#[test]
+fn static_reservoir_matches_pair_balance_bit_for_bit() {
+    // Contract 9, static half, as a property over random shapes: with
+    // units 0..n prefilled and no membership events, every window
+    // order equals the bare PairBalance epoch order (slot i holds
+    // unit i, so orders compare directly).
+    prop::forall("static reservoir == PairBalance", 12, |rng| {
+        let n = 1 + rng.gen_range(60) as usize;
+        let d = 1 + rng.gen_range(6) as usize;
+        let b = 1 + rng.gen_range(9) as usize;
+        let vs = gen::vec_set(rng, n, d);
+        let mut res = StreamOrder::prefilled(n, d);
+        let mut pair = PairBalance::new(n, d);
+        let mut flat = Vec::new();
+        for epoch in 0..3 {
+            feed_window(&mut res, &vs, b);
+            stream_static_epoch(&mut pair, epoch, &vs, &mut flat, b);
+            let want = pair.epoch_order(epoch + 1).to_vec();
+            assert_permutation(&want)?;
+            if res.epoch_order(epoch + 1) != want.as_slice() {
+                return Err(format!(
+                    "static reservoir != PairBalance at epoch={epoch} \
+                     n={n} d={d} b={b}"
+                ));
+            }
+        }
+        if res.stats().replans != 0 {
+            return Err("static reservoir re-planned".to_string());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn frozen_count_neutral_schedule_is_bit_equal_channel_vs_tcp() {
+    // Contract 9, transport half: the identical frozen steady-churn
+    // schedule through channel and loopback-TCP sharded reservoirs at
+    // W ∈ {1, 2, 4} merges to bit-equal window orders, and the fixed
+    // count means no boundary ever re-links.
+    prop::forall("stream channel == tcp at W in {1,2,4}", 4, |rng| {
+        let n = 8 + rng.gen_range(40) as usize;
+        let d = 1 + rng.gen_range(5) as usize;
+        let b = 1 + rng.gen_range(8) as usize;
+        let admit = rng.gen_range(5) as usize;
+        let seed = rng.gen_range(u64::MAX);
+        let units: Vec<u64> = (0..n as u64).collect();
+        let drift = DriftPlan::steady(seed, admit);
+        for w in [1usize, 2, 4] {
+            let mut chan =
+                StreamOrder::sharded_channel(n, d, &units, w, 2);
+            let mut tcp =
+                StreamOrder::sharded_tcp_loopback(n, d, &units, w)
+                    .map_err(|e| format!("loopback spawn: {e}"))?;
+            let mut next_chan = n as u64;
+            let mut next_tcp = n as u64;
+            for window in 0..3 {
+                chan.drive_window(&drift, &mut next_chan, b);
+                tcp.drive_window(&drift, &mut next_tcp, b);
+                let want = chan.epoch_order(window + 1).to_vec();
+                assert_permutation(&want)?;
+                if tcp.epoch_order(window + 1) != want.as_slice() {
+                    return Err(format!(
+                        "stream tcp != channel at w={w} \
+                         window={window} n={n} d={d} b={b} \
+                         admit={admit} seed={seed}"
+                    ));
+                }
+                if chan.live_units() != tcp.live_units() {
+                    return Err(format!(
+                        "membership diverged at w={w} window={window}"
+                    ));
+                }
+            }
+            if chan.stats().replans != 0 || tcp.stats().replans != 0 {
+                return Err(format!(
+                    "count-neutral schedule re-linked at w={w} \
+                     (channel {} / tcp {} replans)",
+                    chan.stats().replans,
+                    tcp.stats().replans
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn frozen_drift_schedules_replay_bit_for_bit() {
+    // Contract 9, replay: two reservoirs driven by the same seed and
+    // drift plan — including resizing churn, bursts, and mass
+    // retirements — agree on every window order, the live membership,
+    // and every lifetime counter.
+    let plans = [
+        DriftPlan::steady(21, 3),
+        DriftPlan::churn(22, 2, 5),
+        DriftPlan::bursty(23, 1, 2, 6),
+        DriftPlan {
+            mass_retire_every: 3,
+            shift_per_window: 0.1,
+            ..DriftPlan::steady(24, 2)
+        },
+    ];
+    let n = 48;
+    let d = 4;
+    for drift in &plans {
+        let units: Vec<u64> = (0..n as u64).collect();
+        let mut a = StreamOrder::with_units(n, d, &units);
+        let mut b = StreamOrder::with_units(n, d, &units);
+        let mut next_a = n as u64;
+        let mut next_b = n as u64;
+        for window in 0..6 {
+            a.drive_window(drift, &mut next_a, 8);
+            b.drive_window(drift, &mut next_b, 8);
+            let order = a.epoch_order(window + 1).to_vec();
+            assert_eq!(order.len(), a.len());
+            assert_permutation(&order).unwrap();
+            assert_eq!(
+                order.as_slice(),
+                b.epoch_order(window + 1),
+                "replay diverged at window {window} under {drift:?}"
+            );
+            assert_eq!(a.live_units(), b.live_units());
+        }
+        assert_eq!(a.stats(), b.stats(), "counters diverged: {drift:?}");
+        assert_eq!(
+            a.plan_log().len(),
+            7,
+            "initial fill + one plan per boundary"
+        );
+    }
+}
+
+#[test]
+fn daemon_static_stream_schedule_reduces_to_pair_balance_hashes() {
+    // The degenerate daemon stream job (admit_rate = 0) is a static
+    // membership: its per-window hashes over a W=1 sharded reservoir
+    // must equal PairBalance's over the same drift gradients — the
+    // bridge between contract 9's two halves that the service test
+    // exercises end-to-end over real sockets.
+    let n = 40;
+    let d = 3;
+    let block = 8;
+    let drift = DriftPlan::steady(9, 0);
+    let units: Vec<u64> = (0..n as u64).collect();
+    let mut res = StreamOrder::sharded_channel(n, d, &units, 1, 2);
+    let mut next_unit = n as u64;
+    let vs: Vec<Vec<f32>> = units
+        .iter()
+        .map(|&u| {
+            let mut g = vec![0.0f32; d];
+            drift.grad(u, 0, &mut g);
+            g
+        })
+        .collect();
+    let mut pair = PairBalance::new(n, d);
+    let mut flat = Vec::new();
+    for window in 0..4 {
+        res.drive_window(&drift, &mut next_unit, block);
+        stream_static_epoch(&mut pair, window, &vs, &mut flat, block);
+        assert_eq!(
+            order_hash(res.epoch_order(window + 1)),
+            order_hash(pair.epoch_order(window + 1)),
+            "window {window}"
+        );
+    }
+}

@@ -31,7 +31,8 @@ use grab::util::ser::{
 
 fn feed_epoch(p: &mut dyn OrderPolicy, vs: &[Vec<f32>], block: usize) {
     let mut flat = Vec::new();
-    stream_static_epoch(p, vs, &mut flat, block);
+    // Epoch-agnostic policies only in this suite, so index 0 is exact.
+    stream_static_epoch(p, 0, vs, &mut flat, block);
 }
 
 #[test]
@@ -76,6 +77,46 @@ fn loopback_tcp_matches_channel_and_sync_orders() {
                     return Err(format!(
                         "w=1 sharded != PairBalance at epoch={epoch} \
                          n={n} d={d} b={b}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn static_stream_reservoir_chains_into_the_transport_gate() {
+    // Contract 9 meets contract 5: a *static* sliding reservoir (full,
+    // no membership events) over channel links must equal the bare
+    // sharded coordinator — which the gate above pins to sync and TCP
+    // — for W in {1, 2, 4}, chaining the streaming layer down to the
+    // single-threaded PairBalance reference.
+    use grab::ordering::stream::StreamOrder;
+    prop::forall("static stream == sharded sync orders", 6, |rng| {
+        let n = 1 + rng.gen_range(48) as usize;
+        let d = 1 + rng.gen_range(5) as usize;
+        let b = 1 + rng.gen_range(8) as usize;
+        let vs = gen::vec_set(rng, n, d);
+        let units: Vec<u64> = (0..n as u64).collect();
+        for w in [1usize, 2, 4] {
+            let mut sync = ShardedOrder::new(n, d, w);
+            let mut res =
+                StreamOrder::sharded_channel(n, d, &units, w, 2);
+            for epoch in 0..3 {
+                feed_epoch(&mut sync, &vs, b);
+                res.run_window(
+                    &mut |unit, out| {
+                        out.copy_from_slice(&vs[unit as usize])
+                    },
+                    b,
+                );
+                let want = sync.epoch_order(0).to_vec();
+                assert_permutation(&want)?;
+                if res.epoch_order(epoch + 1) != want.as_slice() {
+                    return Err(format!(
+                        "static stream != sync sharded at w={w} \
+                         epoch={epoch} n={n} d={d} b={b}"
                     ));
                 }
             }

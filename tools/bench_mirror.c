@@ -540,6 +540,54 @@ static void run_pair_epoch(void *p) {
     sink = c->s[0];
 }
 
+/* Streaming reservoir window advance (mirror ordering/stream.rs): the
+ * static window is exactly the PairBalance chain over the live slots;
+ * the churn window adds, per admitted unit, one carry-out axpy (the
+ * FIFO-evicted slot's signed contribution leaves the running sum) and
+ * one row copy (the admit lands in the freed slot).  Plan derivation
+ * (O(rate) integer/RNG bookkeeping) is not mirrored — it is noise next
+ * to the O(n*d) float work, like the permutation bookkeeping above. */
+struct stream_ctx {
+    float *flat;  /* [n × d] live reservoir rows (admits overwrite) */
+    float *rows;  /* [rate × d] fresh admit gradients */
+    float *s;
+    size_t n, d, rate;
+    int avx2;
+};
+
+static void stream_pair_window(struct stream_ctx *c) {
+    memset(c->s, 0, c->d * 4);
+    for (size_t i = 0; i + 1 < c->n; i += 2) {
+        const float *a = c->flat + i * c->d;
+        const float *b = c->flat + (i + 1) * c->d;
+        float dot = c->avx2 ? dot_diff_avx2(c->s, a, b, c->d)
+                            : dot_diff_scalar(c->s, a, b, c->d);
+        float eps = dot < 0.0f ? 1.0f : -1.0f;
+        if (c->avx2)
+            axpy_diff_avx2(eps, a, b, c->s, c->d);
+        else
+            axpy_diff_scalar(eps, a, b, c->s, c->d);
+    }
+    sink = c->s[0];
+}
+
+static void run_stream_static(void *p) {
+    stream_pair_window((struct stream_ctx *)p);
+}
+
+static void run_stream_churn(void *p) {
+    struct stream_ctx *c = p;
+    stream_pair_window(c);
+    for (size_t i = 0; i < c->rate; i++) {
+        if (c->avx2)
+            axpy_avx2(-1.0f, c->flat + i * c->d, c->s, c->d);
+        else
+            axpy_scalar(-1.0f, c->flat + i * c->d, c->s, c->d);
+        memcpy(c->flat + i * c->d, c->rows + i * c->d, c->d * 4);
+    }
+    sink = c->s[0];
+}
+
 struct jrow {
     char case_name[64];
     long d, n, b, w; /* -1 renders as null */
@@ -664,6 +712,35 @@ static void run_json_cases(int quick, const char *path) {
              bench_ns(run_pair_epoch, &ec, piters), piters);
         free((void *)ec.flat);
         free(ec.s);
+
+        /* Streaming reservoir: window advance cost vs reservoir size
+         * (mirrors the grab-bench stream_window cases at d = 256,
+         * B = 64; rate = n/16 count-neutral admits per window). */
+        size_t sizes[] = {256, 1024, 4096};
+        for (size_t si = 0; si < 3; si++) {
+            size_t sn = sizes[si], sd = 256;
+            struct stream_ctx sc;
+            sc.n = sn;
+            sc.d = sd;
+            sc.rate = sn / 16;
+            sc.avx2 = tier;
+            sc.flat = alloc_vec(sn * sd, 41);
+            sc.rows = alloc_vec(sc.rate * sd, 42);
+            sc.s = alloc_vec(sd, 43);
+            int siters = quick ? 3 : (sn >= 4096 ? 60 : 200);
+            snprintf(name, sizeof name,
+                     "stream_window/static/n%zu/d%zu", sn, sd);
+            jrec(name, (long)sd, (long)sn, 64, -1, kname,
+                 bench_ns(run_stream_static, &sc, siters), siters);
+            snprintf(name, sizeof name,
+                     "stream_window/churn%zu/n%zu/d%zu", sc.rate, sn,
+                     sd);
+            jrec(name, (long)sd, (long)sn, 64, -1, kname,
+                 bench_ns(run_stream_churn, &sc, siters), siters);
+            free(sc.flat);
+            free(sc.rows);
+            free(sc.s);
+        }
     }
 
     char rev[64];
